@@ -1,0 +1,110 @@
+//! Global vs local sparsification — the §3.3 / Theorem 1-vs-2 ablation.
+//!
+//! Two views:
+//!  1. **rate view** (quadratic world, exact (G,B,L)): gradient-norm decay
+//!     of RoSDHB vs RoSDHB-Local at the same k/d — global should decay
+//!     like 1/T toward the κG² floor, local like 1/√T with a larger,
+//!     G-amplified floor;
+//!  2. **task view** (MNIST-like, Dirichlet-skewed shards to raise (G,B)):
+//!     rounds-to-τ of the two variants.
+//!
+//! ```text
+//! cargo run --release --example global_vs_local
+//! ```
+
+use rosdhb::algorithms::{rosdhb::RoSdhb, Algorithm, RoundEnv};
+use rosdhb::aggregators;
+use rosdhb::attacks::AttackKind;
+use rosdhb::config::{Algorithm as AlgoId, ExperimentConfig};
+use rosdhb::coordinator::Trainer;
+use rosdhb::prng::Pcg64;
+use rosdhb::synthetic::QuadraticWorld;
+use rosdhb::tensor;
+use rosdhb::transport::ByteMeter;
+
+fn main() -> anyhow::Result<()> {
+    rate_view();
+    task_view()?;
+    Ok(())
+}
+
+/// Quadratic-world rate comparison at dialed (G, B).
+fn rate_view() {
+    let d = 256;
+    let nh = 10;
+    let f = 2;
+    let k = 26; // k/d ~ 0.1
+    let world = QuadraticWorld::new(d, nh, 1.0, 0.3, 2.0, 17);
+    println!("# rate view: quadratics d={d} |H|={nh} f={f} k/d=0.1 (G=2, B=0.3)");
+    println!("variant,T,grad_h_sq");
+    for local in [false, true] {
+        let mut theta = vec![3.0f32; d];
+        let gamma = if local { 0.05 } else { 0.1 };
+        let beta = 0.9f32;
+        let agg = aggregators::parse_spec("nnm+cwtm", f).unwrap();
+        let attack = AttackKind::None;
+        let mut meter = ByteMeter::new(nh + f);
+        let mut rng = Pcg64::new(3, 3);
+        let mut alg = RoSdhb::new(d, nh + f, local);
+        for t in 1..=3000u64 {
+            let grads = world.grads(&theta);
+            // f crash-style byzantine (silent) — robustness active
+            let mut env = RoundEnv {
+                d,
+                n_honest: nh,
+                n_byz: f,
+                seed: 11,
+                k,
+                beta,
+                aggregator: agg.as_ref(),
+                attack: &attack,
+                meter: &mut meter,
+                rng: &mut rng,
+            };
+            let r = alg.round(t, &grads, &[], &mut env);
+            tensor::axpy(&mut theta, -gamma, &r);
+            if t % 300 == 0 {
+                let gh = world.grad_h(&theta);
+                println!(
+                    "{},{},{:.6e}",
+                    if local { "local" } else { "global" },
+                    t,
+                    tensor::norm_sq(&gh)
+                );
+            }
+        }
+    }
+}
+
+/// MNIST-like comparison under heterogeneity + ALIE.
+fn task_view() -> anyhow::Result<()> {
+    // k/d = 0.01: the regime where mask coordination matters most (and
+    // where local masks additionally pay the mask-shipping tax).
+    println!("\n# task view: MNIST-like, f=3, ALIE, k/d=0.01");
+    println!("variant,rounds_to_tau,uplink_bytes_to_tau,best_acc");
+    for algo in [AlgoId::RoSdhb, AlgoId::RoSdhbLocal] {
+        let mut cfg = ExperimentConfig::default_mnist_like();
+        cfg.algorithm = algo;
+        cfg.n_byz = 3;
+        cfg.attack = "alie".into();
+        cfg.aggregator = "nnm+cwtm".into();
+        cfg.k_frac = 0.01;
+        cfg.gamma = 0.1;
+        cfg.gamma_decay = 0.9995;
+        cfg.clip = 5.0;
+        cfg.rounds = 4000;
+        cfg.eval_every = 10;
+        cfg.train_size = 20_000;
+        cfg.test_size = 2_000;
+        cfg.stop_at_tau = true;
+        let r = Trainer::from_config(&cfg)?.run()?;
+        println!(
+            "{},{},{},{:.4}",
+            cfg.algorithm.name(),
+            r.rounds_to_tau.map_or(-1i64, |v| v as i64),
+            r.uplink_bytes_to_tau.map_or(-1i64, |v| v as i64),
+            r.best_acc.unwrap_or(0.0)
+        );
+    }
+    Ok(())
+}

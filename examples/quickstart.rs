@@ -1,0 +1,59 @@
+//! Quickstart: train RoSDHB on the MNIST-like task with 10 honest + 3
+//! Byzantine (ALIE) workers at k/d = 0.1 compression, and print the
+//! communication cost of reaching τ = 0.85 test accuracy.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use rosdhb::config::ExperimentConfig;
+use rosdhb::coordinator::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = ExperimentConfig::default_mnist_like();
+    cfg.n_honest = 10;
+    cfg.n_byz = 3;
+    cfg.attack = "alie".into();
+    cfg.aggregator = "nnm+cwtm".into();
+    cfg.k_frac = 0.1;
+    cfg.beta = 0.9;
+    cfg.gamma = 0.5;
+    cfg.rounds = 1500;
+    cfg.eval_every = 25;
+    cfg.train_size = 20_000;
+    cfg.test_size = 2_000;
+    cfg.stop_at_tau = true;
+
+    println!(
+        "RoSDHB quickstart: n={} f={} attack={} aggregator={} k/d={}",
+        cfg.n_total(),
+        cfg.n_byz,
+        cfg.attack,
+        cfg.aggregator,
+        cfg.k_frac
+    );
+    let mut trainer = Trainer::from_config(&cfg)?;
+    println!("κ bound = {:.4}", trainer.kappa_bound());
+
+    let report = trainer.run()?;
+    match report.rounds_to_tau {
+        Some(r) => println!(
+            "reached τ={} at round {r}: uplink {:.2} MiB, downlink {:.2} MiB",
+            cfg.tau,
+            report.uplink_bytes_to_tau.unwrap() as f64 / (1 << 20) as f64,
+            report.downlink_bytes as f64 / (1 << 20) as f64,
+        ),
+        None => println!(
+            "did not reach τ={} in {} rounds (best acc {:.3})",
+            cfg.tau,
+            report.rounds_run,
+            report.best_acc.unwrap_or(0.0)
+        ),
+    }
+    println!(
+        "final train loss {:.4} after {} rounds",
+        report.final_loss.unwrap_or(f64::NAN),
+        report.rounds_run
+    );
+    Ok(())
+}

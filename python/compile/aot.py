@@ -1,0 +1,113 @@
+"""AOT pipeline: lower the L2 graph (with its L1 Pallas kernels) to HLO text.
+
+Emits, under ``--out`` (default ``../artifacts``):
+
+* ``grad.hlo.txt``  — (params[P], x[B,196], y1h[B,10]) -> (loss[], grad[P])
+* ``eval.hlo.txt``  — (params[P], x[E,196]) -> (logits[E,10],)
+* ``init.hlo.txt``  — (seed u32[2],) -> (params[P],)
+* ``meta.json``     — dims consumed by the Rust side (P, B, E, ...)
+
+Interchange is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate binds) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly. Lowered with ``return_tuple=True``; the Rust side unwraps with
+``to_tuple{1,2}()``.
+
+Python runs ONLY here (``make artifacts``); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_grad() -> str:
+    spec_p = jax.ShapeDtypeStruct((model.P,), jnp.float32)
+    spec_x = jax.ShapeDtypeStruct((model.BATCH, model.D_IN), jnp.float32)
+    spec_y = jax.ShapeDtypeStruct((model.BATCH, model.CLASSES), jnp.float32)
+    return to_hlo_text(
+        jax.jit(model.loss_and_grad).lower(spec_p, spec_x, spec_y)
+    )
+
+
+def lower_eval() -> str:
+    spec_p = jax.ShapeDtypeStruct((model.P,), jnp.float32)
+    spec_x = jax.ShapeDtypeStruct(
+        (model.EVAL_BATCH, model.D_IN), jnp.float32
+    )
+    return to_hlo_text(jax.jit(model.forward).lower(spec_p, spec_x))
+
+
+def lower_init() -> str:
+    spec_seed = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return to_hlo_text(jax.jit(model.init_params).lower(spec_seed))
+
+
+def lower_momentum() -> str:
+    """The L1 Pallas momentum kernel as its own artifact (β = 0.9, the
+    paper's value, baked at lowering time): the Rust coordinator can run
+    the server-side momentum step through PJRT — the compression-side L1
+    kernels are AOT-consumable, not just the model."""
+    from .kernels.sparsify import momentum_update
+
+    spec = jax.ShapeDtypeStruct((model.P,), jnp.float32)
+
+    def step(m, g):
+        return momentum_update(m, g, beta=0.9)
+
+    return to_hlo_text(jax.jit(step).lower(spec, spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    for name, fn in (
+        ("grad", lower_grad),
+        ("eval", lower_eval),
+        ("init", lower_init),
+        ("momentum09", lower_momentum),
+    ):
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        text = fn()
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    meta = {
+        "p": model.P,
+        "batch": model.BATCH,
+        "eval_batch": model.EVAL_BATCH,
+        "d_in": model.D_IN,
+        "hidden": model.HIDDEN,
+        "classes": model.CLASSES,
+    }
+    meta_path = os.path.join(args.out, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {meta_path}: {meta}")
+
+
+if __name__ == "__main__":
+    main()

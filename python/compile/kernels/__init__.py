@@ -1,0 +1,12 @@
+"""L1 Pallas kernels for the RoSDHB model hot-spots.
+
+All kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); structure is TPU-shaped (VMEM tiling via BlockSpec, MXU-sized
+matmul blocks) so the same code lowers for real hardware by flipping the
+flag. Correctness oracle lives in :mod:`.ref`.
+"""
+
+from .matmul import matmul, matmul_bias_act
+from .sparsify import masked_scale, momentum_update
+
+__all__ = ["matmul", "matmul_bias_act", "masked_scale", "momentum_update"]

@@ -1,0 +1,187 @@
+"""Tiled Pallas matmul with fused bias + activation epilogue.
+
+TPU adaptation of the model's dense-layer hot path (DESIGN.md
+§Hardware-Adaptation): blocks are staged HBM->VMEM via ``BlockSpec``; the
+inner ``jnp.dot`` maps onto the MXU with an f32 accumulator carried across
+the K grid dimension (the output block's index_map ignores k, so the block
+stays resident in VMEM across sequential K steps). The CUDA analogue would
+be a threadblock-tiled GEMM with a shared-memory epilogue; here the K-loop
+is a grid dimension and the epilogue (bias add + activation) runs on the
+final K step only.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-shaped tile. Clamped to divisors of the problem size.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    """Largest divisor of ``dim`` that is <= pref (falls back to dim)."""
+    if dim <= pref:
+        return dim
+    for b in range(pref, 0, -1):
+        if dim % b == 0:
+            return b
+    return dim
+
+
+def _kernel_nobias(x_ref, w_ref, o_ref, *, nk: int, act: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        out = o_ref[...]
+        if act == "relu":
+            out = jnp.maximum(out, 0.0)
+        elif act == "tanh":
+            out = jnp.tanh(out)
+        o_ref[...] = out
+
+
+def _kernel_bias(x_ref, w_ref, b_ref, o_ref, *, nk: int, act: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        out = o_ref[...] + b_ref[...]
+        if act == "relu":
+            out = jnp.maximum(out, 0.0)
+        elif act == "tanh":
+            out = jnp.tanh(out)
+        o_ref[...] = out
+
+
+def _pallas_matmul(x, w, b, *, act: str, bm: int, bn: int, bk: int,
+                   interpret: bool):
+    """Raw (non-differentiable) tiled Pallas ``act(x @ w [+ b])``."""
+    m, kdim = x.shape
+    k2, n = w.shape
+    assert kdim == k2, f"inner dims mismatch: {kdim} vs {k2}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(kdim, bk)
+    nk = kdim // bk
+    grid = (m // bm, n // bn, nk)
+
+    x_spec = pl.BlockSpec((bm, bk), lambda i, j, k: (i, k))
+    w_spec = pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j, k: (i, j))
+    out_shape = jax.ShapeDtypeStruct((m, n), jnp.float32)
+
+    if b is None:
+        return pl.pallas_call(
+            functools.partial(_kernel_nobias, nk=nk, act=act),
+            grid=grid,
+            in_specs=[x_spec, w_spec],
+            out_specs=o_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(x, w)
+
+    # Bias is broadcast along M: block (1, bn), replicated over i and k.
+    b_spec = pl.BlockSpec((1, bn), lambda i, j, k: (0, j))
+    return pl.pallas_call(
+        functools.partial(_kernel_bias, nk=nk, act=act),
+        grid=grid,
+        in_specs=[x_spec, w_spec, b_spec],
+        out_specs=o_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, w, b.reshape(1, n))
+
+
+@functools.lru_cache(maxsize=None)
+def _make_op(act: str, bm: int, bn: int, bk: int, interpret: bool):
+    """Build a custom-VJP matmul op for a given (act, tiling) config.
+
+    ``pallas_call`` has no general autodiff rule (the K-grid accumulator +
+    ``pl.when`` epilogue defeat the built-in JVP), so we supply the VJP
+    ourselves — and route the backward GEMMs through the same Pallas kernel,
+    keeping L1 on the hot path of both fwd and bwd:
+
+        dpre = dy * act'(out)
+        dx   = dpre @ w.T        (Pallas)
+        dw   = x.T  @ dpre       (Pallas)
+        db   = sum_M dpre
+    """
+
+    def raw(x, w, b, a):
+        return _pallas_matmul(x, w, b, act=a, bm=bm, bn=bn, bk=bk,
+                              interpret=interpret)
+
+    @jax.custom_vjp
+    def op(x, w, b):
+        return raw(x, w, b, act)
+
+    def fwd(x, w, b):
+        out = raw(x, w, b, act)
+        return out, (x, w, out)
+
+    def bwd(res, dy):
+        x, w, out = res
+        if act == "relu":
+            dpre = dy * (out > 0).astype(dy.dtype)
+        elif act == "tanh":
+            dpre = dy * (1.0 - out * out)
+        else:
+            dpre = dy
+        dx = raw(dpre, w.T, None, "none")
+        dw = raw(x.T, dpre, None, "none")
+        db = jnp.sum(dpre, axis=0)
+        return dx, dw, db
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+@functools.partial(
+    jax.jit, static_argnames=("act", "bm", "bn", "bk", "interpret")
+)
+def matmul_bias_act(x, w, b=None, *, act: str = "none", bm: int = DEFAULT_BM,
+                    bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+                    interpret: bool = True):
+    """``act(x @ w + b)`` as a tiled, differentiable Pallas kernel.
+
+    Args:
+      x: f32[M, K]. w: f32[K, N]. b: optional f32[N].
+      act: "none" | "relu" | "tanh" epilogue, fused into the last K step.
+      bm/bn/bk: preferred VMEM block sizes (clamped to divisors of M/N/K).
+      interpret: must stay True on CPU PJRT (see module docstring).
+
+    Returns:
+      f32[M, N].
+    """
+    op = _make_op(act, bm, bn, bk, interpret)
+    if b is None:
+        b = jnp.zeros((w.shape[1],), jnp.float32)
+    return op(x, w, b)
+
+
+def matmul(x, w, **kw):
+    """Plain ``x @ w`` (no bias, no activation epilogue)."""
+    return matmul_bias_act(x, w, None, act="none", **kw)

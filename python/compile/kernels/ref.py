@@ -1,0 +1,34 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Every kernel in this package must match its oracle here to float32
+tolerance; pytest + hypothesis sweep shapes/dtypes (python/tests/).
+These definitions are also the normative arithmetic for the Rust
+reimplementations in ``rust/src/compression`` and
+``rust/src/coordinator/momentum.rs``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_bias_act_ref(x, w, b=None, *, act: str = "none"):
+    """Oracle for :func:`..matmul.matmul_bias_act`."""
+    out = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif act == "tanh":
+        out = jnp.tanh(out)
+    return out
+
+
+def masked_scale_ref(g, mask, *, scale: float):
+    """Oracle for :func:`..sparsify.masked_scale`."""
+    return scale * g * mask
+
+
+def momentum_update_ref(m_prev, g_tilde, *, beta: float):
+    """Oracle for :func:`..sparsify.momentum_update`."""
+    return beta * m_prev + (1.0 - beta) * g_tilde

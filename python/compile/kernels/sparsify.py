@@ -1,0 +1,81 @@
+"""Pallas kernels for the compression-side hot loops.
+
+These mirror what the Rust coordinator does per round on flat d-vectors
+(d = 11.8k in the paper's setup, but the kernels are size-generic):
+
+* :func:`masked_scale` — the unbiased RandK reconstruction
+  ``g_tilde = (d/k) * (g ⊙ mask)`` (Algorithm 1, step 4).
+* :func:`momentum_update` — the server-side Polyak momentum
+  ``m_t = beta * m_{t-1} + (1-beta) * g_tilde`` (Algorithm 1, step 5).
+
+Both are VPU-bound elementwise ops with a 1-D grid; the BlockSpec expresses
+the HBM->VMEM streaming schedule. They exist (a) as the AOT-lowerable fast
+path for very large d and (b) as executable documentation of the exact
+arithmetic the Rust implementations in ``rust/src/compression`` and
+``rust/src/coordinator/momentum.rs`` must match (pytest cross-checks both
+against :mod:`.ref`).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 1024
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    if dim <= pref:
+        return dim
+    for b in range(pref, 0, -1):
+        if dim % b == 0:
+            return b
+    return dim
+
+
+def _masked_scale_kernel(g_ref, m_ref, o_ref, *, scale: float):
+    o_ref[...] = g_ref[...] * m_ref[...] * scale
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block", "interpret"))
+def masked_scale(g, mask, *, scale: float, block: int = DEFAULT_BLOCK,
+                 interpret: bool = True):
+    """``scale * (g ⊙ mask)`` over flat f32[d] vectors.
+
+    ``mask`` is f32 (0.0/1.0); ``scale`` is the static unbiasing factor d/k.
+    """
+    (d,) = g.shape
+    blk = _pick_block(d, block)
+    spec = pl.BlockSpec((blk,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(_masked_scale_kernel, scale=scale),
+        grid=(d // blk,),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=interpret,
+    )(g, mask)
+
+
+def _momentum_kernel(m_ref, g_ref, o_ref, *, beta: float):
+    o_ref[...] = beta * m_ref[...] + (1.0 - beta) * g_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "block", "interpret"))
+def momentum_update(m_prev, g_tilde, *, beta: float,
+                    block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """Polyak momentum step ``beta*m_prev + (1-beta)*g_tilde`` on f32[d]."""
+    (d,) = m_prev.shape
+    blk = _pick_block(d, block)
+    spec = pl.BlockSpec((blk,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(_momentum_kernel, beta=beta),
+        grid=(d // blk,),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=interpret,
+    )(m_prev, g_tilde)

@@ -1,0 +1,90 @@
+"""L2: the paper's training model as a JAX compute graph.
+
+The paper trains an 11 830-parameter CNN on MNIST. We use an MLP
+196 -> 57 -> 10 (11 809 params, -0.2%) on a 14x14 image grid — see
+DESIGN.md §1 for why the substitution is faithful (compression and robust
+aggregation act on the *flattened* gradient; only d and the fit-difficulty
+of the task matter).
+
+The dense layers are computed by the L1 Pallas kernel
+(:func:`kernels.matmul.matmul_bias_act`), so the Pallas code lowers into
+the same HLO module that the Rust runtime executes. Parameters travel as a
+single flat f32[P] vector — that is the object the coordinator compresses,
+aggregates and steps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import matmul_bias_act
+
+# Architecture constants — keep in sync with artifacts/meta.json consumers.
+D_IN = 196      # 14x14 input grid
+HIDDEN = 57     # chosen so P = 11_809 ~ paper's 11_830
+CLASSES = 10
+BATCH = 60      # paper's batch size
+EVAL_BATCH = 250
+
+# Flat-parameter layout: [W1 (196*57) | b1 (57) | W2 (57*10) | b2 (10)]
+_W1 = D_IN * HIDDEN
+_B1 = HIDDEN
+_W2 = HIDDEN * CLASSES
+_B2 = CLASSES
+P = _W1 + _B1 + _W2 + _B2  # 11_809
+
+
+def unpack(params):
+    """Split flat f32[P] into (W1, b1, W2, b2)."""
+    o = 0
+    w1 = params[o:o + _W1].reshape(D_IN, HIDDEN); o += _W1
+    b1 = params[o:o + _B1]; o += _B1
+    w2 = params[o:o + _W2].reshape(HIDDEN, CLASSES); o += _W2
+    b2 = params[o:o + _B2]
+    return w1, b1, w2, b2
+
+
+def pack(w1, b1, w2, b2):
+    """Inverse of :func:`unpack`."""
+    return jnp.concatenate(
+        [w1.reshape(-1), b1.reshape(-1), w2.reshape(-1), b2.reshape(-1)]
+    )
+
+
+def forward(params, x):
+    """Logits f32[B, 10] for inputs f32[B, 196]. Dense layers via Pallas."""
+    w1, b1, w2, b2 = unpack(params)
+    h = matmul_bias_act(x, w1, b1, act="relu")
+    return matmul_bias_act(h, w2, b2, act="none")
+
+
+def loss_fn(params, x, y_onehot):
+    """Mean softmax cross-entropy. y_onehot: f32[B, 10]."""
+    logits = forward(params, x)
+    logz = jax.nn.logsumexp(logits, axis=-1, keepdims=True)
+    logp = logits - logz
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+def loss_and_grad(params, x, y_onehot):
+    """(loss f32[], grad f32[P]) — the honest worker's per-round compute."""
+    return jax.value_and_grad(loss_fn)(params, x, y_onehot)
+
+
+def init_params(seed_bits):
+    """Deterministic He-init from a u32[2] seed (lowered to init.hlo.txt).
+
+    Biases start at zero; weights ~ N(0, 2/fan_in).
+    """
+    key = jax.random.wrap_key_data(
+        seed_bits.astype(jnp.uint32), impl="threefry2x32"
+    )
+    k1, k2 = jax.random.split(key)
+    w1 = jax.random.normal(k1, (D_IN, HIDDEN), jnp.float32) * jnp.sqrt(
+        2.0 / D_IN
+    )
+    w2 = jax.random.normal(k2, (HIDDEN, CLASSES), jnp.float32) * jnp.sqrt(
+        2.0 / HIDDEN
+    )
+    return pack(w1, jnp.zeros(HIDDEN), w2, jnp.zeros(CLASSES))

@@ -1,0 +1,116 @@
+"""L2 model: shapes, pack/unpack round-trip, gradient correctness, loss
+sanity, and determinism of init."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+
+def _params(seed=(1, 2)):
+    return model.init_params(jnp.asarray(seed, jnp.uint32))
+
+
+def _batch(rng, b=model.BATCH):
+    x = jnp.asarray(rng.standard_normal((b, model.D_IN)), jnp.float32)
+    y = jax.nn.one_hot(jnp.asarray(rng.integers(0, 10, b)), model.CLASSES)
+    return x, y
+
+
+def test_param_count_matches_paper_scale():
+    # Paper's CNN: 11_830 params; our MLP: 11_809 (-0.18%).
+    assert model.P == 11_809
+    assert abs(model.P - 11_830) / 11_830 < 0.01
+
+
+def test_pack_unpack_roundtrip():
+    p = _params()
+    assert p.shape == (model.P,)
+    np.testing.assert_array_equal(model.pack(*model.unpack(p)), p)
+
+
+def test_init_deterministic_and_seed_sensitive():
+    a, b = _params((1, 2)), _params((1, 2))
+    np.testing.assert_array_equal(a, b)
+    c = _params((3, 4))
+    assert float(jnp.linalg.norm(a - c)) > 1e-3
+
+
+def test_init_biases_zero():
+    _, b1, _, b2 = model.unpack(_params())
+    np.testing.assert_array_equal(b1, np.zeros(model.HIDDEN))
+    np.testing.assert_array_equal(b2, np.zeros(model.CLASSES))
+
+
+def test_forward_shapes():
+    rng = np.random.default_rng(0)
+    x, _ = _batch(rng)
+    logits = model.forward(_params(), x)
+    assert logits.shape == (model.BATCH, model.CLASSES)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_initial_loss_near_log10():
+    """Zero-bias random-weight init => loss within ~1 nat of ln(10)
+    (random logits of O(1) scale inflate CE slightly above the uniform
+    baseline; anything far beyond that signals a broken init or loss)."""
+    rng = np.random.default_rng(0)
+    x, y = _batch(rng)
+    loss = model.loss_fn(_params(), x, y)
+    assert abs(float(loss) - np.log(10.0)) < 1.2
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_grad_matches_pure_jnp(seed):
+    """End-to-end grad through the Pallas layers == pure-jnp autodiff."""
+    rng = np.random.default_rng(seed)
+    x, y = _batch(rng)
+    p = _params((seed % 1000, 5))
+
+    def loss_ref(params):
+        w1, b1, w2, b2 = model.unpack(params)
+        h = jnp.maximum(x @ w1 + b1, 0.0)
+        logits = h @ w2 + b2
+        logp = logits - jax.nn.logsumexp(logits, -1, keepdims=True)
+        return -jnp.mean(jnp.sum(y * logp, -1))
+
+    l_got, g_got = model.loss_and_grad(p, x, y)
+    l_ref, g_ref = jax.value_and_grad(loss_ref)(p)
+    np.testing.assert_allclose(float(l_got), float(l_ref), rtol=1e-5)
+    np.testing.assert_allclose(g_got, g_ref, rtol=1e-4, atol=1e-5)
+
+
+def test_grad_numerical_spotcheck():
+    """Central finite differences on a few random coordinates."""
+    rng = np.random.default_rng(3)
+    x, y = _batch(rng)
+    p = np.asarray(_params(), np.float64)
+    _, g = model.loss_and_grad(jnp.asarray(p, jnp.float32), x, y)
+    eps = 1e-3
+
+    def f(pv):
+        return float(model.loss_fn(jnp.asarray(pv, jnp.float32), x, y))
+
+    for idx in rng.choice(model.P, size=6, replace=False):
+        pp, pm = p.copy(), p.copy()
+        pp[idx] += eps
+        pm[idx] -= eps
+        fd = (f(pp) - f(pm)) / (2 * eps)
+        assert abs(fd - float(g[idx])) < 5e-3, (idx, fd, float(g[idx]))
+
+
+def test_training_reduces_loss():
+    """300 full-batch GD steps on a fixed batch should overfit it."""
+    rng = np.random.default_rng(1)
+    x, y = _batch(rng)
+    p = _params()
+    l0, _ = model.loss_and_grad(p, x, y)
+    step = jax.jit(lambda p: p - 0.5 * model.loss_and_grad(p, x, y)[1])
+    for _ in range(300):
+        p = step(p)
+    l1, _ = model.loss_and_grad(p, x, y)
+    assert float(l1) < 0.5 * float(l0), (float(l0), float(l1))

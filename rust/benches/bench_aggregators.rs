@@ -1,0 +1,102 @@
+//! Aggregator ablation: throughput and robustness quality of every
+//! `(f,κ)`-robust rule at the paper's operating point (n = 19, f = 9,
+//! d = 11 809) and under each attack.
+//!
+//! Two tables:
+//!  * throughput — aggregations/s per rule (the L3 §Perf hot path);
+//!  * quality — distance of the aggregate from the honest mean under each
+//!    attack (lower is better; mean is the unprotected reference).
+//!
+//! Run: `cargo bench --bench bench_aggregators`
+
+use rosdhb::aggregators::{self, Aggregator};
+use rosdhb::attacks::{parse_spec as parse_attack, AttackCtx, AttackKind};
+use rosdhb::prng::Pcg64;
+use rosdhb::tensor;
+use rosdhb::util::bench;
+
+const D: usize = 11_809;
+const NH: usize = 10;
+const F: usize = 9;
+
+fn honest_inputs(rng: &mut Pcg64) -> Vec<Vec<f32>> {
+    (0..NH)
+        .map(|_| {
+            let mut v = vec![0f32; D];
+            rng.fill_gaussian(&mut v, 1.0);
+            for x in v.iter_mut() {
+                *x += 0.5;
+            }
+            v
+        })
+        .collect()
+}
+
+fn main() {
+    let specs = ["mean", "cwtm", "median", "geomed", "krum", "multikrum",
+                 "nnm+cwtm", "nnm+geomed"];
+    let mut rng = Pcg64::new(1, 1);
+    let honest = honest_inputs(&mut rng);
+
+    // --- throughput
+    println!("# throughput at n={} d={D}", NH + F);
+    // byzantine inputs: ALIE payloads
+    let alie = match parse_attack("alie").unwrap() {
+        AttackKind::Payload(p) => p,
+        _ => unreachable!(),
+    };
+    let ctx = AttackCtx {
+        round: 0,
+        honest_payloads: &honest,
+        n_honest: NH,
+        n_byz: F,
+    };
+    let byz = alie.craft_all(&ctx, &mut rng);
+    let all: Vec<&[f32]> = honest
+        .iter()
+        .chain(byz.iter())
+        .map(|v| v.as_slice())
+        .collect();
+    let mut out = vec![0f32; D];
+    for spec in specs {
+        let agg = aggregators::parse_spec(spec, F).unwrap();
+        let xs = bench::time_fn(&format!("aggregate/{spec}"), 2, 12, || {
+            agg.aggregate(&all, &mut out);
+        });
+        let med = rosdhb::util::stats::median(&xs);
+        println!(
+            "#   -> {:.2} Mcoord/s",
+            (D * (NH + F)) as f64 / med / 1e6
+        );
+    }
+
+    // --- quality under each attack
+    println!("\n# quality: ||F(inputs) - honest_mean|| under attacks (f={F})");
+    let honest_refs: Vec<&[f32]> = honest.iter().map(|v| v.as_slice()).collect();
+    let hmean = tensor::mean(&honest_refs);
+    print!("{:<14}", "attack");
+    for spec in specs {
+        print!("{spec:>12}");
+    }
+    println!();
+    for attack_name in ["alie", "ipm", "signflip:5", "noise:100", "mimic"] {
+        let atk = match parse_attack(attack_name).unwrap() {
+            AttackKind::Payload(p) => p,
+            _ => unreachable!(),
+        };
+        let byz = atk.craft_all(&ctx, &mut rng);
+        let all: Vec<&[f32]> = honest
+            .iter()
+            .chain(byz.iter())
+            .map(|v| v.as_slice())
+            .collect();
+        print!("{attack_name:<14}");
+        for spec in specs {
+            let agg = aggregators::parse_spec(spec, F).unwrap();
+            let r = agg.aggregate_vec(&all);
+            print!("{:>12.3}", tensor::dist_sq(&r, &hmean).sqrt());
+        }
+        println!();
+    }
+    println!("# (mean column shows the unprotected baseline; robust rules should be far smaller under alie/signflip/noise)");
+}

@@ -1,0 +1,89 @@
+//! Global vs local sparsification (Theorem 1 vs Theorem 2 ablation) on
+//! the quadratic world: gradient-norm trajectories at equal k/d, and the
+//! wall-clock cost of each variant's server round.
+//!
+//! Expected shape: global decays ~1/T to the κG² floor; local decays
+//! ~1/√T and plateaus noticeably higher at the same T budget (its floor
+//! carries the extra (d/k−1)/|H|·G² term of Theorem 2).
+//!
+//! Run: `cargo bench --bench bench_global_vs_local`
+
+use rosdhb::aggregators;
+use rosdhb::algorithms::{rosdhb::RoSdhb, Algorithm, RoundEnv};
+use rosdhb::attacks::AttackKind;
+use rosdhb::prng::Pcg64;
+use rosdhb::synthetic::QuadraticWorld;
+use rosdhb::tensor;
+use rosdhb::transport::ByteMeter;
+use rosdhb::util::bench;
+
+const D: usize = 256;
+const NH: usize = 10;
+const F: usize = 2;
+
+fn run_variant(local: bool, k: usize, t_max: u64, probes: &[u64]) -> Vec<f64> {
+    let world = QuadraticWorld::new(D, NH, 1.0, 0.3, 2.0, 31);
+    let agg = aggregators::parse_spec("nnm+cwtm", F).unwrap();
+    let attack = AttackKind::None;
+    let mut meter = ByteMeter::new(NH + F);
+    let mut rng = Pcg64::new(4, 4);
+    let mut alg = RoSdhb::new(D, NH + F, local);
+    let gamma = if local { 0.04 } else { 0.08 } * k as f32 / D as f32 * 4.0;
+    let mut theta = vec![3.0f32; D];
+    let mut out = Vec::new();
+    for t in 1..=t_max {
+        let grads = world.grads(&theta);
+        let mut env = RoundEnv {
+            d: D,
+            n_honest: NH,
+            n_byz: F,
+            seed: 77,
+            k,
+            beta: 0.9,
+            aggregator: agg.as_ref(),
+            attack: &attack,
+            meter: &mut meter,
+            rng: &mut rng,
+        };
+        let r = alg.round(t, &grads, &[], &mut env);
+        tensor::axpy(&mut theta, -gamma, &r);
+        if probes.contains(&t) {
+            out.push(tensor::norm_sq(&world.grad_h(&theta)));
+        }
+    }
+    out
+}
+
+fn main() {
+    let probes = [100u64, 400, 1600, 6400];
+    println!("# global vs local sparsification (quadratics, k/d = 0.1)");
+    println!("variant,T100,T400,T1600,T6400");
+    let k = D / 10;
+    let g = run_variant(false, k, 6400, &probes);
+    let l = run_variant(true, k, 6400, &probes);
+    print!("global");
+    for v in &g {
+        print!(",{v:.5e}");
+    }
+    println!();
+    print!("local");
+    for v in &l {
+        print!(",{v:.5e}");
+    }
+    println!();
+    println!(
+        "# shape check: final global {:.3e} vs local {:.3e} -> global {} lower",
+        g[3],
+        l[3],
+        if g[3] < l[3] { "is" } else { "is NOT" }
+    );
+
+    // per-round wall clock of each variant (the local variant pays mask
+    // draw + codec per worker per round)
+    for local in [false, true] {
+        let name = if local { "round/local" } else { "round/global" };
+        bench::time_fn(name, 3, 30, || {
+            let _ = run_variant(local, k, 50, &[]);
+        });
+    }
+}

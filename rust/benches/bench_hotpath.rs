@@ -1,0 +1,135 @@
+//! Whole-stack hot-path profile (§Perf): per-operation latency of every
+//! stage of a coordinator round, plus end-to-end rounds/s for both
+//! engines. Before/after numbers for the optimization pass are recorded
+//! in EXPERIMENTS.md §Perf.
+//!
+//! Stages (paper operating point: d = 11 809, n = 19, k/d = 0.05):
+//!   1. worker gradient        (native model; PJRT artifact if present)
+//!   2. RandK mask derivation
+//!   3. compress + reconstruct
+//!   4. momentum update × n
+//!   5. robust aggregation (nnm+cwtm)
+//!   6. model step (axpy)
+//!
+//! Run: `cargo bench --bench bench_hotpath`
+
+use rosdhb::aggregators;
+use rosdhb::compression::{mask_from_seed, RandK};
+use rosdhb::config::{Engine, ExperimentConfig};
+use rosdhb::coordinator::Trainer;
+use rosdhb::data::generate_synthetic;
+use rosdhb::model::MlpSpec;
+use rosdhb::prng::Pcg64;
+use rosdhb::tensor;
+use rosdhb::util::bench;
+use rosdhb::worker::{GradEngine, NativeEngine};
+
+const D: usize = 11_809;
+const N: usize = 19;
+const K: usize = 590; // k/d = 0.05
+
+fn main() {
+    let mut rng = Pcg64::new(2, 2);
+
+    // 1. worker gradient (native)
+    let spec = MlpSpec::default();
+    let mut eng = NativeEngine::new(spec, 60);
+    let params = eng.init_params(1).unwrap();
+    let ds = generate_synthetic(1, 600);
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    ds.sample_batch(&mut rng, 60, &mut x, &mut y);
+    bench::time_fn("grad/native (B=60)", 3, 20, || {
+        let _ = eng.grad(&params, &x, &y).unwrap();
+    });
+
+    // 2. mask derivation
+    let mut seed = 0u64;
+    bench::time_fn("mask/from_seed (k/d=0.05)", 3, 50, || {
+        seed = seed.wrapping_add(1);
+        let m = mask_from_seed(seed, D, K);
+        std::hint::black_box(&m);
+    });
+
+    // 3. compress + reconstruct
+    let mut g = vec![0f32; D];
+    rng.fill_gaussian(&mut g, 1.0);
+    let mask = mask_from_seed(7, D, K);
+    let mut payload = Vec::with_capacity(K);
+    let mut recon = vec![0f32; D];
+    bench::time_fn("compress+reconstruct", 5, 100, || {
+        mask.compress_into(&g, &mut payload);
+        mask.reconstruct_into(&payload, &mut recon);
+    });
+
+    // 4. momentum update x n
+    let mut momenta = vec![vec![0f32; D]; N];
+    bench::time_fn("momentum update x19", 5, 100, || {
+        for m in momenta.iter_mut() {
+            tensor::scale_add(m, 0.9, 0.1, &recon);
+        }
+    });
+
+    // 5. robust aggregation
+    let inputs: Vec<Vec<f32>> = (0..N)
+        .map(|_| {
+            let mut v = vec![0f32; D];
+            rng.fill_gaussian(&mut v, 1.0);
+            v
+        })
+        .collect();
+    let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    let mut out = vec![0f32; D];
+    for spec in ["cwtm", "nnm+cwtm"] {
+        let agg = aggregators::parse_spec(spec, 9).unwrap();
+        bench::time_fn(&format!("aggregate/{spec} (n=19)"), 2, 15, || {
+            agg.aggregate(&refs, &mut out);
+        });
+    }
+
+    // 6. model step
+    bench::time_fn("model step (axpy d=11809)", 5, 200, || {
+        tensor::axpy(&mut g, -0.1, &out);
+    });
+
+    // end-to-end rounds/s, native engine
+    let mut cfg = ExperimentConfig::default_mnist_like();
+    cfg.n_honest = 10;
+    cfg.n_byz = 9;
+    cfg.attack = "alie".into();
+    cfg.aggregator = "nnm+cwtm".into();
+    cfg.k_frac = 0.05;
+    cfg.rounds = 30;
+    cfg.eval_every = 1000;
+    cfg.train_size = 3_000;
+    cfg.test_size = 500;
+    cfg.stop_at_tau = false;
+    let mut trainer = Trainer::from_config(&cfg).unwrap();
+    let mut t = 1u64;
+    let xs = bench::time_fn("e2e round/native (n=19, alie)", 2, 20, || {
+        trainer.step(t).unwrap();
+        t += 1;
+    });
+    println!(
+        "#   -> {:.1} rounds/s native",
+        1.0 / rosdhb::util::stats::median(&xs)
+    );
+
+    // end-to-end PJRT (only if artifacts exist)
+    if rosdhb::runtime::Meta::load("artifacts").is_ok() {
+        let mut cfg2 = cfg.clone();
+        cfg2.engine = Engine::Pjrt;
+        let mut trainer = Trainer::from_config(&cfg2).unwrap();
+        let mut t = 1u64;
+        let xs = bench::time_fn("e2e round/pjrt (n=19, alie)", 2, 10, || {
+            trainer.step(t).unwrap();
+            t += 1;
+        });
+        println!(
+            "#   -> {:.1} rounds/s pjrt",
+            1.0 / rosdhb::util::stats::median(&xs)
+        );
+    } else {
+        println!("# artifacts/ missing: skipping PJRT e2e (run `make artifacts`)");
+    }
+}

@@ -1,0 +1,174 @@
+//! Table 1 — convergence-rate comparison on the controlled quadratic
+//! world (exact G, B, L): RoSDHB vs Byz-DASHA-PAGE vs SOTA-no-compression
+//! (robust DGD) vs SOTA-no-robustness (DGD+RandK).
+//!
+//! For each algorithm we report E‖∇L_H(θ̂)‖² after T rounds at several T
+//! and compression levels α — the quantity Table 1 bounds. Expected
+//! *shape* (paper, §3.2):
+//!
+//! * RoSDHB & Byz-DASHA-PAGE: ~α/T decay toward a κG²-sized floor,
+//!   insensitive to δ = f/n in the decaying term;
+//! * robust-DGD (α = 1): same floor, 1/T decay without the α factor;
+//! * DGD+RandK (f = 0 column): α/T decay to ~0 floor; under attack it has
+//!   no floor at all — it diverges/stalls (κ = ∞).
+//!
+//! Run: `cargo bench --bench bench_table1`
+
+use rosdhb::aggregators;
+use rosdhb::algorithms::{baselines, dasha, rosdhb::RoSdhb, Algorithm, RoundEnv};
+use rosdhb::attacks::{parse_spec as parse_attack, AttackKind};
+use rosdhb::prng::Pcg64;
+use rosdhb::synthetic::QuadraticWorld;
+use rosdhb::tensor;
+use rosdhb::transport::ByteMeter;
+
+const D: usize = 128;
+const NH: usize = 10;
+const F: usize = 2;
+const G: f32 = 1.5;
+const B: f32 = 0.3;
+const MU: f32 = 1.0;
+
+struct Run {
+    alg: Box<dyn Algorithm>,
+    gamma: f32,
+    k: usize,
+    attack: AttackKind,
+    aggregator: Box<dyn aggregators::Aggregator>,
+    n_byz: usize,
+}
+
+fn grad_h_sq_at(run: &mut Run, world: &QuadraticWorld, t_max: u64, probes: &[u64]) -> Vec<f64> {
+    let mut theta = vec![2.0f32; D];
+    let mut meter = ByteMeter::new(NH + run.n_byz);
+    let mut rng = Pcg64::new(99, 99);
+    let mut out = Vec::new();
+    for t in 1..=t_max {
+        let grads = world.grads(&theta);
+        let mut env = RoundEnv {
+            d: D,
+            n_honest: NH,
+            n_byz: run.n_byz,
+            seed: 5,
+            k: run.k,
+            beta: 0.9,
+            aggregator: run.aggregator.as_ref(),
+            attack: &run.attack,
+            meter: &mut meter,
+            rng: &mut rng,
+        };
+        let r = run.alg.round(t, &grads, &[], &mut env);
+        tensor::axpy(&mut theta, -run.gamma, &r);
+        if probes.contains(&t) {
+            out.push(tensor::norm_sq(&world.grad_h(&theta)));
+        }
+    }
+    out
+}
+
+fn main() {
+    let world = QuadraticWorld::new(D, NH, MU, B, G, 21);
+    let probes = [50u64, 200, 800, 3000];
+    let n = NH + F;
+    println!("# Table 1 reproduction: E||grad_H||^2 vs T (quadratics, G={G}, B={B}, L={MU})");
+    println!("# floor reference: kappa*G^2 with kappa(nnm+cwtm, n={n}, f={F})");
+    let kappa = aggregators::parse_spec("nnm+cwtm", F)
+        .unwrap()
+        .kappa(n, F);
+    println!("# kappa bound = {kappa:.4} -> kappa*G^2 = {:.4}", kappa * (G as f64).powi(2));
+    println!("algorithm,alpha,attack,T50,T200,T800,T3000");
+
+    let mk_agg = || aggregators::parse_spec("nnm+cwtm", F).unwrap();
+    let mk_mean = || aggregators::parse_spec("mean", 0).unwrap();
+
+    // RoSDHB at alpha in {1, 4, 16} under ALIE
+    for &k in &[D, D / 4, D / 16] {
+        let mut run = Run {
+            alg: Box::new(RoSdhb::new(D, n, false)),
+            gamma: 0.08 * k as f32 / D as f32,
+            k,
+            attack: parse_attack("alie").unwrap(),
+            aggregator: mk_agg(),
+            n_byz: F,
+        };
+        let vals = grad_h_sq_at(&mut run, &world, 3000, &probes);
+        print_row("rosdhb", D as f64 / k as f64, "alie", &vals);
+    }
+    // Byz-DASHA-PAGE at the same alphas
+    for &k in &[D, D / 4, D / 16] {
+        let mut run = Run {
+            alg: Box::new(dasha::ByzDashaPage::new(D, n)),
+            gamma: 0.08 * k as f32 / D as f32,
+            k,
+            attack: parse_attack("alie").unwrap(),
+            aggregator: mk_agg(),
+            n_byz: F,
+        };
+        let vals = grad_h_sq_at(&mut run, &world, 3000, &probes);
+        print_row("byz-dasha-page", D as f64 / k as f64, "alie", &vals);
+    }
+    // SOTA no compression: robust DGD (alpha = 1)
+    {
+        let mut run = Run {
+            alg: Box::new(baselines::RobustDgd::new(D, n)),
+            gamma: 0.08,
+            k: D,
+            attack: parse_attack("alie").unwrap(),
+            aggregator: mk_agg(),
+            n_byz: F,
+        };
+        let vals = grad_h_sq_at(&mut run, &world, 3000, &probes);
+        print_row("robust-dgd", 1.0, "alie", &vals);
+    }
+    // SOTA no robustness: DGD+RandK with f = 0
+    for &k in &[D / 4, D / 16] {
+        let mut run = Run {
+            alg: Box::new(baselines::DgdRandK::new()),
+            gamma: 0.08 * k as f32 / D as f32,
+            k,
+            attack: AttackKind::None,
+            aggregator: mk_mean(),
+            n_byz: 0,
+        };
+        let vals = grad_h_sq_at(&mut run, &world, 3000, &probes);
+        print_row("dgd-randk(f=0)", D as f64 / k as f64, "none", &vals);
+    }
+    // Negative control: DGD+RandK UNDER attack (mean aggregation) — the
+    // "naive combination degrades" motivation.
+    {
+        let mut run = Run {
+            alg: Box::new(baselines::DgdRandK::new()),
+            gamma: 0.02,
+            k: D / 4,
+            attack: parse_attack("alie").unwrap(),
+            aggregator: mk_mean(),
+            n_byz: F,
+        };
+        let vals = grad_h_sq_at(&mut run, &world, 3000, &probes);
+        print_row("dgd-randk(attacked)", 4.0, "alie", &vals);
+    }
+
+    // wall-clock of one 3000-round run for the perf log
+    let t0 = std::time::Instant::now();
+    let mut run = Run {
+        alg: Box::new(RoSdhb::new(D, n, false)),
+        gamma: 0.02,
+        k: D / 4,
+        attack: parse_attack("alie").unwrap(),
+        aggregator: mk_agg(),
+        n_byz: F,
+    };
+    let _ = grad_h_sq_at(&mut run, &world, 3000, &probes);
+    println!(
+        "# timing: 3000 rosdhb rounds (d={D}, n={n}) in {:.3}s",
+        t0.elapsed().as_secs_f64()
+    );
+}
+
+fn print_row(name: &str, alpha: f64, attack: &str, vals: &[f64]) {
+    print!("{name},{alpha},{attack}");
+    for v in vals {
+        print!(",{v:.5e}");
+    }
+    println!();
+}

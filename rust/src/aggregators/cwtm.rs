@@ -1,0 +1,220 @@
+//! Coordinate-wise trimmed mean (CWTM) and coordinate-wise median — the
+//! order-statistic family. CWTM is the rule used in the paper's empirical
+//! section ("we employ the trimmed mean robust aggregator", §4).
+//!
+//! Per coordinate ℓ: sort the n values, drop the f smallest and f largest,
+//! average the middle n−2f. Median is the f = ⌊(n−1)/2⌋ limit (with the
+//! usual even-n midpoint convention).
+//!
+//! Hot-path note: this is O(d · n log n) with an n-length scratch per
+//! coordinate; the scratch is reused across coordinates (no per-coordinate
+//! allocation) — see EXPERIMENTS.md §Perf.
+
+use super::{delta_ratio, Aggregator};
+
+/// Coordinate-wise trimmed mean with trim level f.
+#[derive(Clone, Debug)]
+pub struct Cwtm {
+    pub f: usize,
+}
+
+impl Cwtm {
+    pub fn new(f: usize) -> Self {
+        Cwtm { f }
+    }
+}
+
+impl Aggregator for Cwtm {
+    fn name(&self) -> String {
+        format!("cwtm(f={})", self.f)
+    }
+
+    fn aggregate(&self, inputs: &[&[f32]], out: &mut [f32]) {
+        let n = inputs.len();
+        let d = out.len();
+        assert!(
+            n > 2 * self.f,
+            "CWTM needs n > 2f (n={n}, f={})",
+            self.f
+        );
+        debug_assert!(inputs.iter().all(|r| r.len() == d));
+        let f = self.f;
+        let keep = n - 2 * f;
+        let inv = 1.0 / keep as f32;
+        // Coordinates are independent → split them across cores (§Perf;
+        // threshold avoids thread overhead on small d).
+        let workers = if d >= 16384 {
+            std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1)
+                .min(8)
+        } else {
+            1
+        };
+        let chunk = (d + workers - 1) / workers;
+        let run_range = |start: usize, out_chunk: &mut [f32]| {
+            let mut col: Vec<f32> = vec![0.0; n];
+            for (off, slot_out) in out_chunk.iter_mut().enumerate() {
+                let ell = start + off;
+                for (slot, row) in col.iter_mut().zip(inputs) {
+                    *slot = row[ell];
+                }
+                let acc: f32 = if f == 0 {
+                    col.iter().sum()
+                } else {
+                    // Partial selection instead of a full sort (§Perf):
+                    // two O(n) selects expose exactly the middle order
+                    // statistics [f, n−f) in col[f..f+keep], unordered.
+                    col.select_nth_unstable_by(f, |a, b| a.total_cmp(b));
+                    let upper = &mut col[f..];
+                    upper.select_nth_unstable_by(keep - 1, |a, b| {
+                        a.total_cmp(b)
+                    });
+                    upper[..keep].iter().sum()
+                };
+                *slot_out = acc * inv;
+            }
+        };
+        if workers == 1 {
+            run_range(0, out);
+        } else {
+            std::thread::scope(|s| {
+                for (ci, out_chunk) in out.chunks_mut(chunk).enumerate() {
+                    let run = &run_range;
+                    s.spawn(move || run(ci * chunk, out_chunk));
+                }
+            });
+        }
+    }
+
+    /// κ ≤ 6δ/(1−2δ) · (1 + δ/(1−2δ)) with δ = f/n — [2], Table 1.
+    fn kappa(&self, n: usize, f: usize) -> f64 {
+        if f == 0 {
+            return 0.0;
+        }
+        if n <= 2 * f {
+            return f64::INFINITY;
+        }
+        let r = delta_ratio(n, f);
+        6.0 * r * (1.0 + r)
+    }
+}
+
+/// Coordinate-wise median.
+#[derive(Clone, Debug, Default)]
+pub struct CwMedian;
+
+impl Aggregator for CwMedian {
+    fn name(&self) -> String {
+        "cwmed".into()
+    }
+
+    fn aggregate(&self, inputs: &[&[f32]], out: &mut [f32]) {
+        let n = inputs.len();
+        assert!(n > 0);
+        let mut col: Vec<f32> = vec![0.0; n];
+        for ell in 0..out.len() {
+            for (slot, row) in col.iter_mut().zip(inputs) {
+                *slot = row[ell];
+            }
+            // O(n) selection instead of a sort (§Perf).
+            col.select_nth_unstable_by(n / 2, |a, b| a.total_cmp(b));
+            out[ell] = if n % 2 == 1 {
+                col[n / 2]
+            } else {
+                let lower = col[..n / 2]
+                    .iter()
+                    .copied()
+                    .fold(f32::NEG_INFINITY, f32::max);
+                0.5 * (lower + col[n / 2])
+            };
+        }
+    }
+
+    /// Median is (f, κ)-robust for f < n/2 with κ like CWTM's up to
+    /// constants; we use the [2] bound for CWM: 4δ/(1−2δ)·(1+δ/(1−2δ))...
+    /// conservatively the same form as CWTM.
+    fn kappa(&self, n: usize, f: usize) -> f64 {
+        if f == 0 {
+            return 0.0;
+        }
+        if n <= 2 * f {
+            return f64::INFINITY;
+        }
+        let r = delta_ratio(n, f);
+        6.0 * r * (1.0 + r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::*;
+    use super::super::Aggregator;
+    use super::*;
+
+    #[test]
+    fn trims_extremes_per_coordinate() {
+        let rows = vec![
+            vec![0.0, 100.0],
+            vec![1.0, 1.0],
+            vec![2.0, 2.0],
+            vec![3.0, 3.0],
+            vec![-50.0, 4.0],
+        ];
+        let refs = as_refs(&rows);
+        let out = Cwtm::new(1).aggregate_vec(&refs);
+        // coord 0: drop -50 and 3 -> mean(0,1,2)=1 ; wait sorted: -50,0,1,2,3 -> keep 0,1,2 -> 1
+        assert_eq!(out[0], 1.0);
+        // coord 1: sorted 1,2,3,4,100 -> keep 2,3,4 -> 3
+        assert_eq!(out[1], 3.0);
+    }
+
+    #[test]
+    fn cwtm_f0_is_mean() {
+        let rows = vec![vec![1.0, 5.0], vec![3.0, 7.0]];
+        let refs = as_refs(&rows);
+        assert_eq!(Cwtm::new(0).aggregate_vec(&refs), vec![2.0, 6.0]);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        let rows = vec![vec![1.0], vec![9.0], vec![2.0]];
+        let refs = as_refs(&rows);
+        assert_eq!(CwMedian.aggregate_vec(&refs), vec![2.0]);
+        let rows = vec![vec![1.0], vec![9.0], vec![2.0], vec![4.0]];
+        let refs = as_refs(&rows);
+        assert_eq!(CwMedian.aggregate_vec(&refs), vec![3.0]);
+    }
+
+    #[test]
+    fn bounded_by_honest_range_under_attack() {
+        // With f outliers at +1e6, CWTM output stays within honest extremes.
+        let rows = corrupted_inputs(11, 3, 8, 1e6, 5);
+        let refs = as_refs(&rows);
+        let out = Cwtm::new(3).aggregate_vec(&refs);
+        for ell in 0..8 {
+            let mut honest: Vec<f32> =
+                rows[3..].iter().map(|r| r[ell]).collect();
+            honest.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            assert!(out[ell] >= honest[0] && out[ell] <= honest[10 - 3]);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn needs_enough_inputs() {
+        let rows = vec![vec![0.0], vec![1.0]];
+        let refs = as_refs(&rows);
+        let _ = Cwtm::new(1).aggregate_vec(&refs);
+    }
+
+    #[test]
+    fn kappa_scales_like_delta() {
+        let c = Cwtm::new(1);
+        assert_eq!(c.kappa(10, 0), 0.0);
+        assert!(c.kappa(10, 1) < c.kappa(10, 3));
+        assert!(c.kappa(10, 5).is_infinite());
+        // κ -> 0 as n grows at fixed f (O(f/n) regime of Table 1)
+        assert!(c.kappa(1000, 1) < 0.01);
+    }
+}

@@ -1,0 +1,131 @@
+//! Geometric median via smoothed Weiszfeld iteration.
+//!
+//! GeoMed(x_1..x_n) = argmin_z Σ‖z − x_i‖. Weiszfeld's fixed point
+//! `z ← Σ(x_i/‖z−x_i‖) / Σ(1/‖z−x_i‖)` converges linearly away from input
+//! points; the ε-smoothing below handles coincidence with an input.
+
+use super::{delta_ratio, Aggregator};
+use crate::tensor;
+
+#[derive(Clone, Debug)]
+pub struct GeoMed {
+    pub max_iters: usize,
+    pub tol: f64,
+    pub eps: f64,
+}
+
+impl Default for GeoMed {
+    fn default() -> Self {
+        GeoMed {
+            max_iters: 100,
+            tol: 1e-10,
+            eps: 1e-12,
+        }
+    }
+}
+
+impl Aggregator for GeoMed {
+    fn name(&self) -> String {
+        "geomed".into()
+    }
+
+    fn aggregate(&self, inputs: &[&[f32]], out: &mut [f32]) {
+        let d = out.len();
+        // init at coordinate-wise mean
+        tensor::mean_into(out, inputs);
+        let mut next = vec![0.0f32; d];
+        for _ in 0..self.max_iters {
+            let mut wsum = 0.0f64;
+            next.fill(0.0);
+            for x in inputs {
+                let dist = tensor::dist_sq(out, x).sqrt().max(self.eps);
+                let w = 1.0 / dist;
+                wsum += w;
+                for (nj, xj) in next.iter_mut().zip(*x) {
+                    *nj += (w * *xj as f64) as f32;
+                }
+            }
+            let inv = (1.0 / wsum) as f32;
+            let mut delta = 0.0f64;
+            for (o, nx) in out.iter_mut().zip(&next) {
+                let v = nx * inv;
+                let dd = (*o - v) as f64;
+                delta += dd * dd;
+                *o = v;
+            }
+            if delta < self.tol * self.tol {
+                break;
+            }
+        }
+    }
+
+    /// κ ≤ 4δ/(1−2δ)·(1 + δ/(1−2δ))² — [2], Table 1 (GeoMed row).
+    fn kappa(&self, n: usize, f: usize) -> f64 {
+        if f == 0 {
+            return 0.0;
+        }
+        if n <= 2 * f {
+            return f64::INFINITY;
+        }
+        let r = delta_ratio(n, f);
+        4.0 * r * (1.0 + r) * (1.0 + r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::*;
+    use super::super::Aggregator;
+    use super::*;
+
+    #[test]
+    fn median_of_collinear_points_is_middle() {
+        let rows = vec![vec![0.0, 0.0], vec![1.0, 0.0], vec![10.0, 0.0]];
+        let refs = as_refs(&rows);
+        let out = GeoMed::default().aggregate_vec(&refs);
+        assert!((out[0] - 1.0).abs() < 1e-3, "{out:?}");
+        assert!(out[1].abs() < 1e-6);
+    }
+
+    #[test]
+    fn symmetric_configuration_center() {
+        let rows = vec![
+            vec![1.0, 0.0],
+            vec![-1.0, 0.0],
+            vec![0.0, 1.0],
+            vec![0.0, -1.0],
+        ];
+        let refs = as_refs(&rows);
+        let out = GeoMed::default().aggregate_vec(&refs);
+        assert!(out[0].abs() < 1e-6 && out[1].abs() < 1e-6, "{out:?}");
+    }
+
+    #[test]
+    fn resists_blowup_outliers() {
+        let rows = corrupted_inputs(11, 3, 6, 1e6, 8);
+        let refs = as_refs(&rows);
+        let out = GeoMed::default().aggregate_vec(&refs);
+        // stays within a few units of the honest cloud (zero-mean gaussian)
+        assert!(tensor::norm(&out) < 5.0, "‖out‖={}", tensor::norm(&out));
+    }
+
+    #[test]
+    fn handles_coincident_inputs() {
+        let rows = vec![vec![2.0, 3.0]; 5];
+        let refs = as_refs(&rows);
+        let out = GeoMed::default().aggregate_vec(&refs);
+        assert!((out[0] - 2.0).abs() < 1e-5 && (out[1] - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn minimizes_sum_of_distances_vs_mean() {
+        let rows = corrupted_inputs(9, 2, 4, 50.0, 9);
+        let refs = as_refs(&rows);
+        let gm = GeoMed::default().aggregate_vec(&refs);
+        let mean = crate::aggregators::Mean.aggregate_vec(&refs);
+        let cost = |z: &[f32]| -> f64 {
+            refs.iter().map(|x| tensor::dist_sq(z, x).sqrt()).sum()
+        };
+        assert!(cost(&gm) <= cost(&mean) + 1e-6);
+    }
+}

@@ -1,0 +1,171 @@
+//! Krum and Multi-Krum (Blanchard et al. [7]).
+//!
+//! Krum scores each input by the sum of squared distances to its
+//! n−f−2 nearest other inputs and returns the argmin; Multi-Krum averages
+//! the m = n−f best-scored inputs. O(n²d) pairwise distances dominate;
+//! the distance matrix is computed once and shared.
+
+use super::{delta_ratio, Aggregator};
+use crate::tensor;
+
+/// Pairwise squared-distance matrix (shared by Krum/MultiKrum/NNM).
+pub(crate) fn pairwise_dist_sq(inputs: &[&[f32]]) -> Vec<f64> {
+    let n = inputs.len();
+    let mut m = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d = tensor::dist_sq(inputs[i], inputs[j]);
+            m[i * n + j] = d;
+            m[j * n + i] = d;
+        }
+    }
+    m
+}
+
+/// Krum score of input i: sum of its n−f−2 smallest distances to others.
+fn scores(dist: &[f64], n: usize, f: usize) -> Vec<f64> {
+    let closest = n.saturating_sub(f + 2).max(1);
+    (0..n)
+        .map(|i| {
+            let mut row: Vec<f64> = (0..n)
+                .filter(|&j| j != i)
+                .map(|j| dist[i * n + j])
+                .collect();
+            row.sort_by(|a, b| a.total_cmp(b));
+            row[..closest.min(row.len())].iter().sum()
+        })
+        .collect()
+}
+
+#[derive(Clone, Debug)]
+pub struct Krum {
+    pub f: usize,
+}
+
+impl Krum {
+    pub fn new(f: usize) -> Self {
+        Krum { f }
+    }
+}
+
+impl Aggregator for Krum {
+    fn name(&self) -> String {
+        format!("krum(f={})", self.f)
+    }
+
+    fn aggregate(&self, inputs: &[&[f32]], out: &mut [f32]) {
+        let n = inputs.len();
+        assert!(n > 2, "krum needs n > 2");
+        let dist = pairwise_dist_sq(inputs);
+        let sc = scores(&dist, n, self.f);
+        let best = (0..n)
+            .min_by(|&a, &b| sc[a].total_cmp(&sc[b]))
+            .unwrap();
+        out.copy_from_slice(inputs[best]);
+    }
+
+    /// Krum's κ does not vanish with n (stays Θ(1)); bound from [2]:
+    /// κ ≤ 6(1 + δ/(1−2δ))² — constants conservative.
+    fn kappa(&self, n: usize, f: usize) -> f64 {
+        if f == 0 {
+            // still selects a single vector != mean: κ is O(1), not 0.
+            return 1.0;
+        }
+        if n <= 2 * f {
+            return f64::INFINITY;
+        }
+        let r = delta_ratio(n, f);
+        6.0 * (1.0 + r) * (1.0 + r)
+    }
+}
+
+/// Multi-Krum: average of the n−f best-scored inputs.
+#[derive(Clone, Debug)]
+pub struct MultiKrum {
+    pub f: usize,
+}
+
+impl MultiKrum {
+    pub fn new(f: usize) -> Self {
+        MultiKrum { f }
+    }
+}
+
+impl Aggregator for MultiKrum {
+    fn name(&self) -> String {
+        format!("multikrum(f={})", self.f)
+    }
+
+    fn aggregate(&self, inputs: &[&[f32]], out: &mut [f32]) {
+        let n = inputs.len();
+        assert!(n > self.f, "multikrum needs n > f");
+        let m = n - self.f;
+        let dist = pairwise_dist_sq(inputs);
+        let sc = scores(&dist, n, self.f);
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| sc[a].total_cmp(&sc[b]));
+        let selected: Vec<&[f32]> =
+            order[..m].iter().map(|&i| inputs[i]).collect();
+        tensor::mean_into(out, &selected);
+    }
+
+    fn kappa(&self, n: usize, f: usize) -> f64 {
+        if f == 0 {
+            return 0.0; // selects everyone -> exact mean
+        }
+        if n <= 2 * f {
+            return f64::INFINITY;
+        }
+        let r = delta_ratio(n, f);
+        6.0 * r * (1.0 + r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::*;
+    use super::super::Aggregator;
+    use super::*;
+
+    #[test]
+    fn krum_picks_a_cluster_member() {
+        let rows = corrupted_inputs(9, 2, 6, 1e5, 2);
+        let refs = as_refs(&rows);
+        let out = Krum::new(2).aggregate_vec(&refs);
+        // output must be one of the honest inputs (3..9)
+        let is_honest = rows[2..].iter().any(|r| r.as_slice() == &out[..]);
+        assert!(is_honest);
+    }
+
+    #[test]
+    fn multikrum_excludes_outliers() {
+        let rows = corrupted_inputs(10, 3, 6, 1e5, 4);
+        let refs = as_refs(&rows);
+        let out = MultiKrum::new(3).aggregate_vec(&refs);
+        assert!(tensor::norm(&out) < 5.0, "‖out‖ = {}", tensor::norm(&out));
+    }
+
+    #[test]
+    fn multikrum_f0_is_mean() {
+        let rows = corrupted_inputs(6, 0, 4, 0.0, 6);
+        let refs = as_refs(&rows);
+        let got = MultiKrum::new(0).aggregate_vec(&refs);
+        let want = crate::aggregators::Mean.aggregate_vec(&refs);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn pairwise_matrix_symmetric_zero_diag() {
+        let rows = corrupted_inputs(5, 0, 3, 0.0, 7);
+        let refs = as_refs(&rows);
+        let m = pairwise_dist_sq(&refs);
+        for i in 0..5 {
+            assert_eq!(m[i * 5 + i], 0.0);
+            for j in 0..5 {
+                assert_eq!(m[i * 5 + j], m[j * 5 + i]);
+            }
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! `(f, κ)`-robust aggregation rules (Definition 2.2).
+//!
+//! The server replaces plain averaging with `F(m_1, …, m_n)` where `F`
+//! satisfies `‖F(x) − x̄_S‖² ≤ (κ/|S|)·Σ_{i∈S}‖x_i − x̄_S‖²` for every
+//! (n−f)-subset S. Provided rules:
+//!
+//! * [`Mean`] — not robust (κ = ∞ for f > 0); the no-attack baseline.
+//! * [`cwtm::Cwtm`] — coordinate-wise trimmed mean (paper's experiments).
+//! * [`cwtm::CwMedian`] — coordinate-wise median.
+//! * [`geomed::GeoMed`] — geometric median via Weiszfeld.
+//! * [`krum::Krum`] / [`krum::MultiKrum`].
+//! * [`nnm::Nnm`] — nearest-neighbor-mixing pre-aggregation [2], composed
+//!   as `NNM ∘ F`; brings κ down to O(f/n) and is what makes the
+//!   Theorem-1 condition `κB² ≤ 1/25` attainable.
+//!
+//! κ upper bounds follow Allouah et al. [2] (Table 1 / Prop. 32 there);
+//! they are used for *condition checks and diagnostics*, not by the
+//! algorithms themselves.
+
+pub mod cwtm;
+pub mod geomed;
+pub mod krum;
+pub mod nnm;
+
+use crate::tensor;
+
+/// A robust aggregation rule over n equal-length vectors.
+pub trait Aggregator: Send + Sync {
+    /// Human-readable name (appears in logs/benches).
+    fn name(&self) -> String;
+
+    /// Aggregate `inputs` (n rows, each of length d) into `out` (length d).
+    fn aggregate(&self, inputs: &[&[f32]], out: &mut [f32]);
+
+    /// Upper bound on the robustness coefficient κ for n inputs, f faults.
+    /// `f64::INFINITY` means "not robust".
+    fn kappa(&self, n: usize, f: usize) -> f64;
+
+    /// Allocating convenience wrapper.
+    fn aggregate_vec(&self, inputs: &[&[f32]]) -> Vec<f32> {
+        let mut out = vec![0.0; inputs[0].len()];
+        self.aggregate(inputs, &mut out);
+        out
+    }
+}
+
+/// Plain averaging — the κ=∞ strawman (robust only when f = 0).
+#[derive(Clone, Debug, Default)]
+pub struct Mean;
+
+impl Aggregator for Mean {
+    fn name(&self) -> String {
+        "mean".into()
+    }
+
+    fn aggregate(&self, inputs: &[&[f32]], out: &mut [f32]) {
+        tensor::mean_into(out, inputs);
+    }
+
+    fn kappa(&self, _n: usize, f: usize) -> f64 {
+        if f == 0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// δ/(1−2δ) with δ = f/n — the recurring factor in [2]'s κ bounds.
+pub(crate) fn delta_ratio(n: usize, f: usize) -> f64 {
+    let d = f as f64 / n as f64;
+    d / (1.0 - 2.0 * d)
+}
+
+/// Build an aggregator from a spec string: `"cwtm"`, `"median"`,
+/// `"geomed"`, `"krum"`, `"multikrum"`, `"mean"`, optionally prefixed
+/// `"nnm+"` (e.g. `"nnm+cwtm"` — the paper's recommended composition).
+/// `f` is the fault tolerance the rule is instantiated for.
+pub fn parse_spec(spec: &str, f: usize) -> Result<Box<dyn Aggregator>, String> {
+    let spec = spec.to_ascii_lowercase();
+    let (use_nnm, base) = match spec.strip_prefix("nnm+") {
+        Some(rest) => (true, rest),
+        None => (false, spec.as_str()),
+    };
+    let inner: Box<dyn Aggregator> = match base {
+        "mean" => Box::new(Mean),
+        "cwtm" | "trimmed_mean" | "trmean" => Box::new(cwtm::Cwtm::new(f)),
+        "median" | "cwmed" => Box::new(cwtm::CwMedian),
+        "geomed" | "geometric_median" => Box::new(geomed::GeoMed::default()),
+        "krum" => Box::new(krum::Krum::new(f)),
+        "multikrum" | "multi-krum" => Box::new(krum::MultiKrum::new(f)),
+        other => return Err(format!("unknown aggregator '{other}'")),
+    };
+    Ok(if use_nnm {
+        Box::new(nnm::Nnm::new(f, inner))
+    } else {
+        inner
+    })
+}
+
+/// Check Definition 2.2 empirically for a given rule on given inputs:
+/// returns the max over all (n−f)-subsets S of
+/// `‖F(x) − x̄_S‖² / ((1/|S|)Σ‖x_i − x̄_S‖²)` — an empirical lower bound
+/// on κ. Exponential in f; used only in tests with small n.
+pub fn empirical_kappa(
+    agg: &dyn Aggregator,
+    inputs: &[&[f32]],
+    f: usize,
+) -> f64 {
+    let n = inputs.len();
+    let d = inputs[0].len();
+    let mut out = vec![0.0; d];
+    agg.aggregate(inputs, &mut out);
+    let mut worst: f64 = 0.0;
+    // iterate over all subsets of size n-f via bitmask (n small in tests)
+    assert!(n <= 20, "empirical_kappa is exponential in n");
+    for mask in 0u32..(1 << n) {
+        if mask.count_ones() as usize != n - f {
+            continue;
+        }
+        let subset: Vec<&[f32]> = (0..n)
+            .filter(|i| mask & (1 << i) != 0)
+            .map(|i| inputs[i])
+            .collect();
+        let mean_s = tensor::mean(&subset);
+        let num = tensor::dist_sq(&out, &mean_s);
+        let denom: f64 = subset
+            .iter()
+            .map(|x| tensor::dist_sq(x, &mean_s))
+            .sum::<f64>()
+            / subset.len() as f64;
+        if denom > 1e-12 {
+            worst = worst.max(num / denom);
+        } else if num > 1e-9 {
+            worst = f64::INFINITY;
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use crate::prng::Pcg64;
+
+    /// n random d-vectors with `f` of them replaced by outliers at
+    /// magnitude `blow`.
+    pub fn corrupted_inputs(
+        n: usize,
+        f: usize,
+        d: usize,
+        blow: f32,
+        seed: u64,
+    ) -> Vec<Vec<f32>> {
+        let mut rng = Pcg64::new(seed, 77);
+        let mut rows: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0f32; d];
+                rng.fill_gaussian(&mut v, 1.0);
+                v
+            })
+            .collect();
+        for row in rows.iter_mut().take(f) {
+            for v in row.iter_mut() {
+                *v = blow;
+            }
+        }
+        rows
+    }
+
+    pub fn as_refs(rows: &[Vec<f32>]) -> Vec<&[f32]> {
+        rows.iter().map(|r| r.as_slice()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_support::*;
+    use super::*;
+
+    #[test]
+    fn mean_is_exact_average() {
+        let rows = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        let refs = as_refs(&rows);
+        assert_eq!(Mean.aggregate_vec(&refs), vec![2.0, 3.0]);
+        assert_eq!(Mean.kappa(10, 0), 0.0);
+        assert!(Mean.kappa(10, 1).is_infinite());
+    }
+
+    #[test]
+    fn parse_spec_variants() {
+        for s in ["mean", "cwtm", "median", "geomed", "krum", "multikrum",
+                  "nnm+cwtm", "nnm+geomed"] {
+            let a = parse_spec(s, 2).unwrap();
+            assert!(!a.name().is_empty());
+        }
+        assert!(parse_spec("bogus", 1).is_err());
+    }
+
+    #[test]
+    fn mean_violates_robustness_cwtm_does_not() {
+        let rows = corrupted_inputs(9, 2, 5, 1e4, 3);
+        let refs = as_refs(&rows);
+        let k_mean = empirical_kappa(&Mean, &refs, 2);
+        let k_cwtm = empirical_kappa(&cwtm::Cwtm::new(2), &refs, 2);
+        assert!(k_mean > 100.0, "mean κ̂ = {k_mean}");
+        assert!(k_cwtm < 10.0, "cwtm κ̂ = {k_cwtm}");
+    }
+}

@@ -1,0 +1,140 @@
+//! Nearest-Neighbor Mixing (NNM) pre-aggregation — Allouah et al. [2],
+//! "Fixing by Mixing".
+//!
+//! Each input x_i is replaced by the average of its n−f nearest inputs
+//! (including itself); the wrapped rule F then runs on the mixed vectors.
+//! Composition NNM∘F achieves κ = O(f/n) for any (f,κ_F)-robust F, which
+//! is what the paper's tightness discussion (§3.2) relies on to turn the
+//! condition κB² ≤ 1/25 into f/n ≤ O(1/(1+B²)).
+//!
+//! Cost: O(n²d) — the dominant aggregation term; the pairwise-distance
+//! matrix is shared with Krum's implementation.
+
+use super::krum::pairwise_dist_sq;
+use super::{delta_ratio, Aggregator};
+
+pub struct Nnm {
+    pub f: usize,
+    pub inner: Box<dyn Aggregator>,
+}
+
+impl Nnm {
+    pub fn new(f: usize, inner: Box<dyn Aggregator>) -> Self {
+        Nnm { f, inner }
+    }
+
+    /// The mixing step alone (exposed for tests/diagnostics).
+    pub fn mix(&self, inputs: &[&[f32]]) -> Vec<Vec<f32>> {
+        let n = inputs.len();
+        let d = inputs[0].len();
+        let m = n - self.f; // neighbors to average, incl. self
+        assert!(m >= 1 && m <= n);
+        let dist = pairwise_dist_sq(inputs);
+        let mut mixed = vec![vec![0.0f32; d]; n];
+        let mut order: Vec<usize> = Vec::with_capacity(n);
+        for i in 0..n {
+            order.clear();
+            order.extend(0..n);
+            // self always first (distance 0); partial sort by distance to i
+            order.sort_by(|&a, &b| {
+                dist[i * n + a].total_cmp(&dist[i * n + b])
+            });
+            let inv = 1.0 / m as f32;
+            let mi = &mut mixed[i];
+            for &j in &order[..m] {
+                for (slot, v) in mi.iter_mut().zip(inputs[j]) {
+                    *slot += v;
+                }
+            }
+            for slot in mi.iter_mut() {
+                *slot *= inv;
+            }
+        }
+        mixed
+    }
+}
+
+impl Aggregator for Nnm {
+    fn name(&self) -> String {
+        format!("nnm(f={})+{}", self.f, self.inner.name())
+    }
+
+    fn aggregate(&self, inputs: &[&[f32]], out: &mut [f32]) {
+        let mixed = self.mix(inputs);
+        let refs: Vec<&[f32]> = mixed.iter().map(|v| v.as_slice()).collect();
+        self.inner.aggregate(&refs, out);
+    }
+
+    /// [2], Prop. 32-style composition bound:
+    /// κ_{NNM∘F} ≤ 8 δ/(1−2δ) · (κ_F + 1) — O(f/n) whenever κ_F = O(1).
+    fn kappa(&self, n: usize, f: usize) -> f64 {
+        if f == 0 {
+            return 0.0;
+        }
+        if n <= 2 * f {
+            return f64::INFINITY;
+        }
+        8.0 * delta_ratio(n, f) * (self.inner.kappa(n, f).min(1e6) + 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::cwtm::Cwtm;
+    use super::super::test_support::*;
+    use super::super::{empirical_kappa, Aggregator, Mean};
+    use super::*;
+    use crate::tensor;
+
+    #[test]
+    fn mixing_pulls_outliers_toward_honest_cloud() {
+        let rows = corrupted_inputs(10, 2, 5, 1e4, 12);
+        let refs = as_refs(&rows);
+        let nnm = Nnm::new(2, Box::new(Mean));
+        let mixed = nnm.mix(&refs);
+        // honest-mixed vectors stay small: each honest point's n-f
+        // neighborhood is all-honest (outliers are far)
+        for m in &mixed[2..] {
+            assert!(tensor::norm(m) < 10.0);
+        }
+    }
+
+    #[test]
+    fn mixing_preserves_mean_when_f0() {
+        // with f=0, every neighborhood is all n points -> every mixed
+        // vector is the global mean.
+        let rows = corrupted_inputs(6, 0, 4, 0.0, 13);
+        let refs = as_refs(&rows);
+        let nnm = Nnm::new(0, Box::new(Mean));
+        let mixed = nnm.mix(&refs);
+        let mean = tensor::mean(&refs);
+        for m in &mixed {
+            for (a, b) in m.iter().zip(&mean) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn nnm_cwtm_improves_empirical_kappa() {
+        let rows = corrupted_inputs(10, 3, 4, 1e5, 14);
+        let refs = as_refs(&rows);
+        let plain = empirical_kappa(&Cwtm::new(3), &refs, 3);
+        let wrapped =
+            empirical_kappa(&Nnm::new(3, Box::new(Cwtm::new(3))), &refs, 3);
+        assert!(
+            wrapped <= plain * 1.5 + 0.1,
+            "nnm {wrapped} vs plain {plain}"
+        );
+        assert!(wrapped < 5.0, "κ̂ = {wrapped}");
+    }
+
+    #[test]
+    fn kappa_is_o_f_over_n() {
+        let nnm = Nnm::new(1, Box::new(Cwtm::new(1)));
+        let k10 = nnm.kappa(10, 1);
+        let k1000 = nnm.kappa(1000, 1);
+        assert!(k1000 < k10 / 50.0, "κ must decay ~ f/n: {k10} vs {k1000}");
+        assert_eq!(nnm.kappa(10, 0), 0.0);
+    }
+}

@@ -1,0 +1,238 @@
+//! The three Table-1 reference points:
+//!
+//! * [`RobustDgd`] — SOTA *without compression* [3]: dense gradients,
+//!   server-side per-worker momentum, robust aggregation.
+//! * [`DgdRandK`] — SOTA *without robustness* [1, 33]: per-worker RandK,
+//!   plain averaging, no momentum.
+//! * [`Dgd`] — vanilla distributed gradient descent.
+
+use super::{byzantine_vectors, Algorithm, RoundEnv};
+use crate::compression::codec::mask_wire_len;
+use crate::compression::RandK;
+use crate::tensor;
+use crate::transport::{broadcast_len, compressed_grad_len, full_grad_len};
+
+/// Robust distributed GD with Polyak momentum (no compression).
+pub struct RobustDgd {
+    momenta: Vec<Vec<f32>>,
+}
+
+impl RobustDgd {
+    pub fn new(d: usize, n_workers: usize) -> Self {
+        RobustDgd {
+            momenta: vec![vec![0.0; d]; n_workers],
+        }
+    }
+}
+
+impl Algorithm for RobustDgd {
+    fn name(&self) -> &'static str {
+        "robust-dgd"
+    }
+
+    fn round(
+        &mut self,
+        t: u64,
+        honest_grads: &[Vec<f32>],
+        byz_grads: &[Vec<f32>],
+        env: &mut RoundEnv,
+    ) -> Vec<f32> {
+        let n = env.n_total();
+        env.meter
+            .record_broadcast_sized(broadcast_len(env.d, false), n);
+        let byz = byzantine_vectors(t, honest_grads, byz_grads, env);
+        let apply = |this: &mut Self, widx: usize, g: &[f32], env: &mut RoundEnv| {
+            env.meter.record_uplink_sized(widx, full_grad_len(env.d));
+            tensor::scale_add(&mut this.momenta[widx], env.beta, 1.0 - env.beta, g);
+        };
+        for (i, g) in honest_grads.iter().enumerate() {
+            apply(self, i, g, env);
+        }
+        for (j, g) in byz.iter().enumerate() {
+            apply(self, env.n_honest + j, g, env);
+        }
+        let refs: Vec<&[f32]> =
+            self.momenta.iter().map(|m| m.as_slice()).collect();
+        env.aggregator.aggregate_vec(&refs)
+    }
+
+    fn momenta(&self) -> Option<&[Vec<f32>]> {
+        Some(&self.momenta)
+    }
+}
+
+/// DGD + local RandK, plain mean (the no-robustness compression SOTA).
+pub struct DgdRandK;
+
+impl DgdRandK {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        DgdRandK
+    }
+}
+
+impl Algorithm for DgdRandK {
+    fn name(&self) -> &'static str {
+        "dgd-randk"
+    }
+
+    fn round(
+        &mut self,
+        t: u64,
+        honest_grads: &[Vec<f32>],
+        byz_grads: &[Vec<f32>],
+        env: &mut RoundEnv,
+    ) -> Vec<f32> {
+        let d = env.d;
+        let n = env.n_total();
+        env.meter
+            .record_broadcast_sized(broadcast_len(d, false), n);
+        let byz = byzantine_vectors(t, honest_grads, byz_grads, env);
+        let rk = RandK { d, k: env.k };
+        let mut sum = vec![0f32; d];
+        let mut count = 0usize;
+        let mut recon = vec![0f32; d];
+        let add = |widx: usize,
+                       g: &[f32],
+                       sum: &mut Vec<f32>,
+                       recon: &mut Vec<f32>,
+                       env: &mut RoundEnv| {
+            let mut wrng = env.rng.derive(0x7264_6b6b, t, widx as u64);
+            let mask = rk.draw(&mut wrng);
+            let payload = mask.compress(g);
+            let mask_bytes = if env.k < d { mask_wire_len(d, env.k) } else { 0 };
+            env.meter.record_uplink_sized(
+                widx,
+                compressed_grad_len(payload.len(), mask_bytes),
+            );
+            mask.reconstruct_into(&payload, recon);
+            tensor::axpy(sum, 1.0, recon);
+        };
+        for (i, g) in honest_grads.iter().enumerate() {
+            add(i, g, &mut sum, &mut recon, env);
+            count += 1;
+        }
+        for (j, g) in byz.iter().enumerate() {
+            add(env.n_honest + j, g, &mut sum, &mut recon, env);
+            count += 1;
+        }
+        tensor::scale(&mut sum, 1.0 / count as f32);
+        sum
+    }
+}
+
+/// Vanilla distributed GD: dense, mean, no momentum.
+pub struct Dgd;
+
+impl Dgd {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        Dgd
+    }
+}
+
+impl Algorithm for Dgd {
+    fn name(&self) -> &'static str {
+        "dgd"
+    }
+
+    fn round(
+        &mut self,
+        t: u64,
+        honest_grads: &[Vec<f32>],
+        byz_grads: &[Vec<f32>],
+        env: &mut RoundEnv,
+    ) -> Vec<f32> {
+        let n = env.n_total();
+        env.meter
+            .record_broadcast_sized(broadcast_len(env.d, false), n);
+        let byz = byzantine_vectors(t, honest_grads, byz_grads, env);
+        let mut all: Vec<&[f32]> = Vec::with_capacity(n);
+        for g in honest_grads {
+            all.push(g);
+        }
+        for g in &byz {
+            all.push(g);
+        }
+        for (widx, _) in all.iter().enumerate() {
+            env.meter.record_uplink_sized(widx, full_grad_len(env.d));
+        }
+        tensor::mean(&all)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_env::Env;
+    use super::*;
+
+    #[test]
+    fn dgd_is_exact_mean() {
+        let mut env = Env::new(8, 4, 0, 8);
+        let mut grads = env.constant_grads(1.0);
+        grads[0] = vec![5.0; 8];
+        let r = Dgd::new().round(0, &grads, &[], &mut env.env());
+        for v in &r {
+            assert!((v - 2.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn dgd_randk_unbiased_mean() {
+        let d = 64;
+        let mut env = Env::new(d, 8, 0, 16);
+        let grads = env.constant_grads(1.0);
+        let mut alg = DgdRandK::new();
+        let mut acc = vec![0f64; d];
+        let rounds = 2000;
+        for t in 0..rounds {
+            let r = alg.round(t, &grads, &[], &mut env.env());
+            for (a, v) in acc.iter_mut().zip(&r) {
+                *a += *v as f64;
+            }
+        }
+        for a in &acc {
+            let mean = a / rounds as f64;
+            assert!((mean - 1.0).abs() < 0.1, "{mean}");
+        }
+    }
+
+    #[test]
+    fn robust_dgd_filters_alie_with_momentum() {
+        let d = 12;
+        let mut env = Env::new(d, 10, 3, d);
+        env.attack = crate::attacks::parse_spec("alie:8").unwrap();
+        env.aggregator =
+            crate::aggregators::parse_spec("nnm+cwtm", 3).unwrap();
+        env.beta = 0.9;
+        let grads = env.constant_grads(1.0);
+        let mut alg = RobustDgd::new(d, 13);
+        let mut r = Vec::new();
+        for t in 0..50 {
+            r = alg.round(t, &grads, &[], &mut env.env());
+        }
+        // after warmup, update direction should be near the honest grad
+        assert!((r[0] - 1.0).abs() < 0.3, "{}", r[0]);
+    }
+
+    #[test]
+    fn robust_dgd_uplink_is_dense() {
+        let d = 100;
+        let mut env = Env::new(d, 2, 0, 10);
+        let grads = env.constant_grads(1.0);
+        let mut alg = RobustDgd::new(d, 2);
+        alg.round(0, &grads, &[], &mut env.env());
+        assert_eq!(env.meter.uplink, 2 * (12 + 4 + 400));
+    }
+
+    #[test]
+    fn dgd_randk_at_k_eq_d_ships_no_mask() {
+        let d = 50;
+        let mut env = Env::new(d, 2, 0, d);
+        let grads = env.constant_grads(1.0);
+        let mut alg = DgdRandK::new();
+        alg.round(0, &grads, &[], &mut env.env());
+        // payload d floats, no mask wire: header + len + 4d
+        assert_eq!(env.meter.uplink, 2 * (12 + 4 + 4 * 50));
+    }
+}

@@ -1,0 +1,188 @@
+//! The training algorithms: RoSDHB (Algorithm 1), RoSDHB-Local (§3.3),
+//! Byz-DASHA-PAGE (Appendix B, GD specialization p = 1), and the three
+//! reference baselines from Table 1.
+//!
+//! Separation of concerns: the **coordinator** owns the model, the workers
+//! and the round loop; an [`Algorithm`] consumes this round's worker
+//! gradients and produces the update direction `R^t`, doing its own
+//! compression, Byzantine payload injection, momentum bookkeeping and
+//! byte metering (it knows the wire format it induces).
+
+pub mod baselines;
+pub mod dasha;
+pub mod rosdhb;
+pub mod rosdhb_u;
+
+use crate::aggregators::Aggregator;
+use crate::attacks::AttackKind;
+use crate::config::{Algorithm as AlgoId, ExperimentConfig};
+use crate::prng::Pcg64;
+use crate::transport::ByteMeter;
+
+/// Everything an algorithm needs for one round besides the gradients.
+pub struct RoundEnv<'a> {
+    /// Model dimension d (= P).
+    pub d: usize,
+    pub n_honest: usize,
+    pub n_byz: usize,
+    /// Experiment root seed (global masks derive from it).
+    pub seed: u64,
+    /// RandK k (already resolved from k_frac; k = d means dense).
+    pub k: usize,
+    /// Momentum coefficient β.
+    pub beta: f32,
+    pub aggregator: &'a dyn Aggregator,
+    pub attack: &'a AttackKind,
+    pub meter: &'a mut ByteMeter,
+    /// Round-scoped RNG (attack noise, local masks for Byzantine workers).
+    pub rng: &'a mut Pcg64,
+}
+
+impl<'a> RoundEnv<'a> {
+    pub fn n_total(&self) -> usize {
+        self.n_honest + self.n_byz
+    }
+}
+
+/// One distributed-training algorithm (server-side state machine).
+pub trait Algorithm: Send {
+    fn name(&self) -> &'static str;
+
+    /// Execute round `t`.
+    ///
+    /// * `honest_grads` — ∇L_i(θ_{t-1}) for the honest workers (and for
+    ///   data-level Byzantine workers, appended after the honest ones —
+    ///   `env.n_byz` of them iff the attack is `LabelFlip`/`None`).
+    /// * returns `R^t`, the direction the server applies as
+    ///   `θ_t = θ_{t-1} − γ R^t`.
+    fn round(
+        &mut self,
+        t: u64,
+        honest_grads: &[Vec<f32>],
+        byz_grads: &[Vec<f32>],
+        env: &mut RoundEnv,
+    ) -> Vec<f32>;
+
+    /// The per-worker server-side momenta/estimates (all n workers, honest
+    /// first), if the algorithm keeps them — used by the Lyapunov
+    /// diagnostics ([`crate::diagnostics`]).
+    fn momenta(&self) -> Option<&[Vec<f32>]> {
+        None
+    }
+
+    /// Mean of the honest workers' momenta m̄_H^t (convenience).
+    fn honest_momentum_mean(&self, n_honest: usize) -> Option<Vec<f32>> {
+        self.momenta().map(|m| {
+            let refs: Vec<&[f32]> =
+                m[..n_honest].iter().map(|v| v.as_slice()).collect();
+            crate::tensor::mean(&refs)
+        })
+    }
+}
+
+/// Instantiate the algorithm named by the config.
+pub fn build(cfg: &ExperimentConfig, d: usize) -> Box<dyn Algorithm> {
+    let n = cfg.n_total();
+    match cfg.algorithm {
+        AlgoId::RoSdhb => Box::new(rosdhb::RoSdhb::new(d, n, false)),
+        AlgoId::RoSdhbLocal => Box::new(rosdhb::RoSdhb::new(d, n, true)),
+        AlgoId::RoSdhbU => {
+            let comp = crate::compression::qsgd::parse_spec(
+                &cfg.compressor,
+                d,
+                cfg.k_frac,
+            )
+            .expect("validated by ExperimentConfig");
+            Box::new(rosdhb_u::RoSdhbU::new(d, n, comp))
+        }
+        AlgoId::ByzDashaPage => Box::new(dasha::ByzDashaPage::new(d, n)),
+        AlgoId::RobustDgd => Box::new(baselines::RobustDgd::new(d, n)),
+        AlgoId::DgdRandK => Box::new(baselines::DgdRandK::new()),
+        AlgoId::Dgd => Box::new(baselines::Dgd::new()),
+    }
+}
+
+/// Craft the Byzantine wire inputs for this round.
+///
+/// For payload attacks the adversary (omniscient, §2) crafts in full
+/// d-space from the honest gradients; the caller compresses the crafted
+/// vectors exactly like honest ones. For data-level attacks the poisoned
+/// gradients were already computed by workers and crafting returns them
+/// unchanged.
+pub(crate) fn byzantine_vectors(
+    t: u64,
+    honest_grads: &[Vec<f32>],
+    byz_grads: &[Vec<f32>],
+    env: &mut RoundEnv,
+) -> Vec<Vec<f32>> {
+    match env.attack {
+        AttackKind::None | AttackKind::LabelFlip => byz_grads.to_vec(),
+        AttackKind::Payload(p) => {
+            if env.n_byz == 0 {
+                return Vec::new();
+            }
+            let ctx = crate::attacks::AttackCtx {
+                round: t,
+                honest_payloads: honest_grads,
+                n_honest: env.n_honest,
+                n_byz: env.n_byz,
+            };
+            p.craft_all(&ctx, env.rng)
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_env {
+    use super::*;
+    use crate::aggregators;
+
+    /// A self-contained environment for algorithm unit tests.
+    pub struct Env {
+        pub aggregator: Box<dyn Aggregator>,
+        pub attack: AttackKind,
+        pub meter: ByteMeter,
+        pub rng: Pcg64,
+        pub d: usize,
+        pub n_honest: usize,
+        pub n_byz: usize,
+        pub k: usize,
+        pub beta: f32,
+    }
+
+    impl Env {
+        pub fn new(d: usize, n_honest: usize, n_byz: usize, k: usize) -> Env {
+            Env {
+                aggregator: aggregators::parse_spec("cwtm", n_byz).unwrap(),
+                attack: AttackKind::None,
+                meter: ByteMeter::new(n_honest + n_byz),
+                rng: Pcg64::new(7, 7),
+                d,
+                n_honest,
+                n_byz,
+                k,
+                beta: 0.9,
+            }
+        }
+
+        pub fn env(&mut self) -> RoundEnv<'_> {
+            RoundEnv {
+                d: self.d,
+                n_honest: self.n_honest,
+                n_byz: self.n_byz,
+                seed: 42,
+                k: self.k,
+                beta: self.beta,
+                aggregator: self.aggregator.as_ref(),
+                attack: &self.attack,
+                meter: &mut self.meter,
+                rng: &mut self.rng,
+            }
+        }
+
+        /// n_honest copies of a fixed gradient (for exactness tests).
+        pub fn constant_grads(&self, v: f32) -> Vec<Vec<f32>> {
+            vec![vec![v; self.d]; self.n_honest]
+        }
+    }
+}

@@ -1,0 +1,296 @@
+//! RoSDHB — Algorithm 1 of the paper — and its local-sparsification
+//! variant RoSDHB-Local (§3.3). One struct, `local: bool`, because the two
+//! differ only in *who draws the mask* and what therefore travels on the
+//! wire:
+//!
+//! * **global** (`local = false`): the server derives one mask per round
+//!   from `round_seed(seed, t)` and broadcasts the 8-byte seed with the
+//!   model; every honest payload lives in the same k-subspace (Lemma A.3 —
+//!   the property that yields the O(α/T) rate of Theorem 1).
+//! * **local** (`local = true`): every worker draws its own mask and must
+//!   ship it (index-list or bitset codec, whichever is smaller); the
+//!   honest average leaves the subspace and the rate degrades to O(1/√T)
+//!   (Theorem 2).
+//!
+//! Server state: one momentum vector per worker (Byzantine included — the
+//! server cannot tell), updated `m_i^t = β m_i^{t-1} + (1−β) g̃_i^t`
+//! (step 5), then robust-aggregated (step 6).
+
+use super::{byzantine_vectors, Algorithm, RoundEnv};
+use crate::compression::codec::mask_wire_len;
+use crate::compression::{mask_from_seed, Mask, RandK};
+use crate::tensor;
+use crate::transport::{broadcast_len, compressed_grad_len};
+
+pub struct RoSdhb {
+    /// Per-worker server-side momenta m_i (n rows × d).
+    momenta: Vec<Vec<f32>>,
+    /// Scratch: reconstructed g̃_i.
+    recon: Vec<f32>,
+    local: bool,
+}
+
+impl RoSdhb {
+    pub fn new(d: usize, n_workers: usize, local: bool) -> Self {
+        RoSdhb {
+            momenta: vec![vec![0.0; d]; n_workers],
+            recon: vec![0.0; d],
+            local,
+        }
+    }
+
+    /// Meter one uplink payload of `k` floats (+ mask when local).
+    /// Size-only (§Perf: no message materialization on the hot path);
+    /// `transport` tests pin the size helpers against real encodings.
+    fn meter_uplink(
+        &self,
+        env: &mut RoundEnv,
+        worker: usize,
+        values_len: usize,
+        mask: Option<&Mask>,
+    ) {
+        let mask_bytes = mask.map_or(0, |m| mask_wire_len(m.d, m.k()));
+        env.meter
+            .record_uplink_sized(worker, compressed_grad_len(values_len, mask_bytes));
+    }
+}
+
+impl Algorithm for RoSdhb {
+    fn name(&self) -> &'static str {
+        if self.local {
+            "rosdhb-local"
+        } else {
+            "rosdhb"
+        }
+    }
+
+    fn round(
+        &mut self,
+        t: u64,
+        honest_grads: &[Vec<f32>],
+        byz_grads: &[Vec<f32>],
+        env: &mut RoundEnv,
+    ) -> Vec<f32> {
+        let d = env.d;
+        let n = env.n_total();
+        debug_assert_eq!(self.momenta.len(), n);
+
+        // -- step 1+2: broadcast model (+ mask seed under global masks)
+        let mask_seed = RandK::round_seed(env.seed, t);
+        let with_seed = !self.local && env.k < d;
+        env.meter
+            .record_broadcast_sized(broadcast_len(d, with_seed), n);
+
+        let global_mask = (!self.local).then(|| mask_from_seed(mask_seed, d, env.k));
+
+        // -- Byzantine inputs (payload attacks craft in d-space)
+        let byz = byzantine_vectors(t, honest_grads, byz_grads, env);
+        debug_assert!(byz.len() == env.n_byz || byz.is_empty());
+
+        // -- steps 3-5 per worker: compress -> uplink -> reconstruct ->
+        //    momentum
+        let mut payload: Vec<f32> = Vec::with_capacity(env.k);
+        let mut process =
+            |this: &mut Self, widx: usize, g: &[f32], env: &mut RoundEnv| {
+                let mask_storage;
+                let mask: &Mask = match &global_mask {
+                    Some(m) => m,
+                    None => {
+                        // local: worker draws its own mask each round
+                        let mut wrng =
+                            env.rng.derive(0x6c6d_736b, t, widx as u64);
+                        mask_storage =
+                            RandK { d, k: env.k }.draw(&mut wrng);
+                        &mask_storage
+                    }
+                };
+                mask.compress_into(g, &mut payload);
+                this.meter_uplink(
+                    env,
+                    widx,
+                    payload.len(),
+                    this.local.then_some(mask),
+                );
+                mask.reconstruct_into(&payload, &mut this.recon);
+                // m_i = beta m_i + (1-beta) g_tilde  (ref.py momentum law)
+                tensor::scale_add(
+                    &mut this.momenta[widx],
+                    env.beta,
+                    1.0 - env.beta,
+                    &this.recon,
+                );
+            };
+
+        for (i, g) in honest_grads.iter().enumerate() {
+            process(self, i, g, env);
+        }
+        for (j, g) in byz.iter().enumerate() {
+            process(self, env.n_honest + j, g, env);
+        }
+        // If fewer byzantine vectors than slots (attack none, no data
+        // grads), leave those momenta untouched (worker silent ==
+        // crash-fault; robust aggregation still sees their stale m_i).
+
+        // -- step 6: robust aggregation of momenta
+        let refs: Vec<&[f32]> =
+            self.momenta.iter().map(|m| m.as_slice()).collect();
+        env.aggregator.aggregate_vec(&refs)
+    }
+
+    fn momenta(&self) -> Option<&[Vec<f32>]> {
+        Some(&self.momenta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_env::Env;
+    use super::*;
+
+    #[test]
+    fn dense_no_byz_beta0_is_plain_gd_direction() {
+        // k = d, f = 0, beta = 0: R^t must equal the honest mean gradient.
+        let mut env = Env::new(32, 5, 0, 32);
+        env.beta = 0.0;
+        let grads = env.constant_grads(2.0);
+        let mut alg = RoSdhb::new(32, 5, false);
+        let r = alg.round(1, &grads, &[], &mut env.env());
+        for v in &r {
+            assert!((v - 2.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn momentum_converges_to_gradient_geometrically() {
+        // constant gradients: m^t = (1 - beta^t) g  ->  R -> g
+        let mut env = Env::new(8, 4, 0, 8);
+        env.beta = 0.5;
+        let grads = env.constant_grads(1.0);
+        let mut alg = RoSdhb::new(8, 4, false);
+        let mut last = 0.0f32;
+        for t in 1..=20 {
+            let r = alg.round(t, &grads, &[], &mut env.env());
+            last = r[0];
+        }
+        assert!((last - 1.0).abs() < 1e-4, "m^20 = {last}");
+    }
+
+    #[test]
+    fn global_reconstructions_are_unbiased_over_rounds() {
+        // average R over many rounds ~ g despite k/d = 1/4 (beta=0, mean agg)
+        let d = 64;
+        let mut env = Env::new(d, 6, 0, 16);
+        env.beta = 0.0;
+        env.aggregator = crate::aggregators::parse_spec("mean", 0).unwrap();
+        let g: Vec<f32> = (0..d).map(|i| (i as f32 * 0.1).sin()).collect();
+        let grads = vec![g.clone(); 6];
+        let mut alg = RoSdhb::new(d, 6, false);
+        let mut acc = vec![0f64; d];
+        let rounds = 3000;
+        for t in 0..rounds {
+            let r = alg.round(t, &grads, &[], &mut env.env());
+            for (a, v) in acc.iter_mut().zip(&r) {
+                *a += *v as f64;
+            }
+            // reset momenta each round so each sample is independent
+            for m in alg.momenta.iter_mut() {
+                m.fill(0.0);
+            }
+        }
+        for i in 0..d {
+            let mean = acc[i] / rounds as f64;
+            let se = (g[i].abs() as f64 + 0.05) * (3.0f64 / rounds as f64).sqrt();
+            assert!(
+                (mean - g[i] as f64).abs() < 8.0 * se,
+                "coord {i}: {mean} vs {}",
+                g[i]
+            );
+        }
+    }
+
+    #[test]
+    fn global_uplink_is_k_floats_no_mask() {
+        let mut env = Env::new(1000, 3, 0, 10);
+        let grads = env.constant_grads(1.0);
+        let mut alg = RoSdhb::new(1000, 3, false);
+        alg.round(0, &grads, &[], &mut env.env());
+        // each uplink: header(12) + len(4) + 10*4 bytes = 56
+        assert_eq!(env.meter.uplink, 3 * 56);
+        // downlink: (header 12 + seed 8 + 4000) * 3 recipients
+        assert_eq!(env.meter.downlink, 3 * (12 + 8 + 4000));
+    }
+
+    #[test]
+    fn local_uplink_pays_for_masks() {
+        let mut env_g = Env::new(1000, 3, 0, 10);
+        let mut env_l = Env::new(1000, 3, 0, 10);
+        let grads = env_g.constant_grads(1.0);
+        let mut ag = RoSdhb::new(1000, 3, false);
+        let mut al = RoSdhb::new(1000, 3, true);
+        ag.round(0, &grads, &[], &mut env_g.env());
+        al.round(0, &grads, &[], &mut env_l.env());
+        assert!(
+            env_l.meter.uplink > env_g.meter.uplink,
+            "local {} must exceed global {}",
+            env_l.meter.uplink,
+            env_g.meter.uplink
+        );
+    }
+
+    #[test]
+    fn local_masks_differ_across_workers() {
+        // with k << d and beta=0, two workers' momenta have (whp) different
+        // supports after one local round.
+        let d = 256;
+        let mut env = Env::new(d, 2, 0, 8);
+        env.beta = 0.0;
+        let grads = env.constant_grads(1.0);
+        let mut alg = RoSdhb::new(d, 2, true);
+        alg.round(0, &grads, &[], &mut env.env());
+        let s0: Vec<usize> = (0..d).filter(|&i| alg.momenta[0][i] != 0.0).collect();
+        let s1: Vec<usize> = (0..d).filter(|&i| alg.momenta[1][i] != 0.0).collect();
+        assert_ne!(s0, s1);
+    }
+
+    #[test]
+    fn alie_attack_is_filtered_by_cwtm_but_poisons_mean() {
+        let d = 16;
+        let nh = 10;
+        let f = 3;
+        let mk = |aggr: &str| -> f32 {
+            let mut env = Env::new(d, nh, f, d);
+            env.beta = 0.0;
+            env.attack = crate::attacks::parse_spec("alie:30").unwrap();
+            env.aggregator = crate::aggregators::parse_spec(aggr, f).unwrap();
+            let mut grads = Vec::new();
+            let mut rng = crate::prng::Pcg64::new(5, 5);
+            for _ in 0..nh {
+                let mut g = vec![1.0f32; d];
+                for v in g.iter_mut() {
+                    *v += 0.1 * rng.next_gaussian() as f32;
+                }
+                grads.push(g);
+            }
+            let mut alg = RoSdhb::new(d, nh + f, false);
+            let r = alg.round(0, &grads, &[], &mut env.env());
+            r[0]
+        };
+        let robust = mk("cwtm");
+        let naive = mk("mean");
+        assert!((robust - 1.0).abs() < 0.5, "cwtm survived: {robust}");
+        assert!((naive - 1.0).abs() > 0.5, "mean should be poisoned: {naive}");
+    }
+
+    #[test]
+    fn honest_momentum_mean_matches_manual_average() {
+        let mut env = Env::new(4, 3, 0, 4);
+        let grads = env.constant_grads(2.0);
+        let mut alg = RoSdhb::new(4, 3, false);
+        alg.round(1, &grads, &[], &mut env.env());
+        let m = alg.honest_momentum_mean(3).unwrap();
+        // beta=0.9: m = 0.1 * 2.0
+        for v in &m {
+            assert!((v - 0.2).abs() < 1e-6);
+        }
+    }
+}

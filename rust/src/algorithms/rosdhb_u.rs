@@ -1,0 +1,160 @@
+//! RoSDHB-U — the Appendix-C generalization of RoSDHB-Local to **any
+//! unbiased compressor** (Definition C.1: `E[C(x)] = x`,
+//! `E‖C(x)‖² ≤ α‖x‖²`).
+//!
+//! Identical server structure to RoSDHB-Local (per-worker momentum +
+//! robust aggregation); the mask-based sparsifier is replaced by a
+//! pluggable [`UnbiasedCompressor`] — QSGD stochastic quantization [1] or
+//! RandK-with-shipped-mask. The convergence guarantee carries over with
+//! α = the compressor's variance parameter (Appendix C); the bench
+//! ablation (`bench_appendix_c`) compares the two at matched wire budget.
+
+use super::{byzantine_vectors, Algorithm, RoundEnv};
+use crate::compression::UnbiasedCompressor;
+use crate::tensor;
+use crate::transport::broadcast_len;
+
+pub struct RoSdhbU {
+    compressor: Box<dyn UnbiasedCompressor>,
+    momenta: Vec<Vec<f32>>,
+    recon: Vec<f32>,
+}
+
+impl RoSdhbU {
+    pub fn new(
+        d: usize,
+        n_workers: usize,
+        compressor: Box<dyn UnbiasedCompressor>,
+    ) -> Self {
+        RoSdhbU {
+            compressor,
+            momenta: vec![vec![0.0; d]; n_workers],
+            recon: vec![0.0; d],
+        }
+    }
+
+    pub fn compressor_name(&self) -> String {
+        self.compressor.name()
+    }
+}
+
+impl Algorithm for RoSdhbU {
+    fn name(&self) -> &'static str {
+        "rosdhb-u"
+    }
+
+    fn round(
+        &mut self,
+        t: u64,
+        honest_grads: &[Vec<f32>],
+        byz_grads: &[Vec<f32>],
+        env: &mut RoundEnv,
+    ) -> Vec<f32> {
+        let d = env.d;
+        let n = env.n_total();
+        env.meter
+            .record_broadcast_sized(broadcast_len(d, false), n);
+        let byz = byzantine_vectors(t, honest_grads, byz_grads, env);
+
+        let mut process =
+            |this: &mut Self, widx: usize, g: &[f32], env: &mut RoundEnv| {
+                let mut wrng = env.rng.derive(0x7571_636d, t, widx as u64);
+                let bytes =
+                    this.compressor.roundtrip(g, &mut wrng, &mut this.recon);
+                env.meter.record_uplink_sized(widx, bytes);
+                tensor::scale_add(
+                    &mut this.momenta[widx],
+                    env.beta,
+                    1.0 - env.beta,
+                    &this.recon,
+                );
+            };
+        for (i, g) in honest_grads.iter().enumerate() {
+            process(self, i, g, env);
+        }
+        for (j, g) in byz.iter().enumerate() {
+            process(self, env.n_honest + j, g, env);
+        }
+
+        let refs: Vec<&[f32]> =
+            self.momenta.iter().map(|m| m.as_slice()).collect();
+        env.aggregator.aggregate_vec(&refs)
+    }
+
+    fn momenta(&self) -> Option<&[Vec<f32>]> {
+        Some(&self.momenta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_env::Env;
+    use super::*;
+    use crate::compression::qsgd::{parse_spec, Qsgd};
+
+    #[test]
+    fn qsgd_momenta_converge_to_constant_gradient() {
+        let d = 64;
+        let mut env = Env::new(d, 4, 0, d);
+        env.beta = 0.8;
+        env.aggregator = crate::aggregators::parse_spec("mean", 0).unwrap();
+        let grads = env.constant_grads(1.0);
+        let mut alg = RoSdhbU::new(d, 4, Box::new(Qsgd::new(d, 8)));
+        let mut last = vec![0f32; d];
+        for t in 1..=400 {
+            last = alg.round(t, &grads, &[], &mut env.env());
+        }
+        let mean: f64 =
+            last.iter().map(|&v| v as f64).sum::<f64>() / d as f64;
+        assert!((mean - 1.0).abs() < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn uplink_uses_quantized_wire_size() {
+        let d = 1000;
+        let mut env = Env::new(d, 3, 0, d);
+        let grads = env.constant_grads(1.0);
+        let q = Qsgd::new(d, 4);
+        let expect = q.wire_bytes();
+        let mut alg = RoSdhbU::new(d, 3, Box::new(q));
+        alg.round(0, &grads, &[], &mut env.env());
+        // 3 workers, one quantized payload each (+ broadcast downlink)
+        assert_eq!(env.meter.uplink, 3 * expect as u64);
+        assert!(env.meter.uplink < 3 * 4 * d as u64 / 4, "must beat dense/4");
+    }
+
+    #[test]
+    fn survives_alie_with_robust_aggregation() {
+        let d = 32;
+        let mut env = Env::new(d, 10, 3, d);
+        env.attack = crate::attacks::parse_spec("alie:30").unwrap();
+        env.aggregator =
+            crate::aggregators::parse_spec("nnm+cwtm", 3).unwrap();
+        let grads = env.constant_grads(1.0);
+        let mut alg =
+            RoSdhbU::new(d, 13, parse_spec("qsgd:4", d, 1.0).unwrap());
+        let mut r = vec![0f32; d];
+        for t in 0..60 {
+            r = alg.round(t, &grads, &[], &mut env.env());
+        }
+        assert!((r[0] - 1.0).abs() < 0.4, "{}", r[0]);
+    }
+
+    #[test]
+    fn randk_backend_matches_local_variant_semantics() {
+        // rosdhb-u with the RandK backend is RoSDHB-Local up to RNG
+        // streams: same wire cost model (payload + mask).
+        let d = 200;
+        let k = 20;
+        let mut env = Env::new(d, 2, 0, k);
+        let grads = env.constant_grads(1.0);
+        let mut alg =
+            RoSdhbU::new(d, 2, parse_spec("randk", d, 0.1).unwrap());
+        alg.round(0, &grads, &[], &mut env.env());
+        let per_worker = env.meter.uplink / 2;
+        // header(12)+len(4)+k*4 + mask(5 + 4k index list vs 25 bitset)
+        let expected = (12 + 4 + 4 * k) as u64
+            + crate::compression::codec::mask_wire_len(d, k) as u64;
+        assert_eq!(per_worker, expected);
+    }
+}

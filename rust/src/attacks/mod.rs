@@ -1,0 +1,406 @@
+//! Byzantine attack strategies (worst-case colluding, omniscient
+//! adversary — §2 threat model: Byzantine workers see all honest
+//! messages and know the server's algorithm).
+//!
+//! Attacks operate on the *payload* the server expects this round (the k
+//! masked coordinates under sparsification, the dense gradient otherwise),
+//! so every strategy automatically adapts to the compression mode — the
+//! adversary sends "arbitrary k values in C_k(g)" exactly as Algorithm 1's
+//! comment allows.
+//!
+//! * [`Alie`] — "A Little Is Enough" [4] (the paper's evaluation attack):
+//!   shift the honest per-coordinate mean by z_max honest standard
+//!   deviations, with z_max set from (n, f) so the crafted points hide
+//!   inside the honest spread.
+//! * [`Ipm`] — inner-product manipulation: send −ε · honest mean.
+//! * [`SignFlip`] — negate the honest mean (ε = 1 IPM with scaling).
+//! * [`Noise`] — large-variance Gaussian payloads.
+//! * [`Mimic`] — clone one honest worker (heterogeneity attack).
+//! * `LabelFlip` — data poisoning (y → 9−y), implemented in
+//!   [`crate::worker`] since it needs a gradient pass; represented here by
+//!   [`AttackKind::LabelFlip`].
+
+use crate::prng::Pcg64;
+use crate::util::stats;
+
+/// What the adversary sees when crafting round-t payloads.
+pub struct AttackCtx<'a> {
+    pub round: u64,
+    /// Honest payloads as they will hit the wire (length k each).
+    pub honest_payloads: &'a [Vec<f32>],
+    pub n_honest: usize,
+    pub n_byz: usize,
+}
+
+/// A payload-crafting attack. `craft_all` returns one payload per
+/// Byzantine worker (they may collude — identical payloads maximize pull
+/// for ALIE/IPM).
+pub trait PayloadAttack: Send + Sync {
+    fn name(&self) -> String;
+    fn craft_all(&self, ctx: &AttackCtx, rng: &mut Pcg64) -> Vec<Vec<f32>>;
+}
+
+/// Parsed attack specification.
+pub enum AttackKind {
+    None,
+    Payload(Box<dyn PayloadAttack>),
+    /// Data-level poisoning handled inside the Byzantine worker.
+    LabelFlip,
+}
+
+impl AttackKind {
+    pub fn name(&self) -> String {
+        match self {
+            AttackKind::None => "none".into(),
+            AttackKind::Payload(p) => p.name(),
+            AttackKind::LabelFlip => "labelflip".into(),
+        }
+    }
+}
+
+/// Parse an attack spec: `"none"`, `"alie"`, `"alie:1.5"` (explicit z),
+/// `"ipm"`, `"ipm:0.5"`, `"signflip"`, `"noise"`, `"noise:100"`,
+/// `"mimic"`, `"labelflip"`.
+pub fn parse_spec(spec: &str) -> Result<AttackKind, String> {
+    let spec = spec.to_ascii_lowercase();
+    let (base, arg) = match spec.split_once(':') {
+        Some((b, a)) => (b, Some(a)),
+        None => (spec.as_str(), None),
+    };
+    let parse_arg = |default: f64| -> Result<f64, String> {
+        arg.map_or(Ok(default), |a| {
+            a.parse().map_err(|_| format!("bad attack arg '{a}'"))
+        })
+    };
+    Ok(match base {
+        "none" => AttackKind::None,
+        "alie" => AttackKind::Payload(Box::new(Alie {
+            z: parse_arg(0.0).map(|z| if z == 0.0 { None } else { Some(z) })?,
+        })),
+        "ipm" => AttackKind::Payload(Box::new(Ipm {
+            epsilon: parse_arg(0.5)?,
+        })),
+        "signflip" => AttackKind::Payload(Box::new(SignFlip {
+            scale: parse_arg(1.0)?,
+        })),
+        "noise" => AttackKind::Payload(Box::new(Noise {
+            sigma: parse_arg(10.0)?,
+        })),
+        "mimic" => AttackKind::Payload(Box::new(Mimic)),
+        "labelflip" => AttackKind::LabelFlip,
+        other => return Err(format!("unknown attack '{other}'")),
+    })
+}
+
+// ------------------------------------------------------------------ ALIE
+
+/// "A Little Is Enough" [4].
+pub struct Alie {
+    /// Explicit z; `None` derives z_max from (n, f) as in the paper:
+    /// s = ⌊n/2⌋ + 1 − f supporters needed, z = Φ⁻¹((n−f−s)/(n−f)).
+    pub z: Option<f64>,
+}
+
+impl Alie {
+    pub fn z_max(n: usize, f: usize) -> f64 {
+        let nf = (n - f) as f64;
+        let s = (n / 2 + 1).saturating_sub(f) as f64;
+        let q = ((nf - s) / nf).clamp(0.01, 0.99);
+        inv_norm_cdf(q)
+    }
+}
+
+impl PayloadAttack for Alie {
+    fn name(&self) -> String {
+        match self.z {
+            Some(z) => format!("alie(z={z})"),
+            None => "alie".into(),
+        }
+    }
+
+    fn craft_all(&self, ctx: &AttackCtx, _rng: &mut Pcg64) -> Vec<Vec<f32>> {
+        let n = ctx.n_honest + ctx.n_byz;
+        let z = self.z.unwrap_or_else(|| Self::z_max(n, ctx.n_byz));
+        let k = ctx.honest_payloads[0].len();
+        let nh = ctx.honest_payloads.len() as f64;
+        let mut crafted = vec![0f32; k];
+        for ell in 0..k {
+            let mut mean = 0.0f64;
+            for p in ctx.honest_payloads {
+                mean += p[ell] as f64;
+            }
+            mean /= nh;
+            let mut var = 0.0f64;
+            for p in ctx.honest_payloads {
+                let d = p[ell] as f64 - mean;
+                var += d * d;
+            }
+            let std = (var / nh.max(1.0)).sqrt();
+            crafted[ell] = (mean - z * std) as f32;
+        }
+        vec![crafted; ctx.n_byz]
+    }
+}
+
+// ------------------------------------------------------------------- IPM
+
+/// Inner-product manipulation: payload = −ε · honest mean. Small ε keeps
+/// the crafted point near the cloud while reversing the update direction.
+pub struct Ipm {
+    pub epsilon: f64,
+}
+
+impl PayloadAttack for Ipm {
+    fn name(&self) -> String {
+        format!("ipm(eps={})", self.epsilon)
+    }
+
+    fn craft_all(&self, ctx: &AttackCtx, _rng: &mut Pcg64) -> Vec<Vec<f32>> {
+        let k = ctx.honest_payloads[0].len();
+        let nh = ctx.honest_payloads.len() as f32;
+        let mut mean = vec![0f32; k];
+        for p in ctx.honest_payloads {
+            for (m, v) in mean.iter_mut().zip(p) {
+                *m += v;
+            }
+        }
+        let s = -(self.epsilon as f32) / nh;
+        for m in mean.iter_mut() {
+            *m *= s;
+        }
+        vec![mean; ctx.n_byz]
+    }
+}
+
+/// Sign flip: −scale · honest mean.
+pub struct SignFlip {
+    pub scale: f64,
+}
+
+impl PayloadAttack for SignFlip {
+    fn name(&self) -> String {
+        format!("signflip(s={})", self.scale)
+    }
+
+    fn craft_all(&self, ctx: &AttackCtx, rng: &mut Pcg64) -> Vec<Vec<f32>> {
+        Ipm {
+            epsilon: self.scale,
+        }
+        .craft_all(ctx, rng)
+    }
+}
+
+/// Unstructured large-noise payloads (each Byzantine draws independently).
+pub struct Noise {
+    pub sigma: f64,
+}
+
+impl PayloadAttack for Noise {
+    fn name(&self) -> String {
+        format!("noise(sigma={})", self.sigma)
+    }
+
+    fn craft_all(&self, ctx: &AttackCtx, rng: &mut Pcg64) -> Vec<Vec<f32>> {
+        let k = ctx.honest_payloads[0].len();
+        (0..ctx.n_byz)
+            .map(|_| {
+                let mut v = vec![0f32; k];
+                rng.fill_gaussian(&mut v, self.sigma as f32);
+                v
+            })
+            .collect()
+    }
+}
+
+/// Mimic: every Byzantine clones honest worker 0's payload, doubling its
+/// weight — effective under heterogeneity.
+pub struct Mimic;
+
+impl PayloadAttack for Mimic {
+    fn name(&self) -> String {
+        "mimic".into()
+    }
+
+    fn craft_all(&self, ctx: &AttackCtx, _rng: &mut Pcg64) -> Vec<Vec<f32>> {
+        vec![ctx.honest_payloads[0].clone(); ctx.n_byz]
+    }
+}
+
+// ------------------------------------------------- inverse normal CDF
+
+/// Acklam's rational approximation of Φ⁻¹ (|rel err| < 1.15e-9).
+pub fn inv_norm_cdf(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0);
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let p_low = 0.02425;
+    if p < p_low {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - p_low {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5])
+            * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r
+                + 1.0)
+    } else {
+        -inv_norm_cdf(1.0 - p)
+    }
+}
+
+/// Mean/σ of honest payloads at one coordinate — shared test helper.
+pub fn coord_stats(payloads: &[Vec<f32>], ell: usize) -> (f64, f64) {
+    let xs: Vec<f64> = payloads.iter().map(|p| p[ell] as f64).collect();
+    (stats::mean(&xs), stats::std_dev(&xs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx_payloads(nh: usize, k: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg64::new(seed, 1);
+        (0..nh)
+            .map(|_| {
+                let mut v = vec![0f32; k];
+                rng.fill_gaussian(&mut v, 1.0);
+                for x in v.iter_mut() {
+                    *x += 3.0; // non-zero mean so direction matters
+                }
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn inv_norm_cdf_known_values() {
+        assert!(inv_norm_cdf(0.5).abs() < 1e-9);
+        assert!((inv_norm_cdf(0.975) - 1.959964).abs() < 1e-4);
+        assert!((inv_norm_cdf(0.025) + 1.959964).abs() < 1e-4);
+        assert!((inv_norm_cdf(0.8413447) - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn alie_zmax_monotone_in_f() {
+        // More Byzantine workers => need fewer honest supporters => can
+        // push harder.
+        let z1 = Alie::z_max(20, 1);
+        let z5 = Alie::z_max(20, 5);
+        let z9 = Alie::z_max(20, 9);
+        assert!(z1 <= z5 && z5 <= z9, "{z1} {z5} {z9}");
+    }
+
+    #[test]
+    fn alie_payload_is_mean_minus_z_sigma() {
+        let payloads = ctx_payloads(10, 16, 5);
+        let ctx = AttackCtx {
+            round: 0,
+            honest_payloads: &payloads,
+            n_honest: 10,
+            n_byz: 3,
+        };
+        let atk = Alie { z: Some(1.5) };
+        let out = atk.craft_all(&ctx, &mut Pcg64::new(0, 0));
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0], out[2], "colluders send identical payloads");
+        for ell in [0usize, 7, 15] {
+            // biased population sigma (divide by n), matching craft_all
+            let xs: Vec<f64> =
+                payloads.iter().map(|p| p[ell] as f64).collect();
+            let m = crate::util::stats::mean(&xs);
+            let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+                / xs.len() as f64;
+            let want = m - 1.5 * var.sqrt();
+            assert!((out[0][ell] as f64 - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn ipm_reverses_direction() {
+        let payloads = ctx_payloads(10, 8, 6);
+        let ctx = AttackCtx {
+            round: 0,
+            honest_payloads: &payloads,
+            n_honest: 10,
+            n_byz: 2,
+        };
+        let out = Ipm { epsilon: 0.5 }.craft_all(&ctx, &mut Pcg64::new(0, 0));
+        let mean0 = coord_stats(&payloads, 0).0;
+        assert!(out[0][0] as f64 * mean0 < 0.0, "must oppose honest mean");
+        assert!((out[0][0] as f64 + 0.5 * mean0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn mimic_clones_worker_zero() {
+        let payloads = ctx_payloads(4, 8, 7);
+        let ctx = AttackCtx {
+            round: 0,
+            honest_payloads: &payloads,
+            n_honest: 4,
+            n_byz: 2,
+        };
+        let out = Mimic.craft_all(&ctx, &mut Pcg64::new(0, 0));
+        assert_eq!(out[0], payloads[0]);
+        assert_eq!(out[1], payloads[0]);
+    }
+
+    #[test]
+    fn noise_payloads_differ_across_byzantines() {
+        let payloads = ctx_payloads(4, 8, 8);
+        let ctx = AttackCtx {
+            round: 0,
+            honest_payloads: &payloads,
+            n_honest: 4,
+            n_byz: 2,
+        };
+        let out = Noise { sigma: 10.0 }.craft_all(&ctx, &mut Pcg64::new(1, 1));
+        assert_ne!(out[0], out[1]);
+    }
+
+    #[test]
+    fn parse_spec_roundtrips() {
+        assert!(matches!(parse_spec("none").unwrap(), AttackKind::None));
+        assert!(matches!(
+            parse_spec("labelflip").unwrap(),
+            AttackKind::LabelFlip
+        ));
+        for s in ["alie", "alie:1.3", "ipm:0.25", "signflip", "noise:50",
+                  "mimic"] {
+            assert!(matches!(
+                parse_spec(s).unwrap(),
+                AttackKind::Payload(_)
+            ));
+        }
+        assert!(parse_spec("alie:xyz").is_err());
+        assert!(parse_spec("zzz").is_err());
+    }
+}

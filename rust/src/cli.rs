@@ -1,0 +1,106 @@
+//! Command-line interface (no `clap` offline — a small, strict parser).
+//!
+//! ```text
+//! rosdhb train  [--config FILE] [--key value ...]   # one experiment
+//! rosdhb fig1   [--out csv] [--quick]               # Figure 1 sweep
+//! rosdhb gb     [--config FILE] [--samples N]       # (G,B) estimation
+//! rosdhb info                                       # build/artifact info
+//! ```
+//!
+//! Any `--key value` pair after `train` overrides the corresponding
+//! [`crate::config::ExperimentConfig`] field (`--k_frac 0.05`,
+//! `--algorithm rosdhb-local`, ...).
+
+/// A parsed command line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cli {
+    pub command: String,
+    /// `--key value` pairs in order.
+    pub options: Vec<(String, String)>,
+}
+
+impl Cli {
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Cli, String> {
+        let mut it = args.into_iter();
+        let command = it
+            .next()
+            .ok_or("usage: rosdhb <train|fig1|gb|info> [--key value ...]")?;
+        if command.starts_with('-') {
+            return Err(format!("expected a command, got '{command}'"));
+        }
+        let mut options = Vec::new();
+        while let Some(flag) = it.next() {
+            let key = flag
+                .strip_prefix("--")
+                .ok_or_else(|| format!("expected --flag, got '{flag}'"))?;
+            if key.is_empty() {
+                return Err("empty flag".into());
+            }
+            let value = it
+                .next()
+                .ok_or_else(|| format!("flag --{key} needs a value"))?;
+            options.push((key.to_string(), value));
+        }
+        Ok(Cli { command, options })
+    }
+
+    /// Value of the last occurrence of `--key`.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// All options except the listed meta-keys (those consumed by the
+    /// driver rather than the experiment config).
+    pub fn config_overrides(&self, exclude: &[&str]) -> Vec<(&str, &str)> {
+        self.options
+            .iter()
+            .filter(|(k, _)| !exclude.contains(&k.as_str()))
+            .map(|(k, v)| (k.as_str(), v.as_str()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Result<Cli, String> {
+        Cli::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let c = parse(&["train", "--k_frac", "0.05", "--attack", "alie"])
+            .unwrap();
+        assert_eq!(c.command, "train");
+        assert_eq!(c.get("k_frac"), Some("0.05"));
+        assert_eq!(c.get("attack"), Some("alie"));
+        assert_eq!(c.get("missing"), None);
+    }
+
+    #[test]
+    fn last_flag_wins() {
+        let c = parse(&["train", "--seed", "1", "--seed", "2"]).unwrap();
+        assert_eq!(c.get("seed"), Some("2"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse(&[]).is_err());
+        assert!(parse(&["--train"]).is_err());
+        assert!(parse(&["train", "k_frac", "0.1"]).is_err());
+        assert!(parse(&["train", "--k_frac"]).is_err());
+    }
+
+    #[test]
+    fn overrides_exclude_meta_keys() {
+        let c = parse(&["train", "--config", "x.toml", "--beta", "0.9"])
+            .unwrap();
+        let o: Vec<_> = c.config_overrides(&["config"]);
+        assert_eq!(o, vec![("beta", "0.9")]);
+    }
+}

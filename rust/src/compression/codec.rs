@@ -1,0 +1,217 @@
+//! Wire codecs for masks (local sparsification only — global masks travel
+//! as an 8-byte seed).
+//!
+//! Two encodings, picked per message by whichever is smaller (DESIGN.md
+//! §5):
+//! * **index list**: `k · 4` bytes of u32 indices — cheap when k ≪ d;
+//! * **bitset**: `⌈d/8⌉` bytes — cheap when k/d ≳ 1/32.
+//!
+//! A 5-byte header carries the codec tag + count.
+
+use super::Mask;
+
+const HEADER: usize = 1 + 4;
+
+/// Wire size of the cheaper codec for a (d, k) mask, without building it
+/// (hot-path metering — must equal `MaskWire::choose(mask).encoded_len()`).
+pub fn mask_wire_len(d: usize, k: usize) -> usize {
+    HEADER + (4 * k).min((d + 7) / 8)
+}
+
+/// An encoded mask ready for the wire.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MaskWire {
+    IndexList { d: usize, idx: Vec<u32> },
+    Bitset { d: usize, bits: Vec<u8> },
+}
+
+impl MaskWire {
+    /// Choose the cheaper encoding for a mask.
+    pub fn choose(mask: &Mask) -> MaskWire {
+        let list_cost = HEADER + 4 * mask.k();
+        let bitset_cost = HEADER + (mask.d + 7) / 8;
+        if list_cost <= bitset_cost {
+            Self::index_list(&mask.idx, mask.d)
+        } else {
+            Self::bitset(mask)
+        }
+    }
+
+    pub fn index_list(idx: &[u32], d: usize) -> MaskWire {
+        MaskWire::IndexList {
+            d,
+            idx: idx.to_vec(),
+        }
+    }
+
+    pub fn bitset(mask: &Mask) -> MaskWire {
+        let mut bits = vec![0u8; (mask.d + 7) / 8];
+        for &i in &mask.idx {
+            bits[(i / 8) as usize] |= 1 << (i % 8);
+        }
+        MaskWire::Bitset { d: mask.d, bits }
+    }
+
+    pub fn encoded_len(&self) -> usize {
+        match self {
+            MaskWire::IndexList { idx, .. } => HEADER + 4 * idx.len(),
+            MaskWire::Bitset { bits, .. } => HEADER + bits.len(),
+        }
+    }
+
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        match self {
+            MaskWire::IndexList { idx, .. } => {
+                out.push(0u8);
+                out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+                for i in idx {
+                    out.extend_from_slice(&i.to_le_bytes());
+                }
+            }
+            MaskWire::Bitset { bits, .. } => {
+                out.push(1u8);
+                out.extend_from_slice(&(bits.len() as u32).to_le_bytes());
+                out.extend_from_slice(bits);
+            }
+        }
+    }
+
+    /// Decode back to a [`Mask`] (server side of local sparsification).
+    pub fn to_mask(&self) -> Mask {
+        match self {
+            MaskWire::IndexList { d, idx } => Mask::new(*d, idx.clone()),
+            MaskWire::Bitset { d, bits } => {
+                let mut idx = Vec::new();
+                for (byte_i, &b) in bits.iter().enumerate() {
+                    for bit in 0..8 {
+                        if b & (1 << bit) != 0 {
+                            let coord = byte_i * 8 + bit;
+                            if coord < *d {
+                                idx.push(coord as u32);
+                            }
+                        }
+                    }
+                }
+                Mask::new(*d, idx)
+            }
+        }
+    }
+
+    /// Parse from bytes (inverse of [`Self::encode_into`]); returns the
+    /// decoded wire and bytes consumed.
+    pub fn decode(buf: &[u8], d: usize) -> Result<(MaskWire, usize), String> {
+        if buf.len() < HEADER {
+            return Err("short mask header".into());
+        }
+        let tag = buf[0];
+        let n = u32::from_le_bytes([buf[1], buf[2], buf[3], buf[4]]) as usize;
+        match tag {
+            0 => {
+                let need = HEADER + 4 * n;
+                if buf.len() < need {
+                    return Err("short index list".into());
+                }
+                let idx = (0..n)
+                    .map(|i| {
+                        let o = HEADER + 4 * i;
+                        u32::from_le_bytes([
+                            buf[o],
+                            buf[o + 1],
+                            buf[o + 2],
+                            buf[o + 3],
+                        ])
+                    })
+                    .collect();
+                Ok((MaskWire::IndexList { d, idx }, need))
+            }
+            1 => {
+                let need = HEADER + n;
+                if buf.len() < need {
+                    return Err("short bitset".into());
+                }
+                Ok((
+                    MaskWire::Bitset {
+                        d,
+                        bits: buf[HEADER..need].to_vec(),
+                    },
+                    need,
+                ))
+            }
+            t => Err(format!("unknown mask codec tag {t}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::randk::mask_from_seed;
+
+    #[test]
+    fn roundtrip_both_codecs() {
+        let mask = mask_from_seed(1, 1000, 30);
+        for wire in [MaskWire::index_list(&mask.idx, 1000), MaskWire::bitset(&mask)]
+        {
+            let mut buf = Vec::new();
+            wire.encode_into(&mut buf);
+            assert_eq!(buf.len(), wire.encoded_len());
+            let (decoded, used) = MaskWire::decode(&buf, 1000).unwrap();
+            assert_eq!(used, buf.len());
+            assert_eq!(decoded.to_mask(), mask);
+        }
+    }
+
+    #[test]
+    fn choose_picks_cheaper() {
+        // sparse: index list wins
+        let sparse = mask_from_seed(2, 11_809, 118);
+        assert!(matches!(
+            MaskWire::choose(&sparse),
+            MaskWire::IndexList { .. }
+        ));
+        // dense-ish: bitset wins
+        let dense = mask_from_seed(3, 11_809, 5_904);
+        assert!(matches!(MaskWire::choose(&dense), MaskWire::Bitset { .. }));
+        // and choose() is never worse than either option
+        for m in [sparse, dense] {
+            let chosen = MaskWire::choose(&m).encoded_len();
+            let il = MaskWire::index_list(&m.idx, m.d).encoded_len();
+            let bs = MaskWire::bitset(&m).encoded_len();
+            assert_eq!(chosen, il.min(bs));
+        }
+    }
+
+    #[test]
+    fn mask_wire_len_matches_choose() {
+        for (d, k) in [(11_809, 118), (11_809, 5_904), (100, 1), (8, 8)] {
+            let mask = mask_from_seed(d as u64, d, k);
+            assert_eq!(
+                mask_wire_len(d, k),
+                MaskWire::choose(&mask).encoded_len(),
+                "d={d} k={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn decode_rejects_truncation() {
+        let mask = mask_from_seed(4, 100, 10);
+        let wire = MaskWire::choose(&mask);
+        let mut buf = Vec::new();
+        wire.encode_into(&mut buf);
+        assert!(MaskWire::decode(&buf[..buf.len() - 1], 100).is_err());
+        assert!(MaskWire::decode(&[9, 0, 0, 0, 0], 100).is_err());
+    }
+
+    #[test]
+    fn bitset_ignores_padding_bits() {
+        // d = 10 needs 2 bytes; high bits of byte 1 beyond coord 9 must be
+        // dropped on decode.
+        let wire = MaskWire::Bitset {
+            d: 10,
+            bits: vec![0b0000_0001, 0b1111_1110],
+        };
+        let m = wire.to_mask();
+        assert_eq!(m.idx, vec![0, 9]);
+    }
+}

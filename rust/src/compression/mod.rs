@@ -1,0 +1,137 @@
+//! Gradient compression: RandK sparsification (global & local), the TopK
+//! biased baseline, and the wire codecs for masks.
+//!
+//! The central object is [`Mask`]: a sorted set of `k` coordinate indices
+//! out of `d`. Under **global** sparsification (Algorithm 1) the server
+//! draws one mask per round and broadcasts only its *seed*; workers and
+//! server re-derive the identical mask deterministically
+//! ([`randk::mask_from_seed`]). Under **local** sparsification (§3.3) each
+//! worker draws its own mask and must ship it ([`codec::MaskWire`]).
+
+pub mod codec;
+pub mod qsgd;
+pub mod randk;
+pub mod topk;
+
+pub use qsgd::{Qsgd, UnbiasedCompressor};
+pub use randk::{mask_from_seed, RandK};
+pub use topk::TopK;
+
+/// A sparsification mask: `k` sorted, distinct coordinates in `[0, d)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Mask {
+    pub d: usize,
+    /// Sorted ascending, distinct.
+    pub idx: Vec<u32>,
+}
+
+impl Mask {
+    pub fn new(d: usize, mut idx: Vec<u32>) -> Self {
+        idx.sort_unstable();
+        idx.dedup();
+        assert!(idx.last().map_or(true, |&l| (l as usize) < d));
+        Mask { d, idx }
+    }
+
+    /// Full mask (k = d): the identity compressor.
+    pub fn dense(d: usize) -> Self {
+        Mask {
+            d,
+            idx: (0..d as u32).collect(),
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Unbiasing factor α = d/k.
+    pub fn alpha(&self) -> f32 {
+        self.d as f32 / self.k() as f32
+    }
+
+    /// Extract the masked coordinates of `g` in index order — the payload
+    /// C_k(g) a worker uploads (Algorithm 1, step 3c).
+    pub fn compress(&self, g: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(g.len(), self.d);
+        self.idx.iter().map(|&i| g[i as usize]).collect()
+    }
+
+    /// Non-allocating variant of [`Self::compress`].
+    pub fn compress_into(&self, g: &[f32], out: &mut Vec<f32>) {
+        debug_assert_eq!(g.len(), self.d);
+        out.clear();
+        out.extend(self.idx.iter().map(|&i| g[i as usize]));
+    }
+
+    /// Reconstruct the unbiased estimate `g̃ = (d/k) · scatter(values)`
+    /// (Algorithm 1, step 4). Matches `kernels/ref.py: masked_scale_ref`.
+    pub fn reconstruct(&self, values: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0; self.d];
+        self.reconstruct_into(values, &mut out);
+        out
+    }
+
+    /// Non-allocating variant; `out` must have length `d`.
+    pub fn reconstruct_into(&self, values: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(values.len(), self.k());
+        debug_assert_eq!(out.len(), self.d);
+        out.fill(0.0);
+        let a = self.alpha();
+        for (&i, &v) in self.idx.iter().zip(values) {
+            out[i as usize] = a * v;
+        }
+    }
+
+    /// Apply the mask in place **without** unbiasing (used by diagnostics:
+    /// `g ⊙ mask`).
+    pub fn project(&self, g: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0; self.d];
+        for &i in &self.idx {
+            out[i as usize] = g[i as usize];
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compress_reconstruct_roundtrip_at_k_eq_d() {
+        let g = vec![1.0, -2.0, 3.0];
+        let m = Mask::dense(3);
+        assert_eq!(m.alpha(), 1.0);
+        assert_eq!(m.reconstruct(&m.compress(&g)), g);
+    }
+
+    #[test]
+    fn reconstruct_scales_by_alpha() {
+        let g = vec![1.0, -2.0, 3.0, 4.0];
+        let m = Mask::new(4, vec![1, 3]);
+        let payload = m.compress(&g);
+        assert_eq!(payload, vec![-2.0, 4.0]);
+        let rec = m.reconstruct(&payload);
+        assert_eq!(rec, vec![0.0, -4.0, 0.0, 8.0]); // alpha = 2
+    }
+
+    #[test]
+    fn new_sorts_and_dedups() {
+        let m = Mask::new(10, vec![7, 2, 7, 0]);
+        assert_eq!(m.idx, vec![0, 2, 7]);
+    }
+
+    #[test]
+    fn project_keeps_unscaled() {
+        let g = vec![1.0, 2.0, 3.0];
+        let m = Mask::new(3, vec![2]);
+        assert_eq!(m.project(&g), vec![0.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_index_panics() {
+        let _ = Mask::new(3, vec![3]);
+    }
+}

@@ -1,0 +1,279 @@
+//! QSGD stochastic quantization (Alistarh et al. [1]) — the second
+//! *unbiased* compressor family, used by the Appendix-C generalization of
+//! RoSDHB-Local ("RoSDHB-U": any unbiased compressor C with
+//! `E[C(x)] = x`, `E‖C(x)‖² ≤ α‖x‖²`).
+//!
+//! Q_s(x)_i = ‖x‖ · sign(x_i) · ξ_i(x, s), where ξ_i rounds |x_i|/‖x‖·s
+//! stochastically to one of the s+1 levels {0, 1/s, …, 1}. Unbiased by
+//! construction; ω = E‖Q(x)−x‖²/‖x‖² ≤ min(d/s², √d/s).
+//!
+//! Wire format (byte accounting, DESIGN.md §5): 4 bytes ‖x‖ + d sign
+//! bits + d level indices of ⌈log2(s+1)⌉ bits, bit-packed.
+
+use crate::prng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct Qsgd {
+    pub d: usize,
+    /// Quantization levels s ≥ 1 (s = 1 ⇒ ternary QSGD).
+    pub s: u32,
+}
+
+impl Qsgd {
+    pub fn new(d: usize, s: u32) -> Self {
+        assert!(s >= 1);
+        Qsgd { d, s }
+    }
+
+    /// Variance parameter ω (so α = 1 + ω in the paper's notation).
+    pub fn omega(&self) -> f64 {
+        let d = self.d as f64;
+        let s = self.s as f64;
+        (d / (s * s)).min(d.sqrt() / s)
+    }
+
+    /// Bits per level index.
+    pub fn level_bits(&self) -> u32 {
+        32 - self.s.leading_zeros()
+    }
+
+    /// Wire size in bytes for one quantized vector.
+    pub fn wire_bytes(&self) -> usize {
+        // norm + packed signs + packed levels
+        4 + (self.d + 7) / 8 + (self.d * self.level_bits() as usize + 7) / 8
+    }
+
+    /// Quantize: returns (norm, levels with sign as i32 in [-s, s]).
+    pub fn quantize(&self, x: &[f32], rng: &mut Pcg64) -> (f32, Vec<i32>) {
+        assert_eq!(x.len(), self.d);
+        let norm = crate::tensor::norm(x) as f32;
+        if norm == 0.0 {
+            return (0.0, vec![0; self.d]);
+        }
+        let s = self.s as f32;
+        let levels = x
+            .iter()
+            .map(|&v| {
+                let r = v.abs() / norm * s; // in [0, s]
+                let lo = r.floor();
+                let p = r - lo; // P(round up)
+                let l = lo as i32
+                    + if (rng.next_f32() as f32) < p { 1 } else { 0 };
+                if v < 0.0 {
+                    -l
+                } else {
+                    l
+                }
+            })
+            .collect();
+        (norm, levels)
+    }
+
+    /// Dequantize to the unbiased estimate.
+    pub fn reconstruct(&self, norm: f32, levels: &[i32]) -> Vec<f32> {
+        assert_eq!(levels.len(), self.d);
+        let s = self.s as f32;
+        levels
+            .iter()
+            .map(|&l| norm * l as f32 / s)
+            .collect()
+    }
+}
+
+/// Appendix-C compressor abstraction: any unbiased compressor usable by
+/// RoSDHB-Local / the DGD baseline in place of RandK.
+pub trait UnbiasedCompressor: Send + Sync {
+    fn name(&self) -> String;
+    /// Compress-then-reconstruct `g` into `out` (the estimate the server
+    /// forms), returning the uplink wire size in bytes.
+    fn roundtrip(&self, g: &[f32], rng: &mut Pcg64, out: &mut [f32]) -> usize;
+    /// The variance parameter α ≥ 1 of Definition C.1.
+    fn alpha(&self) -> f64;
+}
+
+impl UnbiasedCompressor for Qsgd {
+    fn name(&self) -> String {
+        format!("qsgd(s={})", self.s)
+    }
+
+    fn roundtrip(&self, g: &[f32], rng: &mut Pcg64, out: &mut [f32]) -> usize {
+        let (norm, levels) = self.quantize(g, rng);
+        let s = self.s as f32;
+        for (o, &l) in out.iter_mut().zip(&levels) {
+            *o = norm * l as f32 / s;
+        }
+        self.wire_bytes()
+    }
+
+    fn alpha(&self) -> f64 {
+        1.0 + self.omega()
+    }
+}
+
+/// RandK as an [`UnbiasedCompressor`] (local-mask semantics: mask ships
+/// with the payload).
+#[derive(Clone, Debug)]
+pub struct RandKLocal {
+    pub inner: super::RandK,
+}
+
+impl UnbiasedCompressor for RandKLocal {
+    fn name(&self) -> String {
+        format!("randk(k={})", self.inner.k)
+    }
+
+    fn roundtrip(&self, g: &[f32], rng: &mut Pcg64, out: &mut [f32]) -> usize {
+        let mask = self.inner.draw(rng);
+        let payload = mask.compress(g);
+        mask.reconstruct_into(&payload, out);
+        crate::transport::compressed_grad_len(
+            payload.len(),
+            super::codec::mask_wire_len(self.inner.d, self.inner.k),
+        )
+    }
+
+    fn alpha(&self) -> f64 {
+        self.inner.alpha()
+    }
+}
+
+/// Parse a compressor spec: `"randk"` (k from k_frac), `"qsgd"` /
+/// `"qsgd:<s>"` (default s = 4).
+pub fn parse_spec(
+    spec: &str,
+    d: usize,
+    k_frac: f64,
+) -> Result<Box<dyn UnbiasedCompressor>, String> {
+    let spec = spec.to_ascii_lowercase();
+    let (base, arg) = match spec.split_once(':') {
+        Some((b, a)) => (b, Some(a)),
+        None => (spec.as_str(), None),
+    };
+    match base {
+        "randk" => Ok(Box::new(RandKLocal {
+            inner: super::RandK::from_frac(d, k_frac),
+        })),
+        "qsgd" => {
+            let s: u32 = arg
+                .map_or(Ok(4), |a| a.parse().map_err(|_| "bad qsgd level"))?;
+            Ok(Box::new(Qsgd::new(d, s)))
+        }
+        other => Err(format!("unknown compressor '{other}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor;
+
+    fn vecs(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed, 1);
+        let mut v = vec![0f32; d];
+        rng.fill_gaussian(&mut v, 1.0);
+        v
+    }
+
+    #[test]
+    fn quantize_levels_in_range_and_signs_match() {
+        let q = Qsgd::new(64, 4);
+        let x = vecs(64, 1);
+        let mut rng = Pcg64::new(2, 2);
+        let (norm, levels) = q.quantize(&x, &mut rng);
+        assert!(norm > 0.0);
+        for (&l, &v) in levels.iter().zip(&x) {
+            assert!(l.unsigned_abs() <= 4);
+            if l != 0 {
+                assert_eq!(l.signum(), if v < 0.0 { -1 } else { 1 });
+            }
+        }
+    }
+
+    #[test]
+    fn qsgd_is_unbiased() {
+        let d = 32;
+        let q = Qsgd::new(d, 2);
+        let x = vecs(d, 3);
+        let mut rng = Pcg64::new(4, 4);
+        let trials = 8000;
+        let mut acc = vec![0f64; d];
+        let mut out = vec![0f32; d];
+        for _ in 0..trials {
+            q.roundtrip(&x, &mut rng, &mut out);
+            for (a, v) in acc.iter_mut().zip(&out) {
+                *a += *v as f64;
+            }
+        }
+        let norm = tensor::norm(&x);
+        for i in 0..d {
+            let mean = acc[i] / trials as f64;
+            // per-coordinate MC se: level quantum is norm/s
+            let se = norm / 2.0 / (trials as f64).sqrt();
+            assert!(
+                (mean - x[i] as f64).abs() < 6.0 * se,
+                "coord {i}: {mean} vs {}",
+                x[i]
+            );
+        }
+    }
+
+    #[test]
+    fn qsgd_variance_within_omega_bound() {
+        let d = 64;
+        let q = Qsgd::new(d, 2);
+        let x = vecs(d, 5);
+        let x_norm_sq = tensor::norm_sq(&x);
+        let mut rng = Pcg64::new(6, 6);
+        let mut out = vec![0f32; d];
+        let trials = 3000;
+        let mut err = 0.0;
+        for _ in 0..trials {
+            q.roundtrip(&x, &mut rng, &mut out);
+            err += tensor::dist_sq(&out, &x);
+        }
+        let mean_err = err / trials as f64;
+        let bound = q.omega() * x_norm_sq;
+        assert!(mean_err <= bound * 1.05, "{mean_err} vs {bound}");
+    }
+
+    #[test]
+    fn zero_vector_roundtrips_exactly() {
+        let q = Qsgd::new(16, 4);
+        let mut rng = Pcg64::new(7, 7);
+        let mut out = vec![1f32; 16];
+        let bytes = q.roundtrip(&vec![0.0; 16], &mut rng, &mut out);
+        assert!(out.iter().all(|&v| v == 0.0));
+        assert_eq!(bytes, q.wire_bytes());
+    }
+
+    #[test]
+    fn wire_bytes_beats_dense_for_small_s() {
+        let q = Qsgd::new(11_809, 4); // 3 bits/level + 1 sign bit + norm
+        let dense = 4 * 11_809;
+        assert!(q.wire_bytes() * 5 < dense, "{} vs {dense}", q.wire_bytes());
+        assert_eq!(q.level_bits(), 3);
+    }
+
+    #[test]
+    fn parse_spec_variants() {
+        assert!(parse_spec("randk", 100, 0.1).is_ok());
+        assert!(parse_spec("qsgd", 100, 0.1).is_ok());
+        let q = parse_spec("qsgd:8", 100, 0.1).unwrap();
+        assert_eq!(q.name(), "qsgd(s=8)");
+        assert!(parse_spec("zip", 100, 0.1).is_err());
+    }
+
+    #[test]
+    fn randk_local_roundtrip_support() {
+        let c = RandKLocal {
+            inner: crate::compression::RandK { d: 50, k: 5 },
+        };
+        let mut rng = Pcg64::new(8, 8);
+        let g = vecs(50, 9);
+        let mut out = vec![0f32; 50];
+        let bytes = c.roundtrip(&g, &mut rng, &mut out);
+        assert_eq!(out.iter().filter(|v| **v != 0.0).count(), 5);
+        assert!(bytes < 4 * 50);
+        assert!((c.alpha() - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,173 @@
+//! RandK sparsifier (Stich et al. [33]) — the paper's compressor.
+//!
+//! Uniform over k-subsets of [0, d); unbiased once reconstructed with the
+//! d/k factor: `E[g̃] = g`, `E‖g̃ − g‖² ≤ (d/k − 1)‖g‖²` (§2). The
+//! coordination trick of Algorithm 1 lives in [`mask_from_seed`]: the
+//! server broadcasts 8 bytes of seed, and every party derives the *same*
+//! mask, so honest compressed gradients share a subspace (Lemma A.3).
+
+use super::Mask;
+use crate::prng::Pcg64;
+
+/// Derive the round mask from a wire seed. Both the server (step 1) and
+/// every honest worker (step 3a) call this with the broadcast seed.
+pub fn mask_from_seed(seed: u64, d: usize, k: usize) -> Mask {
+    let mut rng = Pcg64::new(seed, 0x6d61_736b); // "mask"
+    Mask {
+        d,
+        idx: rng.sample_k_of(d, k),
+    }
+}
+
+/// RandK compressor configuration.
+#[derive(Clone, Debug)]
+pub struct RandK {
+    pub d: usize,
+    pub k: usize,
+}
+
+impl RandK {
+    /// `k = max(1, round(k_frac · d))`.
+    pub fn from_frac(d: usize, k_frac: f64) -> Self {
+        let k = ((d as f64 * k_frac).round() as usize).clamp(1, d);
+        RandK { d, k }
+    }
+
+    pub fn alpha(&self) -> f64 {
+        self.d as f64 / self.k as f64
+    }
+
+    /// Draw a fresh mask from a caller-owned stream (local sparsification:
+    /// each worker passes its own per-round stream).
+    pub fn draw(&self, rng: &mut Pcg64) -> Mask {
+        Mask {
+            d: self.d,
+            idx: rng.sample_k_of(self.d, self.k),
+        }
+    }
+
+    /// Derive the global mask for `round` from an experiment seed
+    /// (the value that ships downlink).
+    pub fn round_seed(experiment_seed: u64, round: u64) -> u64 {
+        // splitmix of (seed, round)
+        let mut z = experiment_seed
+            .wrapping_add(round.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor;
+
+    #[test]
+    fn seed_derivation_is_shared_knowledge() {
+        // server and worker derive identical masks from the same seed
+        let a = mask_from_seed(12345, 1000, 50);
+        let b = mask_from_seed(12345, 1000, 50);
+        assert_eq!(a, b);
+        let c = mask_from_seed(12346, 1000, 50);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn from_frac_clamps() {
+        assert_eq!(RandK::from_frac(11_809, 0.01).k, 118);
+        assert_eq!(RandK::from_frac(10, 0.001).k, 1);
+        assert_eq!(RandK::from_frac(10, 1.0).k, 10);
+    }
+
+    #[test]
+    fn unbiasedness_of_reconstruction() {
+        // E[g_tilde] = g over many masks (paper §2, RandK law).
+        let d = 64;
+        let k = 16;
+        let rk = RandK { d, k };
+        let mut rng = Pcg64::new(9, 9);
+        let g: Vec<f32> = (0..d).map(|i| (i as f32 * 0.37).sin()).collect();
+        let trials = 6000;
+        let mut acc = vec![0f64; d];
+        for _ in 0..trials {
+            let m = rk.draw(&mut rng);
+            let rec = m.reconstruct(&m.compress(&g));
+            for (a, v) in acc.iter_mut().zip(&rec) {
+                *a += *v as f64;
+            }
+        }
+        for (i, a) in acc.iter().enumerate() {
+            let mean = a / trials as f64;
+            let se = (g[i].abs() as f64 + 0.05)
+                * ((d as f64 / k as f64 - 1.0) / trials as f64).sqrt();
+            assert!(
+                (mean - g[i] as f64).abs() < 6.0 * se,
+                "coord {i}: {mean} vs {}",
+                g[i]
+            );
+        }
+    }
+
+    #[test]
+    fn variance_bound_of_paper() {
+        // E||g_tilde - g||^2 <= (d/k - 1) ||g||^2
+        let d = 128;
+        let k = 32;
+        let rk = RandK { d, k };
+        let mut rng = Pcg64::new(10, 10);
+        let g: Vec<f32> = (0..d).map(|i| ((i * i) as f32).cos()).collect();
+        let gnorm = tensor::norm_sq(&g);
+        let trials = 3000;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let m = rk.draw(&mut rng);
+            let rec = m.reconstruct(&m.compress(&g));
+            acc += tensor::dist_sq(&rec, &g);
+        }
+        let mean = acc / trials as f64;
+        let bound = (d as f64 / k as f64 - 1.0) * gnorm;
+        assert!(mean <= bound * 1.05, "mean {mean} vs bound {bound}");
+        // and it should be a decent fraction of the bound for generic g
+        assert!(mean >= bound * 0.5, "mean {mean} vs bound {bound}");
+    }
+
+    #[test]
+    fn global_masks_share_subspace_local_do_not() {
+        // Lemma A.3 vs Lemma A.8 mechanics: under a shared mask, the
+        // average of reconstructions is supported on the mask; under local
+        // masks it generally is not.
+        let d = 32;
+        let k = 4;
+        let rk = RandK { d, k };
+        let g1: Vec<f32> = (0..d).map(|i| i as f32).collect();
+        let g2: Vec<f32> = (0..d).map(|i| (d - i) as f32).collect();
+
+        let shared = mask_from_seed(7, d, k);
+        let r1 = shared.reconstruct(&shared.compress(&g1));
+        let r2 = shared.reconstruct(&shared.compress(&g2));
+        let avg: Vec<f32> =
+            r1.iter().zip(&r2).map(|(a, b)| (a + b) / 2.0).collect();
+        let support: usize = avg.iter().filter(|v| **v != 0.0).count();
+        assert!(support <= k);
+
+        let mut rng = Pcg64::new(11, 11);
+        let m1 = rk.draw(&mut rng);
+        let m2 = rk.draw(&mut rng);
+        let r1 = m1.reconstruct(&m1.compress(&g1));
+        let r2 = m2.reconstruct(&m2.compress(&g2));
+        let avg: Vec<f32> =
+            r1.iter().zip(&r2).map(|(a, b)| (a + b) / 2.0).collect();
+        let support = avg.iter().filter(|v| **v != 0.0).count();
+        assert!(support > k, "local masks coincided (p ~ 1e-6)");
+    }
+
+    #[test]
+    fn round_seed_decorrelates_rounds() {
+        let s1 = RandK::round_seed(1, 0);
+        let s2 = RandK::round_seed(1, 1);
+        let s3 = RandK::round_seed(2, 0);
+        assert_ne!(s1, s2);
+        assert_ne!(s1, s3);
+    }
+}

@@ -1,0 +1,80 @@
+//! TopK — the canonical *biased* compressor, included as the Appendix-C /
+//! related-work baseline (RoSDHB-Local "lends itself to both biased and
+//! unbiased schemes", §3.3).
+//!
+//! TopK keeps the k largest-magnitude coordinates. It is **not** unbiased,
+//! so it must not be combined with the d/k unbiasing factor; reconstruction
+//! scatters the raw values.
+
+use super::Mask;
+
+#[derive(Clone, Debug)]
+pub struct TopK {
+    pub d: usize,
+    pub k: usize,
+}
+
+impl TopK {
+    pub fn from_frac(d: usize, k_frac: f64) -> Self {
+        let k = ((d as f64 * k_frac).round() as usize).clamp(1, d);
+        TopK { d, k }
+    }
+
+    /// Mask of the k largest |g_i| (ties broken by lower index, so the
+    /// result is deterministic).
+    pub fn mask_for(&self, g: &[f32]) -> Mask {
+        assert_eq!(g.len(), self.d);
+        let mut order: Vec<u32> = (0..self.d as u32).collect();
+        order.sort_by(|&a, &b| {
+            let ma = g[a as usize].abs();
+            let mb = g[b as usize].abs();
+            mb.partial_cmp(&ma).unwrap().then(a.cmp(&b))
+        });
+        Mask::new(self.d, order[..self.k].to_vec())
+    }
+
+    /// Biased reconstruction: scatter without scaling.
+    pub fn reconstruct(&self, mask: &Mask, values: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0; self.d];
+        for (&i, &v) in mask.idx.iter().zip(values) {
+            out[i as usize] = v;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor;
+
+    #[test]
+    fn keeps_largest_magnitudes() {
+        let g = vec![0.1, -5.0, 0.2, 3.0, -0.05];
+        let tk = TopK { d: 5, k: 2 };
+        let m = tk.mask_for(&g);
+        assert_eq!(m.idx, vec![1, 3]);
+        let rec = tk.reconstruct(&m, &m.compress(&g));
+        assert_eq!(rec, vec![0.0, -5.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_is_best_k_term_approximation() {
+        let g: Vec<f32> = (0..64).map(|i| ((i * 37 % 64) as f32) - 32.0).collect();
+        let tk = TopK { d: 64, k: 8 };
+        let m = tk.mask_for(&g);
+        let rec = tk.reconstruct(&m, &m.compress(&g));
+        let err_top = tensor::dist_sq(&rec, &g);
+        // any other 8-subset has error >= topk's
+        let m2 = Mask::new(64, (0..8).collect());
+        let rec2 = tk.reconstruct(&m2, &m2.compress(&g));
+        assert!(err_top <= tensor::dist_sq(&rec2, &g));
+    }
+
+    #[test]
+    fn deterministic_ties() {
+        let g = vec![1.0; 6];
+        let tk = TopK { d: 6, k: 3 };
+        assert_eq!(tk.mask_for(&g).idx, vec![0, 1, 2]);
+    }
+}

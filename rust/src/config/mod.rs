@@ -1,0 +1,481 @@
+//! Experiment configuration system.
+//!
+//! Configs are TOML-subset files (sections, `key = value`, strings, ints,
+//! floats, bools, inline arrays — parsed by [`toml::TomlDoc`], no external
+//! deps) plus `--key value` CLI overrides. [`ExperimentConfig`] is the
+//! validated, typed result consumed by [`crate::coordinator::Trainer`].
+
+pub mod toml;
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Which training algorithm runs (see `rust/src/algorithms/`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Algorithm 1 of the paper: global mask + server-side momentum.
+    RoSdhb,
+    /// §3.3: per-worker independent masks.
+    RoSdhbLocal,
+    /// Appendix B baseline (GD variant, p = 1).
+    ByzDashaPage,
+    /// SOTA-no-compression baseline [3]: robust DGD (+ optional momentum).
+    RobustDgd,
+    /// Appendix C: RoSDHB-Local generalized to any unbiased compressor
+    /// (see the `compressor` key).
+    RoSdhbU,
+    /// SOTA-no-robustness baseline [1]: DGD + RandK, plain averaging.
+    DgdRandK,
+    /// Plain distributed GD (no compression, no robustness).
+    Dgd,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "rosdhb" => Algorithm::RoSdhb,
+            "rosdhb-local" | "rosdhb_local" => Algorithm::RoSdhbLocal,
+            "rosdhb-u" | "rosdhb_u" => Algorithm::RoSdhbU,
+            "byz-dasha-page" | "dasha" => Algorithm::ByzDashaPage,
+            "robust-dgd" | "robustdgd" => Algorithm::RobustDgd,
+            "dgd-randk" | "dgdrandk" => Algorithm::DgdRandK,
+            "dgd" => Algorithm::Dgd,
+            other => return Err(format!("unknown algorithm '{other}'")),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::RoSdhb => "rosdhb",
+            Algorithm::RoSdhbLocal => "rosdhb-local",
+            Algorithm::RoSdhbU => "rosdhb-u",
+            Algorithm::ByzDashaPage => "byz-dasha-page",
+            Algorithm::RobustDgd => "robust-dgd",
+            Algorithm::DgdRandK => "dgd-randk",
+            Algorithm::Dgd => "dgd",
+        }
+    }
+}
+
+/// Gradient execution engine for honest workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// Pure-Rust model (`rust/src/model`) — parallel sweeps; numerics
+    /// cross-checked against the artifacts in `rust/tests/`.
+    Native,
+    /// AOT artifacts via PJRT (`rust/src/runtime`) — the three-layer path.
+    Pjrt,
+}
+
+impl Engine {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "native" => Engine::Native,
+            "pjrt" => Engine::Pjrt,
+            other => return Err(format!("unknown engine '{other}'")),
+        })
+    }
+}
+
+/// Dataset selection.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Dataset {
+    /// Deterministic MNIST-like synthetic task (DESIGN.md §1).
+    Synthetic,
+    /// Real MNIST from IDX files in the given directory.
+    MnistIdx(String),
+}
+
+/// Fully-resolved experiment description.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub algorithm: Algorithm,
+    pub engine: Engine,
+    pub dataset: Dataset,
+    /// Honest worker count (paper: 10).
+    pub n_honest: usize,
+    /// Byzantine worker count f (paper: 1,3,5,7,9).
+    pub n_byz: usize,
+    /// Aggregator spec, e.g. "cwtm", "nnm+cwtm", "geomed", "krum", "mean".
+    pub aggregator: String,
+    /// Attack spec, e.g. "alie", "ipm", "signflip", "labelflip", "noise",
+    /// "mimic", "none".
+    pub attack: String,
+    /// Compression ratio k/d in (0, 1]; 1.0 = no sparsification.
+    pub k_frac: f64,
+    /// Unbiased compressor for `rosdhb-u` (Appendix C): "randk",
+    /// "qsgd" or "qsgd:<levels>".
+    pub compressor: String,
+    /// Data partition across honest workers: "iid" (paper's setup) or
+    /// "dirichlet:<alpha>" (label-skew non-iid; small alpha ⇒ large (G,B)).
+    pub partition: String,
+    /// Momentum coefficient β ∈ [0, 1).
+    pub beta: f32,
+    /// Learning rate γ.
+    pub gamma: f32,
+    /// Multiplicative per-round decay of γ (1.0 = constant; e.g. 0.999).
+    pub gamma_decay: f32,
+    /// Clip ‖R^t‖ to this value before stepping (0 = no clipping).
+    pub clip: f32,
+    /// Total rounds T.
+    pub rounds: usize,
+    /// Mini-batch size per worker per round (paper: 60). 0 = full batch.
+    pub batch: usize,
+    /// Target test accuracy τ (paper: 0.85); reaching it is recorded but
+    /// does not stop training unless `stop_at_tau`.
+    pub tau: f64,
+    pub stop_at_tau: bool,
+    /// Evaluate test accuracy every this many rounds.
+    pub eval_every: usize,
+    /// Root seed; all randomness derives from it.
+    pub seed: u64,
+    /// Artifacts directory for the PJRT engine.
+    pub artifacts_dir: String,
+    /// Optional CSV output path for per-round metrics.
+    pub csv_out: Option<String>,
+    /// Record Lyapunov diagnostics (δᵗ, Υᵗ) every eval (costs one extra
+    /// full-gradient pass per honest worker).
+    pub lyapunov: bool,
+    /// Train-set size cap (synthetic: 60_000 like MNIST; tests use less).
+    pub train_size: usize,
+    pub test_size: usize,
+}
+
+impl ExperimentConfig {
+    /// Paper's Figure-1 setup with defaults: 10 honest workers, ALIE,
+    /// CWTM, β=0.9, B=60, τ=0.85.
+    pub fn default_mnist_like() -> Self {
+        ExperimentConfig {
+            algorithm: Algorithm::RoSdhb,
+            engine: Engine::Native,
+            dataset: Dataset::Synthetic,
+            n_honest: 10,
+            n_byz: 3,
+            aggregator: "nnm+cwtm".into(),
+            attack: "alie".into(),
+            k_frac: 0.1,
+            compressor: "qsgd:4".into(),
+            partition: "iid".into(),
+            beta: 0.9,
+            gamma: 0.05,
+            gamma_decay: 1.0,
+            clip: 0.0,
+            rounds: 5000,
+            batch: 60,
+            tau: 0.85,
+            stop_at_tau: true,
+            eval_every: 10,
+            seed: 1,
+            artifacts_dir: "artifacts".into(),
+            csv_out: None,
+            lyapunov: false,
+            train_size: 60_000,
+            test_size: 10_000,
+        }
+    }
+
+    /// Total workers n = |H| + f.
+    pub fn n_total(&self) -> usize {
+        self.n_honest + self.n_byz
+    }
+
+    /// Build from a parsed TOML document (all keys optional, defaults from
+    /// [`Self::default_mnist_like`]). Keys live at top level or under
+    /// `[experiment]`.
+    pub fn from_toml(doc: &toml::TomlDoc) -> Result<Self, String> {
+        let mut c = Self::default_mnist_like();
+        let get = |k: &str| {
+            doc.get("experiment", k).or_else(|| doc.get("", k))
+        };
+        if let Some(v) = get("algorithm") {
+            c.algorithm = Algorithm::parse(v.as_str().ok_or("algorithm: want string")?)?;
+        }
+        if let Some(v) = get("engine") {
+            c.engine = Engine::parse(v.as_str().ok_or("engine: want string")?)?;
+        }
+        if let Some(v) = get("dataset") {
+            let s = v.as_str().ok_or("dataset: want string")?;
+            c.dataset = if s == "synthetic" {
+                Dataset::Synthetic
+            } else {
+                Dataset::MnistIdx(s.to_string())
+            };
+        }
+        macro_rules! num {
+            ($key:expr, $field:expr, $ty:ty) => {
+                if let Some(v) = get($key) {
+                    $field = v
+                        .as_f64()
+                        .ok_or(concat!($key, ": want number"))? as $ty;
+                }
+            };
+        }
+        num!("n_honest", c.n_honest, usize);
+        num!("n_byz", c.n_byz, usize);
+        num!("k_frac", c.k_frac, f64);
+        num!("beta", c.beta, f32);
+        num!("gamma", c.gamma, f32);
+        num!("gamma_decay", c.gamma_decay, f32);
+        num!("clip", c.clip, f32);
+        num!("rounds", c.rounds, usize);
+        num!("batch", c.batch, usize);
+        num!("tau", c.tau, f64);
+        num!("eval_every", c.eval_every, usize);
+        num!("seed", c.seed, u64);
+        num!("train_size", c.train_size, usize);
+        num!("test_size", c.test_size, usize);
+        if let Some(v) = get("compressor") {
+            c.compressor = v.as_str().ok_or("compressor: want string")?.into();
+        }
+        if let Some(v) = get("partition") {
+            c.partition = v.as_str().ok_or("partition: want string")?.into();
+        }
+        if let Some(v) = get("aggregator") {
+            c.aggregator = v.as_str().ok_or("aggregator: want string")?.into();
+        }
+        if let Some(v) = get("attack") {
+            c.attack = v.as_str().ok_or("attack: want string")?.into();
+        }
+        if let Some(v) = get("artifacts_dir") {
+            c.artifacts_dir =
+                v.as_str().ok_or("artifacts_dir: want string")?.into();
+        }
+        if let Some(v) = get("csv_out") {
+            c.csv_out = Some(v.as_str().ok_or("csv_out: want string")?.into());
+        }
+        if let Some(v) = get("stop_at_tau") {
+            c.stop_at_tau = v.as_bool().ok_or("stop_at_tau: want bool")?;
+        }
+        if let Some(v) = get("lyapunov") {
+            c.lyapunov = v.as_bool().ok_or("lyapunov: want bool")?;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Apply a `--key value` CLI override.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        let doc = toml::TomlDoc::parse(&format!(
+            "{key} = {}",
+            toml::quote_if_needed(value)
+        ))?;
+        let mut merged = self.clone();
+        // Re-run from_toml-style assignment for the single key by building
+        // a one-key doc; simplest correct path.
+        let updated = ExperimentConfig::from_toml_with_base(&doc, merged.clone())?;
+        merged = updated;
+        *self = merged;
+        Ok(())
+    }
+
+    fn from_toml_with_base(
+        doc: &toml::TomlDoc,
+        base: ExperimentConfig,
+    ) -> Result<Self, String> {
+        // Same key handling as from_toml, but starting from `base`.
+        let mut c = base;
+        let tmp = ExperimentConfig::from_toml(doc)?;
+        // from_toml starts from defaults; copy over only keys present.
+        for (sect, key) in doc.keys() {
+            let _ = sect;
+            match key.as_str() {
+                "algorithm" => c.algorithm = tmp.algorithm,
+                "engine" => c.engine = tmp.engine,
+                "dataset" => c.dataset = tmp.dataset.clone(),
+                "n_honest" => c.n_honest = tmp.n_honest,
+                "n_byz" => c.n_byz = tmp.n_byz,
+                "aggregator" => c.aggregator = tmp.aggregator.clone(),
+                "compressor" => c.compressor = tmp.compressor.clone(),
+                "partition" => c.partition = tmp.partition.clone(),
+                "attack" => c.attack = tmp.attack.clone(),
+                "k_frac" => c.k_frac = tmp.k_frac,
+                "beta" => c.beta = tmp.beta,
+                "gamma" => c.gamma = tmp.gamma,
+                "gamma_decay" => c.gamma_decay = tmp.gamma_decay,
+                "clip" => c.clip = tmp.clip,
+                "rounds" => c.rounds = tmp.rounds,
+                "batch" => c.batch = tmp.batch,
+                "tau" => c.tau = tmp.tau,
+                "stop_at_tau" => c.stop_at_tau = tmp.stop_at_tau,
+                "eval_every" => c.eval_every = tmp.eval_every,
+                "seed" => c.seed = tmp.seed,
+                "artifacts_dir" => c.artifacts_dir = tmp.artifacts_dir.clone(),
+                "csv_out" => c.csv_out = tmp.csv_out.clone(),
+                "lyapunov" => c.lyapunov = tmp.lyapunov,
+                "train_size" => c.train_size = tmp.train_size,
+                "test_size" => c.test_size = tmp.test_size,
+                other => return Err(format!("unknown config key '{other}'")),
+            }
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Invariants every run must satisfy (paper §2: f < n/2 etc.).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_honest == 0 {
+            return Err("n_honest must be > 0".into());
+        }
+        if self.n_byz * 2 >= self.n_total() && self.n_byz > 0 {
+            return Err(format!(
+                "f={} >= n/2={} — no aggregation rule can be robust (§2)",
+                self.n_byz,
+                self.n_total() as f64 / 2.0
+            ));
+        }
+        if !(self.k_frac > 0.0 && self.k_frac <= 1.0) {
+            return Err("k_frac must be in (0, 1]".into());
+        }
+        if !(0.0..1.0).contains(&(self.beta as f64)) {
+            return Err("beta must be in [0, 1)".into());
+        }
+        if self.gamma <= 0.0 {
+            return Err("gamma must be > 0".into());
+        }
+        if !(self.gamma_decay > 0.0 && self.gamma_decay <= 1.0) {
+            return Err("gamma_decay must be in (0, 1]".into());
+        }
+        if self.clip < 0.0 {
+            return Err("clip must be >= 0".into());
+        }
+        if self.rounds == 0 {
+            return Err("rounds must be > 0".into());
+        }
+        match parse_partition(&self.partition) {
+            Ok(_) => {}
+            Err(e) => return Err(e),
+        }
+        if self.algorithm == Algorithm::RoSdhbU {
+            // fail early on a bad compressor spec (build would panic)
+            crate::compression::qsgd::parse_spec(&self.compressor, 8, self.k_frac)
+                .map(|_| ())?;
+        }
+        if self.eval_every == 0 {
+            return Err("eval_every must be > 0".into());
+        }
+        Ok(())
+    }
+
+    /// JSON summary embedded in reports.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("algorithm".into(), Json::Str(self.algorithm.name().into()));
+        m.insert(
+            "engine".into(),
+            Json::Str(
+                match self.engine {
+                    Engine::Native => "native",
+                    Engine::Pjrt => "pjrt",
+                }
+                .into(),
+            ),
+        );
+        m.insert("n_honest".into(), Json::Num(self.n_honest as f64));
+        m.insert("n_byz".into(), Json::Num(self.n_byz as f64));
+        m.insert("aggregator".into(), Json::Str(self.aggregator.clone()));
+        m.insert("attack".into(), Json::Str(self.attack.clone()));
+        m.insert("k_frac".into(), Json::Num(self.k_frac));
+        m.insert("beta".into(), Json::Num(self.beta as f64));
+        m.insert("gamma".into(), Json::Num(self.gamma as f64));
+        m.insert("rounds".into(), Json::Num(self.rounds as f64));
+        m.insert("batch".into(), Json::Num(self.batch as f64));
+        m.insert("tau".into(), Json::Num(self.tau));
+        m.insert("seed".into(), Json::Num(self.seed as f64));
+        Json::Obj(m)
+    }
+}
+
+/// Parse a partition spec into `None` (iid) or `Some(alpha)` (Dirichlet).
+pub fn parse_partition(spec: &str) -> Result<Option<f64>, String> {
+    let spec = spec.to_ascii_lowercase();
+    if spec == "iid" {
+        return Ok(None);
+    }
+    if let Some(arg) = spec.strip_prefix("dirichlet:") {
+        let a: f64 = arg
+            .parse()
+            .map_err(|_| format!("bad dirichlet alpha '{arg}'"))?;
+        if a <= 0.0 {
+            return Err("dirichlet alpha must be > 0".into());
+        }
+        return Ok(Some(a));
+    }
+    Err(format!("unknown partition '{spec}' (iid | dirichlet:<alpha>)"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        ExperimentConfig::default_mnist_like().validate().unwrap();
+    }
+
+    #[test]
+    fn parse_full_config() {
+        let doc = toml::TomlDoc::parse(
+            r#"
+            [experiment]
+            algorithm = "rosdhb-local"
+            n_honest = 10
+            n_byz = 9
+            k_frac = 0.01
+            beta = 0.9
+            gamma = 0.1
+            attack = "alie"
+            aggregator = "nnm+cwtm"
+            rounds = 5000
+            stop_at_tau = true
+            "#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.algorithm, Algorithm::RoSdhbLocal);
+        assert_eq!(c.n_byz, 9);
+        assert_eq!(c.k_frac, 0.01);
+    }
+
+    #[test]
+    fn rejects_majority_byzantine() {
+        let mut c = ExperimentConfig::default_mnist_like();
+        c.n_honest = 5;
+        c.n_byz = 5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_bad_kfrac_beta() {
+        let mut c = ExperimentConfig::default_mnist_like();
+        c.k_frac = 0.0;
+        assert!(c.validate().is_err());
+        c.k_frac = 0.5;
+        c.beta = 1.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn cli_override_roundtrip() {
+        let mut c = ExperimentConfig::default_mnist_like();
+        c.set("k_frac", "0.05").unwrap();
+        assert_eq!(c.k_frac, 0.05);
+        c.set("algorithm", "dasha").unwrap();
+        assert_eq!(c.algorithm, Algorithm::ByzDashaPage);
+        assert!(c.set("nonsense_key", "1").is_err());
+    }
+
+    #[test]
+    fn algorithm_names_roundtrip() {
+        for a in [
+            Algorithm::RoSdhb,
+            Algorithm::RoSdhbLocal,
+            Algorithm::RoSdhbU,
+            Algorithm::ByzDashaPage,
+            Algorithm::RobustDgd,
+            Algorithm::DgdRandK,
+            Algorithm::Dgd,
+        ] {
+            assert_eq!(Algorithm::parse(a.name()).unwrap(), a);
+        }
+    }
+}

@@ -1,0 +1,257 @@
+//! TOML-subset parser for experiment configs.
+//!
+//! Supported grammar (everything our configs use — see `configs/*.toml`):
+//!
+//! ```text
+//! # comment
+//! [section]
+//! key = "string" | 123 | 4.5 | true | false | [v, v, ...]
+//! ```
+//!
+//! Not supported (by design): nested tables, dotted keys, dates,
+//! multi-line strings. Unknown syntax is a hard error, not a silent skip.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Int(i) => Some(*i as f64),
+            TomlValue::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: `(section, key) -> value`. Top-level keys use
+/// section `""`.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    entries: BTreeMap<(String, String), TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<TomlDoc, String> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(lineno, "unterminated section"))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| err(lineno, "expected `key = value`"))?;
+            let key = line[..eq].trim();
+            if key.is_empty()
+                || !key
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+            {
+                return Err(err(lineno, &format!("bad key '{key}'")));
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|e| err(lineno, &e))?;
+            doc.entries
+                .insert((section.clone(), key.to_string()), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn parse_file(path: &str) -> Result<TomlDoc, String> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {path}: {e}"))?;
+        Self::parse(&src)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.entries.get(&(section.to_string(), key.to_string()))
+    }
+
+    /// All (section, key) pairs present.
+    pub fn keys(&self) -> impl Iterator<Item = &(String, String)> {
+        self.entries.keys()
+    }
+}
+
+fn err(lineno: usize, msg: &str) -> String {
+    format!("config line {}: {msg}", lineno + 1)
+}
+
+/// Strip a `#` comment that is not inside a string literal.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quote in string".into());
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let mut out = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                out.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Arr(out));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+/// Split an array body on commas (no nested arrays in our subset, but keep
+/// string-awareness).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+/// Quote a CLI-provided value unless it already parses as a bare TOML value
+/// (used by `ExperimentConfig::set`).
+pub fn quote_if_needed(v: &str) -> String {
+    if parse_value(v).is_ok() {
+        v.to_string()
+    } else {
+        format!("\"{v}\"")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+            top = 1
+            [a]
+            s = "hello" # comment
+            i = -42
+            f = 0.05
+            b = true
+            arr = [0.01, 0.05, 0.1]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top"), Some(&TomlValue::Int(1)));
+        assert_eq!(doc.get("a", "s").unwrap().as_str(), Some("hello"));
+        assert_eq!(doc.get("a", "i").unwrap().as_f64(), Some(-42.0));
+        assert_eq!(doc.get("a", "f").unwrap().as_f64(), Some(0.05));
+        assert_eq!(doc.get("a", "b").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("a", "arr").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = TomlDoc::parse(r##"k = "a#b""##).unwrap();
+        assert_eq!(doc.get("", "k").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_are_loud() {
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("k = ").is_err());
+        assert!(TomlDoc::parse("bad key! = 1").is_err());
+        assert!(TomlDoc::parse("k = \"open").is_err());
+    }
+
+    #[test]
+    fn empty_array() {
+        let doc = TomlDoc::parse("a = []").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn quote_if_needed_behaviour() {
+        assert_eq!(quote_if_needed("0.5"), "0.5");
+        assert_eq!(quote_if_needed("true"), "true");
+        assert_eq!(quote_if_needed("alie"), "\"alie\"");
+    }
+}

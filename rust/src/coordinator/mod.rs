@@ -1,0 +1,528 @@
+//! The L3 coordinator — the paper's system contribution as a runnable
+//! server.
+//!
+//! [`Trainer`] owns the model parameters, the worker pool, the algorithm
+//! state machine, the byte-metered transport and the metrics log, and
+//! drives the synchronous round loop of Algorithm 1:
+//!
+//! ```text
+//! per round t:
+//!   broadcast θ_{t-1} (+ global mask seed)        — algorithm meters it
+//!   workers: g_i = ∇L_i(θ_{t-1}) on a fresh batch — engine (PJRT/native)
+//!   Byzantine payload injection                    — attacks
+//!   server: reconstruct → momentum → F(m_1..m_n)   — algorithm
+//!   θ_t = θ_{t-1} − γ R^t
+//!   every eval_every rounds: test accuracy, τ-crossing, Lyapunov diag
+//! ```
+
+use crate::algorithms::{self, Algorithm, RoundEnv};
+use crate::attacks::{self, AttackKind};
+use crate::aggregators::{self, Aggregator};
+use crate::compression::RandK;
+use crate::config::{Dataset as DatasetCfg, Engine, ExperimentConfig};
+use crate::data::{self, Dataset};
+use crate::diagnostics;
+use crate::metrics::{MetricsLog, RoundRecord};
+use crate::model::MlpSpec;
+use crate::prng::Pcg64;
+use crate::tensor;
+use crate::transport::ByteMeter;
+use crate::worker::{GradEngine, HonestWorker, NativeEngine, PjrtEngine};
+use anyhow::{anyhow, Result};
+
+/// End-of-run summary (plus the full per-round log).
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub algorithm: String,
+    pub rounds_run: usize,
+    /// First round at which test accuracy ≥ τ (None if never reached).
+    pub rounds_to_tau: Option<usize>,
+    /// Cumulative uplink bytes at the τ-crossing (the Fig. 1 y-axis).
+    pub uplink_bytes_to_tau: Option<u64>,
+    pub uplink_bytes: u64,
+    pub downlink_bytes: u64,
+    pub best_acc: Option<f64>,
+    pub final_loss: Option<f64>,
+    pub log: MetricsLog,
+}
+
+/// The coordinator.
+pub struct Trainer {
+    pub cfg: ExperimentConfig,
+    engine: Box<dyn GradEngine>,
+    honest: Vec<HonestWorker>,
+    /// Data-level Byzantine workers (label-flip); empty for payload
+    /// attacks.
+    byz_data_workers: Vec<HonestWorker>,
+    algorithm: Box<dyn Algorithm>,
+    aggregator: Box<dyn Aggregator>,
+    attack: AttackKind,
+    pub params: Vec<f32>,
+    test_set: Dataset,
+    meter: ByteMeter,
+    rng: Pcg64,
+    pub log: MetricsLog,
+    k: usize,
+    /// Set when loss/update became non-finite; `run()` stops gracefully.
+    pub diverged: bool,
+    /// Per-worker engines for the parallel native gradient path (§Perf);
+    /// empty under PJRT (the client is not Send) — sequential there.
+    par_engines: Vec<NativeEngine>,
+}
+
+impl Trainer {
+    /// Build everything from a validated config.
+    pub fn from_config(cfg: &ExperimentConfig) -> Result<Self> {
+        cfg.validate().map_err(|e| anyhow!(e))?;
+        let root = Pcg64::new(cfg.seed, 0);
+
+        // --- engine
+        let mut engine: Box<dyn GradEngine> = match cfg.engine {
+            Engine::Native => {
+                Box::new(NativeEngine::new(MlpSpec::default(), cfg.batch.max(1)))
+            }
+            Engine::Pjrt => Box::new(PjrtEngine::load(&cfg.artifacts_dir)?),
+        };
+        let d = engine.p();
+
+        // --- data
+        let (train, test) = match &cfg.dataset {
+            DatasetCfg::Synthetic => data::generate_synthetic_split(
+                cfg.seed ^ 0xdada,
+                cfg.train_size,
+                cfg.test_size,
+            ),
+            DatasetCfg::MnistIdx(dir) => data::load_mnist_idx(dir)
+                .map_err(|e| anyhow!("mnist: {e}"))?,
+        };
+        let mut part_rng = root.derive(0x7061_7274, 0, 0);
+        let shards = match crate::config::parse_partition(&cfg.partition)
+            .map_err(|e| anyhow!(e))?
+        {
+            None => data::partition_iid(&train, cfg.n_honest, &mut part_rng),
+            Some(alpha) => data::partition_dirichlet(
+                &train,
+                cfg.n_honest,
+                alpha,
+                &mut part_rng,
+            ),
+        };
+        let honest: Vec<HonestWorker> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| HonestWorker::new(i, s, &root, false))
+            .collect();
+
+        // --- attack & (for label-flip) poisoned byzantine workers
+        let attack = attacks::parse_spec(&cfg.attack).map_err(|e| anyhow!(e))?;
+        let byz_data_workers = if matches!(attack, AttackKind::LabelFlip) {
+            (0..cfg.n_byz)
+                .map(|j| {
+                    // each poisoned worker clones an honest shard
+                    let shard = honest[j % cfg.n_honest].shard.clone();
+                    HonestWorker::new(cfg.n_honest + j, shard, &root, true)
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+
+        let aggregator = aggregators::parse_spec(&cfg.aggregator, cfg.n_byz)
+            .map_err(|e| anyhow!(e))?;
+        let algorithm = algorithms::build(cfg, d);
+        let params = engine.init_params(cfg.seed ^ 0x1a17)?;
+        let k = RandK::from_frac(d, cfg.k_frac).k;
+
+        // parallel gradient engines (native only; bit-identical to the
+        // sequential path since each worker's RNG stream is independent)
+        let n_grad_workers = honest.len() + byz_data_workers.len();
+        let par_engines = if cfg.engine == Engine::Native && n_grad_workers > 1
+        {
+            (0..n_grad_workers)
+                .map(|_| NativeEngine::new(MlpSpec::default(), cfg.batch.max(1)))
+                .collect()
+        } else {
+            Vec::new()
+        };
+
+        Ok(Trainer {
+            cfg: cfg.clone(),
+            engine,
+            honest,
+            byz_data_workers,
+            algorithm,
+            aggregator,
+            attack,
+            params,
+            test_set: test,
+            meter: ByteMeter::new(cfg.n_total()),
+            rng: root.derive(0x726f_756e, 1, 0),
+            log: MetricsLog::default(),
+            k,
+            diverged: false,
+            par_engines,
+        })
+    }
+
+    /// Robustness coefficient bound of the configured aggregator at (n,f).
+    pub fn kappa_bound(&self) -> f64 {
+        self.aggregator
+            .kappa(self.cfg.n_total(), self.cfg.n_byz)
+    }
+
+    /// One synchronous round; returns (mean honest loss, ‖R‖).
+    pub fn step(&mut self, t: u64) -> Result<(f64, f64)> {
+        // workers compute gradients (PJRT sequential; native in parallel —
+        // identical numerics, each worker has its own RNG stream/engine)
+        let nh = self.honest.len();
+        let (mut honest_grads, mut byz_grads, mean_loss);
+        if self.par_engines.is_empty() {
+            honest_grads = Vec::with_capacity(nh);
+            let mut loss_sum = 0.0f64;
+            for w in self.honest.iter_mut() {
+                let (loss, g) = w.compute_grad(
+                    self.engine.as_mut(),
+                    &self.params,
+                    self.cfg.batch,
+                )?;
+                loss_sum += loss as f64;
+                honest_grads.push(g);
+            }
+            mean_loss = loss_sum / nh as f64;
+            byz_grads = Vec::with_capacity(self.byz_data_workers.len());
+            for w in self.byz_data_workers.iter_mut() {
+                let (_, g) = w.compute_grad(
+                    self.engine.as_mut(),
+                    &self.params,
+                    self.cfg.batch,
+                )?;
+                byz_grads.push(g);
+            }
+        } else {
+            let params = &self.params;
+            let batch = self.cfg.batch;
+            let (h_eng, b_eng) = self.par_engines.split_at_mut(nh);
+            let honest = &mut self.honest;
+            let byz = &mut self.byz_data_workers;
+            let (h_res, b_res) = std::thread::scope(|s| {
+                let hs: Vec<_> = honest
+                    .iter_mut()
+                    .zip(h_eng.iter_mut())
+                    .map(|(w, e)| {
+                        s.spawn(move || w.compute_grad(e, params, batch))
+                    })
+                    .collect();
+                let bs: Vec<_> = byz
+                    .iter_mut()
+                    .zip(b_eng.iter_mut())
+                    .map(|(w, e)| {
+                        s.spawn(move || w.compute_grad(e, params, batch))
+                    })
+                    .collect();
+                let h: Vec<_> =
+                    hs.into_iter().map(|h| h.join().unwrap()).collect();
+                let b: Vec<_> =
+                    bs.into_iter().map(|h| h.join().unwrap()).collect();
+                (h, b)
+            });
+            let mut loss_sum = 0.0f64;
+            honest_grads = Vec::with_capacity(nh);
+            for r in h_res {
+                let (loss, g) = r?;
+                loss_sum += loss as f64;
+                honest_grads.push(g);
+            }
+            mean_loss = loss_sum / nh as f64;
+            byz_grads = Vec::with_capacity(b_eng.len());
+            for r in b_res {
+                byz_grads.push(r?.1);
+            }
+        }
+
+        let mut env = RoundEnv {
+            d: self.params.len(),
+            n_honest: self.cfg.n_honest,
+            n_byz: self.cfg.n_byz,
+            seed: self.cfg.seed,
+            k: self.k,
+            beta: self.cfg.beta,
+            aggregator: self.aggregator.as_ref(),
+            attack: &self.attack,
+            meter: &mut self.meter,
+            rng: &mut self.rng,
+        };
+        let mut update = self
+            .algorithm
+            .round(t, &honest_grads, &byz_grads, &mut env);
+        // optional update clipping (production stabilizer; off by default)
+        if self.cfg.clip > 0.0 {
+            let n = tensor::norm(&update);
+            if n.is_finite() && n > self.cfg.clip as f64 {
+                tensor::scale(&mut update, self.cfg.clip / n as f32);
+            }
+        }
+
+        // Lyapunov diagnostics (against the sampled honest mean gradient).
+        let lyapunov = if self.cfg.lyapunov {
+            self.algorithm.momenta().map(|m| {
+                let refs: Vec<&[f32]> = m[..self.cfg.n_honest]
+                    .iter()
+                    .map(|v| v.as_slice())
+                    .collect();
+                let grefs: Vec<&[f32]> =
+                    honest_grads.iter().map(|g| g.as_slice()).collect();
+                let gh = tensor::mean(&grefs);
+                let snap = diagnostics::snapshot(&refs, &gh);
+                (snap.deviation_sq, snap.drift)
+            })
+        } else {
+            None
+        };
+
+        // θ_t = θ_{t-1} − γ_t R^t  (γ_t = γ·decay^t; decay=1 ⇒ constant)
+        let gamma_t = if self.cfg.gamma_decay >= 1.0 {
+            self.cfg.gamma
+        } else {
+            self.cfg.gamma * self.cfg.gamma_decay.powi(t as i32)
+        };
+        tensor::axpy(&mut self.params, -gamma_t, &update);
+        let update_norm = tensor::norm(&update);
+        if !update_norm.is_finite() || !mean_loss.is_finite() {
+            self.diverged = true;
+        }
+
+        // bookkeeping row (test_acc filled by run())
+        self.log.push(RoundRecord {
+            round: t as usize,
+            train_loss: mean_loss,
+            update_norm,
+            test_acc: None,
+            uplink_bytes: self.meter.uplink,
+            downlink_bytes: self.meter.downlink,
+            lyapunov,
+        });
+        Ok((mean_loss, update_norm))
+    }
+
+    /// Current test accuracy.
+    pub fn evaluate(&mut self) -> Result<f64> {
+        self.engine.accuracy(&self.params, &self.test_set)
+    }
+
+    /// Fresh honest batch gradients at the current model (diagnostics /
+    /// (G,B) estimation; does not advance training state).
+    pub fn probe_honest_gradients(&mut self) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(self.honest.len());
+        for w in self.honest.iter_mut() {
+            let (_, g) =
+                w.compute_grad(self.engine.as_mut(), &self.params, self.cfg.batch)?;
+            out.push(g);
+        }
+        Ok(out)
+    }
+
+    /// Run the full loop per the config; returns the report.
+    pub fn run(&mut self) -> Result<RunReport> {
+        let mut reached: Option<(usize, u64)> = None;
+        for t in 1..=self.cfg.rounds as u64 {
+            self.step(t)?;
+            if self.diverged {
+                eprintln!(
+                    "rosdhb: run diverged at round {t} (non-finite loss/update) — stopping"
+                );
+                break;
+            }
+            if t as usize % self.cfg.eval_every == 0
+                || t as usize == self.cfg.rounds
+            {
+                let acc = self.evaluate()?;
+                if let Some(row) = self.log.rows.last_mut() {
+                    row.test_acc = Some(acc);
+                }
+                if acc >= self.cfg.tau && reached.is_none() {
+                    reached = Some((t as usize, self.meter.uplink));
+                    if self.cfg.stop_at_tau {
+                        break;
+                    }
+                }
+            }
+        }
+        if let Some(path) = &self.cfg.csv_out {
+            self.log.save_csv(path)?;
+        }
+        Ok(RunReport {
+            algorithm: self.algorithm.name().to_string(),
+            rounds_run: self.log.rows.len(),
+            rounds_to_tau: reached.map(|(r, _)| r),
+            uplink_bytes_to_tau: reached.map(|(_, b)| b),
+            uplink_bytes: self.meter.uplink,
+            downlink_bytes: self.meter.downlink,
+            best_acc: self.log.best_acc(),
+            final_loss: self.log.final_loss(),
+            log: self.log.clone(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        let mut c = ExperimentConfig::default_mnist_like();
+        c.train_size = 600;
+        c.test_size = 200;
+        c.rounds = 30;
+        c.eval_every = 10;
+        c.n_honest = 4;
+        c.n_byz = 1;
+        c.batch = 30;
+        c.gamma = 0.2;
+        c.k_frac = 0.1;
+        c.stop_at_tau = false;
+        c.aggregator = "cwtm".into();
+        c
+    }
+
+    #[test]
+    fn trainer_builds_and_steps() {
+        let mut t = Trainer::from_config(&tiny_cfg()).unwrap();
+        let (l1, _) = t.step(1).unwrap();
+        let (l2, _) = t.step(2).unwrap();
+        assert!(l1.is_finite() && l2.is_finite());
+        assert!(t.meter.uplink > 0 && t.meter.downlink > 0);
+    }
+
+    #[test]
+    fn training_reduces_loss_under_attack() {
+        let mut cfg = tiny_cfg();
+        cfg.rounds = 120;
+        cfg.attack = "alie".into();
+        cfg.aggregator = "nnm+cwtm".into();
+        let mut t = Trainer::from_config(&cfg).unwrap();
+        let report = t.run().unwrap();
+        let first = report.log.rows.first().unwrap().train_loss;
+        let last = report.final_loss.unwrap();
+        assert!(
+            last < 0.8 * first,
+            "loss should fall: {first} -> {last}"
+        );
+    }
+
+    #[test]
+    fn deterministic_across_identical_runs() {
+        let cfg = tiny_cfg();
+        let r1 = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        let r2 = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        assert_eq!(r1.final_loss, r2.final_loss);
+        assert_eq!(r1.uplink_bytes, r2.uplink_bytes);
+    }
+
+    #[test]
+    fn labelflip_builds_poisoned_workers() {
+        let mut cfg = tiny_cfg();
+        cfg.attack = "labelflip".into();
+        cfg.n_byz = 2;
+        let mut t = Trainer::from_config(&cfg).unwrap();
+        assert_eq!(t.byz_data_workers.len(), 2);
+        assert!(t.byz_data_workers.iter().all(|w| w.poisoned));
+        t.step(1).unwrap();
+    }
+
+    #[test]
+    fn lyapunov_rows_populated_when_enabled() {
+        let mut cfg = tiny_cfg();
+        cfg.lyapunov = true;
+        cfg.rounds = 3;
+        let mut t = Trainer::from_config(&cfg).unwrap();
+        t.step(1).unwrap();
+        assert!(t.log.rows[0].lyapunov.is_some());
+        let (dev, drift) = t.log.rows[0].lyapunov.unwrap();
+        assert!(dev.is_finite() && drift.is_finite());
+    }
+
+    #[test]
+    fn kappa_bound_reflects_aggregator() {
+        let mut cfg = tiny_cfg();
+        cfg.aggregator = "mean".into();
+        let t = Trainer::from_config(&cfg).unwrap();
+        assert!(t.kappa_bound().is_infinite());
+        cfg.aggregator = "nnm+cwtm".into();
+        let t = Trainer::from_config(&cfg).unwrap();
+        assert!(t.kappa_bound().is_finite());
+    }
+
+    #[test]
+    fn parallel_and_sequential_grads_agree() {
+        // forcing the sequential path (drop par_engines) must reproduce
+        // the parallel path bit-for-bit — same RNG streams per worker.
+        let cfg = tiny_cfg();
+        let mut par = Trainer::from_config(&cfg).unwrap();
+        let mut seq = Trainer::from_config(&cfg).unwrap();
+        seq.par_engines.clear();
+        for t in 1..=5 {
+            let (lp, up) = par.step(t).unwrap();
+            let (ls, us) = seq.step(t).unwrap();
+            assert_eq!(lp, ls, "round {t} loss");
+            assert_eq!(up, us, "round {t} update norm");
+        }
+        assert_eq!(par.params, seq.params);
+    }
+
+    #[test]
+    fn clip_caps_update_norm() {
+        let mut cfg = tiny_cfg();
+        cfg.clip = 1e-3;
+        cfg.rounds = 3;
+        let mut t = Trainer::from_config(&cfg).unwrap();
+        let p0 = t.params.clone();
+        t.step(1).unwrap();
+        let moved: f64 = p0
+            .iter()
+            .zip(&t.params)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        assert!(
+            moved <= (cfg.clip * cfg.gamma) as f64 * 1.001,
+            "moved {moved}"
+        );
+    }
+
+    #[test]
+    fn gamma_decay_shrinks_steps() {
+        let mut cfg = tiny_cfg();
+        cfg.gamma_decay = 0.5;
+        cfg.attack = "none".into();
+        cfg.n_byz = 0;
+        let mut t = Trainer::from_config(&cfg).unwrap();
+        let p0 = t.params.clone();
+        t.step(1).unwrap();
+        let d1: f64 = crate::tensor::dist_sq(&p0, &t.params).sqrt();
+        for r in 2..=8 {
+            t.step(r).unwrap();
+        }
+        let p8 = t.params.clone();
+        t.step(9).unwrap();
+        let d9: f64 = crate::tensor::dist_sq(&p8, &t.params).sqrt();
+        // after 8 halvings the step is ~256x smaller (modulo momentum)
+        assert!(d9 < d1 * 0.1, "d1={d1} d9={d9}");
+    }
+
+    #[test]
+    fn bytes_scale_with_k_frac() {
+        let mut a = tiny_cfg();
+        a.k_frac = 0.01;
+        a.rounds = 5;
+        let mut b = a.clone();
+        b.k_frac = 1.0;
+        let ra = Trainer::from_config(&a).unwrap().run().unwrap();
+        let rb = Trainer::from_config(&b).unwrap().run().unwrap();
+        assert!(
+            ra.uplink_bytes * 20 < rb.uplink_bytes,
+            "k/d=0.01 uplink {} vs dense {}",
+            ra.uplink_bytes,
+            rb.uplink_bytes
+        );
+    }
+}

@@ -1,0 +1,245 @@
+//! Datasets: the MNIST-like synthetic task plus a real-MNIST IDX loader.
+//!
+//! The paper evaluates on MNIST (60k train / 10k test, 10 classes). This
+//! environment has no network access, so the default task is a calibrated
+//! synthetic stand-in (DESIGN.md §1): 10 class prototypes on a 14×14 grid,
+//! sampled with per-image translation jitter and pixel noise — learnable to
+//! ≳90% by the 11.8k-param model within a few hundred GD rounds, which is
+//! the regime the paper's τ=0.85 communication-cost experiment probes.
+//! If real MNIST IDX files are present, [`load_mnist_idx`] is preferred
+//! (28×28 inputs are 2×2-average-pooled down to 14×14).
+
+pub mod partition;
+pub mod synthetic_images;
+
+pub use partition::{partition_dirichlet, partition_iid, Shard};
+pub use synthetic_images::generate as generate_synthetic;
+pub use synthetic_images::generate_split as generate_synthetic_split;
+
+use crate::prng::Pcg64;
+
+/// Image side of the model input grid (D_IN = SIDE²  = 196).
+pub const SIDE: usize = 14;
+/// Flattened input dimension; must match `artifacts/meta.json: d_in`.
+pub const D_IN: usize = SIDE * SIDE;
+/// Number of classes.
+pub const CLASSES: usize = 10;
+
+/// A dense dataset of flat f32 images + byte labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Row-major `[n, D_IN]`.
+    pub images: Vec<f32>,
+    /// `[n]`, values in `0..CLASSES`.
+    pub labels: Vec<u8>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.images[i * D_IN..(i + 1) * D_IN]
+    }
+
+    /// Gather rows by index into a new dataset (used by partitioning).
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let mut images = Vec::with_capacity(idx.len() * D_IN);
+        let mut labels = Vec::with_capacity(idx.len());
+        for &i in idx {
+            images.extend_from_slice(self.image(i));
+            labels.push(self.labels[i]);
+        }
+        Dataset { images, labels }
+    }
+
+    /// Sample a batch of `b` examples (with replacement across rounds,
+    /// without replacement within a batch) into `(x, y_onehot)` buffers
+    /// shaped for the grad artifact: x `[b, D_IN]`, y `[b, CLASSES]`.
+    pub fn sample_batch(
+        &self,
+        rng: &mut Pcg64,
+        b: usize,
+        x: &mut Vec<f32>,
+        y1h: &mut Vec<f32>,
+    ) {
+        assert!(!self.is_empty());
+        x.clear();
+        y1h.clear();
+        x.reserve(b * D_IN);
+        y1h.resize(b * CLASSES, 0.0);
+        y1h.fill(0.0);
+        if b >= self.len() {
+            // full-batch: deterministic order (plus wraparound repeat)
+            for i in 0..b {
+                let j = i % self.len();
+                x.extend_from_slice(self.image(j));
+                y1h[i * CLASSES + self.labels[j] as usize] = 1.0;
+            }
+            return;
+        }
+        let picks = rng.sample_k_of(self.len(), b);
+        for (i, &j) in picks.iter().enumerate() {
+            x.extend_from_slice(self.image(j as usize));
+            y1h[i * CLASSES + self.labels[j as usize] as usize] = 1.0;
+        }
+    }
+
+    /// Class histogram (for partition-skew tests).
+    pub fn class_counts(&self) -> [usize; CLASSES] {
+        let mut c = [0usize; CLASSES];
+        for &l in &self.labels {
+            c[l as usize] += 1;
+        }
+        c
+    }
+}
+
+/// Load MNIST from IDX files (`train-images-idx3-ubyte` etc.) in `dir`,
+/// average-pooling 28×28 → 14×14 and scaling to [0, 1].
+pub fn load_mnist_idx(dir: &str) -> Result<(Dataset, Dataset), String> {
+    let train = load_split(dir, "train-images-idx3-ubyte", "train-labels-idx1-ubyte")?;
+    let test = load_split(dir, "t10k-images-idx3-ubyte", "t10k-labels-idx1-ubyte")?;
+    Ok((train, test))
+}
+
+fn load_split(dir: &str, img: &str, lab: &str) -> Result<Dataset, String> {
+    let ib = std::fs::read(format!("{dir}/{img}"))
+        .map_err(|e| format!("{dir}/{img}: {e}"))?;
+    let lb = std::fs::read(format!("{dir}/{lab}"))
+        .map_err(|e| format!("{dir}/{lab}: {e}"))?;
+    parse_idx_pair(&ib, &lb)
+}
+
+fn be32(b: &[u8], off: usize) -> u32 {
+    u32::from_be_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+/// Parse an IDX3 image file + IDX1 label file into a downsampled Dataset.
+pub fn parse_idx_pair(ib: &[u8], lb: &[u8]) -> Result<Dataset, String> {
+    if ib.len() < 16 || be32(ib, 0) != 0x0000_0803 {
+        return Err("bad idx3 magic".into());
+    }
+    if lb.len() < 8 || be32(lb, 0) != 0x0000_0801 {
+        return Err("bad idx1 magic".into());
+    }
+    let n = be32(ib, 4) as usize;
+    let rows = be32(ib, 8) as usize;
+    let cols = be32(ib, 12) as usize;
+    if rows != 28 || cols != 28 {
+        return Err(format!("want 28x28 MNIST, got {rows}x{cols}"));
+    }
+    if be32(lb, 4) as usize != n {
+        return Err("image/label count mismatch".into());
+    }
+    if ib.len() < 16 + n * rows * cols || lb.len() < 8 + n {
+        return Err("truncated idx payload".into());
+    }
+    let mut images = Vec::with_capacity(n * D_IN);
+    for i in 0..n {
+        let base = 16 + i * rows * cols;
+        for r in 0..SIDE {
+            for c in 0..SIDE {
+                // 2x2 average pool
+                let mut acc = 0u32;
+                for dr in 0..2 {
+                    for dc in 0..2 {
+                        acc += ib[base + (2 * r + dr) * cols + 2 * c + dc]
+                            as u32;
+                    }
+                }
+                images.push(acc as f32 / (4.0 * 255.0));
+            }
+        }
+    }
+    let labels = lb[8..8 + n].to_vec();
+    if labels.iter().any(|&l| l >= CLASSES as u8) {
+        return Err("label out of range".into());
+    }
+    Ok(Dataset { images, labels })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_idx(n: usize) -> (Vec<u8>, Vec<u8>) {
+        let mut ib = Vec::new();
+        ib.extend_from_slice(&0x0803u32.to_be_bytes());
+        ib.extend_from_slice(&(n as u32).to_be_bytes());
+        ib.extend_from_slice(&28u32.to_be_bytes());
+        ib.extend_from_slice(&28u32.to_be_bytes());
+        for i in 0..n {
+            ib.extend(std::iter::repeat((i * 7 % 256) as u8).take(28 * 28));
+        }
+        let mut lb = Vec::new();
+        lb.extend_from_slice(&0x0801u32.to_be_bytes());
+        lb.extend_from_slice(&(n as u32).to_be_bytes());
+        lb.extend((0..n).map(|i| (i % 10) as u8));
+        (ib, lb)
+    }
+
+    #[test]
+    fn idx_roundtrip_and_pooling() {
+        let (ib, lb) = tiny_idx(5);
+        let ds = parse_idx_pair(&ib, &lb).unwrap();
+        assert_eq!(ds.len(), 5);
+        assert_eq!(ds.image(0).len(), D_IN);
+        // constant image -> constant pooled value v/255
+        let v = ds.image(3)[0];
+        assert!((v - (3.0 * 7.0) / 255.0).abs() < 1e-6);
+        assert!(ds.image(3).iter().all(|&p| (p - v).abs() < 1e-6));
+        assert_eq!(ds.labels, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn idx_rejects_corrupt() {
+        let (ib, lb) = tiny_idx(3);
+        assert!(parse_idx_pair(&ib[..10], &lb).is_err());
+        let mut bad = ib.clone();
+        bad[3] = 0x99; // wrong magic
+        assert!(parse_idx_pair(&bad, &lb).is_err());
+        assert!(parse_idx_pair(&ib, &lb[..8]).is_err());
+    }
+
+    #[test]
+    fn batch_shapes_and_onehot() {
+        let ds = generate_synthetic(7, 200);
+        let mut rng = Pcg64::new(1, 1);
+        let (mut x, mut y) = (Vec::new(), Vec::new());
+        ds.sample_batch(&mut rng, 60, &mut x, &mut y);
+        assert_eq!(x.len(), 60 * D_IN);
+        assert_eq!(y.len(), 60 * CLASSES);
+        for row in y.chunks(CLASSES) {
+            assert_eq!(row.iter().filter(|&&v| v == 1.0).count(), 1);
+            assert_eq!(row.iter().filter(|&&v| v == 0.0).count(), 9);
+        }
+    }
+
+    #[test]
+    fn full_batch_when_b_exceeds_len() {
+        let ds = generate_synthetic(7, 10);
+        let mut rng = Pcg64::new(1, 1);
+        let (mut x, mut y) = (Vec::new(), Vec::new());
+        ds.sample_batch(&mut rng, 20, &mut x, &mut y);
+        assert_eq!(x.len(), 20 * D_IN);
+        // wraps deterministically
+        assert_eq!(&x[..D_IN], &x[10 * D_IN..11 * D_IN]);
+        let _ = y;
+    }
+
+    #[test]
+    fn subset_gathers() {
+        let ds = generate_synthetic(7, 50);
+        let sub = ds.subset(&[3, 7, 7]);
+        assert_eq!(sub.len(), 3);
+        assert_eq!(sub.labels[1], ds.labels[7]);
+        assert_eq!(sub.labels[2], ds.labels[7]);
+        assert_eq!(sub.image(0), ds.image(3));
+    }
+}

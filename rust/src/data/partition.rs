@@ -1,0 +1,170 @@
+//! Splitting a dataset across honest workers.
+//!
+//! The paper randomly permutes MNIST and splits it equally among the 10
+//! honest workers ("imperfect homogeneity"). [`partition_iid`] reproduces
+//! that. [`partition_dirichlet`] adds the standard label-skew
+//! non-iid partition used by the heterogeneity experiments
+//! (`examples/global_vs_local.rs`), controlled by concentration `alpha`
+//! (small alpha ⇒ strong skew ⇒ larger (G, B)).
+
+use super::Dataset;
+use crate::prng::Pcg64;
+
+/// One worker's local data split.
+pub type Shard = Dataset;
+
+/// Random equal split (paper's setup).
+pub fn partition_iid(ds: &Dataset, workers: usize, rng: &mut Pcg64) -> Vec<Shard> {
+    assert!(workers > 0);
+    let mut idx: Vec<usize> = (0..ds.len()).collect();
+    rng.shuffle(&mut idx);
+    let per = ds.len() / workers;
+    assert!(per > 0, "fewer samples than workers");
+    (0..workers)
+        .map(|w| ds.subset(&idx[w * per..(w + 1) * per]))
+        .collect()
+}
+
+/// Dirichlet(label-skew) split: for each class, worker shares are drawn
+/// from Dir(alpha, ..., alpha). Every worker is guaranteed >= 1 sample.
+pub fn partition_dirichlet(
+    ds: &Dataset,
+    workers: usize,
+    alpha: f64,
+    rng: &mut Pcg64,
+) -> Vec<Shard> {
+    assert!(workers > 0 && alpha > 0.0);
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); super::CLASSES];
+    for i in 0..ds.len() {
+        by_class[ds.labels[i] as usize].push(i);
+    }
+    let mut assign: Vec<Vec<usize>> = vec![Vec::new(); workers];
+    for class_idx in by_class.iter_mut() {
+        rng.shuffle(class_idx);
+        // Dirichlet via normalized Gamma(alpha) draws.
+        let mut w: Vec<f64> = (0..workers).map(|_| gamma(rng, alpha)).collect();
+        let sum: f64 = w.iter().sum();
+        for v in w.iter_mut() {
+            *v /= sum;
+        }
+        let mut start = 0usize;
+        for (widx, share) in w.iter().enumerate() {
+            let take = if widx + 1 == workers {
+                class_idx.len() - start
+            } else {
+                (share * class_idx.len() as f64).round() as usize
+            };
+            let take = take.min(class_idx.len() - start);
+            assign[widx].extend_from_slice(&class_idx[start..start + take]);
+            start += take;
+        }
+    }
+    // guarantee non-empty shards (steal one sample from the largest)
+    for w in 0..workers {
+        if assign[w].is_empty() {
+            let donor = (0..workers)
+                .max_by_key(|&i| assign[i].len())
+                .unwrap();
+            let item = assign[donor].pop().unwrap();
+            assign[w].push(item);
+        }
+    }
+    assign.iter().map(|idx| ds.subset(idx)).collect()
+}
+
+/// Marsaglia–Tsang Gamma(k, 1) sampler (with Johnk-style boost for k < 1).
+fn gamma(rng: &mut Pcg64, k: f64) -> f64 {
+    if k < 1.0 {
+        // Gamma(k) = Gamma(k+1) * U^{1/k}
+        let u = rng.next_f64().max(f64::MIN_POSITIVE);
+        return gamma(rng, k + 1.0) * u.powf(1.0 / k);
+    }
+    let d = k - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = rng.next_gaussian();
+        let v = 1.0 + c * x;
+        if v <= 0.0 {
+            continue;
+        }
+        let v3 = v * v * v;
+        let u = rng.next_f64();
+        if u < 1.0 - 0.0331 * x.powi(4)
+            || u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln())
+        {
+            return d * v3;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generate_synthetic;
+
+    #[test]
+    fn iid_split_is_partition() {
+        let ds = generate_synthetic(1, 1000);
+        let mut rng = Pcg64::new(2, 2);
+        let shards = partition_iid(&ds, 10, &mut rng);
+        assert_eq!(shards.len(), 10);
+        assert!(shards.iter().all(|s| s.len() == 100));
+    }
+
+    #[test]
+    fn iid_split_is_roughly_balanced_per_class() {
+        let ds = generate_synthetic(1, 5000);
+        let mut rng = Pcg64::new(3, 3);
+        let shards = partition_iid(&ds, 10, &mut rng);
+        for s in &shards {
+            for &c in s.class_counts().iter() {
+                // 50 expected; binomial sd ~ 6.7
+                assert!((15..=90).contains(&c), "class count {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn dirichlet_small_alpha_skews() {
+        let ds = generate_synthetic(1, 5000);
+        let mut rng = Pcg64::new(4, 4);
+        let shards = partition_dirichlet(&ds, 10, 0.1, &mut rng);
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 5000);
+        // with alpha=0.1 at least one worker should be strongly
+        // class-concentrated: top class > 50% of its shard.
+        let skewed = shards.iter().any(|s| {
+            let counts = s.class_counts();
+            let top = *counts.iter().max().unwrap();
+            top * 2 > s.len()
+        });
+        assert!(skewed);
+        assert!(shards.iter().all(|s| !s.is_empty()));
+    }
+
+    #[test]
+    fn dirichlet_large_alpha_near_iid() {
+        let ds = generate_synthetic(1, 5000);
+        let mut rng = Pcg64::new(5, 5);
+        let shards = partition_dirichlet(&ds, 5, 100.0, &mut rng);
+        for s in &shards {
+            let counts = s.class_counts();
+            let (mn, mx) = (
+                *counts.iter().min().unwrap(),
+                *counts.iter().max().unwrap(),
+            );
+            assert!(mx < 3 * mn.max(1), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn gamma_mean_matches() {
+        let mut rng = Pcg64::new(6, 6);
+        for &k in &[0.3, 1.0, 4.0] {
+            let n = 20_000;
+            let m: f64 =
+                (0..n).map(|_| gamma(&mut rng, k)).sum::<f64>() / n as f64;
+            assert!((m - k).abs() < 0.1 * k.max(0.5), "k={k} mean={m}");
+        }
+    }
+}

@@ -1,0 +1,129 @@
+//! Empirical (G, B)-gradient-dissimilarity estimation (Definition 2.3).
+//!
+//! At sampled models θ₁..θ_m, collect
+//! `y_j = (1/|H|) Σ_i ‖∇L_i(θ_j) − ∇L_H(θ_j)‖²` and
+//! `x_j = ‖∇L_H(θ_j)‖²`, then fit `y = G² + B²·x` by least squares. The
+//! fit's (Ĝ², B̂²) parameterize the rate predictions of Table 1 and let
+//! the coordinator check Theorem 1's condition `κB² ≤ 1/25` before a run.
+
+use crate::tensor;
+use crate::util::stats;
+
+/// One sample point: (‖∇L_H‖², average dissimilarity).
+#[derive(Clone, Copy, Debug)]
+pub struct GbSample {
+    pub grad_h_sq: f64,
+    pub dissimilarity: f64,
+}
+
+/// Build a sample from per-worker gradients at one θ.
+pub fn sample_from_grads(grads: &[&[f32]]) -> GbSample {
+    let mean = tensor::mean(grads);
+    let dis = grads
+        .iter()
+        .map(|g| tensor::dist_sq(g, &mean))
+        .sum::<f64>()
+        / grads.len() as f64;
+    GbSample {
+        grad_h_sq: tensor::norm_sq(&mean),
+        dissimilarity: dis,
+    }
+}
+
+/// Estimated heterogeneity parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct GbEstimate {
+    pub g_sq: f64,
+    pub b_sq: f64,
+    /// OLS fit quality.
+    pub r_sq: f64,
+}
+
+impl GbEstimate {
+    pub fn g(&self) -> f64 {
+        self.g_sq.max(0.0).sqrt()
+    }
+
+    pub fn b(&self) -> f64 {
+        self.b_sq.max(0.0).sqrt()
+    }
+
+    /// Theorem 1's sufficient condition for a given robustness coeff κ.
+    pub fn satisfies_theorem1(&self, kappa: f64) -> bool {
+        kappa * self.b_sq.max(0.0) <= 1.0 / 25.0
+    }
+}
+
+/// OLS fit of Def. 2.3 over sample points (intercept = G², slope = B²;
+/// negatives clamp to 0 — the bound still holds with the clamped values).
+pub fn estimate(samples: &[GbSample]) -> GbEstimate {
+    let x: Vec<f64> = samples.iter().map(|s| s.grad_h_sq).collect();
+    let y: Vec<f64> = samples.iter().map(|s| s.dissimilarity).collect();
+    let (a, b, r2) = stats::ols(&x, &y);
+    GbEstimate {
+        g_sq: a.max(0.0),
+        b_sq: b.max(0.0),
+        r_sq: r2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg64;
+    use crate::synthetic::QuadraticWorld;
+
+    #[test]
+    fn recovers_quadratic_world_parameters() {
+        // QuadraticWorld has closed-form G, B; the estimator must recover
+        // them from raw gradients (up to the cross-term noise).
+        let (b_true, g_true) = (0.6f64, 2.0f64);
+        let w = QuadraticWorld::new(12, 10, 1.0, b_true as f32, g_true as f32, 11);
+        let mut rng = Pcg64::new(12, 12);
+        let mut samples = Vec::new();
+        for _ in 0..400 {
+            let mut theta = vec![0f32; 12];
+            rng.fill_gaussian(&mut theta, 3.0);
+            let grads = w.grads(&theta);
+            let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+            samples.push(sample_from_grads(&refs));
+        }
+        let est = estimate(&samples);
+        assert!(
+            (est.b_sq - b_true * b_true).abs() < 0.1,
+            "B² est {} vs {}",
+            est.b_sq,
+            b_true * b_true
+        );
+        assert!(
+            (est.g_sq - g_true * g_true).abs() < 1.0,
+            "G² est {} vs {}",
+            est.g_sq,
+            g_true * g_true
+        );
+        assert!(est.r_sq > 0.8, "r² = {}", est.r_sq);
+    }
+
+    #[test]
+    fn homogeneous_workers_give_zero_gb() {
+        let g = vec![vec![1.0f32, 2.0]; 5];
+        let refs: Vec<&[f32]> = g.iter().map(|v| v.as_slice()).collect();
+        let s = sample_from_grads(&refs);
+        assert_eq!(s.dissimilarity, 0.0);
+        let est = estimate(&[s, s]);
+        assert_eq!(est.g_sq, 0.0);
+        assert_eq!(est.b_sq, 0.0);
+    }
+
+    #[test]
+    fn theorem1_condition() {
+        let est = GbEstimate {
+            g_sq: 1.0,
+            b_sq: 0.4,
+            r_sq: 1.0,
+        };
+        assert!(est.satisfies_theorem1(0.09)); // 0.036 <= 0.04
+        assert!(!est.satisfies_theorem1(0.2)); // 0.08 > 0.04
+        assert!((est.b() - 0.4f64.sqrt()).abs() < 1e-12);
+    }
+}

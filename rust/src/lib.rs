@@ -1,0 +1,55 @@
+//! # rosdhb — Robust Sparsified Distributed Heavy-Ball
+//!
+//! Production-shaped reproduction of *"Reconciling Communication Compression
+//! and Byzantine-Robustness in Distributed Learning"* (Gupta, Gupta, Xu,
+//! Neglia — 2025): distributed gradient descent with **server-coordinated
+//! RandK gradient sparsification** and **server-side Polyak momentum**,
+//! `(f,κ)`-robust aggregation, and the full experiment harness of the paper.
+//!
+//! The crate is layer 3 of a three-layer stack (see `DESIGN.md`):
+//!
+//! * **L3 (this crate)** — coordinator: round orchestration, mask
+//!   scheduling, momentum state, robust aggregation, Byzantine simulation,
+//!   byte-accounted transport, metrics, CLI.
+//! * **L2 (JAX, build-time)** — model fwd/bwd lowered to HLO text under
+//!   `artifacts/` by `make artifacts`.
+//! * **L1 (Pallas, build-time)** — the dense-layer and compression kernels
+//!   inside the L2 graph.
+//!
+//! Python never runs at training time: [`runtime`] loads the AOT artifacts
+//! through PJRT (`xla` crate) and executes them from the hot loop. A
+//! pure-Rust [`model`] engine provides a bit-for-bit-checked fallback for
+//! massively parallel parameter sweeps.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use rosdhb::config::ExperimentConfig;
+//! use rosdhb::coordinator::Trainer;
+//!
+//! let cfg = ExperimentConfig::default_mnist_like();
+//! let mut trainer = Trainer::from_config(&cfg).unwrap();
+//! let report = trainer.run().unwrap();
+//! println!("reached τ after {} rounds, {} uplink bytes",
+//!          report.rounds_to_tau.unwrap_or(0), report.uplink_bytes);
+//! ```
+
+pub mod aggregators;
+pub mod algorithms;
+pub mod attacks;
+pub mod cli;
+pub mod compression;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod diagnostics;
+pub mod heterogeneity;
+pub mod metrics;
+pub mod model;
+pub mod prng;
+pub mod runtime;
+pub mod synthetic;
+pub mod tensor;
+pub mod transport;
+pub mod util;
+pub mod worker;

@@ -1,0 +1,184 @@
+//! `rosdhb` — leader entrypoint.
+//!
+//! See [`rosdhb::cli`] for the accepted commands. Typical use:
+//!
+//! ```text
+//! make artifacts
+//! cargo run --release -- train --engine pjrt --attack alie \
+//!     --aggregator nnm+cwtm --k_frac 0.05 --n_byz 3 --rounds 2000
+//! cargo run --release -- fig1 --quick true
+//! ```
+
+use anyhow::{anyhow, Result};
+use rosdhb::cli::Cli;
+use rosdhb::config::{toml::TomlDoc, ExperimentConfig};
+use rosdhb::coordinator::Trainer;
+use rosdhb::heterogeneity;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: Vec<String>) -> Result<()> {
+    let cli = Cli::parse(args).map_err(|e| anyhow!(e))?;
+    match cli.command.as_str() {
+        "train" => cmd_train(&cli),
+        "fig1" => cmd_fig1(&cli),
+        "gb" => cmd_gb(&cli),
+        "info" => cmd_info(&cli),
+        other => Err(anyhow!("unknown command '{other}' (train|fig1|gb|info)")),
+    }
+}
+
+fn config_from_cli(cli: &Cli) -> Result<ExperimentConfig> {
+    let mut cfg = match cli.get("config") {
+        Some(path) => {
+            let doc = TomlDoc::parse_file(path).map_err(|e| anyhow!(e))?;
+            ExperimentConfig::from_toml(&doc).map_err(|e| anyhow!(e))?
+        }
+        None => ExperimentConfig::default_mnist_like(),
+    };
+    for (k, v) in cli.config_overrides(&["config", "quick", "out", "samples"]) {
+        cfg.set(k, v).map_err(|e| anyhow!(e))?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(cli: &Cli) -> Result<()> {
+    let cfg = config_from_cli(cli)?;
+    eprintln!(
+        "rosdhb train: {} | n={} f={} | k/d={} β={} γ={} | {} vs {}",
+        cfg.algorithm.name(),
+        cfg.n_total(),
+        cfg.n_byz,
+        cfg.k_frac,
+        cfg.beta,
+        cfg.gamma,
+        cfg.aggregator,
+        cfg.attack,
+    );
+    let mut trainer = Trainer::from_config(&cfg)?;
+    eprintln!(
+        "κ bound = {:.4} (Theorem 1 needs κB² ≤ 1/25)",
+        trainer.kappa_bound()
+    );
+    let report = trainer.run()?;
+    println!("{}", report_json(&cfg, &report));
+    Ok(())
+}
+
+fn report_json(
+    cfg: &ExperimentConfig,
+    r: &rosdhb::coordinator::RunReport,
+) -> String {
+    use rosdhb::util::json::Json;
+    use std::collections::BTreeMap;
+    let mut m = BTreeMap::new();
+    m.insert("config".to_string(), cfg.to_json());
+    m.insert("algorithm".into(), Json::Str(r.algorithm.clone()));
+    m.insert("rounds_run".into(), Json::Num(r.rounds_run as f64));
+    m.insert(
+        "rounds_to_tau".into(),
+        r.rounds_to_tau.map_or(Json::Null, |v| Json::Num(v as f64)),
+    );
+    m.insert(
+        "uplink_bytes_to_tau".into(),
+        r.uplink_bytes_to_tau
+            .map_or(Json::Null, |v| Json::Num(v as f64)),
+    );
+    m.insert("uplink_bytes".into(), Json::Num(r.uplink_bytes as f64));
+    m.insert("downlink_bytes".into(), Json::Num(r.downlink_bytes as f64));
+    m.insert("best_acc".into(), r.best_acc.map_or(Json::Null, Json::Num));
+    m.insert(
+        "final_loss".into(),
+        r.final_loss.map_or(Json::Null, Json::Num),
+    );
+    Json::Obj(m).to_string()
+}
+
+/// Figure-1 sweep: communication cost to τ across k/d and f.
+fn cmd_fig1(cli: &Cli) -> Result<()> {
+    let quick = cli.get("quick").map_or(false, |v| v == "true" || v == "1");
+    let base = config_from_cli(cli)?;
+    let kfracs: &[f64] = if quick {
+        &[0.05, 0.3, 1.0]
+    } else {
+        &[0.01, 0.05, 0.1, 0.3, 0.5, 1.0]
+    };
+    let fs: &[usize] = if quick { &[1, 5] } else { &[1, 3, 5, 7, 9] };
+    println!("algorithm,k_frac,f,rounds_to_tau,uplink_bytes_to_tau,best_acc");
+    for &f in fs {
+        for &kf in kfracs {
+            let mut cfg = base.clone();
+            cfg.k_frac = kf;
+            cfg.n_byz = f;
+            cfg.stop_at_tau = true;
+            let report = Trainer::from_config(&cfg)?.run()?;
+            println!(
+                "{},{},{},{},{},{}",
+                cfg.algorithm.name(),
+                kf,
+                f,
+                report
+                    .rounds_to_tau
+                    .map_or(String::from(""), |v| v.to_string()),
+                report
+                    .uplink_bytes_to_tau
+                    .map_or(String::from(""), |v| v.to_string()),
+                report.best_acc.unwrap_or(f64::NAN),
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Estimate (G, B) of the configured dataset/partition (Definition 2.3).
+fn cmd_gb(cli: &Cli) -> Result<()> {
+    let cfg = config_from_cli(cli)?;
+    let samples: usize = cli
+        .get("samples")
+        .map_or(Ok(20), |v| v.parse().map_err(|_| anyhow!("bad --samples")))?;
+    let mut trainer = Trainer::from_config(&cfg)?;
+    let mut pts = Vec::new();
+    for s in 0..samples {
+        // advance the model so Def. 2.3 is probed at varied θ
+        trainer.step(s as u64 + 1)?;
+        let grads = trainer.probe_honest_gradients()?;
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        pts.push(heterogeneity::sample_from_grads(&refs));
+    }
+    let est = heterogeneity::estimate(&pts);
+    let kappa = trainer.kappa_bound();
+    println!(
+        "G^2={:.6} B^2={:.6} r^2={:.3} | kappa={:.4} kappaB^2={:.5} theorem1_ok={}",
+        est.g_sq,
+        est.b_sq,
+        est.r_sq,
+        kappa,
+        kappa * est.b_sq,
+        est.satisfies_theorem1(kappa)
+    );
+    Ok(())
+}
+
+fn cmd_info(cli: &Cli) -> Result<()> {
+    let dir = cli.get("artifacts_dir").unwrap_or("artifacts");
+    println!(
+        "rosdhb {} — three-layer Rust+JAX+Pallas RoSDHB",
+        env!("CARGO_PKG_VERSION")
+    );
+    match rosdhb::runtime::Meta::load(dir) {
+        Ok(m) => println!(
+            "artifacts[{dir}]: P={} batch={} eval_batch={} d_in={} hidden={} classes={}",
+            m.p, m.batch, m.eval_batch, m.d_in, m.hidden, m.classes
+        ),
+        Err(e) => {
+            println!("artifacts[{dir}]: unavailable ({e}) — native engine only")
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,149 @@
+//! Per-round metrics, CSV export, and the paper's time/bytes-to-τ readout.
+
+use std::io::Write;
+
+/// One row of the training log.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Mean honest training loss this round (from worker gradient passes).
+    pub train_loss: f64,
+    /// ‖aggregate R^t‖ — the applied update direction's norm.
+    pub update_norm: f64,
+    /// Test accuracy if evaluated this round.
+    pub test_acc: Option<f64>,
+    /// Cumulative uplink bytes after this round.
+    pub uplink_bytes: u64,
+    /// Cumulative downlink bytes after this round.
+    pub downlink_bytes: u64,
+    /// Lyapunov diagnostics if enabled: (‖δᵗ‖², Υᵗ).
+    pub lyapunov: Option<(f64, f64)>,
+}
+
+/// Whole-run log + summary extraction.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsLog {
+    pub rows: Vec<RoundRecord>,
+}
+
+impl MetricsLog {
+    pub fn push(&mut self, r: RoundRecord) {
+        self.rows.push(r);
+    }
+
+    /// First round whose evaluated test accuracy ≥ tau.
+    pub fn rounds_to_tau(&self, tau: f64) -> Option<usize> {
+        self.rows
+            .iter()
+            .find(|r| r.test_acc.map_or(false, |a| a >= tau))
+            .map(|r| r.round)
+    }
+
+    /// Cumulative uplink bytes at the τ-crossing round (Fig. 1 y-axis).
+    pub fn uplink_bytes_to_tau(&self, tau: f64) -> Option<u64> {
+        self.rows
+            .iter()
+            .find(|r| r.test_acc.map_or(false, |a| a >= tau))
+            .map(|r| r.uplink_bytes)
+    }
+
+    /// Total (uplink + downlink) bytes at the τ-crossing round.
+    pub fn total_bytes_to_tau(&self, tau: f64) -> Option<u64> {
+        self.rows
+            .iter()
+            .find(|r| r.test_acc.map_or(false, |a| a >= tau))
+            .map(|r| r.uplink_bytes + r.downlink_bytes)
+    }
+
+    /// Best test accuracy seen.
+    pub fn best_acc(&self) -> Option<f64> {
+        self.rows
+            .iter()
+            .filter_map(|r| r.test_acc)
+            .fold(None, |m, a| Some(m.map_or(a, |m: f64| m.max(a))))
+    }
+
+    /// Final train loss.
+    pub fn final_loss(&self) -> Option<f64> {
+        self.rows.last().map(|r| r.train_loss)
+    }
+
+    /// Write the log as CSV.
+    pub fn write_csv<W: Write>(&self, mut w: W) -> std::io::Result<()> {
+        writeln!(
+            w,
+            "round,train_loss,update_norm,test_acc,uplink_bytes,downlink_bytes,delta_sq,upsilon"
+        )?;
+        for r in &self.rows {
+            writeln!(
+                w,
+                "{},{},{},{},{},{},{},{}",
+                r.round,
+                r.train_loss,
+                r.update_norm,
+                r.test_acc.map_or(String::new(), |a| a.to_string()),
+                r.uplink_bytes,
+                r.downlink_bytes,
+                r.lyapunov
+                    .map_or(String::new(), |(d, _)| d.to_string()),
+                r.lyapunov
+                    .map_or(String::new(), |(_, u)| u.to_string()),
+            )?;
+        }
+        Ok(())
+    }
+
+    pub fn save_csv(&self, path: &str) -> std::io::Result<()> {
+        let f = std::fs::File::create(path)?;
+        self.write_csv(std::io::BufWriter::new(f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(round: usize, acc: Option<f64>, up: u64) -> RoundRecord {
+        RoundRecord {
+            round,
+            train_loss: 1.0 / (round + 1) as f64,
+            update_norm: 0.5,
+            test_acc: acc,
+            uplink_bytes: up,
+            downlink_bytes: 2 * up,
+            lyapunov: None,
+        }
+    }
+
+    #[test]
+    fn tau_crossing() {
+        let mut log = MetricsLog::default();
+        log.push(row(0, Some(0.3), 100));
+        log.push(row(10, None, 200));
+        log.push(row(20, Some(0.9), 300));
+        log.push(row(30, Some(0.95), 400));
+        assert_eq!(log.rounds_to_tau(0.85), Some(20));
+        assert_eq!(log.uplink_bytes_to_tau(0.85), Some(300));
+        assert_eq!(log.total_bytes_to_tau(0.85), Some(900));
+        assert_eq!(log.rounds_to_tau(0.99), None);
+        assert_eq!(log.best_acc(), Some(0.95));
+    }
+
+    #[test]
+    fn csv_shape() {
+        let mut log = MetricsLog::default();
+        log.push(row(0, Some(0.5), 10));
+        log.push(RoundRecord {
+            lyapunov: Some((0.25, 1.5)),
+            ..row(1, None, 20)
+        });
+        let mut buf = Vec::new();
+        log.write_csv(&mut buf).unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("round,train_loss"));
+        assert!(lines[1].contains("0.5"));
+        assert!(lines[2].ends_with("0.25,1.5"));
+    }
+}

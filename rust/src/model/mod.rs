@@ -1,0 +1,374 @@
+//! Pure-Rust reference model — the same MLP the L2 JAX graph computes
+//! (196 → 57 → 10, ReLU, softmax cross-entropy), with hand-written
+//! backprop.
+//!
+//! Two jobs:
+//! 1. the **native engine** for massively parallel sweeps (PJRT clients
+//!    are single-threaded here; the math is identical — pinned against the
+//!    artifacts by `rust/tests/test_pjrt_roundtrip.rs`), and
+//! 2. a self-check that the AOT artifacts compute the model they claim.
+//!
+//! Parameter layout matches `python/compile/model.py::pack`:
+//! `[W1 (d_in·h) | b1 (h) | W2 (h·c) | b2 (c)]`, all row-major f32.
+
+use crate::prng::Pcg64;
+
+/// Architecture description. Defaults mirror `artifacts/meta.json`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MlpSpec {
+    pub d_in: usize,
+    pub hidden: usize,
+    pub classes: usize,
+}
+
+impl Default for MlpSpec {
+    fn default() -> Self {
+        MlpSpec {
+            d_in: 196,
+            hidden: 57,
+            classes: 10,
+        }
+    }
+}
+
+impl MlpSpec {
+    /// Total parameter count P.
+    pub fn p(&self) -> usize {
+        self.d_in * self.hidden
+            + self.hidden
+            + self.hidden * self.classes
+            + self.classes
+    }
+
+    fn off_b1(&self) -> usize {
+        self.d_in * self.hidden
+    }
+
+    fn off_w2(&self) -> usize {
+        self.off_b1() + self.hidden
+    }
+
+    fn off_b2(&self) -> usize {
+        self.off_w2() + self.hidden * self.classes
+    }
+
+    /// He-init weights, zero biases (same *distribution* as the JAX init;
+    /// per-bit equality with `init.hlo.txt` is not required — tests that
+    /// compare engines load params from the artifact).
+    pub fn init_params(&self, rng: &mut Pcg64) -> Vec<f32> {
+        let mut p = vec![0f32; self.p()];
+        let s1 = (2.0 / self.d_in as f64).sqrt() as f32;
+        rng.fill_gaussian(&mut p[..self.off_b1()], s1);
+        let s2 = (2.0 / self.hidden as f64).sqrt() as f32;
+        let (w2s, w2e) = (self.off_w2(), self.off_b2());
+        rng.fill_gaussian(&mut p[w2s..w2e], s2);
+        p
+    }
+}
+
+/// Scratch buffers for one forward/backward pass (reused across rounds —
+/// zero steady-state allocation on the gradient hot path).
+#[derive(Clone, Debug, Default)]
+pub struct Workspace {
+    h: Vec<f32>,      // [b, hidden] post-ReLU
+    logits: Vec<f32>, // [b, classes]
+    probs: Vec<f32>,  // [b, classes]
+    dh: Vec<f32>,     // [b, hidden]
+}
+
+/// Forward pass producing logits into `ws.logits`; returns nothing —
+/// callers read `ws.logits`. `x` is `[b, d_in]` row-major.
+pub fn forward(spec: &MlpSpec, params: &[f32], x: &[f32], b: usize, ws: &mut Workspace) {
+    assert_eq!(params.len(), spec.p());
+    assert_eq!(x.len(), b * spec.d_in);
+    let (di, h, c) = (spec.d_in, spec.hidden, spec.classes);
+    let w1 = &params[..spec.off_b1()];
+    let b1 = &params[spec.off_b1()..spec.off_w2()];
+    let w2 = &params[spec.off_w2()..spec.off_b2()];
+    let b2 = &params[spec.off_b2()..];
+
+    ws.h.resize(b * h, 0.0);
+    ws.logits.resize(b * c, 0.0);
+
+    // h = relu(x @ W1 + b1)
+    for r in 0..b {
+        let xr = &x[r * di..(r + 1) * di];
+        let hr = &mut ws.h[r * h..(r + 1) * h];
+        hr.copy_from_slice(b1);
+        for (i, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w1[i * h..(i + 1) * h];
+            for (hv, &wv) in hr.iter_mut().zip(wrow) {
+                *hv += xv * wv;
+            }
+        }
+        for hv in hr.iter_mut() {
+            if *hv < 0.0 {
+                *hv = 0.0;
+            }
+        }
+    }
+    // logits = h @ W2 + b2
+    for r in 0..b {
+        let hr = &ws.h[r * h..(r + 1) * h];
+        let lr = &mut ws.logits[r * c..(r + 1) * c];
+        lr.copy_from_slice(b2);
+        for (j, &hv) in hr.iter().enumerate() {
+            if hv == 0.0 {
+                continue;
+            }
+            let wrow = &w2[j * c..(j + 1) * c];
+            for (lv, &wv) in lr.iter_mut().zip(wrow) {
+                *lv += hv * wv;
+            }
+        }
+    }
+}
+
+/// Mean softmax cross-entropy + full gradient.
+///
+/// `y1h` is `[b, classes]` one-hot; `grad` must have length P and is
+/// overwritten. Returns the loss. Matches
+/// `python/compile/model.py::loss_and_grad` to f32 tolerance.
+pub fn loss_and_grad(
+    spec: &MlpSpec,
+    params: &[f32],
+    x: &[f32],
+    y1h: &[f32],
+    b: usize,
+    grad: &mut [f32],
+    ws: &mut Workspace,
+) -> f32 {
+    assert_eq!(grad.len(), spec.p());
+    let (di, h, c) = (spec.d_in, spec.hidden, spec.classes);
+    forward(spec, params, x, b, ws);
+
+    // softmax + CE
+    ws.probs.resize(b * c, 0.0);
+    let mut loss = 0.0f64;
+    for r in 0..b {
+        let lr = &ws.logits[r * c..(r + 1) * c];
+        let pr = &mut ws.probs[r * c..(r + 1) * c];
+        let max = lr.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let mut z = 0.0f64;
+        for (p, &l) in pr.iter_mut().zip(lr) {
+            let e = ((l - max) as f64).exp();
+            *p = e as f32;
+            z += e;
+        }
+        let logz = z.ln() + max as f64;
+        let invz = (1.0 / z) as f32;
+        for p in pr.iter_mut() {
+            *p *= invz;
+        }
+        for (j, &yv) in y1h[r * c..(r + 1) * c].iter().enumerate() {
+            if yv != 0.0 {
+                loss += yv as f64 * (logz - lr[j] as f64);
+            }
+        }
+    }
+    let loss = (loss / b as f64) as f32;
+
+    // backward: dlogits = (probs - y) / b
+    let scale = 1.0 / b as f32;
+    grad.fill(0.0);
+    let w2 = &params[spec.off_w2()..spec.off_b2()];
+    ws.dh.resize(b * h, 0.0);
+    {
+        let (gw1g, rest) = grad.split_at_mut(spec.off_b1());
+        let (gb1g, rest2) = rest.split_at_mut(h);
+        let (gw2g, gb2g) = rest2.split_at_mut(h * c);
+        for r in 0..b {
+            let pr = &ws.probs[r * c..(r + 1) * c];
+            let yr = &y1h[r * c..(r + 1) * c];
+            let hr = &ws.h[r * h..(r + 1) * h];
+            // dlogits
+            let mut dl = [0f32; 64]; // classes <= 64
+            assert!(c <= 64);
+            for j in 0..c {
+                dl[j] = (pr[j] - yr[j]) * scale;
+                gb2g[j] += dl[j];
+            }
+            // gW2 += h^T dl ; dh = dl @ W2^T
+            let dhr = &mut ws.dh[r * h..(r + 1) * h];
+            for j in 0..h {
+                let hv = hr[j];
+                let wrow = &w2[j * c..(j + 1) * c];
+                let mut acc = 0.0f32;
+                for jc in 0..c {
+                    if hv != 0.0 {
+                        gw2g[j * c + jc] += hv * dl[jc];
+                    }
+                    acc += dl[jc] * wrow[jc];
+                }
+                // relu mask
+                dhr[j] = if hv > 0.0 { acc } else { 0.0 };
+            }
+            // gW1 += x^T dh ; gb1 += dh
+            let xr = &x[r * di..(r + 1) * di];
+            for j in 0..h {
+                gb1g[j] += dhr[j];
+            }
+            for i in 0..di {
+                let xv = xr[i];
+                if xv == 0.0 {
+                    continue;
+                }
+                let gw1row = &mut gw1g[i * h..(i + 1) * h];
+                for (g, &dv) in gw1row.iter_mut().zip(dhr.iter()) {
+                    *g += xv * dv;
+                }
+            }
+        }
+    }
+    loss
+}
+
+/// Argmax accuracy of `params` on `(x, labels)`.
+pub fn accuracy(
+    spec: &MlpSpec,
+    params: &[f32],
+    x: &[f32],
+    labels: &[u8],
+    ws: &mut Workspace,
+) -> f64 {
+    let b = labels.len();
+    forward(spec, params, x, b, ws);
+    let c = spec.classes;
+    let mut correct = 0usize;
+    for r in 0..b {
+        let lr = &ws.logits[r * c..(r + 1) * c];
+        let pred = lr
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pred == labels[r] as usize {
+            correct += 1;
+        }
+    }
+    correct as f64 / b as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_spec() -> MlpSpec {
+        MlpSpec {
+            d_in: 6,
+            hidden: 5,
+            classes: 3,
+        }
+    }
+
+    fn toy_batch(spec: &MlpSpec, b: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<u8>) {
+        let mut rng = Pcg64::new(seed, 2);
+        let mut x = vec![0f32; b * spec.d_in];
+        rng.fill_gaussian(&mut x, 1.0);
+        let labels: Vec<u8> =
+            (0..b).map(|_| rng.below(spec.classes as u64) as u8).collect();
+        let mut y = vec![0f32; b * spec.classes];
+        for (r, &l) in labels.iter().enumerate() {
+            y[r * spec.classes + l as usize] = 1.0;
+        }
+        (x, y, labels)
+    }
+
+    #[test]
+    fn param_count() {
+        assert_eq!(MlpSpec::default().p(), 11_809);
+    }
+
+    #[test]
+    fn initial_loss_near_uniform() {
+        let spec = toy_spec();
+        let mut rng = Pcg64::new(1, 1);
+        let params = spec.init_params(&mut rng);
+        let (x, y, _) = toy_batch(&spec, 32, 3);
+        let mut grad = vec![0f32; spec.p()];
+        let mut ws = Workspace::default();
+        let loss =
+            loss_and_grad(&spec, &params, &x, &y, 32, &mut grad, &mut ws);
+        assert!((loss - (3f32).ln()).abs() < 1.0, "loss={loss}");
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let spec = toy_spec();
+        let mut rng = Pcg64::new(2, 2);
+        let params = spec.init_params(&mut rng);
+        let (x, y, _) = toy_batch(&spec, 8, 4);
+        let mut grad = vec![0f32; spec.p()];
+        let mut ws = Workspace::default();
+        loss_and_grad(&spec, &params, &x, &y, 8, &mut grad, &mut ws);
+        let eps = 1e-3f32;
+        let mut check = |idx: usize| {
+            let mut pp = params.clone();
+            pp[idx] += eps;
+            let mut g2 = vec![0f32; spec.p()];
+            let lp =
+                loss_and_grad(&spec, &pp, &x, &y, 8, &mut g2, &mut ws);
+            pp[idx] -= 2.0 * eps;
+            let lm =
+                loss_and_grad(&spec, &pp, &x, &y, 8, &mut g2, &mut ws);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - grad[idx]).abs() < 2e-2 * (1.0 + fd.abs()),
+                "idx {idx}: fd {fd} vs analytic {}",
+                grad[idx]
+            );
+        };
+        // spot-check each parameter block
+        check(0); // W1
+        check(spec.off_b1() + 1); // b1
+        check(spec.off_w2() + 3); // W2
+        check(spec.off_b2() + 2); // b2
+        for i in [5, 17, 23] {
+            check(i);
+        }
+    }
+
+    #[test]
+    fn gd_overfits_small_batch() {
+        let spec = toy_spec();
+        let mut rng = Pcg64::new(5, 5);
+        let mut params = spec.init_params(&mut rng);
+        let (x, y, labels) = toy_batch(&spec, 16, 6);
+        let mut grad = vec![0f32; spec.p()];
+        let mut ws = Workspace::default();
+        let l0 = loss_and_grad(&spec, &params, &x, &y, 16, &mut grad, &mut ws);
+        for _ in 0..400 {
+            loss_and_grad(&spec, &params, &x, &y, 16, &mut grad, &mut ws);
+            for (p, g) in params.iter_mut().zip(&grad) {
+                *p -= 0.5 * g;
+            }
+        }
+        let l1 = loss_and_grad(&spec, &params, &x, &y, 16, &mut grad, &mut ws);
+        assert!(l1 < 0.2 * l0, "l0={l0} l1={l1}");
+        let acc = accuracy(&spec, &params, &x, &labels, &mut ws);
+        assert!(acc > 0.9, "acc={acc}");
+    }
+
+    #[test]
+    fn accuracy_of_biased_logits() {
+        let spec = toy_spec();
+        // params zero except b2 favoring class 1 => all predictions = 1
+        let mut params = vec![0f32; spec.p()];
+        let b2_start = spec.p() - spec.classes;
+        params[b2_start + 1] = 5.0;
+        let (x, _, _) = toy_batch(&spec, 10, 7);
+        let mut ws = Workspace::default();
+        assert_eq!(
+            accuracy(&spec, &params, &x, &vec![1u8; 10], &mut ws),
+            1.0
+        );
+        assert_eq!(
+            accuracy(&spec, &params, &x, &vec![0u8; 10], &mut ws),
+            0.0
+        );
+    }
+}

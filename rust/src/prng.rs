@@ -1,0 +1,263 @@
+//! Deterministic PRNG substrate (no external `rand` crate offline).
+//!
+//! [`Pcg64`] is a 128-bit-state PCG-XSL-RR generator — fast, statistically
+//! solid, and *stream-splittable*: every (experiment seed, purpose, round,
+//! worker) tuple derives an independent stream, which is what makes runs
+//! bit-reproducible across the parallel and sequential engines. Gaussians
+//! come from Box–Muller; subset sampling is a partial Fisher–Yates.
+
+/// Splittable PCG-XSL-RR 128/64 generator.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Seed a new stream. `stream` selects one of 2^127 independent
+    /// sequences; unequal streams never collide.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let inc = (((stream as u128) << 64 | 0xda3e_39cb_94b9_5bdb) << 1) | 1;
+        let mut r = Pcg64 { state: 0, inc };
+        r.next_u64();
+        r.state = r.state.wrapping_add(seed as u128);
+        r.next_u64();
+        r
+    }
+
+    /// Derive a child stream keyed by `(tag, a, b)` — used for per-round /
+    /// per-worker randomness (`tag` disambiguates purposes).
+    pub fn derive(&self, tag: u64, a: u64, b: u64) -> Pcg64 {
+        // splitmix-style mixing of the key into (seed, stream).
+        let mut z = tag
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            .wrapping_add(a.rotate_left(17))
+            .wrapping_add(b.rotate_left(43))
+            .wrapping_add(self.inc as u64);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        let seed = z ^ (z >> 31);
+        let stream = tag ^ a.rotate_left(7) ^ b.rotate_left(29);
+        Pcg64::new(seed, stream)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self
+            .state
+            .wrapping_mul(PCG_MULT)
+            .wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire rejection, unbiased).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(bound as u128);
+            let lo = m as u64;
+            if lo >= bound || lo >= bound.wrapping_neg() % bound {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn next_gaussian(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 <= f64::EPSILON {
+                continue;
+            }
+            let u2 = self.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            return r * (2.0 * std::f64::consts::PI * u2).cos();
+        }
+    }
+
+    /// Fill `out` with N(0, sigma²) f32 samples.
+    pub fn fill_gaussian(&mut self, out: &mut [f32], sigma: f32) {
+        for v in out.iter_mut() {
+            *v = self.next_gaussian() as f32 * sigma;
+        }
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, d)`, returned **sorted** —
+    /// exactly the RandK mask law of the paper (uniform over k-subsets).
+    ///
+    /// Partial Fisher–Yates over an index map: O(k) memory via a sparse
+    /// swap table when k << d, O(d) otherwise.
+    pub fn sample_k_of(&mut self, d: usize, k: usize) -> Vec<u32> {
+        assert!(k <= d, "k={k} > d={d}");
+        if k == d {
+            return (0..d as u32).collect();
+        }
+        if k * 8 < d {
+            // sparse partial shuffle
+            use std::collections::HashMap;
+            let mut swap: HashMap<usize, usize> = HashMap::with_capacity(2 * k);
+            let mut out = Vec::with_capacity(k);
+            for i in 0..k {
+                let j = i + self.below((d - i) as u64) as usize;
+                let vi = *swap.get(&i).unwrap_or(&i);
+                let vj = *swap.get(&j).unwrap_or(&j);
+                out.push(vj as u32);
+                swap.insert(j, vi);
+            }
+            out.sort_unstable();
+            out
+        } else {
+            let mut idx: Vec<u32> = (0..d as u32).collect();
+            for i in 0..k {
+                let j = i + self.below((d - i) as u64) as usize;
+                idx.swap(i, j);
+            }
+            let mut out = idx[..k].to_vec();
+            out.sort_unstable();
+            out
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Pcg64::new(42, 1);
+        let mut b = Pcg64::new(42, 1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::new(42, 1);
+        let mut b = Pcg64::new(42, 2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn derive_is_deterministic_and_keyed() {
+        let root = Pcg64::new(7, 0);
+        let mut a = root.derive(1, 10, 3);
+        let mut b = root.derive(1, 10, 3);
+        let mut c = root.derive(1, 11, 3);
+        assert_eq!(a.next_u64(), b.next_u64());
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Pcg64::new(1, 1);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn uniform_mean_and_var() {
+        let mut r = Pcg64::new(3, 3);
+        let n = 100_000;
+        let mut sum = 0.0;
+        let mut sq = 0.0;
+        for _ in 0..n {
+            let x = r.next_f64();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.01, "var={var}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Pcg64::new(4, 4);
+        let n = 100_000;
+        let (mut s, mut s2, mut s3) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let x = r.next_gaussian();
+            s += x;
+            s2 += x * x;
+            s3 += x * x * x;
+        }
+        assert!((s / n as f64).abs() < 0.02);
+        assert!((s2 / n as f64 - 1.0).abs() < 0.03);
+        assert!((s3 / n as f64).abs() < 0.08);
+    }
+
+    #[test]
+    fn sample_k_sorted_distinct_in_range() {
+        let mut r = Pcg64::new(5, 5);
+        for &(d, k) in &[(100usize, 1usize), (100, 7), (100, 99), (100, 100),
+                         (11_809, 118), (11_809, 11_809)] {
+            let s = r.sample_k_of(d, k);
+            assert_eq!(s.len(), k);
+            assert!(s.windows(2).all(|w| w[0] < w[1]), "sorted+distinct");
+            assert!(s.iter().all(|&i| (i as usize) < d));
+        }
+    }
+
+    #[test]
+    fn sample_k_is_uniform_over_coordinates() {
+        // Each coordinate appears with probability k/d (RandK law).
+        let mut r = Pcg64::new(6, 6);
+        let (d, k, trials) = (50usize, 10usize, 20_000usize);
+        let mut counts = vec![0u32; d];
+        for _ in 0..trials {
+            for i in r.sample_k_of(d, k) {
+                counts[i as usize] += 1;
+            }
+        }
+        let expect = trials as f64 * k as f64 / d as f64;
+        for (i, &c) in counts.iter().enumerate() {
+            let z = (c as f64 - expect) / (expect * (1.0 - k as f64 / d as f64)).sqrt();
+            assert!(z.abs() < 5.0, "coord {i}: count {c} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::new(9, 9);
+        let mut v: Vec<u32> = (0..1000).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..1000).collect::<Vec<_>>());
+    }
+}

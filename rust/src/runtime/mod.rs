@@ -1,0 +1,268 @@
+//! PJRT runtime: load the AOT artifacts (`make artifacts`) and execute
+//! them from the L3 hot path.
+//!
+//! The interchange format is **HLO text** (not serialized protos) — see
+//! `python/compile/aot.py` for why. Each artifact is compiled once at
+//! startup (`PjRtClient::cpu() → HloModuleProto::from_text_file →
+//! client.compile`) and reused every round; only literal marshalling
+//! happens per call.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+
+/// Dimensions of the compiled model, read from `artifacts/meta.json`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Meta {
+    /// Flat parameter count.
+    pub p: usize,
+    /// Grad-artifact batch size (paper: 60).
+    pub batch: usize,
+    /// Eval-artifact batch size.
+    pub eval_batch: usize,
+    pub d_in: usize,
+    pub hidden: usize,
+    pub classes: usize,
+}
+
+impl Meta {
+    pub fn load(dir: &str) -> Result<Meta> {
+        let text = std::fs::read_to_string(format!("{dir}/meta.json"))
+            .with_context(|| format!("{dir}/meta.json (run `make artifacts`)"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("meta.json: {e}"))?;
+        let get = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("meta.json missing '{k}'"))
+        };
+        Ok(Meta {
+            p: get("p")?,
+            batch: get("batch")?,
+            eval_batch: get("eval_batch")?,
+            d_in: get("d_in")?,
+            hidden: get("hidden")?,
+            classes: get("classes")?,
+        })
+    }
+
+    /// The [`crate::model::MlpSpec`] these artifacts implement.
+    pub fn spec(&self) -> crate::model::MlpSpec {
+        crate::model::MlpSpec {
+            d_in: self.d_in,
+            hidden: self.hidden,
+            classes: self.classes,
+        }
+    }
+}
+
+/// Compiled artifacts + the PJRT client that owns them.
+pub struct PjrtRuntime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    grad: xla::PjRtLoadedExecutable,
+    eval: xla::PjRtLoadedExecutable,
+    init: xla::PjRtLoadedExecutable,
+    /// L1 Pallas momentum kernel (β = 0.9 baked), optional — present in
+    /// artifact bundles built after v0.1; `None` for older bundles.
+    momentum09: Option<xla::PjRtLoadedExecutable>,
+    pub meta: Meta,
+}
+
+impl PjrtRuntime {
+    /// Load and compile all artifacts from `dir`.
+    pub fn load(dir: &str) -> Result<PjrtRuntime> {
+        let meta = Meta::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = format!("{dir}/{name}.hlo.txt");
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {path}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {path}: {e:?}"))
+        };
+        let momentum09 = if std::path::Path::new(&format!(
+            "{dir}/momentum09.hlo.txt"
+        ))
+        .exists()
+        {
+            Some(compile("momentum09")?)
+        } else {
+            None
+        };
+        Ok(PjrtRuntime {
+            grad: compile("grad")?,
+            eval: compile("eval")?,
+            init: compile("init")?,
+            momentum09,
+            client,
+            meta,
+        })
+    }
+
+    /// Server-side momentum step `0.9·m + 0.1·g̃` through the AOT-compiled
+    /// L1 Pallas kernel (errors if the bundle predates the artifact).
+    pub fn momentum09(&self, m: &[f32], g_tilde: &[f32]) -> Result<Vec<f32>> {
+        let exe = self
+            .momentum09
+            .as_ref()
+            .ok_or_else(|| anyhow!("momentum09.hlo.txt not in bundle"))?;
+        anyhow::ensure!(m.len() == self.meta.p && g_tilde.len() == self.meta.p);
+        let ml = xla::Literal::vec1(m);
+        let gl = xla::Literal::vec1(g_tilde);
+        let out = exe
+            .execute::<xla::Literal>(&[ml, gl])
+            .map_err(|e| anyhow!("momentum execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("momentum fetch: {e:?}"))?;
+        out.to_tuple1()
+            .map_err(|e| anyhow!("momentum tuple: {e:?}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("momentum to_vec: {e:?}"))
+    }
+
+    /// Deterministic model init from a 64-bit seed (runs `init.hlo.txt`).
+    pub fn init_params(&self, seed: u64) -> Result<Vec<f32>> {
+        let bits = [(seed >> 32) as u32, seed as u32];
+        let lit = xla::Literal::vec1(&bits);
+        let out = self
+            .init
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("init execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("init fetch: {e:?}"))?;
+        let params = out
+            .to_tuple1()
+            .map_err(|e| anyhow!("init tuple: {e:?}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("init to_vec: {e:?}"))?;
+        anyhow::ensure!(params.len() == self.meta.p, "init shape mismatch");
+        Ok(params)
+    }
+
+    /// One gradient pass: `(loss, grad)` for a `[batch, d_in]` batch with
+    /// one-hot labels `[batch, classes]` (runs `grad.hlo.txt`).
+    pub fn grad(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y1h: &[f32],
+    ) -> Result<(f32, Vec<f32>)> {
+        let m = &self.meta;
+        anyhow::ensure!(params.len() == m.p, "params len");
+        anyhow::ensure!(x.len() == m.batch * m.d_in, "x len");
+        anyhow::ensure!(y1h.len() == m.batch * m.classes, "y len");
+        let pl = xla::Literal::vec1(params);
+        let xl = xla::Literal::vec1(x)
+            .reshape(&[m.batch as i64, m.d_in as i64])
+            .map_err(|e| anyhow!("reshape x: {e:?}"))?;
+        let yl = xla::Literal::vec1(y1h)
+            .reshape(&[m.batch as i64, m.classes as i64])
+            .map_err(|e| anyhow!("reshape y: {e:?}"))?;
+        let out = self
+            .grad
+            .execute::<xla::Literal>(&[pl, xl, yl])
+            .map_err(|e| anyhow!("grad execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("grad fetch: {e:?}"))?;
+        let (loss_l, grad_l) = out
+            .to_tuple2()
+            .map_err(|e| anyhow!("grad tuple: {e:?}"))?;
+        let loss: f32 = loss_l
+            .get_first_element()
+            .map_err(|e| anyhow!("loss scalar: {e:?}"))?;
+        let grad = grad_l
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("grad to_vec: {e:?}"))?;
+        anyhow::ensure!(grad.len() == m.p, "grad shape mismatch");
+        Ok((loss, grad))
+    }
+
+    /// Logits for one eval batch `[eval_batch, d_in]`.
+    pub fn eval_logits(&self, params: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+        let m = &self.meta;
+        anyhow::ensure!(x.len() == m.eval_batch * m.d_in, "x len");
+        let pl = xla::Literal::vec1(params);
+        let xl = xla::Literal::vec1(x)
+            .reshape(&[m.eval_batch as i64, m.d_in as i64])
+            .map_err(|e| anyhow!("reshape x: {e:?}"))?;
+        let out = self
+            .eval
+            .execute::<xla::Literal>(&[pl, xl])
+            .map_err(|e| anyhow!("eval execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("eval fetch: {e:?}"))?;
+        let logits = out
+            .to_tuple1()
+            .map_err(|e| anyhow!("eval tuple: {e:?}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("eval to_vec: {e:?}"))?;
+        Ok(logits)
+    }
+
+    /// Argmax accuracy over an arbitrary-size test set, processed in
+    /// eval_batch chunks (last chunk padded with repeats).
+    pub fn accuracy(&self, params: &[f32], ds: &crate::data::Dataset) -> Result<f64> {
+        let m = &self.meta;
+        let e = m.eval_batch;
+        let n = ds.len();
+        anyhow::ensure!(n > 0, "empty test set");
+        let mut correct = 0usize;
+        let mut x = vec![0f32; e * m.d_in];
+        let mut chunk_labels = vec![0u8; e];
+        let mut start = 0usize;
+        while start < n {
+            let take = (n - start).min(e);
+            for i in 0..e {
+                let src = start + (i % take);
+                x[i * m.d_in..(i + 1) * m.d_in]
+                    .copy_from_slice(ds.image(src));
+                chunk_labels[i] = ds.labels[src];
+            }
+            let logits = self.eval_logits(params, &x)?;
+            for i in 0..take {
+                let lr = &logits[i * m.classes..(i + 1) * m.classes];
+                let pred = lr
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if pred == chunk_labels[i] as usize {
+                    correct += 1;
+                }
+            }
+            start += take;
+        }
+        Ok(correct as f64 / n as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime round-trip tests live in rust/tests/test_pjrt_roundtrip.rs
+    // (they need `make artifacts`); here we only cover Meta parsing.
+
+    #[test]
+    fn meta_parses_from_json() {
+        let dir = std::env::temp_dir().join("rosdhb_meta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            r#"{"p": 11809, "batch": 60, "eval_batch": 250,
+                "d_in": 196, "hidden": 57, "classes": 10}"#,
+        )
+        .unwrap();
+        let m = Meta::load(dir.to_str().unwrap()).unwrap();
+        assert_eq!(m.p, 11_809);
+        assert_eq!(m.spec().p(), m.p);
+    }
+
+    #[test]
+    fn meta_missing_dir_errors() {
+        assert!(Meta::load("/nonexistent/dir").is_err());
+    }
+}

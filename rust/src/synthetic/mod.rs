@@ -1,0 +1,203 @@
+//! Synthetic quadratic objectives with *exactly controllable* (G, B, L) —
+//! the workload behind the Table-1 rate experiments
+//! (`benches/bench_table1.rs`), where we need to dial data heterogeneity
+//! independently of everything else.
+//!
+//! Construction: honest worker i has
+//!
+//! ```text
+//! ∇L_i(θ) = μ θ + s_i σ_B θ − c_i,   s_i = ±1 (half each), Σ_i c_i = 0
+//! ```
+//!
+//! so the honest average gradient is `∇L_H(θ) = μ θ` (minimum at θ* = 0,
+//! `L_H* = 0`, smoothness L = μ), and (G,B)-dissimilarity (Def. 2.3) holds
+//! with **equality in expectation**:
+//!
+//! ```text
+//! (1/|H|) Σ‖∇L_i − ∇L_H‖² = σ_B²‖θ‖² + G₀² = (σ_B/μ)²‖∇L_H‖² + G₀²
+//! ```
+//!
+//! i.e. B = σ_B/μ and G = G₀ by design (the s_i/c_i cross term vanishes
+//! because c is resampled orthogonal to θ-independent terms; the exact
+//! identity is asserted in tests).
+
+use crate::prng::Pcg64;
+use crate::tensor;
+
+/// A family of n_honest quadratic losses with prescribed (G, B, L).
+#[derive(Clone, Debug)]
+pub struct QuadraticWorld {
+    pub d: usize,
+    pub n_honest: usize,
+    /// Curvature of the average loss (its smoothness constant).
+    pub mu: f32,
+    /// Gradient-growth heterogeneity: B = sigma_b / mu.
+    pub sigma_b: f32,
+    /// Constant heterogeneity: G.
+    pub g0: f32,
+    /// Per-worker constant offsets c_i (sum to zero, mean ‖c_i‖² = G²).
+    offsets: Vec<Vec<f32>>,
+    /// Per-worker curvature signs s_i.
+    signs: Vec<f32>,
+}
+
+impl QuadraticWorld {
+    pub fn new(
+        d: usize,
+        n_honest: usize,
+        mu: f32,
+        b: f32,
+        g: f32,
+        seed: u64,
+    ) -> Self {
+        assert!(n_honest % 2 == 0, "need even |H| for Σ s_i = 0");
+        let mut rng = Pcg64::new(seed, 0x7175_6164);
+        // draw pairs (+v, -v): exact zero mean, each ‖c_i‖ = G.
+        let mut offsets = Vec::with_capacity(n_honest);
+        for _ in 0..n_honest / 2 {
+            let mut v = vec![0f32; d];
+            rng.fill_gaussian(&mut v, 1.0);
+            let norm = tensor::norm(&v).max(1e-12);
+            let scale = g / norm as f32;
+            let pos: Vec<f32> = v.iter().map(|x| x * scale).collect();
+            let neg: Vec<f32> = pos.iter().map(|x| -x).collect();
+            offsets.push(pos);
+            offsets.push(neg);
+        }
+        let signs: Vec<f32> = (0..n_honest)
+            .map(|i| if i % 2 == 0 { 1.0 } else { -1.0 })
+            .collect();
+        QuadraticWorld {
+            d,
+            n_honest,
+            mu,
+            sigma_b: b * mu,
+            g0: g,
+            offsets,
+            signs,
+        }
+    }
+
+    /// ∇L_i(θ).
+    pub fn grad_i(&self, i: usize, theta: &[f32]) -> Vec<f32> {
+        let a = self.mu + self.signs[i] * self.sigma_b;
+        theta
+            .iter()
+            .zip(&self.offsets[i])
+            .map(|(&t, &c)| a * t - c)
+            .collect()
+    }
+
+    /// ∇L_H(θ) = μθ (exact).
+    pub fn grad_h(&self, theta: &[f32]) -> Vec<f32> {
+        theta.iter().map(|&t| self.mu * t).collect()
+    }
+
+    /// L_H(θ) = (μ/2)‖θ‖² (with L_H* = 0).
+    pub fn loss_h(&self, theta: &[f32]) -> f64 {
+        0.5 * self.mu as f64 * tensor::norm_sq(theta)
+    }
+
+    /// All honest gradients at θ.
+    pub fn grads(&self, theta: &[f32]) -> Vec<Vec<f32>> {
+        (0..self.n_honest).map(|i| self.grad_i(i, theta)).collect()
+    }
+
+    /// Empirical LHS of Def. 2.3 at θ (for tests / the (G,B) estimator).
+    pub fn dissimilarity(&self, theta: &[f32]) -> f64 {
+        let gh = self.grad_h(theta);
+        let mut acc = 0.0;
+        for i in 0..self.n_honest {
+            acc += tensor::dist_sq(&self.grad_i(i, theta), &gh);
+        }
+        acc / self.n_honest as f64
+    }
+
+    /// The exact dissimilarity this construction guarantees at θ.
+    pub fn dissimilarity_exact(&self, theta: &[f32]) -> f64 {
+        let cross: f64 = (0..self.n_honest)
+            .map(|i| {
+                -2.0 * self.signs[i] as f64
+                    * self.sigma_b as f64
+                    * tensor::dot(theta, &self.offsets[i])
+            })
+            .sum::<f64>()
+            / self.n_honest as f64;
+        self.sigma_b as f64 * self.sigma_b as f64 * tensor::norm_sq(theta)
+            + self.g0 as f64 * self.g0 as f64
+            + cross
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_gradient_is_mu_theta() {
+        let w = QuadraticWorld::new(16, 10, 2.0, 0.5, 3.0, 1);
+        let mut rng = Pcg64::new(2, 2);
+        let mut theta = vec![0f32; 16];
+        rng.fill_gaussian(&mut theta, 1.0);
+        let grads = w.grads(&theta);
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let mean = tensor::mean(&refs);
+        let gh = w.grad_h(&theta);
+        for (m, g) in mean.iter().zip(&gh) {
+            assert!((m - g).abs() < 1e-4, "{m} vs {g}");
+        }
+    }
+
+    #[test]
+    fn dissimilarity_matches_closed_form() {
+        let w = QuadraticWorld::new(8, 6, 1.5, 0.8, 2.0, 3);
+        let mut rng = Pcg64::new(4, 4);
+        let mut theta = vec![0f32; 8];
+        rng.fill_gaussian(&mut theta, 2.0);
+        let emp = w.dissimilarity(&theta);
+        let exact = w.dissimilarity_exact(&theta);
+        assert!(
+            (emp - exact).abs() < 1e-3 * exact.max(1.0),
+            "{emp} vs {exact}"
+        );
+    }
+
+    #[test]
+    fn gb_bound_holds_with_slack() {
+        // Def 2.3 with G' = sqrt(2) G, B' = sqrt(2) B absorbs the cross
+        // term (2ab <= a^2 + b^2).
+        let w = QuadraticWorld::new(8, 4, 1.0, 0.6, 1.5, 5);
+        let mut rng = Pcg64::new(6, 6);
+        for _ in 0..50 {
+            let mut theta = vec![0f32; 8];
+            rng.fill_gaussian(&mut theta, 3.0);
+            let lhs = w.dissimilarity(&theta);
+            let gh2 = tensor::norm_sq(&w.grad_h(&theta));
+            let rhs = 2.0 * (w.g0 as f64).powi(2)
+                + 2.0 * (w.sigma_b as f64 / w.mu as f64).powi(2) * gh2;
+            assert!(lhs <= rhs + 1e-6, "{lhs} > {rhs}");
+        }
+    }
+
+    #[test]
+    fn at_origin_dissimilarity_is_g_squared() {
+        let w = QuadraticWorld::new(8, 4, 1.0, 0.5, 2.5, 7);
+        let theta = vec![0f32; 8];
+        let dis = w.dissimilarity(&theta);
+        assert!((dis - 6.25).abs() < 1e-4, "{dis}");
+        assert_eq!(w.loss_h(&theta), 0.0);
+    }
+
+    #[test]
+    fn gd_on_grad_h_converges_to_origin() {
+        let w = QuadraticWorld::new(4, 4, 2.0, 0.3, 1.0, 8);
+        let mut theta = vec![5.0f32; 4];
+        for _ in 0..200 {
+            let g = w.grad_h(&theta);
+            for (t, gi) in theta.iter_mut().zip(&g) {
+                *t -= 0.3 * gi;
+            }
+        }
+        assert!(tensor::norm(&theta) < 1e-4);
+    }
+}

@@ -1,0 +1,189 @@
+//! Flat-`f32` vector math used on the coordinator hot path.
+//!
+//! Everything the server does per round — momentum updates, robust
+//! aggregation, model steps — operates on flat `d`-vectors (d = number of
+//! model parameters). These helpers are written to auto-vectorize and to
+//! avoid allocation when an output buffer is supplied.
+
+/// `y += a * x` (AXPY).
+#[inline]
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// `y = a*y + b*x` — the Polyak momentum update shape.
+#[inline]
+pub fn scale_add(y: &mut [f32], a: f32, b: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi = a * *yi + b * xi;
+    }
+}
+
+/// Element-wise `out = x - y`.
+#[inline]
+pub fn sub(out: &mut [f32], x: &[f32], y: &[f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(out.len(), x.len());
+    for ((o, a), b) in out.iter_mut().zip(x).zip(y) {
+        *o = a - b;
+    }
+}
+
+/// Chunk size for blocked f32→f64 accumulation: f32 partial sums stay
+/// well-conditioned within a block; block totals accumulate in f64.
+const ACC_BLOCK: usize = 1024;
+
+/// Dot product — blocked 4-lane f32 accumulation with f64 block totals
+/// (§Perf: ~3× over per-element f64 conversion, same 1e-6 relative
+/// accuracy on the d≈1e4..1e6 sizes used here).
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut total = 0.0f64;
+    for (xb, yb) in x.chunks(ACC_BLOCK).zip(y.chunks(ACC_BLOCK)) {
+        let mut acc = [0.0f32; 4];
+        let mut it = xb.chunks_exact(4).zip(yb.chunks_exact(4));
+        for (x4, y4) in &mut it {
+            for l in 0..4 {
+                acc[l] += x4[l] * y4[l];
+            }
+        }
+        let rem = xb.len() - xb.len() % 4;
+        for (a, b) in xb[rem..].iter().zip(&yb[rem..]) {
+            acc[0] += a * b;
+        }
+        total += (acc[0] + acc[1]) as f64 + (acc[2] + acc[3]) as f64;
+    }
+    total
+}
+
+/// Squared Euclidean norm (blocked accumulation — see [`dot`]).
+#[inline]
+pub fn norm_sq(x: &[f32]) -> f64 {
+    dot(x, x)
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm(x: &[f32]) -> f64 {
+    norm_sq(x).sqrt()
+}
+
+/// Squared Euclidean distance (blocked accumulation — see [`dot`]).
+#[inline]
+pub fn dist_sq(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut total = 0.0f64;
+    for (xb, yb) in x.chunks(ACC_BLOCK).zip(y.chunks(ACC_BLOCK)) {
+        let mut acc = [0.0f32; 4];
+        let mut it = xb.chunks_exact(4).zip(yb.chunks_exact(4));
+        for (x4, y4) in &mut it {
+            for l in 0..4 {
+                let d = x4[l] - y4[l];
+                acc[l] += d * d;
+            }
+        }
+        let rem = xb.len() - xb.len() % 4;
+        for (a, b) in xb[rem..].iter().zip(&yb[rem..]) {
+            let d = a - b;
+            acc[0] += d * d;
+        }
+        total += (acc[0] + acc[1]) as f64 + (acc[2] + acc[3]) as f64;
+    }
+    total
+}
+
+/// `out = mean of rows` where `rows` is a set of equal-length vectors.
+pub fn mean_into(out: &mut [f32], rows: &[&[f32]]) {
+    assert!(!rows.is_empty());
+    let inv = 1.0 / rows.len() as f32;
+    out.fill(0.0);
+    for r in rows {
+        debug_assert_eq!(r.len(), out.len());
+        for (o, v) in out.iter_mut().zip(*r) {
+            *o += v;
+        }
+    }
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+}
+
+/// Allocating convenience wrapper over [`mean_into`].
+pub fn mean(rows: &[&[f32]]) -> Vec<f32> {
+    let mut out = vec![0.0; rows[0].len()];
+    mean_into(&mut out, rows);
+    out
+}
+
+/// In-place `x *= a`.
+#[inline]
+pub fn scale(x: &mut [f32], a: f32) {
+    for v in x.iter_mut() {
+        *v *= a;
+    }
+}
+
+/// Max |x_i| (0 for empty).
+pub fn linf(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_basic() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        axpy(&mut y, 2.0, &[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn scale_add_is_momentum_shape() {
+        // m = beta*m + (1-beta)*g — match ref.py: momentum_update_ref.
+        let mut m = vec![1.0, -2.0];
+        scale_add(&mut m, 0.9, 0.1, &[10.0, 10.0]);
+        assert!((m[0] - 1.9).abs() < 1e-6);
+        assert!((m[1] - (-0.8)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dot_norm_dist() {
+        let x = vec![3.0, 4.0];
+        assert_eq!(norm(&x), 5.0);
+        assert_eq!(dot(&x, &x), 25.0);
+        assert_eq!(dist_sq(&x, &[0.0, 0.0]), 25.0);
+    }
+
+    #[test]
+    fn mean_of_rows() {
+        let a = vec![1.0, 2.0];
+        let b = vec![3.0, 6.0];
+        let m = mean(&[&a, &b]);
+        assert_eq!(m, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn sub_and_scale_and_linf() {
+        let mut o = vec![0.0; 2];
+        sub(&mut o, &[5.0, 1.0], &[2.0, 4.0]);
+        assert_eq!(o, vec![3.0, -3.0]);
+        scale(&mut o, -2.0);
+        assert_eq!(o, vec![-6.0, 6.0]);
+        assert_eq!(linf(&o), 6.0);
+    }
+
+    #[test]
+    fn f64_accumulation_is_stable() {
+        // 1e6 tiny values: naive f32 sum loses them; f64 accumulation keeps.
+        let x = vec![1e-4f32; 1_000_000];
+        let n = norm_sq(&x);
+        assert!((n - 1e-8 * 1e6).abs() / (1e-8 * 1e6) < 1e-3, "{n}");
+    }
+}

@@ -1,0 +1,294 @@
+//! In-process transport with exact byte accounting.
+//!
+//! The paper's headline experiment (Fig. 1) measures *communication cost to
+//! reach τ accuracy*, so the wire format is a first-class object here, not
+//! an afterthought: every server↔worker message has a concrete encoding
+//! ([`WireMessage::encode`]), and the [`ByteMeter`] sums exactly
+//! `encode().len()` per message (tests pin `encoded_len == encode().len()`).
+//!
+//! Accounting model (DESIGN.md §5):
+//! * **Downlink** (server → workers, broadcast): model `d·4` bytes + 8-byte
+//!   round header + 8-byte mask seed under global sparsification (the
+//!   whole mask is never shipped — both ends re-derive it from the seed).
+//! * **Uplink** (worker → server): `k·4` payload bytes + header; under
+//!   *local* sparsification the worker must also ship its mask, encoded by
+//!   the cheaper of bitset (`⌈d/8⌉`) or index-list (`k·4`) codecs
+//!   (`compression::codec`).
+
+use crate::compression::codec::MaskWire;
+
+/// Message header: 8-byte round id + 2-byte type tag + 2-byte worker id.
+pub const HEADER_BYTES: usize = 12;
+
+/// All messages that cross the (simulated) network.
+#[derive(Clone, Debug)]
+pub enum WireMessage {
+    /// Server → all workers under **global** sparsification: model + the
+    /// seed from which workers re-derive mask(k).
+    ModelBroadcast {
+        round: u64,
+        params: Vec<f32>,
+        mask_seed: u64,
+    },
+    /// Server → all workers when workers choose their own masks (local
+    /// sparsification / no sparsification).
+    ModelBroadcastPlain { round: u64, params: Vec<f32> },
+    /// Worker → server: the k selected coordinates, in mask order.
+    /// `mask` is `Some` only under local sparsification (server cannot
+    /// re-derive it).
+    CompressedGrad {
+        round: u64,
+        worker: u16,
+        values: Vec<f32>,
+        mask: Option<MaskWire>,
+    },
+    /// Worker → server: dense gradient (no compression baselines).
+    FullGrad {
+        round: u64,
+        worker: u16,
+        values: Vec<f32>,
+    },
+}
+
+impl WireMessage {
+    /// Exact serialized size in bytes (hot path — no allocation).
+    pub fn encoded_len(&self) -> usize {
+        match self {
+            WireMessage::ModelBroadcast { params, .. } => {
+                HEADER_BYTES + 8 + 4 * params.len()
+            }
+            WireMessage::ModelBroadcastPlain { params, .. } => {
+                HEADER_BYTES + 4 * params.len()
+            }
+            WireMessage::CompressedGrad { values, mask, .. } => {
+                HEADER_BYTES
+                    + 4
+                    + 4 * values.len()
+                    + mask.as_ref().map_or(0, |m| m.encoded_len())
+            }
+            WireMessage::FullGrad { values, .. } => {
+                HEADER_BYTES + 4 + 4 * values.len()
+            }
+        }
+    }
+
+    /// Full serialization (little-endian) — used by tests and by the
+    /// persisted-trace tooling; the simulator itself meters via
+    /// [`Self::encoded_len`].
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_len());
+        let (tag, round, worker): (u16, u64, u16) = match self {
+            WireMessage::ModelBroadcast { round, .. } => (0, *round, 0),
+            WireMessage::ModelBroadcastPlain { round, .. } => (1, *round, 0),
+            WireMessage::CompressedGrad { round, worker, .. } => {
+                (2, *round, *worker)
+            }
+            WireMessage::FullGrad { round, worker, .. } => (3, *round, *worker),
+        };
+        out.extend_from_slice(&round.to_le_bytes());
+        out.extend_from_slice(&tag.to_le_bytes());
+        out.extend_from_slice(&worker.to_le_bytes());
+        match self {
+            WireMessage::ModelBroadcast {
+                params, mask_seed, ..
+            } => {
+                out.extend_from_slice(&mask_seed.to_le_bytes());
+                for v in params {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            WireMessage::ModelBroadcastPlain { params, .. } => {
+                for v in params {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            WireMessage::CompressedGrad { values, mask, .. } => {
+                out.extend_from_slice(&(values.len() as u32).to_le_bytes());
+                for v in values {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                if let Some(m) = mask {
+                    m.encode_into(&mut out);
+                }
+            }
+            WireMessage::FullGrad { values, .. } => {
+                out.extend_from_slice(&(values.len() as u32).to_le_bytes());
+                for v in values {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        debug_assert_eq!(out.len(), self.encoded_len());
+        out
+    }
+
+    pub fn is_uplink(&self) -> bool {
+        matches!(
+            self,
+            WireMessage::CompressedGrad { .. } | WireMessage::FullGrad { .. }
+        )
+    }
+}
+
+/// Cumulative byte counters for one experiment.
+#[derive(Clone, Debug, Default)]
+pub struct ByteMeter {
+    /// Total worker→server bytes (summed over all n workers — the server
+    /// cannot distinguish Byzantine uplinks, so they count too, as in the
+    /// paper).
+    pub uplink: u64,
+    /// Total server→worker bytes (broadcast counted once per recipient).
+    pub downlink: u64,
+    /// Uplink bytes per worker id.
+    pub per_worker_uplink: Vec<u64>,
+}
+
+impl ByteMeter {
+    pub fn new(n_workers: usize) -> Self {
+        ByteMeter {
+            uplink: 0,
+            downlink: 0,
+            per_worker_uplink: vec![0; n_workers],
+        }
+    }
+
+    /// Record a broadcast delivered to `n_recipients` workers.
+    pub fn record_broadcast(&mut self, msg: &WireMessage, n_recipients: usize) {
+        debug_assert!(!msg.is_uplink());
+        self.downlink += msg.encoded_len() as u64 * n_recipients as u64;
+    }
+
+    /// Record one worker→server message.
+    pub fn record_uplink(&mut self, msg: &WireMessage) {
+        debug_assert!(msg.is_uplink());
+        let worker = match msg {
+            WireMessage::CompressedGrad { worker, .. }
+            | WireMessage::FullGrad { worker, .. } => *worker as usize,
+            _ => unreachable!(),
+        };
+        let len = msg.encoded_len() as u64;
+        self.uplink += len;
+        if worker < self.per_worker_uplink.len() {
+            self.per_worker_uplink[worker] += len;
+        }
+    }
+
+    /// Hot-path variant: record an uplink by its precomputed wire size
+    /// (see [`compressed_grad_len`] / [`full_grad_len`]) without building
+    /// a message. Tests pin these helpers against `encode().len()`.
+    pub fn record_uplink_sized(&mut self, worker: usize, bytes: usize) {
+        self.uplink += bytes as u64;
+        if worker < self.per_worker_uplink.len() {
+            self.per_worker_uplink[worker] += bytes as u64;
+        }
+    }
+
+    /// Hot-path variant of [`Self::record_broadcast`].
+    pub fn record_broadcast_sized(&mut self, bytes: usize, n_recipients: usize) {
+        self.downlink += bytes as u64 * n_recipients as u64;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.uplink + self.downlink
+    }
+}
+
+/// Wire size of a `CompressedGrad` with `k` payload floats and an optional
+/// mask of `mask_bytes` (from [`MaskWire::encoded_len`] or
+/// [`crate::compression::codec::mask_wire_len`]).
+pub fn compressed_grad_len(k: usize, mask_bytes: usize) -> usize {
+    HEADER_BYTES + 4 + 4 * k + mask_bytes
+}
+
+/// Wire size of a dense `FullGrad` of `d` floats.
+pub fn full_grad_len(d: usize) -> usize {
+    HEADER_BYTES + 4 + 4 * d
+}
+
+/// Wire size of a `ModelBroadcast{Plain}` of `d` parameters.
+pub fn broadcast_len(d: usize, with_mask_seed: bool) -> usize {
+    HEADER_BYTES + if with_mask_seed { 8 } else { 0 } + 4 * d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::codec::MaskWire;
+
+    #[test]
+    fn encoded_len_matches_encode() {
+        let msgs = vec![
+            WireMessage::ModelBroadcast {
+                round: 3,
+                params: vec![1.0; 100],
+                mask_seed: 42,
+            },
+            WireMessage::ModelBroadcastPlain {
+                round: 3,
+                params: vec![1.0; 100],
+            },
+            WireMessage::CompressedGrad {
+                round: 3,
+                worker: 7,
+                values: vec![0.5; 10],
+                mask: None,
+            },
+            WireMessage::CompressedGrad {
+                round: 3,
+                worker: 7,
+                values: vec![0.5; 10],
+                mask: Some(MaskWire::index_list(&[1, 5, 9], 100)),
+            },
+            WireMessage::FullGrad {
+                round: 1,
+                worker: 0,
+                values: vec![0.0; 64],
+            },
+        ];
+        for m in msgs {
+            assert_eq!(m.encode().len(), m.encoded_len(), "{m:?}");
+        }
+    }
+
+    #[test]
+    fn meter_accumulates_directionally() {
+        let mut meter = ByteMeter::new(3);
+        let bcast = WireMessage::ModelBroadcast {
+            round: 0,
+            params: vec![0.0; 10],
+            mask_seed: 1,
+        };
+        meter.record_broadcast(&bcast, 3);
+        assert_eq!(meter.downlink, 3 * bcast.encoded_len() as u64);
+        assert_eq!(meter.uplink, 0);
+
+        let up = WireMessage::CompressedGrad {
+            round: 0,
+            worker: 2,
+            values: vec![1.0; 4],
+            mask: None,
+        };
+        meter.record_uplink(&up);
+        assert_eq!(meter.uplink, up.encoded_len() as u64);
+        assert_eq!(meter.per_worker_uplink, vec![0, 0, up.encoded_len() as u64]);
+        assert_eq!(meter.total(), meter.uplink + meter.downlink);
+    }
+
+    #[test]
+    fn compression_saves_bytes_on_the_wire() {
+        // the point of the whole paper, at the message level:
+        let dense = WireMessage::FullGrad {
+            round: 0,
+            worker: 0,
+            values: vec![0.0; 11_809],
+        };
+        let sparse = WireMessage::CompressedGrad {
+            round: 0,
+            worker: 0,
+            values: vec![0.0; 118], // k/d = 0.01
+            mask: None,             // global mask: seed travels downlink
+        };
+        let ratio = sparse.encoded_len() as f64 / dense.encoded_len() as f64;
+        assert!(ratio < 0.011, "ratio={ratio}");
+    }
+}

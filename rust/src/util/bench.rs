@@ -1,0 +1,85 @@
+//! Minimal criterion-style bench harness (criterion itself is unavailable
+//! in this offline build). Used by everything under `rust/benches/` via
+//! `harness = false`.
+//!
+//! Prints `name  median  mean ± sd  (N samples)` lines and returns the
+//! sample vector so benches can do before/after comparisons
+//! (EXPERIMENTS.md §Perf).
+
+use super::stats;
+use std::time::Instant;
+
+/// Benchmark a closure: `warmup` untimed runs, then `samples` timed runs.
+/// Returns per-run seconds.
+pub fn time_fn<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    samples: usize,
+    mut f: F,
+) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut xs = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        xs.push(t0.elapsed().as_secs_f64());
+    }
+    report(name, &xs);
+    xs
+}
+
+/// Print a criterion-style summary line for externally collected samples.
+pub fn report(name: &str, xs: &[f64]) {
+    println!(
+        "{name:<48} median {:>12}  mean {:>12} ± {:>10}  ({} samples)",
+        fmt_s(stats::median(xs)),
+        fmt_s(stats::mean(xs)),
+        fmt_s(stats::std_dev(xs)),
+        xs.len()
+    );
+}
+
+/// Human-readable seconds.
+pub fn fmt_s(s: f64) -> String {
+    if !s.is_finite() {
+        return "n/a".into();
+    }
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Throughput helper: items per second from a per-run time.
+pub fn throughput(items: usize, seconds: f64) -> f64 {
+    items as f64 / seconds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_runs_expected_count() {
+        let mut n = 0;
+        let xs = time_fn("test", 2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(xs.len(), 5);
+        assert!(xs.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_s(2.0).ends_with(" s"));
+        assert!(fmt_s(2e-3).ends_with(" ms"));
+        assert!(fmt_s(2e-6).ends_with(" µs"));
+        assert!(fmt_s(2e-9).ends_with(" ns"));
+    }
+}

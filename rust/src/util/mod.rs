@@ -1,0 +1,7 @@
+//! Small self-contained utilities (`serde`/`rand`/`clap` are unavailable in
+//! this offline build — see DESIGN.md §8): a minimal JSON parser/writer and
+//! summary statistics for the bench harness.
+
+pub mod bench;
+pub mod json;
+pub mod stats;

@@ -1,0 +1,257 @@
+//! Workers and gradient engines.
+//!
+//! A [`GradEngine`] computes `(loss, ∇L_i(θ))` on a batch; two
+//! implementations exist:
+//!
+//! * [`NativeEngine`] — the pure-Rust model (`crate::model`), used for
+//!   parallel parameter sweeps;
+//! * [`PjrtEngine`] — the AOT artifacts through PJRT
+//!   (`crate::runtime`), the production three-layer path.
+//!
+//! Both compute the same function (pinned against each other in
+//! `rust/tests/test_pjrt_roundtrip.rs`).
+//!
+//! [`HonestWorker`] owns a data shard and a derived RNG stream; a
+//! label-flip-poisoned worker (`poisoned = true`) is how the data-level
+//! Byzantine attack is realized (payload-level attacks never compute
+//! gradients — see [`crate::attacks`]).
+
+use crate::data::{Dataset, CLASSES};
+use crate::model::{self, MlpSpec, Workspace};
+use crate::prng::Pcg64;
+use crate::runtime::PjrtRuntime;
+use anyhow::Result;
+
+/// Gradient/eval backend shared by all workers of a trainer.
+pub trait GradEngine {
+    /// Flat parameter count P.
+    fn p(&self) -> usize;
+    /// Fixed gradient batch size B.
+    fn batch(&self) -> usize;
+    /// Deterministic init from seed.
+    fn init_params(&mut self, seed: u64) -> Result<Vec<f32>>;
+    /// `(loss, grad)` on `[batch, d_in]` inputs with one-hot labels.
+    fn grad(&mut self, params: &[f32], x: &[f32], y1h: &[f32])
+        -> Result<(f32, Vec<f32>)>;
+    /// Argmax accuracy on a dataset.
+    fn accuracy(&mut self, params: &[f32], ds: &Dataset) -> Result<f64>;
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust engine.
+pub struct NativeEngine {
+    pub spec: MlpSpec,
+    batch: usize,
+    ws: Workspace,
+    grad_buf: Vec<f32>,
+}
+
+impl NativeEngine {
+    pub fn new(spec: MlpSpec, batch: usize) -> Self {
+        let p = spec.p();
+        NativeEngine {
+            spec,
+            batch,
+            ws: Workspace::default(),
+            grad_buf: vec![0.0; p],
+        }
+    }
+}
+
+impl GradEngine for NativeEngine {
+    fn p(&self) -> usize {
+        self.spec.p()
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn init_params(&mut self, seed: u64) -> Result<Vec<f32>> {
+        let mut rng = Pcg64::new(seed, 0x1217);
+        Ok(self.spec.init_params(&mut rng))
+    }
+
+    fn grad(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y1h: &[f32],
+    ) -> Result<(f32, Vec<f32>)> {
+        let b = x.len() / self.spec.d_in;
+        let loss = model::loss_and_grad(
+            &self.spec,
+            params,
+            x,
+            y1h,
+            b,
+            &mut self.grad_buf,
+            &mut self.ws,
+        );
+        Ok((loss, self.grad_buf.clone()))
+    }
+
+    fn accuracy(&mut self, params: &[f32], ds: &Dataset) -> Result<f64> {
+        Ok(model::accuracy(
+            &self.spec,
+            params,
+            &ds.images,
+            &ds.labels,
+            &mut self.ws,
+        ))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// PJRT engine over the AOT artifacts.
+pub struct PjrtEngine {
+    pub rt: PjrtRuntime,
+}
+
+impl PjrtEngine {
+    pub fn load(dir: &str) -> Result<Self> {
+        Ok(PjrtEngine {
+            rt: PjrtRuntime::load(dir)?,
+        })
+    }
+}
+
+impl GradEngine for PjrtEngine {
+    fn p(&self) -> usize {
+        self.rt.meta.p
+    }
+
+    fn batch(&self) -> usize {
+        self.rt.meta.batch
+    }
+
+    fn init_params(&mut self, seed: u64) -> Result<Vec<f32>> {
+        self.rt.init_params(seed)
+    }
+
+    fn grad(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y1h: &[f32],
+    ) -> Result<(f32, Vec<f32>)> {
+        self.rt.grad(params, x, y1h)
+    }
+
+    fn accuracy(&mut self, params: &[f32], ds: &Dataset) -> Result<f64> {
+        self.rt.accuracy(params, ds)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// A gradient-computing worker (honest, or label-flip-poisoned Byzantine).
+pub struct HonestWorker {
+    pub id: usize,
+    pub shard: Dataset,
+    /// Per-worker RNG stream (batch sampling and, under local
+    /// sparsification, mask draws).
+    pub rng: Pcg64,
+    /// Data-level Byzantine: compute on y → (9 − y) labels.
+    pub poisoned: bool,
+    x_buf: Vec<f32>,
+    y_buf: Vec<f32>,
+}
+
+impl HonestWorker {
+    pub fn new(id: usize, shard: Dataset, root: &Pcg64, poisoned: bool) -> Self {
+        HonestWorker {
+            id,
+            shard,
+            rng: root.derive(0x776f726b, id as u64, 0), // "work"
+            poisoned,
+            x_buf: Vec::new(),
+            y_buf: Vec::new(),
+        }
+    }
+
+    /// Sample this round's batch and compute the local gradient
+    /// (Algorithm 1, step 3b). `batch = 0` means full shard.
+    pub fn compute_grad(
+        &mut self,
+        engine: &mut dyn GradEngine,
+        params: &[f32],
+        batch: usize,
+    ) -> Result<(f32, Vec<f32>)> {
+        let b = if batch == 0 { engine.batch() } else { batch };
+        self.shard
+            .sample_batch(&mut self.rng, b, &mut self.x_buf, &mut self.y_buf);
+        if self.poisoned {
+            flip_onehot_labels(&mut self.y_buf);
+        }
+        engine.grad(params, &self.x_buf, &self.y_buf)
+    }
+}
+
+/// y → 9 − y on one-hot rows (the classic label-flip poison).
+pub fn flip_onehot_labels(y1h: &mut [f32]) {
+    for row in y1h.chunks_mut(CLASSES) {
+        row.reverse();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generate_synthetic;
+
+    #[test]
+    fn flip_labels_reverses_rows() {
+        let mut y = vec![0.0; 20];
+        y[3] = 1.0; // class 3, row 0
+        y[10] = 1.0; // class 0, row 1
+        flip_onehot_labels(&mut y);
+        assert_eq!(y[6], 1.0); // 9 - 3
+        assert_eq!(y[19], 1.0); // 9 - 0
+    }
+
+    #[test]
+    fn native_engine_grad_shapes() {
+        let mut eng = NativeEngine::new(MlpSpec::default(), 60);
+        let params = eng.init_params(1).unwrap();
+        assert_eq!(params.len(), 11_809);
+        let ds = generate_synthetic(3, 100);
+        let mut w = HonestWorker::new(0, ds, &Pcg64::new(1, 1), false);
+        let (loss, grad) = w.compute_grad(&mut eng, &params, 60).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert_eq!(grad.len(), 11_809);
+    }
+
+    #[test]
+    fn poisoned_worker_gradient_differs() {
+        let mut eng = NativeEngine::new(MlpSpec::default(), 32);
+        let params = eng.init_params(2).unwrap();
+        let ds = generate_synthetic(4, 64);
+        let root = Pcg64::new(9, 9);
+        let mut honest = HonestWorker::new(0, ds.clone(), &root, false);
+        let mut poisoned = HonestWorker::new(0, ds, &root, true);
+        let (_, g1) = honest.compute_grad(&mut eng, &params, 32).unwrap();
+        let (_, g2) = poisoned.compute_grad(&mut eng, &params, 32).unwrap();
+        // same batch (same rng stream), different labels -> different grads
+        assert_ne!(g1, g2);
+    }
+
+    #[test]
+    fn worker_batches_are_reproducible_per_stream() {
+        let ds = generate_synthetic(5, 128);
+        let root = Pcg64::new(3, 3);
+        let mut eng = NativeEngine::new(MlpSpec::default(), 16);
+        let params = eng.init_params(5).unwrap();
+        let mut w1 = HonestWorker::new(4, ds.clone(), &root, false);
+        let mut w2 = HonestWorker::new(4, ds, &root, false);
+        let (l1, g1) = w1.compute_grad(&mut eng, &params, 16).unwrap();
+        let (l2, g2) = w2.compute_grad(&mut eng, &params, 16).unwrap();
+        assert_eq!(l1, l2);
+        assert_eq!(g1, g2);
+    }
+}

@@ -1,0 +1,123 @@
+//! End-to-end CLI tests: drive the compiled `rosdhb` binary the way a
+//! user would (cargo exposes the path via `CARGO_BIN_EXE_rosdhb`).
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_rosdhb"))
+}
+
+#[test]
+fn info_runs() {
+    let out = bin().arg("info").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8(out.stdout).unwrap();
+    assert!(text.contains("rosdhb"), "{text}");
+}
+
+#[test]
+fn train_small_run_emits_json_report() {
+    let out = bin()
+        .args([
+            "train",
+            "--rounds", "5",
+            "--train_size", "500",
+            "--test_size", "100",
+            "--n_honest", "4",
+            "--n_byz", "1",
+            "--batch", "20",
+            "--stop_at_tau", "false",
+            "--eval_every", "5",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8(out.stdout).unwrap();
+    let j = rosdhb::util::json::Json::parse(text.trim()).unwrap();
+    assert_eq!(j.get("rounds_run").unwrap().as_usize(), Some(5));
+    assert!(j.get("uplink_bytes").unwrap().as_f64().unwrap() > 0.0);
+    assert!(j.get("config").unwrap().get("algorithm").is_some());
+}
+
+#[test]
+fn train_rejects_bad_flags() {
+    let out = bin()
+        .args(["train", "--bogus_key", "1"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("bogus_key"), "{err}");
+
+    let out = bin()
+        .args(["train", "--n_byz", "10", "--n_honest", "4"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "f >= n/2 must be rejected");
+}
+
+#[test]
+fn train_with_config_file_and_override() {
+    let dir = std::env::temp_dir();
+    let cfg = dir.join("rosdhb_cli_test.toml");
+    std::fs::write(
+        &cfg,
+        "[experiment]\nrounds = 4\ntrain_size = 400\ntest_size = 100\n\
+         n_honest = 3\nn_byz = 1\nbatch = 20\nstop_at_tau = false\n",
+    )
+    .unwrap();
+    let out = bin()
+        .args([
+            "train",
+            "--config",
+            cfg.to_str().unwrap(),
+            "--rounds",
+            "6", // override wins
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let j = rosdhb::util::json::Json::parse(
+        String::from_utf8(out.stdout).unwrap().trim(),
+    )
+    .unwrap();
+    assert_eq!(j.get("rounds_run").unwrap().as_usize(), Some(6));
+}
+
+#[test]
+fn gb_command_reports_estimates() {
+    let out = bin()
+        .args([
+            "gb",
+            "--samples", "4",
+            "--train_size", "500",
+            "--test_size", "100",
+            "--n_honest", "4",
+            "--n_byz", "1",
+            "--batch", "20",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8(out.stdout).unwrap();
+    assert!(text.contains("G^2=") && text.contains("kappa"), "{text}");
+}
+
+#[test]
+fn unknown_command_fails_cleanly() {
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}

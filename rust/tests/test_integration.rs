@@ -1,0 +1,240 @@
+//! Cross-module integration: the full Trainer on the native engine across
+//! the (algorithm × attack × aggregator) grid, byte-accounting invariants,
+//! CSV output, config-file driving, and the CLI surface.
+
+use rosdhb::config::{Algorithm as AlgoId, ExperimentConfig};
+use rosdhb::config::toml::TomlDoc;
+use rosdhb::coordinator::Trainer;
+use rosdhb::heterogeneity;
+
+fn base_cfg() -> ExperimentConfig {
+    let mut c = ExperimentConfig::default_mnist_like();
+    c.train_size = 1_000;
+    c.test_size = 300;
+    c.rounds = 40;
+    c.eval_every = 20;
+    c.n_honest = 6;
+    c.n_byz = 2;
+    c.batch = 30;
+    c.gamma = 0.3;
+    c.k_frac = 0.1;
+    c.stop_at_tau = false;
+    c.aggregator = "nnm+cwtm".into();
+    c.attack = "alie".into();
+    c
+}
+
+#[test]
+fn every_algorithm_runs_and_learns_without_attack() {
+    for algo in [
+        AlgoId::RoSdhb,
+        AlgoId::RoSdhbLocal,
+        AlgoId::RoSdhbU,
+        AlgoId::ByzDashaPage,
+        AlgoId::RobustDgd,
+        AlgoId::DgdRandK,
+        AlgoId::Dgd,
+    ] {
+        let mut cfg = base_cfg();
+        cfg.algorithm = algo;
+        cfg.attack = "none".into();
+        cfg.n_byz = 0;
+        cfg.rounds = 80;
+        let r = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        let first = r.log.rows.first().unwrap().train_loss;
+        let last = r.final_loss.unwrap();
+        assert!(
+            last < first,
+            "{}: loss did not fall ({first} -> {last})",
+            algo.name()
+        );
+        assert!(r.uplink_bytes > 0 && r.downlink_bytes > 0);
+    }
+}
+
+#[test]
+fn every_attack_is_survivable_by_rosdhb() {
+    for attack in ["none", "alie", "ipm", "signflip", "noise", "mimic",
+                   "labelflip"] {
+        let mut cfg = base_cfg();
+        cfg.attack = attack.into();
+        cfg.rounds = 80;
+        let r = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        let first = r.log.rows.first().unwrap().train_loss;
+        let last = r.final_loss.unwrap();
+        assert!(
+            last.is_finite() && last < first,
+            "attack {attack}: {first} -> {last}"
+        );
+    }
+}
+
+#[test]
+fn every_aggregator_survives_alie() {
+    for agg in ["cwtm", "median", "geomed", "multikrum", "nnm+cwtm",
+                "nnm+geomed"] {
+        let mut cfg = base_cfg();
+        cfg.aggregator = agg.into();
+        cfg.rounds = 80;
+        let r = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        let last = r.final_loss.unwrap();
+        assert!(last.is_finite(), "{agg} diverged");
+    }
+}
+
+#[test]
+fn uplink_bytes_ratio_matches_k_frac() {
+    // RoSDHB global: uplink payload per worker per round ≈ k·4 + header;
+    // the ratio between two k_frac settings must match within header
+    // overhead.
+    let run = |kf: f64| {
+        let mut cfg = base_cfg();
+        cfg.attack = "none".into();
+        cfg.n_byz = 0;
+        cfg.k_frac = kf;
+        cfg.rounds = 10;
+        Trainer::from_config(&cfg).unwrap().run().unwrap().uplink_bytes
+    };
+    let b10 = run(0.1);
+    let b50 = run(0.5);
+    let ratio = b50 as f64 / b10 as f64;
+    assert!(
+        (ratio - 5.0).abs() < 0.3,
+        "expected ~5x uplink ratio, got {ratio}"
+    );
+}
+
+#[test]
+fn downlink_includes_mask_seed_only_for_global() {
+    let run = |algo: AlgoId| {
+        let mut cfg = base_cfg();
+        cfg.algorithm = algo;
+        cfg.attack = "none".into();
+        cfg.n_byz = 0;
+        cfg.rounds = 4;
+        Trainer::from_config(&cfg).unwrap().run().unwrap().downlink_bytes
+    };
+    let global = run(AlgoId::RoSdhb);
+    let local = run(AlgoId::RoSdhbLocal);
+    // global broadcast carries 8 extra seed bytes per worker per round
+    assert_eq!(global - local, 8 * 6 * 4);
+}
+
+#[test]
+fn csv_output_is_written_and_parseable() {
+    let path = std::env::temp_dir().join("rosdhb_it_log.csv");
+    let mut cfg = base_cfg();
+    cfg.rounds = 6;
+    cfg.csv_out = Some(path.to_str().unwrap().into());
+    Trainer::from_config(&cfg).unwrap().run().unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 7, "header + 6 rounds");
+    assert!(lines[0].starts_with("round,train_loss"));
+    for l in &lines[1..] {
+        assert_eq!(l.split(',').count(), 8);
+    }
+}
+
+#[test]
+fn config_file_end_to_end() {
+    let path = std::env::temp_dir().join("rosdhb_it_cfg.toml");
+    std::fs::write(
+        &path,
+        r#"
+        [experiment]
+        algorithm = "rosdhb"
+        n_honest = 4
+        n_byz = 1
+        rounds = 5
+        train_size = 500
+        test_size = 100
+        batch = 20
+        k_frac = 0.2
+        attack = "ipm"
+        aggregator = "cwtm"
+        stop_at_tau = false
+        "#,
+    )
+    .unwrap();
+    let doc = TomlDoc::parse_file(path.to_str().unwrap()).unwrap();
+    let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+    assert_eq!(cfg.n_honest, 4);
+    let r = Trainer::from_config(&cfg).unwrap().run().unwrap();
+    assert_eq!(r.rounds_run, 5);
+}
+
+#[test]
+fn gb_estimate_on_real_task_is_sane() {
+    let cfg = base_cfg();
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    let mut pts = Vec::new();
+    for s in 0..12 {
+        t.step(s + 1).unwrap();
+        let grads = t.probe_honest_gradients().unwrap();
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        pts.push(heterogeneity::sample_from_grads(&refs));
+    }
+    let est = heterogeneity::estimate(&pts);
+    // iid partition of a homogeneous task: small B, finite G
+    assert!(est.g_sq.is_finite() && est.b_sq.is_finite());
+    assert!(est.g_sq >= 0.0 && est.b_sq >= 0.0);
+}
+
+#[test]
+fn stop_at_tau_halts_early_with_tau_metrics() {
+    let mut cfg = base_cfg();
+    cfg.attack = "none".into();
+    cfg.n_byz = 0;
+    cfg.tau = 0.5; // easy target
+    cfg.stop_at_tau = true;
+    cfg.rounds = 400;
+    cfg.gamma = 0.5;
+    cfg.eval_every = 10;
+    let r = Trainer::from_config(&cfg).unwrap().run().unwrap();
+    if let Some(rt) = r.rounds_to_tau {
+        assert!(r.rounds_run <= rt + cfg.eval_every);
+        assert!(r.uplink_bytes_to_tau.unwrap() <= r.uplink_bytes);
+    } else {
+        panic!("should reach tau=0.5: best {:?}", r.best_acc);
+    }
+}
+
+#[test]
+fn dirichlet_partition_raises_measured_heterogeneity() {
+    // (G,B)-dissimilarity (Def. 2.3) must be visibly larger under a
+    // label-skew partition than under the paper's iid split.
+    let measure = |partition: &str| -> f64 {
+        let mut cfg = base_cfg();
+        cfg.partition = partition.into();
+        cfg.attack = "none".into();
+        cfg.n_byz = 0;
+        let mut t = Trainer::from_config(&cfg).unwrap();
+        let mut dis = 0.0;
+        for s in 0..8 {
+            t.step(s + 1).unwrap();
+            let grads = t.probe_honest_gradients().unwrap();
+            let refs: Vec<&[f32]> =
+                grads.iter().map(|g| g.as_slice()).collect();
+            dis += heterogeneity::sample_from_grads(&refs).dissimilarity;
+        }
+        dis / 8.0
+    };
+    let iid = measure("iid");
+    let skew = measure("dirichlet:0.1");
+    assert!(
+        skew > 2.0 * iid,
+        "dirichlet dissimilarity {skew} should dwarf iid {iid}"
+    );
+}
+
+#[test]
+fn partition_spec_validation() {
+    let mut cfg = base_cfg();
+    cfg.partition = "dirichlet:0.5".into();
+    assert!(Trainer::from_config(&cfg).is_ok());
+    cfg.partition = "dirichlet:-1".into();
+    assert!(cfg.validate().is_err());
+    cfg.partition = "zigzag".into();
+    assert!(cfg.validate().is_err());
+}

@@ -1,0 +1,189 @@
+//! Three-layer composition tests: the AOT artifacts (L1 Pallas + L2 JAX,
+//! compiled by `make artifacts`) executed through PJRT must compute the
+//! same model as the pure-Rust engine, and the full coordinator must run
+//! end-to-end on the PJRT path.
+//!
+//! These tests skip (pass with a notice) when `artifacts/` is absent so
+//! `cargo test` works pre-`make artifacts`; CI runs `make test` which
+//! builds artifacts first.
+
+use rosdhb::config::{Engine, ExperimentConfig};
+use rosdhb::coordinator::Trainer;
+use rosdhb::data::generate_synthetic;
+use rosdhb::prng::Pcg64;
+use rosdhb::runtime::PjrtRuntime;
+use rosdhb::tensor;
+use rosdhb::worker::{GradEngine, NativeEngine};
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("ROSDHB_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    std::path::Path::new(&dir)
+        .join("meta.json")
+        .exists()
+        .then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("SKIP: artifacts/ missing (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn artifacts_load_and_report_expected_meta() {
+    let dir = require_artifacts!();
+    let rt = PjrtRuntime::load(&dir).unwrap();
+    assert_eq!(rt.meta.p, 11_809);
+    assert_eq!(rt.meta.batch, 60);
+    assert_eq!(rt.meta.d_in, 196);
+    assert_eq!(rt.meta.classes, 10);
+}
+
+#[test]
+fn init_artifact_is_deterministic_and_seed_sensitive() {
+    let dir = require_artifacts!();
+    let rt = PjrtRuntime::load(&dir).unwrap();
+    let a = rt.init_params(42).unwrap();
+    let b = rt.init_params(42).unwrap();
+    let c = rt.init_params(43).unwrap();
+    assert_eq!(a, b);
+    assert!(tensor::dist_sq(&a, &c) > 1e-3);
+    assert_eq!(a.len(), 11_809);
+    // He init: weight scale sane, biases zero
+    let norm = tensor::norm(&a);
+    assert!(norm > 1.0 && norm < 100.0, "‖θ0‖ = {norm}");
+}
+
+#[test]
+fn pjrt_grad_matches_native_engine() {
+    // THE three-layer correctness pin: Pallas-kernel model through PJRT
+    // == hand-written Rust backprop, on identical inputs.
+    let dir = require_artifacts!();
+    let rt = PjrtRuntime::load(&dir).unwrap();
+    let params = rt.init_params(7).unwrap();
+
+    let mut native = NativeEngine::new(rt.meta.spec(), rt.meta.batch);
+    let ds = generate_synthetic(3, 600);
+    let mut rng = Pcg64::new(5, 5);
+    let (mut x, mut y) = (Vec::new(), Vec::new());
+    ds.sample_batch(&mut rng, rt.meta.batch, &mut x, &mut y);
+
+    let (loss_p, grad_p) = rt.grad(&params, &x, &y).unwrap();
+    let (loss_n, grad_n) = native.grad(&params, &x, &y).unwrap();
+
+    assert!(
+        (loss_p - loss_n).abs() < 1e-4 * (1.0 + loss_n.abs()),
+        "loss: pjrt {loss_p} vs native {loss_n}"
+    );
+    let rel = tensor::dist_sq(&grad_p, &grad_n).sqrt()
+        / tensor::norm(&grad_n).max(1e-9);
+    assert!(rel < 1e-3, "grad relative diff {rel}");
+}
+
+#[test]
+fn pjrt_eval_matches_native_accuracy() {
+    let dir = require_artifacts!();
+    let rt = PjrtRuntime::load(&dir).unwrap();
+    let params = rt.init_params(9).unwrap();
+    let test = generate_synthetic(11, 700); // non-multiple of eval_batch
+    let acc_p = rt.accuracy(&params, &test).unwrap();
+    let mut native = NativeEngine::new(rt.meta.spec(), rt.meta.batch);
+    let acc_n = native.accuracy(&params, &test).unwrap();
+    assert!(
+        (acc_p - acc_n).abs() < 0.01,
+        "pjrt {acc_p} vs native {acc_n}"
+    );
+}
+
+#[test]
+fn momentum_kernel_artifact_matches_native_law() {
+    // The L1 Pallas momentum kernel, AOT-compiled and executed from Rust,
+    // must equal tensor::scale_add (which itself matches ref.py).
+    let dir = require_artifacts!();
+    let rt = PjrtRuntime::load(&dir).unwrap();
+    let mut rng = Pcg64::new(21, 21);
+    let mut m = vec![0f32; rt.meta.p];
+    let mut g = vec![0f32; rt.meta.p];
+    rng.fill_gaussian(&mut m, 1.0);
+    rng.fill_gaussian(&mut g, 1.0);
+    let got = rt.momentum09(&m, &g).unwrap();
+    let mut want = m.clone();
+    rosdhb::tensor::scale_add(&mut want, 0.9, 0.1, &g);
+    let rel = tensor::dist_sq(&got, &want).sqrt()
+        / tensor::norm(&want).max(1e-9);
+    assert!(rel < 1e-6, "pallas momentum vs native: rel diff {rel}");
+}
+
+#[test]
+fn pjrt_end_to_end_training_improves_accuracy() {
+    // The DESIGN.md end-to-end requirement, test-sized: full coordinator
+    // on the PJRT engine under attack; accuracy must clearly exceed the
+    // 10% random baseline after a short run.
+    let dir = require_artifacts!();
+    let mut cfg = ExperimentConfig::default_mnist_like();
+    cfg.engine = Engine::Pjrt;
+    cfg.artifacts_dir = dir;
+    cfg.n_honest = 5;
+    cfg.n_byz = 2;
+    cfg.attack = "alie".into();
+    cfg.aggregator = "nnm+cwtm".into();
+    cfg.k_frac = 0.1;
+    cfg.gamma = 0.5;
+    cfg.rounds = 60;
+    cfg.eval_every = 20;
+    cfg.train_size = 3_000;
+    cfg.test_size = 500;
+    cfg.stop_at_tau = false;
+    let mut trainer = Trainer::from_config(&cfg).unwrap();
+    let acc0 = trainer.evaluate().unwrap();
+    let report = trainer.run().unwrap();
+    let best = report.best_acc.unwrap();
+    assert!(
+        best > acc0.max(0.3),
+        "pjrt training did not learn: {acc0} -> {best}"
+    );
+    assert!(report.uplink_bytes > 0);
+}
+
+#[test]
+fn pjrt_and_native_trainers_agree_on_loss_trajectory() {
+    // Same config, same seeds, two engines: per-round losses must agree
+    // to f32 tolerance for several rounds (the engines are the same
+    // function; divergence indicates marshalling or layout bugs).
+    let dir = require_artifacts!();
+    let mut cfg = ExperimentConfig::default_mnist_like();
+    cfg.n_honest = 3;
+    cfg.n_byz = 0;
+    cfg.attack = "none".into();
+    cfg.aggregator = "mean".into();
+    cfg.k_frac = 1.0;
+    cfg.gamma = 0.3;
+    cfg.rounds = 5;
+    cfg.train_size = 900;
+    cfg.test_size = 200;
+    cfg.batch = 60;
+
+    let mut native = Trainer::from_config(&cfg).unwrap();
+    let mut cfg_p = cfg.clone();
+    cfg_p.engine = Engine::Pjrt;
+    cfg_p.artifacts_dir = dir;
+    let mut pjrt = Trainer::from_config(&cfg_p).unwrap();
+
+    // align initial params (engines use different init streams)
+    pjrt.params = native.params.clone();
+    for t in 1..=5 {
+        let (ln, _) = native.step(t).unwrap();
+        let (lp, _) = pjrt.step(t).unwrap();
+        assert!(
+            (ln - lp).abs() < 1e-3 * (1.0 + ln.abs()),
+            "round {t}: native {ln} vs pjrt {lp}"
+        );
+    }
+}
