@@ -1,28 +1,33 @@
 //! Whole-stack hot-path profile (§Perf): per-operation latency of every
-//! stage of a coordinator round, plus end-to-end rounds/s for both
-//! engines. Before/after numbers for the optimization pass are recorded
-//! in EXPERIMENTS.md §Perf.
+//! stage of a coordinator round, the spawn-per-round vs persistent-pool
+//! gradient fan-out, and an end-to-end A/B of the dense oracle vs the
+//! pooled + sparse-domain round engine. Before/after numbers for the
+//! optimization pass are recorded in EXPERIMENTS.md §Perf.
 //!
 //! Stages (paper operating point: d = 11 809, n = 19, k/d = 0.05):
 //!   1. worker gradient        (native model; PJRT artifact if present)
 //!   2. RandK mask derivation
 //!   3. compress + reconstruct
-//!   4. momentum update × n
-//!   5. robust aggregation (nnm+cwtm)
+//!   4. momentum update × n    (dense scale_add vs sparse scale+scatter)
+//!   5. robust aggregation     (dense vs column-block + cached carry)
 //!   6. model step (axpy)
+//!   7. gradient fan-out       (spawn-per-round vs persistent pool)
+//!   8. e2e rounds/s           (round_engine = dense vs sparse)
 //!
 //! Run: `cargo bench --bench bench_hotpath`
 
 use rosdhb::aggregators;
 use rosdhb::compression::{mask_from_seed, RandK};
-use rosdhb::config::{Engine, ExperimentConfig};
+use rosdhb::config::ExperimentConfig;
+use rosdhb::coordinator::pool::{Job, WorkerPool};
 use rosdhb::coordinator::Trainer;
 use rosdhb::data::generate_synthetic;
 use rosdhb::model::MlpSpec;
 use rosdhb::prng::Pcg64;
 use rosdhb::tensor;
 use rosdhb::util::bench;
-use rosdhb::worker::{GradEngine, NativeEngine};
+use rosdhb::worker::{GradEngine, HonestWorker, NativeEngine};
+use std::sync::Arc;
 
 const D: usize = 11_809;
 const N: usize = 19;
@@ -62,15 +67,26 @@ fn main() {
         mask.reconstruct_into(&payload, &mut recon);
     });
 
-    // 4. momentum update x n
+    // 4. momentum update x n: dense densify-then-scale_add vs the sparse
+    // engine's in-place scale + scatter (bit-identical results)
     let mut momenta = vec![vec![0f32; D]; N];
-    bench::time_fn("momentum update x19", 5, 100, || {
+    bench::time_fn("momentum x19/dense (recon+scale_add)", 5, 100, || {
         for m in momenta.iter_mut() {
+            mask.reconstruct_into(&payload, &mut recon);
             tensor::scale_add(m, 0.9, 0.1, &recon);
         }
     });
+    let alpha = mask.alpha();
+    bench::time_fn("momentum x19/sparse (scale+scatter)", 5, 100, || {
+        for m in momenta.iter_mut() {
+            tensor::scale(m, 0.9);
+            for (&ci, &v) in mask.idx.iter().zip(&payload) {
+                m[ci as usize] += 0.1 * (alpha * v);
+            }
+        }
+    });
 
-    // 5. robust aggregation
+    // 5. robust aggregation: full-d dense vs k-column block
     let inputs: Vec<Vec<f32>> = (0..N)
         .map(|_| {
             let mut v = vec![0f32; D];
@@ -80,56 +96,144 @@ fn main() {
         .collect();
     let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
     let mut out = vec![0f32; D];
-    for spec in ["cwtm", "nnm+cwtm"] {
-        let agg = aggregators::parse_spec(spec, 9).unwrap();
-        bench::time_fn(&format!("aggregate/{spec} (n=19)"), 2, 15, || {
-            agg.aggregate(&refs, &mut out);
-        });
+    for aggspec in ["cwtm", "nnm+cwtm"] {
+        let agg = aggregators::parse_spec(aggspec, 9).unwrap();
+        bench::time_fn(
+            &format!("aggregate/{aggspec} (n=19, full d)"),
+            2,
+            15,
+            || {
+                agg.aggregate(&refs, &mut out);
+            },
+        );
     }
+    let cwtm = aggregators::parse_spec("cwtm", 9).unwrap();
+    let mut block = vec![0f32; K];
+    bench::time_fn("aggregate/cwtm (n=19, k-block)", 2, 30, || {
+        cwtm.aggregate_block(&refs, &mask.idx, &mut block);
+    });
 
     // 6. model step
     bench::time_fn("model step (axpy d=11809)", 5, 200, || {
         tensor::axpy(&mut g, -0.1, &out);
     });
 
-    // end-to-end rounds/s, native engine
-    let mut cfg = ExperimentConfig::default_mnist_like();
-    cfg.n_honest = 10;
-    cfg.n_byz = 9;
-    cfg.attack = "alie".into();
-    cfg.aggregator = "nnm+cwtm".into();
-    cfg.k_frac = 0.05;
-    cfg.rounds = 30;
-    cfg.eval_every = 1000;
-    cfg.train_size = 3_000;
-    cfg.test_size = 500;
-    cfg.stop_at_tau = false;
-    let mut trainer = Trainer::from_config(&cfg).unwrap();
-    let mut t = 1u64;
-    let xs = bench::time_fn("e2e round/native (n=19, alie)", 2, 20, || {
-        trainer.step(t).unwrap();
-        t += 1;
+    // 7. gradient fan-out: the seed's per-round spawn storm vs the
+    // persistent pool (same workers, same engines-per-executor design)
+    let root = Pcg64::new(11, 11);
+    let shard = generate_synthetic(9, 600);
+    let mut sworkers: Vec<HonestWorker> = (0..N)
+        .map(|i| HonestWorker::new(i, shard.clone(), &root, false))
+        .collect();
+    let mut sengines: Vec<NativeEngine> =
+        (0..N).map(|_| NativeEngine::new(spec, 60)).collect();
+    let params_ref = &params;
+    bench::time_fn("grad fanout/spawn-per-round (n=19)", 2, 15, || {
+        std::thread::scope(|s| {
+            for (w, e) in sworkers.iter_mut().zip(sengines.iter_mut()) {
+                s.spawn(move || {
+                    let _ = w.compute_grad(e, params_ref, 60);
+                });
+            }
+        });
     });
-    println!(
-        "#   -> {:.1} rounds/s native",
-        1.0 / rosdhb::util::stats::median(&xs)
+    let threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(N);
+    let pool = WorkerPool::new(threads, spec, 60);
+    let params_arc = Arc::new(params.clone());
+    let mut pworkers: Vec<Option<HonestWorker>> = (0..N)
+        .map(|i| Some(HonestWorker::new(i, shard.clone(), &root, false)))
+        .collect();
+    let mut bufs: Vec<Option<Vec<f32>>> =
+        (0..N).map(|_| Some(vec![0f32; D])).collect();
+    bench::time_fn(
+        &format!("grad fanout/persistent pool ({threads} thr)"),
+        2,
+        15,
+        || {
+            for i in 0..N {
+                pool.submit(Job {
+                    slot: i,
+                    worker: pworkers[i].take().unwrap(),
+                    params: Arc::clone(&params_arc),
+                    batch: 60,
+                    buf: bufs[i].take().unwrap(),
+                })
+                .unwrap();
+            }
+            for _ in 0..N {
+                let d = pool.recv().unwrap();
+                pworkers[d.slot] = Some(d.worker);
+                bufs[d.slot] = Some(d.buf);
+            }
+        },
     );
 
-    // end-to-end PJRT (only if artifacts exist)
-    if rosdhb::runtime::Meta::load("artifacts").is_ok() {
-        let mut cfg2 = cfg.clone();
-        cfg2.engine = Engine::Pjrt;
-        let mut trainer = Trainer::from_config(&cfg2).unwrap();
+    // 8. end-to-end rounds/s: dense oracle vs sparse-domain engine, both
+    // on the persistent pool (n = 19, ALIE, k/d = 0.05). cwtm is the
+    // coordinate-separable rule where the cached column path engages.
+    let mk_cfg = |round_engine: &str| {
+        let mut cfg = ExperimentConfig::default_mnist_like();
+        cfg.n_honest = 10;
+        cfg.n_byz = 9;
+        cfg.attack = "alie".into();
+        cfg.aggregator = "cwtm".into();
+        cfg.k_frac = 0.05;
+        cfg.rounds = 30;
+        cfg.eval_every = 1000;
+        cfg.train_size = 3_000;
+        cfg.test_size = 500;
+        cfg.stop_at_tau = false;
+        cfg.round_engine = round_engine.into();
+        cfg
+    };
+    let mut medians = Vec::new();
+    for mode in ["dense", "sparse"] {
+        let mut trainer = Trainer::from_config(&mk_cfg(mode)).unwrap();
         let mut t = 1u64;
-        let xs = bench::time_fn("e2e round/pjrt (n=19, alie)", 2, 10, || {
-            trainer.step(t).unwrap();
-            t += 1;
-        });
-        println!(
-            "#   -> {:.1} rounds/s pjrt",
-            1.0 / rosdhb::util::stats::median(&xs)
+        let xs = bench::time_fn(
+            &format!("e2e round/{mode} (n=19, alie, cwtm, k/d=0.05)"),
+            2,
+            20,
+            || {
+                trainer.step(t).unwrap();
+                t += 1;
+            },
         );
-    } else {
-        println!("# artifacts/ missing: skipping PJRT e2e (run `make artifacts`)");
+        let med = rosdhb::util::stats::median(&xs);
+        println!("#   -> {:.1} rounds/s ({mode})", 1.0 / med);
+        medians.push(med);
     }
+    println!(
+        "#   -> sparse-domain round engine: {:.2}x vs dense oracle at k/d=0.05, n=19",
+        medians[0] / medians[1]
+    );
+
+    // end-to-end PJRT (only in pjrt builds with artifacts present)
+    #[cfg(feature = "pjrt")]
+    {
+        use rosdhb::config::Engine;
+        if rosdhb::runtime::Meta::load("artifacts").is_ok() {
+            let mut cfg2 = mk_cfg("sparse");
+            cfg2.engine = Engine::Pjrt;
+            let mut trainer = Trainer::from_config(&cfg2).unwrap();
+            let mut t = 1u64;
+            let xs = bench::time_fn("e2e round/pjrt (n=19, alie)", 2, 10, || {
+                trainer.step(t).unwrap();
+                t += 1;
+            });
+            println!(
+                "#   -> {:.1} rounds/s pjrt",
+                1.0 / rosdhb::util::stats::median(&xs)
+            );
+        } else {
+            println!(
+                "# artifacts/ missing: skipping PJRT e2e (run `make artifacts`)"
+            );
+        }
+    }
+    #[cfg(not(feature = "pjrt"))]
+    println!("# built without the 'pjrt' feature: skipping PJRT e2e");
 }

@@ -12,6 +12,44 @@
 
 use super::{delta_ratio, Aggregator};
 
+/// Trimmed mean of one gathered column (the scratch is permuted in
+/// place): drop the `f` smallest and `f` largest, average the middle
+/// `keep = n − 2f`. The single kernel shared by [`Cwtm::aggregate`] and
+/// `Cwtm::aggregate_block`, so the dense and sparse round engines stay
+/// bit-identical by construction.
+fn trimmed_col_mean(col: &mut [f32], f: usize, keep: usize, inv: f32) -> f32 {
+    let acc: f32 = if f == 0 {
+        col.iter().sum()
+    } else {
+        // Partial selection instead of a full sort (§Perf): two O(n)
+        // selects expose exactly the middle order statistics [f, n−f)
+        // in col[f..f+keep], unordered.
+        col.select_nth_unstable_by(f, |a, b| a.total_cmp(b));
+        let upper = &mut col[f..];
+        upper.select_nth_unstable_by(keep - 1, |a, b| a.total_cmp(b));
+        upper[..keep].iter().sum()
+    };
+    acc * inv
+}
+
+/// Median of one gathered column (scratch permuted in place) — shared by
+/// both [`CwMedian`] entry points, same bit-parity rationale as
+/// [`trimmed_col_mean`].
+fn median_col(col: &mut [f32]) -> f32 {
+    let n = col.len();
+    // O(n) selection instead of a sort (§Perf).
+    col.select_nth_unstable_by(n / 2, |a, b| a.total_cmp(b));
+    if n % 2 == 1 {
+        col[n / 2]
+    } else {
+        let lower = col[..n / 2]
+            .iter()
+            .copied()
+            .fold(f32::NEG_INFINITY, f32::max);
+        0.5 * (lower + col[n / 2])
+    }
+}
+
 /// Coordinate-wise trimmed mean with trim level f.
 #[derive(Clone, Debug)]
 pub struct Cwtm {
@@ -59,20 +97,7 @@ impl Aggregator for Cwtm {
                 for (slot, row) in col.iter_mut().zip(inputs) {
                     *slot = row[ell];
                 }
-                let acc: f32 = if f == 0 {
-                    col.iter().sum()
-                } else {
-                    // Partial selection instead of a full sort (§Perf):
-                    // two O(n) selects expose exactly the middle order
-                    // statistics [f, n−f) in col[f..f+keep], unordered.
-                    col.select_nth_unstable_by(f, |a, b| a.total_cmp(b));
-                    let upper = &mut col[f..];
-                    upper.select_nth_unstable_by(keep - 1, |a, b| {
-                        a.total_cmp(b)
-                    });
-                    upper[..keep].iter().sum()
-                };
-                *slot_out = acc * inv;
+                *slot_out = trimmed_col_mean(&mut col, f, keep, inv);
             }
         };
         if workers == 1 {
@@ -98,6 +123,33 @@ impl Aggregator for Cwtm {
         let r = delta_ratio(n, f);
         6.0 * r * (1.0 + r)
     }
+
+    fn coordinate_separable(&self) -> bool {
+        true
+    }
+
+    /// Sparse-engine entry point: the dense per-coordinate kernel applied
+    /// to the selected columns only (same selects, same summation order —
+    /// bit-identical to the restriction of [`Self::aggregate`]).
+    fn aggregate_block(&self, inputs: &[&[f32]], cols: &[u32], out: &mut [f32]) {
+        let n = inputs.len();
+        debug_assert_eq!(cols.len(), out.len());
+        assert!(
+            n > 2 * self.f,
+            "CWTM needs n > 2f (n={n}, f={})",
+            self.f
+        );
+        let f = self.f;
+        let keep = n - 2 * f;
+        let inv = 1.0 / keep as f32;
+        let mut col: Vec<f32> = vec![0.0; n];
+        for (&ell, slot_out) in cols.iter().zip(out.iter_mut()) {
+            for (slot, row) in col.iter_mut().zip(inputs) {
+                *slot = row[ell as usize];
+            }
+            *slot_out = trimmed_col_mean(&mut col, f, keep, inv);
+        }
+    }
 }
 
 /// Coordinate-wise median.
@@ -117,17 +169,7 @@ impl Aggregator for CwMedian {
             for (slot, row) in col.iter_mut().zip(inputs) {
                 *slot = row[ell];
             }
-            // O(n) selection instead of a sort (§Perf).
-            col.select_nth_unstable_by(n / 2, |a, b| a.total_cmp(b));
-            out[ell] = if n % 2 == 1 {
-                col[n / 2]
-            } else {
-                let lower = col[..n / 2]
-                    .iter()
-                    .copied()
-                    .fold(f32::NEG_INFINITY, f32::max);
-                0.5 * (lower + col[n / 2])
-            };
+            out[ell] = median_col(&mut col);
         }
     }
 
@@ -143,6 +185,25 @@ impl Aggregator for CwMedian {
         }
         let r = delta_ratio(n, f);
         6.0 * r * (1.0 + r)
+    }
+
+    fn coordinate_separable(&self) -> bool {
+        true
+    }
+
+    /// Column-restricted median — same [`median_col`] kernel as
+    /// [`Self::aggregate`], bit-identical on the selected coordinates.
+    fn aggregate_block(&self, inputs: &[&[f32]], cols: &[u32], out: &mut [f32]) {
+        let n = inputs.len();
+        assert!(n > 0);
+        debug_assert_eq!(cols.len(), out.len());
+        let mut col: Vec<f32> = vec![0.0; n];
+        for (&ell, slot_out) in cols.iter().zip(out.iter_mut()) {
+            for (slot, row) in col.iter_mut().zip(inputs) {
+                *slot = row[ell as usize];
+            }
+            *slot_out = median_col(&mut col);
+        }
     }
 }
 

@@ -59,6 +59,13 @@ impl Aggregator for GeoMed {
         }
     }
 
+    /// Weiszfeld weights couple every coordinate, so GeoMed is not
+    /// coordinate-separable: the sparse round engine falls back to the
+    /// dense path and `aggregate_block` (trait default) is block-local.
+    fn coordinate_separable(&self) -> bool {
+        false
+    }
+
     /// κ ≤ 4δ/(1−2δ)·(1 + δ/(1−2δ))² — [2], Table 1 (GeoMed row).
     fn kappa(&self, n: usize, f: usize) -> f64 {
         if f == 0 {

@@ -64,6 +64,13 @@ impl Aggregator for Krum {
         out.copy_from_slice(inputs[best]);
     }
 
+    /// Selection uses full-space distances, so Krum is not
+    /// coordinate-separable: the sparse round engine falls back to the
+    /// dense path and `aggregate_block` (trait default) is block-local.
+    fn coordinate_separable(&self) -> bool {
+        false
+    }
+
     /// Krum's κ does not vanish with n (stays Θ(1)); bound from [2]:
     /// κ ≤ 6(1 + δ/(1−2δ))² — constants conservative.
     fn kappa(&self, n: usize, f: usize) -> f64 {

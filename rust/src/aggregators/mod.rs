@@ -36,6 +36,38 @@ pub trait Aggregator: Send + Sync {
     /// `f64::INFINITY` means "not robust".
     fn kappa(&self, n: usize, f: usize) -> f64;
 
+    /// True when the rule is **coordinate-separable**: output coordinate ℓ
+    /// depends only on the inputs' coordinate ℓ (CWTM, median, mean).
+    /// Separable rules commute with coordinate masking, which is what the
+    /// sparse round engine exploits: under a shared RandK mask only the k
+    /// masked columns change non-uniformly per round, so the remaining
+    /// d−k output coordinates can be carried over by homogeneity instead
+    /// of recomputed.
+    fn coordinate_separable(&self) -> bool {
+        false
+    }
+
+    /// Slice-based entry point: aggregate only the coordinates listed in
+    /// `cols` (sorted, distinct, global indices), writing one output per
+    /// column (`out.len() == cols.len()`).
+    ///
+    /// For coordinate-separable rules this equals the restriction of the
+    /// full output: `out[i] == F(inputs)[cols[i]]` bit-for-bit. For
+    /// vector-geometry rules (Krum, GeoMed, NNM) the default treats the
+    /// restricted rows as whole inputs (block-local aggregation), which is
+    /// a different function from restricting the full-space output — the
+    /// round engine therefore only takes this path when
+    /// [`Self::coordinate_separable`] is true.
+    fn aggregate_block(&self, inputs: &[&[f32]], cols: &[u32], out: &mut [f32]) {
+        debug_assert_eq!(cols.len(), out.len());
+        let rows: Vec<Vec<f32>> = inputs
+            .iter()
+            .map(|r| cols.iter().map(|&c| r[c as usize]).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|v| v.as_slice()).collect();
+        self.aggregate(&refs, out);
+    }
+
     /// Allocating convenience wrapper.
     fn aggregate_vec(&self, inputs: &[&[f32]]) -> Vec<f32> {
         let mut out = vec![0.0; inputs[0].len()];
@@ -62,6 +94,26 @@ impl Aggregator for Mean {
             0.0
         } else {
             f64::INFINITY
+        }
+    }
+
+    fn coordinate_separable(&self) -> bool {
+        true
+    }
+
+    fn aggregate_block(&self, inputs: &[&[f32]], cols: &[u32], out: &mut [f32]) {
+        debug_assert_eq!(cols.len(), out.len());
+        // Same accumulation order as tensor::mean_into (row-major sweep),
+        // so the block result is bit-identical to the dense restriction.
+        let inv = 1.0 / inputs.len() as f32;
+        out.fill(0.0);
+        for row in inputs {
+            for (o, &c) in out.iter_mut().zip(cols) {
+                *o += row[c as usize];
+            }
+        }
+        for o in out.iter_mut() {
+            *o *= inv;
         }
     }
 }
@@ -204,5 +256,57 @@ mod tests {
         let k_cwtm = empirical_kappa(&cwtm::Cwtm::new(2), &refs, 2);
         assert!(k_mean > 100.0, "mean κ̂ = {k_mean}");
         assert!(k_cwtm < 10.0, "cwtm κ̂ = {k_cwtm}");
+    }
+
+    #[test]
+    fn block_entry_point_matches_dense_restriction_for_separable_rules() {
+        let rows = corrupted_inputs(9, 2, 12, 1e3, 4);
+        let refs = as_refs(&rows);
+        let cols: Vec<u32> = vec![0, 3, 7, 11];
+        let rules: Vec<Box<dyn Aggregator>> = vec![
+            Box::new(Mean),
+            Box::new(cwtm::Cwtm::new(2)),
+            Box::new(cwtm::CwMedian),
+        ];
+        for agg in &rules {
+            assert!(agg.coordinate_separable(), "{}", agg.name());
+            let dense = agg.aggregate_vec(&refs);
+            let mut block = vec![0f32; cols.len()];
+            agg.aggregate_block(&refs, &cols, &mut block);
+            for (i, &c) in cols.iter().enumerate() {
+                assert_eq!(
+                    block[i],
+                    dense[c as usize],
+                    "{} col {c}",
+                    agg.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn block_entry_point_is_blockwise_for_vector_rules() {
+        // Non-separable rules aggregate the restricted vectors as whole
+        // inputs; check the default against a manual restriction.
+        let rows = corrupted_inputs(8, 2, 10, 1e4, 5);
+        let refs = as_refs(&rows);
+        let cols: Vec<u32> = vec![1, 4, 9];
+        let rules: Vec<Box<dyn Aggregator>> = vec![
+            Box::new(krum::Krum::new(2)),
+            Box::new(geomed::GeoMed::default()),
+            Box::new(nnm::Nnm::new(2, Box::new(cwtm::Cwtm::new(2)))),
+        ];
+        for agg in &rules {
+            assert!(!agg.coordinate_separable(), "{}", agg.name());
+            let restricted: Vec<Vec<f32>> = rows
+                .iter()
+                .map(|r| cols.iter().map(|&c| r[c as usize]).collect())
+                .collect();
+            let rrefs = as_refs(&restricted);
+            let want = agg.aggregate_vec(&rrefs);
+            let mut got = vec![0f32; cols.len()];
+            agg.aggregate_block(&refs, &cols, &mut got);
+            assert_eq!(got, want, "{}", agg.name());
+        }
     }
 }

@@ -65,6 +65,14 @@ impl Aggregator for Nnm {
         self.inner.aggregate(&refs, out);
     }
 
+    /// Mixing neighborhoods are chosen by full-space distances, so NNM∘F
+    /// is never coordinate-separable (even when F is): the sparse round
+    /// engine falls back to the dense path and `aggregate_block` (trait
+    /// default) is block-local.
+    fn coordinate_separable(&self) -> bool {
+        false
+    }
+
     /// [2], Prop. 32-style composition bound:
     /// κ_{NNM∘F} ≤ 8 δ/(1−2δ) · (κ_F + 1) — O(f/n) whenever κ_F = O(1).
     fn kappa(&self, n: usize, f: usize) -> f64 {

@@ -91,29 +91,34 @@ impl Algorithm for DgdRandK {
         let rk = RandK { d, k: env.k };
         let mut sum = vec![0f32; d];
         let mut count = 0usize;
-        let mut recon = vec![0f32; d];
-        let add = |widx: usize,
+        let mut payload: Vec<f32> = Vec::with_capacity(env.k);
+        // Sparse-domain accumulation (§Perf): scatter α·payload straight
+        // into the running sum instead of densifying each reconstruction —
+        // bit-identical to reconstruct_into + axpy, without the O(d)
+        // zero-fill and read per worker.
+        let mut add = |widx: usize,
                        g: &[f32],
                        sum: &mut Vec<f32>,
-                       recon: &mut Vec<f32>,
                        env: &mut RoundEnv| {
             let mut wrng = env.rng.derive(0x7264_6b6b, t, widx as u64);
             let mask = rk.draw(&mut wrng);
-            let payload = mask.compress(g);
+            mask.compress_into(g, &mut payload);
             let mask_bytes = if env.k < d { mask_wire_len(d, env.k) } else { 0 };
             env.meter.record_uplink_sized(
                 widx,
                 compressed_grad_len(payload.len(), mask_bytes),
             );
-            mask.reconstruct_into(&payload, recon);
-            tensor::axpy(sum, 1.0, recon);
+            let a = mask.alpha();
+            for (&ci, &v) in mask.idx.iter().zip(&payload) {
+                sum[ci as usize] += a * v;
+            }
         };
         for (i, g) in honest_grads.iter().enumerate() {
-            add(i, g, &mut sum, &mut recon, env);
+            add(i, g, &mut sum, env);
             count += 1;
         }
         for (j, g) in byz.iter().enumerate() {
-            add(env.n_honest + j, g, &mut sum, &mut recon, env);
+            add(env.n_honest + j, g, &mut sum, env);
             count += 1;
         }
         tensor::scale(&mut sum, 1.0 / count as f32);

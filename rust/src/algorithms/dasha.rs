@@ -32,6 +32,9 @@ pub struct ByzDashaPage {
     estimates: Vec<Vec<f32>>,
     /// Scratch: difference vector.
     diff: Vec<f32>,
+    /// Scratch: compressed difference (k floats, reused — §Perf: no
+    /// per-worker payload allocation on the steady-state loop).
+    payload: Vec<f32>,
     initialized: bool,
 }
 
@@ -40,6 +43,7 @@ impl ByzDashaPage {
         ByzDashaPage {
             estimates: vec![vec![0.0; d]; n_workers],
             diff: vec![0.0; d],
+            payload: Vec::new(),
             initialized: false,
         }
     }
@@ -97,8 +101,9 @@ impl Algorithm for ByzDashaPage {
                 }
                 let mut wrng = env.rng.derive(0x6461_7368, t, widx as u64);
                 let mask = rk.draw(&mut wrng);
-                let payload = mask.compress(&this.diff);
-                this.meter_sparse(env, widx, payload.len());
+                mask.compress_into(&this.diff, &mut this.payload);
+                let payload_len = this.payload.len();
+                this.meter_sparse(env, widx, payload_len);
                 // est += a · α · scatter(payload), with the DASHA
                 // stabilization stepsize a = 1/(2ω + 1), ω = α − 1 (the
                 // unbiased-compressor variance parameter). Without `a`
@@ -110,7 +115,7 @@ impl Algorithm for ByzDashaPage {
                 let omega = alpha - 1.0;
                 let a = 1.0 / (2.0 * omega + 1.0);
                 let est = &mut this.estimates[widx];
-                for (&ci, &v) in mask.idx.iter().zip(&payload) {
+                for (&ci, &v) in mask.idx.iter().zip(&this.payload) {
                     est[ci as usize] += a * alpha * v;
                 }
             };

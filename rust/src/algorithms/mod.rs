@@ -44,6 +44,40 @@ impl<'a> RoundEnv<'a> {
     }
 }
 
+/// Which arithmetic path the round engine takes (`config: round_engine`).
+///
+/// * `Dense` — the oracle: densify every k-sparse payload to a d-vector
+///   before momentum and aggregation (the reference semantics every other
+///   path is tested against).
+/// * `Auto` / `Sparse` — operate on length-k coordinate blocks wherever
+///   the shared-mask structure (Lemma A.3) allows: in-place
+///   scale-and-scatter momentum updates, and cached column aggregation
+///   for coordinate-separable rules. Falls back to the dense path per
+///   round whenever the preconditions fail (per-worker masks, silent
+///   workers, non-separable aggregator), so it is always safe to enable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum RoundMode {
+    #[default]
+    Auto,
+    Dense,
+    Sparse,
+}
+
+impl RoundMode {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "auto" => RoundMode::Auto,
+            "dense" => RoundMode::Dense,
+            "sparse" => RoundMode::Sparse,
+            other => {
+                return Err(format!(
+                    "unknown round_engine '{other}' (auto|dense|sparse)"
+                ))
+            }
+        })
+    }
+}
+
 /// One distributed-training algorithm (server-side state machine).
 pub trait Algorithm: Send {
     fn name(&self) -> &'static str;
@@ -83,9 +117,15 @@ pub trait Algorithm: Send {
 /// Instantiate the algorithm named by the config.
 pub fn build(cfg: &ExperimentConfig, d: usize) -> Box<dyn Algorithm> {
     let n = cfg.n_total();
+    let mode = RoundMode::parse(&cfg.round_engine)
+        .expect("validated by ExperimentConfig");
     match cfg.algorithm {
-        AlgoId::RoSdhb => Box::new(rosdhb::RoSdhb::new(d, n, false)),
-        AlgoId::RoSdhbLocal => Box::new(rosdhb::RoSdhb::new(d, n, true)),
+        AlgoId::RoSdhb => {
+            Box::new(rosdhb::RoSdhb::with_mode(d, n, false, mode))
+        }
+        AlgoId::RoSdhbLocal => {
+            Box::new(rosdhb::RoSdhb::with_mode(d, n, true, mode))
+        }
         AlgoId::RoSdhbU => {
             let comp = crate::compression::qsgd::parse_spec(
                 &cfg.compressor,

@@ -15,8 +15,35 @@
 //! Server state: one momentum vector per worker (Byzantine included — the
 //! server cannot tell), updated `m_i^t = β m_i^{t-1} + (1−β) g̃_i^t`
 //! (step 5), then robust-aggregated (step 6).
+//!
+//! ## The sparse round engine (§Perf)
+//!
+//! Under [`RoundMode::Auto`]/`Sparse` the round never materializes the
+//! d-length reconstructions `g̃_i`:
+//!
+//! * **attacks** are crafted directly in payload space (the k masked
+//!   coordinates the server actually receives — the attack module's own
+//!   contract), instead of crafting a d-vector and re-compressing it;
+//! * **momentum** is updated in place as `m_i *= β` followed by a k-long
+//!   scatter-add of `(1−β)·α·payload` — bit-identical to the dense
+//!   `scale_add(m, β, 1−β, reconstruct(payload))` law without the O(d)
+//!   zero-fill + read of a reconstruction buffer per worker;
+//! * **aggregation**, when the rule is coordinate-separable
+//!   ([`Aggregator::coordinate_separable`][crate::aggregators::Aggregator])
+//!   and every momentum was updated this round, runs fresh only on the k
+//!   masked columns ([`aggregate_block`][crate::aggregators::Aggregator]);
+//!   the remaining d−k output coordinates are `β·R^{t-1}` by positive
+//!   homogeneity (all unmasked columns scaled uniformly by β). The cached
+//!   coordinates drift from the dense oracle only by f32 rounding — the
+//!   dense path remains available as `round_engine = "dense"` and parity
+//!   is pinned in `rust/tests/test_round_engine.rs`.
+//!
+//! Any round that violates a precondition (local masks, silent workers,
+//! non-separable aggregator, k = d) transparently falls back to the dense
+//! oracle for that round.
 
-use super::{byzantine_vectors, Algorithm, RoundEnv};
+use super::{byzantine_vectors, Algorithm, RoundEnv, RoundMode};
+use crate::attacks::{AttackCtx, AttackKind};
 use crate::compression::codec::mask_wire_len;
 use crate::compression::{mask_from_seed, Mask, RandK};
 use crate::tensor;
@@ -25,33 +52,60 @@ use crate::transport::{broadcast_len, compressed_grad_len};
 pub struct RoSdhb {
     /// Per-worker server-side momenta m_i (n rows × d).
     momenta: Vec<Vec<f32>>,
-    /// Scratch: reconstructed g̃_i.
-    recon: Vec<f32>,
     local: bool,
+    mode: RoundMode,
+    /// Scratch: per-worker wire payloads (k floats each), reused across
+    /// rounds — the steady-state loop performs no allocation here.
+    payloads: Vec<Vec<f32>>,
+    /// Scratch: dense reconstruction g̃_i (dense-oracle path only).
+    recon: Vec<f32>,
+    /// Scratch: column-aggregation output (sparse path).
+    block: Vec<f32>,
+    /// R^{t-1}, the previous aggregate — the sparse path's carry-over for
+    /// unmasked coordinates. Valid only while `round` is the sole mutator
+    /// of `momenta` and the aggregator stays fixed.
+    agg_cache: Vec<f32>,
+    cache_valid: bool,
 }
 
 impl RoSdhb {
     pub fn new(d: usize, n_workers: usize, local: bool) -> Self {
+        Self::with_mode(d, n_workers, local, RoundMode::Auto)
+    }
+
+    pub fn with_mode(
+        d: usize,
+        n_workers: usize,
+        local: bool,
+        mode: RoundMode,
+    ) -> Self {
         RoSdhb {
             momenta: vec![vec![0.0; d]; n_workers],
-            recon: vec![0.0; d],
             local,
+            mode,
+            payloads: vec![Vec::new(); n_workers],
+            recon: vec![0.0; d],
+            block: Vec::new(),
+            agg_cache: vec![0.0; d],
+            cache_valid: false,
         }
     }
 
-    /// Meter one uplink payload of `k` floats (+ mask when local).
-    /// Size-only (§Perf: no message materialization on the hot path);
-    /// `transport` tests pin the size helpers against real encodings.
-    fn meter_uplink(
-        &self,
-        env: &mut RoundEnv,
-        worker: usize,
-        values_len: usize,
-        mask: Option<&Mask>,
+    /// In-place momentum law `m = β·m + (1−β)·scatter(α·payload)` over the
+    /// mask support — bit-compatible with the dense
+    /// `scale_add(m, β, 1−β, reconstruct(payload))`.
+    fn momentum_sparse(
+        m: &mut [f32],
+        mask: &Mask,
+        payload: &[f32],
+        beta: f32,
     ) {
-        let mask_bytes = mask.map_or(0, |m| mask_wire_len(m.d, m.k()));
-        env.meter
-            .record_uplink_sized(worker, compressed_grad_len(values_len, mask_bytes));
+        tensor::scale(m, beta);
+        let alpha = mask.alpha();
+        let b = 1.0 - beta;
+        for (&ci, &v) in mask.idx.iter().zip(payload) {
+            m[ci as usize] += b * (alpha * v);
+        }
     }
 }
 
@@ -74,6 +128,9 @@ impl Algorithm for RoSdhb {
         let d = env.d;
         let n = env.n_total();
         debug_assert_eq!(self.momenta.len(), n);
+        if self.payloads.len() < n {
+            self.payloads.resize_with(n, Vec::new);
+        }
 
         // -- step 1+2: broadcast model (+ mask seed under global masks)
         let mask_seed = RandK::round_seed(env.seed, t);
@@ -81,64 +138,184 @@ impl Algorithm for RoSdhb {
         env.meter
             .record_broadcast_sized(broadcast_len(d, with_seed), n);
 
-        let global_mask = (!self.local).then(|| mask_from_seed(mask_seed, d, env.k));
-
-        // -- Byzantine inputs (payload attacks craft in d-space)
-        let byz = byzantine_vectors(t, honest_grads, byz_grads, env);
-        debug_assert!(byz.len() == env.n_byz || byz.is_empty());
-
-        // -- steps 3-5 per worker: compress -> uplink -> reconstruct ->
-        //    momentum
-        let mut payload: Vec<f32> = Vec::with_capacity(env.k);
-        let mut process =
-            |this: &mut Self, widx: usize, g: &[f32], env: &mut RoundEnv| {
-                let mask_storage;
-                let mask: &Mask = match &global_mask {
-                    Some(m) => m,
-                    None => {
-                        // local: worker draws its own mask each round
-                        let mut wrng =
-                            env.rng.derive(0x6c6d_736b, t, widx as u64);
-                        mask_storage =
-                            RandK { d, k: env.k }.draw(&mut wrng);
-                        &mask_storage
-                    }
-                };
-                mask.compress_into(g, &mut payload);
-                this.meter_uplink(
-                    env,
-                    widx,
-                    payload.len(),
-                    this.local.then_some(mask),
-                );
-                mask.reconstruct_into(&payload, &mut this.recon);
-                // m_i = beta m_i + (1-beta) g_tilde  (ref.py momentum law)
-                tensor::scale_add(
-                    &mut this.momenta[widx],
-                    env.beta,
-                    1.0 - env.beta,
-                    &this.recon,
-                );
-            };
-
-        for (i, g) in honest_grads.iter().enumerate() {
-            process(self, i, g, env);
+        if self.local {
+            self.round_local(t, honest_grads, byz_grads, env)
+        } else {
+            let mask = mask_from_seed(mask_seed, d, env.k);
+            self.round_global(t, honest_grads, byz_grads, env, &mask)
         }
-        for (j, g) in byz.iter().enumerate() {
-            process(self, env.n_honest + j, g, env);
-        }
-        // If fewer byzantine vectors than slots (attack none, no data
-        // grads), leave those momenta untouched (worker silent ==
-        // crash-fault; robust aggregation still sees their stale m_i).
-
-        // -- step 6: robust aggregation of momenta
-        let refs: Vec<&[f32]> =
-            self.momenta.iter().map(|m| m.as_slice()).collect();
-        env.aggregator.aggregate_vec(&refs)
     }
 
     fn momenta(&self) -> Option<&[Vec<f32>]> {
         Some(&self.momenta)
+    }
+}
+
+impl RoSdhb {
+    /// Global-mask round: all honest payloads share `mask`'s k-subspace.
+    fn round_global(
+        &mut self,
+        t: u64,
+        honest_grads: &[Vec<f32>],
+        byz_grads: &[Vec<f32>],
+        env: &mut RoundEnv,
+        mask: &Mask,
+    ) -> Vec<f32> {
+        let d = env.d;
+        let nh = env.n_honest;
+        let sparse = self.mode != RoundMode::Dense && mask.k() < d;
+
+        // -- step 3: honest workers compress onto the broadcast mask
+        for (i, g) in honest_grads.iter().enumerate() {
+            mask.compress_into(g, &mut self.payloads[i]);
+        }
+
+        // -- Byzantine wire payloads. Payload attacks craft directly in
+        // the k-subspace the server receives (the omniscient adversary
+        // sees the honest payloads as they hit the wire); data-level
+        // Byzantine gradients are compressed exactly like honest ones.
+        let mut n_byz_sent = byz_grads.len();
+        debug_assert!(n_byz_sent == env.n_byz || n_byz_sent == 0);
+        if let AttackKind::Payload(p) = env.attack {
+            if env.n_byz > 0 {
+                let crafted = {
+                    let ctx = AttackCtx {
+                        round: t,
+                        honest_payloads: &self.payloads[..nh],
+                        n_honest: nh,
+                        n_byz: env.n_byz,
+                    };
+                    p.craft_all(&ctx, env.rng)
+                };
+                n_byz_sent = crafted.len();
+                for (j, c) in crafted.iter().enumerate() {
+                    let dst = &mut self.payloads[nh + j];
+                    dst.clear();
+                    dst.extend_from_slice(c);
+                }
+            }
+        } else {
+            for (j, g) in byz_grads.iter().enumerate() {
+                mask.compress_into(g, &mut self.payloads[nh + j]);
+            }
+        }
+        let n_updated = nh + n_byz_sent;
+        // Workers beyond n_updated are silent this round (crash-fault);
+        // their stale momenta still enter the aggregation, untouched.
+        let all_sent = n_updated == self.momenta.len();
+
+        // -- steps 4+5: meter uplink, reconstruct, momentum
+        for w in 0..n_updated {
+            env.meter.record_uplink_sized(
+                w,
+                compressed_grad_len(self.payloads[w].len(), 0),
+            );
+            if sparse {
+                Self::momentum_sparse(
+                    &mut self.momenta[w],
+                    mask,
+                    &self.payloads[w],
+                    env.beta,
+                );
+            } else {
+                mask.reconstruct_into(&self.payloads[w], &mut self.recon);
+                tensor::scale_add(
+                    &mut self.momenta[w],
+                    env.beta,
+                    1.0 - env.beta,
+                    &self.recon,
+                );
+            }
+        }
+
+        // -- step 6: robust aggregation of momenta
+        let use_cached = sparse
+            && all_sent
+            && self.cache_valid
+            && env.aggregator.coordinate_separable();
+        let refs: Vec<&[f32]> =
+            self.momenta.iter().map(|m| m.as_slice()).collect();
+        let out = if use_cached {
+            // Unmasked columns all scaled uniformly by β this round, so
+            // F restricted there is β·R^{t-1}; only the k masked columns
+            // need fresh aggregation.
+            let mut out = vec![0.0f32; d];
+            for (o, c) in out.iter_mut().zip(&self.agg_cache) {
+                *o = env.beta * c;
+            }
+            self.block.resize(mask.k(), 0.0);
+            env.aggregator
+                .aggregate_block(&refs, &mask.idx, &mut self.block);
+            for (&ci, &v) in mask.idx.iter().zip(&self.block) {
+                out[ci as usize] = v;
+            }
+            out
+        } else {
+            env.aggregator.aggregate_vec(&refs)
+        };
+        if self.mode != RoundMode::Dense {
+            self.agg_cache.copy_from_slice(&out);
+            self.cache_valid = true;
+        }
+        out
+    }
+
+    /// Local-mask round (§3.3): every worker draws and ships its own mask.
+    /// There is no shared subspace, so aggregation stays dense; the
+    /// in-place momentum update still avoids densifying the payloads.
+    fn round_local(
+        &mut self,
+        t: u64,
+        honest_grads: &[Vec<f32>],
+        byz_grads: &[Vec<f32>],
+        env: &mut RoundEnv,
+    ) -> Vec<f32> {
+        let d = env.d;
+        let nh = env.n_honest;
+        let sparse = self.mode != RoundMode::Dense;
+        let rk = RandK { d, k: env.k };
+
+        // Payload attacks craft in full d-space here (honest payloads live
+        // in different subspaces, so the wire view is per-worker); the
+        // crafted vectors are then compressed exactly like honest ones.
+        let byz = byzantine_vectors(t, honest_grads, byz_grads, env);
+        debug_assert!(byz.len() == env.n_byz || byz.is_empty());
+
+        for (widx, g) in honest_grads
+            .iter()
+            .enumerate()
+            .chain(byz.iter().enumerate().map(|(j, g)| (nh + j, g)))
+        {
+            // worker draws its own mask each round
+            let mut wrng = env.rng.derive(0x6c6d_736b, t, widx as u64);
+            let mask = rk.draw(&mut wrng);
+            mask.compress_into(g, &mut self.payloads[widx]);
+            let mask_bytes = mask_wire_len(mask.d, mask.k());
+            env.meter.record_uplink_sized(
+                widx,
+                compressed_grad_len(self.payloads[widx].len(), mask_bytes),
+            );
+            if sparse {
+                Self::momentum_sparse(
+                    &mut self.momenta[widx],
+                    &mask,
+                    &self.payloads[widx],
+                    env.beta,
+                );
+            } else {
+                mask.reconstruct_into(&self.payloads[widx], &mut self.recon);
+                tensor::scale_add(
+                    &mut self.momenta[widx],
+                    env.beta,
+                    1.0 - env.beta,
+                    &self.recon,
+                );
+            }
+        }
+
+        let refs: Vec<&[f32]> =
+            self.momenta.iter().map(|m| m.as_slice()).collect();
+        env.aggregator.aggregate_vec(&refs)
     }
 }
 
@@ -292,5 +469,115 @@ mod tests {
         for v in &m {
             assert!((v - 0.2).abs() < 1e-6);
         }
+    }
+
+    // ---------------------------------------- sparse-engine parity tests
+
+    /// Per-round varying gradients for the parity tests.
+    fn varied_grads(d: usize, n: usize, t: u64) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|i| {
+                (0..d)
+                    .map(|j| {
+                        ((j as f32 * 0.13 + i as f32 * 0.7
+                            + t as f32 * 0.29)
+                            .sin())
+                            * 1.5
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sparse_is_bitwise_equal_to_dense_with_nonseparable_aggregator() {
+        // nnm+cwtm is not coordinate-separable: the sparse engine keeps
+        // dense aggregation but uses in-place scale+scatter momentum
+        // updates, which must reproduce the dense oracle bit for bit.
+        let (d, nh, k) = (64, 5, 8);
+        let mut env_d = Env::new(d, nh, 0, k);
+        let mut env_s = Env::new(d, nh, 0, k);
+        env_d.aggregator =
+            crate::aggregators::parse_spec("nnm+cwtm", 0).unwrap();
+        env_s.aggregator =
+            crate::aggregators::parse_spec("nnm+cwtm", 0).unwrap();
+        let mut dense = RoSdhb::with_mode(d, nh, false, RoundMode::Dense);
+        let mut sparse = RoSdhb::with_mode(d, nh, false, RoundMode::Sparse);
+        for t in 1..=10u64 {
+            let grads = varied_grads(d, nh, t);
+            let rd = dense.round(t, &grads, &[], &mut env_d.env());
+            let rs = sparse.round(t, &grads, &[], &mut env_s.env());
+            assert_eq!(rd, rs, "round {t}");
+        }
+        assert_eq!(dense.momenta, sparse.momenta);
+    }
+
+    #[test]
+    fn sparse_cached_aggregation_tracks_dense_oracle() {
+        // cwtm is separable: unmasked coordinates are carried over as
+        // β·R^{t-1} and may drift from the oracle by f32 rounding only.
+        let (d, nh, f, k) = (96, 8, 2, 12);
+        let mut env_d = Env::new(d, nh, f, k);
+        let mut env_s = Env::new(d, nh, f, k);
+        env_d.attack = crate::attacks::parse_spec("alie").unwrap();
+        env_s.attack = crate::attacks::parse_spec("alie").unwrap();
+        let mut dense = RoSdhb::with_mode(d, nh + f, false, RoundMode::Dense);
+        let mut sparse =
+            RoSdhb::with_mode(d, nh + f, false, RoundMode::Sparse);
+        let mut max_rel = 0.0f64;
+        for t in 1..=40u64 {
+            let grads = varied_grads(d, nh, t);
+            let rd = dense.round(t, &grads, &[], &mut env_d.env());
+            let rs = sparse.round(t, &grads, &[], &mut env_s.env());
+            let num = crate::tensor::dist_sq(&rd, &rs).sqrt();
+            let den = crate::tensor::norm(&rd).max(1e-12);
+            max_rel = max_rel.max(num / den);
+        }
+        assert!(max_rel < 1e-4, "cached path drifted: rel {max_rel}");
+        assert_eq!(env_d.meter.uplink, env_s.meter.uplink);
+        assert_eq!(env_d.meter.downlink, env_s.meter.downlink);
+    }
+
+    #[test]
+    fn silent_byzantine_slots_fall_back_to_exact_dense_aggregation() {
+        // attack "none" with f > 0 leaves f momenta untouched each round:
+        // the uniform-β-scaling precondition fails, the cache is skipped,
+        // and sparse must equal dense exactly.
+        let (d, nh, f, k) = (48, 6, 2, 6);
+        let mut env_d = Env::new(d, nh, f, k);
+        let mut env_s = Env::new(d, nh, f, k);
+        let mut dense =
+            RoSdhb::with_mode(d, nh + f, false, RoundMode::Dense);
+        let mut sparse =
+            RoSdhb::with_mode(d, nh + f, false, RoundMode::Sparse);
+        for t in 1..=12u64 {
+            let grads = varied_grads(d, nh, t);
+            let rd = dense.round(t, &grads, &[], &mut env_d.env());
+            let rs = sparse.round(t, &grads, &[], &mut env_s.env());
+            assert_eq!(rd, rs, "round {t}");
+        }
+        // the silent slots' momenta stayed at exactly zero in both modes
+        for m in &dense.momenta[nh..] {
+            assert!(m.iter().all(|&v| v == 0.0));
+        }
+        for m in &sparse.momenta[nh..] {
+            assert!(m.iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn local_sparse_momentum_is_bitwise_equal_to_dense() {
+        let (d, nh, k) = (80, 4, 10);
+        let mut env_d = Env::new(d, nh, 0, k);
+        let mut env_s = Env::new(d, nh, 0, k);
+        let mut dense = RoSdhb::with_mode(d, nh, true, RoundMode::Dense);
+        let mut sparse = RoSdhb::with_mode(d, nh, true, RoundMode::Sparse);
+        for t in 1..=8u64 {
+            let grads = varied_grads(d, nh, t);
+            let rd = dense.round(t, &grads, &[], &mut env_d.env());
+            let rs = sparse.round(t, &grads, &[], &mut env_s.env());
+            assert_eq!(rd, rs, "round {t}");
+        }
+        assert_eq!(dense.momenta, sparse.momenta);
     }
 }

@@ -8,6 +8,14 @@
 //! RandK-with-shipped-mask. The convergence guarantee carries over with
 //! α = the compressor's variance parameter (Appendix C); the bench
 //! ablation (`bench_appendix_c`) compares the two at matched wire budget.
+//!
+//! Round-engine note: gradients arrive through the coordinator's
+//! persistent worker pool like every other algorithm, but the server-side
+//! arithmetic here stays dense — [`UnbiasedCompressor::roundtrip`]
+//! reconstructs into a dense buffer because QSGD's support is all of d
+//! (and RandK-local masks are per-worker). Giving compressors a
+//! value-level sparse output so this path can use the in-place
+//! scale+scatter momentum update is a ROADMAP open item.
 
 use super::{byzantine_vectors, Algorithm, RoundEnv};
 use crate::compression::UnbiasedCompressor;

@@ -139,6 +139,14 @@ pub struct ExperimentConfig {
     /// Train-set size cap (synthetic: 60_000 like MNIST; tests use less).
     pub train_size: usize,
     pub test_size: usize,
+    /// Size of the persistent gradient worker pool (native engine only).
+    /// 0 = auto: min(worker count, available parallelism). Results are
+    /// invariant to this value (each worker owns its RNG stream).
+    pub pool_size: usize,
+    /// Round-engine arithmetic path: "auto" | "dense" | "sparse" — see
+    /// [`crate::algorithms::RoundMode`]. "dense" is the oracle path the
+    /// sparse engine is tested against.
+    pub round_engine: String,
 }
 
 impl ExperimentConfig {
@@ -171,6 +179,8 @@ impl ExperimentConfig {
             lyapunov: false,
             train_size: 60_000,
             test_size: 10_000,
+            pool_size: 0,
+            round_engine: "auto".into(),
         }
     }
 
@@ -224,6 +234,11 @@ impl ExperimentConfig {
         num!("seed", c.seed, u64);
         num!("train_size", c.train_size, usize);
         num!("test_size", c.test_size, usize);
+        num!("pool_size", c.pool_size, usize);
+        if let Some(v) = get("round_engine") {
+            c.round_engine =
+                v.as_str().ok_or("round_engine: want string")?.into();
+        }
         if let Some(v) = get("compressor") {
             c.compressor = v.as_str().ok_or("compressor: want string")?.into();
         }
@@ -304,6 +319,8 @@ impl ExperimentConfig {
                 "lyapunov" => c.lyapunov = tmp.lyapunov,
                 "train_size" => c.train_size = tmp.train_size,
                 "test_size" => c.test_size = tmp.test_size,
+                "pool_size" => c.pool_size = tmp.pool_size,
+                "round_engine" => c.round_engine = tmp.round_engine.clone(),
                 other => return Err(format!("unknown config key '{other}'")),
             }
         }
@@ -353,6 +370,9 @@ impl ExperimentConfig {
         if self.eval_every == 0 {
             return Err("eval_every must be > 0".into());
         }
+        // single source of truth for the accepted values (algorithms::build
+        // later unwraps the same parse)
+        crate::algorithms::RoundMode::parse(&self.round_engine)?;
         Ok(())
     }
 
@@ -462,6 +482,27 @@ mod tests {
         c.set("algorithm", "dasha").unwrap();
         assert_eq!(c.algorithm, Algorithm::ByzDashaPage);
         assert!(c.set("nonsense_key", "1").is_err());
+    }
+
+    #[test]
+    fn round_engine_and_pool_size_parse_and_validate() {
+        let mut c = ExperimentConfig::default_mnist_like();
+        assert_eq!(c.round_engine, "auto");
+        assert_eq!(c.pool_size, 0);
+        c.set("round_engine", "dense").unwrap();
+        assert_eq!(c.round_engine, "dense");
+        c.set("round_engine", "sparse").unwrap();
+        c.set("pool_size", "4").unwrap();
+        assert_eq!(c.pool_size, 4);
+        assert!(c.set("round_engine", "banana").is_err());
+
+        let doc = toml::TomlDoc::parse(
+            "[experiment]\nround_engine = \"dense\"\npool_size = 2\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.round_engine, "dense");
+        assert_eq!(c.pool_size, 2);
     }
 
     #[test]

@@ -1,19 +1,38 @@
 //! The L3 coordinator — the paper's system contribution as a runnable
 //! server.
 //!
-//! [`Trainer`] owns the model parameters, the worker pool, the algorithm
-//! state machine, the byte-metered transport and the metrics log, and
-//! drives the synchronous round loop of Algorithm 1:
+//! [`Trainer`] owns the model parameters, the persistent worker pool, the
+//! algorithm state machine, the byte-metered transport and the metrics
+//! log, and drives the synchronous round loop of Algorithm 1:
 //!
 //! ```text
 //! per round t:
 //!   broadcast θ_{t-1} (+ global mask seed)        — algorithm meters it
-//!   workers: g_i = ∇L_i(θ_{t-1}) on a fresh batch — engine (PJRT/native)
+//!   workers: g_i = ∇L_i(θ_{t-1}) on a fresh batch — worker pool (native)
 //!   Byzantine payload injection                    — attacks
 //!   server: reconstruct → momentum → F(m_1..m_n)   — algorithm
 //!   θ_t = θ_{t-1} − γ R^t
 //!   every eval_every rounds: test accuracy, τ-crossing, Lyapunov diag
 //! ```
+//!
+//! ## Round execution (§Perf)
+//!
+//! Gradients run on a [`pool::WorkerPool`] created **once** in
+//! [`Trainer::from_config`] and reused for every round: threads park on a
+//! channel instead of being spawned per round, workers and their reusable
+//! gradient buffers travel through the pool by move, and the steady-state
+//! loop is allocation-free. The pool size is configurable
+//! (`config: pool_size`, 0 = auto) and never changes results — each
+//! worker owns its RNG stream, so the loss trajectory, byte counters and
+//! τ-crossing are bit-identical for any thread count (pinned by
+//! `rust/tests/test_round_engine.rs`). Under PJRT the pool is disabled
+//! (the client is not `Send`) and gradients run sequentially on the main
+//! thread, with identical numerics.
+//!
+//! Worker panics surface as `Err` from [`Trainer::step`] rather than
+//! aborting the process.
+
+pub mod pool;
 
 use crate::algorithms::{self, Algorithm, RoundEnv};
 use crate::attacks::{self, AttackKind};
@@ -27,8 +46,28 @@ use crate::model::MlpSpec;
 use crate::prng::Pcg64;
 use crate::tensor;
 use crate::transport::ByteMeter;
-use crate::worker::{GradEngine, HonestWorker, NativeEngine, PjrtEngine};
+#[cfg(feature = "pjrt")]
+use crate::worker::PjrtEngine;
+use crate::worker::{GradEngine, HonestWorker, NativeEngine};
 use anyhow::{anyhow, Result};
+use self::pool::{Job, WorkerPool};
+use std::sync::Arc;
+
+/// Pull a worker out of its slot, or report a poisoned trainer: slots are
+/// only left empty when the pool died mid-round and took the in-flight
+/// workers with it. Returning `Err` here keeps the "failures surface as
+/// `Err`, never an abort" contract even on calls *after* such a failure.
+fn take_worker(
+    workers: &mut [Option<HonestWorker>],
+    slot: usize,
+) -> Result<HonestWorker> {
+    workers[slot].take().ok_or_else(|| {
+        anyhow!(
+            "trainer poisoned: worker {slot} was lost in a failed round \
+             (worker pool died); rebuild the Trainer"
+        )
+    })
+}
 
 /// End-of-run summary (plus the full per-round log).
 #[derive(Clone, Debug)]
@@ -49,11 +88,12 @@ pub struct RunReport {
 /// The coordinator.
 pub struct Trainer {
     pub cfg: ExperimentConfig,
+    /// Evaluation + sequential-path gradient engine.
     engine: Box<dyn GradEngine>,
-    honest: Vec<HonestWorker>,
-    /// Data-level Byzantine workers (label-flip); empty for payload
-    /// attacks.
-    byz_data_workers: Vec<HonestWorker>,
+    /// Gradient workers: honest in slots `[0, n_honest)`, then data-level
+    /// Byzantine workers (label-flip; empty for payload attacks). `None`
+    /// only while a worker is in flight inside the pool.
+    workers: Vec<Option<HonestWorker>>,
     algorithm: Box<dyn Algorithm>,
     aggregator: Box<dyn Aggregator>,
     attack: AttackKind,
@@ -65,9 +105,16 @@ pub struct Trainer {
     k: usize,
     /// Set when loss/update became non-finite; `run()` stops gracefully.
     pub diverged: bool,
-    /// Per-worker engines for the parallel native gradient path (§Perf);
-    /// empty under PJRT (the client is not Send) — sequential there.
-    par_engines: Vec<NativeEngine>,
+    /// Persistent gradient pool (native engine only; `None` under PJRT —
+    /// sequential there, identical numerics).
+    pool: Option<WorkerPool>,
+    /// Broadcast parameter buffer shared with pool threads; refreshed in
+    /// place each round (no allocation once every job handle is returned).
+    shared_params: Arc<Vec<f32>>,
+    /// Per-worker reusable gradient buffers, indexed like `workers`.
+    grad_store: Vec<Vec<f32>>,
+    /// Per-worker losses for the current round.
+    loss_store: Vec<f32>,
 }
 
 impl Trainer {
@@ -81,7 +128,16 @@ impl Trainer {
             Engine::Native => {
                 Box::new(NativeEngine::new(MlpSpec::default(), cfg.batch.max(1)))
             }
+            #[cfg(feature = "pjrt")]
             Engine::Pjrt => Box::new(PjrtEngine::load(&cfg.artifacts_dir)?),
+            #[cfg(not(feature = "pjrt"))]
+            Engine::Pjrt => {
+                return Err(anyhow!(
+                    "engine = pjrt is not available in this build: \
+                     recompile with `--features pjrt` (needs the external \
+                     xla crate — see rust/README.md)"
+                ))
+            }
         };
         let d = engine.p();
 
@@ -115,17 +171,18 @@ impl Trainer {
 
         // --- attack & (for label-flip) poisoned byzantine workers
         let attack = attacks::parse_spec(&cfg.attack).map_err(|e| anyhow!(e))?;
-        let byz_data_workers = if matches!(attack, AttackKind::LabelFlip) {
-            (0..cfg.n_byz)
-                .map(|j| {
-                    // each poisoned worker clones an honest shard
-                    let shard = honest[j % cfg.n_honest].shard.clone();
-                    HonestWorker::new(cfg.n_honest + j, shard, &root, true)
-                })
-                .collect()
-        } else {
-            Vec::new()
-        };
+        let byz_data_workers: Vec<HonestWorker> =
+            if matches!(attack, AttackKind::LabelFlip) {
+                (0..cfg.n_byz)
+                    .map(|j| {
+                        // each poisoned worker clones an honest shard
+                        let shard = honest[j % cfg.n_honest].shard.clone();
+                        HonestWorker::new(cfg.n_honest + j, shard, &root, true)
+                    })
+                    .collect()
+            } else {
+                Vec::new()
+            };
 
         let aggregator = aggregators::parse_spec(&cfg.aggregator, cfg.n_byz)
             .map_err(|e| anyhow!(e))?;
@@ -133,23 +190,33 @@ impl Trainer {
         let params = engine.init_params(cfg.seed ^ 0x1a17)?;
         let k = RandK::from_frac(d, cfg.k_frac).k;
 
-        // parallel gradient engines (native only; bit-identical to the
-        // sequential path since each worker's RNG stream is independent)
-        let n_grad_workers = honest.len() + byz_data_workers.len();
-        let par_engines = if cfg.engine == Engine::Native && n_grad_workers > 1
-        {
-            (0..n_grad_workers)
-                .map(|_| NativeEngine::new(MlpSpec::default(), cfg.batch.max(1)))
-                .collect()
+        let n_grad = honest.len() + byz_data_workers.len();
+        let workers: Vec<Option<HonestWorker>> = honest
+            .into_iter()
+            .chain(byz_data_workers)
+            .map(Some)
+            .collect();
+
+        // --- persistent gradient pool (native only: the PJRT client is
+        // not Send). Created once here, reused for every round.
+        let pool = if cfg.engine == Engine::Native {
+            let size = if cfg.pool_size > 0 {
+                cfg.pool_size
+            } else {
+                std::thread::available_parallelism()
+                    .map(|p| p.get())
+                    .unwrap_or(1)
+                    .min(n_grad.max(1))
+            };
+            Some(WorkerPool::new(size, MlpSpec::default(), cfg.batch.max(1)))
         } else {
-            Vec::new()
+            None
         };
 
         Ok(Trainer {
             cfg: cfg.clone(),
             engine,
-            honest,
-            byz_data_workers,
+            workers,
             algorithm,
             aggregator,
             attack,
@@ -160,7 +227,10 @@ impl Trainer {
             log: MetricsLog::default(),
             k,
             diverged: false,
-            par_engines,
+            pool,
+            shared_params: Arc::new(Vec::new()),
+            grad_store: vec![vec![0f32; d]; n_grad],
+            loss_store: vec![0f32; n_grad],
         })
     }
 
@@ -170,75 +240,81 @@ impl Trainer {
             .kappa(self.cfg.n_total(), self.cfg.n_byz)
     }
 
-    /// One synchronous round; returns (mean honest loss, ‖R‖).
-    pub fn step(&mut self, t: u64) -> Result<(f64, f64)> {
-        // workers compute gradients (PJRT sequential; native in parallel —
-        // identical numerics, each worker has its own RNG stream/engine)
-        let nh = self.honest.len();
-        let (mut honest_grads, mut byz_grads, mean_loss);
-        if self.par_engines.is_empty() {
-            honest_grads = Vec::with_capacity(nh);
-            let mut loss_sum = 0.0f64;
-            for w in self.honest.iter_mut() {
-                let (loss, g) = w.compute_grad(
-                    self.engine.as_mut(),
-                    &self.params,
-                    self.cfg.batch,
-                )?;
-                loss_sum += loss as f64;
-                honest_grads.push(g);
+    /// Compute this round's gradients into `grad_store`/`loss_store` —
+    /// through the pool when present, sequentially otherwise. Worker
+    /// panics and engine errors come back as `Err` (never an abort), with
+    /// all surviving workers and buffers restored to their slots first.
+    fn compute_gradients(&mut self) -> Result<()> {
+        let n_grad = self.workers.len();
+        if let Some(pool) = &self.pool {
+            // Refresh the shared broadcast buffer in place; all job
+            // handles from the previous round have been returned, so the
+            // Arc is unique and this is a copy, not an allocation. (A
+            // non-unique Arc can only mean a previous round failed midway
+            // and leaked a handle — fall back to a fresh buffer then.)
+            if Arc::get_mut(&mut self.shared_params).is_none() {
+                self.shared_params = Arc::new(Vec::new());
             }
-            mean_loss = loss_sum / nh as f64;
-            byz_grads = Vec::with_capacity(self.byz_data_workers.len());
-            for w in self.byz_data_workers.iter_mut() {
-                let (_, g) = w.compute_grad(
-                    self.engine.as_mut(),
-                    &self.params,
-                    self.cfg.batch,
-                )?;
-                byz_grads.push(g);
+            let buf = Arc::get_mut(&mut self.shared_params)
+                .expect("freshly replaced Arc is unique");
+            buf.resize(self.params.len(), 0.0);
+            buf.copy_from_slice(&self.params);
+            for slot in 0..n_grad {
+                let worker = take_worker(&mut self.workers, slot)?;
+                let buf = std::mem::take(&mut self.grad_store[slot]);
+                pool.submit(Job {
+                    slot,
+                    worker,
+                    params: Arc::clone(&self.shared_params),
+                    batch: self.cfg.batch,
+                    buf,
+                })?;
+            }
+            let mut first_err: Option<anyhow::Error> = None;
+            for _ in 0..n_grad {
+                let done = pool.recv()?;
+                self.workers[done.slot] = Some(done.worker);
+                self.grad_store[done.slot] = done.buf;
+                match done.loss {
+                    Ok(l) => self.loss_store[done.slot] = l,
+                    Err(e) => {
+                        if first_err.is_none() {
+                            first_err =
+                                Some(anyhow!("worker {}: {e}", done.slot));
+                        }
+                    }
+                }
+            }
+            if let Some(e) = first_err {
+                return Err(e);
             }
         } else {
-            let params = &self.params;
-            let batch = self.cfg.batch;
-            let (h_eng, b_eng) = self.par_engines.split_at_mut(nh);
-            let honest = &mut self.honest;
-            let byz = &mut self.byz_data_workers;
-            let (h_res, b_res) = std::thread::scope(|s| {
-                let hs: Vec<_> = honest
-                    .iter_mut()
-                    .zip(h_eng.iter_mut())
-                    .map(|(w, e)| {
-                        s.spawn(move || w.compute_grad(e, params, batch))
-                    })
-                    .collect();
-                let bs: Vec<_> = byz
-                    .iter_mut()
-                    .zip(b_eng.iter_mut())
-                    .map(|(w, e)| {
-                        s.spawn(move || w.compute_grad(e, params, batch))
-                    })
-                    .collect();
-                let h: Vec<_> =
-                    hs.into_iter().map(|h| h.join().unwrap()).collect();
-                let b: Vec<_> =
-                    bs.into_iter().map(|h| h.join().unwrap()).collect();
-                (h, b)
-            });
-            let mut loss_sum = 0.0f64;
-            honest_grads = Vec::with_capacity(nh);
-            for r in h_res {
-                let (loss, g) = r?;
-                loss_sum += loss as f64;
-                honest_grads.push(g);
-            }
-            mean_loss = loss_sum / nh as f64;
-            byz_grads = Vec::with_capacity(b_eng.len());
-            for r in b_res {
-                byz_grads.push(r?.1);
+            for slot in 0..n_grad {
+                let mut worker = take_worker(&mut self.workers, slot)?;
+                let res = worker.compute_grad_into(
+                    self.engine.as_mut(),
+                    &self.params,
+                    self.cfg.batch,
+                    &mut self.grad_store[slot],
+                );
+                self.workers[slot] = Some(worker);
+                self.loss_store[slot] = res?;
             }
         }
+        Ok(())
+    }
 
+    /// One synchronous round; returns (mean honest loss, ‖R‖).
+    pub fn step(&mut self, t: u64) -> Result<(f64, f64)> {
+        let nh = self.cfg.n_honest;
+        self.compute_gradients()?;
+        let mut loss_sum = 0.0f64;
+        for &l in &self.loss_store[..nh] {
+            loss_sum += l as f64;
+        }
+        let mean_loss = loss_sum / nh as f64;
+
+        let (honest_grads, byz_grads) = self.grad_store.split_at(nh);
         let mut env = RoundEnv {
             d: self.params.len(),
             n_honest: self.cfg.n_honest,
@@ -253,7 +329,7 @@ impl Trainer {
         };
         let mut update = self
             .algorithm
-            .round(t, &honest_grads, &byz_grads, &mut env);
+            .round(t, honest_grads, byz_grads, &mut env);
         // optional update clipping (production stabilizer; off by default)
         if self.cfg.clip > 0.0 {
             let n = tensor::norm(&update);
@@ -279,11 +355,16 @@ impl Trainer {
             None
         };
 
-        // θ_t = θ_{t-1} − γ_t R^t  (γ_t = γ·decay^t; decay=1 ⇒ constant)
+        // θ_t = θ_{t-1} − γ_t R^t  (γ_t = γ·decay^t; decay=1 ⇒ constant).
+        // The decay is computed in f64 from a clamped exponent: the old
+        // `powi(t as i32)` silently wrapped for t > i32::MAX, flipping the
+        // decay into a blow-up.
         let gamma_t = if self.cfg.gamma_decay >= 1.0 {
             self.cfg.gamma
         } else {
-            self.cfg.gamma * self.cfg.gamma_decay.powi(t as i32)
+            let exp = t.min(u32::MAX as u64) as u32;
+            let decay = (self.cfg.gamma_decay as f64).powf(exp as f64);
+            (self.cfg.gamma as f64 * decay) as f32
         };
         tensor::axpy(&mut self.params, -gamma_t, &update);
         let update_norm = tensor::norm(&update);
@@ -312,11 +393,19 @@ impl Trainer {
     /// Fresh honest batch gradients at the current model (diagnostics /
     /// (G,B) estimation; does not advance training state).
     pub fn probe_honest_gradients(&mut self) -> Result<Vec<Vec<f32>>> {
-        let mut out = Vec::with_capacity(self.honest.len());
-        for w in self.honest.iter_mut() {
-            let (_, g) =
-                w.compute_grad(self.engine.as_mut(), &self.params, self.cfg.batch)?;
-            out.push(g);
+        let mut out = Vec::with_capacity(self.cfg.n_honest);
+        for slot in 0..self.cfg.n_honest {
+            let mut worker = take_worker(&mut self.workers, slot)?;
+            let mut buf = vec![0f32; self.params.len()];
+            let res = worker.compute_grad_into(
+                self.engine.as_mut(),
+                &self.params,
+                self.cfg.batch,
+                &mut buf,
+            );
+            self.workers[slot] = Some(worker);
+            res?;
+            out.push(buf);
         }
         Ok(out)
     }
@@ -424,8 +513,10 @@ mod tests {
         cfg.attack = "labelflip".into();
         cfg.n_byz = 2;
         let mut t = Trainer::from_config(&cfg).unwrap();
-        assert_eq!(t.byz_data_workers.len(), 2);
-        assert!(t.byz_data_workers.iter().all(|w| w.poisoned));
+        assert_eq!(t.workers.len(), cfg.n_honest + 2);
+        assert!(t.workers[cfg.n_honest..]
+            .iter()
+            .all(|w| w.as_ref().unwrap().poisoned));
         t.step(1).unwrap();
     }
 
@@ -453,13 +544,14 @@ mod tests {
     }
 
     #[test]
-    fn parallel_and_sequential_grads_agree() {
-        // forcing the sequential path (drop par_engines) must reproduce
-        // the parallel path bit-for-bit — same RNG streams per worker.
+    fn pooled_and_sequential_grads_agree() {
+        // dropping the pool forces the sequential path, which must
+        // reproduce the pooled path bit-for-bit — same RNG streams per
+        // worker, the thread count is pure mechanics.
         let cfg = tiny_cfg();
         let mut par = Trainer::from_config(&cfg).unwrap();
         let mut seq = Trainer::from_config(&cfg).unwrap();
-        seq.par_engines.clear();
+        seq.pool = None;
         for t in 1..=5 {
             let (lp, up) = par.step(t).unwrap();
             let (ls, us) = seq.step(t).unwrap();
@@ -467,6 +559,47 @@ mod tests {
             assert_eq!(up, us, "round {t} update norm");
         }
         assert_eq!(par.params, seq.params);
+    }
+
+    #[test]
+    fn pool_size_does_not_change_results() {
+        let mut c1 = tiny_cfg();
+        c1.pool_size = 1;
+        let mut c3 = tiny_cfg();
+        c3.pool_size = 3;
+        let mut t1 = Trainer::from_config(&c1).unwrap();
+        let mut t3 = Trainer::from_config(&c3).unwrap();
+        for t in 1..=4 {
+            let (l1, u1) = t1.step(t).unwrap();
+            let (l3, u3) = t3.step(t).unwrap();
+            assert_eq!(l1, l3, "round {t} loss");
+            assert_eq!(u1, u3, "round {t} update norm");
+        }
+        assert_eq!(t1.params, t3.params);
+    }
+
+    #[test]
+    fn worker_panic_surfaces_as_error_not_abort() {
+        let mut t = Trainer::from_config(&tiny_cfg()).unwrap();
+        {
+            // empty shard => sample_batch asserts => panic inside the pool
+            let w = t.workers[0].as_mut().unwrap();
+            w.shard.images.clear();
+            w.shard.labels.clear();
+        }
+        let err = t.step(1).unwrap_err().to_string();
+        assert!(err.contains("panicked"), "{err}");
+        // every worker slot survived the failed round
+        assert!(t.workers.iter().all(|w| w.is_some()));
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_engine_without_feature_is_a_clear_runtime_error() {
+        let mut cfg = tiny_cfg();
+        cfg.engine = Engine::Pjrt;
+        let err = Trainer::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "{err}");
     }
 
     #[test]
@@ -507,6 +640,28 @@ mod tests {
         let d9: f64 = crate::tensor::dist_sq(&p8, &t.params).sqrt();
         // after 8 halvings the step is ~256x smaller (modulo momentum)
         assert!(d9 < d1 * 0.1, "d1={d1} d9={d9}");
+    }
+
+    #[test]
+    fn gamma_decay_survives_huge_round_indices() {
+        // regression: powi(t as i32) wrapped for t > i32::MAX and could
+        // turn the decay into a blow-up; the f64/clamped path must stay
+        // finite and monotone at the extremes.
+        let mut cfg = tiny_cfg();
+        cfg.gamma_decay = 0.999_999;
+        cfg.rounds = 1;
+        let mut t = Trainer::from_config(&cfg).unwrap();
+        let (loss, norm) = t.step(u64::MAX).unwrap();
+        assert!(loss.is_finite() && norm.is_finite());
+        let moved = t
+            .params
+            .iter()
+            .zip(&Trainer::from_config(&cfg).unwrap().params)
+            .map(|(a, b)| ((a - b) as f64).abs())
+            .fold(0.0f64, f64::max);
+        // decay^(2^32) underflows to ~0: the step must be ~zero, never a
+        // wrapped-exponent explosion.
+        assert!(moved < 1e-3, "moved {moved}");
     }
 
     #[test]

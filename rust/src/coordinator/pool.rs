@@ -1,0 +1,268 @@
+//! Persistent gradient worker pool (§Perf).
+//!
+//! The seed implementation spawned `n` fresh OS threads **every round**
+//! (`std::thread::scope` in `Trainer::step`), paying thread creation and
+//! teardown on the hot path. This pool is created once in
+//! [`Trainer::from_config`][super::Trainer::from_config], parks its
+//! threads on a shared job channel, and is reused for every round of every
+//! run of the trainer.
+//!
+//! Design (std-only: `mpsc` channels + a mutex-guarded shared receiver):
+//!
+//! * Each pool thread owns one long-lived [`NativeEngine`] (model
+//!   workspace buffers included), so gradient computation never allocates
+//!   engine state.
+//! * A [`Job`] carries the [`HonestWorker`] (shard + private RNG stream)
+//!   and its reusable gradient buffer **by move**; the [`Done`] message
+//!   moves both back. Moving a worker is pointer-sized (its `Vec`s move,
+//!   nothing is copied), and the buffer round-trip makes the steady-state
+//!   loop allocation-free.
+//! * Determinism: results depend only on the worker's own RNG stream and
+//!   the broadcast parameters, never on which thread ran the job or in
+//!   which order jobs completed — the trainer routes results by `slot`.
+//!   `RunReport`s are therefore invariant to the pool size (pinned by
+//!   `rust/tests/test_round_engine.rs`).
+//! * Worker panics are caught (`catch_unwind`) and surfaced to the
+//!   coordinator as `Err`, never as a poisoned `join().unwrap()` abort.
+
+use crate::model::MlpSpec;
+use crate::worker::{HonestWorker, NativeEngine};
+use anyhow::{anyhow, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// One gradient task: compute worker `slot`'s gradient at `params` into
+/// `buf` (resized to P by the engine).
+pub struct Job {
+    pub slot: usize,
+    pub worker: HonestWorker,
+    pub params: Arc<Vec<f32>>,
+    pub batch: usize,
+    pub buf: Vec<f32>,
+}
+
+/// Completion message: the worker and its gradient buffer travel back to
+/// the coordinator; `loss` is `Err` if the computation failed or panicked.
+pub struct Done {
+    pub slot: usize,
+    pub worker: HonestWorker,
+    pub buf: Vec<f32>,
+    pub loss: Result<f32, String>,
+}
+
+/// The pool itself. Dropping it closes the job channel and joins all
+/// threads.
+pub struct WorkerPool {
+    job_tx: Option<Sender<Job>>,
+    done_rx: Receiver<Done>,
+    handles: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `size` parked threads, each owning a fresh [`NativeEngine`]
+    /// built from `spec`/`batch`.
+    pub fn new(size: usize, spec: MlpSpec, batch: usize) -> Self {
+        let size = size.max(1);
+        let (job_tx, job_rx) = channel::<Job>();
+        let (done_tx, done_rx) = channel::<Done>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let mut handles = Vec::with_capacity(size);
+        for _ in 0..size {
+            let rx = Arc::clone(&job_rx);
+            let tx = done_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut engine = NativeEngine::new(spec, batch.max(1));
+                loop {
+                    // Hold the receiver lock only for the dequeue, not the
+                    // gradient computation.
+                    let recv = {
+                        let guard = match rx.lock() {
+                            Ok(g) => g,
+                            Err(poisoned) => poisoned.into_inner(),
+                        };
+                        guard.recv()
+                    };
+                    let mut job = match recv {
+                        Ok(j) => j,
+                        Err(_) => break, // pool dropped: exit
+                    };
+                    let outcome = catch_unwind(AssertUnwindSafe(|| {
+                        job.worker.compute_grad_into(
+                            &mut engine,
+                            &job.params,
+                            job.batch,
+                            &mut job.buf,
+                        )
+                    }));
+                    let loss = match outcome {
+                        Ok(Ok(l)) => Ok(l),
+                        Ok(Err(e)) => Err(format!("{e:#}")),
+                        Err(panic) => Err(panic_message(panic.as_ref())),
+                    };
+                    let done = Done {
+                        slot: job.slot,
+                        worker: job.worker,
+                        buf: job.buf,
+                        loss,
+                    };
+                    if tx.send(done).is_err() {
+                        break; // coordinator gone
+                    }
+                }
+            }));
+        }
+        WorkerPool {
+            job_tx: Some(job_tx),
+            done_rx,
+            handles,
+            size,
+        }
+    }
+
+    /// Number of pool threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Enqueue one gradient task.
+    pub fn submit(&self, job: Job) -> Result<()> {
+        self.job_tx
+            .as_ref()
+            .expect("pool channel open while pool is alive")
+            .send(job)
+            .map_err(|_| anyhow!("worker pool shut down"))
+    }
+
+    /// Block for the next completion (any slot).
+    pub fn recv(&self) -> Result<Done> {
+        self.done_rx
+            .recv()
+            .map_err(|_| anyhow!("worker pool died (all threads exited)"))
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the job sender unparks every thread with RecvError.
+        self.job_tx.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        format!("worker thread panicked: {s}")
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        format!("worker thread panicked: {s}")
+    } else {
+        "worker thread panicked".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generate_synthetic;
+    use crate::prng::Pcg64;
+
+    fn mk_jobs(n: usize, params: &Arc<Vec<f32>>) -> Vec<Job> {
+        let root = Pcg64::new(3, 3);
+        (0..n)
+            .map(|i| Job {
+                slot: i,
+                worker: HonestWorker::new(
+                    i,
+                    generate_synthetic(7 + i as u64, 120),
+                    &root,
+                    false,
+                ),
+                params: Arc::clone(params),
+                batch: 20,
+                buf: Vec::new(),
+            })
+            .collect()
+    }
+
+    fn run_round(pool: &WorkerPool, jobs: Vec<Job>) -> Vec<Done> {
+        let n = jobs.len();
+        for j in jobs {
+            pool.submit(j).unwrap();
+        }
+        let mut dones: Vec<Option<Done>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let d = pool.recv().unwrap();
+            dones[d.slot] = Some(d);
+        }
+        dones.into_iter().map(|d| d.unwrap()).collect()
+    }
+
+    fn init_params() -> Arc<Vec<f32>> {
+        let mut eng = NativeEngine::new(MlpSpec::default(), 20);
+        use crate::worker::GradEngine;
+        Arc::new(eng.init_params(5).unwrap())
+    }
+
+    #[test]
+    fn pool_results_are_invariant_to_thread_count() {
+        let params = init_params();
+        let mut baseline: Option<Vec<(f32, Vec<f32>)>> = None;
+        for threads in [1usize, 2, 4] {
+            let pool = WorkerPool::new(threads, MlpSpec::default(), 20);
+            let dones = run_round(&pool, mk_jobs(6, &params));
+            let got: Vec<(f32, Vec<f32>)> = dones
+                .into_iter()
+                .map(|d| (d.loss.unwrap(), d.buf))
+                .collect();
+            match &baseline {
+                None => baseline = Some(got),
+                Some(b) => assert_eq!(b, &got, "{threads} threads"),
+            }
+        }
+    }
+
+    #[test]
+    fn pool_reuses_buffers_and_workers_across_rounds() {
+        let params = init_params();
+        let pool = WorkerPool::new(2, MlpSpec::default(), 20);
+        let mut jobs = mk_jobs(3, &params);
+        for round in 0..3 {
+            let dones = run_round(&pool, jobs);
+            for d in &dones {
+                assert!(d.loss.as_ref().unwrap().is_finite(), "round {round}");
+                assert_eq!(d.buf.len(), MlpSpec::default().p());
+            }
+            jobs = dones
+                .into_iter()
+                .map(|d| Job {
+                    slot: d.slot,
+                    worker: d.worker,
+                    params: Arc::clone(&params),
+                    batch: 20,
+                    buf: d.buf,
+                })
+                .collect();
+        }
+    }
+
+    #[test]
+    fn panic_in_worker_is_reported_not_fatal() {
+        let params = init_params();
+        let pool = WorkerPool::new(2, MlpSpec::default(), 20);
+        let mut jobs = mk_jobs(2, &params);
+        // empty shard => sample_batch asserts => panic inside the pool
+        jobs[1].worker.shard.images.clear();
+        jobs[1].worker.shard.labels.clear();
+        let dones = run_round(&pool, jobs);
+        assert!(dones[0].loss.is_ok());
+        let err = dones[1].loss.as_ref().unwrap_err();
+        assert!(err.contains("panicked"), "{err}");
+        // the pool stays usable after a panic
+        let dones = run_round(&pool, mk_jobs(2, &params));
+        assert!(dones.iter().all(|d| d.loss.is_ok()));
+    }
+}

@@ -6,6 +6,11 @@
 //! startup (`PjRtClient::cpu() → HloModuleProto::from_text_file →
 //! client.compile`) and reused every round; only literal marshalling
 //! happens per call.
+//!
+//! Everything that touches the external `xla` crate is gated behind the
+//! off-by-default `pjrt` cargo feature (the crate cannot build offline);
+//! [`Meta`] — the artifact metadata — stays available unconditionally so
+//! tooling (`rosdhb info`, benches) can inspect bundles in any build.
 
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
@@ -55,6 +60,7 @@ impl Meta {
 }
 
 /// Compiled artifacts + the PJRT client that owns them.
+#[cfg(feature = "pjrt")]
 pub struct PjrtRuntime {
     #[allow(dead_code)]
     client: xla::PjRtClient,
@@ -67,6 +73,7 @@ pub struct PjrtRuntime {
     pub meta: Meta,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtRuntime {
     /// Load and compile all artifacts from `dir`.
     pub fn load(dir: &str) -> Result<PjrtRuntime> {

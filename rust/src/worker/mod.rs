@@ -19,6 +19,7 @@
 use crate::data::{Dataset, CLASSES};
 use crate::model::{self, MlpSpec, Workspace};
 use crate::prng::Pcg64;
+#[cfg(feature = "pjrt")]
 use crate::runtime::PjrtRuntime;
 use anyhow::Result;
 
@@ -33,6 +34,20 @@ pub trait GradEngine {
     /// `(loss, grad)` on `[batch, d_in]` inputs with one-hot labels.
     fn grad(&mut self, params: &[f32], x: &[f32], y1h: &[f32])
         -> Result<(f32, Vec<f32>)>;
+    /// Gradient into a caller-owned reusable buffer (resized to P);
+    /// returns the loss. The worker-pool hot path uses this so the
+    /// steady-state round loop performs no gradient allocation.
+    fn grad_into(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y1h: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<f32> {
+        let (loss, g) = self.grad(params, x, y1h)?;
+        *out = g;
+        Ok(loss)
+    }
     /// Argmax accuracy on a dataset.
     fn accuracy(&mut self, params: &[f32], ds: &Dataset) -> Result<f64>;
     fn name(&self) -> &'static str;
@@ -91,6 +106,26 @@ impl GradEngine for NativeEngine {
         Ok((loss, self.grad_buf.clone()))
     }
 
+    fn grad_into(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y1h: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<f32> {
+        let b = x.len() / self.spec.d_in;
+        out.resize(self.spec.p(), 0.0);
+        Ok(model::loss_and_grad(
+            &self.spec,
+            params,
+            x,
+            y1h,
+            b,
+            out,
+            &mut self.ws,
+        ))
+    }
+
     fn accuracy(&mut self, params: &[f32], ds: &Dataset) -> Result<f64> {
         Ok(model::accuracy(
             &self.spec,
@@ -106,11 +141,14 @@ impl GradEngine for NativeEngine {
     }
 }
 
-/// PJRT engine over the AOT artifacts.
+/// PJRT engine over the AOT artifacts (requires the `pjrt` feature —
+/// compiled out by default because the `xla` crate cannot build offline).
+#[cfg(feature = "pjrt")]
 pub struct PjrtEngine {
     pub rt: PjrtRuntime,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtEngine {
     pub fn load(dir: &str) -> Result<Self> {
         Ok(PjrtEngine {
@@ -119,6 +157,7 @@ impl PjrtEngine {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl GradEngine for PjrtEngine {
     fn p(&self) -> usize {
         self.rt.meta.p
@@ -183,13 +222,27 @@ impl HonestWorker {
         params: &[f32],
         batch: usize,
     ) -> Result<(f32, Vec<f32>)> {
+        let mut out = Vec::new();
+        let loss = self.compute_grad_into(engine, params, batch, &mut out)?;
+        Ok((loss, out))
+    }
+
+    /// Buffer-reusing variant of [`Self::compute_grad`] — the worker-pool
+    /// hot path: gradient lands in `out` (resized to P), loss is returned.
+    pub fn compute_grad_into(
+        &mut self,
+        engine: &mut dyn GradEngine,
+        params: &[f32],
+        batch: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<f32> {
         let b = if batch == 0 { engine.batch() } else { batch };
         self.shard
             .sample_batch(&mut self.rng, b, &mut self.x_buf, &mut self.y_buf);
         if self.poisoned {
             flip_onehot_labels(&mut self.y_buf);
         }
-        engine.grad(params, &self.x_buf, &self.y_buf)
+        engine.grad_into(params, &self.x_buf, &self.y_buf, out)
     }
 }
 

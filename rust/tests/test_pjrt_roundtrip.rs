@@ -5,7 +5,11 @@
 //!
 //! These tests skip (pass with a notice) when `artifacts/` is absent so
 //! `cargo test` works pre-`make artifacts`; CI runs `make test` which
-//! builds artifacts first.
+//! builds artifacts first. The whole file requires the `pjrt` cargo
+//! feature (the default build compiles the PJRT paths out — see
+//! rust/README.md).
+
+#![cfg(feature = "pjrt")]
 
 use rosdhb::config::{Engine, ExperimentConfig};
 use rosdhb::coordinator::Trainer;

@@ -1,0 +1,156 @@
+//! Round-engine integration tests:
+//!
+//! * the `RunReport` (loss trajectory, byte counters, τ-crossing) is
+//!   bit-identical for any worker-pool size — the pool is pure mechanics;
+//! * the sparse-domain round engine matches the dense oracle across all
+//!   four aggregator families and every attack kind.
+
+use rosdhb::config::ExperimentConfig;
+use rosdhb::coordinator::Trainer;
+
+fn base(rounds: usize) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default_mnist_like();
+    c.train_size = 800;
+    c.test_size = 200;
+    c.rounds = rounds;
+    c.eval_every = 10;
+    c.n_honest = 6;
+    c.n_byz = 2;
+    c.batch = 20;
+    c.gamma = 0.2;
+    c.k_frac = 0.1;
+    c.stop_at_tau = false;
+    c.aggregator = "cwtm".into();
+    c.attack = "alie".into();
+    c
+}
+
+#[test]
+fn run_report_is_invariant_to_pool_size() {
+    let run = |pool: usize| {
+        let mut c = base(30);
+        c.pool_size = pool;
+        Trainer::from_config(&c).unwrap().run().unwrap()
+    };
+    let r1 = run(1);
+    let r4 = run(4);
+    let rn = run(8); // n = n_honest + n_byz workers
+    for (tag, r) in [("4", &r4), ("n", &rn)] {
+        assert_eq!(r.rounds_run, r1.rounds_run, "pool={tag}");
+        assert_eq!(r.uplink_bytes, r1.uplink_bytes, "pool={tag}");
+        assert_eq!(r.downlink_bytes, r1.downlink_bytes, "pool={tag}");
+        assert_eq!(r.rounds_to_tau, r1.rounds_to_tau, "pool={tag}");
+        assert_eq!(
+            r.uplink_bytes_to_tau, r1.uplink_bytes_to_tau,
+            "pool={tag}"
+        );
+        assert_eq!(r.final_loss, r1.final_loss, "pool={tag}");
+        assert_eq!(r.best_acc, r1.best_acc, "pool={tag}");
+        for (a, b) in r.log.rows.iter().zip(&r1.log.rows) {
+            assert_eq!(a.train_loss, b.train_loss, "pool={tag} round {}", a.round);
+            assert_eq!(
+                a.update_norm, b.update_norm,
+                "pool={tag} round {}",
+                a.round
+            );
+            assert_eq!(a.test_acc, b.test_acc, "pool={tag} round {}", a.round);
+        }
+    }
+}
+
+#[test]
+fn pool_size_invariance_holds_under_labelflip_data_byzantines() {
+    // label-flip adds gradient-computing Byzantine workers to the pool;
+    // their RNG streams must be just as placement-independent.
+    let run = |pool: usize| {
+        let mut c = base(12);
+        c.attack = "labelflip".into();
+        c.pool_size = pool;
+        Trainer::from_config(&c).unwrap().run().unwrap()
+    };
+    let a = run(1);
+    let b = run(8);
+    assert_eq!(a.final_loss, b.final_loss);
+    assert_eq!(a.uplink_bytes, b.uplink_bytes);
+}
+
+#[test]
+fn sparse_engine_matches_dense_oracle_across_grid() {
+    // All four aggregator families (order statistics, Krum, geometric
+    // median, NNM composition) under every attack kind. Non-separable
+    // rules take the sparse engine's dense-aggregation fallback and match
+    // exactly; separable rules use the cached column path and may drift
+    // from the oracle by f32 rounding only.
+    for agg in ["cwtm", "median", "geomed", "krum", "nnm+cwtm"] {
+        for attack in ["none", "alie", "ipm", "signflip", "noise", "mimic",
+                       "labelflip"] {
+            let mut cd = base(12);
+            cd.aggregator = agg.into();
+            cd.attack = attack.into();
+            cd.round_engine = "dense".into();
+            let mut cs = cd.clone();
+            cs.round_engine = "sparse".into();
+            let mut td = Trainer::from_config(&cd).unwrap();
+            let mut ts = Trainer::from_config(&cs).unwrap();
+            for t in 1..=12u64 {
+                let (ld, _) = td.step(t).unwrap();
+                let (ls, _) = ts.step(t).unwrap();
+                assert!(
+                    (ld - ls).abs() <= 1e-3 * (1.0 + ld.abs()),
+                    "{agg}/{attack} round {t}: dense loss {ld} vs sparse {ls}"
+                );
+            }
+            // wire accounting is mode-independent
+            let last_d = td.log.rows.last().unwrap();
+            let last_s = ts.log.rows.last().unwrap();
+            assert_eq!(
+                last_d.uplink_bytes, last_s.uplink_bytes,
+                "{agg}/{attack} uplink"
+            );
+            assert_eq!(
+                last_d.downlink_bytes, last_s.downlink_bytes,
+                "{agg}/{attack} downlink"
+            );
+            // models stay together
+            let num: f64 = td
+                .params
+                .iter()
+                .zip(&ts.params)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            let den: f64 = td
+                .params
+                .iter()
+                .map(|&a| (a as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+                .max(1e-9);
+            assert!(
+                num / den < 1e-3,
+                "{agg}/{attack}: params rel diff {}",
+                num / den
+            );
+        }
+    }
+}
+
+#[test]
+fn local_variant_parity_dense_vs_sparse() {
+    // RoSDHB-Local: per-worker masks, no shared subspace — the sparse
+    // engine only changes the momentum arithmetic, which is bit-exact.
+    let mut cd = base(10);
+    cd.algorithm = rosdhb::config::Algorithm::RoSdhbLocal;
+    cd.round_engine = "dense".into();
+    let mut cs = cd.clone();
+    cs.round_engine = "sparse".into();
+    let mut td = Trainer::from_config(&cd).unwrap();
+    let mut ts = Trainer::from_config(&cs).unwrap();
+    for t in 1..=10u64 {
+        let (ld, ud) = td.step(t).unwrap();
+        let (ls, us) = ts.step(t).unwrap();
+        assert_eq!(ld, ls, "round {t} loss");
+        assert_eq!(ud, us, "round {t} update norm");
+    }
+    assert_eq!(td.params, ts.params);
+}
