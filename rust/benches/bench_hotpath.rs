@@ -15,6 +15,12 @@
 //!   8. e2e rounds/s           (round_engine = dense vs sparse)
 //!
 //! Run: `cargo bench --bench bench_hotpath`
+//!
+//! Every stage's samples are also written as JSON (default
+//! `BENCH_hotpath.json`, override with `BENCH_JSON=path`) so the perf
+//! trajectory is an artifact, not just terminal scrollback. `BENCH_SMOKE=1`
+//! (or `-- --smoke`) runs a shortened pass — the CI smoke-bench job uses
+//! it to capture the JSON on every PR.
 
 use rosdhb::aggregators;
 use rosdhb::compression::{mask_from_seed, RandK};
@@ -33,7 +39,30 @@ const D: usize = 11_809;
 const N: usize = 19;
 const K: usize = 590; // k/d = 0.05
 
+/// `bench::time_fn`, plus recording the samples for the JSON artifact.
+fn timed<F: FnMut()>(
+    rec: &mut Vec<(String, Vec<f64>)>,
+    name: &str,
+    warmup: usize,
+    samples: usize,
+    f: F,
+) -> Vec<f64> {
+    let xs = bench::time_fn(name, warmup, samples, f);
+    rec.push((name.to_string(), xs.clone()));
+    xs
+}
+
 fn main() {
+    let smoke = std::env::var("BENCH_SMOKE")
+        .map(|v| v == "1" || v == "true")
+        .unwrap_or(false)
+        || std::env::args().any(|a| a == "--smoke");
+    if smoke {
+        println!("# smoke mode: shortened sample counts");
+    }
+    // sample-count scaling for the smoke pass
+    let scale = |n: usize| if smoke { (n / 5).max(2) } else { n };
+    let mut rec: Vec<(String, Vec<f64>)> = Vec::new();
     let mut rng = Pcg64::new(2, 2);
 
     // 1. worker gradient (native)
@@ -44,13 +73,13 @@ fn main() {
     let mut x = Vec::new();
     let mut y = Vec::new();
     ds.sample_batch(&mut rng, 60, &mut x, &mut y);
-    bench::time_fn("grad/native (B=60)", 3, 20, || {
+    timed(&mut rec, "grad/native (B=60)", 3, scale(20), || {
         let _ = eng.grad(&params, &x, &y).unwrap();
     });
 
     // 2. mask derivation
     let mut seed = 0u64;
-    bench::time_fn("mask/from_seed (k/d=0.05)", 3, 50, || {
+    timed(&mut rec, "mask/from_seed (k/d=0.05)", 3, scale(50), || {
         seed = seed.wrapping_add(1);
         let m = mask_from_seed(seed, D, K);
         std::hint::black_box(&m);
@@ -62,7 +91,7 @@ fn main() {
     let mask = mask_from_seed(7, D, K);
     let mut payload = Vec::with_capacity(K);
     let mut recon = vec![0f32; D];
-    bench::time_fn("compress+reconstruct", 5, 100, || {
+    timed(&mut rec, "compress+reconstruct", 5, scale(100), || {
         mask.compress_into(&g, &mut payload);
         mask.reconstruct_into(&payload, &mut recon);
     });
@@ -70,14 +99,14 @@ fn main() {
     // 4. momentum update x n: dense densify-then-scale_add vs the sparse
     // engine's in-place scale + scatter (bit-identical results)
     let mut momenta = vec![vec![0f32; D]; N];
-    bench::time_fn("momentum x19/dense (recon+scale_add)", 5, 100, || {
+    timed(&mut rec, "momentum x19/dense (recon+scale_add)", 5, scale(100), || {
         for m in momenta.iter_mut() {
             mask.reconstruct_into(&payload, &mut recon);
             tensor::scale_add(m, 0.9, 0.1, &recon);
         }
     });
     let alpha = mask.alpha();
-    bench::time_fn("momentum x19/sparse (scale+scatter)", 5, 100, || {
+    timed(&mut rec, "momentum x19/sparse (scale+scatter)", 5, scale(100), || {
         for m in momenta.iter_mut() {
             tensor::scale(m, 0.9);
             for (&ci, &v) in mask.idx.iter().zip(&payload) {
@@ -98,10 +127,11 @@ fn main() {
     let mut out = vec![0f32; D];
     for aggspec in ["cwtm", "nnm+cwtm"] {
         let agg = aggregators::parse_spec(aggspec, 9).unwrap();
-        bench::time_fn(
+        timed(
+            &mut rec,
             &format!("aggregate/{aggspec} (n=19, full d)"),
             2,
-            15,
+            scale(15),
             || {
                 agg.aggregate(&refs, &mut out);
             },
@@ -109,12 +139,12 @@ fn main() {
     }
     let cwtm = aggregators::parse_spec("cwtm", 9).unwrap();
     let mut block = vec![0f32; K];
-    bench::time_fn("aggregate/cwtm (n=19, k-block)", 2, 30, || {
+    timed(&mut rec, "aggregate/cwtm (n=19, k-block)", 2, scale(30), || {
         cwtm.aggregate_block(&refs, &mask.idx, &mut block);
     });
 
     // 6. model step
-    bench::time_fn("model step (axpy d=11809)", 5, 200, || {
+    timed(&mut rec, "model step (axpy d=11809)", 5, scale(200), || {
         tensor::axpy(&mut g, -0.1, &out);
     });
 
@@ -128,7 +158,7 @@ fn main() {
     let mut sengines: Vec<NativeEngine> =
         (0..N).map(|_| NativeEngine::new(spec, 60)).collect();
     let params_ref = &params;
-    bench::time_fn("grad fanout/spawn-per-round (n=19)", 2, 15, || {
+    timed(&mut rec, "grad fanout/spawn-per-round (n=19)", 2, scale(15), || {
         std::thread::scope(|s| {
             for (w, e) in sworkers.iter_mut().zip(sengines.iter_mut()) {
                 s.spawn(move || {
@@ -148,10 +178,11 @@ fn main() {
         .collect();
     let mut bufs: Vec<Option<Vec<f32>>> =
         (0..N).map(|_| Some(vec![0f32; D])).collect();
-    bench::time_fn(
+    timed(
+        &mut rec,
         &format!("grad fanout/persistent pool ({threads} thr)"),
         2,
-        15,
+        scale(15),
         || {
             for i in 0..N {
                 pool.submit(Job {
@@ -183,7 +214,7 @@ fn main() {
         cfg.k_frac = 0.05;
         cfg.rounds = 30;
         cfg.eval_every = 1000;
-        cfg.train_size = 3_000;
+        cfg.train_size = if smoke { 1_200 } else { 3_000 };
         cfg.test_size = 500;
         cfg.stop_at_tau = false;
         cfg.round_engine = round_engine.into();
@@ -193,10 +224,11 @@ fn main() {
     for mode in ["dense", "sparse"] {
         let mut trainer = Trainer::from_config(&mk_cfg(mode)).unwrap();
         let mut t = 1u64;
-        let xs = bench::time_fn(
+        let xs = timed(
+            &mut rec,
             &format!("e2e round/{mode} (n=19, alie, cwtm, k/d=0.05)"),
             2,
-            20,
+            scale(20),
             || {
                 trainer.step(t).unwrap();
                 t += 1;
@@ -236,4 +268,12 @@ fn main() {
     }
     #[cfg(not(feature = "pjrt"))]
     println!("# built without the 'pjrt' feature: skipping PJRT e2e");
+
+    // the per-PR perf artifact
+    let json_path = std::env::var("BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    match bench::write_json(&json_path, &rec) {
+        Ok(()) => println!("# wrote {} stages to {json_path}", rec.len()),
+        Err(e) => eprintln!("# failed to write {json_path}: {e}"),
+    }
 }

@@ -2,6 +2,8 @@
 //!
 //! ```text
 //! rosdhb train  [--config FILE] [--key value ...]   # one experiment
+//! rosdhb serve  [--config FILE] [--key value ...]   # distributed coordinator
+//! rosdhb join   [--config FILE] [--key value ...]   # distributed worker
 //! rosdhb fig1   [--out csv] [--quick]               # Figure 1 sweep
 //! rosdhb gb     [--config FILE] [--samples N]       # (G,B) estimation
 //! rosdhb info                                       # build/artifact info
@@ -9,7 +11,12 @@
 //!
 //! Any `--key value` pair after `train` overrides the corresponding
 //! [`crate::config::ExperimentConfig`] field (`--k_frac 0.05`,
-//! `--algorithm rosdhb-local`, ...).
+//! `--algorithm rosdhb-local`, ...). `serve` is `train` with
+//! `transport = "tcp"` forced: it binds `listen_addr`, waits for
+//! `n_honest + n_byz` workers, then runs the round loop over sockets.
+//! `join` runs one worker process against `coordinator_addr` — both
+//! sides must use the identical experiment config (enforced via a config
+//! fingerprint at rendezvous).
 
 /// A parsed command line.
 #[derive(Clone, Debug, PartialEq)]
@@ -22,9 +29,9 @@ pub struct Cli {
 impl Cli {
     pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Cli, String> {
         let mut it = args.into_iter();
-        let command = it
-            .next()
-            .ok_or("usage: rosdhb <train|fig1|gb|info> [--key value ...]")?;
+        let command = it.next().ok_or(
+            "usage: rosdhb <train|serve|join|fig1|gb|info> [--key value ...]",
+        )?;
         if command.starts_with('-') {
             return Err(format!("expected a command, got '{command}'"));
         }

@@ -15,7 +15,7 @@ const HEADER: usize = 1 + 4;
 /// Wire size of the cheaper codec for a (d, k) mask, without building it
 /// (hot-path metering — must equal `MaskWire::choose(mask).encoded_len()`).
 pub fn mask_wire_len(d: usize, k: usize) -> usize {
-    HEADER + (4 * k).min((d + 7) / 8)
+    HEADER + (4 * k).min(d.div_ceil(8))
 }
 
 /// An encoded mask ready for the wire.
@@ -29,7 +29,7 @@ impl MaskWire {
     /// Choose the cheaper encoding for a mask.
     pub fn choose(mask: &Mask) -> MaskWire {
         let list_cost = HEADER + 4 * mask.k();
-        let bitset_cost = HEADER + (mask.d + 7) / 8;
+        let bitset_cost = HEADER + mask.d.div_ceil(8);
         if list_cost <= bitset_cost {
             Self::index_list(&mask.idx, mask.d)
         } else {
@@ -45,7 +45,7 @@ impl MaskWire {
     }
 
     pub fn bitset(mask: &Mask) -> MaskWire {
-        let mut bits = vec![0u8; (mask.d + 7) / 8];
+        let mut bits = vec![0u8; mask.d.div_ceil(8)];
         for &i in &mask.idx {
             bits[(i / 8) as usize] |= 1 << (i % 8);
         }

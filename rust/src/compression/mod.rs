@@ -29,7 +29,9 @@ impl Mask {
     pub fn new(d: usize, mut idx: Vec<u32>) -> Self {
         idx.sort_unstable();
         idx.dedup();
-        assert!(idx.last().map_or(true, |&l| (l as usize) < d));
+        if let Some(&last) = idx.last() {
+            assert!((last as usize) < d);
+        }
         Mask { d, idx }
     }
 

@@ -147,6 +147,22 @@ pub struct ExperimentConfig {
     /// [`crate::algorithms::RoundMode`]. "dense" is the oracle path the
     /// sparse engine is tested against.
     pub round_engine: String,
+    /// Round-exchange transport: "local" (in-process worker pool — the
+    /// tested oracle) or "tcp" (socket-backed coordinator/worker split;
+    /// run the coordinator with `rosdhb serve` and each worker with
+    /// `rosdhb join`). RunReports are bit-identical between the two on
+    /// the same config/seed.
+    pub transport: String,
+    /// Bind address of the coordinator under `transport = "tcp"`
+    /// (port 0 = ephemeral).
+    pub listen_addr: String,
+    /// Address workers dial under `transport = "tcp"` (`rosdhb join`).
+    pub coordinator_addr: String,
+    /// Per-round uplink deadline in milliseconds under `transport =
+    /// "tcp"`: a worker that misses it has its contribution dropped
+    /// (zero gradient) and is evicted from later rounds instead of
+    /// stalling the run.
+    pub round_timeout_ms: u64,
 }
 
 impl ExperimentConfig {
@@ -181,6 +197,10 @@ impl ExperimentConfig {
             test_size: 10_000,
             pool_size: 0,
             round_engine: "auto".into(),
+            transport: "local".into(),
+            listen_addr: "127.0.0.1:7177".into(),
+            coordinator_addr: "127.0.0.1:7177".into(),
+            round_timeout_ms: 30_000,
         }
     }
 
@@ -235,9 +255,21 @@ impl ExperimentConfig {
         num!("train_size", c.train_size, usize);
         num!("test_size", c.test_size, usize);
         num!("pool_size", c.pool_size, usize);
+        num!("round_timeout_ms", c.round_timeout_ms, u64);
         if let Some(v) = get("round_engine") {
             c.round_engine =
                 v.as_str().ok_or("round_engine: want string")?.into();
+        }
+        if let Some(v) = get("transport") {
+            c.transport = v.as_str().ok_or("transport: want string")?.into();
+        }
+        if let Some(v) = get("listen_addr") {
+            c.listen_addr =
+                v.as_str().ok_or("listen_addr: want string")?.into();
+        }
+        if let Some(v) = get("coordinator_addr") {
+            c.coordinator_addr =
+                v.as_str().ok_or("coordinator_addr: want string")?.into();
         }
         if let Some(v) = get("compressor") {
             c.compressor = v.as_str().ok_or("compressor: want string")?.into();
@@ -321,6 +353,12 @@ impl ExperimentConfig {
                 "test_size" => c.test_size = tmp.test_size,
                 "pool_size" => c.pool_size = tmp.pool_size,
                 "round_engine" => c.round_engine = tmp.round_engine.clone(),
+                "transport" => c.transport = tmp.transport.clone(),
+                "listen_addr" => c.listen_addr = tmp.listen_addr.clone(),
+                "coordinator_addr" => {
+                    c.coordinator_addr = tmp.coordinator_addr.clone()
+                }
+                "round_timeout_ms" => c.round_timeout_ms = tmp.round_timeout_ms,
                 other => return Err(format!("unknown config key '{other}'")),
             }
         }
@@ -373,7 +411,85 @@ impl ExperimentConfig {
         // single source of truth for the accepted values (algorithms::build
         // later unwraps the same parse)
         crate::algorithms::RoundMode::parse(&self.round_engine)?;
+        match self.transport.as_str() {
+            "local" => {}
+            "tcp" => {
+                // The socket runtime ships exactly the bytes the ByteMeter
+                // models, which requires a wire plan where the server can
+                // reconstruct the algorithm's inputs from the uplink
+                // payloads alone: coordinated-mask RoSDHB and the dense
+                // baselines. Server-drawn per-worker masks (rosdhb-local,
+                // dgd-randk) and difference/quantization compressors
+                // (dasha, rosdhb-u) stay simulation-only for now.
+                match self.algorithm {
+                    Algorithm::RoSdhb | Algorithm::RobustDgd | Algorithm::Dgd => {}
+                    other => {
+                        return Err(format!(
+                            "transport = \"tcp\" supports rosdhb, robust-dgd \
+                             and dgd; '{}' runs under transport = \"local\"",
+                            other.name()
+                        ))
+                    }
+                }
+                if self.engine != Engine::Native {
+                    return Err(
+                        "transport = \"tcp\" requires engine = \"native\"".into()
+                    );
+                }
+                if self.lyapunov {
+                    return Err(
+                        "lyapunov diagnostics need dense worker gradients; \
+                         use transport = \"local\""
+                            .into(),
+                    );
+                }
+                if self.round_timeout_ms == 0 {
+                    return Err("round_timeout_ms must be > 0".into());
+                }
+            }
+            other => {
+                return Err(format!("unknown transport '{other}' (local|tcp)"))
+            }
+        }
         Ok(())
+    }
+
+    /// 64-bit digest of every field both sides of a `transport = "tcp"`
+    /// run must agree on for the worker's locally rebuilt state (shards,
+    /// RNG streams, wire plan) to match the coordinator's. Exchanged in
+    /// the JOIN handshake; a mismatch refuses the worker at rendezvous.
+    pub fn wire_fingerprint(&self) -> u64 {
+        // The dataset enters by *kind* only: hashing a local MNIST path
+        // would refuse multi-host runs that keep the same files at
+        // different locations. File contents are the operator's
+        // responsibility (synthetic data is fully pinned by seed/sizes,
+        // which are hashed).
+        let dataset_kind = match &self.dataset {
+            Dataset::Synthetic => "synthetic",
+            Dataset::MnistIdx(_) => "mnist-idx",
+        };
+        let canon = format!(
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
+            self.algorithm.name(),
+            self.n_honest,
+            self.n_byz,
+            self.seed,
+            self.k_frac,
+            self.batch,
+            self.attack,
+            self.aggregator,
+            self.partition,
+            self.train_size,
+            self.test_size,
+            dataset_kind,
+        );
+        // FNV-1a, 64-bit
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in canon.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
     }
 
     /// JSON summary embedded in reports.
@@ -401,6 +517,7 @@ impl ExperimentConfig {
         m.insert("batch".into(), Json::Num(self.batch as f64));
         m.insert("tau".into(), Json::Num(self.tau));
         m.insert("seed".into(), Json::Num(self.seed as f64));
+        m.insert("transport".into(), Json::Str(self.transport.clone()));
         Json::Obj(m)
     }
 }
@@ -503,6 +620,65 @@ mod tests {
         let c = ExperimentConfig::from_toml(&doc).unwrap();
         assert_eq!(c.round_engine, "dense");
         assert_eq!(c.pool_size, 2);
+    }
+
+    #[test]
+    fn transport_keys_parse_and_validate() {
+        let mut c = ExperimentConfig::default_mnist_like();
+        assert_eq!(c.transport, "local");
+        c.set("transport", "tcp").unwrap();
+        c.set("listen_addr", "127.0.0.1:0").unwrap();
+        c.set("coordinator_addr", "10.0.0.5:7177").unwrap();
+        c.set("round_timeout_ms", "5000").unwrap();
+        assert_eq!(c.round_timeout_ms, 5000);
+        assert!(c.set("transport", "carrier-pigeon").is_err());
+
+        // tcp is limited to wire plans with exact byte parity
+        let mut c = ExperimentConfig::default_mnist_like();
+        c.transport = "tcp".into();
+        c.algorithm = Algorithm::ByzDashaPage;
+        assert!(c.validate().is_err());
+        c.algorithm = Algorithm::RoSdhbLocal;
+        assert!(c.validate().is_err());
+        c.algorithm = Algorithm::RoSdhb;
+        c.validate().unwrap();
+        c.lyapunov = true;
+        assert!(c.validate().is_err());
+
+        let doc = toml::TomlDoc::parse(
+            "[experiment]\ntransport = \"tcp\"\nlisten_addr = \"0.0.0.0:9000\"\n\
+             round_timeout_ms = 1500\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.transport, "tcp");
+        assert_eq!(c.listen_addr, "0.0.0.0:9000");
+        assert_eq!(c.round_timeout_ms, 1500);
+    }
+
+    #[test]
+    fn wire_fingerprint_tracks_training_state_fields() {
+        let a = ExperimentConfig::default_mnist_like();
+        let mut b = a.clone();
+        assert_eq!(a.wire_fingerprint(), b.wire_fingerprint());
+        // transport plumbing does not change the fingerprint (the same
+        // run can listen on different interfaces)
+        b.listen_addr = "0.0.0.0:9999".into();
+        assert_eq!(a.wire_fingerprint(), b.wire_fingerprint());
+        // anything feeding shards/RNG/wire plan does
+        b.seed += 1;
+        assert_ne!(a.wire_fingerprint(), b.wire_fingerprint());
+        let mut c = a.clone();
+        c.k_frac = 0.25;
+        assert_ne!(a.wire_fingerprint(), c.wire_fingerprint());
+        // dataset *kind* is identity, its local path is not — the same
+        // MNIST files may live at different locations across hosts
+        let mut m1 = a.clone();
+        m1.dataset = Dataset::MnistIdx("/data/mnist".into());
+        let mut m2 = a.clone();
+        m2.dataset = Dataset::MnistIdx("/home/user/mnist".into());
+        assert_eq!(m1.wire_fingerprint(), m2.wire_fingerprint());
+        assert_ne!(a.wire_fingerprint(), m1.wire_fingerprint());
     }
 
     #[test]

@@ -15,24 +15,36 @@
 //!   every eval_every rounds: test accuracy, τ-crossing, Lyapunov diag
 //! ```
 //!
-//! ## Round execution (§Perf)
+//! ## Round execution (§Perf + §Net)
 //!
-//! Gradients run on a [`pool::WorkerPool`] created **once** in
-//! [`Trainer::from_config`] and reused for every round: threads park on a
-//! channel instead of being spawned per round, workers and their reusable
-//! gradient buffers travel through the pool by move, and the steady-state
-//! loop is allocation-free. The pool size is configurable
-//! (`config: pool_size`, 0 = auto) and never changes results — each
-//! worker owns its RNG stream, so the loss trajectory, byte counters and
-//! τ-crossing are bit-identical for any thread count (pinned by
-//! `rust/tests/test_round_engine.rs`). Under PJRT the pool is disabled
-//! (the client is not `Send`) and gradients run sequentially on the main
-//! thread, with identical numerics.
+//! The round loop drives a [`round_transport::RoundTransport`] — "given
+//! θ_{t-1}, produce this round's per-worker gradients and losses" — with
+//! two implementations selected by `config: transport`:
+//!
+//! * **local** ([`round_transport::LocalTransport`], the oracle):
+//!   gradients run on a [`pool::WorkerPool`] created **once** in
+//!   [`Trainer::from_config`] and reused for every round: threads park on
+//!   a channel instead of being spawned per round, workers and their
+//!   reusable gradient buffers travel through the pool by move, and the
+//!   steady-state loop is allocation-free. The pool size is configurable
+//!   (`config: pool_size`, 0 = auto) and never changes results — each
+//!   worker owns its RNG stream, so the loss trajectory, byte counters
+//!   and τ-crossing are bit-identical for any thread count (pinned by
+//!   `rust/tests/test_round_engine.rs`). Under PJRT the pool is disabled
+//!   (the client is not `Send`) and gradients run sequentially on the
+//!   main thread, with identical numerics.
+//! * **tcp** ([`round_transport::TcpTransport`]): the same wire format
+//!   over real sockets — n worker processes (`rosdhb join`) plus this
+//!   coordinator (`rosdhb serve`), bit-identical `RunReport`s and
+//!   measured traffic equal to the [`ByteMeter`] model (pinned by
+//!   `rust/tests/test_transport_tcp.rs`).
 //!
 //! Worker panics surface as `Err` from [`Trainer::step`] rather than
-//! aborting the process.
+//! aborting the process; a crashed or stalled *remote* worker degrades
+//! into a dropped contribution.
 
 pub mod pool;
+pub mod round_transport;
 
 use crate::algorithms::{self, Algorithm, RoundEnv};
 use crate::attacks::{self, AttackKind};
@@ -45,28 +57,91 @@ use crate::metrics::{MetricsLog, RoundRecord};
 use crate::model::MlpSpec;
 use crate::prng::Pcg64;
 use crate::tensor;
+use crate::transport::net::{CoordinatorServer, NetStats};
 use crate::transport::ByteMeter;
 #[cfg(feature = "pjrt")]
 use crate::worker::PjrtEngine;
 use crate::worker::{GradEngine, HonestWorker, NativeEngine};
 use anyhow::{anyhow, Result};
-use self::pool::{Job, WorkerPool};
-use std::sync::Arc;
+use self::pool::WorkerPool;
+use self::round_transport::{LocalTransport, RoundTransport, TcpTransport};
 
-/// Pull a worker out of its slot, or report a poisoned trainer: slots are
-/// only left empty when the pool died mid-round and took the in-flight
-/// workers with it. Returning `Err` here keeps the "failures surface as
-/// `Err`, never an abort" contract even on calls *after* such a failure.
-fn take_worker(
-    workers: &mut [Option<HonestWorker>],
-    slot: usize,
-) -> Result<HonestWorker> {
-    workers[slot].take().ok_or_else(|| {
-        anyhow!(
-            "trainer poisoned: worker {slot} was lost in a failed round \
-             (worker pool died); rebuild the Trainer"
-        )
-    })
+/// Build the gradient-computing workers (honest shards first, then any
+/// label-flip-poisoned Byzantine clones) and the test set, exactly as the
+/// round loop will index them.
+///
+/// This is the single source of truth for shard assignment and per-worker
+/// RNG streams: `rosdhb join` calls it too, so a remote worker process
+/// rebuilds byte-identical local state from the shared config (guarded by
+/// [`ExperimentConfig::wire_fingerprint`] at rendezvous).
+pub fn build_training_workers(
+    cfg: &ExperimentConfig,
+) -> Result<(Vec<HonestWorker>, Dataset)> {
+    let root = Pcg64::new(cfg.seed, 0);
+    let (train, test) = load_dataset(cfg)?;
+    let mut part_rng = root.derive(0x7061_7274, 0, 0);
+    let shards = match crate::config::parse_partition(&cfg.partition)
+        .map_err(|e| anyhow!(e))?
+    {
+        None => data::partition_iid(&train, cfg.n_honest, &mut part_rng),
+        Some(alpha) => data::partition_dirichlet(
+            &train,
+            cfg.n_honest,
+            alpha,
+            &mut part_rng,
+        ),
+    };
+    let mut workers: Vec<HonestWorker> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| HonestWorker::new(i, s, &root, false))
+        .collect();
+    let attack = attacks::parse_spec(&cfg.attack).map_err(|e| anyhow!(e))?;
+    if matches!(attack, AttackKind::LabelFlip) {
+        for j in 0..cfg.n_byz {
+            // each poisoned worker clones an honest shard
+            let shard = workers[j % cfg.n_honest].shard.clone();
+            workers.push(HonestWorker::new(
+                cfg.n_honest + j,
+                shard,
+                &root,
+                true,
+            ));
+        }
+    }
+    Ok((workers, test))
+}
+
+/// The (train, test) split named by the config — the one loading path
+/// every participant shares, so coordinator and remote workers can never
+/// see different data.
+fn load_dataset(cfg: &ExperimentConfig) -> Result<(Dataset, Dataset)> {
+    match &cfg.dataset {
+        DatasetCfg::Synthetic => Ok(data::generate_synthetic_split(
+            cfg.seed ^ 0xdada,
+            cfg.train_size,
+            cfg.test_size,
+        )),
+        DatasetCfg::MnistIdx(dir) => {
+            data::load_mnist_idx(dir).map_err(|e| anyhow!("mnist: {e}"))
+        }
+    }
+}
+
+/// Test split + gradient-slot count **without** materializing worker
+/// shards — the TCP coordinator never computes gradients itself (remote
+/// workers rebuild their own shard from the shared config), so running
+/// the partition and cloning label-flip shards would be pure waste.
+fn build_eval_side(cfg: &ExperimentConfig) -> Result<(Dataset, usize)> {
+    let (_train, test) = load_dataset(cfg)?;
+    let attack = attacks::parse_spec(&cfg.attack).map_err(|e| anyhow!(e))?;
+    let n_grad = cfg.n_honest
+        + if matches!(attack, AttackKind::LabelFlip) {
+            cfg.n_byz
+        } else {
+            0
+        };
+    Ok((test, n_grad))
 }
 
 /// End-of-run summary (plus the full per-round log).
@@ -90,10 +165,9 @@ pub struct Trainer {
     pub cfg: ExperimentConfig,
     /// Evaluation + sequential-path gradient engine.
     engine: Box<dyn GradEngine>,
-    /// Gradient workers: honest in slots `[0, n_honest)`, then data-level
-    /// Byzantine workers (label-flip; empty for payload attacks). `None`
-    /// only while a worker is in flight inside the pool.
-    workers: Vec<Option<HonestWorker>>,
+    /// How this round's gradients are exchanged (in-process pool, or the
+    /// socket runtime).
+    transport: Box<dyn RoundTransport>,
     algorithm: Box<dyn Algorithm>,
     aggregator: Box<dyn Aggregator>,
     attack: AttackKind,
@@ -105,22 +179,77 @@ pub struct Trainer {
     k: usize,
     /// Set when loss/update became non-finite; `run()` stops gracefully.
     pub diverged: bool,
-    /// Persistent gradient pool (native engine only; `None` under PJRT —
-    /// sequential there, identical numerics).
-    pool: Option<WorkerPool>,
-    /// Broadcast parameter buffer shared with pool threads; refreshed in
-    /// place each round (no allocation once every job handle is returned).
-    shared_params: Arc<Vec<f32>>,
-    /// Per-worker reusable gradient buffers, indexed like `workers`.
+    /// Per-worker reusable gradient buffers (honest slots first, then
+    /// data-level Byzantine workers).
     grad_store: Vec<Vec<f32>>,
     /// Per-worker losses for the current round.
     loss_store: Vec<f32>,
 }
 
 impl Trainer {
-    /// Build everything from a validated config.
+    /// Build everything from a validated config, including the transport
+    /// it names. With `transport = "tcp"` this **blocks** until all
+    /// `n_total` workers have joined `listen_addr`.
     pub fn from_config(cfg: &ExperimentConfig) -> Result<Self> {
         cfg.validate().map_err(|e| anyhow!(e))?;
+        if cfg.transport == "tcp" {
+            let (test, n_grad) = build_eval_side(cfg)?;
+            let server = CoordinatorServer::bind(&cfg.listen_addr)?;
+            eprintln!(
+                "rosdhb[tcp]: listening on {}, waiting for {} workers \
+                 (`rosdhb join --coordinator_addr {}`)",
+                server.local_addr(),
+                cfg.n_total(),
+                server.local_addr(),
+            );
+            let d = MlpSpec::default().p();
+            let transport = TcpTransport::rendezvous(server, cfg, d)?;
+            return Self::with_transport_and_test_set(
+                cfg,
+                Box::new(transport),
+                test,
+                n_grad,
+            );
+        }
+        let (workers, test) = build_training_workers(cfg)?;
+        let n_grad = workers.len();
+        // --- persistent gradient pool (native only: the PJRT client is
+        // not Send). Created once here, reused for every round.
+        let pool = if cfg.engine == Engine::Native {
+            let size = if cfg.pool_size > 0 {
+                cfg.pool_size
+            } else {
+                std::thread::available_parallelism()
+                    .map(|p| p.get())
+                    .unwrap_or(1)
+                    .min(n_grad.max(1))
+            };
+            Some(WorkerPool::new(size, MlpSpec::default(), cfg.batch.max(1)))
+        } else {
+            None
+        };
+        let transport = LocalTransport::new(workers, pool);
+        Self::with_transport_and_test_set(cfg, Box::new(transport), test, n_grad)
+    }
+
+    /// Build a trainer around an externally constructed transport (the
+    /// loopback tests pre-bind an ephemeral port this way).
+    pub fn with_transport(
+        cfg: &ExperimentConfig,
+        transport: Box<dyn RoundTransport>,
+    ) -> Result<Self> {
+        cfg.validate().map_err(|e| anyhow!(e))?;
+        let (workers, test) = build_training_workers(cfg)?;
+        let n_grad = workers.len();
+        Self::with_transport_and_test_set(cfg, transport, test, n_grad)
+    }
+
+    fn with_transport_and_test_set(
+        cfg: &ExperimentConfig,
+        transport: Box<dyn RoundTransport>,
+        test: Dataset,
+        n_grad: usize,
+    ) -> Result<Self> {
         let root = Pcg64::new(cfg.seed, 0);
 
         // --- engine
@@ -141,82 +270,17 @@ impl Trainer {
         };
         let d = engine.p();
 
-        // --- data
-        let (train, test) = match &cfg.dataset {
-            DatasetCfg::Synthetic => data::generate_synthetic_split(
-                cfg.seed ^ 0xdada,
-                cfg.train_size,
-                cfg.test_size,
-            ),
-            DatasetCfg::MnistIdx(dir) => data::load_mnist_idx(dir)
-                .map_err(|e| anyhow!("mnist: {e}"))?,
-        };
-        let mut part_rng = root.derive(0x7061_7274, 0, 0);
-        let shards = match crate::config::parse_partition(&cfg.partition)
-            .map_err(|e| anyhow!(e))?
-        {
-            None => data::partition_iid(&train, cfg.n_honest, &mut part_rng),
-            Some(alpha) => data::partition_dirichlet(
-                &train,
-                cfg.n_honest,
-                alpha,
-                &mut part_rng,
-            ),
-        };
-        let honest: Vec<HonestWorker> = shards
-            .into_iter()
-            .enumerate()
-            .map(|(i, s)| HonestWorker::new(i, s, &root, false))
-            .collect();
-
-        // --- attack & (for label-flip) poisoned byzantine workers
         let attack = attacks::parse_spec(&cfg.attack).map_err(|e| anyhow!(e))?;
-        let byz_data_workers: Vec<HonestWorker> =
-            if matches!(attack, AttackKind::LabelFlip) {
-                (0..cfg.n_byz)
-                    .map(|j| {
-                        // each poisoned worker clones an honest shard
-                        let shard = honest[j % cfg.n_honest].shard.clone();
-                        HonestWorker::new(cfg.n_honest + j, shard, &root, true)
-                    })
-                    .collect()
-            } else {
-                Vec::new()
-            };
-
         let aggregator = aggregators::parse_spec(&cfg.aggregator, cfg.n_byz)
             .map_err(|e| anyhow!(e))?;
         let algorithm = algorithms::build(cfg, d);
         let params = engine.init_params(cfg.seed ^ 0x1a17)?;
         let k = RandK::from_frac(d, cfg.k_frac).k;
 
-        let n_grad = honest.len() + byz_data_workers.len();
-        let workers: Vec<Option<HonestWorker>> = honest
-            .into_iter()
-            .chain(byz_data_workers)
-            .map(Some)
-            .collect();
-
-        // --- persistent gradient pool (native only: the PJRT client is
-        // not Send). Created once here, reused for every round.
-        let pool = if cfg.engine == Engine::Native {
-            let size = if cfg.pool_size > 0 {
-                cfg.pool_size
-            } else {
-                std::thread::available_parallelism()
-                    .map(|p| p.get())
-                    .unwrap_or(1)
-                    .min(n_grad.max(1))
-            };
-            Some(WorkerPool::new(size, MlpSpec::default(), cfg.batch.max(1)))
-        } else {
-            None
-        };
-
         Ok(Trainer {
             cfg: cfg.clone(),
             engine,
-            workers,
+            transport,
             algorithm,
             aggregator,
             attack,
@@ -227,8 +291,6 @@ impl Trainer {
             log: MetricsLog::default(),
             k,
             diverged: false,
-            pool,
-            shared_params: Arc::new(Vec::new()),
             grad_store: vec![vec![0f32; d]; n_grad],
             loss_store: vec![0f32; n_grad],
         })
@@ -240,74 +302,36 @@ impl Trainer {
             .kappa(self.cfg.n_total(), self.cfg.n_byz)
     }
 
-    /// Compute this round's gradients into `grad_store`/`loss_store` —
-    /// through the pool when present, sequentially otherwise. Worker
-    /// panics and engine errors come back as `Err` (never an abort), with
-    /// all surviving workers and buffers restored to their slots first.
-    fn compute_gradients(&mut self) -> Result<()> {
-        let n_grad = self.workers.len();
-        if let Some(pool) = &self.pool {
-            // Refresh the shared broadcast buffer in place; all job
-            // handles from the previous round have been returned, so the
-            // Arc is unique and this is a copy, not an allocation. (A
-            // non-unique Arc can only mean a previous round failed midway
-            // and leaked a handle — fall back to a fresh buffer then.)
-            if Arc::get_mut(&mut self.shared_params).is_none() {
-                self.shared_params = Arc::new(Vec::new());
-            }
-            let buf = Arc::get_mut(&mut self.shared_params)
-                .expect("freshly replaced Arc is unique");
-            buf.resize(self.params.len(), 0.0);
-            buf.copy_from_slice(&self.params);
-            for slot in 0..n_grad {
-                let worker = take_worker(&mut self.workers, slot)?;
-                let buf = std::mem::take(&mut self.grad_store[slot]);
-                pool.submit(Job {
-                    slot,
-                    worker,
-                    params: Arc::clone(&self.shared_params),
-                    batch: self.cfg.batch,
-                    buf,
-                })?;
-            }
-            let mut first_err: Option<anyhow::Error> = None;
-            for _ in 0..n_grad {
-                let done = pool.recv()?;
-                self.workers[done.slot] = Some(done.worker);
-                self.grad_store[done.slot] = done.buf;
-                match done.loss {
-                    Ok(l) => self.loss_store[done.slot] = l,
-                    Err(e) => {
-                        if first_err.is_none() {
-                            first_err =
-                                Some(anyhow!("worker {}: {e}", done.slot));
-                        }
-                    }
-                }
-            }
-            if let Some(e) = first_err {
-                return Err(e);
-            }
-        } else {
-            for slot in 0..n_grad {
-                let mut worker = take_worker(&mut self.workers, slot)?;
-                let res = worker.compute_grad_into(
-                    self.engine.as_mut(),
-                    &self.params,
-                    self.cfg.batch,
-                    &mut self.grad_store[slot],
-                );
-                self.workers[slot] = Some(worker);
-                self.loss_store[slot] = res?;
-            }
-        }
-        Ok(())
+    /// Compute this round's gradients into `grad_store`/`loss_store`
+    /// through the configured transport. Worker panics and engine errors
+    /// come back as `Err` (never an abort); remote-worker failures
+    /// degrade into dropped contributions inside the transport.
+    fn compute_gradients(&mut self, t: u64) -> Result<()> {
+        self.transport.exchange(
+            t,
+            self.engine.as_mut(),
+            &self.params,
+            self.cfg.batch,
+            &mut self.grad_store,
+            &mut self.loss_store,
+        )
+    }
+
+    /// Measured socket traffic (tcp transport only).
+    pub fn net_stats(&self) -> Option<NetStats> {
+        self.transport.net_stats()
+    }
+
+    /// Release transport resources (tcp: tell workers the run is over).
+    /// Also happens on drop.
+    pub fn shutdown_transport(&mut self) {
+        self.transport.shutdown();
     }
 
     /// One synchronous round; returns (mean honest loss, ‖R‖).
     pub fn step(&mut self, t: u64) -> Result<(f64, f64)> {
         let nh = self.cfg.n_honest;
-        self.compute_gradients()?;
+        self.compute_gradients(t)?;
         let mut loss_sum = 0.0f64;
         for &l in &self.loss_store[..nh] {
             loss_sum += l as f64;
@@ -391,23 +415,15 @@ impl Trainer {
     }
 
     /// Fresh honest batch gradients at the current model (diagnostics /
-    /// (G,B) estimation; does not advance training state).
+    /// (G,B) estimation; does not advance training state). Requires the
+    /// local transport.
     pub fn probe_honest_gradients(&mut self) -> Result<Vec<Vec<f32>>> {
-        let mut out = Vec::with_capacity(self.cfg.n_honest);
-        for slot in 0..self.cfg.n_honest {
-            let mut worker = take_worker(&mut self.workers, slot)?;
-            let mut buf = vec![0f32; self.params.len()];
-            let res = worker.compute_grad_into(
-                self.engine.as_mut(),
-                &self.params,
-                self.cfg.batch,
-                &mut buf,
-            );
-            self.workers[slot] = Some(worker);
-            res?;
-            out.push(buf);
-        }
-        Ok(out)
+        self.transport.probe_honest(
+            self.engine.as_mut(),
+            &self.params,
+            self.cfg.batch,
+            self.cfg.n_honest,
+        )
     }
 
     /// Run the full loop per the config; returns the report.
@@ -456,6 +472,13 @@ impl Trainer {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Reach into the in-process transport (all tests here use it).
+    fn local(t: &mut Trainer) -> &mut LocalTransport {
+        t.transport
+            .as_local_mut()
+            .expect("tests run on the local transport")
+    }
 
     fn tiny_cfg() -> ExperimentConfig {
         let mut c = ExperimentConfig::default_mnist_like();
@@ -513,8 +536,8 @@ mod tests {
         cfg.attack = "labelflip".into();
         cfg.n_byz = 2;
         let mut t = Trainer::from_config(&cfg).unwrap();
-        assert_eq!(t.workers.len(), cfg.n_honest + 2);
-        assert!(t.workers[cfg.n_honest..]
+        assert_eq!(local(&mut t).workers.len(), cfg.n_honest + 2);
+        assert!(local(&mut t).workers[cfg.n_honest..]
             .iter()
             .all(|w| w.as_ref().unwrap().poisoned));
         t.step(1).unwrap();
@@ -551,7 +574,7 @@ mod tests {
         let cfg = tiny_cfg();
         let mut par = Trainer::from_config(&cfg).unwrap();
         let mut seq = Trainer::from_config(&cfg).unwrap();
-        seq.pool = None;
+        local(&mut seq).pool = None;
         for t in 1..=5 {
             let (lp, up) = par.step(t).unwrap();
             let (ls, us) = seq.step(t).unwrap();
@@ -583,14 +606,14 @@ mod tests {
         let mut t = Trainer::from_config(&tiny_cfg()).unwrap();
         {
             // empty shard => sample_batch asserts => panic inside the pool
-            let w = t.workers[0].as_mut().unwrap();
+            let w = local(&mut t).workers[0].as_mut().unwrap();
             w.shard.images.clear();
             w.shard.labels.clear();
         }
         let err = t.step(1).unwrap_err().to_string();
         assert!(err.contains("panicked"), "{err}");
         // every worker slot survived the failed round
-        assert!(t.workers.iter().all(|w| w.is_some()));
+        assert!(local(&mut t).workers.iter().all(|w| w.is_some()));
     }
 
     #[cfg(not(feature = "pjrt"))]

@@ -1,0 +1,522 @@
+//! How a round's gradients are exchanged — in-process or over sockets.
+//!
+//! [`Trainer::step`][super::Trainer::step] drives a [`RoundTransport`]:
+//! given the current parameters, fill `grad_store`/`loss_store` with this
+//! round's per-worker contributions. Two implementations exist:
+//!
+//! * [`LocalTransport`] — the persistent worker pool (or the sequential
+//!   engine under PJRT). This is the tested oracle: every other transport
+//!   must reproduce its `RunReport` bit for bit on the same config/seed.
+//! * [`TcpTransport`] — the coordinator side of the socket runtime
+//!   (`transport = "tcp"`): broadcast the model through
+//!   [`CoordinatorServer`], collect worker uplinks in wire format, and
+//!   reconstruct the gradient buffers the algorithm layer expects.
+//!
+//! ## Wire plans and byte parity
+//!
+//! The simulation's [`ByteMeter`][crate::transport::ByteMeter] *models*
+//! per-round traffic; the TCP path must *transmit* exactly those bytes.
+//! That works when the uplink payload alone lets the server rebuild the
+//! algorithm's input:
+//!
+//! * [`WirePlan::SparseGlobal`] (RoSDHB, k < d) — downlink
+//!   `ModelBroadcast` with the mask seed; workers re-derive the shared
+//!   mask, uplink `CompressedGrad` with the k masked gradient values.
+//!   The server scatters them into a d-buffer (zeros elsewhere); the
+//!   algorithm's own `mask.compress` then recovers the identical payload,
+//!   so results match the local transport bitwise.
+//! * [`WirePlan::Dense`] (RoSDHB at k = d, robust-dgd, dgd) — plain
+//!   broadcast down, `FullGrad` up.
+//!
+//! Payload-attack Byzantine workers join as *drones*: the omniscient
+//! adversary of the paper is still simulated server-side (that is what
+//! keeps runs reproducible), but each drone receives the broadcast and
+//! ships a correctly-sized placeholder uplink so measured socket traffic
+//! matches the accounting model. Crash-fault Byzantine workers
+//! (`attack = "none"`, f > 0) stay silent, exactly like the simulation.
+//!
+//! A worker that misses the round deadline, crashes, or violates the
+//! protocol degrades into a dropped contribution (zero gradient, zero
+//! loss, eviction from later rounds) — never a hang.
+
+use crate::compression::{mask_from_seed, Mask, RandK};
+use crate::config::ExperimentConfig;
+use crate::transport::net::{CoordinatorServer, NetStats};
+use crate::transport::WireMessage;
+use crate::worker::{GradEngine, HonestWorker};
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::pool::{Job, WorkerPool};
+
+/// How long a coordinator waits for all workers to join.
+pub const RENDEZVOUS_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// Pull a worker out of its slot, or report a poisoned transport: slots
+/// are only left empty when the pool died mid-round and took the
+/// in-flight workers with it. Returning `Err` here keeps the "failures
+/// surface as `Err`, never an abort" contract even on calls *after* such
+/// a failure.
+fn take_worker(
+    workers: &mut [Option<HonestWorker>],
+    slot: usize,
+) -> Result<HonestWorker> {
+    workers[slot].take().ok_or_else(|| {
+        anyhow!(
+            "trainer poisoned: worker {slot} was lost in a failed round \
+             (worker pool died); rebuild the Trainer"
+        )
+    })
+}
+
+/// One round-trip of the synchronous round loop: distribute `params`,
+/// collect per-worker gradient contributions.
+pub trait RoundTransport: Send {
+    fn name(&self) -> &'static str;
+
+    /// Fill `grad_store[w]` / `loss_store[w]` for every gradient slot
+    /// (honest workers first, then data-level Byzantine workers). `engine`
+    /// is the trainer's sequential gradient engine — used only by the
+    /// local transport when no pool is available (PJRT).
+    fn exchange(
+        &mut self,
+        t: u64,
+        engine: &mut dyn GradEngine,
+        params: &[f32],
+        batch: usize,
+        grad_store: &mut [Vec<f32>],
+        loss_store: &mut [f32],
+    ) -> Result<()>;
+
+    /// Fresh honest full-d gradients at `params` for (G,B) estimation —
+    /// requires direct worker access, so only the local transport can.
+    fn probe_honest(
+        &mut self,
+        engine: &mut dyn GradEngine,
+        params: &[f32],
+        batch: usize,
+        n_honest: usize,
+    ) -> Result<Vec<Vec<f32>>>;
+
+    /// Measured socket traffic, if this transport moves real bytes.
+    fn net_stats(&self) -> Option<NetStats> {
+        None
+    }
+
+    /// Release transport resources (TCP: send `BYE` to all workers).
+    /// Also runs on drop; explicit calls make shutdown ordering testable.
+    fn shutdown(&mut self) {}
+
+    /// Diagnostic/test hook into the in-process implementation.
+    fn as_local_mut(&mut self) -> Option<&mut LocalTransport> {
+        None
+    }
+}
+
+// ------------------------------------------------------------------ local
+
+/// In-process gradient exchange over the persistent [`WorkerPool`] (the
+/// pre-socket behavior of `Trainer`, unchanged results).
+pub struct LocalTransport {
+    /// Gradient workers: honest in slots `[0, n_honest)`, then data-level
+    /// Byzantine workers. `None` only while a worker is in flight inside
+    /// the pool.
+    pub(crate) workers: Vec<Option<HonestWorker>>,
+    /// Persistent gradient pool (native engine only; `None` under PJRT —
+    /// sequential there, identical numerics).
+    pub(crate) pool: Option<WorkerPool>,
+    /// Broadcast parameter buffer shared with pool threads; refreshed in
+    /// place each round (no allocation once every job handle is returned).
+    shared_params: Arc<Vec<f32>>,
+}
+
+impl LocalTransport {
+    pub fn new(workers: Vec<HonestWorker>, pool: Option<WorkerPool>) -> Self {
+        LocalTransport {
+            workers: workers.into_iter().map(Some).collect(),
+            pool,
+            shared_params: Arc::new(Vec::new()),
+        }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl RoundTransport for LocalTransport {
+    fn name(&self) -> &'static str {
+        "local"
+    }
+
+    fn exchange(
+        &mut self,
+        _t: u64,
+        engine: &mut dyn GradEngine,
+        params: &[f32],
+        batch: usize,
+        grad_store: &mut [Vec<f32>],
+        loss_store: &mut [f32],
+    ) -> Result<()> {
+        let n_grad = self.workers.len();
+        debug_assert_eq!(grad_store.len(), n_grad);
+        if let Some(pool) = &self.pool {
+            // Refresh the shared broadcast buffer in place; all job
+            // handles from the previous round have been returned, so the
+            // Arc is unique and this is a copy, not an allocation. (A
+            // non-unique Arc can only mean a previous round failed midway
+            // and leaked a handle — fall back to a fresh buffer then.)
+            if Arc::get_mut(&mut self.shared_params).is_none() {
+                self.shared_params = Arc::new(Vec::new());
+            }
+            let buf = Arc::get_mut(&mut self.shared_params)
+                .expect("freshly replaced Arc is unique");
+            buf.resize(params.len(), 0.0);
+            buf.copy_from_slice(params);
+            for slot in 0..n_grad {
+                let worker = take_worker(&mut self.workers, slot)?;
+                let buf = std::mem::take(&mut grad_store[slot]);
+                pool.submit(Job {
+                    slot,
+                    worker,
+                    params: Arc::clone(&self.shared_params),
+                    batch,
+                    buf,
+                })?;
+            }
+            let mut first_err: Option<anyhow::Error> = None;
+            for _ in 0..n_grad {
+                let done = pool.recv()?;
+                self.workers[done.slot] = Some(done.worker);
+                grad_store[done.slot] = done.buf;
+                match done.loss {
+                    Ok(l) => loss_store[done.slot] = l,
+                    Err(e) => {
+                        if first_err.is_none() {
+                            first_err =
+                                Some(anyhow!("worker {}: {e}", done.slot));
+                        }
+                    }
+                }
+            }
+            if let Some(e) = first_err {
+                return Err(e);
+            }
+        } else {
+            for slot in 0..n_grad {
+                let mut worker = take_worker(&mut self.workers, slot)?;
+                let res = worker.compute_grad_into(
+                    engine,
+                    params,
+                    batch,
+                    &mut grad_store[slot],
+                );
+                self.workers[slot] = Some(worker);
+                loss_store[slot] = res?;
+            }
+        }
+        Ok(())
+    }
+
+    fn probe_honest(
+        &mut self,
+        engine: &mut dyn GradEngine,
+        params: &[f32],
+        batch: usize,
+        n_honest: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(n_honest);
+        for slot in 0..n_honest {
+            let mut worker = take_worker(&mut self.workers, slot)?;
+            let mut buf = vec![0f32; params.len()];
+            let res = worker.compute_grad_into(engine, params, batch, &mut buf);
+            self.workers[slot] = Some(worker);
+            res?;
+            out.push(buf);
+        }
+        Ok(out)
+    }
+
+    fn as_local_mut(&mut self) -> Option<&mut LocalTransport> {
+        Some(self)
+    }
+}
+
+// -------------------------------------------------------------------- tcp
+
+/// Which messages travel each round (derived from algorithm + k).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WirePlan {
+    /// Coordinated-mask RoSDHB: `ModelBroadcast` (+seed) down,
+    /// k-value `CompressedGrad` up.
+    SparseGlobal { k: usize },
+    /// Dense algorithms (and k = d): plain broadcast down, `FullGrad` up.
+    Dense,
+}
+
+impl WirePlan {
+    /// The plan implied by a validated config at model dimension `d`.
+    pub fn from_config(cfg: &ExperimentConfig, d: usize) -> WirePlan {
+        let k = RandK::from_frac(d, cfg.k_frac).k;
+        match cfg.algorithm {
+            crate::config::Algorithm::RoSdhb if k < d => {
+                WirePlan::SparseGlobal { k }
+            }
+            _ => WirePlan::Dense,
+        }
+    }
+}
+
+/// Coordinator side of `transport = "tcp"`.
+pub struct TcpTransport {
+    server: CoordinatorServer,
+    plan: WirePlan,
+    d: usize,
+    seed: u64,
+    /// Gradient slots (honest + data-level Byzantine) — mirrors the
+    /// trainer's `grad_store` layout.
+    n_grad: usize,
+    /// Payload-attack drones reply with placeholder uplinks; crash-fault
+    /// Byzantine slots stay silent.
+    drones_reply: bool,
+    timeout: Duration,
+}
+
+impl TcpTransport {
+    /// Wait for all `n_total` workers to join `server`, then build the
+    /// transport. `d` is the model dimension of the trainer's engine.
+    pub fn rendezvous(
+        mut server: CoordinatorServer,
+        cfg: &ExperimentConfig,
+        d: usize,
+    ) -> Result<Self> {
+        let attack =
+            crate::attacks::parse_spec(&cfg.attack).map_err(|e| anyhow!(e))?;
+        let (n_grad, drones_reply) = match attack {
+            crate::attacks::AttackKind::LabelFlip => (cfg.n_total(), false),
+            crate::attacks::AttackKind::None => (cfg.n_honest, false),
+            crate::attacks::AttackKind::Payload(_) => (cfg.n_honest, true),
+        };
+        server.rendezvous(
+            cfg.n_total(),
+            cfg.wire_fingerprint(),
+            RENDEZVOUS_TIMEOUT,
+        )?;
+        Ok(TcpTransport {
+            server,
+            plan: WirePlan::from_config(cfg, d),
+            d,
+            seed: cfg.seed,
+            n_grad,
+            drones_reply,
+            timeout: Duration::from_millis(cfg.round_timeout_ms.max(1)),
+        })
+    }
+
+    /// Validate and scatter one worker uplink into its gradient slot.
+    fn apply_uplink(
+        &self,
+        t: u64,
+        bytes: &[u8],
+        mask: Option<&Mask>,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let msg = WireMessage::decode(bytes, self.d)
+            .map_err(|e| anyhow!("undecodable uplink: {e}"))?;
+        match msg {
+            WireMessage::CompressedGrad {
+                round,
+                values,
+                mask: wire_mask,
+                ..
+            } => {
+                let m = mask.ok_or_else(|| {
+                    anyhow!("CompressedGrad under a dense wire plan")
+                })?;
+                if wire_mask.is_some() {
+                    return Err(anyhow!(
+                        "per-worker masks are not part of the tcp wire plan"
+                    ));
+                }
+                if round != t {
+                    return Err(anyhow!("round {round} != current {t}"));
+                }
+                if values.len() != m.k() {
+                    return Err(anyhow!(
+                        "payload {} values != k {}",
+                        values.len(),
+                        m.k()
+                    ));
+                }
+                // Scatter the raw payload (no α): the algorithm re-gathers
+                // these exact values via `mask.compress`, making the TCP
+                // round bit-identical to the in-process round.
+                out.resize(self.d, 0.0);
+                out.fill(0.0);
+                for (&ci, &v) in m.idx.iter().zip(&values) {
+                    out[ci as usize] = v;
+                }
+                Ok(())
+            }
+            WireMessage::FullGrad { round, values, .. } => {
+                if mask.is_some() {
+                    return Err(anyhow!(
+                        "FullGrad under the sparse wire plan"
+                    ));
+                }
+                if round != t {
+                    return Err(anyhow!("round {round} != current {t}"));
+                }
+                if values.len() != self.d {
+                    return Err(anyhow!(
+                        "dense gradient has {} values, model has {}",
+                        values.len(),
+                        self.d
+                    ));
+                }
+                out.clear();
+                out.extend_from_slice(&values);
+                Ok(())
+            }
+            other => Err(anyhow!("unexpected uplink message: {other:?}")),
+        }
+    }
+}
+
+impl RoundTransport for TcpTransport {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn exchange(
+        &mut self,
+        t: u64,
+        _engine: &mut dyn GradEngine,
+        params: &[f32],
+        _batch: usize,
+        grad_store: &mut [Vec<f32>],
+        loss_store: &mut [f32],
+    ) -> Result<()> {
+        debug_assert_eq!(grad_store.len(), self.n_grad);
+        let (msg, mask) = match self.plan {
+            WirePlan::SparseGlobal { k } => {
+                let mask_seed = RandK::round_seed(self.seed, t);
+                (
+                    WireMessage::ModelBroadcast {
+                        round: t,
+                        params: params.to_vec(),
+                        mask_seed,
+                    },
+                    Some(mask_from_seed(mask_seed, self.d, k)),
+                )
+            }
+            WirePlan::Dense => (
+                WireMessage::ModelBroadcastPlain {
+                    round: t,
+                    params: params.to_vec(),
+                },
+                None,
+            ),
+        };
+        let n_conn = self.server.n_workers();
+        let mut expect = vec![false; n_conn];
+        for e in expect.iter_mut().take(self.n_grad) {
+            *e = true;
+        }
+        if self.drones_reply {
+            for e in expect.iter_mut().skip(self.n_grad) {
+                *e = true;
+            }
+        }
+        let n_expected = self.server.broadcast(t, &msg, &expect, self.timeout);
+        if self.server.n_alive() == 0 {
+            return Err(anyhow!(
+                "all {n_conn} workers are gone — nothing left to train with"
+            ));
+        }
+        let mut got = vec![false; self.n_grad];
+        for reply in self.server.collect(n_expected, t, self.timeout) {
+            let w = reply.worker as usize;
+            match reply.result {
+                Ok((loss, bytes)) => {
+                    if w >= self.n_grad {
+                        continue; // drone placeholder: metered, ignored
+                    }
+                    match self.apply_uplink(t, &bytes, mask.as_ref(), &mut grad_store[w])
+                    {
+                        Ok(()) => {
+                            loss_store[w] = loss;
+                            got[w] = true;
+                        }
+                        Err(e) => eprintln!(
+                            "rosdhb[tcp]: round {t}: worker {w}: {e} — \
+                             contribution dropped"
+                        ),
+                    }
+                }
+                Err(e) => {
+                    eprintln!("rosdhb[tcp]: round {t}: worker {w}: {e}")
+                }
+            }
+        }
+        // Stalled / crashed / malformed workers degrade into a zero
+        // contribution for this round (and eviction for later ones when
+        // the connection is gone) — the run keeps moving.
+        for (w, ok) in got.iter().enumerate() {
+            if !*ok {
+                let g = &mut grad_store[w];
+                g.resize(self.d, 0.0);
+                g.fill(0.0);
+                loss_store[w] = 0.0;
+                eprintln!(
+                    "rosdhb[tcp]: round {t}: worker {w} contributed nothing — \
+                     zero gradient substituted"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn probe_honest(
+        &mut self,
+        _engine: &mut dyn GradEngine,
+        _params: &[f32],
+        _batch: usize,
+        _n_honest: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        Err(anyhow!(
+            "(G,B) probing needs direct worker access — run it under \
+             transport = \"local\""
+        ))
+    }
+
+    fn net_stats(&self) -> Option<NetStats> {
+        Some(self.server.stats())
+    }
+
+    fn shutdown(&mut self) {
+        self.server.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Algorithm;
+
+    #[test]
+    fn wire_plan_tracks_algorithm_and_k() {
+        let mut cfg = ExperimentConfig::default_mnist_like();
+        cfg.k_frac = 0.1;
+        assert_eq!(
+            WirePlan::from_config(&cfg, 1000),
+            WirePlan::SparseGlobal { k: 100 }
+        );
+        cfg.k_frac = 1.0;
+        assert_eq!(WirePlan::from_config(&cfg, 1000), WirePlan::Dense);
+        cfg.k_frac = 0.1;
+        cfg.algorithm = Algorithm::RobustDgd;
+        assert_eq!(WirePlan::from_config(&cfg, 1000), WirePlan::Dense);
+    }
+}

@@ -7,6 +7,10 @@
 //! cargo run --release -- train --engine pjrt --attack alie \
 //!     --aggregator nnm+cwtm --k_frac 0.05 --n_byz 3 --rounds 2000
 //! cargo run --release -- fig1 --quick true
+//!
+//! # distributed (n+1 OS processes; same config on every side):
+//! cargo run --release -- serve --listen_addr 0.0.0.0:7177 --n_honest 4
+//! cargo run --release -- join  --coordinator_addr host:7177 --n_honest 4
 //! ```
 
 use anyhow::{anyhow, Result};
@@ -14,6 +18,8 @@ use rosdhb::cli::Cli;
 use rosdhb::config::{toml::TomlDoc, ExperimentConfig};
 use rosdhb::coordinator::Trainer;
 use rosdhb::heterogeneity;
+use rosdhb::coordinator::round_transport::RENDEZVOUS_TIMEOUT;
+use rosdhb::worker::remote;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -27,10 +33,14 @@ fn run(args: Vec<String>) -> Result<()> {
     let cli = Cli::parse(args).map_err(|e| anyhow!(e))?;
     match cli.command.as_str() {
         "train" => cmd_train(&cli),
+        "serve" => cmd_serve(&cli),
+        "join" => cmd_join(&cli),
         "fig1" => cmd_fig1(&cli),
         "gb" => cmd_gb(&cli),
         "info" => cmd_info(&cli),
-        other => Err(anyhow!("unknown command '{other}' (train|fig1|gb|info)")),
+        other => Err(anyhow!(
+            "unknown command '{other}' (train|serve|join|fig1|gb|info)"
+        )),
     }
 }
 
@@ -71,6 +81,53 @@ fn cmd_train(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// `serve` — run the round loop as a socket coordinator: `train` with
+/// `transport = "tcp"` forced. Blocks at rendezvous until all
+/// `n_honest + n_byz` workers have joined `listen_addr`.
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    let mut cfg = config_from_cli(cli)?;
+    cfg.set("transport", "tcp").map_err(|e| anyhow!(e))?;
+    eprintln!(
+        "rosdhb serve: {} | n={} f={} | waiting on {}",
+        cfg.algorithm.name(),
+        cfg.n_total(),
+        cfg.n_byz,
+        cfg.listen_addr,
+    );
+    let mut trainer = Trainer::from_config(&cfg)?;
+    let report = trainer.run()?;
+    if let Some(ns) = trainer.net_stats() {
+        eprintln!(
+            "rosdhb serve: measured wire bytes up={} down={} \
+             (accounting model: up={} down={}); raw socket bytes up={} down={}",
+            ns.wire_uplink,
+            ns.wire_downlink,
+            report.uplink_bytes,
+            report.downlink_bytes,
+            ns.raw_uplink,
+            ns.raw_downlink,
+        );
+    }
+    trainer.shutdown_transport();
+    println!("{}", report_json(&cfg, &report));
+    Ok(())
+}
+
+/// `join` — run one worker process against a `serve` coordinator.
+fn cmd_join(cli: &Cli) -> Result<()> {
+    let cfg = config_from_cli(cli)?;
+    let addr = cfg.coordinator_addr.clone();
+    eprintln!("rosdhb join: dialing {addr} ({})", cfg.algorithm.name());
+    // retry for as long as a coordinator would wait at rendezvous, so
+    // workers may be launched well before `serve` without dying early
+    let summary = remote::join_run(&cfg, &addr, RENDEZVOUS_TIMEOUT, None)?;
+    eprintln!(
+        "rosdhb join: worker {} ({}) served {} rounds — coordinator done",
+        summary.worker_id, summary.role, summary.rounds
+    );
+    Ok(())
+}
+
 fn report_json(
     cfg: &ExperimentConfig,
     r: &rosdhb::coordinator::RunReport,
@@ -102,7 +159,7 @@ fn report_json(
 
 /// Figure-1 sweep: communication cost to τ across k/d and f.
 fn cmd_fig1(cli: &Cli) -> Result<()> {
-    let quick = cli.get("quick").map_or(false, |v| v == "true" || v == "1");
+    let quick = cli.get("quick").is_some_and(|v| v == "true" || v == "1");
     let base = config_from_cli(cli)?;
     let kfracs: &[f64] = if quick {
         &[0.05, 0.3, 1.0]

@@ -35,7 +35,7 @@ impl MetricsLog {
     pub fn rounds_to_tau(&self, tau: f64) -> Option<usize> {
         self.rows
             .iter()
-            .find(|r| r.test_acc.map_or(false, |a| a >= tau))
+            .find(|r| r.test_acc.is_some_and(|a| a >= tau))
             .map(|r| r.round)
     }
 
@@ -43,7 +43,7 @@ impl MetricsLog {
     pub fn uplink_bytes_to_tau(&self, tau: f64) -> Option<u64> {
         self.rows
             .iter()
-            .find(|r| r.test_acc.map_or(false, |a| a >= tau))
+            .find(|r| r.test_acc.is_some_and(|a| a >= tau))
             .map(|r| r.uplink_bytes)
     }
 
@@ -51,7 +51,7 @@ impl MetricsLog {
     pub fn total_bytes_to_tau(&self, tau: f64) -> Option<u64> {
         self.rows
             .iter()
-            .find(|r| r.test_acc.map_or(false, |a| a >= tau))
+            .find(|r| r.test_acc.is_some_and(|a| a >= tau))
             .map(|r| r.uplink_bytes + r.downlink_bytes)
     }
 

@@ -14,14 +14,21 @@
 //!   *local* sparsification the worker must also ship its mask, encoded by
 //!   the cheaper of bitset (`⌈d/8⌉`) or index-list (`k·4`) codecs
 //!   (`compression::codec`).
+//!
+//! The format is no longer simulation-only: [`WireMessage::decode`] is the
+//! exact inverse of [`WireMessage::encode`], and [`net`] runs the same
+//! bytes over blocking TCP (length-prefixed frames) for the
+//! `transport = "tcp"` coordinator/worker runtime.
+
+pub mod net;
 
 use crate::compression::codec::MaskWire;
 
 /// Message header: 8-byte round id + 2-byte type tag + 2-byte worker id.
 pub const HEADER_BYTES: usize = 12;
 
-/// All messages that cross the (simulated) network.
-#[derive(Clone, Debug)]
+/// All messages that cross the (simulated or real) network.
+#[derive(Clone, Debug, PartialEq)]
 pub enum WireMessage {
     /// Server → all workers under **global** sparsification: model + the
     /// seed from which workers re-derive mask(k).
@@ -122,12 +129,118 @@ impl WireMessage {
         out
     }
 
+    /// Exact inverse of [`Self::encode`] over one complete message.
+    ///
+    /// `d` is the model dimension, needed only to rebuild the mask of a
+    /// local-sparsification `CompressedGrad` (mask payloads do not carry
+    /// `d` on the wire — both ends know it). Malformed or truncated input
+    /// returns `Err`, never panics; trailing bytes are rejected so a
+    /// length-prefixed frame must contain exactly one message.
+    pub fn decode(buf: &[u8], d: usize) -> Result<WireMessage, String> {
+        if buf.len() < HEADER_BYTES {
+            return Err(format!(
+                "frame too short: {} bytes < {HEADER_BYTES}-byte header",
+                buf.len()
+            ));
+        }
+        let round = u64::from_le_bytes(buf[0..8].try_into().unwrap());
+        let tag = u16::from_le_bytes([buf[8], buf[9]]);
+        let worker = u16::from_le_bytes([buf[10], buf[11]]);
+        let body = &buf[HEADER_BYTES..];
+        match tag {
+            0 => {
+                if body.len() < 8 {
+                    return Err("ModelBroadcast: missing mask seed".into());
+                }
+                let mask_seed = u64::from_le_bytes(body[0..8].try_into().unwrap());
+                let params = decode_f32s(&body[8..], "ModelBroadcast params")?;
+                Ok(WireMessage::ModelBroadcast {
+                    round,
+                    params,
+                    mask_seed,
+                })
+            }
+            1 => Ok(WireMessage::ModelBroadcastPlain {
+                round,
+                params: decode_f32s(body, "ModelBroadcastPlain params")?,
+            }),
+            2 => {
+                let (values, rest) = decode_counted_f32s(body, "CompressedGrad")?;
+                let mask = if rest.is_empty() {
+                    None
+                } else {
+                    let (wire, used) = MaskWire::decode(rest, d)?;
+                    if used != rest.len() {
+                        return Err(format!(
+                            "CompressedGrad: {} trailing bytes after mask",
+                            rest.len() - used
+                        ));
+                    }
+                    Some(wire)
+                };
+                Ok(WireMessage::CompressedGrad {
+                    round,
+                    worker,
+                    values,
+                    mask,
+                })
+            }
+            3 => {
+                let (values, rest) = decode_counted_f32s(body, "FullGrad")?;
+                if !rest.is_empty() {
+                    return Err(format!(
+                        "FullGrad: {} trailing bytes",
+                        rest.len()
+                    ));
+                }
+                Ok(WireMessage::FullGrad {
+                    round,
+                    worker,
+                    values,
+                })
+            }
+            t => Err(format!("unknown wire tag {t}")),
+        }
+    }
+
     pub fn is_uplink(&self) -> bool {
         matches!(
             self,
             WireMessage::CompressedGrad { .. } | WireMessage::FullGrad { .. }
         )
     }
+}
+
+/// Parse the rest of a buffer as packed little-endian f32s.
+fn decode_f32s(buf: &[u8], what: &str) -> Result<Vec<f32>, String> {
+    if buf.len() % 4 != 0 {
+        return Err(format!("{what}: {} bytes is not a whole number of f32s", buf.len()));
+    }
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Parse a `u32` count followed by that many f32s; returns the values and
+/// the unconsumed tail.
+fn decode_counted_f32s<'a>(
+    buf: &'a [u8],
+    what: &str,
+) -> Result<(Vec<f32>, &'a [u8]), String> {
+    if buf.len() < 4 {
+        return Err(format!("{what}: missing value count"));
+    }
+    let n = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
+    let need = 4 + 4 * n;
+    if buf.len() < need {
+        return Err(format!(
+            "{what}: truncated — want {n} values ({need} bytes), have {}",
+            buf.len()
+        ));
+    }
+    let values = decode_f32s(&buf[4..need], what)?;
+    Ok((values, &buf[need..]))
 }
 
 /// Cumulative byte counters for one experiment.
@@ -248,6 +361,49 @@ mod tests {
         for m in msgs {
             assert_eq!(m.encode().len(), m.encoded_len(), "{m:?}");
         }
+    }
+
+    #[test]
+    fn decode_is_exact_inverse_of_encode() {
+        let d = 100;
+        let msgs = vec![
+            WireMessage::ModelBroadcast {
+                round: 9,
+                params: vec![0.25; 17],
+                mask_seed: 0xdead_beef,
+            },
+            WireMessage::ModelBroadcastPlain {
+                round: 1,
+                params: vec![-1.5; 3],
+            },
+            WireMessage::CompressedGrad {
+                round: 7,
+                worker: 11,
+                values: vec![2.0, -3.0],
+                mask: None,
+            },
+            WireMessage::CompressedGrad {
+                round: 7,
+                worker: 11,
+                values: vec![2.0, -3.0, 4.0],
+                mask: Some(MaskWire::index_list(&[0, 50, 99], d)),
+            },
+            WireMessage::FullGrad {
+                round: 2,
+                worker: 4,
+                values: vec![0.5; 8],
+            },
+        ];
+        for m in msgs {
+            let bytes = m.encode();
+            assert_eq!(WireMessage::decode(&bytes, d).unwrap(), m, "{m:?}");
+            // any 1-byte truncation must be a clean error, not a panic
+            assert!(
+                WireMessage::decode(&bytes[..bytes.len() - 1], d).is_err(),
+                "{m:?}"
+            );
+        }
+        assert!(WireMessage::decode(&[], d).is_err());
     }
 
     #[test]

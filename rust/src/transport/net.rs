@@ -1,0 +1,807 @@
+//! Blocking-TCP runtime for the wire format (`transport = "tcp"`).
+//!
+//! The in-process simulation meters [`super::WireMessage`] byte counts
+//! without moving them; this module moves the *same bytes* across real
+//! sockets so a RoSDHB run can execute as n+1 OS processes (one
+//! coordinator, n workers) on one or many hosts:
+//!
+//! * **Framing** — every message travels as a length-prefixed frame
+//!   `[u32 body_len][u8 kind][body]`. `MSG` frames carry exactly one
+//!   `WireMessage::encode()`; `GRAD` (uplink) frames prepend the worker's
+//!   4-byte scalar loss (a diagnostic that is part of the frame envelope,
+//!   not of the metered wire format).
+//! * **Rendezvous** — workers dial in, send a `JOIN` carrying a protocol
+//!   version and a config fingerprint, and are assigned worker ids in
+//!   join order (`WELCOME`). A fingerprint mismatch is answered with an
+//!   `ERR` frame so a worker started against the wrong config fails
+//!   loudly instead of training on divergent state.
+//! * **Rounds** — [`CoordinatorServer::broadcast`] fans one pre-encoded
+//!   frame out through per-connection I/O threads;
+//!   [`CoordinatorServer::collect`] gathers uplinks with a deadline. A
+//!   stalled, crashed, or Byzantine-silent worker surfaces as an errored
+//!   [`Reply`] (and is evicted from later rounds) — never as a hang.
+//! * **Accounting** — [`NetCounters`] tallies both raw socket bytes
+//!   (frames + envelopes) and wire-format bytes (the sum of
+//!   `encoded_len()` actually transmitted). For a clean run the
+//!   wire-format counters match the simulation's [`super::ByteMeter`]
+//!   exactly (pinned by `rust/tests/test_transport_tcp.rs`).
+
+use super::WireMessage;
+use anyhow::{anyhow, Result};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Bumped on any framing or handshake change.
+pub const PROTOCOL_VERSION: u16 = 1;
+
+/// "RSDB" — rejects random port scanners / wrong services at JOIN time.
+const MAGIC: u32 = 0x5244_5342;
+
+/// Frame envelope: 4-byte length prefix + 1-byte kind.
+pub const FRAME_OVERHEAD: usize = 5;
+
+/// Uplink frames carry the worker's scalar loss ahead of the message.
+pub const GRAD_ENVELOPE: usize = 4;
+
+const KIND_MSG: u8 = 0;
+const KIND_JOIN: u8 = 1;
+const KIND_WELCOME: u8 = 2;
+const KIND_GRAD: u8 = 3;
+const KIND_BYE: u8 = 4;
+const KIND_ERR: u8 = 5;
+
+/// Hard cap on accepted frame bodies (a dense broadcast at the paper's
+/// d = 11 809 is ~47 KiB; 64 MiB leaves room for far larger models while
+/// bounding a malicious length prefix).
+const MAX_FRAME: usize = 64 << 20;
+
+/// Handshake I/O deadline (JOIN/WELCOME exchanges).
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(20);
+
+/// Extra slack `collect` allows beyond the per-connection read timeout,
+/// so the I/O threads (which enforce the real deadline) report first.
+const COLLECT_GRACE: Duration = Duration::from_secs(2);
+
+// ---------------------------------------------------------------- frames
+
+fn write_frame(stream: &mut TcpStream, kind: u8, body: &[u8]) -> std::io::Result<usize> {
+    let frame = build_frame(kind, body);
+    stream.write_all(&frame)?;
+    stream.flush()?;
+    Ok(frame.len())
+}
+
+/// Assemble a frame once for reuse across many connections.
+fn build_frame(kind: u8, body: &[u8]) -> Vec<u8> {
+    let mut frame = Vec::with_capacity(FRAME_OVERHEAD + body.len());
+    frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    frame.push(kind);
+    frame.extend_from_slice(body);
+    frame
+}
+
+fn read_frame(stream: &mut TcpStream) -> std::io::Result<(u8, Vec<u8>)> {
+    let mut head = [0u8; FRAME_OVERHEAD];
+    stream.read_exact(&mut head)?;
+    let len = u32::from_le_bytes([head[0], head[1], head[2], head[3]]) as usize;
+    if len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            ErrorKind::InvalidData,
+            format!("frame body {len} exceeds cap {MAX_FRAME}"),
+        ));
+    }
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body)?;
+    Ok((head[4], body))
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+// ------------------------------------------------------------- counters
+
+/// Snapshot of the byte counters (all directions are from the
+/// coordinator's perspective).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NetStats {
+    /// Worker→coordinator `WireMessage` bytes (sum of `encoded_len()`).
+    pub wire_uplink: u64,
+    /// Coordinator→worker `WireMessage` bytes (counted once per recipient).
+    pub wire_downlink: u64,
+    /// Raw socket bytes worker→coordinator, including frame envelopes and
+    /// handshakes.
+    pub raw_uplink: u64,
+    /// Raw socket bytes coordinator→worker.
+    pub raw_downlink: u64,
+}
+
+/// Shared atomic tallies, bumped by the per-connection I/O threads.
+#[derive(Default)]
+pub struct NetCounters {
+    wire_uplink: AtomicU64,
+    wire_downlink: AtomicU64,
+    raw_uplink: AtomicU64,
+    raw_downlink: AtomicU64,
+}
+
+impl NetCounters {
+    pub fn snapshot(&self) -> NetStats {
+        NetStats {
+            wire_uplink: self.wire_uplink.load(Ordering::Relaxed),
+            wire_downlink: self.wire_downlink.load(Ordering::Relaxed),
+            raw_uplink: self.raw_uplink.load(Ordering::Relaxed),
+            raw_downlink: self.raw_downlink.load(Ordering::Relaxed),
+        }
+    }
+}
+
+// ----------------------------------------------------------- coordinator
+
+/// One collected uplink (or failure) from a worker.
+pub struct Reply {
+    pub worker: u16,
+    /// The round this reply belongs to: the round field of the uplinked
+    /// wire message on success, the round of the in-flight command on
+    /// failure. [`CoordinatorServer::collect`] uses it to discard stale
+    /// replies from workers that fell behind, so a slow worker can never
+    /// displace a healthy worker's current-round contribution.
+    pub round: u64,
+    /// `(loss, raw WireMessage bytes)` on success; a human-readable reason
+    /// when the worker stalled past the deadline or its connection broke.
+    pub result: Result<(f32, Vec<u8>), String>,
+}
+
+enum IoCmd {
+    /// Write a pre-built frame; when `expect_reply`, read one `GRAD` frame
+    /// back (deadline `timeout`) and forward it to the reply channel.
+    Send {
+        round: u64,
+        frame: Arc<Vec<u8>>,
+        wire_bytes: u64,
+        expect_reply: bool,
+        timeout: Duration,
+    },
+    Bye,
+}
+
+struct Conn {
+    cmd_tx: Option<Sender<IoCmd>>,
+    handle: Option<JoinHandle<()>>,
+    alive: bool,
+}
+
+/// The server half of the TCP runtime: owns one I/O thread per joined
+/// worker and the reply funnel they all feed.
+pub struct CoordinatorServer {
+    listener: TcpListener,
+    local_addr: SocketAddr,
+    conns: Vec<Conn>,
+    reply_tx: Sender<Reply>,
+    reply_rx: Receiver<Reply>,
+    counters: Arc<NetCounters>,
+}
+
+impl CoordinatorServer {
+    /// Bind the rendezvous socket (use port 0 for an ephemeral port).
+    pub fn bind(addr: &str) -> Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow!("bind {addr}: {e}"))?;
+        let local_addr = listener.local_addr()?;
+        let (reply_tx, reply_rx) = channel();
+        Ok(CoordinatorServer {
+            listener,
+            local_addr,
+            conns: Vec::new(),
+            reply_tx,
+            reply_rx,
+            counters: Arc::new(NetCounters::default()),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.conns.len()
+    }
+
+    pub fn stats(&self) -> NetStats {
+        self.counters.snapshot()
+    }
+
+    /// Accept exactly `expected` workers, validating each `JOIN` against
+    /// `fingerprint` and answering with a `WELCOME` that assigns the next
+    /// worker id in join order. Non-matching joiners get an `ERR` frame
+    /// and are dropped without consuming an id.
+    pub fn rendezvous(
+        &mut self,
+        expected: usize,
+        fingerprint: u64,
+        timeout: Duration,
+    ) -> Result<()> {
+        let deadline = Instant::now() + timeout;
+        self.listener.set_nonblocking(true)?;
+        while self.conns.len() < expected {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    if let Err(e) = self.admit(stream, fingerprint, expected) {
+                        eprintln!("rosdhb[tcp]: rejected joiner {peer}: {e}");
+                    }
+                }
+                Err(e) if is_timeout(&e) => {
+                    if Instant::now() >= deadline {
+                        return Err(anyhow!(
+                            "rendezvous timed out with {}/{} workers joined",
+                            self.conns.len(),
+                            expected
+                        ));
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(anyhow!("accept: {e}")),
+            }
+        }
+        self.listener.set_nonblocking(false)?;
+        Ok(())
+    }
+
+    /// Handshake one joiner and spawn its I/O thread.
+    fn admit(
+        &mut self,
+        mut stream: TcpStream,
+        fingerprint: u64,
+        expected: usize,
+    ) -> Result<()> {
+        stream.set_nodelay(true).ok();
+        stream.set_nonblocking(false)?;
+        // a stalled peer must never wedge an I/O thread on write either
+        stream.set_write_timeout(Some(HANDSHAKE_TIMEOUT))?;
+        stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+        let (kind, body) = read_frame(&mut stream).map_err(|e| anyhow!("join read: {e}"))?;
+        self.counters
+            .raw_uplink
+            .fetch_add((FRAME_OVERHEAD + body.len()) as u64, Ordering::Relaxed);
+        if kind != KIND_JOIN || body.len() != 14 {
+            return Err(anyhow!("malformed join frame (kind {kind}, {} bytes)", body.len()));
+        }
+        let magic = u32::from_le_bytes(body[0..4].try_into().unwrap());
+        let version = u16::from_le_bytes([body[4], body[5]]);
+        let their_fp = u64::from_le_bytes(body[6..14].try_into().unwrap());
+        let problem = if magic != MAGIC {
+            Some("bad magic (not a rosdhb worker)".to_string())
+        } else if version != PROTOCOL_VERSION {
+            Some(format!(
+                "protocol version {version} != coordinator {PROTOCOL_VERSION}"
+            ))
+        } else if their_fp != fingerprint {
+            Some(format!(
+                "config fingerprint {their_fp:#x} != coordinator {fingerprint:#x} \
+                 — both sides must run the identical experiment config"
+            ))
+        } else {
+            None
+        };
+        if let Some(msg) = problem {
+            let n = write_frame(&mut stream, KIND_ERR, msg.as_bytes()).unwrap_or(0);
+            self.counters
+                .raw_downlink
+                .fetch_add(n as u64, Ordering::Relaxed);
+            return Err(anyhow!(msg));
+        }
+        let id = self.conns.len() as u16;
+        let mut welcome = Vec::with_capacity(4);
+        welcome.extend_from_slice(&id.to_le_bytes());
+        welcome.extend_from_slice(&(expected as u16).to_le_bytes());
+        let n = write_frame(&mut stream, KIND_WELCOME, &welcome)
+            .map_err(|e| anyhow!("welcome write: {e}"))?;
+        self.counters
+            .raw_downlink
+            .fetch_add(n as u64, Ordering::Relaxed);
+        stream.set_read_timeout(None)?;
+
+        let (cmd_tx, cmd_rx) = channel();
+        let reply_tx = self.reply_tx.clone();
+        let counters = Arc::clone(&self.counters);
+        let handle = std::thread::spawn(move || {
+            io_loop(stream, id, cmd_rx, reply_tx, counters);
+        });
+        self.conns.push(Conn {
+            cmd_tx: Some(cmd_tx),
+            handle: Some(handle),
+            alive: true,
+        });
+        Ok(())
+    }
+
+    /// Fan one round-`round` message out to every live connection.
+    /// `expect_reply[i]` says whether worker `i` owes an uplink this round
+    /// (its I/O thread will read one `GRAD` frame, deadline `timeout`).
+    /// Returns how many replies to [`Self::collect`].
+    pub fn broadcast(
+        &mut self,
+        round: u64,
+        msg: &WireMessage,
+        expect_reply: &[bool],
+        timeout: Duration,
+    ) -> usize {
+        debug_assert_eq!(expect_reply.len(), self.conns.len());
+        let body = msg.encode();
+        let wire_bytes = body.len() as u64;
+        let frame = Arc::new(build_frame(KIND_MSG, &body));
+        let mut expected = 0usize;
+        for (i, conn) in self.conns.iter_mut().enumerate() {
+            if !conn.alive {
+                continue;
+            }
+            let expect = expect_reply.get(i).copied().unwrap_or(false);
+            let cmd = IoCmd::Send {
+                round,
+                frame: Arc::clone(&frame),
+                wire_bytes,
+                expect_reply: expect,
+                timeout,
+            };
+            match conn.cmd_tx.as_ref().map(|tx| tx.send(cmd)) {
+                Some(Ok(())) => {
+                    if expect {
+                        expected += 1;
+                    }
+                }
+                _ => conn.alive = false,
+            }
+        }
+        expected
+    }
+
+    /// Gather up to `n_expected` round-`round` replies; workers whose
+    /// connection failed are marked dead (skipped by future broadcasts).
+    /// Successful replies for a *different* round — a worker that fell
+    /// behind and is catching up — are discarded without counting, so
+    /// they can never displace a current-round contribution. Returns
+    /// every current reply received before the deadline — the caller maps
+    /// missing workers to dropped contributions.
+    pub fn collect(
+        &mut self,
+        n_expected: usize,
+        round: u64,
+        timeout: Duration,
+    ) -> Vec<Reply> {
+        let deadline = Instant::now() + timeout + COLLECT_GRACE;
+        let mut out = Vec::with_capacity(n_expected);
+        while out.len() < n_expected {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.reply_rx.recv_timeout(deadline - now) {
+                Ok(reply) => {
+                    // a failure kills the connection whenever it happened…
+                    if reply.result.is_err() {
+                        if let Some(c) = self.conns.get_mut(reply.worker as usize) {
+                            c.alive = false;
+                        }
+                    }
+                    // …but only current-round replies (successes *and*
+                    // failures) count toward this round's quota; stale
+                    // catch-up traffic must never displace an on-time
+                    // contribution.
+                    if reply.round != round {
+                        eprintln!(
+                            "rosdhb[tcp]: worker {} delivered round {} while \
+                             collecting round {round} — stale reply discarded",
+                            reply.worker, reply.round
+                        );
+                        continue;
+                    }
+                    out.push(reply);
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        out
+    }
+
+    /// Number of connections still considered live.
+    pub fn n_alive(&self) -> usize {
+        self.conns.iter().filter(|c| c.alive).count()
+    }
+
+    /// Send `BYE` to every live worker and join all I/O threads.
+    pub fn shutdown(&mut self) {
+        for conn in &mut self.conns {
+            if let Some(tx) = conn.cmd_tx.take() {
+                let _ = tx.send(IoCmd::Bye);
+            }
+        }
+        for conn in &mut self.conns {
+            if let Some(h) = conn.handle.take() {
+                let _ = h.join();
+            }
+            conn.alive = false;
+        }
+    }
+}
+
+impl Drop for CoordinatorServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Per-connection I/O thread: serializes writes and the (optional) reply
+/// read for one worker, so a stalled peer can never block the round loop.
+fn io_loop(
+    mut stream: TcpStream,
+    id: u16,
+    cmd_rx: Receiver<IoCmd>,
+    reply_tx: Sender<Reply>,
+    counters: Arc<NetCounters>,
+) {
+    for cmd in cmd_rx {
+        match cmd {
+            IoCmd::Bye => {
+                if let Ok(n) = write_frame(&mut stream, KIND_BYE, &[]) {
+                    counters.raw_downlink.fetch_add(n as u64, Ordering::Relaxed);
+                }
+                break;
+            }
+            IoCmd::Send {
+                round,
+                frame,
+                wire_bytes,
+                expect_reply,
+                timeout,
+            } => {
+                // a worker that stops draining its socket must hit the
+                // round deadline, not the (long) handshake write timeout
+                stream.set_write_timeout(Some(timeout)).ok();
+                if let Err(e) = stream.write_all(&frame).and_then(|_| stream.flush()) {
+                    // report the failure only when this round was owed a
+                    // reply — a dead silent connection must not consume a
+                    // collect slot (it is evicted at the next broadcast,
+                    // when its command channel is found closed)
+                    if expect_reply {
+                        let _ = reply_tx.send(Reply {
+                            worker: id,
+                            round,
+                            result: Err(format!("send failed: {e}")),
+                        });
+                    }
+                    break;
+                }
+                counters
+                    .raw_downlink
+                    .fetch_add(frame.len() as u64, Ordering::Relaxed);
+                counters
+                    .wire_downlink
+                    .fetch_add(wire_bytes, Ordering::Relaxed);
+                if !expect_reply {
+                    continue;
+                }
+                stream.set_read_timeout(Some(timeout)).ok();
+                match read_frame(&mut stream) {
+                    Ok((KIND_GRAD, body)) if body.len() >= GRAD_ENVELOPE => {
+                        counters.raw_uplink.fetch_add(
+                            (FRAME_OVERHEAD + body.len()) as u64,
+                            Ordering::Relaxed,
+                        );
+                        counters.wire_uplink.fetch_add(
+                            (body.len() - GRAD_ENVELOPE) as u64,
+                            Ordering::Relaxed,
+                        );
+                        let loss =
+                            f32::from_le_bytes(body[0..4].try_into().unwrap());
+                        // the round field of the uplinked WireMessage sits
+                        // right after the loss envelope
+                        let wire_round = body
+                            .get(GRAD_ENVELOPE..GRAD_ENVELOPE + 8)
+                            .map_or(u64::MAX, |b| {
+                                u64::from_le_bytes(b.try_into().unwrap())
+                            });
+                        let _ = reply_tx.send(Reply {
+                            worker: id,
+                            round: wire_round,
+                            result: Ok((loss, body[GRAD_ENVELOPE..].to_vec())),
+                        });
+                    }
+                    Ok((kind, _)) => {
+                        let _ = reply_tx.send(Reply {
+                            worker: id,
+                            round,
+                            result: Err(format!(
+                                "protocol violation: expected GRAD, got kind {kind}"
+                            )),
+                        });
+                        break;
+                    }
+                    Err(e) => {
+                        let reason = if is_timeout(&e) {
+                            format!("missed the round deadline ({timeout:?})")
+                        } else {
+                            format!("connection lost: {e}")
+                        };
+                        let _ = reply_tx.send(Reply {
+                            worker: id,
+                            round,
+                            result: Err(reason),
+                        });
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------- worker
+
+/// The worker half: dial, handshake, then a strict
+/// recv-broadcast / send-grad loop.
+pub struct WorkerClient {
+    stream: TcpStream,
+    pub worker_id: u16,
+    pub n_total: u16,
+}
+
+impl WorkerClient {
+    /// Dial the coordinator, retrying until `retry_for` elapses (covers
+    /// "worker started before the coordinator" races), then handshake.
+    pub fn connect(addr: &str, fingerprint: u64, retry_for: Duration) -> Result<Self> {
+        let deadline = Instant::now() + retry_for;
+        let stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(anyhow!("connect {addr}: {e}"));
+                    }
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+            }
+        };
+        Self::handshake(stream, fingerprint)
+    }
+
+    fn handshake(mut stream: TcpStream, fingerprint: u64) -> Result<Self> {
+        stream.set_nodelay(true).ok();
+        let mut join = Vec::with_capacity(14);
+        join.extend_from_slice(&MAGIC.to_le_bytes());
+        join.extend_from_slice(&PROTOCOL_VERSION.to_le_bytes());
+        join.extend_from_slice(&fingerprint.to_le_bytes());
+        write_frame(&mut stream, KIND_JOIN, &join)?;
+        stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+        let (kind, body) = read_frame(&mut stream)?;
+        match kind {
+            KIND_WELCOME if body.len() == 4 => {
+                let worker_id = u16::from_le_bytes([body[0], body[1]]);
+                let n_total = u16::from_le_bytes([body[2], body[3]]);
+                stream.set_read_timeout(None)?;
+                Ok(WorkerClient {
+                    stream,
+                    worker_id,
+                    n_total,
+                })
+            }
+            KIND_ERR => Err(anyhow!(
+                "coordinator refused join: {}",
+                String::from_utf8_lossy(&body)
+            )),
+            k => Err(anyhow!("handshake: unexpected frame kind {k}")),
+        }
+    }
+
+    /// Block for the next downlink message. `Ok(None)` is a clean `BYE`
+    /// (run over); a dropped connection is an error.
+    pub fn recv(&mut self, d: usize) -> Result<Option<WireMessage>> {
+        let (kind, body) = read_frame(&mut self.stream)
+            .map_err(|e| anyhow!("coordinator connection lost: {e}"))?;
+        match kind {
+            KIND_MSG => {
+                let msg = WireMessage::decode(&body, d)
+                    .map_err(|e| anyhow!("bad downlink frame: {e}"))?;
+                Ok(Some(msg))
+            }
+            KIND_BYE => Ok(None),
+            k => Err(anyhow!("unexpected downlink frame kind {k}")),
+        }
+    }
+
+    /// Ship this round's contribution: scalar loss + one wire message.
+    pub fn send_grad(&mut self, loss: f32, msg: &WireMessage) -> Result<()> {
+        let encoded = msg.encode();
+        let mut body = Vec::with_capacity(GRAD_ENVELOPE + encoded.len());
+        body.extend_from_slice(&loss.to_le_bytes());
+        body.extend_from_slice(&encoded);
+        write_frame(&mut self.stream, KIND_GRAD, &body)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn frame_roundtrip_over_loopback() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let (kind, body) = read_frame(&mut s).unwrap();
+            write_frame(&mut s, kind, &body).unwrap();
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        write_frame(&mut c, KIND_MSG, b"hello frames").unwrap();
+        let (kind, body) = read_frame(&mut c).unwrap();
+        assert_eq!(kind, KIND_MSG);
+        assert_eq!(body, b"hello frames");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn rendezvous_assigns_ids_in_join_order() {
+        let mut server = CoordinatorServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let good: Vec<_> = (0..2)
+            .map(|_| {
+                let addr = addr.clone();
+                thread::spawn(move || {
+                    WorkerClient::connect(&addr, 42, Duration::from_secs(5))
+                })
+            })
+            .collect();
+        server
+            .rendezvous(2, 42, Duration::from_secs(10))
+            .unwrap();
+        let mut ids: Vec<u16> = good
+            .into_iter()
+            .map(|h| h.join().unwrap().unwrap().worker_id)
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1]);
+        assert_eq!(server.n_workers(), 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn rendezvous_rejects_fingerprint_mismatch_without_burning_an_id() {
+        let mut server = CoordinatorServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let rendezvous = thread::spawn(move || {
+            server
+                .rendezvous(1, 42, Duration::from_secs(10))
+                .map(|_| server)
+        });
+        // sequential on this thread, so the rejection fully completes
+        // before the good joiner even dials in
+        let err = WorkerClient::connect(&addr, 999, Duration::from_secs(5))
+            .err()
+            .expect("mismatched fingerprint must be refused");
+        assert!(err.to_string().contains("fingerprint"), "{err}");
+        let good = WorkerClient::connect(&addr, 42, Duration::from_secs(5)).unwrap();
+        assert_eq!(good.worker_id, 0);
+        let mut server = rendezvous.join().unwrap().unwrap();
+        assert_eq!(server.n_workers(), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn round_trip_broadcast_and_collect() {
+        let mut server = CoordinatorServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let worker = thread::spawn(move || {
+            let mut c = WorkerClient::connect(&addr, 7, Duration::from_secs(5)).unwrap();
+            while let Some(msg) = c.recv(16).unwrap() {
+                let round = match msg {
+                    WireMessage::ModelBroadcastPlain { round, .. } => round,
+                    other => panic!("unexpected {other:?}"),
+                };
+                c.send_grad(
+                    1.5,
+                    &WireMessage::FullGrad {
+                        round,
+                        worker: c.worker_id,
+                        values: vec![2.0; 16],
+                    },
+                )
+                .unwrap();
+            }
+        });
+        server.rendezvous(1, 7, Duration::from_secs(10)).unwrap();
+        let msg = WireMessage::ModelBroadcastPlain {
+            round: 1,
+            params: vec![0.0; 16],
+        };
+        let n = server.broadcast(1, &msg, &[true], Duration::from_secs(5));
+        assert_eq!(n, 1);
+        let replies = server.collect(n, 1, Duration::from_secs(5));
+        assert_eq!(replies.len(), 1);
+        let (loss, bytes) = replies[0].result.as_ref().unwrap();
+        assert_eq!(*loss, 1.5);
+        let up = WireMessage::decode(bytes, 16).unwrap();
+        assert!(matches!(up, WireMessage::FullGrad { round: 1, .. }));
+        // wire accounting: one broadcast + one uplink, exactly encoded_len
+        let stats = server.stats();
+        assert_eq!(stats.wire_downlink, msg.encoded_len() as u64);
+        assert_eq!(stats.wire_uplink, up.encoded_len() as u64);
+        assert!(stats.raw_downlink > stats.wire_downlink);
+        server.shutdown();
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn stale_round_replies_are_discarded_not_counted() {
+        let mut server = CoordinatorServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let worker = thread::spawn(move || {
+            let mut c =
+                WorkerClient::connect(&addr, 7, Duration::from_secs(5)).unwrap();
+            // a worker stuck in the past: always answers for round 999
+            while let Some(_msg) = c.recv(4).unwrap() {
+                c.send_grad(
+                    0.0,
+                    &WireMessage::FullGrad {
+                        round: 999,
+                        worker: c.worker_id,
+                        values: vec![0.0; 4],
+                    },
+                )
+                .unwrap();
+            }
+        });
+        server.rendezvous(1, 7, Duration::from_secs(10)).unwrap();
+        let msg = WireMessage::ModelBroadcastPlain {
+            round: 1,
+            params: vec![0.0; 4],
+        };
+        let n = server.broadcast(1, &msg, &[true], Duration::from_millis(400));
+        assert_eq!(n, 1);
+        // the round-999 reply must not satisfy round 1's collection
+        let replies = server.collect(n, 1, Duration::from_millis(400));
+        assert!(
+            replies.is_empty(),
+            "stale reply leaked into the current round"
+        );
+        server.shutdown();
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn silent_worker_degrades_into_error_reply_not_hang() {
+        let mut server = CoordinatorServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let (stop_tx, stop_rx) = channel::<()>();
+        let worker = thread::spawn(move || {
+            // joins, then never replies to anything
+            let _c = WorkerClient::connect(&addr, 7, Duration::from_secs(5)).unwrap();
+            let _ = stop_rx.recv();
+        });
+        server.rendezvous(1, 7, Duration::from_secs(10)).unwrap();
+        let msg = WireMessage::ModelBroadcastPlain {
+            round: 1,
+            params: vec![0.0; 4],
+        };
+        let t0 = Instant::now();
+        let n = server.broadcast(1, &msg, &[true], Duration::from_millis(300));
+        let replies = server.collect(n, 1, Duration::from_millis(300));
+        assert!(t0.elapsed() < Duration::from_secs(10));
+        assert_eq!(replies.len(), 1);
+        let err = replies[0].result.as_ref().unwrap_err();
+        assert!(err.contains("deadline"), "{err}");
+        // evicted: the next broadcast expects nothing from it
+        let n = server.broadcast(2, &msg, &[true], Duration::from_millis(300));
+        assert_eq!(n, 0);
+        stop_tx.send(()).unwrap();
+        server.shutdown();
+        worker.join().unwrap();
+    }
+}

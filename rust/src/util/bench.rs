@@ -62,6 +62,27 @@ pub fn throughput(items: usize, seconds: f64) -> f64 {
     items as f64 / seconds
 }
 
+/// Persist named sample vectors as a JSON report — the per-PR perf
+/// artifact the CI smoke-bench job uploads (`BENCH_*.json`):
+/// `{"<name>": {"median_s": .., "mean_s": .., "sd_s": .., "samples": n}}`.
+pub fn write_json(
+    path: &str,
+    results: &[(String, Vec<f64>)],
+) -> std::io::Result<()> {
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    let mut top = BTreeMap::new();
+    for (name, xs) in results {
+        let mut m = BTreeMap::new();
+        m.insert("median_s".to_string(), Json::Num(stats::median(xs)));
+        m.insert("mean_s".to_string(), Json::Num(stats::mean(xs)));
+        m.insert("sd_s".to_string(), Json::Num(stats::std_dev(xs)));
+        m.insert("samples".to_string(), Json::Num(xs.len() as f64));
+        top.insert(name.clone(), Json::Obj(m));
+    }
+    std::fs::write(path, Json::Obj(top).to_string())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -81,5 +102,25 @@ mod tests {
         assert!(fmt_s(2e-3).ends_with(" ms"));
         assert!(fmt_s(2e-6).ends_with(" µs"));
         assert!(fmt_s(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn write_json_emits_parseable_summary() {
+        let path = std::env::temp_dir().join("rosdhb_bench_json_test.json");
+        let results = vec![
+            ("stage/a".to_string(), vec![0.5, 1.0, 1.5]),
+            ("stage/b".to_string(), vec![2.0, 2.0, 2.0, 2.0]),
+        ];
+        write_json(path.to_str().unwrap(), &results).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        let a = j.get("stage/a").unwrap();
+        assert_eq!(a.get("median_s").unwrap().as_f64(), Some(1.0));
+        assert_eq!(a.get("samples").unwrap().as_f64(), Some(3.0));
+        assert_eq!(
+            j.get("stage/b").unwrap().get("mean_s").unwrap().as_f64(),
+            Some(2.0)
+        );
+        let _ = std::fs::remove_file(&path);
     }
 }

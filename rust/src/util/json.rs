@@ -55,13 +55,6 @@ impl Json {
         }
     }
 
-    /// Serialize (stable key order — Obj is a BTreeMap).
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -113,6 +106,16 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Serialization (stable key order — Obj is a BTreeMap); `.to_string()`
+/// comes via the blanket `ToString`.
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
     }
 }
 

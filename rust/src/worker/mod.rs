@@ -16,6 +16,8 @@
 //! Byzantine attack is realized (payload-level attacks never compute
 //! gradients — see [`crate::attacks`]).
 
+pub mod remote;
+
 use crate::data::{Dataset, CLASSES};
 use crate::model::{self, MlpSpec, Workspace};
 use crate::prng::Pcg64;

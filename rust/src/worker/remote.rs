@@ -1,0 +1,176 @@
+//! Worker-process runtime for `transport = "tcp"` (`rosdhb join`).
+//!
+//! A remote worker rebuilds its local state — data shard, private RNG
+//! stream, wire plan — purely from the shared experiment config, via the
+//! same [`build_training_workers`][crate::coordinator::build_training_workers]
+//! the coordinator uses (the JOIN handshake's config fingerprint refuses
+//! mismatched configs). Rendezvous assigns the worker id, which selects
+//! the slot:
+//!
+//! * slots `[0, n_grad)` — gradient workers (honest shards, then
+//!   label-flip-poisoned Byzantine clones when the attack is data-level):
+//!   per broadcast, compute the dense batch gradient, compress onto the
+//!   shared mask when one was announced, and uplink
+//!   `CompressedGrad`/`FullGrad` plus the scalar loss;
+//! * slots `[n_grad, n)` — Byzantine slots under payload attacks join as
+//!   *drones*: the paper's omniscient adversary is simulated server-side
+//!   (keeping runs reproducible), so a drone uplinks a correctly-sized
+//!   placeholder — the measured traffic still matches the byte-accounting
+//!   model. Under `attack = "none"` these slots receive broadcasts but
+//!   stay silent (crash-fault), exactly like the simulation.
+
+use crate::attacks::{self, AttackKind};
+use crate::compression::{mask_from_seed, RandK};
+use crate::config::{Engine, ExperimentConfig};
+use crate::coordinator::build_training_workers;
+use crate::model::MlpSpec;
+use crate::transport::net::WorkerClient;
+use crate::transport::WireMessage;
+use crate::worker::{GradEngine, HonestWorker, NativeEngine};
+use anyhow::{anyhow, Result};
+use std::time::Duration;
+
+/// What a completed `join` session did.
+#[derive(Clone, Debug)]
+pub struct JoinSummary {
+    pub worker_id: u16,
+    /// Broadcast rounds handled.
+    pub rounds: u64,
+    /// "honest", "poisoned", "drone" or "silent".
+    pub role: &'static str,
+}
+
+/// Dial `addr`, rendezvous, and serve rounds until the coordinator says
+/// `BYE`. `connect_retry` covers worker-before-coordinator start races.
+///
+/// `max_rounds` is a fault-injection hook for tests: after handling that
+/// many broadcasts the worker drops its connection mid-run, simulating a
+/// crash. Production callers pass `None`.
+pub fn join_run(
+    cfg: &ExperimentConfig,
+    addr: &str,
+    connect_retry: Duration,
+    max_rounds: Option<u64>,
+) -> Result<JoinSummary> {
+    cfg.validate().map_err(|e| anyhow!(e))?;
+    if cfg.engine != Engine::Native {
+        return Err(anyhow!("rosdhb join requires engine = \"native\""));
+    }
+    let attack = attacks::parse_spec(&cfg.attack).map_err(|e| anyhow!(e))?;
+    let mut client =
+        WorkerClient::connect(addr, cfg.wire_fingerprint(), connect_retry)?;
+    if client.n_total as usize != cfg.n_total() {
+        return Err(anyhow!(
+            "coordinator expects {} workers, local config says {}",
+            client.n_total,
+            cfg.n_total()
+        ));
+    }
+    let slot = client.worker_id as usize;
+
+    let mut engine = NativeEngine::new(MlpSpec::default(), cfg.batch.max(1));
+    let d = engine.p();
+    let k = RandK::from_frac(d, cfg.k_frac).k;
+
+    // Gradient slot or Byzantine slot?
+    let (mut worker, role): (Option<HonestWorker>, &'static str) = {
+        let (mut workers, _test) = build_training_workers(cfg)?;
+        if slot < workers.len() {
+            let w = workers.swap_remove(slot);
+            let role = if w.poisoned { "poisoned" } else { "honest" };
+            (Some(w), role)
+        } else {
+            match attack {
+                AttackKind::Payload(_) => (None, "drone"),
+                _ => (None, "silent"),
+            }
+        }
+    };
+    let drone_replies = role == "drone";
+
+    let mut grad = vec![0f32; d];
+    let mut payload: Vec<f32> = Vec::with_capacity(k);
+    let mut rounds = 0u64;
+    loop {
+        let Some(msg) = client.recv(d)? else { break };
+        let (round, params, mask_seed) = match msg {
+            WireMessage::ModelBroadcast {
+                round,
+                params,
+                mask_seed,
+            } => (round, params, Some(mask_seed)),
+            WireMessage::ModelBroadcastPlain { round, params } => {
+                (round, params, None)
+            }
+            other => {
+                return Err(anyhow!("unexpected downlink message: {other:?}"))
+            }
+        };
+        if params.len() != d {
+            return Err(anyhow!(
+                "broadcast has {} params, model has {d}",
+                params.len()
+            ));
+        }
+        let reply: Option<(f32, WireMessage)> = if let Some(w) = worker.as_mut()
+        {
+            let loss =
+                w.compute_grad_into(&mut engine, &params, cfg.batch, &mut grad)?;
+            match mask_seed {
+                // shared-mask round: uplink only the k masked coordinates
+                Some(seed) if k < d => {
+                    let mask = mask_from_seed(seed, d, k);
+                    mask.compress_into(&grad, &mut payload);
+                    Some((
+                        loss,
+                        WireMessage::CompressedGrad {
+                            round,
+                            worker: client.worker_id,
+                            values: payload.clone(),
+                            mask: None,
+                        },
+                    ))
+                }
+                _ => Some((
+                    loss,
+                    WireMessage::FullGrad {
+                        round,
+                        worker: client.worker_id,
+                        values: grad.clone(),
+                    },
+                )),
+            }
+        } else if drone_replies {
+            // placeholder sized exactly like an honest uplink; the server
+            // substitutes the crafted adversarial payload
+            let msg = match mask_seed {
+                Some(_) if k < d => WireMessage::CompressedGrad {
+                    round,
+                    worker: client.worker_id,
+                    values: vec![0.0; k],
+                    mask: None,
+                },
+                _ => WireMessage::FullGrad {
+                    round,
+                    worker: client.worker_id,
+                    values: vec![0.0; d],
+                },
+            };
+            Some((0.0, msg))
+        } else {
+            None // crash-fault Byzantine slot: receive, never send
+        };
+        if let Some((loss, msg)) = reply {
+            client.send_grad(loss, &msg)?;
+        }
+        rounds += 1;
+        if max_rounds.is_some_and(|m| rounds >= m) {
+            break; // injected crash: drop the connection mid-run
+        }
+    }
+    Ok(JoinSummary {
+        worker_id: client.worker_id,
+        rounds,
+        role,
+    })
+}

@@ -1,7 +1,8 @@
 //! End-to-end CLI tests: drive the compiled `rosdhb` binary the way a
 //! user would (cargo exposes the path via `CARGO_BIN_EXE_rosdhb`).
 
-use std::process::Command;
+use std::io::{BufRead, BufReader};
+use std::process::{Command, Stdio};
 
 fn bin() -> Command {
     Command::new(env!("CARGO_BIN_EXE_rosdhb"))
@@ -113,6 +114,79 @@ fn gb_command_reports_estimates() {
     );
     let text = String::from_utf8(out.stdout).unwrap();
     assert!(text.contains("G^2=") && text.contains("kappa"), "{text}");
+}
+
+#[test]
+fn serve_and_join_run_as_separate_os_processes() {
+    // n+1 real processes: 1 coordinator + 2 workers over loopback.
+    // `serve` binds port 0; its stderr announces the actual address.
+    let shared = [
+        "--n_honest", "2",
+        "--n_byz", "0",
+        "--attack", "none",
+        "--rounds", "2",
+        "--train_size", "400",
+        "--test_size", "100",
+        "--batch", "20",
+        "--eval_every", "2",
+        "--stop_at_tau", "false",
+        "--k_frac", "0.1",
+        "--seed", "5",
+    ];
+    let mut serve = bin()
+        .args(["serve", "--listen_addr", "127.0.0.1:0"])
+        .args(shared)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .unwrap();
+    // scrape "listening on <addr>," off serve's stderr (and keep draining
+    // the pipe so the child never blocks on it)
+    let stderr = serve.stderr.take().unwrap();
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel::<String>();
+    let drain = std::thread::spawn(move || {
+        let mut all = String::new();
+        for line in BufReader::new(stderr).lines() {
+            let line = line.unwrap_or_default();
+            if let Some(rest) = line.split("listening on ").nth(1) {
+                let addr = rest.split(',').next().unwrap_or("").trim();
+                let _ = addr_tx.send(addr.to_string());
+            }
+            all.push_str(&line);
+            all.push('\n');
+        }
+        all
+    });
+    let addr = addr_rx
+        .recv_timeout(std::time::Duration::from_secs(60))
+        .expect("serve must announce its address");
+
+    let joins: Vec<_> = (0..2)
+        .map(|_| {
+            bin()
+                .args(["join", "--coordinator_addr", &addr])
+                .args(shared)
+                .stdout(Stdio::piped())
+                .stderr(Stdio::piped())
+                .spawn()
+                .unwrap()
+        })
+        .collect();
+    for j in joins {
+        let out = j.wait_with_output().unwrap();
+        assert!(
+            out.status.success(),
+            "join failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+    let status = serve.wait().unwrap();
+    let serve_err = drain.join().unwrap();
+    assert!(status.success(), "serve failed: {serve_err}");
+    assert!(
+        serve_err.contains("measured wire bytes"),
+        "missing byte report: {serve_err}"
+    );
 }
 
 #[test]

@@ -16,6 +16,7 @@ use rosdhb::compression::{Mask, RandK};
 use rosdhb::config::toml::TomlDoc;
 use rosdhb::prng::Pcg64;
 use rosdhb::tensor;
+use rosdhb::transport::WireMessage;
 
 const SEEDS: u64 = 30;
 
@@ -148,6 +149,74 @@ fn prop_mask_codec_roundtrip() {
             let (decoded, used) = MaskWire::decode(&buf, d).unwrap();
             assert_eq!(used, buf.len());
             assert_eq!(decoded.to_mask(), mask, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_wire_messages_roundtrip_and_size_exactly() {
+    // decode(encode(m)) == m and encode().len() == encoded_len() across
+    // all four variants with randomized payloads; 1-byte truncations must
+    // fail cleanly.
+    for seed in 0..SEEDS {
+        let mut rng = Pcg64::new(seed, 800);
+        let d = 2 + (seed as usize * 41) % 700;
+        let k = 1 + (seed as usize * 13) % d;
+        let round = rng.next_u64();
+        let worker = (rng.next_u64() % u16::MAX as u64) as u16;
+        let mut params = vec![0f32; d];
+        rng.fill_gaussian(&mut params, 2.0);
+        let mut values = vec![0f32; k];
+        rng.fill_gaussian(&mut values, 2.0);
+        let mask = Mask::new(d, rng.sample_k_of(d, k));
+        let msgs = vec![
+            WireMessage::ModelBroadcast {
+                round,
+                params: params.clone(),
+                mask_seed: rng.next_u64(),
+            },
+            WireMessage::ModelBroadcastPlain {
+                round,
+                params: params.clone(),
+            },
+            WireMessage::CompressedGrad {
+                round,
+                worker,
+                values: values.clone(),
+                mask: None,
+            },
+            WireMessage::CompressedGrad {
+                round,
+                worker,
+                values: values.clone(),
+                mask: Some(MaskWire::choose(&mask)),
+            },
+            WireMessage::CompressedGrad {
+                round,
+                worker,
+                values: values.clone(),
+                mask: Some(MaskWire::bitset(&mask)),
+            },
+            WireMessage::FullGrad {
+                round,
+                worker,
+                values: params.clone(),
+            },
+        ];
+        for m in msgs {
+            let bytes = m.encode();
+            assert_eq!(
+                bytes.len(),
+                m.encoded_len(),
+                "seed {seed}: encoded_len mismatch for {m:?}"
+            );
+            let back = WireMessage::decode(&bytes, d)
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            assert_eq!(back, m, "seed {seed}");
+            assert!(
+                WireMessage::decode(&bytes[..bytes.len() - 1], d).is_err(),
+                "seed {seed}: truncated frame must not decode"
+            );
         }
     }
 }

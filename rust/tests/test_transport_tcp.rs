@@ -1,0 +1,181 @@
+//! Loopback integration tests for the socket runtime: a coordinator and
+//! worker threads speaking real TCP over 127.0.0.1 must reproduce the
+//! in-process transport's `RunReport` bit for bit, and the bytes measured
+//! on the sockets must equal the simulation's `ByteMeter` accounting.
+
+use rosdhb::config::ExperimentConfig;
+use rosdhb::coordinator::round_transport::TcpTransport;
+use rosdhb::coordinator::{RunReport, Trainer};
+use rosdhb::model::MlpSpec;
+use rosdhb::transport::net::{CoordinatorServer, NetStats};
+use rosdhb::worker::remote::{join_run, JoinSummary};
+use std::thread;
+use std::time::Duration;
+
+fn base_cfg() -> ExperimentConfig {
+    let mut c = ExperimentConfig::default_mnist_like();
+    c.n_honest = 4;
+    c.n_byz = 0;
+    c.attack = "none".into();
+    c.aggregator = "cwtm".into();
+    c.k_frac = 0.1;
+    c.rounds = 5;
+    c.eval_every = 2;
+    c.batch = 30;
+    c.train_size = 600;
+    c.test_size = 200;
+    c.stop_at_tau = false;
+    c.seed = 7;
+    c.transport = "tcp".into();
+    c.round_timeout_ms = 20_000;
+    c
+}
+
+/// Run `cfg` over loopback TCP: one coordinator on this thread, one
+/// worker thread per entry of `worker_caps` (a cap injects a mid-run
+/// crash after that many rounds). Returns the report, the measured
+/// socket traffic, and each worker's outcome.
+fn run_tcp(
+    cfg: &ExperimentConfig,
+    worker_caps: &[Option<u64>],
+) -> (RunReport, NetStats, Vec<anyhow::Result<JoinSummary>>) {
+    assert_eq!(worker_caps.len(), cfg.n_total());
+    let server = CoordinatorServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+    let handles: Vec<_> = worker_caps
+        .iter()
+        .map(|cap| {
+            let cfg = cfg.clone();
+            let addr = addr.clone();
+            let cap = *cap;
+            thread::spawn(move || {
+                join_run(&cfg, &addr, Duration::from_secs(20), cap)
+            })
+        })
+        .collect();
+    let d = MlpSpec::default().p();
+    let transport = TcpTransport::rendezvous(server, cfg, d).unwrap();
+    let mut trainer = Trainer::with_transport(cfg, Box::new(transport)).unwrap();
+    let report = trainer.run().unwrap();
+    let stats = trainer.net_stats().unwrap();
+    trainer.shutdown_transport(); // BYE — releases the worker threads
+    let outcomes = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    (report, stats, outcomes)
+}
+
+fn run_local(cfg: &ExperimentConfig) -> RunReport {
+    let mut local = cfg.clone();
+    local.transport = "local".into();
+    Trainer::from_config(&local).unwrap().run().unwrap()
+}
+
+/// Every field that must match for "bit-identical RunReport".
+fn assert_reports_identical(a: &RunReport, b: &RunReport) {
+    assert_eq!(a.algorithm, b.algorithm);
+    assert_eq!(a.rounds_run, b.rounds_run);
+    assert_eq!(a.rounds_to_tau, b.rounds_to_tau);
+    assert_eq!(a.uplink_bytes_to_tau, b.uplink_bytes_to_tau);
+    assert_eq!(a.uplink_bytes, b.uplink_bytes);
+    assert_eq!(a.downlink_bytes, b.downlink_bytes);
+    assert_eq!(a.best_acc, b.best_acc);
+    assert_eq!(a.final_loss, b.final_loss);
+    assert_eq!(a.log.rows.len(), b.log.rows.len());
+    for (ra, rb) in a.log.rows.iter().zip(&b.log.rows) {
+        assert_eq!(ra.round, rb.round);
+        assert_eq!(ra.train_loss, rb.train_loss, "round {}", ra.round);
+        assert_eq!(ra.update_norm, rb.update_norm, "round {}", ra.round);
+        assert_eq!(ra.test_acc, rb.test_acc, "round {}", ra.round);
+        assert_eq!(ra.uplink_bytes, rb.uplink_bytes, "round {}", ra.round);
+        assert_eq!(ra.downlink_bytes, rb.downlink_bytes, "round {}", ra.round);
+    }
+}
+
+#[test]
+fn tcp_rosdhb_run_is_bit_identical_to_local_and_bytes_match_meter() {
+    let cfg = base_cfg();
+    let (report, stats, outcomes) = run_tcp(&cfg, &[None, None, None, None]);
+    for o in &outcomes {
+        let s = o.as_ref().expect("worker must finish cleanly");
+        assert_eq!(s.rounds, cfg.rounds as u64);
+        assert_eq!(s.role, "honest");
+    }
+
+    // 1) same seed, same config, two transports — identical report
+    let local = run_local(&cfg);
+    assert_reports_identical(&report, &local);
+
+    // 2) the bytes that actually crossed the sockets equal the
+    //    simulation's accounting model, direction by direction
+    assert_eq!(stats.wire_uplink, report.uplink_bytes, "uplink");
+    assert_eq!(stats.wire_downlink, report.downlink_bytes, "downlink");
+    // raw socket traffic adds only the framing envelopes
+    assert!(stats.raw_uplink > stats.wire_uplink);
+    assert!(stats.raw_downlink > stats.wire_downlink);
+}
+
+#[test]
+fn tcp_payload_attack_drones_keep_parity() {
+    // 4 honest gradient workers + 1 Byzantine drone: ALIE is crafted
+    // server-side, but the drone's placeholder uplink and its broadcast
+    // copy keep measured traffic equal to the model.
+    let mut cfg = base_cfg();
+    cfg.n_byz = 1;
+    cfg.attack = "alie".into();
+    cfg.rounds = 3;
+    let (report, stats, outcomes) = run_tcp(&cfg, &[None; 5]);
+    let mut roles: Vec<&str> = outcomes
+        .iter()
+        .map(|o| o.as_ref().unwrap().role)
+        .collect();
+    roles.sort_unstable();
+    assert_eq!(roles, ["drone", "honest", "honest", "honest", "honest"]);
+
+    let local = run_local(&cfg);
+    assert_reports_identical(&report, &local);
+    assert_eq!(stats.wire_uplink, report.uplink_bytes);
+    assert_eq!(stats.wire_downlink, report.downlink_bytes);
+}
+
+#[test]
+fn tcp_dense_baseline_full_gradients_keep_parity() {
+    // robust-dgd ships dense FullGrad uplinks — the other wire plan.
+    let mut cfg = base_cfg();
+    cfg.set("algorithm", "robust-dgd").unwrap();
+    cfg.rounds = 2;
+    let (report, stats, outcomes) = run_tcp(&cfg, &[None; 4]);
+    for o in &outcomes {
+        assert!(o.is_ok());
+    }
+    let local = run_local(&cfg);
+    assert_reports_identical(&report, &local);
+    assert_eq!(stats.wire_uplink, report.uplink_bytes);
+    assert_eq!(stats.wire_downlink, report.downlink_bytes);
+}
+
+#[test]
+fn tcp_worker_crash_mid_run_degrades_into_dropped_contribution() {
+    let mut cfg = base_cfg();
+    cfg.rounds = 4;
+    // a dead socket is detected by the I/O thread, not by the round
+    // deadline, so a long timeout must not slow the surviving rounds
+    cfg.round_timeout_ms = 60_000;
+    let (report, _stats, outcomes) =
+        run_tcp(&cfg, &[None, None, None, Some(2)]);
+    // the crashed worker served exactly 2 rounds and dropped out cleanly
+    assert_eq!(outcomes[3].as_ref().unwrap().rounds, 2);
+    // the run still completed every round with finite losses
+    assert_eq!(report.rounds_run, 4);
+    for row in &report.log.rows {
+        assert!(row.train_loss.is_finite(), "round {}", row.round);
+    }
+    // and it diverged from the all-workers run only after the crash
+    let full = run_local(&cfg);
+    assert_eq!(
+        report.log.rows[0].train_loss,
+        full.log.rows[0].train_loss
+    );
+    assert_ne!(
+        report.log.rows[3].train_loss,
+        full.log.rows[3].train_loss
+    );
+}
