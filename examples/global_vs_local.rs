@@ -60,6 +60,7 @@ fn rate_view() {
                 attack: &attack,
                 meter: &mut meter,
                 rng: &mut rng,
+                payloads: None,
             };
             let r = alg.round(t, &grads, &[], &mut env);
             tensor::axpy(&mut theta, -gamma, &r);

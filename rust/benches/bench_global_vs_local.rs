@@ -44,6 +44,7 @@ fn run_variant(local: bool, k: usize, t_max: u64, probes: &[u64]) -> Vec<f64> {
             attack: &attack,
             meter: &mut meter,
             rng: &mut rng,
+            payloads: None,
         };
         let r = alg.round(t, &grads, &[], &mut env);
         tensor::axpy(&mut theta, -gamma, &r);

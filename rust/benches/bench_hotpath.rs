@@ -23,7 +23,9 @@
 //! it to capture the JSON on every PR.
 
 use rosdhb::aggregators;
-use rosdhb::compression::{mask_from_seed, RandK};
+use rosdhb::compression::codec::MaskWire;
+use rosdhb::compression::payload::Payload;
+use rosdhb::compression::{mask_from_seed, Qsgd};
 use rosdhb::config::ExperimentConfig;
 use rosdhb::coordinator::pool::{Job, WorkerPool};
 use rosdhb::coordinator::Trainer;
@@ -95,6 +97,49 @@ fn main() {
         mask.compress_into(&g, &mut payload);
         mask.reconstruct_into(&payload, &mut recon);
     });
+
+    // 3b. payload codec: encode/decode throughput of the typed uplinks
+    // (the bytes every TCP round moves; sizes at the paper's operating
+    // point). The decode side includes full validation — mask bounds,
+    // level range — because that is what the coordinator actually runs.
+    let q4 = Qsgd::new(D, 4);
+    let wire_payloads = [
+        (
+            "sparse k=590 (shared mask)",
+            Payload::Sparse {
+                values: payload.clone(),
+                mask: None,
+            },
+        ),
+        (
+            "sparse k=590 + MaskWire",
+            Payload::Sparse {
+                values: payload.clone(),
+                mask: Some(MaskWire::choose(&mask)),
+            },
+        ),
+        (
+            "quantized s=4 d=11809",
+            Payload::Quantized(q4.quantize_block(&g, &mut rng)),
+        ),
+        (
+            "dense d=11809",
+            Payload::Dense { values: g.clone() },
+        ),
+    ];
+    let mut wire_buf: Vec<u8> = Vec::new();
+    for (name, p) in &wire_payloads {
+        timed(&mut rec, &format!("payload/encode {name}"), 5, scale(100), || {
+            wire_buf.clear();
+            p.encode_into(&mut wire_buf);
+            std::hint::black_box(&wire_buf);
+        });
+        let bytes = p.encode();
+        timed(&mut rec, &format!("payload/decode {name}"), 5, scale(100), || {
+            let back = Payload::decode(&bytes, D).unwrap();
+            std::hint::black_box(&back);
+        });
+    }
 
     // 4. momentum update x n: dense densify-then-scale_add vs the sparse
     // engine's in-place scale + scatter (bit-identical results)

@@ -56,6 +56,7 @@ fn grad_h_sq_at(run: &mut Run, world: &QuadraticWorld, t_max: u64, probes: &[u64
             attack: &run.attack,
             meter: &mut meter,
             rng: &mut rng,
+            payloads: None,
         };
         let r = run.alg.round(t, &grads, &[], &mut env);
         tensor::axpy(&mut theta, -run.gamma, &r);

@@ -8,9 +8,12 @@
 
 use super::{byzantine_vectors, Algorithm, RoundEnv};
 use crate::compression::codec::mask_wire_len;
+use crate::compression::payload::{Payload, TAG_DGD_RANDK};
 use crate::compression::RandK;
 use crate::tensor;
-use crate::transport::{broadcast_len, compressed_grad_len, full_grad_len};
+use crate::transport::{
+    broadcast_len, compressed_grad_len, full_grad_len, payload_uplink_len,
+};
 
 /// Robust distributed GD with Polyak momentum (no compression).
 pub struct RobustDgd {
@@ -87,6 +90,38 @@ impl Algorithm for DgdRandK {
         let n = env.n_total();
         env.meter
             .record_broadcast_sized(broadcast_len(d, false), n);
+
+        if let Some(ps) = env.payloads {
+            // Wire payloads (tcp, SparseLocal plan — at k = d the plan
+            // is Dense and the oracle path below runs instead): masks
+            // were drawn remotely from the same derived streams, so the
+            // scatter here reproduces the in-process round bit for bit.
+            let mut sum = vec![0f32; d];
+            for (widx, p) in ps.iter().enumerate() {
+                env.meter
+                    .record_uplink_sized(widx, payload_uplink_len(p));
+                match p {
+                    Payload::Sparse {
+                        values,
+                        mask: Some(mw),
+                    } => {
+                        let mask = mw.to_mask();
+                        let a = mask.alpha();
+                        for (&ci, &v) in mask.idx.iter().zip(values) {
+                            sum[ci as usize] += a * v;
+                        }
+                    }
+                    other => debug_assert!(
+                        false,
+                        "dgd-randk expects masked sparse payloads, \
+                         got {other:?}"
+                    ),
+                }
+            }
+            tensor::scale(&mut sum, 1.0 / ps.len() as f32);
+            return sum;
+        }
+
         let byz = byzantine_vectors(t, honest_grads, byz_grads, env);
         let rk = RandK { d, k: env.k };
         let mut sum = vec![0f32; d];
@@ -100,7 +135,7 @@ impl Algorithm for DgdRandK {
                        g: &[f32],
                        sum: &mut Vec<f32>,
                        env: &mut RoundEnv| {
-            let mut wrng = env.rng.derive(0x7264_6b6b, t, widx as u64);
+            let mut wrng = env.rng.derive(TAG_DGD_RANDK, t, widx as u64);
             let mask = rk.draw(&mut wrng);
             mask.compress_into(g, &mut payload);
             let mask_bytes = if env.k < d { mask_wire_len(d, env.k) } else { 0 };

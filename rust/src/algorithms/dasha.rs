@@ -24,8 +24,11 @@
 
 use super::{byzantine_vectors, Algorithm, RoundEnv};
 use crate::compression::codec::mask_wire_len;
+use crate::compression::payload::{dasha_apply, Payload, TAG_DASHA};
 use crate::compression::RandK;
-use crate::transport::{broadcast_len, compressed_grad_len, full_grad_len};
+use crate::transport::{
+    broadcast_len, compressed_grad_len, full_grad_len, payload_uplink_len,
+};
 
 pub struct ByzDashaPage {
     /// Server-side gradient estimates ĝ_i (identical to worker copies).
@@ -80,6 +83,43 @@ impl Algorithm for ByzDashaPage {
         // broadcast model (no shared mask in DASHA)
         env.meter.record_broadcast_sized(broadcast_len(d, false), n);
 
+        if let Some(ps) = env.payloads {
+            // Wire payloads (tcp): each worker tracked its own estimate
+            // copy remotely and shipped either the dense init gradient or
+            // a masked difference; the server-side estimates advance
+            // through the same `dasha_apply` law, staying in bit-exact
+            // lockstep with the worker copies.
+            for (widx, p) in ps.iter().enumerate() {
+                env.meter
+                    .record_uplink_sized(widx, payload_uplink_len(p));
+                match p {
+                    Payload::Dense { values } => {
+                        debug_assert!(!self.initialized || env.k == d);
+                        self.estimates[widx].copy_from_slice(values);
+                    }
+                    Payload::Sparse {
+                        values,
+                        mask: Some(mw),
+                    } => {
+                        dasha_apply(
+                            &mut self.estimates[widx],
+                            &mw.to_mask(),
+                            values,
+                        );
+                    }
+                    other => debug_assert!(
+                        false,
+                        "dasha expects dense or masked-difference \
+                         payloads, got {other:?}"
+                    ),
+                }
+            }
+            self.initialized = true;
+            let refs: Vec<&[f32]> =
+                self.estimates.iter().map(|m| m.as_slice()).collect();
+            return env.aggregator.aggregate_vec(&refs);
+        }
+
         let byz = byzantine_vectors(t, honest_grads, byz_grads, env);
         let rk = RandK { d, k: env.k };
 
@@ -99,25 +139,17 @@ impl Algorithm for ByzDashaPage {
                 ) {
                     *df = tv - ev;
                 }
-                let mut wrng = env.rng.derive(0x6461_7368, t, widx as u64);
+                let mut wrng = env.rng.derive(TAG_DASHA, t, widx as u64);
                 let mask = rk.draw(&mut wrng);
                 mask.compress_into(&this.diff, &mut this.payload);
                 let payload_len = this.payload.len();
                 this.meter_sparse(env, widx, payload_len);
-                // est += a · α · scatter(payload), with the DASHA
-                // stabilization stepsize a = 1/(2ω + 1), ω = α − 1 (the
-                // unbiased-compressor variance parameter). Without `a`
-                // the raw α-unbiased update overshoots masked coordinates
-                // by (α − 1)× and diverges; with it the estimator error
-                // contracts in expectation — this is exactly DASHA's
-                // h-update law.
-                let alpha = mask.alpha();
-                let omega = alpha - 1.0;
-                let a = 1.0 / (2.0 * omega + 1.0);
-                let est = &mut this.estimates[widx];
-                for (&ci, &v) in mask.idx.iter().zip(&this.payload) {
-                    est[ci as usize] += a * alpha * v;
-                }
+                // est += a · α · scatter(payload) — DASHA's h-update law
+                // with the stabilization stepsize a = 1/(2ω + 1); see
+                // `payload::dasha_gain`. One shared function advances the
+                // coordinator's estimates and every remote worker's local
+                // copy, keeping them in bit-exact lockstep over the wire.
+                dasha_apply(&mut this.estimates[widx], &mask, &this.payload);
             };
 
         for (i, g) in honest_grads.iter().enumerate() {

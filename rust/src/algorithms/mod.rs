@@ -15,6 +15,7 @@ pub mod rosdhb_u;
 
 use crate::aggregators::Aggregator;
 use crate::attacks::AttackKind;
+use crate::compression::payload::Payload;
 use crate::config::{Algorithm as AlgoId, ExperimentConfig};
 use crate::prng::Pcg64;
 use crate::transport::ByteMeter;
@@ -36,6 +37,12 @@ pub struct RoundEnv<'a> {
     pub meter: &'a mut ByteMeter,
     /// Round-scoped RNG (attack noise, local masks for Byzantine workers).
     pub rng: &'a mut Pcg64,
+    /// Pre-compressed uplink payloads, one per gradient slot (honest
+    /// first, then data-level Byzantine), when the transport received
+    /// them in wire form (`transport = "tcp"`). `None` under the local
+    /// transport — algorithms then run the identical compression
+    /// themselves from the dense gradients (the tested oracle path).
+    pub payloads: Option<&'a [Payload]>,
 }
 
 impl<'a> RoundEnv<'a> {
@@ -127,13 +134,13 @@ pub fn build(cfg: &ExperimentConfig, d: usize) -> Box<dyn Algorithm> {
             Box::new(rosdhb::RoSdhb::with_mode(d, n, true, mode))
         }
         AlgoId::RoSdhbU => {
-            let comp = crate::compression::qsgd::parse_spec(
+            let spec = crate::compression::CompressorSpec::parse(
                 &cfg.compressor,
                 d,
                 cfg.k_frac,
             )
             .expect("validated by ExperimentConfig");
-            Box::new(rosdhb_u::RoSdhbU::new(d, n, comp))
+            Box::new(rosdhb_u::RoSdhbU::new(d, n, spec))
         }
         AlgoId::ByzDashaPage => Box::new(dasha::ByzDashaPage::new(d, n)),
         AlgoId::RobustDgd => Box::new(baselines::RobustDgd::new(d, n)),
@@ -217,6 +224,7 @@ pub(crate) mod test_env {
                 attack: &self.attack,
                 meter: &mut self.meter,
                 rng: &mut self.rng,
+                payloads: None,
             }
         }
 

@@ -45,9 +45,12 @@
 use super::{byzantine_vectors, Algorithm, RoundEnv, RoundMode};
 use crate::attacks::{AttackCtx, AttackKind};
 use crate::compression::codec::mask_wire_len;
+use crate::compression::payload::{absorb_sparse, Payload, TAG_LOCAL_MASK};
 use crate::compression::{mask_from_seed, Mask, RandK};
 use crate::tensor;
-use crate::transport::{broadcast_len, compressed_grad_len};
+use crate::transport::{
+    broadcast_len, compressed_grad_len, payload_uplink_len,
+};
 
 pub struct RoSdhb {
     /// Per-worker server-side momenta m_i (n rows × d).
@@ -88,23 +91,6 @@ impl RoSdhb {
             block: Vec::new(),
             agg_cache: vec![0.0; d],
             cache_valid: false,
-        }
-    }
-
-    /// In-place momentum law `m = β·m + (1−β)·scatter(α·payload)` over the
-    /// mask support — bit-compatible with the dense
-    /// `scale_add(m, β, 1−β, reconstruct(payload))`.
-    fn momentum_sparse(
-        m: &mut [f32],
-        mask: &Mask,
-        payload: &[f32],
-        beta: f32,
-    ) {
-        tensor::scale(m, beta);
-        let alpha = mask.alpha();
-        let b = 1.0 - beta;
-        for (&ci, &v) in mask.idx.iter().zip(payload) {
-            m[ci as usize] += b * (alpha * v);
         }
     }
 }
@@ -165,9 +151,27 @@ impl RoSdhb {
         let nh = env.n_honest;
         let sparse = self.mode != RoundMode::Dense && mask.k() < d;
 
-        // -- step 3: honest workers compress onto the broadcast mask
-        for (i, g) in honest_grads.iter().enumerate() {
-            mask.compress_into(g, &mut self.payloads[i]);
+        // -- step 3: worker payloads. Under the local transport honest
+        // workers compress onto the broadcast mask here; under tcp the
+        // payloads arrived in wire form and carry the identical k values
+        // (the worker gathered them from the same gradient), so the run
+        // stays bit-identical across transports.
+        if let Some(ps) = env.payloads {
+            for (w, p) in ps.iter().enumerate() {
+                debug_assert!(matches!(
+                    p,
+                    Payload::Sparse { mask: None, .. } | Payload::Dense { .. }
+                ));
+                let dst = &mut self.payloads[w];
+                dst.clear();
+                if let Some(v) = p.values() {
+                    dst.extend_from_slice(v);
+                }
+            }
+        } else {
+            for (i, g) in honest_grads.iter().enumerate() {
+                mask.compress_into(g, &mut self.payloads[i]);
+            }
         }
 
         // -- Byzantine wire payloads. Payload attacks craft directly in
@@ -194,7 +198,9 @@ impl RoSdhb {
                     dst.extend_from_slice(c);
                 }
             }
-        } else {
+        } else if env.payloads.is_none() {
+            // data-level Byzantine gradients are compressed exactly like
+            // honest ones (with wire payloads they were copied above)
             for (j, g) in byz_grads.iter().enumerate() {
                 mask.compress_into(g, &mut self.payloads[nh + j]);
             }
@@ -211,11 +217,11 @@ impl RoSdhb {
                 compressed_grad_len(self.payloads[w].len(), 0),
             );
             if sparse {
-                Self::momentum_sparse(
+                absorb_sparse(
                     &mut self.momenta[w],
+                    env.beta,
                     mask,
                     &self.payloads[w],
-                    env.beta,
                 );
             } else {
                 mask.reconstruct_into(&self.payloads[w], &mut self.recon);
@@ -275,6 +281,46 @@ impl RoSdhb {
         let sparse = self.mode != RoundMode::Dense;
         let rk = RandK { d, k: env.k };
 
+        if let Some(ps) = env.payloads {
+            // Wire payloads (tcp): each carries its worker's mask, drawn
+            // remotely from the same derived stream the oracle path uses,
+            // so momenta and meter advance bit-identically.
+            for (widx, p) in ps.iter().enumerate() {
+                let Payload::Sparse {
+                    values,
+                    mask: Some(mw),
+                } = p
+                else {
+                    debug_assert!(
+                        false,
+                        "rosdhb-local expects masked sparse payloads"
+                    );
+                    continue;
+                };
+                let mask = mw.to_mask();
+                env.meter.record_uplink_sized(widx, payload_uplink_len(p));
+                if sparse {
+                    absorb_sparse(
+                        &mut self.momenta[widx],
+                        env.beta,
+                        &mask,
+                        values,
+                    );
+                } else {
+                    mask.reconstruct_into(values, &mut self.recon);
+                    tensor::scale_add(
+                        &mut self.momenta[widx],
+                        env.beta,
+                        1.0 - env.beta,
+                        &self.recon,
+                    );
+                }
+            }
+            let refs: Vec<&[f32]> =
+                self.momenta.iter().map(|m| m.as_slice()).collect();
+            return env.aggregator.aggregate_vec(&refs);
+        }
+
         // Payload attacks craft in full d-space here (honest payloads live
         // in different subspaces, so the wire view is per-worker); the
         // crafted vectors are then compressed exactly like honest ones.
@@ -287,7 +333,7 @@ impl RoSdhb {
             .chain(byz.iter().enumerate().map(|(j, g)| (nh + j, g)))
         {
             // worker draws its own mask each round
-            let mut wrng = env.rng.derive(0x6c6d_736b, t, widx as u64);
+            let mut wrng = env.rng.derive(TAG_LOCAL_MASK, t, widx as u64);
             let mask = rk.draw(&mut wrng);
             mask.compress_into(g, &mut self.payloads[widx]);
             let mask_bytes = mask_wire_len(mask.d, mask.k());
@@ -296,11 +342,11 @@ impl RoSdhb {
                 compressed_grad_len(self.payloads[widx].len(), mask_bytes),
             );
             if sparse {
-                Self::momentum_sparse(
+                absorb_sparse(
                     &mut self.momenta[widx],
+                    env.beta,
                     &mask,
                     &self.payloads[widx],
-                    env.beta,
                 );
             } else {
                 mask.reconstruct_into(&self.payloads[widx], &mut self.recon);

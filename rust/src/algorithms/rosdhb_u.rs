@@ -4,45 +4,63 @@
 //!
 //! Identical server structure to RoSDHB-Local (per-worker momentum +
 //! robust aggregation); the mask-based sparsifier is replaced by a
-//! pluggable [`UnbiasedCompressor`] — QSGD stochastic quantization [1] or
-//! RandK-with-shipped-mask. The convergence guarantee carries over with
-//! α = the compressor's variance parameter (Appendix C); the bench
-//! ablation (`bench_appendix_c`) compares the two at matched wire budget.
+//! pluggable compressor ([`CompressorSpec`]) — QSGD stochastic
+//! quantization [1] or RandK-with-shipped-mask. The convergence guarantee
+//! carries over with α = the compressor's variance parameter (Appendix
+//! C); the bench ablation (`bench_appendix_c`) compares the two at
+//! matched wire budget.
 //!
-//! Round-engine note: gradients arrive through the coordinator's
-//! persistent worker pool like every other algorithm, but the server-side
-//! arithmetic here stays dense — [`UnbiasedCompressor::roundtrip`]
-//! reconstructs into a dense buffer because QSGD's support is all of d
-//! (and RandK-local masks are per-worker). Giving compressors a
-//! value-level sparse output so this path can use the in-place
-//! scale+scatter momentum update is a ROADMAP open item.
+//! ## Value-level round engine (§Perf)
+//!
+//! The old path ran `UnbiasedCompressor::roundtrip` — densify every
+//! compressed gradient into a d-length buffer, then `scale_add` — so the
+//! hot loop touched 2·d floats per worker beyond the momentum itself.
+//! Payloads are now consumed **in place**:
+//!
+//! * **QSGD**: [`Qsgd::quantize_into`] fills a reused level buffer and
+//!   [`absorb_quant_levels`] folds `β·m + (1−β)·(‖x‖·l/s)` directly into
+//!   the momentum — no dequantized vector is ever materialized;
+//! * **RandK**: the k payload values scatter through
+//!   [`absorb_sparse`] exactly like RoSDHB-Local.
+//!
+//! The steady-state loop allocates nothing of length d (pinned by
+//! `rust/tests/test_alloc.rs`). Under `transport = "tcp"` the same
+//! arithmetic runs on payloads decoded from the wire
+//! ([`crate::compression::payload`]), bit-identical to this in-process
+//! path because workers derive the same per-(round, worker) RNG streams.
 
 use super::{byzantine_vectors, Algorithm, RoundEnv};
-use crate::compression::UnbiasedCompressor;
-use crate::tensor;
-use crate::transport::broadcast_len;
+use crate::compression::codec::mask_wire_len;
+use crate::compression::payload::{
+    absorb_momentum, absorb_quant_levels, absorb_sparse, TAG_ROSDHB_U,
+};
+use crate::compression::{CompressorSpec, Qsgd, RandK};
+use crate::transport::{
+    broadcast_len, compressed_grad_len, payload_uplink_len, quant_grad_len,
+};
 
 pub struct RoSdhbU {
-    compressor: Box<dyn UnbiasedCompressor>,
+    spec: CompressorSpec,
     momenta: Vec<Vec<f32>>,
-    recon: Vec<f32>,
+    /// Scratch: RandK payload values (k floats), reused across workers
+    /// and rounds.
+    values: Vec<f32>,
+    /// Scratch: QSGD levels (d ints), reused across workers and rounds.
+    levels: Vec<i32>,
 }
 
 impl RoSdhbU {
-    pub fn new(
-        d: usize,
-        n_workers: usize,
-        compressor: Box<dyn UnbiasedCompressor>,
-    ) -> Self {
+    pub fn new(d: usize, n_workers: usize, spec: CompressorSpec) -> Self {
         RoSdhbU {
-            compressor,
+            spec,
             momenta: vec![vec![0.0; d]; n_workers],
-            recon: vec![0.0; d],
+            values: Vec::new(),
+            levels: Vec::new(),
         }
     }
 
     pub fn compressor_name(&self) -> String {
-        self.compressor.name()
+        self.spec.name()
     }
 }
 
@@ -62,26 +80,55 @@ impl Algorithm for RoSdhbU {
         let n = env.n_total();
         env.meter
             .record_broadcast_sized(broadcast_len(d, false), n);
-        let byz = byzantine_vectors(t, honest_grads, byz_grads, env);
 
-        let mut process =
-            |this: &mut Self, widx: usize, g: &[f32], env: &mut RoundEnv| {
-                let mut wrng = env.rng.derive(0x7571_636d, t, widx as u64);
-                let bytes =
-                    this.compressor.roundtrip(g, &mut wrng, &mut this.recon);
-                env.meter.record_uplink_sized(widx, bytes);
-                tensor::scale_add(
-                    &mut this.momenta[widx],
-                    env.beta,
-                    1.0 - env.beta,
-                    &this.recon,
-                );
-            };
-        for (i, g) in honest_grads.iter().enumerate() {
-            process(self, i, g, env);
-        }
-        for (j, g) in byz.iter().enumerate() {
-            process(self, env.n_honest + j, g, env);
+        if let Some(ps) = env.payloads {
+            // Wire payloads (tcp): masks/levels were produced remotely
+            // from the same derived streams — absorb them in place.
+            for (widx, p) in ps.iter().enumerate() {
+                env.meter
+                    .record_uplink_sized(widx, payload_uplink_len(p));
+                absorb_momentum(&mut self.momenta[widx], env.beta, p);
+            }
+        } else {
+            let nh = env.n_honest;
+            let byz = byzantine_vectors(t, honest_grads, byz_grads, env);
+            for (widx, g) in honest_grads
+                .iter()
+                .enumerate()
+                .chain(byz.iter().enumerate().map(|(j, g)| (nh + j, g)))
+            {
+                let mut wrng = env.rng.derive(TAG_ROSDHB_U, t, widx as u64);
+                match self.spec {
+                    CompressorSpec::RandK { k } => {
+                        let mask = RandK { d, k }.draw(&mut wrng);
+                        mask.compress_into(g, &mut self.values);
+                        env.meter.record_uplink_sized(
+                            widx,
+                            compressed_grad_len(k, mask_wire_len(d, k)),
+                        );
+                        absorb_sparse(
+                            &mut self.momenta[widx],
+                            env.beta,
+                            &mask,
+                            &self.values,
+                        );
+                    }
+                    CompressorSpec::Qsgd { s } => {
+                        let q = Qsgd::new(d, s);
+                        let norm =
+                            q.quantize_into(g, &mut wrng, &mut self.levels);
+                        env.meter
+                            .record_uplink_sized(widx, quant_grad_len(d, s));
+                        absorb_quant_levels(
+                            &mut self.momenta[widx],
+                            env.beta,
+                            norm,
+                            s,
+                            &self.levels,
+                        );
+                    }
+                }
+            }
         }
 
         let refs: Vec<&[f32]> =
@@ -98,7 +145,8 @@ impl Algorithm for RoSdhbU {
 mod tests {
     use super::super::test_env::Env;
     use super::*;
-    use crate::compression::qsgd::{parse_spec, Qsgd};
+    use crate::compression::payload::QuantBlock;
+    use crate::transport::HEADER_BYTES;
 
     #[test]
     fn qsgd_momenta_converge_to_constant_gradient() {
@@ -107,7 +155,7 @@ mod tests {
         env.beta = 0.8;
         env.aggregator = crate::aggregators::parse_spec("mean", 0).unwrap();
         let grads = env.constant_grads(1.0);
-        let mut alg = RoSdhbU::new(d, 4, Box::new(Qsgd::new(d, 8)));
+        let mut alg = RoSdhbU::new(d, 4, CompressorSpec::Qsgd { s: 8 });
         let mut last = vec![0f32; d];
         for t in 1..=400 {
             last = alg.round(t, &grads, &[], &mut env.env());
@@ -119,12 +167,18 @@ mod tests {
 
     #[test]
     fn uplink_uses_quantized_wire_size() {
+        // The quantized-uplink byte model is the QSGD packed width, not
+        // 4·k: header + [u16 s][f32 norm] + d sign bits + d·⌈log₂(s+1)⌉
+        // level bits. Locked here against the closed-form expansion.
         let d = 1000;
+        let s = 4u32; // 3-bit levels
+        let expect = HEADER_BYTES + 2 + 4 + d.div_ceil(8) + (3 * d).div_ceil(8);
+        assert_eq!(quant_grad_len(d, s), expect);
+        assert_eq!(QuantBlock::body_len(d, s), expect - HEADER_BYTES);
+
         let mut env = Env::new(d, 3, 0, d);
         let grads = env.constant_grads(1.0);
-        let q = Qsgd::new(d, 4);
-        let expect = q.wire_bytes();
-        let mut alg = RoSdhbU::new(d, 3, Box::new(q));
+        let mut alg = RoSdhbU::new(d, 3, CompressorSpec::Qsgd { s });
         alg.round(0, &grads, &[], &mut env.env());
         // 3 workers, one quantized payload each (+ broadcast downlink)
         assert_eq!(env.meter.uplink, 3 * expect as u64);
@@ -139,8 +193,11 @@ mod tests {
         env.aggregator =
             crate::aggregators::parse_spec("nnm+cwtm", 3).unwrap();
         let grads = env.constant_grads(1.0);
-        let mut alg =
-            RoSdhbU::new(d, 13, parse_spec("qsgd:4", d, 1.0).unwrap());
+        let mut alg = RoSdhbU::new(
+            d,
+            13,
+            CompressorSpec::parse("qsgd:4", d, 1.0).unwrap(),
+        );
         let mut r = vec![0f32; d];
         for t in 0..60 {
             r = alg.round(t, &grads, &[], &mut env.env());
@@ -156,13 +213,43 @@ mod tests {
         let k = 20;
         let mut env = Env::new(d, 2, 0, k);
         let grads = env.constant_grads(1.0);
-        let mut alg =
-            RoSdhbU::new(d, 2, parse_spec("randk", d, 0.1).unwrap());
+        let mut alg = RoSdhbU::new(
+            d,
+            2,
+            CompressorSpec::parse("randk", d, 0.1).unwrap(),
+        );
         alg.round(0, &grads, &[], &mut env.env());
         let per_worker = env.meter.uplink / 2;
         // header(12)+len(4)+k*4 + mask(5 + 4k index list vs 25 bitset)
         let expected = (12 + 4 + 4 * k) as u64
             + crate::compression::codec::mask_wire_len(d, k) as u64;
         assert_eq!(per_worker, expected);
+    }
+
+    #[test]
+    fn absorb_matches_densified_roundtrip_oracle() {
+        // the in-place absorb path must reproduce the old densify-then-
+        // scale_add law exactly (same streams, same arithmetic).
+        let d = 48;
+        let beta = 0.9f32;
+        let q = Qsgd::new(d, 4);
+        let mut rng = crate::prng::Pcg64::new(3, 3);
+        let mut g = vec![0f32; d];
+        rng.fill_gaussian(&mut g, 1.0);
+        let mut m_fast = vec![0.25f32; d];
+        let mut m_oracle = m_fast.clone();
+        let mut r1 = crate::prng::Pcg64::new(9, 9);
+        let mut r2 = r1.clone();
+        // fast path: quantize_into + absorb
+        let mut levels = Vec::new();
+        let norm = q.quantize_into(&g, &mut r1, &mut levels);
+        absorb_quant_levels(&mut m_fast, beta, norm, 4, &levels);
+        // oracle: roundtrip into a dense buffer + scale_add
+        let mut recon = vec![0f32; d];
+        crate::compression::UnbiasedCompressor::roundtrip(
+            &q, &g, &mut r2, &mut recon,
+        );
+        crate::tensor::scale_add(&mut m_oracle, beta, 1.0 - beta, &recon);
+        assert_eq!(m_fast, m_oracle);
     }
 }

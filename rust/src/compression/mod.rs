@@ -7,13 +7,20 @@
 //! server re-derive the identical mask deterministically
 //! ([`randk::mask_from_seed`]). Under **local** sparsification (§3.3) each
 //! worker draws its own mask and must ship it ([`codec::MaskWire`]).
+//!
+//! [`payload`] lifts every compressor's output to a typed, byte-exact
+//! [`Payload`] (sparse / dense / QSGD-quantized) with a worker-side
+//! [`CompressorState`], so the same object drives the in-memory byte
+//! model, the TCP wire format and the in-place server arithmetic.
 
 pub mod codec;
+pub mod payload;
 pub mod qsgd;
 pub mod randk;
 pub mod topk;
 
-pub use qsgd::{Qsgd, UnbiasedCompressor};
+pub use payload::{CompressorState, Payload, PayloadPlan};
+pub use qsgd::{CompressorSpec, Qsgd, UnbiasedCompressor};
 pub use randk::{mask_from_seed, RandK};
 pub use topk::TopK;
 

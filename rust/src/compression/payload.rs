@@ -1,0 +1,922 @@
+//! Value-level payload codec: the typed wire representation of every
+//! compressed gradient, plus the worker-side compressor state machine.
+//!
+//! The paper's headline comparison is *bytes uploaded per client to reach
+//! τ accuracy*, so what a worker puts on the wire must be a first-class,
+//! byte-exact object — not a densified d-vector. [`Payload`] is that
+//! object, in the three shapes the algorithms produce:
+//!
+//! * [`Payload::Sparse`] — k coordinate values, with the mask shipped
+//!   ([`MaskWire`]) when the receiver cannot re-derive it (local
+//!   sparsification, DASHA differences) and omitted under a shared
+//!   seed-derived mask (coordinated RoSDHB);
+//! * [`Payload::Quantized`] — a bit-packed QSGD block ([`QuantBlock`]:
+//!   norm + sign bits + ⌈log₂(s+1)⌉-bit level fields), the rosdhb-u
+//!   uplink;
+//! * [`Payload::Dense`] — all d values (baselines, init rounds).
+//!
+//! The codec here is the **single byte-layout authority**: the in-memory
+//! accounting model ([`crate::transport::ByteMeter`] via
+//! [`crate::transport::payload_uplink_len`]) and the TCP wire format
+//! ([`crate::transport::WireMessage`] uplinks) both delegate to the body
+//! encoders in this module, so modeled bytes and transmitted bytes cannot
+//! drift apart.
+//!
+//! [`CompressorState`] is the worker-side half: it owns the per-worker
+//! RNG stream derivation and whatever residue the algorithm keeps on the
+//! client (DASHA's gradient-estimate copy), so compression happens where
+//! the paper places it — on the client — while remaining bit-identical to
+//! the coordinator's in-process simulation (both sides derive the same
+//! streams from the shared experiment seed via
+//! [`crate::prng::round_stream`]).
+
+use super::codec::MaskWire;
+use super::qsgd::CompressorSpec;
+use super::{mask_from_seed, Mask, Qsgd, RandK};
+use crate::config::{Algorithm, ExperimentConfig};
+use crate::prng::{round_stream, Pcg64};
+
+/// RNG stream tag for rosdhb-local's per-worker mask draws. Shared
+/// between the server-side simulation and [`CompressorState`] so both
+/// derive identical masks for (round, worker).
+pub const TAG_LOCAL_MASK: u64 = 0x6c6d_736b;
+/// RNG stream tag for dgd-randk's per-worker mask draws.
+pub const TAG_DGD_RANDK: u64 = 0x7264_6b6b;
+/// RNG stream tag for rosdhb-u's per-worker compressor randomness.
+pub const TAG_ROSDHB_U: u64 = 0x7571_636d;
+/// RNG stream tag for DASHA's per-worker difference masks.
+pub const TAG_DASHA: u64 = 0x6461_7368;
+
+// ----------------------------------------------------------- quant block
+
+/// A QSGD-quantized vector in its exact wire shape: `‖x‖`, one sign bit
+/// per coordinate, and one `⌈log₂(s+1)⌉`-bit magnitude per coordinate.
+///
+/// Body layout (little-endian): `[u16 s][f32 norm][⌈d/8⌉ sign bytes]
+/// [⌈d·bits/8⌉ level bytes]`, bits packed LSB-first. The dimension d is
+/// not on the wire — both ends know it. Canonical form: the sign bit of a
+/// zero level is clear (encode never sets it; decode maps either to 0).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantBlock {
+    /// Quantization levels s ≥ 1 (s = 1 ⇒ ternary QSGD).
+    pub s: u32,
+    /// The ‖x‖ scale factor.
+    pub norm: f32,
+    /// Signed levels in [−s, s], one per coordinate (length d).
+    pub levels: Vec<i32>,
+}
+
+impl QuantBlock {
+    pub fn d(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Bits per level magnitude: the smallest width that holds s.
+    pub fn level_bits(s: u32) -> u32 {
+        32 - s.leading_zeros()
+    }
+
+    /// Exact body size of a (d, s) block — the quantized-uplink byte
+    /// model (`ByteMeter`) and the wire codec both read this one formula.
+    pub fn body_len(d: usize, s: u32) -> usize {
+        2 + 4 + d.div_ceil(8) + (d * Self::level_bits(s) as usize).div_ceil(8)
+    }
+
+    /// Append the packed body (inverse of [`Self::decode_body`]).
+    pub fn encode_body_into(&self, out: &mut Vec<u8>) {
+        debug_assert!(self.s >= 1 && self.s <= u16::MAX as u32);
+        let d = self.levels.len();
+        out.reserve(Self::body_len(d, self.s));
+        out.extend_from_slice(&(self.s as u16).to_le_bytes());
+        out.extend_from_slice(&self.norm.to_le_bytes());
+        let sign_start = out.len();
+        out.resize(sign_start + d.div_ceil(8), 0);
+        for (i, &l) in self.levels.iter().enumerate() {
+            if l < 0 {
+                out[sign_start + i / 8] |= 1 << (i % 8);
+            }
+        }
+        let bits = Self::level_bits(self.s) as usize;
+        let lev_start = out.len();
+        out.resize(lev_start + (d * bits).div_ceil(8), 0);
+        let mut pos = 0usize;
+        for &l in &self.levels {
+            let mag = l.unsigned_abs();
+            debug_assert!(mag <= self.s, "level {l} out of [-s, s]");
+            for b in 0..bits {
+                if (mag >> b) & 1 == 1 {
+                    out[lev_start + pos / 8] |= 1 << (pos % 8);
+                }
+                pos += 1;
+            }
+        }
+    }
+
+    /// Parse a packed body; the buffer must contain exactly one block of
+    /// dimension `d`. Malformed input (wrong length, s = 0, magnitude
+    /// above s) is an `Err`, never a panic.
+    pub fn decode_body(buf: &[u8], d: usize) -> Result<QuantBlock, String> {
+        if buf.len() < 6 {
+            return Err("quantized payload: short header".into());
+        }
+        let s = u16::from_le_bytes([buf[0], buf[1]]) as u32;
+        if s == 0 {
+            return Err("quantized payload: s = 0".into());
+        }
+        let need = Self::body_len(d, s);
+        if buf.len() != need {
+            return Err(format!(
+                "quantized payload: {} bytes, want {need} for d={d}, s={s}",
+                buf.len()
+            ));
+        }
+        let norm = f32::from_le_bytes([buf[2], buf[3], buf[4], buf[5]]);
+        let sign_bytes = d.div_ceil(8);
+        let signs = &buf[6..6 + sign_bytes];
+        let levs = &buf[6 + sign_bytes..];
+        let bits = Self::level_bits(s) as usize;
+        let mut levels = Vec::with_capacity(d);
+        let mut pos = 0usize;
+        for i in 0..d {
+            let mut mag = 0u32;
+            for b in 0..bits {
+                if (levs[pos / 8] >> (pos % 8)) & 1 == 1 {
+                    mag |= 1 << b;
+                }
+                pos += 1;
+            }
+            if mag > s {
+                return Err(format!("quantized payload: level {mag} > s = {s}"));
+            }
+            let neg = mag != 0 && (signs[i / 8] >> (i % 8)) & 1 == 1;
+            levels.push(if neg { -(mag as i32) } else { mag as i32 });
+        }
+        Ok(QuantBlock { s, norm, levels })
+    }
+}
+
+// -------------------------------------------------------------- payload
+
+/// Self-describing payload kind tags (first byte of the standalone
+/// encoding; [`crate::transport::WireMessage`] carries the same bodies
+/// under its own message tags).
+pub const KIND_SPARSE: u8 = 0;
+pub const KIND_DENSE: u8 = 1;
+pub const KIND_QUANT: u8 = 2;
+
+/// One worker uplink in typed form — what every compressor produces and
+/// every algorithm consumes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// k coordinate values in mask order. `mask` is `Some` when the
+    /// receiver cannot re-derive the coordinate set (worker-drawn masks)
+    /// and `None` under a shared seed-derived mask.
+    Sparse {
+        values: Vec<f32>,
+        mask: Option<MaskWire>,
+    },
+    /// All d coordinates.
+    Dense { values: Vec<f32> },
+    /// A QSGD-quantized block.
+    Quantized(QuantBlock),
+}
+
+impl Payload {
+    pub fn kind(&self) -> u8 {
+        match self {
+            Payload::Sparse { .. } => KIND_SPARSE,
+            Payload::Dense { .. } => KIND_DENSE,
+            Payload::Quantized(_) => KIND_QUANT,
+        }
+    }
+
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Payload::Sparse { .. } => "sparse",
+            Payload::Dense { .. } => "dense",
+            Payload::Quantized(_) => "quantized",
+        }
+    }
+
+    /// The raw f32 values, when the payload carries them directly.
+    pub fn values(&self) -> Option<&[f32]> {
+        match self {
+            Payload::Sparse { values, .. } | Payload::Dense { values } => {
+                Some(values)
+            }
+            Payload::Quantized(_) => None,
+        }
+    }
+
+    /// Exact body size in bytes (no kind tag) — the uplink byte model.
+    pub fn body_len(&self) -> usize {
+        match self {
+            Payload::Sparse { values, mask } => {
+                4 + 4 * values.len()
+                    + mask.as_ref().map_or(0, |m| m.encoded_len())
+            }
+            Payload::Dense { values } => 4 + 4 * values.len(),
+            Payload::Quantized(b) => QuantBlock::body_len(b.d(), b.s),
+        }
+    }
+
+    /// Size of the standalone `[kind][body]` encoding.
+    pub fn encoded_len(&self) -> usize {
+        1 + self.body_len()
+    }
+
+    /// Append the body bytes (shared with the wire-message grad codecs).
+    pub fn encode_body_into(&self, out: &mut Vec<u8>) {
+        match self {
+            Payload::Sparse { values, mask } => {
+                encode_counted_f32s(values, out);
+                if let Some(m) = mask {
+                    m.encode_into(out);
+                }
+            }
+            Payload::Dense { values } => encode_counted_f32s(values, out),
+            Payload::Quantized(b) => b.encode_body_into(out),
+        }
+    }
+
+    /// Append the standalone `[kind][body]` encoding.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.push(self.kind());
+        self.encode_body_into(out);
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_len());
+        self.encode_into(&mut out);
+        debug_assert_eq!(out.len(), self.encoded_len());
+        out
+    }
+
+    /// Exact inverse of [`Self::encode`]. The buffer must contain exactly
+    /// one payload (a `Sparse` payload's trailing bytes are its mask, so
+    /// the payload always terminates its buffer). `d` rebuilds masks and
+    /// sizes quantized blocks; it never travels on the wire.
+    pub fn decode(buf: &[u8], d: usize) -> Result<Payload, String> {
+        let (&kind, body) =
+            buf.split_first().ok_or("empty payload buffer")?;
+        Self::decode_body(kind, body, d)
+    }
+
+    /// Decode a body whose kind is known out-of-band — the
+    /// [`crate::transport::WireMessage`] grad tags reuse this, which is
+    /// what makes the payload codec the single byte-layout authority.
+    pub fn decode_body(
+        kind: u8,
+        body: &[u8],
+        d: usize,
+    ) -> Result<Payload, String> {
+        match kind {
+            KIND_SPARSE => {
+                let (values, rest) =
+                    decode_counted_f32s(body, "sparse payload")?;
+                let mask = if rest.is_empty() {
+                    None
+                } else {
+                    let (wire, used) = MaskWire::decode(rest, d)?;
+                    if used != rest.len() {
+                        return Err(format!(
+                            "sparse payload: {} trailing bytes after mask",
+                            rest.len() - used
+                        ));
+                    }
+                    Some(wire)
+                };
+                Ok(Payload::Sparse { values, mask })
+            }
+            KIND_DENSE => {
+                let (values, rest) =
+                    decode_counted_f32s(body, "dense payload")?;
+                if !rest.is_empty() {
+                    return Err(format!(
+                        "dense payload: {} trailing bytes",
+                        rest.len()
+                    ));
+                }
+                Ok(Payload::Dense { values })
+            }
+            KIND_QUANT => Ok(Payload::Quantized(QuantBlock::decode_body(
+                body, d,
+            )?)),
+            k => Err(format!("unknown payload kind {k}")),
+        }
+    }
+}
+
+/// `[u32 count][count × f32]`, little-endian.
+pub(crate) fn encode_counted_f32s(values: &[f32], out: &mut Vec<u8>) {
+    out.extend_from_slice(&(values.len() as u32).to_le_bytes());
+    for v in values {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Parse a `u32` count followed by that many f32s; returns the values and
+/// the unconsumed tail.
+pub(crate) fn decode_counted_f32s<'a>(
+    buf: &'a [u8],
+    what: &str,
+) -> Result<(Vec<f32>, &'a [u8]), String> {
+    if buf.len() < 4 {
+        return Err(format!("{what}: missing value count"));
+    }
+    let n = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
+    let need = 4 + 4 * n;
+    if buf.len() < need {
+        return Err(format!(
+            "{what}: truncated — want {n} values ({need} bytes), have {}",
+            buf.len()
+        ));
+    }
+    let values = buf[4..need]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok((values, &buf[need..]))
+}
+
+// -------------------------------------------------- server-side absorbers
+
+/// In-place momentum law over a mask support:
+/// `m = β·m + (1−β)·scatter(α·values)` — bit-compatible with the dense
+/// `scale_add(m, β, 1−β, reconstruct(values))` without the O(d) zero-fill
+/// and read of a reconstruction buffer.
+pub fn absorb_sparse(m: &mut [f32], beta: f32, mask: &Mask, values: &[f32]) {
+    debug_assert_eq!(m.len(), mask.d);
+    crate::tensor::scale(m, beta);
+    let alpha = mask.alpha();
+    let b = 1.0 - beta;
+    for (&ci, &v) in mask.idx.iter().zip(values) {
+        m[ci as usize] += b * (alpha * v);
+    }
+}
+
+/// In-place momentum law for QSGD levels:
+/// `m_i = β·m_i + (1−β)·(‖x‖·l_i/s)` — the dequantize-free fold the
+/// rosdhb-u hot path runs over a reused level buffer.
+pub fn absorb_quant_levels(
+    m: &mut [f32],
+    beta: f32,
+    norm: f32,
+    s: u32,
+    levels: &[i32],
+) {
+    debug_assert_eq!(m.len(), levels.len());
+    let b = 1.0 - beta;
+    let s = s as f32;
+    for (mi, &l) in m.iter_mut().zip(levels) {
+        *mi = beta * *mi + b * (norm * l as f32 / s);
+    }
+}
+
+/// Fold a payload's unbiased reconstruction into a momentum buffer in one
+/// pass: `m = β·m + (1−β)·ĝ(payload)` — without materializing the dense
+/// ĝ. Bit-compatible with `scale_add(m, β, 1−β, reconstruct(payload))`.
+pub fn absorb_momentum(m: &mut [f32], beta: f32, p: &Payload) {
+    match p {
+        Payload::Dense { values } => {
+            crate::tensor::scale_add(m, beta, 1.0 - beta, values);
+        }
+        Payload::Sparse {
+            values,
+            mask: Some(mw),
+        } => absorb_sparse(m, beta, &mw.to_mask(), values),
+        Payload::Sparse { mask: None, .. } => {
+            // The coordinate set lives with the caller (shared mask);
+            // callers that own it scatter themselves. Degrade to the
+            // β-decay a zero gradient would cause rather than guessing.
+            debug_assert!(
+                false,
+                "absorb_momentum needs an explicit mask on sparse payloads"
+            );
+            crate::tensor::scale(m, beta);
+        }
+        Payload::Quantized(q) => {
+            absorb_quant_levels(m, beta, q.norm, q.s, &q.levels);
+        }
+    }
+}
+
+/// DASHA's estimate-update stepsize a = 1/(2ω + 1) with ω = α − 1, the
+/// unbiased-compressor variance parameter: without it the raw α-unbiased
+/// update overshoots masked coordinates by (α − 1)× and diverges.
+pub fn dasha_gain(alpha: f32) -> f32 {
+    let omega = alpha - 1.0;
+    1.0 / (2.0 * omega + 1.0)
+}
+
+/// Apply one DASHA difference payload to a gradient-estimate copy:
+/// `ĝ[cᵢ] += a·α·vᵢ`. The coordinator's estimates and every worker's
+/// local copy advance through this one function, which is what keeps them
+/// in bit-exact lockstep across the wire.
+pub fn dasha_apply(est: &mut [f32], mask: &Mask, values: &[f32]) {
+    let alpha = mask.alpha();
+    let a = dasha_gain(alpha);
+    for (&ci, &v) in mask.idx.iter().zip(values) {
+        est[ci as usize] += a * alpha * v;
+    }
+}
+
+/// A k-coordinate mask wire of exactly the size
+/// [`super::codec::mask_wire_len`] models — for size-true placeholder
+/// payloads (drone uplinks, dropped-contribution substitutes).
+pub fn placeholder_mask_wire(d: usize, k: usize) -> MaskWire {
+    MaskWire::choose(&Mask {
+        d,
+        idx: (0..k as u32).collect(),
+    })
+}
+
+// ------------------------------------------------------------ wire plans
+
+/// Which payload kind a validated config puts on the uplink at model
+/// dimension d — the shared truth between the coordinator's TCP wire
+/// plan and the worker-side [`CompressorState`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PayloadPlan {
+    /// Coordinated-mask RoSDHB (k < d): k values; the mask is re-derived
+    /// from the broadcast seed on both ends, never shipped.
+    SparseGlobal { k: usize },
+    /// Worker-drawn masks (rosdhb-local, dgd-randk, rosdhb-u/randk):
+    /// k values plus the mask wire.
+    SparseLocal { k: usize },
+    /// QSGD blocks (rosdhb-u/qsgd).
+    Quantized { s: u32 },
+    /// DASHA difference compression: one dense init round, then k-value
+    /// differences plus the mask wire.
+    DashaDiff { k: usize },
+    /// Dense gradients (baselines, k = d).
+    Dense,
+}
+
+impl PayloadPlan {
+    /// The plan implied by a validated config at model dimension `d`.
+    pub fn from_config(cfg: &ExperimentConfig, d: usize) -> PayloadPlan {
+        CompressorState::from_config(cfg, d)
+            .expect("config was validated")
+            .plan()
+    }
+
+    /// A zero payload with the exact wire size of an honest uplink under
+    /// this plan — the one constructor behind both drone placeholders
+    /// ([`CompressorState::placeholder`]) and the coordinator's
+    /// dropped-contribution substitutes, so the socket-bytes == ByteMeter
+    /// parity cannot drift between the two.
+    pub fn zero_payload(self, d: usize, init_round: bool) -> Payload {
+        match self {
+            PayloadPlan::SparseGlobal { k } => Payload::Sparse {
+                values: vec![0.0; k],
+                mask: None,
+            },
+            PayloadPlan::SparseLocal { k } => Payload::Sparse {
+                values: vec![0.0; k],
+                mask: Some(placeholder_mask_wire(d, k)),
+            },
+            PayloadPlan::Quantized { s } => Payload::Quantized(QuantBlock {
+                s,
+                norm: 0.0,
+                levels: vec![0; d],
+            }),
+            PayloadPlan::DashaDiff { k } => {
+                if init_round {
+                    Payload::Dense {
+                        values: vec![0.0; d],
+                    }
+                } else {
+                    Payload::Sparse {
+                        values: vec![0.0; k],
+                        mask: Some(placeholder_mask_wire(d, k)),
+                    }
+                }
+            }
+            PayloadPlan::Dense => Payload::Dense {
+                values: vec![0.0; d],
+            },
+        }
+    }
+}
+
+// ------------------------------------------------------ compressor state
+
+enum Mode {
+    Dense,
+    Global {
+        k: usize,
+    },
+    Local {
+        rk: RandK,
+        tag: u64,
+    },
+    Quant {
+        q: Qsgd,
+        tag: u64,
+    },
+    Dasha {
+        rk: RandK,
+        estimate: Vec<f32>,
+        initialized: bool,
+    },
+}
+
+/// Worker-side compressor state: per-worker RNG stream derivation plus
+/// whatever residue the algorithm keeps on the client (DASHA's gradient
+/// estimate). Both the remote worker process and the coordinator's
+/// in-process simulation derive the identical per-(round, worker) streams
+/// from the shared experiment seed, so a TCP run reproduces the local run
+/// bit for bit.
+pub struct CompressorState {
+    d: usize,
+    base: Pcg64,
+    mode: Mode,
+}
+
+impl CompressorState {
+    /// Build the state the config's algorithm places on each worker at
+    /// model dimension `d`. Fails only on an invalid compressor spec
+    /// (already rejected by config validation).
+    pub fn from_config(
+        cfg: &ExperimentConfig,
+        d: usize,
+    ) -> Result<Self, String> {
+        let k = RandK::from_frac(d, cfg.k_frac).k;
+        let rk = RandK { d, k };
+        let mode = match cfg.algorithm {
+            Algorithm::RoSdhb => {
+                if k < d {
+                    Mode::Global { k }
+                } else {
+                    Mode::Dense
+                }
+            }
+            // rosdhb-local ships its mask even at k = d (the server is
+            // not assumed to know it) — the byte model pays for it too.
+            Algorithm::RoSdhbLocal => Mode::Local {
+                rk,
+                tag: TAG_LOCAL_MASK,
+            },
+            Algorithm::DgdRandK => {
+                if k < d {
+                    Mode::Local {
+                        rk,
+                        tag: TAG_DGD_RANDK,
+                    }
+                } else {
+                    Mode::Dense
+                }
+            }
+            Algorithm::RoSdhbU => {
+                match CompressorSpec::parse(&cfg.compressor, d, cfg.k_frac)? {
+                    CompressorSpec::RandK { k } => Mode::Local {
+                        rk: RandK { d, k },
+                        tag: TAG_ROSDHB_U,
+                    },
+                    CompressorSpec::Qsgd { s } => Mode::Quant {
+                        q: Qsgd::new(d, s),
+                        tag: TAG_ROSDHB_U,
+                    },
+                }
+            }
+            Algorithm::ByzDashaPage => {
+                if k < d {
+                    Mode::Dasha {
+                        rk,
+                        estimate: vec![0.0; d],
+                        initialized: false,
+                    }
+                } else {
+                    Mode::Dense
+                }
+            }
+            Algorithm::RobustDgd | Algorithm::Dgd => Mode::Dense,
+        };
+        Ok(CompressorState {
+            d,
+            base: round_stream(cfg.seed),
+            mode,
+        })
+    }
+
+    /// The uplink wire plan this state produces.
+    pub fn plan(&self) -> PayloadPlan {
+        match &self.mode {
+            Mode::Dense => PayloadPlan::Dense,
+            Mode::Global { k } => PayloadPlan::SparseGlobal { k: *k },
+            Mode::Local { rk, .. } => PayloadPlan::SparseLocal { k: rk.k },
+            Mode::Quant { q, .. } => PayloadPlan::Quantized { s: q.s },
+            Mode::Dasha { rk, .. } => PayloadPlan::DashaDiff { k: rk.k },
+        }
+    }
+
+    /// Compress this worker's round-`t` gradient exactly as the
+    /// coordinator's simulation would — same derived RNG stream, same
+    /// arithmetic. `mask_seed` is the seed from the round's broadcast
+    /// (present only under the shared-mask plan).
+    pub fn compress(
+        &mut self,
+        t: u64,
+        worker: u64,
+        mask_seed: Option<u64>,
+        g: &[f32],
+    ) -> Result<Payload, String> {
+        debug_assert_eq!(g.len(), self.d);
+        Ok(match &mut self.mode {
+            Mode::Dense => Payload::Dense {
+                values: g.to_vec(),
+            },
+            Mode::Global { k } => {
+                let seed = mask_seed.ok_or(
+                    "shared-mask round arrived without a broadcast mask seed",
+                )?;
+                let mask = mask_from_seed(seed, self.d, *k);
+                Payload::Sparse {
+                    values: mask.compress(g),
+                    mask: None,
+                }
+            }
+            Mode::Local { rk, tag } => {
+                let mut rng = self.base.derive(*tag, t, worker);
+                let mask = rk.draw(&mut rng);
+                Payload::Sparse {
+                    values: mask.compress(g),
+                    mask: Some(MaskWire::choose(&mask)),
+                }
+            }
+            Mode::Quant { q, tag } => {
+                let mut rng = self.base.derive(*tag, t, worker);
+                Payload::Quantized(q.quantize_block(g, &mut rng))
+            }
+            Mode::Dasha {
+                rk,
+                estimate,
+                initialized,
+            } => {
+                if !*initialized {
+                    // init round: dense upload, estimate = gradient
+                    estimate.copy_from_slice(g);
+                    *initialized = true;
+                    Payload::Dense {
+                        values: g.to_vec(),
+                    }
+                } else {
+                    let mut rng = self.base.derive(TAG_DASHA, t, worker);
+                    let mask = rk.draw(&mut rng);
+                    // gather C(g − ĝ) directly on the mask support
+                    let values: Vec<f32> = mask
+                        .idx
+                        .iter()
+                        .map(|&i| g[i as usize] - estimate[i as usize])
+                        .collect();
+                    dasha_apply(estimate, &mask, &values);
+                    Payload::Sparse {
+                        values,
+                        mask: Some(MaskWire::choose(&mask)),
+                    }
+                }
+            }
+        })
+    }
+
+    /// A zero payload with the exact wire size of an honest uplink this
+    /// round — what payload-attack drones ship (the crafted adversarial
+    /// values stay server-side for reproducibility).
+    pub fn placeholder(&self, mask_seed: Option<u64>) -> Payload {
+        match &self.mode {
+            // a shared-mask round that arrived without its seed can only
+            // be answered densely (never happens with a sane coordinator)
+            Mode::Global { .. } if mask_seed.is_none() => Payload::Dense {
+                values: vec![0.0; self.d],
+            },
+            Mode::Dasha { initialized, .. } => {
+                self.plan().zero_payload(self.d, !*initialized)
+            }
+            _ => self.plan().zero_payload(self.d, false),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::codec::mask_wire_len;
+    use crate::tensor;
+
+    fn gaussian(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed, 1);
+        let mut v = vec![0f32; d];
+        rng.fill_gaussian(&mut v, 1.0);
+        v
+    }
+
+    #[test]
+    fn quant_block_roundtrips_bit_exactly() {
+        for (d, s) in [(1usize, 1u32), (7, 1), (64, 4), (100, 7), (257, 15)] {
+            let q = Qsgd::new(d, s);
+            let mut rng = Pcg64::new(d as u64, s as u64);
+            let x = gaussian(d, 3);
+            let block = q.quantize_block(&x, &mut rng);
+            let mut buf = Vec::new();
+            block.encode_body_into(&mut buf);
+            assert_eq!(buf.len(), QuantBlock::body_len(d, s), "d={d} s={s}");
+            let back = QuantBlock::decode_body(&buf, d).unwrap();
+            assert_eq!(back, block, "d={d} s={s}");
+        }
+    }
+
+    #[test]
+    fn quant_block_decode_rejects_malformed() {
+        let block = QuantBlock {
+            s: 4,
+            norm: 1.0,
+            levels: vec![1, -2, 0, 4],
+        };
+        let mut buf = Vec::new();
+        block.encode_body_into(&mut buf);
+        assert!(QuantBlock::decode_body(&buf[..buf.len() - 1], 4).is_err());
+        assert!(QuantBlock::decode_body(&buf, 5).is_err()); // wrong d
+        assert!(QuantBlock::decode_body(&[0, 0, 0, 0, 0, 0], 0).is_err()); // s=0
+
+        // a magnitude above s: 3 fits the 2-bit field for s = 2 but
+        // exceeds s — must be rejected, not silently accepted
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&2u16.to_le_bytes());
+        buf.extend_from_slice(&1f32.to_le_bytes());
+        buf.push(0); // signs
+        buf.push(0b11); // level 3
+        assert_eq!(buf.len(), QuantBlock::body_len(1, 2));
+        assert!(QuantBlock::decode_body(&buf, 1).is_err());
+    }
+
+    #[test]
+    fn payload_encoded_len_matches_encode() {
+        let mask = Mask::new(100, vec![1, 5, 99]);
+        let q = Qsgd::new(32, 4);
+        let mut rng = Pcg64::new(9, 9);
+        let block = q.quantize_block(&gaussian(32, 5), &mut rng);
+        let payloads = vec![
+            Payload::Sparse {
+                values: vec![1.0, -2.0, 3.0],
+                mask: None,
+            },
+            Payload::Sparse {
+                values: vec![1.0, -2.0, 3.0],
+                mask: Some(MaskWire::choose(&mask)),
+            },
+            Payload::Dense {
+                values: vec![0.5; 17],
+            },
+            Payload::Quantized(block),
+        ];
+        for p in payloads {
+            let bytes = p.encode();
+            assert_eq!(bytes.len(), p.encoded_len(), "{}", p.kind_name());
+            // d only matters for mask/quant reconstruction; the sparse
+            // cases used d = 100 and the quant case d = 32
+            let d = if matches!(p, Payload::Quantized(_)) { 32 } else { 100 };
+            let back = Payload::decode(&bytes, d).unwrap();
+            assert_eq!(back, p, "{}", p.kind_name());
+        }
+    }
+
+    #[test]
+    fn absorb_momentum_matches_densified_oracle() {
+        let d = 64;
+        let beta = 0.9f32;
+        let g = gaussian(d, 11);
+        // sparse payload with mask
+        let mask = Mask::new(d, Pcg64::new(1, 2).sample_k_of(d, 9));
+        let values = mask.compress(&g);
+        let p = Payload::Sparse {
+            values: values.clone(),
+            mask: Some(MaskWire::choose(&mask)),
+        };
+        let mut m_fast = gaussian(d, 12);
+        let mut m_oracle = m_fast.clone();
+        absorb_momentum(&mut m_fast, beta, &p);
+        let mut recon = vec![0f32; d];
+        mask.reconstruct_into(&values, &mut recon);
+        tensor::scale_add(&mut m_oracle, beta, 1.0 - beta, &recon);
+        for (a, b) in m_fast.iter().zip(&m_oracle) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+        // quantized payload
+        let q = Qsgd::new(d, 4);
+        let block = q.quantize_block(&g, &mut Pcg64::new(3, 4));
+        let qp = Payload::Quantized(block.clone());
+        let mut m_fast = gaussian(d, 13);
+        let mut m_oracle = m_fast.clone();
+        absorb_momentum(&mut m_fast, beta, &qp);
+        let deq = q.reconstruct(block.norm, &block.levels);
+        tensor::scale_add(&mut m_oracle, beta, 1.0 - beta, &deq);
+        assert_eq!(m_fast, m_oracle);
+        // dense payload
+        let dp = Payload::Dense { values: g.clone() };
+        let mut m_fast = gaussian(d, 14);
+        let mut m_oracle = m_fast.clone();
+        absorb_momentum(&mut m_fast, beta, &dp);
+        tensor::scale_add(&mut m_oracle, beta, 1.0 - beta, &g);
+        assert_eq!(m_fast, m_oracle);
+    }
+
+    #[test]
+    fn placeholder_mask_wire_has_modeled_size() {
+        for (d, k) in [(11_809, 118), (11_809, 5_904), (100, 1), (64, 64)] {
+            assert_eq!(
+                placeholder_mask_wire(d, k).encoded_len(),
+                mask_wire_len(d, k),
+                "d={d} k={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn plans_track_algorithm_and_compressor() {
+        let d = 1000;
+        let mut cfg = ExperimentConfig::default_mnist_like();
+        cfg.k_frac = 0.1;
+        assert_eq!(
+            PayloadPlan::from_config(&cfg, d),
+            PayloadPlan::SparseGlobal { k: 100 }
+        );
+        cfg.algorithm = Algorithm::RoSdhbLocal;
+        assert_eq!(
+            PayloadPlan::from_config(&cfg, d),
+            PayloadPlan::SparseLocal { k: 100 }
+        );
+        cfg.algorithm = Algorithm::ByzDashaPage;
+        assert_eq!(
+            PayloadPlan::from_config(&cfg, d),
+            PayloadPlan::DashaDiff { k: 100 }
+        );
+        cfg.algorithm = Algorithm::RoSdhbU;
+        cfg.compressor = "qsgd:8".into();
+        assert_eq!(
+            PayloadPlan::from_config(&cfg, d),
+            PayloadPlan::Quantized { s: 8 }
+        );
+        cfg.compressor = "randk".into();
+        assert_eq!(
+            PayloadPlan::from_config(&cfg, d),
+            PayloadPlan::SparseLocal { k: 100 }
+        );
+        cfg.algorithm = Algorithm::RobustDgd;
+        assert_eq!(PayloadPlan::from_config(&cfg, d), PayloadPlan::Dense);
+        cfg.algorithm = Algorithm::RoSdhb;
+        cfg.k_frac = 1.0;
+        assert_eq!(PayloadPlan::from_config(&cfg, d), PayloadPlan::Dense);
+    }
+
+    #[test]
+    fn dasha_state_tracks_its_own_estimate() {
+        let d = 32;
+        let mut cfg = ExperimentConfig::default_mnist_like();
+        cfg.algorithm = Algorithm::ByzDashaPage;
+        cfg.k_frac = 0.25;
+        let mut st = CompressorState::from_config(&cfg, d).unwrap();
+        let g1 = gaussian(d, 21);
+        let p1 = st.compress(1, 0, None, &g1).unwrap();
+        assert!(matches!(p1, Payload::Dense { .. }), "init round is dense");
+        let g2 = gaussian(d, 22);
+        let p2 = st.compress(2, 0, None, &g2).unwrap();
+        match &p2 {
+            Payload::Sparse {
+                values,
+                mask: Some(mw),
+            } => {
+                assert_eq!(values.len(), 8);
+                assert_eq!(mw.to_mask().k(), 8);
+            }
+            other => panic!("round 2 must be a masked difference: {other:?}"),
+        }
+        // constant gradient ⇒ differences shrink to zero once tracked
+        let mut last = f32::MAX;
+        for t in 3..150 {
+            let p = st.compress(t, 0, None, &g2).unwrap();
+            if let Payload::Sparse { values, .. } = p {
+                let m = values.iter().fold(0f32, |a, v| a.max(v.abs()));
+                last = m;
+            }
+        }
+        assert!(last < 1e-2, "difference magnitude stuck at {last}");
+    }
+
+    #[test]
+    fn global_state_requires_mask_seed() {
+        let d = 100;
+        let cfg = ExperimentConfig::default_mnist_like();
+        let mut st = CompressorState::from_config(&cfg, d).unwrap();
+        let g = gaussian(d, 31);
+        assert!(st.compress(1, 0, None, &g).is_err());
+        let p = st.compress(1, 0, Some(7), &g).unwrap();
+        match p {
+            Payload::Sparse { values, mask } => {
+                assert_eq!(values.len(), 10);
+                assert!(mask.is_none(), "global masks never ship");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

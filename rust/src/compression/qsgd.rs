@@ -7,9 +7,12 @@
 //! stochastically to one of the s+1 levels {0, 1/s, …, 1}. Unbiased by
 //! construction; ω = E‖Q(x)−x‖²/‖x‖² ≤ min(d/s², √d/s).
 //!
-//! Wire format (byte accounting, DESIGN.md §5): 4 bytes ‖x‖ + d sign
-//! bits + d level indices of ⌈log2(s+1)⌉ bits, bit-packed.
+//! Wire format: the exact packed layout lives in
+//! [`super::payload::QuantBlock`] (2-byte s + 4-byte ‖x‖ + d sign bits +
+//! d level fields of ⌈log₂(s+1)⌉ bits); [`Qsgd::wire_bytes`] and the
+//! `ByteMeter` model both read that one formula.
 
+use super::payload::QuantBlock;
 use crate::prng::Pcg64;
 
 #[derive(Clone, Debug)]
@@ -32,41 +35,64 @@ impl Qsgd {
         (d / (s * s)).min(d.sqrt() / s)
     }
 
-    /// Bits per level index.
+    /// Bits per level index — delegates to the wire-layout authority.
     pub fn level_bits(&self) -> u32 {
-        32 - self.s.leading_zeros()
+        QuantBlock::level_bits(self.s)
     }
 
-    /// Wire size in bytes for one quantized vector.
+    /// Exact uplink wire size of one quantized gradient message (header +
+    /// packed [`QuantBlock`] body) — the quantized-payload byte model.
     pub fn wire_bytes(&self) -> usize {
-        // norm + packed signs + packed levels
-        4 + (self.d + 7) / 8 + (self.d * self.level_bits() as usize + 7) / 8
+        crate::transport::quant_grad_len(self.d, self.s)
     }
 
     /// Quantize: returns (norm, levels with sign as i32 in [-s, s]).
     pub fn quantize(&self, x: &[f32], rng: &mut Pcg64) -> (f32, Vec<i32>) {
+        let mut levels = Vec::with_capacity(self.d);
+        let norm = self.quantize_into(x, rng, &mut levels);
+        (norm, levels)
+    }
+
+    /// Allocation-free variant of [`Self::quantize`]: levels land in a
+    /// caller-owned buffer (cleared, then filled to length d) — the
+    /// rosdhb-u hot path reuses one buffer across workers and rounds.
+    pub fn quantize_into(
+        &self,
+        x: &[f32],
+        rng: &mut Pcg64,
+        levels: &mut Vec<i32>,
+    ) -> f32 {
         assert_eq!(x.len(), self.d);
+        levels.clear();
         let norm = crate::tensor::norm(x) as f32;
         if norm == 0.0 {
-            return (0.0, vec![0; self.d]);
+            levels.resize(self.d, 0);
+            return 0.0;
         }
         let s = self.s as f32;
-        let levels = x
-            .iter()
-            .map(|&v| {
-                let r = v.abs() / norm * s; // in [0, s]
-                let lo = r.floor();
-                let p = r - lo; // P(round up)
-                let l = lo as i32
-                    + if (rng.next_f32() as f32) < p { 1 } else { 0 };
-                if v < 0.0 {
-                    -l
-                } else {
-                    l
-                }
-            })
-            .collect();
-        (norm, levels)
+        levels.extend(x.iter().map(|&v| {
+            let r = v.abs() / norm * s; // in [0, s]
+            let lo = r.floor();
+            let p = r - lo; // P(round up)
+            let l = lo as i32 + if rng.next_f32() < p { 1 } else { 0 };
+            if v < 0.0 {
+                -l
+            } else {
+                l
+            }
+        }));
+        norm
+    }
+
+    /// Quantize into the typed wire shape ([`QuantBlock`]) — what a
+    /// worker-side [`super::CompressorState`] puts on the uplink.
+    pub fn quantize_block(&self, x: &[f32], rng: &mut Pcg64) -> QuantBlock {
+        let (norm, levels) = self.quantize(x, rng);
+        QuantBlock {
+            s: self.s,
+            norm,
+            levels,
+        }
     }
 
     /// Dequantize to the unbiased estimate.
@@ -137,29 +163,68 @@ impl UnbiasedCompressor for RandKLocal {
     }
 }
 
-/// Parse a compressor spec: `"randk"` (k from k_frac), `"qsgd"` /
-/// `"qsgd:<s>"` (default s = 4).
+/// A validated, typed compressor specification — the single parse of the
+/// config's `compressor` key, shared by the server-side algorithm, the
+/// worker-side [`super::CompressorState`] and the TCP wire plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompressorSpec {
+    /// RandK with a worker-drawn (shipped) mask; k resolved from k_frac.
+    RandK { k: usize },
+    /// QSGD with s quantization levels (1 ≤ s ≤ 65535 — s travels as u16
+    /// in the [`QuantBlock`] wire layout).
+    Qsgd { s: u32 },
+}
+
+impl CompressorSpec {
+    /// Parse `"randk"` (k from k_frac), `"qsgd"` / `"qsgd:<s>"`
+    /// (default s = 4) at model dimension `d`.
+    pub fn parse(spec: &str, d: usize, k_frac: f64) -> Result<Self, String> {
+        let spec = spec.to_ascii_lowercase();
+        let (base, arg) = match spec.split_once(':') {
+            Some((b, a)) => (b, Some(a)),
+            None => (spec.as_str(), None),
+        };
+        match base {
+            "randk" => Ok(CompressorSpec::RandK {
+                k: super::RandK::from_frac(d, k_frac).k,
+            }),
+            "qsgd" => {
+                let s: u32 = arg.map_or(Ok(4), |a| {
+                    a.parse().map_err(|_| format!("bad qsgd level '{a}'"))
+                })?;
+                if s == 0 || s > u16::MAX as u32 {
+                    return Err(format!(
+                        "qsgd levels s={s} outside 1..=65535 (s travels \
+                         as u16 on the wire)"
+                    ));
+                }
+                Ok(CompressorSpec::Qsgd { s })
+            }
+            other => Err(format!("unknown compressor '{other}'")),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            CompressorSpec::RandK { k } => format!("randk(k={k})"),
+            CompressorSpec::Qsgd { s } => format!("qsgd(s={s})"),
+        }
+    }
+}
+
+/// Parse a compressor spec into the boxed [`UnbiasedCompressor`] form
+/// (bench ablations; the training path uses [`CompressorSpec`] directly).
 pub fn parse_spec(
     spec: &str,
     d: usize,
     k_frac: f64,
 ) -> Result<Box<dyn UnbiasedCompressor>, String> {
-    let spec = spec.to_ascii_lowercase();
-    let (base, arg) = match spec.split_once(':') {
-        Some((b, a)) => (b, Some(a)),
-        None => (spec.as_str(), None),
-    };
-    match base {
-        "randk" => Ok(Box::new(RandKLocal {
-            inner: super::RandK::from_frac(d, k_frac),
-        })),
-        "qsgd" => {
-            let s: u32 = arg
-                .map_or(Ok(4), |a| a.parse().map_err(|_| "bad qsgd level"))?;
-            Ok(Box::new(Qsgd::new(d, s)))
-        }
-        other => Err(format!("unknown compressor '{other}'")),
-    }
+    Ok(match CompressorSpec::parse(spec, d, k_frac)? {
+        CompressorSpec::RandK { k } => Box::new(RandKLocal {
+            inner: super::RandK { d, k },
+        }),
+        CompressorSpec::Qsgd { s } => Box::new(Qsgd::new(d, s)),
+    })
 }
 
 #[cfg(test)]
@@ -261,6 +326,49 @@ mod tests {
         let q = parse_spec("qsgd:8", 100, 0.1).unwrap();
         assert_eq!(q.name(), "qsgd(s=8)");
         assert!(parse_spec("zip", 100, 0.1).is_err());
+    }
+
+    #[test]
+    fn compressor_spec_is_typed_and_bounded() {
+        assert_eq!(
+            CompressorSpec::parse("randk", 1000, 0.1).unwrap(),
+            CompressorSpec::RandK { k: 100 }
+        );
+        assert_eq!(
+            CompressorSpec::parse("qsgd", 100, 0.1).unwrap(),
+            CompressorSpec::Qsgd { s: 4 }
+        );
+        assert_eq!(
+            CompressorSpec::parse("QSGD:65535", 100, 0.1).unwrap(),
+            CompressorSpec::Qsgd { s: 65535 }
+        );
+        // s must fit the u16 wire field and be >= 1
+        assert!(CompressorSpec::parse("qsgd:0", 100, 0.1).is_err());
+        assert!(CompressorSpec::parse("qsgd:65536", 100, 0.1).is_err());
+        assert!(CompressorSpec::parse("qsgd:x", 100, 0.1).is_err());
+    }
+
+    #[test]
+    fn quantize_into_matches_quantize_and_block() {
+        let d = 96;
+        let q = Qsgd::new(d, 4);
+        let x = vecs(d, 13);
+        let (n1, l1) = q.quantize(&x, &mut Pcg64::new(5, 5));
+        let mut l2 = Vec::new();
+        let n2 = q.quantize_into(&x, &mut Pcg64::new(5, 5), &mut l2);
+        assert_eq!(n1, n2);
+        assert_eq!(l1, l2);
+        let block = q.quantize_block(&x, &mut Pcg64::new(5, 5));
+        assert_eq!(block.s, 4);
+        assert_eq!(block.norm, n1);
+        assert_eq!(block.levels, l1);
+        let mut buf = Vec::new();
+        block.encode_body_into(&mut buf);
+        // the byte model: header + exactly this packed body
+        assert_eq!(
+            q.wire_bytes(),
+            crate::transport::HEADER_BYTES + buf.len()
+        );
     }
 
     #[test]

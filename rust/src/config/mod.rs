@@ -401,9 +401,15 @@ impl ExperimentConfig {
             Err(e) => return Err(e),
         }
         if self.algorithm == Algorithm::RoSdhbU {
-            // fail early on a bad compressor spec (build would panic)
-            crate::compression::qsgd::parse_spec(&self.compressor, 8, self.k_frac)
-                .map(|_| ())?;
+            // fail early on a bad compressor spec (build would panic);
+            // CompressorSpec also enforces the wire bounds (qsgd s fits
+            // the u16 field of the QuantBlock layout)
+            crate::compression::CompressorSpec::parse(
+                &self.compressor,
+                8,
+                self.k_frac,
+            )
+            .map(|_| ())?;
         }
         if self.eval_every == 0 {
             return Err("eval_every must be > 0".into());
@@ -414,21 +420,36 @@ impl ExperimentConfig {
         match self.transport.as_str() {
             "local" => {}
             "tcp" => {
-                // The socket runtime ships exactly the bytes the ByteMeter
-                // models, which requires a wire plan where the server can
-                // reconstruct the algorithm's inputs from the uplink
-                // payloads alone: coordinated-mask RoSDHB and the dense
-                // baselines. Server-drawn per-worker masks (rosdhb-local,
-                // dgd-randk) and difference/quantization compressors
-                // (dasha, rosdhb-u) stay simulation-only for now.
-                match self.algorithm {
-                    Algorithm::RoSdhb | Algorithm::RobustDgd | Algorithm::Dgd => {}
-                    other => {
-                        return Err(format!(
-                            "transport = \"tcp\" supports rosdhb, robust-dgd \
-                             and dgd; '{}' runs under transport = \"local\"",
-                            other.name()
-                        ))
+                // Every algorithm has a typed wire plan (the payload
+                // codec, `compression::payload`): shared-mask sparse,
+                // worker-drawn masks with a shipped MaskWire, QSGD
+                // blocks, DASHA differences, or dense. What the socket
+                // runtime cannot reproduce is the *omniscient payload
+                // adversary* on plans where the server never sees dense
+                // honest gradients — crafting needs the full-d honest
+                // inputs, which only the shared-mask plan (payload-space
+                // crafting) and the dense plans expose. Data-level
+                // attacks (labelflip: Byzantine workers are real
+                // processes) and crash faults (none) run everywhere.
+                let attack = crate::attacks::parse_spec(&self.attack)?;
+                if matches!(attack, crate::attacks::AttackKind::Payload(_)) {
+                    match self.algorithm {
+                        Algorithm::RoSdhb
+                        | Algorithm::RobustDgd
+                        | Algorithm::Dgd => {}
+                        other => {
+                            return Err(format!(
+                                "transport = \"tcp\" cannot run payload \
+                                 attack '{}' with '{}': the omniscient \
+                                 adversary is crafted server-side from \
+                                 dense honest gradients, which this wire \
+                                 plan never ships — use attack = \
+                                 \"none\"/\"labelflip\", or transport = \
+                                 \"local\"",
+                                self.attack,
+                                other.name()
+                            ))
+                        }
                     }
                 }
                 if self.engine != Engine::Native {
@@ -469,7 +490,7 @@ impl ExperimentConfig {
             Dataset::MnistIdx(_) => "mnist-idx",
         };
         let canon = format!(
-            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
             self.algorithm.name(),
             self.n_honest,
             self.n_byz,
@@ -482,6 +503,10 @@ impl ExperimentConfig {
             self.train_size,
             self.test_size,
             dataset_kind,
+            // the compressor selects the rosdhb-u wire plan (randk vs
+            // qsgd:s), i.e. what the worker-side CompressorState puts on
+            // the uplink — both sides must agree
+            self.compressor,
         );
         // FNV-1a, 64-bit
         let mut h: u64 = 0xcbf2_9ce4_8422_2325;
@@ -633,13 +658,35 @@ mod tests {
         assert_eq!(c.round_timeout_ms, 5000);
         assert!(c.set("transport", "carrier-pigeon").is_err());
 
-        // tcp is limited to wire plans with exact byte parity
+        // every algorithm has a tcp wire plan now, but the omniscient
+        // payload adversary stays limited to plans whose uplinks expose
+        // dense honest inputs (shared-mask rosdhb + dense baselines).
+        // The default attack is "alie" (a payload attack):
         let mut c = ExperimentConfig::default_mnist_like();
         c.transport = "tcp".into();
         c.algorithm = Algorithm::ByzDashaPage;
         assert!(c.validate().is_err());
         c.algorithm = Algorithm::RoSdhbLocal;
         assert!(c.validate().is_err());
+        c.algorithm = Algorithm::RoSdhbU;
+        assert!(c.validate().is_err());
+        // crash-fault and data-level attacks run everywhere; the
+        // omniscient payload adversary is rejected on every one of
+        // these plans (their uplinks never expose dense honest inputs)
+        for algo in [
+            Algorithm::ByzDashaPage,
+            Algorithm::RoSdhbLocal,
+            Algorithm::RoSdhbU,
+            Algorithm::DgdRandK,
+        ] {
+            c.algorithm = algo;
+            c.attack = "none".into();
+            c.validate().unwrap();
+            c.attack = "labelflip".into();
+            c.validate().unwrap();
+            c.attack = "alie".into();
+            assert!(c.validate().is_err(), "{algo:?} must reject alie");
+        }
         c.algorithm = Algorithm::RoSdhb;
         c.validate().unwrap();
         c.lyapunov = true;
@@ -671,6 +718,10 @@ mod tests {
         let mut c = a.clone();
         c.k_frac = 0.25;
         assert_ne!(a.wire_fingerprint(), c.wire_fingerprint());
+        // the compressor picks the rosdhb-u wire plan (randk vs qsgd)
+        let mut q = a.clone();
+        q.compressor = "randk".into();
+        assert_ne!(a.wire_fingerprint(), q.wire_fingerprint());
         // dataset *kind* is identity, its local path is not — the same
         // MNIST files may live at different locations across hosts
         let mut m1 = a.clone();

@@ -250,8 +250,6 @@ impl Trainer {
         test: Dataset,
         n_grad: usize,
     ) -> Result<Self> {
-        let root = Pcg64::new(cfg.seed, 0);
-
         // --- engine
         let mut engine: Box<dyn GradEngine> = match cfg.engine {
             Engine::Native => {
@@ -287,7 +285,9 @@ impl Trainer {
             params,
             test_set: test,
             meter: ByteMeter::new(cfg.n_total()),
-            rng: root.derive(0x726f_756e, 1, 0),
+            // definitionally crate::prng::round_stream(cfg.seed) — the
+            // stream remote CompressorStates re-derive client-side
+            rng: crate::prng::round_stream(cfg.seed),
             log: MetricsLog::default(),
             k,
             diverged: false,
@@ -350,6 +350,12 @@ impl Trainer {
             attack: &self.attack,
             meter: &mut self.meter,
             rng: &mut self.rng,
+            // TCP under a non-dense wire plan hands the algorithm the
+            // typed payloads the workers put on the wire; the local
+            // transport leaves this None and the algorithm compresses
+            // the dense gradients itself (identical results — workers
+            // derive the same per-(round, worker) streams).
+            payloads: self.transport.round_payloads(),
         };
         let mut update = self
             .algorithm

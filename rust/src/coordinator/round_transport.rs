@@ -10,36 +10,57 @@
 //! * [`TcpTransport`] — the coordinator side of the socket runtime
 //!   (`transport = "tcp"`): broadcast the model through
 //!   [`CoordinatorServer`], collect worker uplinks in wire format, and
-//!   reconstruct the gradient buffers the algorithm layer expects.
+//!   hand the typed payloads to the algorithm layer.
 //!
 //! ## Wire plans and byte parity
 //!
 //! The simulation's [`ByteMeter`][crate::transport::ByteMeter] *models*
 //! per-round traffic; the TCP path must *transmit* exactly those bytes.
-//! That works when the uplink payload alone lets the server rebuild the
-//! algorithm's input:
+//! Which payload travels is the [`PayloadPlan`] implied by the config —
+//! the same enum the worker-side
+//! [`CompressorState`][crate::compression::CompressorState] derives, so
+//! coordinator expectations and worker uplinks can never disagree:
 //!
-//! * [`WirePlan::SparseGlobal`] (RoSDHB, k < d) — downlink
-//!   `ModelBroadcast` with the mask seed; workers re-derive the shared
-//!   mask, uplink `CompressedGrad` with the k masked gradient values.
-//!   The server scatters them into a d-buffer (zeros elsewhere); the
-//!   algorithm's own `mask.compress` then recovers the identical payload,
-//!   so results match the local transport bitwise.
-//! * [`WirePlan::Dense`] (RoSDHB at k = d, robust-dgd, dgd) — plain
-//!   broadcast down, `FullGrad` up.
+//! * [`PayloadPlan::SparseGlobal`] (RoSDHB, k < d) — `ModelBroadcast`
+//!   (+mask seed) down; k-value sparse payloads up, no mask on the wire
+//!   (both ends re-derive it from the seed).
+//! * [`PayloadPlan::SparseLocal`] (rosdhb-local, dgd-randk, rosdhb-u
+//!   with randk) — plain broadcast down; k values **plus** the worker's
+//!   own [`MaskWire`] up.
+//! * [`PayloadPlan::Quantized`] (rosdhb-u with qsgd) — plain broadcast
+//!   down; one bit-packed QSGD block up.
+//! * [`PayloadPlan::DashaDiff`] (byz-dasha-page, k < d) — dense init
+//!   uplink in round 1, masked difference payloads after.
+//! * [`PayloadPlan::Dense`] (robust-dgd, dgd, and any k = d config) —
+//!   plain broadcast down, dense payloads up; these are decoded straight
+//!   into `grad_store` and the algorithm runs its oracle path.
+//!
+//! Under every non-dense plan the validated [`Payload`]s are delivered to
+//! the algorithm through [`RoundTransport::round_payloads`] /
+//! [`RoundEnv::payloads`][crate::algorithms::RoundEnv]; because workers
+//! derive their compression randomness from the same per-(round, worker)
+//! streams as the in-process simulation (see
+//! [`crate::prng::round_stream`]), the run stays bit-identical to the
+//! local transport while the compressor state lives on the client, where
+//! the paper places it.
 //!
 //! Payload-attack Byzantine workers join as *drones*: the omniscient
 //! adversary of the paper is still simulated server-side (that is what
 //! keeps runs reproducible), but each drone receives the broadcast and
 //! ships a correctly-sized placeholder uplink so measured socket traffic
-//! matches the accounting model. Crash-fault Byzantine workers
+//! matches the accounting model. Crafting needs the dense honest inputs,
+//! so payload attacks over TCP are limited at config validation to the
+//! shared-mask and dense plans. Crash-fault Byzantine workers
 //! (`attack = "none"`, f > 0) stay silent, exactly like the simulation.
 //!
 //! A worker that misses the round deadline, crashes, or violates the
-//! protocol degrades into a dropped contribution (zero gradient, zero
-//! loss, eviction from later rounds) — never a hang.
+//! protocol degrades into a dropped contribution (a zero payload of the
+//! plan's exact shape, zero loss, eviction from later rounds) — never a
+//! hang.
 
-use crate::compression::{mask_from_seed, Mask, RandK};
+use crate::compression::codec::MaskWire;
+use crate::compression::payload::{Payload, PayloadPlan};
+use crate::compression::RandK;
 use crate::config::ExperimentConfig;
 use crate::transport::net::{CoordinatorServer, NetStats};
 use crate::transport::WireMessage;
@@ -98,6 +119,15 @@ pub trait RoundTransport: Send {
         batch: usize,
         n_honest: usize,
     ) -> Result<Vec<Vec<f32>>>;
+
+    /// The typed uplink payloads of the last [`Self::exchange`], one per
+    /// gradient slot, when this transport received them in wire form
+    /// (TCP under a non-dense [`PayloadPlan`]). `None` for the local
+    /// transport — algorithms then run the identical compression
+    /// themselves from the dense gradients.
+    fn round_payloads(&self) -> Option<&[Payload]> {
+        None
+    }
 
     /// Measured socket traffic, if this transport moves real bytes.
     fn net_stats(&self) -> Option<NetStats> {
@@ -245,33 +275,10 @@ impl RoundTransport for LocalTransport {
 
 // -------------------------------------------------------------------- tcp
 
-/// Which messages travel each round (derived from algorithm + k).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum WirePlan {
-    /// Coordinated-mask RoSDHB: `ModelBroadcast` (+seed) down,
-    /// k-value `CompressedGrad` up.
-    SparseGlobal { k: usize },
-    /// Dense algorithms (and k = d): plain broadcast down, `FullGrad` up.
-    Dense,
-}
-
-impl WirePlan {
-    /// The plan implied by a validated config at model dimension `d`.
-    pub fn from_config(cfg: &ExperimentConfig, d: usize) -> WirePlan {
-        let k = RandK::from_frac(d, cfg.k_frac).k;
-        match cfg.algorithm {
-            crate::config::Algorithm::RoSdhb if k < d => {
-                WirePlan::SparseGlobal { k }
-            }
-            _ => WirePlan::Dense,
-        }
-    }
-}
-
 /// Coordinator side of `transport = "tcp"`.
 pub struct TcpTransport {
     server: CoordinatorServer,
-    plan: WirePlan,
+    plan: PayloadPlan,
     d: usize,
     seed: u64,
     /// Gradient slots (honest + data-level Byzantine) — mirrors the
@@ -281,6 +288,10 @@ pub struct TcpTransport {
     /// Byzantine slots stay silent.
     drones_reply: bool,
     timeout: Duration,
+    /// This round's validated uplink payloads, one per gradient slot —
+    /// filled by [`Self::exchange`] under every non-dense plan and handed
+    /// to the algorithm via [`RoundTransport::round_payloads`].
+    payloads: Vec<Payload>,
 }
 
 impl TcpTransport {
@@ -305,69 +316,105 @@ impl TcpTransport {
         )?;
         Ok(TcpTransport {
             server,
-            plan: WirePlan::from_config(cfg, d),
+            plan: PayloadPlan::from_config(cfg, d),
             d,
             seed: cfg.seed,
             n_grad,
             drones_reply,
             timeout: Duration::from_millis(cfg.round_timeout_ms.max(1)),
+            payloads: Vec::new(),
         })
     }
 
-    /// Validate and scatter one worker uplink into its gradient slot.
-    fn apply_uplink(
-        &self,
-        t: u64,
-        bytes: &[u8],
-        mask: Option<&Mask>,
-        out: &mut Vec<f32>,
-    ) -> Result<()> {
-        let msg = WireMessage::decode(bytes, self.d)
-            .map_err(|e| anyhow!("undecodable uplink: {e}"))?;
-        match msg {
-            WireMessage::CompressedGrad {
-                round,
-                values,
-                mask: wire_mask,
-                ..
-            } => {
-                let m = mask.ok_or_else(|| {
-                    anyhow!("CompressedGrad under a dense wire plan")
-                })?;
-                if wire_mask.is_some() {
+    /// Whether the plan hands typed payloads to the algorithm layer
+    /// (every plan except `Dense`, whose uplinks *are* the gradients and
+    /// go straight into `grad_store`).
+    fn delivers_payloads(&self) -> bool {
+        self.plan != PayloadPlan::Dense
+    }
+
+    /// Validate one decoded uplink against the wire plan and extract its
+    /// payload. Anything malformed — wrong round, wrong kind, wrong
+    /// sizes, a mask that is not a sorted k-subset of [0, d) — is an
+    /// `Err` (a dropped contribution), never a panic downstream.
+    fn accept_uplink(&self, t: u64, msg: WireMessage) -> Result<Payload> {
+        let WireMessage::Grad { round, payload, .. } = msg else {
+            return Err(anyhow!("unexpected uplink message: {msg:?}"));
+        };
+        if round != t {
+            return Err(anyhow!("round {round} != current {t}"));
+        }
+        match (self.plan, &payload) {
+            (
+                PayloadPlan::SparseGlobal { k },
+                Payload::Sparse { values, mask: None },
+            ) => {
+                if values.len() != k {
                     return Err(anyhow!(
-                        "per-worker masks are not part of the tcp wire plan"
+                        "payload {} values != k {k}",
+                        values.len()
                     ));
                 }
-                if round != t {
-                    return Err(anyhow!("round {round} != current {t}"));
-                }
-                if values.len() != m.k() {
-                    return Err(anyhow!(
-                        "payload {} values != k {}",
-                        values.len(),
-                        m.k()
-                    ));
-                }
-                // Scatter the raw payload (no α): the algorithm re-gathers
-                // these exact values via `mask.compress`, making the TCP
-                // round bit-identical to the in-process round.
-                out.resize(self.d, 0.0);
-                out.fill(0.0);
-                for (&ci, &v) in m.idx.iter().zip(&values) {
-                    out[ci as usize] = v;
-                }
-                Ok(())
             }
-            WireMessage::FullGrad { round, values, .. } => {
-                if mask.is_some() {
+            (
+                PayloadPlan::SparseLocal { k },
+                Payload::Sparse {
+                    values,
+                    mask: Some(mw),
+                },
+            ) => {
+                check_wire_mask(mw, k, self.d)?;
+                if values.len() != k {
                     return Err(anyhow!(
-                        "FullGrad under the sparse wire plan"
+                        "payload {} values != k {k}",
+                        values.len()
                     ));
                 }
-                if round != t {
-                    return Err(anyhow!("round {round} != current {t}"));
+            }
+            (PayloadPlan::Quantized { s }, Payload::Quantized(b)) => {
+                // block dimension is already pinned to d by the decoder
+                if b.s != s {
+                    return Err(anyhow!(
+                        "quantized payload has s={}, plan says s={s}",
+                        b.s
+                    ));
                 }
+            }
+            (PayloadPlan::DashaDiff { .. }, Payload::Dense { values }) => {
+                if t != 1 {
+                    return Err(anyhow!(
+                        "dense dasha uplink outside the init round"
+                    ));
+                }
+                if values.len() != self.d {
+                    return Err(anyhow!(
+                        "dense init has {} values, model has {}",
+                        values.len(),
+                        self.d
+                    ));
+                }
+            }
+            (
+                PayloadPlan::DashaDiff { k },
+                Payload::Sparse {
+                    values,
+                    mask: Some(mw),
+                },
+            ) => {
+                if t == 1 {
+                    return Err(anyhow!(
+                        "masked dasha difference in the dense init round"
+                    ));
+                }
+                check_wire_mask(mw, k, self.d)?;
+                if values.len() != k {
+                    return Err(anyhow!(
+                        "payload {} values != k {k}",
+                        values.len()
+                    ));
+                }
+            }
+            (PayloadPlan::Dense, Payload::Dense { values }) => {
                 if values.len() != self.d {
                     return Err(anyhow!(
                         "dense gradient has {} values, model has {}",
@@ -375,13 +422,72 @@ impl TcpTransport {
                         self.d
                     ));
                 }
-                out.clear();
-                out.extend_from_slice(&values);
-                Ok(())
             }
-            other => Err(anyhow!("unexpected uplink message: {other:?}")),
+            (plan, p) => {
+                return Err(anyhow!(
+                    "{} payload does not fit wire plan {plan:?}",
+                    p.kind_name()
+                ))
+            }
+        }
+        Ok(payload)
+    }
+
+    /// A zero payload of the plan's exact shape — what a dropped
+    /// contribution degrades into (momentum decays, DASHA estimates hold,
+    /// sums gain nothing; byte metering stays size-true). Shares the one
+    /// constructor with the worker-side drone placeholder.
+    fn zero_payload(&self, t: u64) -> Payload {
+        self.plan.zero_payload(self.d, t <= 1)
+    }
+}
+
+/// A shipped mask must be a strictly sorted k-subset of [0, d) in the
+/// modeled wire size, or the contribution is dropped — `to_mask` (and
+/// every scatter after it) must never see anything else.
+fn check_wire_mask(mw: &MaskWire, k: usize, d: usize) -> Result<()> {
+    match mw {
+        MaskWire::IndexList { d: wd, idx } => {
+            if *wd != d {
+                return Err(anyhow!("mask dimension {wd} != model {d}"));
+            }
+            if idx.len() != k {
+                return Err(anyhow!("mask has {} indices, want {k}", idx.len()));
+            }
+            if !idx.windows(2).all(|w| w[0] < w[1]) {
+                return Err(anyhow!("mask indices not strictly sorted"));
+            }
+            if let Some(&last) = idx.last() {
+                if last as usize >= d {
+                    return Err(anyhow!("mask index {last} >= d {d}"));
+                }
+            }
+        }
+        MaskWire::Bitset { d: wd, bits } => {
+            if *wd != d || bits.len() != d.div_ceil(8) {
+                return Err(anyhow!(
+                    "mask bitset sized {} for d {wd}, want {} for d {d}",
+                    bits.len(),
+                    d.div_ceil(8)
+                ));
+            }
+            let mut count = 0usize;
+            for (byte_i, &b) in bits.iter().enumerate() {
+                for bit in 0..8 {
+                    if b & (1 << bit) != 0 {
+                        if byte_i * 8 + bit >= d {
+                            return Err(anyhow!("mask bit set beyond d {d}"));
+                        }
+                        count += 1;
+                    }
+                }
+            }
+            if count != k {
+                return Err(anyhow!("mask has {count} bits set, want {k}"));
+            }
         }
     }
+    Ok(())
 }
 
 impl RoundTransport for TcpTransport {
@@ -399,25 +505,16 @@ impl RoundTransport for TcpTransport {
         loss_store: &mut [f32],
     ) -> Result<()> {
         debug_assert_eq!(grad_store.len(), self.n_grad);
-        let (msg, mask) = match self.plan {
-            WirePlan::SparseGlobal { k } => {
-                let mask_seed = RandK::round_seed(self.seed, t);
-                (
-                    WireMessage::ModelBroadcast {
-                        round: t,
-                        params: params.to_vec(),
-                        mask_seed,
-                    },
-                    Some(mask_from_seed(mask_seed, self.d, k)),
-                )
-            }
-            WirePlan::Dense => (
-                WireMessage::ModelBroadcastPlain {
-                    round: t,
-                    params: params.to_vec(),
-                },
-                None,
-            ),
+        let msg = match self.plan {
+            PayloadPlan::SparseGlobal { .. } => WireMessage::ModelBroadcast {
+                round: t,
+                params: params.to_vec(),
+                mask_seed: RandK::round_seed(self.seed, t),
+            },
+            _ => WireMessage::ModelBroadcastPlain {
+                round: t,
+                params: params.to_vec(),
+            },
         };
         let n_conn = self.server.n_workers();
         let mut expect = vec![false; n_conn];
@@ -435,6 +532,11 @@ impl RoundTransport for TcpTransport {
                 "all {n_conn} workers are gone — nothing left to train with"
             ));
         }
+        let deliver = self.delivers_payloads();
+        if deliver && self.payloads.len() != self.n_grad {
+            self.payloads =
+                vec![Payload::Dense { values: Vec::new() }; self.n_grad];
+        }
         let mut got = vec![false; self.n_grad];
         for reply in self.server.collect(n_expected, t, self.timeout) {
             let w = reply.worker as usize;
@@ -443,9 +545,23 @@ impl RoundTransport for TcpTransport {
                     if w >= self.n_grad {
                         continue; // drone placeholder: metered, ignored
                     }
-                    match self.apply_uplink(t, &bytes, mask.as_ref(), &mut grad_store[w])
-                    {
-                        Ok(()) => {
+                    let outcome = WireMessage::decode(&bytes, self.d)
+                        .map_err(|e| anyhow!("undecodable uplink: {e}"))
+                        .and_then(|msg| self.accept_uplink(t, msg));
+                    match outcome {
+                        Ok(payload) => {
+                            if deliver {
+                                self.payloads[w] = payload;
+                            } else {
+                                // Dense plan: the payload *is* the
+                                // gradient the algorithm consumes.
+                                let Payload::Dense { values } = payload
+                                else {
+                                    unreachable!("accept_uplink checked kind")
+                                };
+                                grad_store[w].clear();
+                                grad_store[w].extend_from_slice(&values);
+                            }
                             loss_store[w] = loss;
                             got[w] = true;
                         }
@@ -465,13 +581,35 @@ impl RoundTransport for TcpTransport {
         // the connection is gone) — the run keeps moving.
         for (w, ok) in got.iter().enumerate() {
             if !*ok {
-                let g = &mut grad_store[w];
-                g.resize(self.d, 0.0);
-                g.fill(0.0);
+                let substitute = if deliver {
+                    let zp = self.zero_payload(t);
+                    let kind = zp.kind_name();
+                    self.payloads[w] = zp;
+                    kind
+                } else {
+                    let g = &mut grad_store[w];
+                    g.resize(self.d, 0.0);
+                    g.fill(0.0);
+                    "gradient"
+                };
                 loss_store[w] = 0.0;
+                // DASHA is stateful on the client: the worker already
+                // advanced its local estimate when it compressed this
+                // round's difference, while the zero substitute froze the
+                // server copy — the two are permanently offset, so every
+                // later difference from this worker would be silently
+                // biased. Evict it (estimate row freezes: crash-fault
+                // semantics). Stateless plans just lose one round.
+                let note =
+                    if matches!(self.plan, PayloadPlan::DashaDiff { .. }) {
+                        self.server.evict(w);
+                        " (evicted: client-side estimate diverged)"
+                    } else {
+                        ""
+                    };
                 eprintln!(
                     "rosdhb[tcp]: round {t}: worker {w} contributed nothing — \
-                     zero gradient substituted"
+                     zero {substitute} substituted{note}"
                 );
             }
         }
@@ -491,6 +629,14 @@ impl RoundTransport for TcpTransport {
         ))
     }
 
+    fn round_payloads(&self) -> Option<&[Payload]> {
+        if self.delivers_payloads() && self.payloads.len() == self.n_grad {
+            Some(&self.payloads)
+        } else {
+            None
+        }
+    }
+
     fn net_stats(&self) -> Option<NetStats> {
         Some(self.server.stats())
     }
@@ -503,20 +649,39 @@ impl RoundTransport for TcpTransport {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Algorithm;
+    use crate::compression::Mask;
 
     #[test]
-    fn wire_plan_tracks_algorithm_and_k() {
-        let mut cfg = ExperimentConfig::default_mnist_like();
-        cfg.k_frac = 0.1;
-        assert_eq!(
-            WirePlan::from_config(&cfg, 1000),
-            WirePlan::SparseGlobal { k: 100 }
-        );
-        cfg.k_frac = 1.0;
-        assert_eq!(WirePlan::from_config(&cfg, 1000), WirePlan::Dense);
-        cfg.k_frac = 0.1;
-        cfg.algorithm = Algorithm::RobustDgd;
-        assert_eq!(WirePlan::from_config(&cfg, 1000), WirePlan::Dense);
+    fn wire_mask_check_rejects_malformed_shapes() {
+        let d = 64;
+        let mask = Mask::new(d, vec![1, 5, 9]);
+        let ok = MaskWire::choose(&mask);
+        check_wire_mask(&ok, 3, d).unwrap();
+        // wrong k
+        assert!(check_wire_mask(&ok, 4, d).is_err());
+        // unsorted / duplicate indices
+        let bad = MaskWire::IndexList {
+            d,
+            idx: vec![5, 5, 9],
+        };
+        assert!(check_wire_mask(&bad, 3, d).is_err());
+        // out-of-range index
+        let oob = MaskWire::IndexList {
+            d,
+            idx: vec![1, 5, 64],
+        };
+        assert!(check_wire_mask(&oob, 3, d).is_err());
+        // bitset with a padding bit set beyond d
+        let pad = MaskWire::Bitset {
+            d: 10,
+            bits: vec![0b0000_0001, 0b1000_0000],
+        };
+        assert!(check_wire_mask(&pad, 2, 10).is_err());
+        // bitset of the wrong length
+        let short = MaskWire::Bitset {
+            d,
+            bits: vec![0xff],
+        };
+        assert!(check_wire_mask(&short, 8, d).is_err());
     }
 }

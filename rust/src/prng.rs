@@ -11,6 +11,13 @@
 pub struct Pcg64 {
     state: u128,
     inc: u128,
+    /// Stream identity: mixed (seed, stream) captured at construction.
+    /// [`Self::derive`] keys on it so child streams depend on the full
+    /// ancestry — experiment seed included — but *not* on how far this
+    /// stream has advanced (deriving is position-independent, which is
+    /// what keeps the coordinator's and a remote worker's derivations of
+    /// the same child in lockstep).
+    id: u64,
 }
 
 const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
@@ -20,26 +27,37 @@ impl Pcg64 {
     /// sequences; unequal streams never collide.
     pub fn new(seed: u64, stream: u64) -> Self {
         let inc = (((stream as u128) << 64 | 0xda3e_39cb_94b9_5bdb) << 1) | 1;
-        let mut r = Pcg64 { state: 0, inc };
+        // splitmix over (seed, stream) — the derive key for this stream
+        let mut z = seed
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            .wrapping_add(stream.rotate_left(32));
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        let id = z ^ (z >> 31);
+        let mut r = Pcg64 { state: 0, inc, id };
         r.next_u64();
         r.state = r.state.wrapping_add(seed as u128);
         r.next_u64();
         r
     }
 
-    /// Derive a child stream keyed by `(tag, a, b)` — used for per-round /
-    /// per-worker randomness (`tag` disambiguates purposes).
+    /// Derive a child stream keyed by `(tag, a, b)` and this stream's
+    /// identity — used for per-round / per-worker randomness (`tag`
+    /// disambiguates purposes). Position-independent: deriving before or
+    /// after drawing from `self` yields the same child.
     pub fn derive(&self, tag: u64, a: u64, b: u64) -> Pcg64 {
         // splitmix-style mixing of the key into (seed, stream).
         let mut z = tag
             .wrapping_mul(0x9e37_79b9_7f4a_7c15)
             .wrapping_add(a.rotate_left(17))
             .wrapping_add(b.rotate_left(43))
-            .wrapping_add(self.inc as u64);
+            .wrapping_add(self.id);
         z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
         z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
         let seed = z ^ (z >> 31);
-        let stream = tag ^ a.rotate_left(7) ^ b.rotate_left(29);
+        let stream = tag
+            ^ a.rotate_left(7)
+            ^ b.rotate_left(29)
+            ^ self.id.rotate_left(13);
         Pcg64::new(seed, stream)
     }
 
@@ -145,6 +163,17 @@ impl Pcg64 {
     }
 }
 
+/// The round-scoped RNG base stream of an experiment — the parent from
+/// which all per-(purpose, round, worker) streams derive via
+/// [`Pcg64::derive`]. The coordinator's round loop and every remote
+/// worker's [`CompressorState`][crate::compression::CompressorState] call
+/// this with the shared experiment seed, which is what lets compression
+/// move to the client while staying bit-identical to the server-side
+/// simulation.
+pub fn round_stream(experiment_seed: u64) -> Pcg64 {
+    Pcg64::new(experiment_seed, 0).derive(0x726f_756e, 1, 0) // "roun"
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -248,6 +277,47 @@ mod tests {
         for (i, &c) in counts.iter().enumerate() {
             let z = (c as f64 - expect) / (expect * (1.0 - k as f64 / d as f64)).sqrt();
             assert!(z.abs() < 5.0, "coord {i}: count {c} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn round_stream_matches_trainer_derivation() {
+        // round_stream is definitionally the trainer's round RNG; the
+        // derived per-(tag, round, worker) children must agree with
+        // children derived from that construction.
+        let a = round_stream(42);
+        let b = Pcg64::new(42, 0).derive(0x726f_756e, 1, 0);
+        let mut ca = a.derive(0x6c6d_736b, 7, 3);
+        let mut cb = b.derive(0x6c6d_736b, 7, 3);
+        for _ in 0..16 {
+            assert_eq!(ca.next_u64(), cb.next_u64());
+        }
+    }
+
+    #[test]
+    fn derived_streams_depend_on_the_experiment_seed() {
+        // multi-seed replicates must draw independent compression /
+        // attack randomness: the same (tag, round, worker) child under
+        // two experiment seeds is a different stream.
+        let mut a = round_stream(1).derive(0x6c6d_736b, 7, 3);
+        let mut b = round_stream(2).derive(0x6c6d_736b, 7, 3);
+        let xa: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let xb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(xa, xb);
+    }
+
+    #[test]
+    fn derive_is_position_independent() {
+        // the coordinator derives per-(round, worker) children from an
+        // rng that has already drawn (attack noise); a remote worker
+        // derives the same children from a pristine clone — both must
+        // agree, so derive may key on identity but never on position.
+        let mut p = Pcg64::new(5, 0);
+        let mut before = p.derive(9, 1, 2);
+        p.next_u64();
+        let mut after = p.derive(9, 1, 2);
+        for _ in 0..8 {
+            assert_eq!(before.next_u64(), after.next_u64());
         }
     }
 

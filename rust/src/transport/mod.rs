@@ -6,14 +6,19 @@
 //! ([`WireMessage::encode`]), and the [`ByteMeter`] sums exactly
 //! `encode().len()` per message (tests pin `encoded_len == encode().len()`).
 //!
-//! Accounting model (DESIGN.md §5):
-//! * **Downlink** (server → workers, broadcast): model `d·4` bytes + 8-byte
-//!   round header + 8-byte mask seed under global sparsification (the
+//! Accounting model:
+//! * **Downlink** (server → workers, broadcast): model `d·4` bytes + the
+//!   message header + an 8-byte mask seed under global sparsification (the
 //!   whole mask is never shipped — both ends re-derive it from the seed).
-//! * **Uplink** (worker → server): `k·4` payload bytes + header; under
-//!   *local* sparsification the worker must also ship its mask, encoded by
-//!   the cheaper of bitset (`⌈d/8⌉`) or index-list (`k·4`) codecs
-//!   (`compression::codec`).
+//! * **Uplink** (worker → server): one [`WireMessage::Grad`] per worker —
+//!   a message header plus the body of a typed
+//!   [`Payload`][crate::compression::payload::Payload]. The payload codec
+//!   ([`crate::compression::payload`]) is the single byte-layout
+//!   authority: sparse bodies are `[u32 count][k·f32][mask?]` (mask via
+//!   the cheaper of the index-list / bitset codecs in
+//!   `compression::codec`), dense bodies are `[u32 count][d·f32]`, and
+//!   quantized bodies are packed QSGD blocks
+//!   ([`QuantBlock`][crate::compression::payload::QuantBlock]).
 //!
 //! The format is no longer simulation-only: [`WireMessage::decode`] is the
 //! exact inverse of [`WireMessage::encode`], and [`net`] runs the same
@@ -22,10 +27,16 @@
 
 pub mod net;
 
-use crate::compression::codec::MaskWire;
+use crate::compression::payload::{Payload, QuantBlock};
 
 /// Message header: 8-byte round id + 2-byte type tag + 2-byte worker id.
 pub const HEADER_BYTES: usize = 12;
+
+/// First wire tag of the uplink family; tag = `GRAD_TAG_BASE +
+/// payload.kind()`, so sparse (2) and dense (3) uplinks keep the byte
+/// layout of the pre-payload wire format and quantized uplinks extend it
+/// at tag 4.
+const GRAD_TAG_BASE: u16 = 2;
 
 /// All messages that cross the (simulated or real) network.
 #[derive(Clone, Debug, PartialEq)]
@@ -38,22 +49,16 @@ pub enum WireMessage {
         mask_seed: u64,
     },
     /// Server → all workers when workers choose their own masks (local
-    /// sparsification / no sparsification).
+    /// sparsification / quantization / no compression).
     ModelBroadcastPlain { round: u64, params: Vec<f32> },
-    /// Worker → server: the k selected coordinates, in mask order.
-    /// `mask` is `Some` only under local sparsification (server cannot
-    /// re-derive it).
-    CompressedGrad {
+    /// Worker → server: one typed compressed-gradient payload. The wire
+    /// tag encodes the payload kind; the body is exactly the payload
+    /// body, so the codec in [`crate::compression::payload`] is the
+    /// single byte-layout authority for every uplink.
+    Grad {
         round: u64,
         worker: u16,
-        values: Vec<f32>,
-        mask: Option<MaskWire>,
-    },
-    /// Worker → server: dense gradient (no compression baselines).
-    FullGrad {
-        round: u64,
-        worker: u16,
-        values: Vec<f32>,
+        payload: Payload,
     },
 }
 
@@ -67,30 +72,24 @@ impl WireMessage {
             WireMessage::ModelBroadcastPlain { params, .. } => {
                 HEADER_BYTES + 4 * params.len()
             }
-            WireMessage::CompressedGrad { values, mask, .. } => {
-                HEADER_BYTES
-                    + 4
-                    + 4 * values.len()
-                    + mask.as_ref().map_or(0, |m| m.encoded_len())
-            }
-            WireMessage::FullGrad { values, .. } => {
-                HEADER_BYTES + 4 + 4 * values.len()
+            WireMessage::Grad { payload, .. } => {
+                HEADER_BYTES + payload.body_len()
             }
         }
     }
 
-    /// Full serialization (little-endian) — used by tests and by the
-    /// persisted-trace tooling; the simulator itself meters via
-    /// [`Self::encoded_len`].
+    /// Full serialization (little-endian) — the bytes the TCP runtime
+    /// moves; the simulator meters via [`Self::encoded_len`].
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.encoded_len());
         let (tag, round, worker): (u16, u64, u16) = match self {
             WireMessage::ModelBroadcast { round, .. } => (0, *round, 0),
             WireMessage::ModelBroadcastPlain { round, .. } => (1, *round, 0),
-            WireMessage::CompressedGrad { round, worker, .. } => {
-                (2, *round, *worker)
-            }
-            WireMessage::FullGrad { round, worker, .. } => (3, *round, *worker),
+            WireMessage::Grad {
+                round,
+                worker,
+                payload,
+            } => (GRAD_TAG_BASE + payload.kind() as u16, *round, *worker),
         };
         out.extend_from_slice(&round.to_le_bytes());
         out.extend_from_slice(&tag.to_le_bytes());
@@ -109,20 +108,8 @@ impl WireMessage {
                     out.extend_from_slice(&v.to_le_bytes());
                 }
             }
-            WireMessage::CompressedGrad { values, mask, .. } => {
-                out.extend_from_slice(&(values.len() as u32).to_le_bytes());
-                for v in values {
-                    out.extend_from_slice(&v.to_le_bytes());
-                }
-                if let Some(m) = mask {
-                    m.encode_into(&mut out);
-                }
-            }
-            WireMessage::FullGrad { values, .. } => {
-                out.extend_from_slice(&(values.len() as u32).to_le_bytes());
-                for v in values {
-                    out.extend_from_slice(&v.to_le_bytes());
-                }
+            WireMessage::Grad { payload, .. } => {
+                payload.encode_body_into(&mut out);
             }
         }
         debug_assert_eq!(out.len(), self.encoded_len());
@@ -131,11 +118,11 @@ impl WireMessage {
 
     /// Exact inverse of [`Self::encode`] over one complete message.
     ///
-    /// `d` is the model dimension, needed only to rebuild the mask of a
-    /// local-sparsification `CompressedGrad` (mask payloads do not carry
-    /// `d` on the wire — both ends know it). Malformed or truncated input
-    /// returns `Err`, never panics; trailing bytes are rejected so a
-    /// length-prefixed frame must contain exactly one message.
+    /// `d` is the model dimension, needed only to rebuild uplink payloads
+    /// (masks and quantized blocks do not carry `d` on the wire — both
+    /// ends know it). Malformed or truncated input returns `Err`, never
+    /// panics; trailing bytes are rejected so a length-prefixed frame
+    /// must contain exactly one message.
     pub fn decode(buf: &[u8], d: usize) -> Result<WireMessage, String> {
         if buf.len() < HEADER_BYTES {
             return Err(format!(
@@ -164,39 +151,13 @@ impl WireMessage {
                 round,
                 params: decode_f32s(body, "ModelBroadcastPlain params")?,
             }),
-            2 => {
-                let (values, rest) = decode_counted_f32s(body, "CompressedGrad")?;
-                let mask = if rest.is_empty() {
-                    None
-                } else {
-                    let (wire, used) = MaskWire::decode(rest, d)?;
-                    if used != rest.len() {
-                        return Err(format!(
-                            "CompressedGrad: {} trailing bytes after mask",
-                            rest.len() - used
-                        ));
-                    }
-                    Some(wire)
-                };
-                Ok(WireMessage::CompressedGrad {
+            t if t >= GRAD_TAG_BASE && t - GRAD_TAG_BASE <= u8::MAX as u16 => {
+                let kind = (t - GRAD_TAG_BASE) as u8;
+                let payload = Payload::decode_body(kind, body, d)?;
+                Ok(WireMessage::Grad {
                     round,
                     worker,
-                    values,
-                    mask,
-                })
-            }
-            3 => {
-                let (values, rest) = decode_counted_f32s(body, "FullGrad")?;
-                if !rest.is_empty() {
-                    return Err(format!(
-                        "FullGrad: {} trailing bytes",
-                        rest.len()
-                    ));
-                }
-                Ok(WireMessage::FullGrad {
-                    round,
-                    worker,
-                    values,
+                    payload,
                 })
             }
             t => Err(format!("unknown wire tag {t}")),
@@ -204,10 +165,7 @@ impl WireMessage {
     }
 
     pub fn is_uplink(&self) -> bool {
-        matches!(
-            self,
-            WireMessage::CompressedGrad { .. } | WireMessage::FullGrad { .. }
-        )
+        matches!(self, WireMessage::Grad { .. })
     }
 }
 
@@ -220,27 +178,6 @@ fn decode_f32s(buf: &[u8], what: &str) -> Result<Vec<f32>, String> {
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect())
-}
-
-/// Parse a `u32` count followed by that many f32s; returns the values and
-/// the unconsumed tail.
-fn decode_counted_f32s<'a>(
-    buf: &'a [u8],
-    what: &str,
-) -> Result<(Vec<f32>, &'a [u8]), String> {
-    if buf.len() < 4 {
-        return Err(format!("{what}: missing value count"));
-    }
-    let n = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
-    let need = 4 + 4 * n;
-    if buf.len() < need {
-        return Err(format!(
-            "{what}: truncated — want {n} values ({need} bytes), have {}",
-            buf.len()
-        ));
-    }
-    let values = decode_f32s(&buf[4..need], what)?;
-    Ok((values, &buf[need..]))
 }
 
 /// Cumulative byte counters for one experiment.
@@ -275,8 +212,7 @@ impl ByteMeter {
     pub fn record_uplink(&mut self, msg: &WireMessage) {
         debug_assert!(msg.is_uplink());
         let worker = match msg {
-            WireMessage::CompressedGrad { worker, .. }
-            | WireMessage::FullGrad { worker, .. } => *worker as usize,
+            WireMessage::Grad { worker, .. } => *worker as usize,
             _ => unreachable!(),
         };
         let len = msg.encoded_len() as u64;
@@ -287,8 +223,9 @@ impl ByteMeter {
     }
 
     /// Hot-path variant: record an uplink by its precomputed wire size
-    /// (see [`compressed_grad_len`] / [`full_grad_len`]) without building
-    /// a message. Tests pin these helpers against `encode().len()`.
+    /// (see [`payload_uplink_len`] / [`compressed_grad_len`] /
+    /// [`full_grad_len`] / [`quant_grad_len`]) without building a
+    /// message. Tests pin these helpers against `encode().len()`.
     pub fn record_uplink_sized(&mut self, worker: usize, bytes: usize) {
         self.uplink += bytes as u64;
         if worker < self.per_worker_uplink.len() {
@@ -306,16 +243,27 @@ impl ByteMeter {
     }
 }
 
-/// Wire size of a `CompressedGrad` with `k` payload floats and an optional
-/// mask of `mask_bytes` (from [`MaskWire::encoded_len`] or
+/// Wire size of any [`WireMessage::Grad`] carrying `p` — the one-line
+/// bridge between the typed payload and the uplink byte model.
+pub fn payload_uplink_len(p: &Payload) -> usize {
+    HEADER_BYTES + p.body_len()
+}
+
+/// Wire size of a sparse uplink with `k` payload floats and an optional
+/// mask of `mask_bytes` (from `MaskWire::encoded_len` or
 /// [`crate::compression::codec::mask_wire_len`]).
 pub fn compressed_grad_len(k: usize, mask_bytes: usize) -> usize {
     HEADER_BYTES + 4 + 4 * k + mask_bytes
 }
 
-/// Wire size of a dense `FullGrad` of `d` floats.
+/// Wire size of a dense uplink of `d` floats.
 pub fn full_grad_len(d: usize) -> usize {
     HEADER_BYTES + 4 + 4 * d
+}
+
+/// Wire size of a QSGD-quantized uplink at dimension `d`, `s` levels.
+pub fn quant_grad_len(d: usize, s: u32) -> usize {
+    HEADER_BYTES + QuantBlock::body_len(d, s)
 }
 
 /// Wire size of a `ModelBroadcast{Plain}` of `d` parameters.
@@ -327,10 +275,49 @@ pub fn broadcast_len(d: usize, with_mask_seed: bool) -> usize {
 mod tests {
     use super::*;
     use crate::compression::codec::MaskWire;
+    use crate::compression::payload::QuantBlock;
+
+    fn sample_grads(d: usize) -> Vec<WireMessage> {
+        let mask = MaskWire::index_list(&[1, 5, 9], d);
+        vec![
+            WireMessage::Grad {
+                round: 3,
+                worker: 7,
+                payload: Payload::Sparse {
+                    values: vec![0.5; 10],
+                    mask: None,
+                },
+            },
+            WireMessage::Grad {
+                round: 3,
+                worker: 7,
+                payload: Payload::Sparse {
+                    values: vec![0.5; 3],
+                    mask: Some(mask),
+                },
+            },
+            WireMessage::Grad {
+                round: 1,
+                worker: 0,
+                payload: Payload::Dense {
+                    values: vec![0.0; 64],
+                },
+            },
+            WireMessage::Grad {
+                round: 9,
+                worker: 2,
+                payload: Payload::Quantized(QuantBlock {
+                    s: 4,
+                    norm: 1.5,
+                    levels: vec![0, -3, 4, 1, 0, 0, -1],
+                }),
+            },
+        ]
+    }
 
     #[test]
     fn encoded_len_matches_encode() {
-        let msgs = vec![
+        let mut msgs = vec![
             WireMessage::ModelBroadcast {
                 round: 3,
                 params: vec![1.0; 100],
@@ -340,24 +327,8 @@ mod tests {
                 round: 3,
                 params: vec![1.0; 100],
             },
-            WireMessage::CompressedGrad {
-                round: 3,
-                worker: 7,
-                values: vec![0.5; 10],
-                mask: None,
-            },
-            WireMessage::CompressedGrad {
-                round: 3,
-                worker: 7,
-                values: vec![0.5; 10],
-                mask: Some(MaskWire::index_list(&[1, 5, 9], 100)),
-            },
-            WireMessage::FullGrad {
-                round: 1,
-                worker: 0,
-                values: vec![0.0; 64],
-            },
         ];
+        msgs.extend(sample_grads(100));
         for m in msgs {
             assert_eq!(m.encode().len(), m.encoded_len(), "{m:?}");
         }
@@ -365,36 +336,30 @@ mod tests {
 
     #[test]
     fn decode_is_exact_inverse_of_encode() {
-        let d = 100;
+        // d must match each payload: sparse/dense use d=100/64 freely
+        // (masks carry their own indices), the quant block has d=7.
         let msgs = vec![
-            WireMessage::ModelBroadcast {
-                round: 9,
-                params: vec![0.25; 17],
-                mask_seed: 0xdead_beef,
-            },
-            WireMessage::ModelBroadcastPlain {
-                round: 1,
-                params: vec![-1.5; 3],
-            },
-            WireMessage::CompressedGrad {
-                round: 7,
-                worker: 11,
-                values: vec![2.0, -3.0],
-                mask: None,
-            },
-            WireMessage::CompressedGrad {
-                round: 7,
-                worker: 11,
-                values: vec![2.0, -3.0, 4.0],
-                mask: Some(MaskWire::index_list(&[0, 50, 99], d)),
-            },
-            WireMessage::FullGrad {
-                round: 2,
-                worker: 4,
-                values: vec![0.5; 8],
-            },
+            (
+                100usize,
+                WireMessage::ModelBroadcast {
+                    round: 9,
+                    params: vec![0.25; 17],
+                    mask_seed: 0xdead_beef,
+                },
+            ),
+            (
+                100,
+                WireMessage::ModelBroadcastPlain {
+                    round: 1,
+                    params: vec![-1.5; 3],
+                },
+            ),
+            (100, sample_grads(100)[0].clone()),
+            (100, sample_grads(100)[1].clone()),
+            (64, sample_grads(100)[2].clone()),
+            (7, sample_grads(100)[3].clone()),
         ];
-        for m in msgs {
+        for (d, m) in msgs {
             let bytes = m.encode();
             assert_eq!(WireMessage::decode(&bytes, d).unwrap(), m, "{m:?}");
             // any 1-byte truncation must be a clean error, not a panic
@@ -403,7 +368,18 @@ mod tests {
                 "{m:?}"
             );
         }
-        assert!(WireMessage::decode(&[], d).is_err());
+        assert!(WireMessage::decode(&[], 10).is_err());
+    }
+
+    #[test]
+    fn grad_tags_track_payload_kinds() {
+        // the wire tag is 2 + payload kind, preserving the pre-payload
+        // byte layout for sparse (2) and dense (3) uplinks.
+        for (msg, want_tag) in sample_grads(100).iter().zip([2u8, 2, 3, 4]) {
+            let bytes = msg.encode();
+            assert_eq!(bytes[8], want_tag, "{msg:?}");
+            assert_eq!(bytes[9], 0);
+        }
     }
 
     #[test]
@@ -418,11 +394,13 @@ mod tests {
         assert_eq!(meter.downlink, 3 * bcast.encoded_len() as u64);
         assert_eq!(meter.uplink, 0);
 
-        let up = WireMessage::CompressedGrad {
+        let up = WireMessage::Grad {
             round: 0,
             worker: 2,
-            values: vec![1.0; 4],
-            mask: None,
+            payload: Payload::Sparse {
+                values: vec![1.0; 4],
+                mask: None,
+            },
         };
         meter.record_uplink(&up);
         assert_eq!(meter.uplink, up.encoded_len() as u64);
@@ -431,18 +409,42 @@ mod tests {
     }
 
     #[test]
+    fn sized_helpers_match_real_messages() {
+        for msg in sample_grads(100) {
+            let WireMessage::Grad { payload, .. } = &msg else {
+                unreachable!()
+            };
+            assert_eq!(
+                payload_uplink_len(payload),
+                msg.encoded_len(),
+                "{msg:?}"
+            );
+        }
+        assert_eq!(
+            compressed_grad_len(10, 0),
+            sample_grads(100)[0].encoded_len()
+        );
+        assert_eq!(full_grad_len(64), sample_grads(100)[2].encoded_len());
+        assert_eq!(quant_grad_len(7, 4), sample_grads(100)[3].encoded_len());
+    }
+
+    #[test]
     fn compression_saves_bytes_on_the_wire() {
         // the point of the whole paper, at the message level:
-        let dense = WireMessage::FullGrad {
+        let dense = WireMessage::Grad {
             round: 0,
             worker: 0,
-            values: vec![0.0; 11_809],
+            payload: Payload::Dense {
+                values: vec![0.0; 11_809],
+            },
         };
-        let sparse = WireMessage::CompressedGrad {
+        let sparse = WireMessage::Grad {
             round: 0,
             worker: 0,
-            values: vec![0.0; 118], // k/d = 0.01
-            mask: None,             // global mask: seed travels downlink
+            payload: Payload::Sparse {
+                values: vec![0.0; 118], // k/d = 0.01
+                mask: None,             // global mask: seed travels downlink
+            },
         };
         let ratio = sparse.encoded_len() as f64 / dense.encoded_len() as f64;
         assert!(ratio < 0.011, "ratio={ratio}");

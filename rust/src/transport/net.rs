@@ -36,8 +36,9 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// Bumped on any framing or handshake change.
-pub const PROTOCOL_VERSION: u16 = 1;
+/// Bumped on any framing or handshake change (2: typed `Grad` uplinks —
+/// quantized payloads joined the wire family).
+pub const PROTOCOL_VERSION: u16 = 2;
 
 /// "RSDB" — rejects random port scanners / wrong services at JOIN time.
 const MAGIC: u32 = 0x5244_5342;
@@ -414,6 +415,18 @@ impl CoordinatorServer {
         self.conns.iter().filter(|c| c.alive).count()
     }
 
+    /// Mark a worker's connection dead: skipped by future broadcasts,
+    /// its late replies discarded. For *stateful* wire plans (DASHA
+    /// difference compression) a dropped contribution leaves the
+    /// worker's client-side compressor state ahead of the server's copy,
+    /// so the worker must not keep contributing from a diverged
+    /// estimate — the caller evicts it instead.
+    pub fn evict(&mut self, worker: usize) {
+        if let Some(c) = self.conns.get_mut(worker) {
+            c.alive = false;
+        }
+    }
+
     /// Send `BYE` to every live worker and join all I/O threads.
     pub fn shutdown(&mut self) {
         for conn in &mut self.conns {
@@ -628,6 +641,7 @@ impl WorkerClient {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compression::payload::Payload;
     use std::thread;
 
     #[test]
@@ -707,10 +721,12 @@ mod tests {
                 };
                 c.send_grad(
                     1.5,
-                    &WireMessage::FullGrad {
+                    &WireMessage::Grad {
                         round,
                         worker: c.worker_id,
-                        values: vec![2.0; 16],
+                        payload: Payload::Dense {
+                            values: vec![2.0; 16],
+                        },
                     },
                 )
                 .unwrap();
@@ -728,7 +744,7 @@ mod tests {
         let (loss, bytes) = replies[0].result.as_ref().unwrap();
         assert_eq!(*loss, 1.5);
         let up = WireMessage::decode(bytes, 16).unwrap();
-        assert!(matches!(up, WireMessage::FullGrad { round: 1, .. }));
+        assert!(matches!(up, WireMessage::Grad { round: 1, .. }));
         // wire accounting: one broadcast + one uplink, exactly encoded_len
         let stats = server.stats();
         assert_eq!(stats.wire_downlink, msg.encoded_len() as u64);
@@ -749,10 +765,12 @@ mod tests {
             while let Some(_msg) = c.recv(4).unwrap() {
                 c.send_grad(
                     0.0,
-                    &WireMessage::FullGrad {
+                    &WireMessage::Grad {
                         round: 999,
                         worker: c.worker_id,
-                        values: vec![0.0; 4],
+                        payload: Payload::Dense {
+                            values: vec![0.0; 4],
+                        },
                     },
                 )
                 .unwrap();

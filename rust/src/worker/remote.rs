@@ -1,17 +1,25 @@
 //! Worker-process runtime for `transport = "tcp"` (`rosdhb join`).
 //!
 //! A remote worker rebuilds its local state — data shard, private RNG
-//! stream, wire plan — purely from the shared experiment config, via the
-//! same [`build_training_workers`][crate::coordinator::build_training_workers]
+//! stream, compressor state — purely from the shared experiment config,
+//! via the same
+//! [`build_training_workers`][crate::coordinator::build_training_workers]
 //! the coordinator uses (the JOIN handshake's config fingerprint refuses
 //! mismatched configs). Rendezvous assigns the worker id, which selects
 //! the slot:
 //!
 //! * slots `[0, n_grad)` — gradient workers (honest shards, then
 //!   label-flip-poisoned Byzantine clones when the attack is data-level):
-//!   per broadcast, compute the dense batch gradient, compress onto the
-//!   shared mask when one was announced, and uplink
-//!   `CompressedGrad`/`FullGrad` plus the scalar loss;
+//!   per broadcast, compute the dense batch gradient, compress it through
+//!   the worker-side [`CompressorState`] — shared-mask gather, own-mask
+//!   RandK (shipping a [`MaskWire`][crate::compression::codec::MaskWire]),
+//!   QSGD quantization, or a DASHA difference against the locally tracked
+//!   gradient estimate — and uplink one typed
+//!   [`WireMessage::Grad`] plus the scalar loss. The compressor draws its
+//!   randomness from the same per-(round, worker) streams the
+//!   coordinator's in-process simulation derives
+//!   ([`crate::prng::round_stream`]), so a TCP run reproduces the local
+//!   run bit for bit;
 //! * slots `[n_grad, n)` — Byzantine slots under payload attacks join as
 //!   *drones*: the paper's omniscient adversary is simulated server-side
 //!   (keeping runs reproducible), so a drone uplinks a correctly-sized
@@ -20,7 +28,7 @@
 //!   stay silent (crash-fault), exactly like the simulation.
 
 use crate::attacks::{self, AttackKind};
-use crate::compression::{mask_from_seed, RandK};
+use crate::compression::CompressorState;
 use crate::config::{Engine, ExperimentConfig};
 use crate::coordinator::build_training_workers;
 use crate::model::MlpSpec;
@@ -70,7 +78,11 @@ pub fn join_run(
 
     let mut engine = NativeEngine::new(MlpSpec::default(), cfg.batch.max(1));
     let d = engine.p();
-    let k = RandK::from_frac(d, cfg.k_frac).k;
+    // The compressor state lives here, on the client: per-worker RNG
+    // stream derivation plus any residue the algorithm keeps worker-side
+    // (DASHA's gradient-estimate copy).
+    let mut compressor =
+        CompressorState::from_config(cfg, d).map_err(|e| anyhow!(e))?;
 
     // Gradient slot or Byzantine slot?
     let (mut worker, role): (Option<HonestWorker>, &'static str) = {
@@ -89,7 +101,6 @@ pub fn join_run(
     let drone_replies = role == "drone";
 
     let mut grad = vec![0f32; d];
-    let mut payload: Vec<f32> = Vec::with_capacity(k);
     let mut rounds = 0u64;
     loop {
         let Some(msg) = client.recv(d)? else { break };
@@ -116,47 +127,28 @@ pub fn join_run(
         {
             let loss =
                 w.compute_grad_into(&mut engine, &params, cfg.batch, &mut grad)?;
-            match mask_seed {
-                // shared-mask round: uplink only the k masked coordinates
-                Some(seed) if k < d => {
-                    let mask = mask_from_seed(seed, d, k);
-                    mask.compress_into(&grad, &mut payload);
-                    Some((
-                        loss,
-                        WireMessage::CompressedGrad {
-                            round,
-                            worker: client.worker_id,
-                            values: payload.clone(),
-                            mask: None,
-                        },
-                    ))
-                }
-                _ => Some((
-                    loss,
-                    WireMessage::FullGrad {
-                        round,
-                        worker: client.worker_id,
-                        values: grad.clone(),
-                    },
-                )),
-            }
+            let payload = compressor
+                .compress(round, slot as u64, mask_seed, &grad)
+                .map_err(|e| anyhow!(e))?;
+            Some((
+                loss,
+                WireMessage::Grad {
+                    round,
+                    worker: client.worker_id,
+                    payload,
+                },
+            ))
         } else if drone_replies {
             // placeholder sized exactly like an honest uplink; the server
             // substitutes the crafted adversarial payload
-            let msg = match mask_seed {
-                Some(_) if k < d => WireMessage::CompressedGrad {
+            Some((
+                0.0,
+                WireMessage::Grad {
                     round,
                     worker: client.worker_id,
-                    values: vec![0.0; k],
-                    mask: None,
+                    payload: compressor.placeholder(mask_seed),
                 },
-                _ => WireMessage::FullGrad {
-                    round,
-                    worker: client.worker_id,
-                    values: vec![0.0; d],
-                },
-            };
-            Some((0.0, msg))
+            ))
         } else {
             None // crash-fault Byzantine slot: receive, never send
         };

@@ -1,0 +1,119 @@
+//! Allocation-profile pin for the value-level round engine (§Perf).
+//!
+//! The payload subsystem's acceptance bar: the RoSDHB-U steady-state
+//! round consumes compressed payloads **in place** and must not allocate
+//! a dense d-length buffer per worker per round — the old
+//! `UnbiasedCompressor::roundtrip` path densified every compressed
+//! gradient into a fresh/zero-filled d-vector before `scale_add`. A
+//! counting global allocator measures the real allocation traffic of the
+//! round loop; the budget below leaves room for the aggregator's output
+//! vector (one d-length allocation per round, not per worker) and small
+//! bookkeeping, but not for per-worker densification.
+
+use rosdhb::aggregators;
+use rosdhb::algorithms::rosdhb_u::RoSdhbU;
+use rosdhb::algorithms::{Algorithm, RoundEnv};
+use rosdhb::attacks::AttackKind;
+use rosdhb::compression::CompressorSpec;
+use rosdhb::prng::Pcg64;
+use rosdhb::transport::ByteMeter;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+// SAFETY: pure delegation to `System`; the counter is a relaxed atomic.
+// `realloc` is not overridden, so the default implementation routes
+// growth through `self.alloc` and gets counted too.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Bytes allocated (anywhere in the process) while `f` runs.
+fn allocated_during<F: FnMut()>(mut f: F) -> u64 {
+    let before = BYTES.load(Ordering::Relaxed);
+    f();
+    BYTES.load(Ordering::Relaxed) - before
+}
+
+/// Drive `rounds` steady-state RoSDHB-U rounds and return the mean bytes
+/// allocated per round. Scratch buffers are grown during a warmup that is
+/// excluded from the measurement.
+fn steady_state_bytes_per_round(spec: CompressorSpec, d: usize, n: usize) -> u64 {
+    let aggregator = aggregators::parse_spec("mean", 0).unwrap();
+    let attack = AttackKind::None;
+    let mut meter = ByteMeter::new(n);
+    let mut rng = Pcg64::new(11, 11);
+    let mut grads = vec![vec![0f32; d]; n];
+    for g in grads.iter_mut() {
+        rng.fill_gaussian(g, 1.0);
+    }
+    let mut alg = RoSdhbU::new(d, n, spec);
+    let mut run = |t0: u64, rounds: u64| {
+        for t in t0..t0 + rounds {
+            let mut env = RoundEnv {
+                d,
+                n_honest: n,
+                n_byz: 0,
+                seed: 42,
+                k: d,
+                beta: 0.9,
+                aggregator: aggregator.as_ref(),
+                attack: &attack,
+                meter: &mut meter,
+                rng: &mut rng,
+                payloads: None,
+            };
+            let r = alg.round(t, &grads, &[], &mut env);
+            std::hint::black_box(&r);
+        }
+    };
+    run(1, 3); // warmup: scratch (levels / payload values) reaches capacity
+    let rounds = 8u64;
+    allocated_during(|| run(4, rounds)) / rounds
+}
+
+#[test]
+fn rosdhb_u_round_does_not_densify_per_worker() {
+    let (d, n) = (4096usize, 8usize);
+    let dense_per_worker = (n * d * 4) as u64;
+
+    // QSGD: quantize into a reused level buffer, absorb in place. The
+    // only d-length allocation left is the aggregate output (+ the round
+    // result handed back to the caller) — far below one densified
+    // d-buffer per worker, which is the regression this test pins.
+    let qsgd = steady_state_bytes_per_round(
+        CompressorSpec::Qsgd { s: 4 },
+        d,
+        n,
+    );
+    assert!(
+        qsgd < 3 * (d * 4) as u64,
+        "qsgd round allocated {qsgd} B — more than ~2 d-vectors; \
+         the in-place absorb path must not densify (n·d·4 = {dense_per_worker})"
+    );
+
+    // RandK (k/d = 1/64): masks are worker-drawn, O(k) each (sparse
+    // Fisher–Yates swap table); per-worker densification would add n·d·4
+    // bytes on top, so total traffic must stay below that line.
+    let k = d / 64;
+    let randk =
+        steady_state_bytes_per_round(CompressorSpec::RandK { k }, d, n);
+    assert!(
+        randk < dense_per_worker,
+        "randk round allocated {randk} B ≥ {dense_per_worker} B \
+         (n dense buffers) — payloads are being densified"
+    );
+}

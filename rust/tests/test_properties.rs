@@ -12,6 +12,7 @@
 
 use rosdhb::aggregators::{self, empirical_kappa, Aggregator};
 use rosdhb::compression::codec::MaskWire;
+use rosdhb::compression::payload::{Payload, QuantBlock};
 use rosdhb::compression::{Mask, RandK};
 use rosdhb::config::toml::TomlDoc;
 use rosdhb::prng::Pcg64;
@@ -153,23 +154,111 @@ fn prop_mask_codec_roundtrip() {
     }
 }
 
+/// Randomized payloads of every kind at (d, k, s) — shared by the payload
+/// and wire-message round-trip sweeps.
+fn random_payloads(rng: &mut Pcg64, d: usize, k: usize, s: u32) -> Vec<Payload> {
+    let mut gauss = |n: usize| {
+        let mut v = vec![0f32; n];
+        rng.fill_gaussian(&mut v, 2.0);
+        v
+    };
+    let values = gauss(k);
+    let dense = gauss(d);
+    let mask = Mask::new(d, rng.sample_k_of(d, k));
+    let full = Mask::dense(d);
+    let levels: Vec<i32> = (0..d)
+        .map(|_| rng.below(2 * s as u64 + 1) as i32 - s as i32)
+        .collect();
+    vec![
+        // sparse, shared mask (never shipped)
+        Payload::Sparse {
+            values: values.clone(),
+            mask: None,
+        },
+        // sparse with both mask codecs
+        Payload::Sparse {
+            values: values.clone(),
+            mask: Some(MaskWire::choose(&mask)),
+        },
+        Payload::Sparse {
+            values: values.clone(),
+            mask: Some(MaskWire::bitset(&mask)),
+        },
+        // edge: empty sparse, and a d-sized (k = d) sparse
+        Payload::Sparse {
+            values: Vec::new(),
+            mask: None,
+        },
+        Payload::Sparse {
+            values: dense.clone(),
+            mask: Some(MaskWire::choose(&full)),
+        },
+        // dense, incl. the empty edge
+        Payload::Dense {
+            values: dense.clone(),
+        },
+        Payload::Dense { values: Vec::new() },
+        // quantized at dimension d
+        Payload::Quantized(QuantBlock {
+            s,
+            norm: rng.next_f32(),
+            levels,
+        }),
+    ]
+}
+
+#[test]
+fn prop_payloads_roundtrip_and_size_exactly() {
+    // decode(encode(p)) == p and encode().len() == encoded_len() over all
+    // three payload kinds, including the empty and d-sized edge cases;
+    // every 1-byte truncation must fail cleanly, never panic.
+    for seed in 0..SEEDS {
+        let mut rng = Pcg64::new(seed, 900);
+        let d = 1 + (seed as usize * 47) % 600;
+        let k = 1 + (seed as usize * 13) % d;
+        let s = 1 + (seed as u32 * 7) % 15;
+        for p in random_payloads(&mut rng, d, k, s) {
+            let bytes = p.encode();
+            assert_eq!(
+                bytes.len(),
+                p.encoded_len(),
+                "seed {seed}: encoded_len mismatch for {} payload",
+                p.kind_name()
+            );
+            // empty dense/sparse payloads decode under any d; quantized
+            // and masked payloads need the true model dimension
+            let back = Payload::decode(&bytes, d)
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            assert_eq!(back, p, "seed {seed}");
+            // 1-byte truncation is always an error (larger cuts can
+            // leave a shorter-but-valid payload: a sparse body whose
+            // whole mask is cut off decodes as mask-less sparse)
+            assert!(
+                Payload::decode(&bytes[..bytes.len() - 1], d).is_err(),
+                "seed {seed}: truncated {} payload must not decode",
+                p.kind_name()
+            );
+        }
+        assert!(Payload::decode(&[], d).is_err());
+        assert!(Payload::decode(&[9, 0, 0, 0, 0], d).is_err(), "bad kind");
+    }
+}
+
 #[test]
 fn prop_wire_messages_roundtrip_and_size_exactly() {
     // decode(encode(m)) == m and encode().len() == encoded_len() across
-    // all four variants with randomized payloads; 1-byte truncations must
-    // fail cleanly.
+    // broadcasts and every typed Grad uplink with randomized payloads;
+    // 1-byte truncations must fail cleanly.
     for seed in 0..SEEDS {
         let mut rng = Pcg64::new(seed, 800);
         let d = 2 + (seed as usize * 41) % 700;
         let k = 1 + (seed as usize * 13) % d;
+        let s = 1 + (seed as u32 * 11) % 9;
         let round = rng.next_u64();
         let worker = (rng.next_u64() % u16::MAX as u64) as u16;
         let mut params = vec![0f32; d];
         rng.fill_gaussian(&mut params, 2.0);
-        let mut values = vec![0f32; k];
-        rng.fill_gaussian(&mut values, 2.0);
-        let mask = Mask::new(d, rng.sample_k_of(d, k));
-        let msgs = vec![
+        let mut msgs = vec![
             WireMessage::ModelBroadcast {
                 round,
                 params: params.clone(),
@@ -179,30 +268,14 @@ fn prop_wire_messages_roundtrip_and_size_exactly() {
                 round,
                 params: params.clone(),
             },
-            WireMessage::CompressedGrad {
-                round,
-                worker,
-                values: values.clone(),
-                mask: None,
-            },
-            WireMessage::CompressedGrad {
-                round,
-                worker,
-                values: values.clone(),
-                mask: Some(MaskWire::choose(&mask)),
-            },
-            WireMessage::CompressedGrad {
-                round,
-                worker,
-                values: values.clone(),
-                mask: Some(MaskWire::bitset(&mask)),
-            },
-            WireMessage::FullGrad {
-                round,
-                worker,
-                values: params.clone(),
-            },
         ];
+        msgs.extend(random_payloads(&mut rng, d, k, s).into_iter().map(
+            |payload| WireMessage::Grad {
+                round,
+                worker,
+                payload,
+            },
+        ));
         for m in msgs {
             let bytes = m.encode();
             assert_eq!(

@@ -58,6 +58,7 @@ impl Sim {
             attack: &self.attack,
             meter: &mut self.meter,
             rng: &mut self.rng,
+            payloads: None,
         };
         let r = self.alg.round(t, &grads, &[], &mut env);
         tensor::axpy(&mut self.theta, -self.gamma, &r);
@@ -185,6 +186,7 @@ fn naive_combination_fails_where_rosdhb_survives() {
             attack: &attack,
             meter: &mut meter,
             rng: &mut rng,
+            payloads: None,
         };
         let r = alg.round(t, &grads, &[], &mut env);
         tensor::axpy(&mut theta, -0.01, &r);

@@ -138,7 +138,7 @@ fn tcp_payload_attack_drones_keep_parity() {
 
 #[test]
 fn tcp_dense_baseline_full_gradients_keep_parity() {
-    // robust-dgd ships dense FullGrad uplinks — the other wire plan.
+    // robust-dgd ships dense payloads — the trivial wire plan.
     let mut cfg = base_cfg();
     cfg.set("algorithm", "robust-dgd").unwrap();
     cfg.rounds = 2;
@@ -150,6 +150,102 @@ fn tcp_dense_baseline_full_gradients_keep_parity() {
     assert_reports_identical(&report, &local);
     assert_eq!(stats.wire_uplink, report.uplink_bytes);
     assert_eq!(stats.wire_downlink, report.downlink_bytes);
+}
+
+/// Shared body of the per-wire-plan parity tests: run `cfg` over loopback
+/// TCP and locally, demand a bit-identical `RunReport` and measured
+/// socket bytes equal to the `ByteMeter` model.
+fn assert_plan_parity(cfg: &ExperimentConfig) {
+    let (report, stats, outcomes) = run_tcp(cfg, &vec![None; cfg.n_total()]);
+    for o in &outcomes {
+        let s = o.as_ref().expect("worker must finish cleanly");
+        assert_eq!(s.rounds, cfg.rounds as u64);
+    }
+    let local = run_local(cfg);
+    assert_reports_identical(&report, &local);
+    assert_eq!(stats.wire_uplink, report.uplink_bytes, "uplink");
+    assert_eq!(stats.wire_downlink, report.downlink_bytes, "downlink");
+}
+
+#[test]
+fn tcp_rosdhb_local_worker_drawn_masks_keep_parity() {
+    // rosdhb-local: every worker draws its own mask client-side
+    // (CompressorState) and ships it as a MaskWire — the SparseLocal
+    // wire plan the transport used to reject.
+    let mut cfg = base_cfg();
+    cfg.set("algorithm", "rosdhb-local").unwrap();
+    cfg.rounds = 3;
+    assert_plan_parity(&cfg);
+}
+
+#[test]
+fn tcp_rosdhb_u_randk_keeps_parity_with_poisoned_workers() {
+    // rosdhb-u with the RandK backend under a data-level attack: the
+    // Byzantine slots are real worker processes computing on poisoned
+    // shards, compressing through the same client-side state.
+    let mut cfg = base_cfg();
+    cfg.set("algorithm", "rosdhb-u").unwrap();
+    cfg.set("compressor", "randk").unwrap();
+    cfg.n_byz = 1;
+    cfg.attack = "labelflip".into();
+    cfg.aggregator = "nnm+cwtm".into();
+    cfg.rounds = 3;
+    assert_plan_parity(&cfg);
+}
+
+#[test]
+fn tcp_rosdhb_u_qsgd_quantized_payloads_keep_parity() {
+    // rosdhb-u with QSGD: bit-packed QuantBlock uplinks whose measured
+    // socket bytes must equal the packed-width byte model (not 4·k).
+    let mut cfg = base_cfg();
+    cfg.set("algorithm", "rosdhb-u").unwrap();
+    cfg.set("compressor", "qsgd:4").unwrap();
+    cfg.rounds = 3;
+    assert_plan_parity(&cfg);
+}
+
+#[test]
+fn tcp_dasha_difference_payloads_keep_parity() {
+    // byz-dasha-page: a dense init uplink in round 1, then masked
+    // difference payloads; every worker tracks its own gradient-estimate
+    // copy client-side, advanced by the same `dasha_apply` law as the
+    // coordinator's — three rounds cover both uplink shapes.
+    let mut cfg = base_cfg();
+    cfg.set("algorithm", "byz-dasha-page").unwrap();
+    cfg.rounds = 3;
+    assert_plan_parity(&cfg);
+}
+
+#[test]
+fn tcp_dasha_worker_crash_is_evicted_and_run_completes() {
+    // DASHA is stateful on the client (gradient-estimate copy), so a
+    // dropped contribution substitutes a size-true zero payload AND
+    // evicts the worker — its frozen server-side estimate row must not
+    // receive further (diverged) differences. The run keeps completing.
+    let mut cfg = base_cfg();
+    cfg.set("algorithm", "byz-dasha-page").unwrap();
+    cfg.rounds = 4;
+    cfg.round_timeout_ms = 60_000;
+    let (report, _stats, outcomes) =
+        run_tcp(&cfg, &[None, None, Some(2), None]);
+    assert_eq!(outcomes[2].as_ref().unwrap().rounds, 2);
+    assert_eq!(report.rounds_run, 4);
+    for row in &report.log.rows {
+        assert!(row.train_loss.is_finite(), "round {}", row.round);
+    }
+    // parity with the all-workers run holds up to the crash round only
+    let full = run_local(&cfg);
+    assert_eq!(report.log.rows[0].train_loss, full.log.rows[0].train_loss);
+    assert_ne!(report.log.rows[3].train_loss, full.log.rows[3].train_loss);
+}
+
+#[test]
+fn tcp_dgd_randk_keeps_parity() {
+    // dgd-randk: worker-drawn masks, plain averaging, no momentum.
+    let mut cfg = base_cfg();
+    cfg.set("algorithm", "dgd-randk").unwrap();
+    cfg.rounds = 2;
+    assert_plan_parity(&cfg);
 }
 
 #[test]
