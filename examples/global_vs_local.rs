@@ -14,6 +14,7 @@
 
 use rosdhb::algorithms::{rosdhb::RoSdhb, Algorithm, RoundEnv};
 use rosdhb::aggregators;
+use rosdhb::aggregators::geometry::RefreshPeriod;
 use rosdhb::attacks::AttackKind;
 use rosdhb::config::{Algorithm as AlgoId, ExperimentConfig};
 use rosdhb::coordinator::Trainer;
@@ -57,6 +58,7 @@ fn rate_view() {
                 k,
                 beta,
                 aggregator: agg.as_ref(),
+                geometry_refresh: RefreshPeriod::DEFAULT,
                 attack: &attack,
                 meter: &mut meter,
                 rng: &mut rng,

@@ -1,19 +1,28 @@
 //! Aggregator ablation: throughput and robustness quality of every
 //! `(f,κ)`-robust rule at the paper's operating point (n = 19, f = 9,
-//! d = 11 809) and under each attack.
+//! d = 11 809), under each attack, plus the incremental-geometry
+//! maintenance cost (O(n²k) rank-k updates vs the O(n²d) full pairwise
+//! recompute they replace).
 //!
-//! Two tables:
+//! Three tables:
 //!  * throughput — aggregations/s per rule (the L3 §Perf hot path);
 //!  * quality — distance of the aggregate from the honest mean under each
-//!    attack (lower is better; mean is the unprotected reference).
+//!    attack (lower is better; mean is the unprotected reference);
+//!  * geometry — incremental vs recompute at n ∈ {20, 100},
+//!    k/d ∈ {0.01, 0.05}.
 //!
-//! Run: `cargo bench --bench bench_aggregators`
+//! Run: `cargo bench --bench bench_aggregators`. `BENCH_SMOKE=1` (or
+//! `-- --smoke`) shortens the sample counts — the CI smoke-bench job uses
+//! it and uploads the JSON summary (`BENCH_aggregators.json`, path
+//! overridable via `BENCH_JSON`) as a per-PR artifact.
 
+use rosdhb::aggregators::geometry::{PairwiseGeometry, RefreshPeriod};
 use rosdhb::aggregators::{self, Aggregator};
 use rosdhb::attacks::{parse_spec as parse_attack, AttackCtx, AttackKind};
 use rosdhb::prng::Pcg64;
 use rosdhb::tensor;
 use rosdhb::util::bench;
+use rosdhb::util::bench::time_fn_recorded as timed;
 
 const D: usize = 11_809;
 const NH: usize = 10;
@@ -33,6 +42,16 @@ fn honest_inputs(rng: &mut Pcg64) -> Vec<Vec<f32>> {
 }
 
 fn main() {
+    let smoke = std::env::var("BENCH_SMOKE")
+        .map(|v| v == "1" || v == "true")
+        .unwrap_or(false)
+        || std::env::args().any(|a| a == "--smoke");
+    if smoke {
+        println!("# smoke mode: shortened sample counts");
+    }
+    let scale = |n: usize| if smoke { (n / 5).max(2) } else { n };
+    let mut rec: Vec<(String, Vec<f64>)> = Vec::new();
+
     let specs = ["mean", "cwtm", "median", "geomed", "krum", "multikrum",
                  "nnm+cwtm", "nnm+geomed"];
     let mut rng = Pcg64::new(1, 1);
@@ -60,14 +79,74 @@ fn main() {
     let mut out = vec![0f32; D];
     for spec in specs {
         let agg = aggregators::parse_spec(spec, F).unwrap();
-        let xs = bench::time_fn(&format!("aggregate/{spec}"), 2, 12, || {
-            agg.aggregate(&all, &mut out);
-        });
+        let xs = timed(
+            &mut rec,
+            &format!("aggregate/{spec}"),
+            2,
+            scale(12),
+            || {
+                agg.aggregate(&all, &mut out);
+            },
+        );
         let med = rosdhb::util::stats::median(&xs);
         println!(
             "#   -> {:.2} Mcoord/s",
             (D * (NH + F)) as f64 / med / 1e6
         );
+    }
+
+    // --- incremental geometry maintenance vs full recompute.
+    // Simulates the sparse round engine's steady state: every round the
+    // n×n matrix advances by a rank-k update over a rotating mask; the
+    // recompute stage is the O(n²d) pairwise pass it replaces.
+    println!(
+        "\n# geometry: O(n²k) incremental update vs O(n²d) recompute (d={D})"
+    );
+    for &n in &[20usize, 100] {
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0f32; D];
+                rng.fill_gaussian(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|v| v.as_slice()).collect();
+        for &kf in &[0.01f64, 0.05] {
+            let k = ((D as f64 * kf) as usize).max(1);
+            // pre-drawn rotating masks so mask RNG stays out of the timing
+            let masks: Vec<Vec<u32>> =
+                (0..8).map(|_| rng.sample_k_of(D, k)).collect();
+            let mut geo = PairwiseGeometry::new(n, RefreshPeriod::Never);
+            geo.rebuild(&refs);
+            let mut mi = 0usize;
+            let inc = timed(
+                &mut rec,
+                &format!("geometry/incremental/n{n}_kd{kf}"),
+                2,
+                scale(20),
+                || {
+                    let mask = &masks[mi % masks.len()];
+                    mi += 1;
+                    geo.snapshot(&refs, mask);
+                    geo.apply_masked(&refs, mask, 0.9);
+                },
+            );
+            let full = timed(
+                &mut rec,
+                &format!("geometry/rebuild/n{n}_kd{kf}"),
+                2,
+                scale(8),
+                || {
+                    geo.rebuild(&refs);
+                },
+            );
+            let speedup = rosdhb::util::stats::median(&full)
+                / rosdhb::util::stats::median(&inc).max(1e-12);
+            println!(
+                "#   -> n={n} k/d={kf}: incremental is {speedup:.1}x \
+                 faster than recompute"
+            );
+        }
     }
 
     // --- quality under each attack
@@ -99,4 +178,12 @@ fn main() {
         println!();
     }
     println!("# (mean column shows the unprotected baseline; robust rules should be far smaller under alie/signflip/noise)");
+
+    // the per-PR perf artifact
+    let json_path = std::env::var("BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_aggregators.json".to_string());
+    match bench::write_json(&json_path, &rec) {
+        Ok(()) => println!("# wrote {} stages to {json_path}", rec.len()),
+        Err(e) => eprintln!("# failed to write {json_path}: {e}"),
+    }
 }

@@ -9,6 +9,7 @@
 //! Run: `cargo bench --bench bench_global_vs_local`
 
 use rosdhb::aggregators;
+use rosdhb::aggregators::geometry::RefreshPeriod;
 use rosdhb::algorithms::{rosdhb::RoSdhb, Algorithm, RoundEnv};
 use rosdhb::attacks::AttackKind;
 use rosdhb::prng::Pcg64;
@@ -41,6 +42,7 @@ fn run_variant(local: bool, k: usize, t_max: u64, probes: &[u64]) -> Vec<f64> {
             k,
             beta: 0.9,
             aggregator: agg.as_ref(),
+            geometry_refresh: RefreshPeriod::DEFAULT,
             attack: &attack,
             meter: &mut meter,
             rng: &mut rng,

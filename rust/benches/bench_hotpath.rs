@@ -34,25 +34,13 @@ use rosdhb::model::MlpSpec;
 use rosdhb::prng::Pcg64;
 use rosdhb::tensor;
 use rosdhb::util::bench;
+use rosdhb::util::bench::time_fn_recorded as timed;
 use rosdhb::worker::{GradEngine, HonestWorker, NativeEngine};
 use std::sync::Arc;
 
 const D: usize = 11_809;
 const N: usize = 19;
 const K: usize = 590; // k/d = 0.05
-
-/// `bench::time_fn`, plus recording the samples for the JSON artifact.
-fn timed<F: FnMut()>(
-    rec: &mut Vec<(String, Vec<f64>)>,
-    name: &str,
-    warmup: usize,
-    samples: usize,
-    f: F,
-) -> Vec<f64> {
-    let xs = bench::time_fn(name, warmup, samples, f);
-    rec.push((name.to_string(), xs.clone()));
-    xs
-}
 
 fn main() {
     let smoke = std::env::var("BENCH_SMOKE")

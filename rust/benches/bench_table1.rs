@@ -15,6 +15,7 @@
 //! Run: `cargo bench --bench bench_table1`
 
 use rosdhb::aggregators;
+use rosdhb::aggregators::geometry::RefreshPeriod;
 use rosdhb::algorithms::{baselines, dasha, rosdhb::RoSdhb, Algorithm, RoundEnv};
 use rosdhb::attacks::{parse_spec as parse_attack, AttackKind};
 use rosdhb::prng::Pcg64;
@@ -53,6 +54,7 @@ fn grad_h_sq_at(run: &mut Run, world: &QuadraticWorld, t_max: u64, probes: &[u64
             k: run.k,
             beta: 0.9,
             aggregator: run.aggregator.as_ref(),
+            geometry_refresh: RefreshPeriod::DEFAULT,
             attack: &run.attack,
             meter: &mut meter,
             rng: &mut rng,

@@ -89,7 +89,7 @@ impl Aggregator for Cwtm {
         } else {
             1
         };
-        let chunk = (d + workers - 1) / workers;
+        let chunk = d.div_ceil(workers);
         let run_range = |start: usize, out_chunk: &mut [f32]| {
             let mut col: Vec<f32> = vec![0.0; n];
             for (off, slot_out) in out_chunk.iter_mut().enumerate() {

@@ -66,6 +66,16 @@ impl Aggregator for GeoMed {
         false
     }
 
+    /// Not geometry-backed either: Weiszfeld needs the raw input rows at
+    /// every iteration (distances from the moving iterate z, not pairwise
+    /// distances), so a maintained pairwise matrix buys it nothing.
+    /// GeoMed still rides the geometry engine as the *inner* rule of
+    /// `nnm+geomed` — NNM's mix carry hands it cheap mixed rows and it
+    /// runs its usual O(n·d·iters) on those.
+    fn geometry_backed(&self) -> bool {
+        false
+    }
+
     /// κ ≤ 4δ/(1−2δ)·(1 + δ/(1−2δ))² — [2], Table 1 (GeoMed row).
     fn kappa(&self, n: usize, f: usize) -> f64 {
         if f == 0 {

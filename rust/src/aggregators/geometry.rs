@@ -1,0 +1,502 @@
+//! Incremental pairwise-geometry maintenance under the shared mask.
+//!
+//! RoSDHB's coordinated compression (Lemma A.3) means every server-side
+//! momentum vector changes on the *same* k masked coordinates per round,
+//! plus a uniform β-scaling of the remaining d−k. The squared-distance
+//! geometry the selection rules (Krum, Multi-Krum, NNM) consume therefore
+//! evolves by a rank-k correction:
+//!
+//! ```text
+//! dist'ᵢⱼ = β²·(distᵢⱼ − Σ_{c∈mask}(oldᵢ[c]−oldⱼ[c])²)
+//!               + Σ_{c∈mask}(newᵢ[c]−newⱼ[c])²
+//! ```
+//!
+//! [`PairwiseGeometry`] owns the n×n matrix (f64) and applies that update
+//! in O(n²k) per round instead of the O(n²d) full recompute, with
+//!
+//! * a configurable exact-refresh period (`config: geometry_refresh`)
+//!   that rebuilds the matrix from the raw vectors to bound f64 drift
+//!   ([`RefreshPeriod`]); a refresh also resets every derived cache, so a
+//!   `geometry_refresh = 1` run is bit-identical to the dense oracle;
+//! * an automatic full rebuild whenever the masked-update law does not
+//!   hold for the round — a silent/evicted worker left its momentum
+//!   unscaled, the membership changed, or the matrix was never built;
+//! * per-row bookkeeping for NNM ([`MixCache`]): the previous neighbor
+//!   sets and mixed vectors, so unchanged neighborhoods carry their mixed
+//!   vector over off-mask (`scale·previous`) instead of re-summing n−f
+//!   rows of length d.
+//!
+//! Selection rules never compute distances themselves: they consume a
+//! prepared [`Geometry`] view (dense `aggregate()` builds a one-shot
+//! matrix with [`pairwise_dist_sq`]; the sparse round engine hands out
+//! the maintained one through [`GeoCtx`]). [`GeoStats`] counts rebuilds
+//! vs incremental updates so tests can pin "no full recompute outside
+//! refresh rounds".
+
+use crate::tensor;
+
+/// Full O(n²d) squared-distance matrix (row-major n×n, zero diagonal,
+/// symmetric) — the one rebuild kernel shared by the dense `aggregate()`
+/// entry points and [`PairwiseGeometry::rebuild`].
+pub fn pairwise_dist_sq(inputs: &[&[f32]]) -> Vec<f64> {
+    let n = inputs.len();
+    let mut m = vec![0.0f64; n * n];
+    pairwise_dist_sq_into(inputs, &mut m);
+    m
+}
+
+fn pairwise_dist_sq_into(inputs: &[&[f32]], m: &mut [f64]) {
+    let n = inputs.len();
+    debug_assert_eq!(m.len(), n * n);
+    for i in 0..n {
+        m[i * n + i] = 0.0;
+        for j in (i + 1)..n {
+            let d = tensor::dist_sq(inputs[i], inputs[j]);
+            m[i * n + j] = d;
+            m[j * n + i] = d;
+        }
+    }
+}
+
+/// Read-only view of an n×n squared-distance matrix — what selection
+/// rules consume instead of calling [`pairwise_dist_sq`] themselves.
+#[derive(Clone, Copy)]
+pub struct Geometry<'a> {
+    n: usize,
+    dist: &'a [f64],
+}
+
+impl<'a> Geometry<'a> {
+    /// Wrap a row-major n×n matrix (`dist.len() == n²`).
+    pub fn new(n: usize, dist: &'a [f64]) -> Self {
+        assert_eq!(dist.len(), n * n, "geometry matrix must be n×n");
+        Geometry { n, dist }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// ‖xᵢ − xⱼ‖² as maintained (exact after a rebuild, f64-drifted
+    /// between refreshes).
+    #[inline]
+    pub fn dist_sq(&self, i: usize, j: usize) -> f64 {
+        self.dist[i * self.n + j]
+    }
+
+    /// Row i: distances from input i to every input (self entry 0).
+    #[inline]
+    pub fn row(&self, i: usize) -> &'a [f64] {
+        &self.dist[i * self.n..(i + 1) * self.n]
+    }
+}
+
+/// How often the maintained matrix is rebuilt exactly from the raw
+/// vectors (`config: geometry_refresh`): `Every(1)` rebuilds each round
+/// (no incremental updates, bit-identical to dense), `Every(p)` allows
+/// p−1 incremental rounds between rebuilds, `Never` trusts the rank-k
+/// updates for the whole run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RefreshPeriod {
+    Never,
+    Every(u32),
+}
+
+impl RefreshPeriod {
+    /// The config default: frequent enough that f64 drift stays far below
+    /// f32 resolution, rare enough to keep rounds O(n²k).
+    pub const DEFAULT: RefreshPeriod = RefreshPeriod::Every(64);
+
+    /// Parse `"never"` or a positive integer period.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let s = s.trim().to_ascii_lowercase();
+        if s == "never" {
+            return Ok(RefreshPeriod::Never);
+        }
+        match s.parse::<u32>() {
+            Ok(p) if p >= 1 => Ok(RefreshPeriod::Every(p)),
+            _ => Err(format!(
+                "geometry_refresh must be \"never\" or an integer >= 1, \
+                 got '{s}'"
+            )),
+        }
+    }
+}
+
+/// Rebuild/incremental counters — the tests' handle on "per-round
+/// distance work is O(n²k): no full recompute outside refresh rounds".
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GeoStats {
+    /// Full O(n²d) rebuilds (first round, refresh rounds, rounds where a
+    /// silent/evicted worker broke the masked-update law).
+    pub rebuilds: u64,
+    /// O(n²k) incremental updates.
+    pub incrementals: u64,
+}
+
+/// NNM's per-row bookkeeping: previous neighbor sets and mixed vectors.
+/// Rows whose n−f nearest-neighbor *set* is unchanged carry their mixed
+/// vector over (`scale·previous` off-mask, fresh sums on the k masked
+/// columns); rows whose set changed are re-summed in full.
+#[derive(Default)]
+pub struct MixCache {
+    valid: bool,
+    n: usize,
+    d: usize,
+    m: usize,
+    /// n rows × m neighbor indices, each row sorted ascending (set
+    /// identity — the summation order lives in the mix step itself).
+    sets: Vec<u32>,
+    /// n × d previous mixed vectors.
+    mixed: Vec<f32>,
+}
+
+impl MixCache {
+    /// Drop the carry basis (membership changed, matrix rebuilt, …).
+    pub fn invalidate(&mut self) {
+        self.valid = false;
+    }
+
+    /// Size the buffers for (n, d, m); a shape change invalidates.
+    pub(crate) fn ensure_shape(&mut self, n: usize, d: usize, m: usize) {
+        if self.n != n || self.d != d || self.m != m {
+            self.valid = false;
+            self.n = n;
+            self.d = d;
+            self.m = m;
+            self.sets.resize(n * m, 0);
+            self.mixed.resize(n * d, 0.0);
+        }
+    }
+
+    pub(crate) fn is_valid(&self) -> bool {
+        self.valid
+    }
+
+    pub(crate) fn set_valid(&mut self) {
+        self.valid = true;
+    }
+
+    pub(crate) fn set_row(&self, i: usize) -> &[u32] {
+        &self.sets[i * self.m..(i + 1) * self.m]
+    }
+
+    pub(crate) fn set_row_mut(&mut self, i: usize) -> &mut [u32] {
+        &mut self.sets[i * self.m..(i + 1) * self.m]
+    }
+
+    pub(crate) fn mixed_row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.mixed[i * self.d..(i + 1) * self.d]
+    }
+
+    pub(crate) fn mixed_rows(&self) -> std::slice::ChunksExact<'_, f32> {
+        self.mixed.chunks_exact(self.d)
+    }
+}
+
+/// Everything a geometry-backed rule receives for one aggregation: the
+/// prepared distance view, how the inputs changed this round, and its
+/// per-row cache.
+pub struct GeoCtx<'a> {
+    pub geo: Geometry<'a>,
+    /// `Some((mask, scale))` when this round's inputs changed only on the
+    /// mask columns plus a uniform `scale` everywhere else (the carry
+    /// law); `None` on rebuild rounds — every derived cache must be
+    /// recomputed from the raw vectors then.
+    pub delta: Option<(&'a [u32], f32)>,
+    /// True when `out` arrives pre-filled with `scale × previous
+    /// aggregate`. A rule may keep those off-mask values only when its
+    /// own selection state proves the carry law extends to its output
+    /// (e.g. NNM with unchanged neighbor sets over a coordinate-separable
+    /// inner rule); otherwise it must overwrite every coordinate.
+    pub carry_in: bool,
+    pub mix: &'a mut MixCache,
+}
+
+/// The stateful engine-side owner: maintained matrix + refresh schedule
+/// + per-rule caches.
+pub struct PairwiseGeometry {
+    n: usize,
+    dist: Vec<f64>,
+    refresh: RefreshPeriod,
+    /// Incremental updates applied since the last exact rebuild.
+    since_rebuild: u32,
+    valid: bool,
+    /// Masked-column snapshot (n × k, row-major) taken before the round's
+    /// in-place momentum update.
+    snap: Vec<f32>,
+    snap_k: usize,
+    snapped: bool,
+    pub stats: GeoStats,
+    mix: MixCache,
+}
+
+impl PairwiseGeometry {
+    pub fn new(n: usize, refresh: RefreshPeriod) -> Self {
+        PairwiseGeometry {
+            n,
+            dist: vec![0.0; n * n],
+            refresh,
+            since_rebuild: 0,
+            valid: false,
+            snap: Vec::new(),
+            snap_k: 0,
+            snapped: false,
+            stats: GeoStats::default(),
+            mix: MixCache::default(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Whether the matrix may advance incrementally this round: it is
+    /// valid and the exact-refresh period is not due. The caller must
+    /// additionally know the round obeys the masked-update law (every
+    /// row updated); otherwise it rebuilds.
+    pub fn can_increment(&self) -> bool {
+        self.valid
+            && match self.refresh {
+                RefreshPeriod::Never => true,
+                RefreshPeriod::Every(p) => self.since_rebuild + 1 < p,
+            }
+    }
+
+    /// Snapshot the masked columns of `inputs` *before* they are mutated
+    /// in place — the `old` side of the incremental formula.
+    pub fn snapshot(&mut self, inputs: &[&[f32]], cols: &[u32]) {
+        debug_assert_eq!(inputs.len(), self.n);
+        let k = cols.len();
+        self.snap.resize(self.n * k, 0.0);
+        for (row, snap) in inputs.iter().zip(self.snap.chunks_exact_mut(k)) {
+            for (s, &c) in snap.iter_mut().zip(cols) {
+                *s = row[c as usize];
+            }
+        }
+        self.snap_k = k;
+        self.snapped = true;
+    }
+
+    /// Advance the matrix by the rank-k update:
+    /// `dist'ᵢⱼ = scale²·(distᵢⱼ − old_onᵢⱼ) + new_onᵢⱼ`, with `old` from
+    /// the last [`Self::snapshot`] and `new` read from the already-updated
+    /// `inputs`. O(n²k).
+    pub fn apply_masked(&mut self, inputs: &[&[f32]], cols: &[u32], scale: f32) {
+        assert!(
+            self.snapped && self.snap_k == cols.len(),
+            "apply_masked needs a matching snapshot taken this round"
+        );
+        let n = self.n;
+        debug_assert_eq!(inputs.len(), n);
+        let k = cols.len();
+        let s2 = scale as f64 * scale as f64;
+        for i in 0..n {
+            let old_i = &self.snap[i * k..(i + 1) * k];
+            for j in (i + 1)..n {
+                let old_j = &self.snap[j * k..(j + 1) * k];
+                let mut old_on = 0.0f64;
+                let mut new_on = 0.0f64;
+                for (t, &c) in cols.iter().enumerate() {
+                    let o = (old_i[t] - old_j[t]) as f64;
+                    old_on += o * o;
+                    let v = (inputs[i][c as usize] - inputs[j][c as usize])
+                        as f64;
+                    new_on += v * v;
+                }
+                // the subtraction can undershoot 0 by rounding when the
+                // masked columns carry almost all of the distance
+                let off = (self.dist[i * n + j] - old_on).max(0.0);
+                let d = s2 * off + new_on;
+                self.dist[i * n + j] = d;
+                self.dist[j * n + i] = d;
+            }
+        }
+        self.snapped = false;
+        self.since_rebuild += 1;
+        self.stats.incrementals += 1;
+    }
+
+    /// Exact O(n²d) rebuild from the raw vectors. Also resets every
+    /// derived per-rule cache: after a rebuild the whole geometry state
+    /// is bit-identical to what the dense oracle computes.
+    pub fn rebuild(&mut self, inputs: &[&[f32]]) {
+        assert_eq!(
+            inputs.len(),
+            self.n,
+            "rebuild maintains a fixed worker set — construct a new \
+             PairwiseGeometry when n changes"
+        );
+        pairwise_dist_sq_into(inputs, &mut self.dist);
+        self.valid = true;
+        self.since_rebuild = 0;
+        self.snapped = false;
+        self.stats.rebuilds += 1;
+        self.mix.invalidate();
+    }
+
+    /// Drop all maintained state (worker eviction / membership change /
+    /// any round whose update the caller could not describe): the next
+    /// round rebuilds.
+    pub fn invalidate(&mut self) {
+        self.valid = false;
+        self.snapped = false;
+        self.mix.invalidate();
+    }
+
+    /// The per-round context handed to [`super::Aggregator::aggregate_geo`].
+    pub fn ctx<'a>(
+        &'a mut self,
+        delta: Option<(&'a [u32], f32)>,
+        carry_in: bool,
+    ) -> GeoCtx<'a> {
+        debug_assert!(self.valid, "geometry must be built before use");
+        GeoCtx {
+            geo: Geometry {
+                n: self.n,
+                dist: &self.dist,
+            },
+            delta,
+            carry_in,
+            mix: &mut self.mix,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::*;
+    use super::*;
+    use crate::prng::Pcg64;
+
+    fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn refresh_period_parses() {
+        assert_eq!(RefreshPeriod::parse("never").unwrap(), RefreshPeriod::Never);
+        assert_eq!(
+            RefreshPeriod::parse("1").unwrap(),
+            RefreshPeriod::Every(1)
+        );
+        assert_eq!(
+            RefreshPeriod::parse(" 64 ").unwrap(),
+            RefreshPeriod::Every(64)
+        );
+        assert!(RefreshPeriod::parse("0").is_err());
+        assert!(RefreshPeriod::parse("-3").is_err());
+        assert!(RefreshPeriod::parse("sometimes").is_err());
+    }
+
+    #[test]
+    fn geometry_view_indexing() {
+        let rows = corrupted_inputs(4, 0, 6, 0.0, 11);
+        let refs = as_refs(&rows);
+        let m = pairwise_dist_sq(&refs);
+        let geo = Geometry::new(4, &m);
+        assert_eq!(geo.n(), 4);
+        for i in 0..4 {
+            assert_eq!(geo.dist_sq(i, i), 0.0);
+            assert_eq!(geo.row(i).len(), 4);
+            for j in 0..4 {
+                assert_eq!(geo.dist_sq(i, j), geo.dist_sq(j, i));
+                assert_eq!(geo.row(i)[j], geo.dist_sq(i, j));
+            }
+        }
+    }
+
+    /// Simulate RoSDHB's masked momentum rounds: scale every row by β,
+    /// overwrite k masked columns, and check the incremental matrix stays
+    /// within f64-drift distance of the exact recompute.
+    #[test]
+    fn incremental_tracks_exact_recompute_over_rounds() {
+        let (n, d, k) = (8, 64, 6);
+        let mut rng = Pcg64::new(9, 9);
+        let mut rows = corrupted_inputs(n, 0, d, 0.0, 9);
+        let mut geo = PairwiseGeometry::new(n, RefreshPeriod::Never);
+        {
+            let refs = as_refs(&rows);
+            geo.rebuild(&refs);
+        }
+        let beta = 0.9f32;
+        for _round in 0..50 {
+            // fresh k-mask per round, drawn like production RandK masks
+            let cols = rng.sample_k_of(d, k);
+            assert!(geo.can_increment());
+            {
+                let refs = as_refs(&rows);
+                geo.snapshot(&refs, &cols);
+            }
+            // momentum-law mutation: uniform β off-mask, arbitrary on-mask
+            for row in rows.iter_mut() {
+                for v in row.iter_mut() {
+                    *v *= beta;
+                }
+                for &c in &cols {
+                    row[c as usize] = rng.next_gaussian() as f32;
+                }
+            }
+            let refs = as_refs(&rows);
+            geo.apply_masked(&refs, &cols, beta);
+            let exact = pairwise_dist_sq(&refs);
+            let drift = max_abs_diff(geo.ctx(None, false).geo.dist, &exact);
+            assert!(drift < 1e-9, "drift {drift}");
+        }
+        assert_eq!(geo.stats.rebuilds, 1);
+        assert_eq!(geo.stats.incrementals, 50);
+    }
+
+    #[test]
+    fn refresh_period_forces_rebuilds() {
+        let n = 5;
+        let rows = corrupted_inputs(n, 0, 16, 0.0, 4);
+        let refs = as_refs(&rows);
+        let cols: Vec<u32> = vec![0, 5, 9];
+        let mut geo = PairwiseGeometry::new(n, RefreshPeriod::Every(3));
+        geo.rebuild(&refs);
+        // period 3: two incremental rounds allowed, then a rebuild is due
+        assert!(geo.can_increment());
+        geo.snapshot(&refs, &cols);
+        geo.apply_masked(&refs, &cols, 1.0);
+        assert!(geo.can_increment());
+        geo.snapshot(&refs, &cols);
+        geo.apply_masked(&refs, &cols, 1.0);
+        assert!(!geo.can_increment());
+        geo.rebuild(&refs);
+        assert!(geo.can_increment());
+        assert_eq!(geo.stats.rebuilds, 2);
+        assert_eq!(geo.stats.incrementals, 2);
+
+        let mut every_round = PairwiseGeometry::new(n, RefreshPeriod::Every(1));
+        every_round.rebuild(&refs);
+        assert!(!every_round.can_increment());
+    }
+
+    #[test]
+    fn invalidate_blocks_increment_until_rebuilt() {
+        let rows = corrupted_inputs(4, 0, 8, 0.0, 2);
+        let refs = as_refs(&rows);
+        let mut geo = PairwiseGeometry::new(4, RefreshPeriod::Never);
+        assert!(!geo.can_increment(), "never built");
+        geo.rebuild(&refs);
+        assert!(geo.can_increment());
+        geo.invalidate();
+        assert!(!geo.can_increment());
+        geo.rebuild(&refs);
+        assert!(geo.can_increment());
+    }
+
+    #[test]
+    #[should_panic]
+    fn apply_without_snapshot_panics() {
+        let rows = corrupted_inputs(3, 0, 4, 0.0, 3);
+        let refs = as_refs(&rows);
+        let mut geo = PairwiseGeometry::new(3, RefreshPeriod::Never);
+        geo.rebuild(&refs);
+        geo.apply_masked(&refs, &[1], 0.9);
+    }
+}

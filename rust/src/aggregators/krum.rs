@@ -2,39 +2,70 @@
 //!
 //! Krum scores each input by the sum of squared distances to its
 //! n−f−2 nearest other inputs and returns the argmin; Multi-Krum averages
-//! the m = n−f best-scored inputs. O(n²d) pairwise distances dominate;
-//! the distance matrix is computed once and shared.
+//! the m = n−f best-scored inputs. Both are pure **selection** rules:
+//! their only use of the inputs' vector structure is through pairwise
+//! distances, so they consume a prepared [`Geometry`] view
+//! ([`Aggregator::geometry_backed`]) — the dense entry point builds a
+//! one-shot matrix ([`geometry::pairwise_dist_sq`], O(n²d)) while the
+//! sparse round engine hands them the incrementally maintained one
+//! (O(n²k) per round). Either way the output is copied/averaged straight
+//! from the input rows, so results are bit-identical whenever the
+//! selected set agrees.
 
+use super::geometry::{self, GeoCtx, Geometry};
 use super::{delta_ratio, Aggregator};
 use crate::tensor;
 
-/// Pairwise squared-distance matrix (shared by Krum/MultiKrum/NNM).
-pub(crate) fn pairwise_dist_sq(inputs: &[&[f32]]) -> Vec<f64> {
-    let n = inputs.len();
-    let mut m = vec![0.0f64; n * n];
-    for i in 0..n {
-        for j in (i + 1)..n {
-            let d = tensor::dist_sq(inputs[i], inputs[j]);
-            m[i * n + j] = d;
-            m[j * n + i] = d;
-        }
-    }
-    m
-}
-
-/// Krum score of input i: sum of its n−f−2 smallest distances to others.
-fn scores(dist: &[f64], n: usize, f: usize) -> Vec<f64> {
-    let closest = n.saturating_sub(f + 2).max(1);
+/// Krum scores: per input, the sum of its n−f−2 smallest distances to
+/// the other inputs. One scratch buffer is reused across rows and the
+/// partial selection (`select_nth_unstable_by`) replaces the former
+/// per-row allocate-and-full-sort.
+pub(crate) fn scores(geo: &Geometry<'_>, f: usize) -> Vec<f64> {
+    let n = geo.n();
+    let closest = n.saturating_sub(f + 2).max(1).min(n - 1);
+    let mut scratch: Vec<f64> = Vec::with_capacity(n - 1);
     (0..n)
         .map(|i| {
-            let mut row: Vec<f64> = (0..n)
-                .filter(|&j| j != i)
-                .map(|j| dist[i * n + j])
-                .collect();
-            row.sort_by(|a, b| a.total_cmp(b));
-            row[..closest.min(row.len())].iter().sum()
+            scratch.clear();
+            let row = geo.row(i);
+            scratch.extend(
+                row.iter()
+                    .enumerate()
+                    .filter(|&(j, _)| j != i)
+                    .map(|(_, &d)| d),
+            );
+            if closest < scratch.len() {
+                scratch
+                    .select_nth_unstable_by(closest - 1, |a, b| a.total_cmp(b));
+            }
+            scratch[..closest].iter().sum()
         })
         .collect()
+}
+
+/// Krum's argmin over [`scores`]. Ties resolve identically on every call
+/// path (same comparator, same iteration order), so the selection — and
+/// therefore the copied output — agrees between the dense and geometry
+/// entry points whenever the distances do.
+pub(crate) fn krum_select(geo: &Geometry<'_>, f: usize) -> usize {
+    let sc = scores(geo, f);
+    (0..geo.n())
+        .min_by(|&a, &b| sc[a].total_cmp(&sc[b]))
+        .expect("krum needs at least one input")
+}
+
+/// Multi-Krum's m = n−f best-scored inputs, returned **ascending by
+/// index** so the averaging order is pinned by the selected *set* alone
+/// (score order may drift between refreshes without changing the sum).
+pub(crate) fn multikrum_select(geo: &Geometry<'_>, f: usize) -> Vec<usize> {
+    let n = geo.n();
+    let m = n - f;
+    let sc = scores(geo, f);
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| sc[a].total_cmp(&sc[b]));
+    order.truncate(m);
+    order.sort_unstable();
+    order
 }
 
 #[derive(Clone, Debug)]
@@ -56,19 +87,34 @@ impl Aggregator for Krum {
     fn aggregate(&self, inputs: &[&[f32]], out: &mut [f32]) {
         let n = inputs.len();
         assert!(n > 2, "krum needs n > 2");
-        let dist = pairwise_dist_sq(inputs);
-        let sc = scores(&dist, n, self.f);
-        let best = (0..n)
-            .min_by(|&a, &b| sc[a].total_cmp(&sc[b]))
-            .unwrap();
+        let dist = geometry::pairwise_dist_sq(inputs);
+        let best = krum_select(&Geometry::new(n, &dist), self.f);
         out.copy_from_slice(inputs[best]);
     }
 
     /// Selection uses full-space distances, so Krum is not
-    /// coordinate-separable: the sparse round engine falls back to the
-    /// dense path and `aggregate_block` (trait default) is block-local.
+    /// coordinate-separable: `aggregate_block` (trait default) is
+    /// block-local. The sparse round engine instead reaches it through
+    /// the geometry path.
     fn coordinate_separable(&self) -> bool {
         false
+    }
+
+    fn geometry_backed(&self) -> bool {
+        true
+    }
+
+    /// Geometry → argmin → O(d) row copy: bit-identical to the dense
+    /// oracle whenever the selection agrees.
+    fn aggregate_geo(
+        &self,
+        inputs: &[&[f32]],
+        ctx: &mut GeoCtx<'_>,
+        out: &mut [f32],
+    ) {
+        assert!(inputs.len() > 2, "krum needs n > 2");
+        let best = krum_select(&ctx.geo, self.f);
+        out.copy_from_slice(inputs[best]);
     }
 
     /// Krum's κ does not vanish with n (stays Θ(1)); bound from [2]:
@@ -86,7 +132,8 @@ impl Aggregator for Krum {
     }
 }
 
-/// Multi-Krum: average of the n−f best-scored inputs.
+/// Multi-Krum: average of the n−f best-scored inputs (summed in
+/// ascending-index order — see [`multikrum_select`]).
 #[derive(Clone, Debug)]
 pub struct MultiKrum {
     pub f: usize,
@@ -95,6 +142,16 @@ pub struct MultiKrum {
 impl MultiKrum {
     pub fn new(f: usize) -> Self {
         MultiKrum { f }
+    }
+
+    fn average_selected(
+        &self,
+        inputs: &[&[f32]],
+        selected: &[usize],
+        out: &mut [f32],
+    ) {
+        let rows: Vec<&[f32]> = selected.iter().map(|&i| inputs[i]).collect();
+        tensor::mean_into(out, &rows);
     }
 }
 
@@ -106,14 +163,26 @@ impl Aggregator for MultiKrum {
     fn aggregate(&self, inputs: &[&[f32]], out: &mut [f32]) {
         let n = inputs.len();
         assert!(n > self.f, "multikrum needs n > f");
-        let m = n - self.f;
-        let dist = pairwise_dist_sq(inputs);
-        let sc = scores(&dist, n, self.f);
-        let mut order: Vec<usize> = (0..n).collect();
-        order.sort_by(|&a, &b| sc[a].total_cmp(&sc[b]));
-        let selected: Vec<&[f32]> =
-            order[..m].iter().map(|&i| inputs[i]).collect();
-        tensor::mean_into(out, &selected);
+        let dist = geometry::pairwise_dist_sq(inputs);
+        let selected = multikrum_select(&Geometry::new(n, &dist), self.f);
+        self.average_selected(inputs, &selected, out);
+    }
+
+    fn geometry_backed(&self) -> bool {
+        true
+    }
+
+    /// Geometry → selected set → O((n−f)·d) mean of input rows:
+    /// bit-identical to the dense oracle whenever the set agrees.
+    fn aggregate_geo(
+        &self,
+        inputs: &[&[f32]],
+        ctx: &mut GeoCtx<'_>,
+        out: &mut [f32],
+    ) {
+        assert!(inputs.len() > self.f, "multikrum needs n > f");
+        let selected = multikrum_select(&ctx.geo, self.f);
+        self.average_selected(inputs, &selected, out);
     }
 
     fn kappa(&self, n: usize, f: usize) -> f64 {
@@ -167,12 +236,71 @@ mod tests {
     fn pairwise_matrix_symmetric_zero_diag() {
         let rows = corrupted_inputs(5, 0, 3, 0.0, 7);
         let refs = as_refs(&rows);
-        let m = pairwise_dist_sq(&refs);
+        let m = geometry::pairwise_dist_sq(&refs);
         for i in 0..5 {
             assert_eq!(m[i * 5 + i], 0.0);
             for j in 0..5 {
                 assert_eq!(m[i * 5 + j], m[j * 5 + i]);
             }
+        }
+    }
+
+    #[test]
+    fn scores_select_nth_matches_full_sort_reference() {
+        // the partial-selection scores must sum the same multiset of
+        // distances the old full sort did
+        let rows = corrupted_inputs(9, 2, 5, 1e3, 8);
+        let refs = as_refs(&rows);
+        let dist = geometry::pairwise_dist_sq(&refs);
+        let n = refs.len();
+        let f = 2;
+        let geo = Geometry::new(n, &dist);
+        let got = scores(&geo, f);
+        let closest = n - f - 2;
+        for (i, g) in got.iter().enumerate() {
+            let mut row: Vec<f64> = (0..n)
+                .filter(|&j| j != i)
+                .map(|j| dist[i * n + j])
+                .collect();
+            row.sort_by(|a, b| a.total_cmp(b));
+            let want: f64 = row[..closest].iter().sum();
+            assert!(
+                (g - want).abs() <= 1e-12 * want.abs().max(1.0),
+                "row {i}: {g} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn geometry_entry_points_match_dense_on_exact_distances() {
+        let rows = corrupted_inputs(10, 3, 12, 1e4, 9);
+        let refs = as_refs(&rows);
+        let n = refs.len();
+        for f in [0usize, 3] {
+            let dist = geometry::pairwise_dist_sq(&refs);
+            let mut geo = geometry::PairwiseGeometry::new(
+                n,
+                geometry::RefreshPeriod::Never,
+            );
+            geo.rebuild(&refs);
+            let krum = Krum::new(f.max(1));
+            let dense = krum.aggregate_vec(&refs);
+            let mut got = vec![0f32; 12];
+            krum.aggregate_geo(&refs, &mut geo.ctx(None, false), &mut got);
+            assert_eq!(dense, got, "krum f={f}");
+
+            let mk = MultiKrum::new(f);
+            let dense = mk.aggregate_vec(&refs);
+            let mut got = vec![0f32; 12];
+            mk.aggregate_geo(&refs, &mut geo.ctx(None, false), &mut got);
+            assert_eq!(dense, got, "multikrum f={f}");
+            // selection itself is consistent between one-shot and
+            // maintained matrices built from the same inputs
+            let view = Geometry::new(n, &dist);
+            assert_eq!(
+                multikrum_select(&view, f),
+                multikrum_select(&geo.ctx(None, false).geo, f)
+            );
         }
     }
 }

@@ -16,12 +16,20 @@
 //! κ upper bounds follow Allouah et al. [2] (Table 1 / Prop. 32 there);
 //! they are used for *condition checks and diagnostics*, not by the
 //! algorithms themselves.
+//!
+//! Vector-geometry rules (Krum, Multi-Krum, NNM∘F) consume pairwise
+//! distances through a prepared [`geometry::Geometry`] view instead of
+//! computing them — the sparse round engine maintains that view
+//! incrementally ([`geometry::PairwiseGeometry`], O(n²k)/round under the
+//! shared mask).
 
 pub mod cwtm;
 pub mod geomed;
+pub mod geometry;
 pub mod krum;
 pub mod nnm;
 
+use self::geometry::GeoCtx;
 use crate::tensor;
 
 /// A robust aggregation rule over n equal-length vectors.
@@ -45,6 +53,39 @@ pub trait Aggregator: Send + Sync {
     /// of recomputed.
     fn coordinate_separable(&self) -> bool {
         false
+    }
+
+    /// True when the rule's only use of the inputs' vector structure is
+    /// through **pairwise squared distances** plus row copies/averages
+    /// (Krum, Multi-Krum, NNM∘F). Such rules implement
+    /// [`Self::aggregate_geo`] against a prepared [`geometry::Geometry`]
+    /// view, which the sparse round engine maintains incrementally in
+    /// O(n²k) per round under the shared mask
+    /// ([`geometry::PairwiseGeometry`]) instead of letting the rule
+    /// recompute all O(n²d) distances itself. Mutually exclusive with
+    /// [`Self::coordinate_separable`].
+    fn geometry_backed(&self) -> bool {
+        false
+    }
+
+    /// Geometry-backed entry point: aggregate using the prepared pairwise
+    /// distances (and per-rule caches) in `ctx` instead of recomputing
+    /// them — see [`geometry::GeoCtx`] for the carry contract on `out`.
+    /// Rules returning `true` from [`Self::geometry_backed`] must
+    /// override this; the default ignores the geometry and runs the
+    /// plain dense rule.
+    fn aggregate_geo(
+        &self,
+        inputs: &[&[f32]],
+        ctx: &mut GeoCtx<'_>,
+        out: &mut [f32],
+    ) {
+        debug_assert!(
+            !self.geometry_backed(),
+            "geometry-backed rules must override aggregate_geo"
+        );
+        let _ = ctx;
+        self.aggregate(inputs, out);
     }
 
     /// Slice-based entry point: aggregate only the coordinates listed in
@@ -281,6 +322,37 @@ mod tests {
                     agg.name()
                 );
             }
+        }
+    }
+
+    #[test]
+    fn geometry_backed_flags_are_consistent() {
+        // geometry-backed (pairwise-distance selection) and
+        // coordinate-separable are mutually exclusive capabilities; the
+        // engine picks exactly one cached path per rule.
+        let rules: Vec<(Box<dyn Aggregator>, bool)> = vec![
+            (Box::new(Mean), false),
+            (Box::new(cwtm::Cwtm::new(2)), false),
+            (Box::new(cwtm::CwMedian), false),
+            (Box::new(geomed::GeoMed::default()), false),
+            (Box::new(krum::Krum::new(2)), true),
+            (Box::new(krum::MultiKrum::new(2)), true),
+            (
+                Box::new(nnm::Nnm::new(2, Box::new(cwtm::Cwtm::new(2)))),
+                true,
+            ),
+            (
+                Box::new(nnm::Nnm::new(2, Box::new(geomed::GeoMed::default()))),
+                true,
+            ),
+        ];
+        for (agg, geo) in &rules {
+            assert_eq!(agg.geometry_backed(), *geo, "{}", agg.name());
+            assert!(
+                !(agg.geometry_backed() && agg.coordinate_separable()),
+                "{}",
+                agg.name()
+            );
         }
     }
 

@@ -7,10 +7,18 @@
 //! is what the paper's tightness discussion (§3.2) relies on to turn the
 //! condition κB² ≤ 1/25 into f/n ≤ O(1/(1+B²)).
 //!
-//! Cost: O(n²d) — the dominant aggregation term; the pairwise-distance
-//! matrix is shared with Krum's implementation.
+//! Cost: O(n²d) dense — neighborhoods need all pairwise distances and
+//! each mixed vector sums n−f rows. Under the sparse round engine both
+//! halves collapse ([`Aggregator::geometry_backed`]): the distances come
+//! from the maintained [`geometry::PairwiseGeometry`] (O(n²k)/round) and
+//! rows whose neighbor *set* is unchanged carry their mixed vector over —
+//! `scale·previous` off-mask, fresh n−f-row sums only on the k masked
+//! columns ([`geometry::MixCache`]). When additionally every row carried
+//! and F is coordinate-separable, the final output itself is carried
+//! off-mask (`GeoCtx::carry_in`) and F runs only on the masked block —
+//! which is what makes `nnm+cwtm` as cheap as plain CWTM per round.
 
-use super::krum::pairwise_dist_sq;
+use super::geometry::{self, GeoCtx, Geometry};
 use super::{delta_ratio, Aggregator};
 
 pub struct Nnm {
@@ -18,39 +26,81 @@ pub struct Nnm {
     pub inner: Box<dyn Aggregator>,
 }
 
+/// Distance-sorted visit order of all n inputs as seen from row `i`
+/// (self first at distance 0; stable sort, so exact ties keep index
+/// order — identical on every call path given identical distances).
+fn neighbor_order(geo: &Geometry<'_>, i: usize, order: &mut Vec<usize>) {
+    order.clear();
+    order.extend(0..geo.n());
+    let row = geo.row(i);
+    order.sort_by(|&a, &b| row[a].total_cmp(&row[b]));
+}
+
 impl Nnm {
     pub fn new(f: usize, inner: Box<dyn Aggregator>) -> Self {
         Nnm { f, inner }
     }
 
-    /// The mixing step alone (exposed for tests/diagnostics).
+    /// The mixing step alone (exposed for tests/diagnostics): dense
+    /// one-shot distances, no carry.
     pub fn mix(&self, inputs: &[&[f32]]) -> Vec<Vec<f32>> {
         let n = inputs.len();
         let d = inputs[0].len();
-        let m = n - self.f; // neighbors to average, incl. self
-        assert!(m >= 1 && m <= n);
-        let dist = pairwise_dist_sq(inputs);
+        let dist = geometry::pairwise_dist_sq(inputs);
+        let geo = Geometry::new(n, &dist);
         let mut mixed = vec![vec![0.0f32; d]; n];
         let mut order: Vec<usize> = Vec::with_capacity(n);
-        for i in 0..n {
-            order.clear();
-            order.extend(0..n);
-            // self always first (distance 0); partial sort by distance to i
-            order.sort_by(|&a, &b| {
-                dist[i * n + a].total_cmp(&dist[i * n + b])
-            });
-            let inv = 1.0 / m as f32;
-            let mi = &mut mixed[i];
-            for &j in &order[..m] {
-                for (slot, v) in mi.iter_mut().zip(inputs[j]) {
-                    *slot += v;
-                }
-            }
-            for slot in mi.iter_mut() {
-                *slot *= inv;
-            }
+        for (i, mi) in mixed.iter_mut().enumerate() {
+            neighbor_order(&geo, i, &mut order);
+            self.mix_row_into(inputs, &order, mi);
         }
         mixed
+    }
+
+    /// Number of neighbors averaged per row (including self).
+    fn m(&self, n: usize) -> usize {
+        let m = n - self.f;
+        assert!((1..=n).contains(&m));
+        m
+    }
+
+    /// Sum the m nearest rows (per `order`) into `mi` and scale — the
+    /// single mixing kernel shared by the dense and geometry paths, so
+    /// they agree bit-for-bit whenever the visit order does. Writes the
+    /// full row.
+    fn mix_row_into(&self, inputs: &[&[f32]], order: &[usize], mi: &mut [f32]) {
+        let m = self.m(inputs.len());
+        let inv = 1.0 / m as f32;
+        mi.fill(0.0);
+        for &j in &order[..m] {
+            for (slot, v) in mi.iter_mut().zip(inputs[j]) {
+                *slot += v;
+            }
+        }
+        for slot in mi.iter_mut() {
+            *slot *= inv;
+        }
+    }
+
+    /// Same kernel restricted to the masked columns (carry path): off-mask
+    /// values of `mi` are left untouched.
+    fn mix_row_masked(
+        &self,
+        inputs: &[&[f32]],
+        order: &[usize],
+        cols: &[u32],
+        mi: &mut [f32],
+    ) {
+        let m = self.m(inputs.len());
+        let inv = 1.0 / m as f32;
+        for &c in cols {
+            let c = c as usize;
+            let mut acc = 0.0f32;
+            for &j in &order[..m] {
+                acc += inputs[j][c];
+            }
+            mi[c] = acc * inv;
+        }
     }
 }
 
@@ -66,11 +116,79 @@ impl Aggregator for Nnm {
     }
 
     /// Mixing neighborhoods are chosen by full-space distances, so NNM∘F
-    /// is never coordinate-separable (even when F is): the sparse round
-    /// engine falls back to the dense path and `aggregate_block` (trait
-    /// default) is block-local.
+    /// is never coordinate-separable (even when F is): `aggregate_block`
+    /// (trait default) is block-local. The sparse round engine reaches it
+    /// through the geometry path instead.
     fn coordinate_separable(&self) -> bool {
         false
+    }
+
+    fn geometry_backed(&self) -> bool {
+        true
+    }
+
+    /// Cache-carrying mix over the prepared geometry, then the inner rule:
+    ///
+    /// * per row: if the n−f nearest-neighbor **set** is unchanged since
+    ///   last round and the round was a masked update (`ctx.delta`), the
+    ///   cached mixed vector is carried — scaled off-mask, freshly summed
+    ///   on the k masked columns; otherwise the row is re-summed in full;
+    /// * if every row carried, `ctx.carry_in` holds and the inner rule is
+    ///   coordinate-separable, `out`'s off-mask pre-fill (scale×previous
+    ///   aggregate) is kept and F runs only on the masked block;
+    /// * on rebuild rounds (`delta = None`) everything recomputes from
+    ///   the raw rows — bit-identical to the dense oracle.
+    fn aggregate_geo(
+        &self,
+        inputs: &[&[f32]],
+        ctx: &mut GeoCtx<'_>,
+        out: &mut [f32],
+    ) {
+        let n = inputs.len();
+        let d = inputs[0].len();
+        let m = self.m(n);
+        debug_assert_eq!(ctx.geo.n(), n);
+        ctx.mix.ensure_shape(n, d, m);
+        let cache_usable = ctx.mix.is_valid() && ctx.delta.is_some();
+
+        let mut order: Vec<usize> = Vec::with_capacity(n);
+        let mut new_set: Vec<u32> = Vec::with_capacity(m);
+        let mut all_carried = true;
+        for i in 0..n {
+            neighbor_order(&ctx.geo, i, &mut order);
+            new_set.clear();
+            new_set.extend(order[..m].iter().map(|&j| j as u32));
+            new_set.sort_unstable();
+            let carried = cache_usable && ctx.mix.set_row(i) == &new_set[..];
+            if carried {
+                let (cols, scale) = ctx.delta.expect("cache_usable");
+                let mi = ctx.mix.mixed_row_mut(i);
+                for v in mi.iter_mut() {
+                    *v *= scale;
+                }
+                self.mix_row_masked(inputs, &order, cols, mi);
+            } else {
+                all_carried = false;
+                self.mix_row_into(inputs, &order, ctx.mix.mixed_row_mut(i));
+            }
+            ctx.mix.set_row_mut(i).copy_from_slice(&new_set);
+        }
+        ctx.mix.set_valid();
+
+        let refs: Vec<&[f32]> = ctx.mix.mixed_rows().collect();
+        let carry_out = ctx.carry_in
+            && all_carried
+            && self.inner.coordinate_separable();
+        if carry_out {
+            let (cols, _scale) = ctx.delta.expect("carry_in implies delta");
+            let mut block = vec![0.0f32; cols.len()];
+            self.inner.aggregate_block(&refs, cols, &mut block);
+            for (&c, &v) in cols.iter().zip(&block) {
+                out[c as usize] = v;
+            }
+        } else {
+            self.inner.aggregate(&refs, out);
+        }
     }
 
     /// [2], Prop. 32-style composition bound:
@@ -89,6 +207,7 @@ impl Aggregator for Nnm {
 #[cfg(test)]
 mod tests {
     use super::super::cwtm::Cwtm;
+    use super::super::geometry::{PairwiseGeometry, RefreshPeriod};
     use super::super::test_support::*;
     use super::super::{empirical_kappa, Aggregator, Mean};
     use super::*;
@@ -144,5 +263,64 @@ mod tests {
         let k1000 = nnm.kappa(1000, 1);
         assert!(k1000 < k10 / 50.0, "κ must decay ~ f/n: {k10} vs {k1000}");
         assert_eq!(nnm.kappa(10, 0), 0.0);
+    }
+
+    #[test]
+    fn geo_rebuild_path_is_bit_identical_to_dense() {
+        let rows = corrupted_inputs(9, 2, 10, 1e4, 15);
+        let refs = as_refs(&rows);
+        let nnm = Nnm::new(2, Box::new(Cwtm::new(2)));
+        let dense = nnm.aggregate_vec(&refs);
+        let mut geo = PairwiseGeometry::new(9, RefreshPeriod::Never);
+        geo.rebuild(&refs);
+        let mut got = vec![0f32; 10];
+        nnm.aggregate_geo(&refs, &mut geo.ctx(None, false), &mut got);
+        assert_eq!(dense, got);
+    }
+
+    /// Masked momentum rounds: the carry path must track the dense
+    /// recomputation within f32 rounding across a sustained run of
+    /// incremental updates.
+    #[test]
+    fn geo_carry_path_tracks_dense_within_f32_rounding() {
+        let (n, d, k) = (8usize, 24usize, 4usize);
+        let mut rows = corrupted_inputs(n, 2, d, 50.0, 16);
+        let nnm = Nnm::new(2, Box::new(Cwtm::new(2)));
+        let mut geo = PairwiseGeometry::new(n, RefreshPeriod::Never);
+        {
+            let refs = as_refs(&rows);
+            geo.rebuild(&refs);
+            let mut first = vec![0f32; d];
+            nnm.aggregate_geo(&refs, &mut geo.ctx(None, false), &mut first);
+        }
+        let beta = 0.9f32;
+        let mut rng = crate::prng::Pcg64::new(3, 3);
+        for round in 0..25 {
+            let cols = rng.sample_k_of(d, k);
+            {
+                let refs = as_refs(&rows);
+                geo.snapshot(&refs, &cols);
+            }
+            for row in rows.iter_mut() {
+                for v in row.iter_mut() {
+                    *v *= beta;
+                }
+                for &c in &cols {
+                    row[c as usize] += 0.1 * rng.next_gaussian() as f32;
+                }
+            }
+            let refs = as_refs(&rows);
+            geo.apply_masked(&refs, &cols, beta);
+            let mut got = vec![0f32; d];
+            nnm.aggregate_geo(
+                &refs,
+                &mut geo.ctx(Some((cols.as_slice(), beta)), false),
+                &mut got,
+            );
+            let dense = nnm.aggregate_vec(&refs);
+            let rel = tensor::dist_sq(&got, &dense).sqrt()
+                / tensor::norm(&dense).max(1e-9);
+            assert!(rel < 1e-4, "round {round}: rel {rel}");
+        }
     }
 }

@@ -13,6 +13,7 @@ pub mod dasha;
 pub mod rosdhb;
 pub mod rosdhb_u;
 
+use crate::aggregators::geometry::{GeoStats, RefreshPeriod};
 use crate::aggregators::Aggregator;
 use crate::attacks::AttackKind;
 use crate::compression::payload::Payload;
@@ -33,6 +34,10 @@ pub struct RoundEnv<'a> {
     /// Momentum coefficient β.
     pub beta: f32,
     pub aggregator: &'a dyn Aggregator,
+    /// Exact-refresh period of the incremental pairwise geometry
+    /// (`config: geometry_refresh`) — consumed by the sparse round engine
+    /// when the aggregator is geometry-backed.
+    pub geometry_refresh: RefreshPeriod,
     pub attack: &'a AttackKind,
     pub meter: &'a mut ByteMeter,
     /// Round-scoped RNG (attack noise, local masks for Byzantine workers).
@@ -108,6 +113,14 @@ pub trait Algorithm: Send {
     /// first), if the algorithm keeps them — used by the Lyapunov
     /// diagnostics ([`crate::diagnostics`]).
     fn momenta(&self) -> Option<&[Vec<f32>]> {
+        None
+    }
+
+    /// Rebuild/incremental counters of the maintained pairwise geometry,
+    /// if this algorithm runs one (RoSDHB under a geometry-backed
+    /// aggregator) — the parity tests pin "no O(n²d) recompute outside
+    /// refresh rounds" through this.
+    fn geometry_stats(&self) -> Option<GeoStats> {
         None
     }
 
@@ -195,6 +208,7 @@ pub(crate) mod test_env {
         pub n_byz: usize,
         pub k: usize,
         pub beta: f32,
+        pub geometry_refresh: RefreshPeriod,
     }
 
     impl Env {
@@ -209,6 +223,7 @@ pub(crate) mod test_env {
                 n_byz,
                 k,
                 beta: 0.9,
+                geometry_refresh: RefreshPeriod::DEFAULT,
             }
         }
 
@@ -221,6 +236,7 @@ pub(crate) mod test_env {
                 k: self.k,
                 beta: self.beta,
                 aggregator: self.aggregator.as_ref(),
+                geometry_refresh: self.geometry_refresh,
                 attack: &self.attack,
                 meter: &mut self.meter,
                 rng: &mut self.rng,

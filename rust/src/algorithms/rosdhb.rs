@@ -28,21 +28,36 @@
 //!   scatter-add of `(1−β)·α·payload` — bit-identical to the dense
 //!   `scale_add(m, β, 1−β, reconstruct(payload))` law without the O(d)
 //!   zero-fill + read of a reconstruction buffer per worker;
-//! * **aggregation**, when the rule is coordinate-separable
-//!   ([`Aggregator::coordinate_separable`][crate::aggregators::Aggregator])
-//!   and every momentum was updated this round, runs fresh only on the k
-//!   masked columns ([`aggregate_block`][crate::aggregators::Aggregator]);
-//!   the remaining d−k output coordinates are `β·R^{t-1}` by positive
-//!   homogeneity (all unmasked columns scaled uniformly by β). The cached
-//!   coordinates drift from the dense oracle only by f32 rounding — the
-//!   dense path remains available as `round_engine = "dense"` and parity
-//!   is pinned in `rust/tests/test_round_engine.rs`.
+//! * **aggregation** takes one of three cached paths:
+//!   1. *coordinate-separable* rules
+//!      ([`Aggregator::coordinate_separable`][crate::aggregators::Aggregator]),
+//!      when every momentum was updated this round, run fresh only on the
+//!      k masked columns
+//!      ([`aggregate_block`][crate::aggregators::Aggregator]); the
+//!      remaining d−k output coordinates are `β·R^{t-1}` by positive
+//!      homogeneity (all unmasked columns scaled uniformly by β);
+//!   2. *geometry-backed* rules (Krum, Multi-Krum, NNM∘F —
+//!      [`Aggregator::geometry_backed`][crate::aggregators::Aggregator])
+//!      consume a [`PairwiseGeometry`] the engine maintains
+//!      incrementally: the n×n squared-distance matrix advances by the
+//!      rank-k law `dist'ᵢⱼ = β²(distᵢⱼ − Σ_mask(oldᵢ−oldⱼ)²) +
+//!      Σ_mask(newᵢ−newⱼ)²` in O(n²k) per round, with an exact O(n²d)
+//!      rebuild every `config: geometry_refresh` rounds and an automatic
+//!      rebuild whenever a silent/evicted worker breaks the masked-update
+//!      law. Selection outputs (Krum/Multi-Krum) stay bit-identical to
+//!      the dense oracle whenever selections agree; NNM's mix carry
+//!      drifts by f32 rounding only;
+//!   3. everything else falls back to dense `aggregate_vec`.
+//!
+//!   The dense path remains available as `round_engine = "dense"` and
+//!   parity is pinned in `rust/tests/test_round_engine.rs`.
 //!
 //! Any round that violates a precondition (local masks, silent workers,
-//! non-separable aggregator, k = d) transparently falls back to the dense
-//! oracle for that round.
+//! non-separable non-geometry aggregator, k = d) transparently falls back
+//! to the dense oracle for that round.
 
 use super::{byzantine_vectors, Algorithm, RoundEnv, RoundMode};
+use crate::aggregators::geometry::{GeoStats, PairwiseGeometry};
 use crate::attacks::{AttackCtx, AttackKind};
 use crate::compression::codec::mask_wire_len;
 use crate::compression::payload::{absorb_sparse, Payload, TAG_LOCAL_MASK};
@@ -69,6 +84,10 @@ pub struct RoSdhb {
     /// of `momenta` and the aggregator stays fixed.
     agg_cache: Vec<f32>,
     cache_valid: bool,
+    /// Incrementally maintained pairwise distances over `momenta`, built
+    /// lazily on the first sparse round with a geometry-backed aggregator
+    /// (Krum/Multi-Krum/NNM∘F).
+    geometry: Option<PairwiseGeometry>,
 }
 
 impl RoSdhb {
@@ -91,6 +110,7 @@ impl RoSdhb {
             block: Vec::new(),
             agg_cache: vec![0.0; d],
             cache_valid: false,
+            geometry: None,
         }
     }
 }
@@ -134,6 +154,10 @@ impl Algorithm for RoSdhb {
 
     fn momenta(&self) -> Option<&[Vec<f32>]> {
         Some(&self.momenta)
+    }
+
+    fn geometry_stats(&self) -> Option<GeoStats> {
+        self.geometry.as_ref().map(|g| g.stats)
     }
 }
 
@@ -210,6 +234,31 @@ impl RoSdhb {
         // their stale momenta still enter the aggregation, untouched.
         let all_sent = n_updated == self.momenta.len();
 
+        // -- geometry path setup (Krum/Multi-Krum/NNM∘F). The masked
+        // momentum update is about to overwrite the `old` side of the
+        // incremental distance law, so snapshot the masked columns now.
+        // A round with silent workers breaks the law (their rows keep
+        // their unscaled off-mask values) — the matrix is rebuilt after
+        // the update instead, exactly like a membership change.
+        let use_geo = sparse && env.aggregator.geometry_backed();
+        let incremental = if use_geo {
+            let geo = self.geometry.get_or_insert_with(|| {
+                PairwiseGeometry::new(
+                    self.momenta.len(),
+                    env.geometry_refresh,
+                )
+            });
+            let inc = all_sent && geo.can_increment();
+            if inc {
+                let refs: Vec<&[f32]> =
+                    self.momenta.iter().map(|m| m.as_slice()).collect();
+                geo.snapshot(&refs, &mask.idx);
+            }
+            inc
+        } else {
+            false
+        };
+
         // -- steps 4+5: meter uplink, reconstruct, momentum
         for w in 0..n_updated {
             env.meter.record_uplink_sized(
@@ -241,7 +290,40 @@ impl RoSdhb {
             && env.aggregator.coordinate_separable();
         let refs: Vec<&[f32]> =
             self.momenta.iter().map(|m| m.as_slice()).collect();
-        let out = if use_cached {
+        let out = if use_geo {
+            // Geometry path: advance the pairwise matrix (O(n²k)
+            // incrementally, O(n²d) on first/refresh/silent-worker
+            // rounds), then let the rule select/mix from the prepared
+            // distances instead of recomputing them.
+            let geo = self
+                .geometry
+                .as_mut()
+                .expect("created before the momentum update");
+            if incremental {
+                geo.apply_masked(&refs, &mask.idx, env.beta);
+            } else {
+                geo.rebuild(&refs);
+            }
+            let carry_in = incremental && self.cache_valid;
+            let mut out = vec![0.0f32; d];
+            if carry_in {
+                // pre-fill with β·R^{t-1}: rules whose selection state
+                // proves the carry law (NNM with unchanged neighbor sets
+                // over a separable inner rule) keep the off-mask part and
+                // only write the masked block.
+                for (o, c) in out.iter_mut().zip(&self.agg_cache) {
+                    *o = env.beta * c;
+                }
+            }
+            let delta = if incremental {
+                Some((mask.idx.as_slice(), env.beta))
+            } else {
+                None
+            };
+            let mut ctx = geo.ctx(delta, carry_in);
+            env.aggregator.aggregate_geo(&refs, &mut ctx, &mut out);
+            out
+        } else if use_cached {
             // Unmasked columns all scaled uniformly by β this round, so
             // F restricted there is β·R^{t-1}; only the k masked columns
             // need fresh aggregation.
@@ -536,10 +618,12 @@ mod tests {
     }
 
     #[test]
-    fn sparse_is_bitwise_equal_to_dense_with_nonseparable_aggregator() {
-        // nnm+cwtm is not coordinate-separable: the sparse engine keeps
-        // dense aggregation but uses in-place scale+scatter momentum
-        // updates, which must reproduce the dense oracle bit for bit.
+    fn sparse_geometry_refresh_1_is_bitwise_equal_to_dense() {
+        // nnm+cwtm rides the geometry engine under the sparse mode; with
+        // geometry_refresh = 1 every round rebuilds the matrix exactly
+        // and recomputes the mix from the raw momenta, so the run must
+        // reproduce the dense oracle bit for bit.
+        use crate::aggregators::geometry::RefreshPeriod;
         let (d, nh, k) = (64, 5, 8);
         let mut env_d = Env::new(d, nh, 0, k);
         let mut env_s = Env::new(d, nh, 0, k);
@@ -547,6 +631,7 @@ mod tests {
             crate::aggregators::parse_spec("nnm+cwtm", 0).unwrap();
         env_s.aggregator =
             crate::aggregators::parse_spec("nnm+cwtm", 0).unwrap();
+        env_s.geometry_refresh = RefreshPeriod::Every(1);
         let mut dense = RoSdhb::with_mode(d, nh, false, RoundMode::Dense);
         let mut sparse = RoSdhb::with_mode(d, nh, false, RoundMode::Sparse);
         for t in 1..=10u64 {
@@ -556,6 +641,112 @@ mod tests {
             assert_eq!(rd, rs, "round {t}");
         }
         assert_eq!(dense.momenta, sparse.momenta);
+        let stats = sparse.geometry_stats().unwrap();
+        assert_eq!(stats.rebuilds, 10);
+        assert_eq!(stats.incrementals, 0);
+    }
+
+    #[test]
+    fn sparse_geometry_carry_tracks_dense_for_nnm() {
+        // geometry_refresh = never: after the first rebuild every round
+        // is a rank-k incremental update and NNM carries its mixed
+        // vectors off-mask — f32-rounding drift only, O(n²k) distance
+        // work pinned by the counters.
+        use crate::aggregators::geometry::RefreshPeriod;
+        let (d, nh, k) = (64, 5, 8);
+        let mut env_d = Env::new(d, nh, 0, k);
+        let mut env_s = Env::new(d, nh, 0, k);
+        env_d.aggregator =
+            crate::aggregators::parse_spec("nnm+cwtm", 0).unwrap();
+        env_s.aggregator =
+            crate::aggregators::parse_spec("nnm+cwtm", 0).unwrap();
+        env_s.geometry_refresh = RefreshPeriod::Never;
+        let mut dense = RoSdhb::with_mode(d, nh, false, RoundMode::Dense);
+        let mut sparse = RoSdhb::with_mode(d, nh, false, RoundMode::Sparse);
+        let mut max_rel = 0.0f64;
+        for t in 1..=40u64 {
+            let grads = varied_grads(d, nh, t);
+            let rd = dense.round(t, &grads, &[], &mut env_d.env());
+            let rs = sparse.round(t, &grads, &[], &mut env_s.env());
+            let num = crate::tensor::dist_sq(&rd, &rs).sqrt();
+            let den = crate::tensor::norm(&rd).max(1e-12);
+            max_rel = max_rel.max(num / den);
+        }
+        assert!(max_rel < 1e-4, "geometry carry drifted: rel {max_rel}");
+        // momenta updates are identical on both paths regardless
+        assert_eq!(dense.momenta, sparse.momenta);
+        let stats = sparse.geometry_stats().unwrap();
+        assert_eq!(stats.rebuilds, 1, "only the first round may be O(n²d)");
+        assert_eq!(stats.incrementals, 39);
+    }
+
+    #[test]
+    fn krum_geometry_selection_is_bitwise_equal_to_dense() {
+        // Krum copies a momentum row: as long as the (drifting) distance
+        // matrix keeps selecting the same row, the sparse output is the
+        // dense output bit for bit — across an alie attack, where all
+        // Byzantine slots send every round (steady incremental state).
+        use crate::aggregators::geometry::RefreshPeriod;
+        let (d, nh, f, k) = (64, 6, 2, 8);
+        for agg in ["krum", "multikrum"] {
+            let mut env_d = Env::new(d, nh, f, k);
+            let mut env_s = Env::new(d, nh, f, k);
+            env_d.attack = crate::attacks::parse_spec("alie").unwrap();
+            env_s.attack = crate::attacks::parse_spec("alie").unwrap();
+            env_d.aggregator =
+                crate::aggregators::parse_spec(agg, f).unwrap();
+            env_s.aggregator =
+                crate::aggregators::parse_spec(agg, f).unwrap();
+            env_s.geometry_refresh = RefreshPeriod::Never;
+            let mut dense =
+                RoSdhb::with_mode(d, nh + f, false, RoundMode::Dense);
+            let mut sparse =
+                RoSdhb::with_mode(d, nh + f, false, RoundMode::Sparse);
+            for t in 1..=40u64 {
+                let grads = varied_grads(d, nh, t);
+                let rd = dense.round(t, &grads, &[], &mut env_d.env());
+                let rs = sparse.round(t, &grads, &[], &mut env_s.env());
+                assert_eq!(rd, rs, "{agg} round {t}");
+            }
+            assert_eq!(dense.momenta, sparse.momenta, "{agg}");
+            let stats = sparse.geometry_stats().unwrap();
+            assert_eq!(stats.rebuilds, 1, "{agg}");
+            assert_eq!(stats.incrementals, 39, "{agg}");
+        }
+    }
+
+    #[test]
+    fn silent_round_triggers_geometry_rebuild_then_incremental_resumes() {
+        // Mid-run membership event: rounds 1-5 all workers send (alie),
+        // round 6 the Byzantine slots go silent (attack none) — the
+        // masked-update law breaks, the matrix is rebuilt — and from
+        // round 7 the incremental path resumes. Krum outputs stay
+        // bit-identical to the dense oracle throughout.
+        use crate::aggregators::geometry::RefreshPeriod;
+        let (d, nh, f, k) = (48, 5, 2, 6);
+        let mut env_d = Env::new(d, nh, f, k);
+        let mut env_s = Env::new(d, nh, f, k);
+        for e in [&mut env_d, &mut env_s] {
+            e.aggregator = crate::aggregators::parse_spec("krum", f).unwrap();
+        }
+        env_s.geometry_refresh = RefreshPeriod::Never;
+        let mut dense = RoSdhb::with_mode(d, nh + f, false, RoundMode::Dense);
+        let mut sparse =
+            RoSdhb::with_mode(d, nh + f, false, RoundMode::Sparse);
+        for t in 1..=12u64 {
+            let attack = if t == 6 { "none" } else { "alie" };
+            env_d.attack = crate::attacks::parse_spec(attack).unwrap();
+            env_s.attack = crate::attacks::parse_spec(attack).unwrap();
+            let grads = varied_grads(d, nh, t);
+            let rd = dense.round(t, &grads, &[], &mut env_d.env());
+            let rs = sparse.round(t, &grads, &[], &mut env_s.env());
+            assert_eq!(rd, rs, "round {t}");
+        }
+        let stats = sparse.geometry_stats().unwrap();
+        // round 1 (first build) + round 6 (silent slots) rebuilt; the
+        // other 10 rounds were rank-k updates
+        assert_eq!(stats.rebuilds, 2);
+        assert_eq!(stats.incrementals, 10);
     }
 
     #[test]

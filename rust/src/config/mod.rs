@@ -147,6 +147,13 @@ pub struct ExperimentConfig {
     /// [`crate::algorithms::RoundMode`]. "dense" is the oracle path the
     /// sparse engine is tested against.
     pub round_engine: String,
+    /// Exact-refresh period of the incrementally maintained pairwise
+    /// geometry used by Krum/Multi-Krum/NNM under the sparse engine:
+    /// `"never"`, or an integer p ≥ 1 — the n×n distance matrix is
+    /// rebuilt from the raw momenta every p-th round (p = 1 disables
+    /// incremental updates entirely and is bit-identical to the dense
+    /// oracle). See [`crate::aggregators::geometry::RefreshPeriod`].
+    pub geometry_refresh: String,
     /// Round-exchange transport: "local" (in-process worker pool — the
     /// tested oracle) or "tcp" (socket-backed coordinator/worker split;
     /// run the coordinator with `rosdhb serve` and each worker with
@@ -197,6 +204,7 @@ impl ExperimentConfig {
             test_size: 10_000,
             pool_size: 0,
             round_engine: "auto".into(),
+            geometry_refresh: "64".into(),
             transport: "local".into(),
             listen_addr: "127.0.0.1:7177".into(),
             coordinator_addr: "127.0.0.1:7177".into(),
@@ -259,6 +267,18 @@ impl ExperimentConfig {
         if let Some(v) = get("round_engine") {
             c.round_engine =
                 v.as_str().ok_or("round_engine: want string")?.into();
+        }
+        if let Some(v) = get("geometry_refresh") {
+            // accept both `geometry_refresh = 8` and `= "never"`
+            c.geometry_refresh = match v.as_str() {
+                Some(s) => s.into(),
+                None => {
+                    let x = v
+                        .as_f64()
+                        .ok_or("geometry_refresh: want int or \"never\"")?;
+                    format!("{}", x as u64)
+                }
+            };
         }
         if let Some(v) = get("transport") {
             c.transport = v.as_str().ok_or("transport: want string")?.into();
@@ -353,6 +373,9 @@ impl ExperimentConfig {
                 "test_size" => c.test_size = tmp.test_size,
                 "pool_size" => c.pool_size = tmp.pool_size,
                 "round_engine" => c.round_engine = tmp.round_engine.clone(),
+                "geometry_refresh" => {
+                    c.geometry_refresh = tmp.geometry_refresh.clone()
+                }
                 "transport" => c.transport = tmp.transport.clone(),
                 "listen_addr" => c.listen_addr = tmp.listen_addr.clone(),
                 "coordinator_addr" => {
@@ -417,6 +440,9 @@ impl ExperimentConfig {
         // single source of truth for the accepted values (algorithms::build
         // later unwraps the same parse)
         crate::algorithms::RoundMode::parse(&self.round_engine)?;
+        crate::aggregators::geometry::RefreshPeriod::parse(
+            &self.geometry_refresh,
+        )?;
         match self.transport.as_str() {
             "local" => {}
             "tcp" => {
@@ -637,6 +663,31 @@ mod tests {
         c.set("pool_size", "4").unwrap();
         assert_eq!(c.pool_size, 4);
         assert!(c.set("round_engine", "banana").is_err());
+
+        // geometry_refresh: "never" or an integer period >= 1
+        assert_eq!(c.geometry_refresh, "64");
+        c.set("geometry_refresh", "never").unwrap();
+        assert_eq!(c.geometry_refresh, "never");
+        c.set("geometry_refresh", "8").unwrap();
+        assert_eq!(c.geometry_refresh, "8");
+        assert!(c.set("geometry_refresh", "0").is_err());
+        assert!(c.set("geometry_refresh", "often").is_err());
+        let doc = toml::TomlDoc::parse(
+            "[experiment]\ngeometry_refresh = 8\n",
+        )
+        .unwrap();
+        assert_eq!(
+            ExperimentConfig::from_toml(&doc).unwrap().geometry_refresh,
+            "8"
+        );
+        let doc = toml::TomlDoc::parse(
+            "[experiment]\ngeometry_refresh = \"never\"\n",
+        )
+        .unwrap();
+        assert_eq!(
+            ExperimentConfig::from_toml(&doc).unwrap().geometry_refresh,
+            "never"
+        );
 
         let doc = toml::TomlDoc::parse(
             "[experiment]\nround_engine = \"dense\"\npool_size = 2\n",

@@ -46,9 +46,10 @@
 pub mod pool;
 pub mod round_transport;
 
+use crate::aggregators::geometry::{GeoStats, RefreshPeriod};
+use crate::aggregators::{self, Aggregator};
 use crate::algorithms::{self, Algorithm, RoundEnv};
 use crate::attacks::{self, AttackKind};
-use crate::aggregators::{self, Aggregator};
 use crate::compression::RandK;
 use crate::config::{Dataset as DatasetCfg, Engine, ExperimentConfig};
 use crate::data::{self, Dataset};
@@ -177,6 +178,9 @@ pub struct Trainer {
     rng: Pcg64,
     pub log: MetricsLog,
     k: usize,
+    /// Parsed `config: geometry_refresh` (exact-refresh period of the
+    /// sparse engine's incremental pairwise geometry).
+    geometry_refresh: RefreshPeriod,
     /// Set when loss/update became non-finite; `run()` stops gracefully.
     pub diverged: bool,
     /// Per-worker reusable gradient buffers (honest slots first, then
@@ -290,6 +294,8 @@ impl Trainer {
             rng: crate::prng::round_stream(cfg.seed),
             log: MetricsLog::default(),
             k,
+            geometry_refresh: RefreshPeriod::parse(&cfg.geometry_refresh)
+                .map_err(|e| anyhow!(e))?,
             diverged: false,
             grad_store: vec![vec![0f32; d]; n_grad],
             loss_store: vec![0f32; n_grad],
@@ -322,6 +328,14 @@ impl Trainer {
         self.transport.net_stats()
     }
 
+    /// Rebuild/incremental counters of the algorithm's maintained
+    /// pairwise geometry (sparse engine + geometry-backed aggregator
+    /// only) — lets tests pin "no O(n²d) distance recompute outside
+    /// refresh rounds".
+    pub fn geometry_stats(&self) -> Option<GeoStats> {
+        self.algorithm.geometry_stats()
+    }
+
     /// Release transport resources (tcp: tell workers the run is over).
     /// Also happens on drop.
     pub fn shutdown_transport(&mut self) {
@@ -347,6 +361,7 @@ impl Trainer {
             k: self.k,
             beta: self.cfg.beta,
             aggregator: self.aggregator.as_ref(),
+            geometry_refresh: self.geometry_refresh,
             attack: &self.attack,
             meter: &mut self.meter,
             rng: &mut self.rng,

@@ -30,6 +30,20 @@ pub fn time_fn<F: FnMut()>(
     xs
 }
 
+/// [`time_fn`], plus recording the samples into `rec` for a later
+/// [`write_json`] — the pattern every JSON-emitting bench shares.
+pub fn time_fn_recorded<F: FnMut()>(
+    rec: &mut Vec<(String, Vec<f64>)>,
+    name: &str,
+    warmup: usize,
+    samples: usize,
+    f: F,
+) -> Vec<f64> {
+    let xs = time_fn(name, warmup, samples, f);
+    rec.push((name.to_string(), xs.clone()));
+    xs
+}
+
 /// Print a criterion-style summary line for externally collected samples.
 pub fn report(name: &str, xs: &[f64]) {
     println!(

@@ -11,6 +11,7 @@
 //! bookkeeping, but not for per-worker densification.
 
 use rosdhb::aggregators;
+use rosdhb::aggregators::geometry::RefreshPeriod;
 use rosdhb::algorithms::rosdhb_u::RoSdhbU;
 use rosdhb::algorithms::{Algorithm, RoundEnv};
 use rosdhb::attacks::AttackKind;
@@ -71,6 +72,7 @@ fn steady_state_bytes_per_round(spec: CompressorSpec, d: usize, n: usize) -> u64
                 k: d,
                 beta: 0.9,
                 aggregator: aggregator.as_ref(),
+                geometry_refresh: RefreshPeriod::DEFAULT,
                 attack: &attack,
                 meter: &mut meter,
                 rng: &mut rng,

@@ -3,7 +3,12 @@
 //! * the `RunReport` (loss trajectory, byte counters, τ-crossing) is
 //!   bit-identical for any worker-pool size — the pool is pure mechanics;
 //! * the sparse-domain round engine matches the dense oracle across all
-//!   four aggregator families and every attack kind.
+//!   four aggregator families and every attack kind;
+//! * the incremental geometry engine (Krum/Multi-Krum/NNM∘F under the
+//!   shared mask): selection outputs bit-identical to the dense oracle,
+//!   O(n²k) per-round distance work pinned by rebuild counters, drift
+//!   bounded across `geometry_refresh` policies, and silent-worker
+//!   rounds triggering exact rebuilds.
 
 use rosdhb::config::ExperimentConfig;
 use rosdhb::coordinator::Trainer;
@@ -81,7 +86,8 @@ fn sparse_engine_matches_dense_oracle_across_grid() {
     // rules take the sparse engine's dense-aggregation fallback and match
     // exactly; separable rules use the cached column path and may drift
     // from the oracle by f32 rounding only.
-    for agg in ["cwtm", "median", "geomed", "krum", "nnm+cwtm"] {
+    for agg in ["cwtm", "median", "geomed", "krum", "multikrum",
+                "nnm+cwtm", "nnm+geomed"] {
         for attack in ["none", "alie", "ipm", "signflip", "noise", "mimic",
                        "labelflip"] {
             let mut cd = base(12);
@@ -133,6 +139,163 @@ fn sparse_engine_matches_dense_oracle_across_grid() {
             );
         }
     }
+}
+
+// ------------------------------------------------ incremental geometry
+
+/// Run `rounds` steps on a dense-oracle trainer and a sparse trainer with
+/// the given `geometry_refresh`, asserting per-round (loss, ‖R‖) and
+/// cumulative byte parity with `bitwise` equality or a relative bound.
+fn geometry_parity_run(
+    agg: &str,
+    attack: &str,
+    refresh: &str,
+    rounds: usize,
+    bitwise: bool,
+) -> (rosdhb::coordinator::Trainer, rosdhb::coordinator::Trainer) {
+    let mut cd = base(rounds);
+    cd.aggregator = agg.into();
+    cd.attack = attack.into();
+    cd.round_engine = "dense".into();
+    let mut cs = cd.clone();
+    cs.round_engine = "sparse".into();
+    cs.geometry_refresh = refresh.into();
+    let mut td = Trainer::from_config(&cd).unwrap();
+    let mut ts = Trainer::from_config(&cs).unwrap();
+    for t in 1..=rounds as u64 {
+        let (ld, ud) = td.step(t).unwrap();
+        let (ls, us) = ts.step(t).unwrap();
+        if bitwise {
+            assert_eq!(ld, ls, "{agg}/{attack}/{refresh} round {t} loss");
+            assert_eq!(ud, us, "{agg}/{attack}/{refresh} round {t} update");
+        } else {
+            assert!(
+                (ld - ls).abs() <= 1e-3 * (1.0 + ld.abs()),
+                "{agg}/{attack}/{refresh} round {t}: {ld} vs {ls}"
+            );
+        }
+    }
+    let last_d = td.log.rows.last().unwrap();
+    let last_s = ts.log.rows.last().unwrap();
+    assert_eq!(
+        last_d.uplink_bytes, last_s.uplink_bytes,
+        "{agg}/{attack}/{refresh} uplink"
+    );
+    assert_eq!(
+        last_d.downlink_bytes, last_s.downlink_bytes,
+        "{agg}/{attack}/{refresh} downlink"
+    );
+    (td, ts)
+}
+
+#[test]
+fn geometry_selection_rules_bit_identical_over_30_rounds() {
+    // Krum/Multi-Krum copy/average momentum rows selected from the
+    // (incrementally maintained, refresh = never) distance matrix: as
+    // long as selections agree with the exact matrix — and the f64 drift
+    // is ~10 orders below the score gaps — the whole trajectory is
+    // bit-identical to the dense oracle. Selection parity is implied:
+    // a differing selection would change the copied rows bit-wise.
+    for agg in ["krum", "multikrum"] {
+        let (td, ts) = geometry_parity_run(agg, "alie", "never", 32, true);
+        assert_eq!(td.params, ts.params, "{agg}");
+        let stats = ts.geometry_stats().unwrap();
+        assert_eq!(stats.rebuilds, 1, "{agg}: only round 1 may be O(n²d)");
+        assert_eq!(stats.incrementals, 31, "{agg}");
+        assert!(td.geometry_stats().is_none(), "dense oracle keeps none");
+    }
+}
+
+#[test]
+fn geometry_nnm_compositions_bit_identical_at_refresh_1() {
+    // geometry_refresh = 1 rebuilds the matrix and the mix cache every
+    // round: the geometry path then computes exactly what the dense
+    // oracle computes, for both separable (cwtm) and vector (geomed)
+    // inner rules.
+    for agg in ["nnm+cwtm", "nnm+geomed"] {
+        let (td, ts) = geometry_parity_run(agg, "alie", "1", 30, true);
+        assert_eq!(td.params, ts.params, "{agg}");
+        let stats = ts.geometry_stats().unwrap();
+        assert_eq!(stats.rebuilds, 30, "{agg}");
+        assert_eq!(stats.incrementals, 0, "{agg}");
+    }
+}
+
+#[test]
+fn geometry_refresh_drift_is_bounded() {
+    // Incremental rounds carry NNM's mixed vectors (and the off-mask
+    // output block) — f32-rounding drift only, for every refresh policy.
+    for agg in ["nnm+cwtm", "nnm+geomed"] {
+        for refresh in ["8", "never"] {
+            let (td, ts) =
+                geometry_parity_run(agg, "alie", refresh, 30, false);
+            let num: f64 = td
+                .params
+                .iter()
+                .zip(&ts.params)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            let den: f64 = td
+                .params
+                .iter()
+                .map(|&a| (a as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+                .max(1e-9);
+            assert!(
+                num / den < 1e-3,
+                "{agg}/{refresh}: params rel diff {}",
+                num / den
+            );
+        }
+    }
+}
+
+#[test]
+fn geometry_distance_work_is_o_n2k_outside_refresh_rounds() {
+    // The acceptance counter: under alie every slot sends every round,
+    // so with refresh = never exactly one O(n²d) rebuild happens (round
+    // 1) and with refresh = 8 they happen at rounds 1, 9, 17, 25. Silent
+    // Byzantine slots (attack = none) break the masked-update law and
+    // force an exact rebuild every round — the eviction/membership path.
+    let run = |attack: &str, refresh: &str, rounds: usize| {
+        let mut c = base(rounds);
+        c.aggregator = "nnm+cwtm".into();
+        c.attack = attack.into();
+        c.round_engine = "sparse".into();
+        c.geometry_refresh = refresh.into();
+        let mut t = Trainer::from_config(&c).unwrap();
+        t.run().unwrap();
+        t.geometry_stats().unwrap()
+    };
+    let s = run("alie", "never", 30);
+    assert_eq!(s.rebuilds, 1);
+    assert_eq!(s.incrementals, 29);
+    let s = run("alie", "8", 30);
+    assert_eq!(s.rebuilds, 4);
+    assert_eq!(s.incrementals, 26);
+    let s = run("none", "never", 8);
+    assert_eq!(s.rebuilds, 8, "silent slots must rebuild every round");
+    assert_eq!(s.incrementals, 0);
+}
+
+#[test]
+fn geometry_unused_on_dense_engine_and_separable_rules() {
+    // round_engine = dense never builds a geometry; separable rules
+    // (cwtm) keep the block-carry path and never build one either.
+    let mut c = base(6);
+    c.aggregator = "krum".into();
+    c.round_engine = "dense".into();
+    let mut t = Trainer::from_config(&c).unwrap();
+    t.run().unwrap();
+    assert!(t.geometry_stats().is_none());
+    let mut c = base(6);
+    c.aggregator = "cwtm".into();
+    c.round_engine = "sparse".into();
+    let mut t = Trainer::from_config(&c).unwrap();
+    t.run().unwrap();
+    assert!(t.geometry_stats().is_none());
 }
 
 #[test]

@@ -3,6 +3,7 @@
 //! quadratic world where (G, B, L) are exact.
 
 use rosdhb::aggregators;
+use rosdhb::aggregators::geometry::RefreshPeriod;
 use rosdhb::algorithms::{baselines, rosdhb::RoSdhb, Algorithm, RoundEnv};
 use rosdhb::attacks::{parse_spec as parse_attack, AttackKind};
 use rosdhb::diagnostics;
@@ -55,6 +56,7 @@ impl Sim {
             k: self.k,
             beta: self.beta,
             aggregator: self.agg.as_ref(),
+            geometry_refresh: RefreshPeriod::DEFAULT,
             attack: &self.attack,
             meter: &mut self.meter,
             rng: &mut self.rng,
@@ -183,6 +185,7 @@ fn naive_combination_fails_where_rosdhb_survives() {
             k: D / 16,
             beta: 0.0,
             aggregator: agg.as_ref(),
+            geometry_refresh: RefreshPeriod::DEFAULT,
             attack: &attack,
             meter: &mut meter,
             rng: &mut rng,
