@@ -1,0 +1,191 @@
+//! Downlink/transport profile (PR 5): per-round downlink bytes and
+//! coordinator egress for dense vs delta broadcasts under flat vs
+//! relay-tree fan-out, plus the hot-path cost of the delta codec itself
+//! (carry detection, frame encode/decode, replica apply).
+//!
+//! Byte rows are *models* (exact — pinned against measured socket bytes
+//! in `rust/tests/test_downlink.rs`), recorded into the JSON as
+//! single-sample entries so the per-PR artifact tracks them; timing rows
+//! are measured as usual.
+//!
+//! Run: `cargo bench --bench bench_transport`. `BENCH_SMOKE=1` shortens
+//! the pass (the CI smoke-bench job uses it); the JSON lands at
+//! `BENCH_transport.json` (override with `BENCH_JSON=path`).
+
+use rosdhb::compression::{mask_from_seed, RandK};
+use rosdhb::prng::Pcg64;
+use rosdhb::transport::downlink::{
+    DownlinkCodec, DownlinkReplica, FanoutPlan,
+};
+use rosdhb::transport::{broadcast_len, WireMessage};
+use rosdhb::util::bench;
+use rosdhb::util::bench::time_fn_recorded as timed;
+
+const D: usize = 11_809;
+const K: usize = 590; // k/d = 0.05
+const SEED: u64 = 9;
+const BETA: f32 = 0.9;
+
+/// A carry-law-obeying aggregate for round `t` given the previous one.
+fn carried_update(prev: &[f32], t: u64, rng: &mut Pcg64) -> Vec<f32> {
+    let mut u: Vec<f32> = prev.iter().map(|p| BETA * p).collect();
+    let mask = mask_from_seed(RandK::round_seed(SEED, t), D, K);
+    for &c in &mask.idx {
+        u[c as usize] = rng.next_gaussian() as f32;
+    }
+    u
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE")
+        .map(|v| v == "1" || v == "true")
+        .unwrap_or(false)
+        || std::env::args().any(|a| a == "--smoke");
+    if smoke {
+        println!("# smoke mode: shortened sample counts");
+    }
+    let scale = |n: usize| if smoke { (n / 5).max(2) } else { n };
+    let mut rec: Vec<(String, Vec<f64>)> = Vec::new();
+    let mut rng = Pcg64::new(4, 4);
+
+    // ---- byte model: per-round downlink bytes + coordinator egress ----
+    // delta steady-state frame (sparse payload): measure it off the real
+    // codec so the numbers cannot drift from the implementation
+    let mut codec = DownlinkCodec::new(D, K, SEED, BETA);
+    let mut prev = vec![0f32; D];
+    rng.fill_gaussian(&mut prev, 1.0);
+    codec.note_update(1, &prev); // dense basis
+    let u2 = carried_update(&prev, 2, &mut rng);
+    codec.note_update(2, &u2);
+    let delta_frame = codec.frame_len(3);
+    let dense_frame = broadcast_len(D, true);
+    println!(
+        "# per-round downlink frames at d={D}, k/d=0.05: dense {dense_frame} B, delta {delta_frame} B"
+    );
+    println!(
+        "# {:<28} {:>16} {:>18}",
+        "topology (per round)", "delivered bytes", "coordinator egress"
+    );
+    for n in [19usize, 100] {
+        for (name, frame, fanout) in [
+            ("dense-flat", dense_frame, FanoutPlan::Flat),
+            ("delta-flat", delta_frame, FanoutPlan::Flat),
+            (
+                "delta-tree-b3",
+                delta_frame,
+                FanoutPlan::Tree { branching: 3 },
+            ),
+        ] {
+            let delivered = (frame * n) as f64;
+            let egress = (frame * fanout.direct_count(n)) as f64;
+            println!(
+                "# n={n:<4} {name:<20} {delivered:>16} {egress:>18}"
+            );
+            rec.push((
+                format!("model/n{n}/{name}/downlink_bytes_per_round"),
+                vec![delivered],
+            ));
+            rec.push((
+                format!("model/n{n}/{name}/coordinator_egress_per_round"),
+                vec![egress],
+            ));
+        }
+        let flat = (dense_frame * n) as f64;
+        let tree = (delta_frame
+            * FanoutPlan::Tree { branching: 3 }.direct_count(n))
+            as f64;
+        println!(
+            "#   -> delta+tree egress reduction at n={n}: {:.1}x",
+            flat / tree
+        );
+    }
+
+    // ---- timing: the codec hot path -----------------------------------
+    // carry detection + delta re-encode per round (the server-side cost
+    // the delta downlink adds to a round)
+    let mut t = 2u64;
+    let mut cur = u2.clone();
+    timed(
+        &mut rec,
+        "codec/note_update carry round (d=11809)",
+        3,
+        scale(100),
+        || {
+            t += 1;
+            cur = carried_update(&cur, t, &mut rng);
+            codec.note_update(t, &cur);
+        },
+    );
+    // a carry-breaking aggregate: full off-mask compare + dense fallback
+    let mut fresh = vec![0f32; D];
+    timed(
+        &mut rec,
+        "codec/note_update dense fallback (d=11809)",
+        3,
+        scale(50),
+        || {
+            t += 1;
+            rng.fill_gaussian(&mut fresh, 1.0);
+            codec.note_update(t, &fresh);
+        },
+    );
+
+    // frame encode/decode at the steady-state delta size
+    let mut codec2 = DownlinkCodec::new(D, K, SEED, BETA);
+    codec2.note_update(1, &prev);
+    let u = carried_update(&prev, 2, &mut rng);
+    codec2.note_update(2, &u);
+    let frame = codec2.frame(3).clone();
+    let mut buf: Vec<u8> = Vec::new();
+    timed(&mut rec, "frame/encode delta (k=590)", 5, scale(200), || {
+        buf = frame.encode();
+        std::hint::black_box(&buf);
+    });
+    let bytes = frame.encode();
+    timed(&mut rec, "frame/decode delta (k=590)", 5, scale(200), || {
+        let back = WireMessage::decode(&bytes, D).unwrap();
+        std::hint::black_box(&back);
+    });
+
+    // worker-side replica apply: β-carry + scatter + clip/step
+    let mut replica =
+        DownlinkReplica::new(K, 0.05, 1.0, 0.0, vec![0f32; D]);
+    let WireMessage::UpdateBroadcast {
+        prev_mask_seed,
+        beta,
+        payload,
+        ..
+    } = frame
+    else {
+        unreachable!()
+    };
+    // basis first, then time the delta applies on increasing rounds
+    replica
+        .apply(
+            2,
+            0,
+            BETA,
+            &rosdhb::compression::payload::Payload::Dense {
+                values: prev.clone(),
+            },
+        )
+        .unwrap();
+    let mut round = 2u64;
+    timed(
+        &mut rec,
+        "replica/apply delta frame (d=11809)",
+        3,
+        scale(100),
+        || {
+            round += 1;
+            replica.apply(round, prev_mask_seed, beta, &payload).unwrap();
+        },
+    );
+
+    let json_path = std::env::var("BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_transport.json".to_string());
+    match bench::write_json(&json_path, &rec) {
+        Ok(()) => println!("# wrote {} entries to {json_path}", rec.len()),
+        Err(e) => eprintln!("# failed to write {json_path}: {e}"),
+    }
+}

@@ -57,13 +57,22 @@ pub(crate) fn krum_select(geo: &Geometry<'_>, f: usize) -> usize {
 /// Multi-Krum's m = n−f best-scored inputs, returned **ascending by
 /// index** so the averaging order is pinned by the selected *set* alone
 /// (score order may drift between refreshes without changing the sum).
+///
+/// Partial selection (`select_nth_unstable_by`) on the total order
+/// (score, index) replaces the former full `O(n log n)` stable sort:
+/// ties at the m-th score resolve by index exactly as the stable sort
+/// did, so the selected set — and the averaged output — is bit-identical.
 pub(crate) fn multikrum_select(geo: &Geometry<'_>, f: usize) -> Vec<usize> {
     let n = geo.n();
     let m = n - f;
     let sc = scores(geo, f);
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&a, &b| sc[a].total_cmp(&sc[b]));
-    order.truncate(m);
+    let cmp =
+        |a: &usize, b: &usize| sc[*a].total_cmp(&sc[*b]).then(a.cmp(b));
+    if m < n {
+        order.select_nth_unstable_by(m - 1, cmp);
+        order.truncate(m);
+    }
     order.sort_unstable();
     order
 }
@@ -268,6 +277,30 @@ mod tests {
                 (g - want).abs() <= 1e-12 * want.abs().max(1.0),
                 "row {i}: {g} vs {want}"
             );
+        }
+    }
+
+    #[test]
+    fn multikrum_partial_selection_matches_stable_sort_reference() {
+        // the select_nth path must pick the same set as the former full
+        // stable sort, including through score ties (duplicated rows)
+        let mut rows = corrupted_inputs(10, 2, 6, 1e4, 21);
+        rows[5] = rows[4].clone(); // exact tie
+        rows[7] = rows[6].clone();
+        let refs = as_refs(&rows);
+        let n = refs.len();
+        let dist = geometry::pairwise_dist_sq(&refs);
+        let geo = Geometry::new(n, &dist);
+        for f in [0usize, 1, 2, 4] {
+            let got = multikrum_select(&geo, f);
+            // reference: the old implementation (stable sort by score,
+            // truncate, sort by index)
+            let sc = scores(&geo, f);
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| sc[a].total_cmp(&sc[b]));
+            order.truncate(n - f);
+            order.sort_unstable();
+            assert_eq!(got, order, "f={f}");
         }
     }
 

@@ -88,6 +88,34 @@ pub trait Aggregator: Send + Sync {
         self.aggregate(inputs, out);
     }
 
+    /// True when the rule runs an **iterative fixed-point solve** that
+    /// can restart from a near-solution (GeoMed's Weiszfeld). The sparse
+    /// round engine then calls [`Self::aggregate_warm`] with `out`
+    /// prefilled with `β × previous output` on masked momentum rounds —
+    /// the inputs moved by β-scaling plus k coordinates, so the previous
+    /// optimum is a few iterations from the new one. Warm starting
+    /// changes outputs only within the solver's own tolerance.
+    fn warm_startable(&self) -> bool {
+        false
+    }
+
+    /// Warm-startable entry point: like [`Self::aggregate`], but when
+    /// `warm` is true `out` arrives prefilled with a near-solution the
+    /// rule may use as its initial iterate. Returns the iteration count
+    /// (0 for non-iterative rules). Rules returning `true` from
+    /// [`Self::warm_startable`] must override this; the default ignores
+    /// the hint and runs the plain rule.
+    fn aggregate_warm(
+        &self,
+        inputs: &[&[f32]],
+        out: &mut [f32],
+        warm: bool,
+    ) -> u32 {
+        let _ = warm;
+        self.aggregate(inputs, out);
+        0
+    }
+
     /// Slice-based entry point: aggregate only the coordinates listed in
     /// `cols` (sorted, distinct, global indices), writing one output per
     /// column (`out.len() == cols.len()`).
@@ -350,6 +378,14 @@ mod tests {
             assert_eq!(agg.geometry_backed(), *geo, "{}", agg.name());
             assert!(
                 !(agg.geometry_backed() && agg.coordinate_separable()),
+                "{}",
+                agg.name()
+            );
+            // warm-startable (iterative solver) rules form a third,
+            // disjoint class: only GeoMed itself qualifies
+            assert_eq!(
+                agg.warm_startable(),
+                agg.name() == "geomed",
                 "{}",
                 agg.name()
             );

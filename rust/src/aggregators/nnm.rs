@@ -26,14 +26,29 @@ pub struct Nnm {
     pub inner: Box<dyn Aggregator>,
 }
 
-/// Distance-sorted visit order of all n inputs as seen from row `i`
-/// (self first at distance 0; stable sort, so exact ties keep index
-/// order — identical on every call path given identical distances).
-fn neighbor_order(geo: &Geometry<'_>, i: usize, order: &mut Vec<usize>) {
+/// Distance-sorted visit order of the `m` nearest inputs as seen from
+/// row `i` (self first at distance 0). Partial selection on the total
+/// order (distance, index) followed by a sort of just those m entries
+/// replaces the former full stable sort of all n — `O(n + m log m)`
+/// instead of `O(n log n)` per row — while visiting the identical
+/// neighbors in the identical order (ties resolve by index, exactly as
+/// the stable sort did), so every mixed sum stays bit-identical.
+/// Entries beyond `order[..m]` are unspecified.
+fn neighbor_order(
+    geo: &Geometry<'_>,
+    i: usize,
+    m: usize,
+    order: &mut Vec<usize>,
+) {
     order.clear();
     order.extend(0..geo.n());
     let row = geo.row(i);
-    order.sort_by(|&a, &b| row[a].total_cmp(&row[b]));
+    let cmp =
+        |a: &usize, b: &usize| row[*a].total_cmp(&row[*b]).then(a.cmp(b));
+    if m < order.len() {
+        order.select_nth_unstable_by(m - 1, cmp);
+    }
+    order[..m].sort_unstable_by(cmp);
 }
 
 impl Nnm {
@@ -51,7 +66,7 @@ impl Nnm {
         let mut mixed = vec![vec![0.0f32; d]; n];
         let mut order: Vec<usize> = Vec::with_capacity(n);
         for (i, mi) in mixed.iter_mut().enumerate() {
-            neighbor_order(&geo, i, &mut order);
+            neighbor_order(&geo, i, self.m(n), &mut order);
             self.mix_row_into(inputs, &order, mi);
         }
         mixed
@@ -155,7 +170,7 @@ impl Aggregator for Nnm {
         let mut new_set: Vec<u32> = Vec::with_capacity(m);
         let mut all_carried = true;
         for i in 0..n {
-            neighbor_order(&ctx.geo, i, &mut order);
+            neighbor_order(&ctx.geo, i, m, &mut order);
             new_set.clear();
             new_set.extend(order[..m].iter().map(|&j| j as u32));
             new_set.sort_unstable();
@@ -263,6 +278,28 @@ mod tests {
         let k1000 = nnm.kappa(1000, 1);
         assert!(k1000 < k10 / 50.0, "κ must decay ~ f/n: {k10} vs {k1000}");
         assert_eq!(nnm.kappa(10, 0), 0.0);
+    }
+
+    #[test]
+    fn neighbor_order_partial_selection_matches_full_stable_sort() {
+        // the partial-selection visit order must equal the former full
+        // stable sort's first m entries — including through exact ties
+        let mut rows = corrupted_inputs(9, 2, 5, 1e3, 31);
+        rows[3] = rows[2].clone(); // tied distances to everyone
+        let refs = as_refs(&rows);
+        let n = refs.len();
+        let dist = geometry::pairwise_dist_sq(&refs);
+        let geo = Geometry::new(n, &dist);
+        let mut order = Vec::new();
+        for i in 0..n {
+            for m in [1usize, 3, n - 2, n] {
+                neighbor_order(&geo, i, m, &mut order);
+                let row = geo.row(i);
+                let mut want: Vec<usize> = (0..n).collect();
+                want.sort_by(|&a, &b| row[a].total_cmp(&row[b]));
+                assert_eq!(&order[..m], &want[..m], "row {i}, m={m}");
+            }
+        }
     }
 
     #[test]

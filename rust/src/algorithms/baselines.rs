@@ -12,7 +12,7 @@ use crate::compression::payload::{Payload, TAG_DGD_RANDK};
 use crate::compression::RandK;
 use crate::tensor;
 use crate::transport::{
-    broadcast_len, compressed_grad_len, full_grad_len, payload_uplink_len,
+    compressed_grad_len, full_grad_len, payload_uplink_len,
 };
 
 /// Robust distributed GD with Polyak momentum (no compression).
@@ -40,9 +40,6 @@ impl Algorithm for RobustDgd {
         byz_grads: &[Vec<f32>],
         env: &mut RoundEnv,
     ) -> Vec<f32> {
-        let n = env.n_total();
-        env.meter
-            .record_broadcast_sized(broadcast_len(env.d, false), n);
         let byz = byzantine_vectors(t, honest_grads, byz_grads, env);
         let apply = |this: &mut Self, widx: usize, g: &[f32], env: &mut RoundEnv| {
             env.meter.record_uplink_sized(widx, full_grad_len(env.d));
@@ -87,9 +84,6 @@ impl Algorithm for DgdRandK {
         env: &mut RoundEnv,
     ) -> Vec<f32> {
         let d = env.d;
-        let n = env.n_total();
-        env.meter
-            .record_broadcast_sized(broadcast_len(d, false), n);
 
         if let Some(ps) = env.payloads {
             // Wire payloads (tcp, SparseLocal plan — at k = d the plan
@@ -184,8 +178,6 @@ impl Algorithm for Dgd {
         env: &mut RoundEnv,
     ) -> Vec<f32> {
         let n = env.n_total();
-        env.meter
-            .record_broadcast_sized(broadcast_len(env.d, false), n);
         let byz = byzantine_vectors(t, honest_grads, byz_grads, env);
         let mut all: Vec<&[f32]> = Vec::with_capacity(n);
         for g in honest_grads {

@@ -27,7 +27,7 @@ use crate::compression::codec::mask_wire_len;
 use crate::compression::payload::{dasha_apply, Payload, TAG_DASHA};
 use crate::compression::RandK;
 use crate::transport::{
-    broadcast_len, compressed_grad_len, full_grad_len, payload_uplink_len,
+    compressed_grad_len, full_grad_len, payload_uplink_len,
 };
 
 pub struct ByzDashaPage {
@@ -79,9 +79,6 @@ impl Algorithm for ByzDashaPage {
         let d = env.d;
         let n = env.n_total();
         debug_assert_eq!(self.estimates.len(), n);
-
-        // broadcast model (no shared mask in DASHA)
-        env.meter.record_broadcast_sized(broadcast_len(d, false), n);
 
         if let Some(ps) = env.payloads {
             // Wire payloads (tcp): each worker tracked its own estimate

@@ -63,9 +63,7 @@ use crate::compression::codec::mask_wire_len;
 use crate::compression::payload::{absorb_sparse, Payload, TAG_LOCAL_MASK};
 use crate::compression::{mask_from_seed, Mask, RandK};
 use crate::tensor;
-use crate::transport::{
-    broadcast_len, compressed_grad_len, payload_uplink_len,
-};
+use crate::transport::{compressed_grad_len, payload_uplink_len};
 
 pub struct RoSdhb {
     /// Per-worker server-side momenta m_i (n rows × d).
@@ -138,11 +136,10 @@ impl Algorithm for RoSdhb {
             self.payloads.resize_with(n, Vec::new);
         }
 
-        // -- step 1+2: broadcast model (+ mask seed under global masks)
+        // -- step 1+2: broadcast (metered by the Trainer — the downlink
+        // subsystem owns the broadcast shape; the algorithm only derives
+        // the shared round mask the broadcast seed names)
         let mask_seed = RandK::round_seed(env.seed, t);
-        let with_seed = !self.local && env.k < d;
-        env.meter
-            .record_broadcast_sized(broadcast_len(d, with_seed), n);
 
         if self.local {
             self.round_local(t, honest_grads, byz_grads, env)
@@ -338,6 +335,21 @@ impl RoSdhb {
                 out[ci as usize] = v;
             }
             out
+        } else if sparse
+            && all_sent
+            && self.cache_valid
+            && env.aggregator.warm_startable()
+        {
+            // Iterative rules (GeoMed): every momentum moved by the
+            // masked carry law, so β·R^{t-1} is a near-fixed-point —
+            // warm-start the solver there instead of the cold mean init
+            // (tolerance-level output drift only; fewer iterations).
+            let mut out = vec![0.0f32; d];
+            for (o, c) in out.iter_mut().zip(&self.agg_cache) {
+                *o = env.beta * c;
+            }
+            env.aggregator.aggregate_warm(&refs, &mut out, true);
+            out
         } else {
             env.aggregator.aggregate_vec(&refs)
         };
@@ -521,8 +533,9 @@ mod tests {
         alg.round(0, &grads, &[], &mut env.env());
         // each uplink: header(12) + len(4) + 10*4 bytes = 56
         assert_eq!(env.meter.uplink, 3 * 56);
-        // downlink: (header 12 + seed 8 + 4000) * 3 recipients
-        assert_eq!(env.meter.downlink, 3 * (12 + 8 + 4000));
+        // downlink is metered by the Trainer (transport::downlink), not
+        // by the algorithm — nothing accumulates here
+        assert_eq!(env.meter.downlink, 0);
     }
 
     #[test]
@@ -773,6 +786,33 @@ mod tests {
         assert!(max_rel < 1e-4, "cached path drifted: rel {max_rel}");
         assert_eq!(env_d.meter.uplink, env_s.meter.uplink);
         assert_eq!(env_d.meter.downlink, env_s.meter.downlink);
+    }
+
+    #[test]
+    fn sparse_geomed_warm_start_tracks_dense_within_tolerance() {
+        // GeoMed rides the warm-start path under the sparse engine:
+        // Weiszfeld restarts from β·R^{t-1} instead of the mean init.
+        // Outputs may differ from the cold dense oracle only at the
+        // solver's own tolerance.
+        let (d, nh, k) = (64, 6, 8);
+        let mut env_d = Env::new(d, nh, 0, k);
+        let mut env_s = Env::new(d, nh, 0, k);
+        env_d.aggregator = crate::aggregators::parse_spec("geomed", 0).unwrap();
+        env_s.aggregator = crate::aggregators::parse_spec("geomed", 0).unwrap();
+        let mut dense = RoSdhb::with_mode(d, nh, false, RoundMode::Dense);
+        let mut sparse = RoSdhb::with_mode(d, nh, false, RoundMode::Sparse);
+        let mut max_rel = 0.0f64;
+        for t in 1..=30u64 {
+            let grads = varied_grads(d, nh, t);
+            let rd = dense.round(t, &grads, &[], &mut env_d.env());
+            let rs = sparse.round(t, &grads, &[], &mut env_s.env());
+            let num = crate::tensor::dist_sq(&rd, &rs).sqrt();
+            let den = crate::tensor::norm(&rd).max(1.0);
+            max_rel = max_rel.max(num / den);
+        }
+        assert!(max_rel < 1e-4, "warm-start drifted: rel {max_rel}");
+        // momenta are identical regardless (same masked updates)
+        assert_eq!(dense.momenta, sparse.momenta);
     }
 
     #[test]

@@ -36,7 +36,7 @@ use crate::compression::payload::{
 };
 use crate::compression::{CompressorSpec, Qsgd, RandK};
 use crate::transport::{
-    broadcast_len, compressed_grad_len, payload_uplink_len, quant_grad_len,
+    compressed_grad_len, payload_uplink_len, quant_grad_len,
 };
 
 pub struct RoSdhbU {
@@ -77,9 +77,6 @@ impl Algorithm for RoSdhbU {
         env: &mut RoundEnv,
     ) -> Vec<f32> {
         let d = env.d;
-        let n = env.n_total();
-        env.meter
-            .record_broadcast_sized(broadcast_len(d, false), n);
 
         if let Some(ps) = env.payloads {
             // Wire payloads (tcp): masks/levels were produced remotely

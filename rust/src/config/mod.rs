@@ -170,6 +170,20 @@ pub struct ExperimentConfig {
     /// (zero gradient) and is evicted from later rounds instead of
     /// stalling the run.
     pub round_timeout_ms: u64,
+    /// Downlink encoding: "dense" (full model every round — the
+    /// pre-subsystem behavior) or "delta" (workers keep a model replica
+    /// and receive the previous aggregate, delta-coded to the k masked
+    /// values whenever the off-mask carry law held bit-exactly; dense
+    /// fallback otherwise — bit-identical results either way). See
+    /// [`crate::transport::downlink`].
+    pub downlink: String,
+    /// Broadcast fan-out: "flat" (one coordinator write per worker) or
+    /// "tree" (workers re-forward frames to `branching` children each;
+    /// coordinator egress drops from n·B to branching·B per round).
+    pub fanout: String,
+    /// Relay-tree branching factor (`fanout = "tree"`; ignored under
+    /// flat).
+    pub branching: usize,
 }
 
 impl ExperimentConfig {
@@ -209,6 +223,9 @@ impl ExperimentConfig {
             listen_addr: "127.0.0.1:7177".into(),
             coordinator_addr: "127.0.0.1:7177".into(),
             round_timeout_ms: 30_000,
+            downlink: "dense".into(),
+            fanout: "flat".into(),
+            branching: 2,
         }
     }
 
@@ -264,6 +281,7 @@ impl ExperimentConfig {
         num!("test_size", c.test_size, usize);
         num!("pool_size", c.pool_size, usize);
         num!("round_timeout_ms", c.round_timeout_ms, u64);
+        num!("branching", c.branching, usize);
         if let Some(v) = get("round_engine") {
             c.round_engine =
                 v.as_str().ok_or("round_engine: want string")?.into();
@@ -282,6 +300,12 @@ impl ExperimentConfig {
         }
         if let Some(v) = get("transport") {
             c.transport = v.as_str().ok_or("transport: want string")?.into();
+        }
+        if let Some(v) = get("downlink") {
+            c.downlink = v.as_str().ok_or("downlink: want string")?.into();
+        }
+        if let Some(v) = get("fanout") {
+            c.fanout = v.as_str().ok_or("fanout: want string")?.into();
         }
         if let Some(v) = get("listen_addr") {
             c.listen_addr =
@@ -382,6 +406,9 @@ impl ExperimentConfig {
                     c.coordinator_addr = tmp.coordinator_addr.clone()
                 }
                 "round_timeout_ms" => c.round_timeout_ms = tmp.round_timeout_ms,
+                "downlink" => c.downlink = tmp.downlink.clone(),
+                "fanout" => c.fanout = tmp.fanout.clone(),
+                "branching" => c.branching = tmp.branching,
                 other => return Err(format!("unknown config key '{other}'")),
             }
         }
@@ -442,6 +469,13 @@ impl ExperimentConfig {
         crate::algorithms::RoundMode::parse(&self.round_engine)?;
         crate::aggregators::geometry::RefreshPeriod::parse(
             &self.geometry_refresh,
+        )?;
+        // downlink/fanout parse everywhere (the local transport models
+        // their byte accounting so tcp runs stay bit-comparable to it)
+        crate::transport::downlink::DownlinkMode::parse(&self.downlink)?;
+        crate::transport::downlink::FanoutPlan::parse(
+            &self.fanout,
+            self.branching,
         )?;
         match self.transport.as_str() {
             "local" => {}
@@ -516,7 +550,7 @@ impl ExperimentConfig {
             Dataset::MnistIdx(_) => "mnist-idx",
         };
         let canon = format!(
-            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
             self.algorithm.name(),
             self.n_honest,
             self.n_byz,
@@ -533,6 +567,16 @@ impl ExperimentConfig {
             // qsgd:s), i.e. what the worker-side CompressorState puts on
             // the uplink — both sides must agree
             self.compressor,
+            // the downlink subsystem changes what travels server→worker
+            // (delta frames need a replica; the tree needs relay
+            // listeners) and the replica steps with the coordinator's
+            // exact γ/decay/clip — every side must run the same values
+            self.downlink,
+            self.fanout,
+            self.branching,
+            self.gamma,
+            self.gamma_decay,
+            self.clip,
         );
         // FNV-1a, 64-bit
         let mut h: u64 = 0xcbf2_9ce4_8422_2325;
@@ -569,6 +613,9 @@ impl ExperimentConfig {
         m.insert("tau".into(), Json::Num(self.tau));
         m.insert("seed".into(), Json::Num(self.seed as f64));
         m.insert("transport".into(), Json::Str(self.transport.clone()));
+        m.insert("downlink".into(), Json::Str(self.downlink.clone()));
+        m.insert("fanout".into(), Json::Str(self.fanout.clone()));
+        m.insert("branching".into(), Json::Num(self.branching as f64));
         Json::Obj(m)
     }
 }
@@ -752,6 +799,56 @@ mod tests {
         assert_eq!(c.transport, "tcp");
         assert_eq!(c.listen_addr, "0.0.0.0:9000");
         assert_eq!(c.round_timeout_ms, 1500);
+    }
+
+    #[test]
+    fn downlink_and_fanout_keys_parse_and_validate() {
+        let mut c = ExperimentConfig::default_mnist_like();
+        assert_eq!(c.downlink, "dense");
+        assert_eq!(c.fanout, "flat");
+        assert_eq!(c.branching, 2);
+        c.set("downlink", "delta").unwrap();
+        c.set("fanout", "tree").unwrap();
+        c.set("branching", "3").unwrap();
+        assert_eq!(c.branching, 3);
+        c.validate().unwrap();
+        assert!(c.set("downlink", "gossip").is_err());
+        assert!(c.set("fanout", "ring").is_err());
+        // branching 0 is rejected under the tree (but ignored under flat)
+        c.branching = 0;
+        assert!(c.validate().is_err());
+        c.fanout = "flat".into();
+        c.validate().unwrap();
+
+        let doc = toml::TomlDoc::parse(
+            "[experiment]\ndownlink = \"delta\"\nfanout = \"tree\"\n\
+             branching = 4\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.downlink, "delta");
+        assert_eq!(c.fanout, "tree");
+        assert_eq!(c.branching, 4);
+
+        // the downlink subsystem is part of the wire identity: every
+        // side must agree on frames, topology and the replica step law
+        let a = ExperimentConfig::default_mnist_like();
+        for (key, val) in [
+            ("downlink", "delta"),
+            ("fanout", "tree"),
+            ("branching", "5"),
+            ("gamma", "0.07"),
+            ("gamma_decay", "0.999"),
+            ("clip", "1.5"),
+        ] {
+            let mut b = a.clone();
+            b.set(key, val).unwrap();
+            assert_ne!(
+                a.wire_fingerprint(),
+                b.wire_fingerprint(),
+                "{key} must enter the fingerprint"
+            );
+        }
     }
 
     #[test]

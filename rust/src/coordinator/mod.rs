@@ -50,6 +50,7 @@ use crate::aggregators::geometry::{GeoStats, RefreshPeriod};
 use crate::aggregators::{self, Aggregator};
 use crate::algorithms::{self, Algorithm, RoundEnv};
 use crate::attacks::{self, AttackKind};
+use crate::compression::payload::PayloadPlan;
 use crate::compression::RandK;
 use crate::config::{Dataset as DatasetCfg, Engine, ExperimentConfig};
 use crate::data::{self, Dataset};
@@ -58,8 +59,11 @@ use crate::metrics::{MetricsLog, RoundRecord};
 use crate::model::MlpSpec;
 use crate::prng::Pcg64;
 use crate::tensor;
+use crate::transport::downlink::{
+    self, DownlinkCodec, DownlinkMode, DownlinkStats, FanoutPlan,
+};
 use crate::transport::net::{CoordinatorServer, NetStats};
-use crate::transport::ByteMeter;
+use crate::transport::{broadcast_len, ByteMeter};
 #[cfg(feature = "pjrt")]
 use crate::worker::PjrtEngine;
 use crate::worker::{GradEngine, HonestWorker, NativeEngine};
@@ -155,7 +159,12 @@ pub struct RunReport {
     /// Cumulative uplink bytes at the τ-crossing (the Fig. 1 y-axis).
     pub uplink_bytes_to_tau: Option<u64>,
     pub uplink_bytes: u64,
+    /// Total downlink bytes *delivered* (one copy per recipient).
     pub downlink_bytes: u64,
+    /// The subset of `downlink_bytes` the coordinator itself sent —
+    /// equal to `downlink_bytes` under `fanout = "flat"`, `branching/n`
+    /// of it under the relay tree.
+    pub coordinator_egress_bytes: u64,
     pub best_acc: Option<f64>,
     pub final_loss: Option<f64>,
     pub log: MetricsLog,
@@ -181,6 +190,17 @@ pub struct Trainer {
     /// Parsed `config: geometry_refresh` (exact-refresh period of the
     /// sparse engine's incremental pairwise geometry).
     geometry_refresh: RefreshPeriod,
+    /// The uplink wire plan the config implies — also decides the dense
+    /// broadcast shape (mask seed rides downlink only under the shared
+    /// mask), so the trainer can meter downlink uniformly for every
+    /// algorithm and transport.
+    plan: PayloadPlan,
+    /// Parsed `config: fanout`/`branching` — the coordinator-egress model.
+    fanout: FanoutPlan,
+    /// Delta-broadcast encoder (`config: downlink = "delta"`); `None`
+    /// under dense downlink. Drives both the byte model (local and tcp)
+    /// and the frames the TCP transport actually sends.
+    downlink_codec: Option<DownlinkCodec>,
     /// Set when loss/update became non-finite; `run()` stops gracefully.
     pub diverged: bool,
     /// Per-worker reusable gradient buffers (honest slots first, then
@@ -278,6 +298,16 @@ impl Trainer {
         let algorithm = algorithms::build(cfg, d);
         let params = engine.init_params(cfg.seed ^ 0x1a17)?;
         let k = RandK::from_frac(d, cfg.k_frac).k;
+        let plan = PayloadPlan::from_config(cfg, d);
+        let fanout = FanoutPlan::parse(&cfg.fanout, cfg.branching)
+            .map_err(|e| anyhow!(e))?;
+        let downlink_codec =
+            match DownlinkMode::parse(&cfg.downlink).map_err(|e| anyhow!(e))? {
+                DownlinkMode::Dense => None,
+                DownlinkMode::Delta => {
+                    Some(DownlinkCodec::new(d, k, cfg.seed, cfg.beta))
+                }
+            };
 
         Ok(Trainer {
             cfg: cfg.clone(),
@@ -296,6 +326,9 @@ impl Trainer {
             k,
             geometry_refresh: RefreshPeriod::parse(&cfg.geometry_refresh)
                 .map_err(|e| anyhow!(e))?,
+            plan,
+            fanout,
+            downlink_codec,
             diverged: false,
             grad_store: vec![vec![0f32; d]; n_grad],
             loss_store: vec![0f32; n_grad],
@@ -318,9 +351,17 @@ impl Trainer {
             self.engine.as_mut(),
             &self.params,
             self.cfg.batch,
+            self.downlink_codec.as_ref().map(|c| c.frame(t)),
             &mut self.grad_store,
             &mut self.loss_store,
         )
+    }
+
+    /// Delta/dense broadcast counters of the downlink codec (`downlink =
+    /// "delta"` only) — the tests' handle on "a carry-law break falls
+    /// back to a dense frame".
+    pub fn downlink_stats(&self) -> Option<DownlinkStats> {
+        self.downlink_codec.as_ref().map(|c| c.stats)
     }
 
     /// Measured socket traffic (tcp transport only).
@@ -345,6 +386,23 @@ impl Trainer {
     /// One synchronous round; returns (mean honest loss, ‖R‖).
     pub fn step(&mut self, t: u64) -> Result<(f64, f64)> {
         let nh = self.cfg.n_honest;
+        // Downlink byte model (owned here, not by the algorithm: the
+        // broadcast shape is a transport concern — dense model + optional
+        // mask seed, or the delta codec's frame — and the fan-out plan
+        // splits delivered bytes from coordinator egress).
+        let n = self.cfg.n_total();
+        let frame_len = match &self.downlink_codec {
+            Some(codec) => codec.frame_len(t),
+            None => broadcast_len(
+                self.params.len(),
+                matches!(self.plan, PayloadPlan::SparseGlobal { .. }),
+            ),
+        };
+        self.meter.record_broadcast_fanout(
+            frame_len,
+            n,
+            self.fanout.direct_count(n),
+        );
         self.compute_gradients(t)?;
         let mut loss_sum = 0.0f64;
         for &l in &self.loss_store[..nh] {
@@ -375,12 +433,11 @@ impl Trainer {
         let mut update = self
             .algorithm
             .round(t, honest_grads, byz_grads, &mut env);
-        // optional update clipping (production stabilizer; off by default)
-        if self.cfg.clip > 0.0 {
-            let n = tensor::norm(&update);
-            if n.is_finite() && n > self.cfg.clip as f64 {
-                tensor::scale(&mut update, self.cfg.clip / n as f32);
-            }
+        if let Some(codec) = &mut self.downlink_codec {
+            // decide how round t+1's broadcast describes R^t — on the
+            // raw aggregate, before clipping (workers clip locally
+            // through the same shared step law)
+            codec.note_update(t, &update);
         }
 
         // Lyapunov diagnostics (against the sampled honest mean gradient).
@@ -400,18 +457,17 @@ impl Trainer {
             None
         };
 
-        // θ_t = θ_{t-1} − γ_t R^t  (γ_t = γ·decay^t; decay=1 ⇒ constant).
-        // The decay is computed in f64 from a clamped exponent: the old
-        // `powi(t as i32)` silently wrapped for t > i32::MAX, flipping the
-        // decay into a blow-up.
-        let gamma_t = if self.cfg.gamma_decay >= 1.0 {
-            self.cfg.gamma
-        } else {
-            let exp = t.min(u32::MAX as u64) as u32;
-            let decay = (self.cfg.gamma_decay as f64).powf(exp as f64);
-            (self.cfg.gamma as f64 * decay) as f32
-        };
-        tensor::axpy(&mut self.params, -gamma_t, &update);
+        // θ_t = θ_{t-1} − γ_t·clip(R^t) — through the one shared step law
+        // (`transport::downlink::apply_update`), which delta-downlink
+        // worker replicas run verbatim: the two sides cannot drift.
+        downlink::apply_update(
+            &mut self.params,
+            &mut update,
+            self.cfg.gamma,
+            self.cfg.gamma_decay,
+            self.cfg.clip,
+            t,
+        );
         let update_norm = tensor::norm(&update);
         if !update_norm.is_finite() || !mean_loss.is_finite() {
             self.diverged = true;
@@ -483,6 +539,7 @@ impl Trainer {
             uplink_bytes_to_tau: reached.map(|(_, b)| b),
             uplink_bytes: self.meter.uplink,
             downlink_bytes: self.meter.downlink,
+            coordinator_egress_bytes: self.meter.coordinator_egress,
             best_acc: self.log.best_acc(),
             final_loss: self.log.final_loss(),
             log: self.log.clone(),

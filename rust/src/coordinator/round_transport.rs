@@ -62,6 +62,7 @@ use crate::compression::codec::MaskWire;
 use crate::compression::payload::{Payload, PayloadPlan};
 use crate::compression::RandK;
 use crate::config::ExperimentConfig;
+use crate::transport::downlink::FanoutPlan;
 use crate::transport::net::{CoordinatorServer, NetStats};
 use crate::transport::WireMessage;
 use crate::worker::{GradEngine, HonestWorker};
@@ -100,12 +101,20 @@ pub trait RoundTransport: Send {
     /// (honest workers first, then data-level Byzantine workers). `engine`
     /// is the trainer's sequential gradient engine — used only by the
     /// local transport when no pool is available (PJRT).
+    ///
+    /// `downlink` overrides the broadcast message under `downlink =
+    /// "delta"`: the trainer's [`DownlinkCodec`][crate::transport::downlink::DownlinkCodec]
+    /// frame describing the previous round's aggregate. `None` = the
+    /// transport builds its default model broadcast. The local transport
+    /// ignores it (workers are fed parameters in-process).
+    #[allow(clippy::too_many_arguments)]
     fn exchange(
         &mut self,
         t: u64,
         engine: &mut dyn GradEngine,
         params: &[f32],
         batch: usize,
+        downlink: Option<&WireMessage>,
         grad_store: &mut [Vec<f32>],
         loss_store: &mut [f32],
     ) -> Result<()>;
@@ -180,12 +189,14 @@ impl RoundTransport for LocalTransport {
         "local"
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn exchange(
         &mut self,
         _t: u64,
         engine: &mut dyn GradEngine,
         params: &[f32],
         batch: usize,
+        _downlink: Option<&WireMessage>,
         grad_store: &mut [Vec<f32>],
         loss_store: &mut [f32],
     ) -> Result<()> {
@@ -314,6 +325,17 @@ impl TcpTransport {
             cfg.wire_fingerprint(),
             RENDEZVOUS_TIMEOUT,
         )?;
+        let fanout = FanoutPlan::parse(&cfg.fanout, cfg.branching)
+            .map_err(|e| anyhow!(e))?;
+        if let FanoutPlan::Tree { .. } = fanout {
+            // interior tree positions should reply to the coordinator
+            // (RESYNC recovery reads their socket): gradient slots and
+            // drones qualify, crash-fault-silent slots become leaves
+            let can_relay: Vec<bool> = (0..cfg.n_total())
+                .map(|i| i < n_grad || drones_reply)
+                .collect();
+            server.apply_fanout(&fanout, &can_relay)?;
+        }
         Ok(TcpTransport {
             server,
             plan: PayloadPlan::from_config(cfg, d),
@@ -495,26 +517,40 @@ impl RoundTransport for TcpTransport {
         "tcp"
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn exchange(
         &mut self,
         t: u64,
         _engine: &mut dyn GradEngine,
         params: &[f32],
         _batch: usize,
+        downlink: Option<&WireMessage>,
         grad_store: &mut [Vec<f32>],
         loss_store: &mut [f32],
     ) -> Result<()> {
         debug_assert_eq!(grad_store.len(), self.n_grad);
-        let msg = match self.plan {
-            PayloadPlan::SparseGlobal { .. } => WireMessage::ModelBroadcast {
-                round: t,
-                params: params.to_vec(),
-                mask_seed: RandK::round_seed(self.seed, t),
-            },
-            _ => WireMessage::ModelBroadcastPlain {
-                round: t,
-                params: params.to_vec(),
-            },
+        // downlink = "delta": the trainer's codec frame (the previous
+        // round's aggregate) replaces the model broadcast — workers step
+        // their local replica instead of receiving θ.
+        let own_msg;
+        let msg: &WireMessage = match downlink {
+            Some(m) => m,
+            None => {
+                own_msg = match self.plan {
+                    PayloadPlan::SparseGlobal { .. } => {
+                        WireMessage::ModelBroadcast {
+                            round: t,
+                            params: params.to_vec(),
+                            mask_seed: RandK::round_seed(self.seed, t),
+                        }
+                    }
+                    _ => WireMessage::ModelBroadcastPlain {
+                        round: t,
+                        params: params.to_vec(),
+                    },
+                };
+                &own_msg
+            }
         };
         let n_conn = self.server.n_workers();
         let mut expect = vec![false; n_conn];
@@ -526,7 +562,7 @@ impl RoundTransport for TcpTransport {
                 *e = true;
             }
         }
-        let n_expected = self.server.broadcast(t, &msg, &expect, self.timeout);
+        let n_expected = self.server.broadcast(t, msg, &expect, self.timeout);
         if self.server.n_alive() == 0 {
             return Err(anyhow!(
                 "all {n_conn} workers are gone — nothing left to train with"

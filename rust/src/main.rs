@@ -98,14 +98,22 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     let report = trainer.run()?;
     if let Some(ns) = trainer.net_stats() {
         eprintln!(
-            "rosdhb serve: measured wire bytes up={} down={} \
-             (accounting model: up={} down={}); raw socket bytes up={} down={}",
+            "rosdhb serve: measured wire bytes up={} egress={} \
+             (accounting model: up={} egress={} delivered={}); \
+             raw socket bytes up={} down={}",
             ns.wire_uplink,
             ns.wire_downlink,
             report.uplink_bytes,
+            report.coordinator_egress_bytes,
             report.downlink_bytes,
             ns.raw_uplink,
             ns.raw_downlink,
+        );
+    }
+    if let Some(ds) = trainer.downlink_stats() {
+        eprintln!(
+            "rosdhb serve: downlink frames: {} delta, {} dense fallback",
+            ds.delta_rounds, ds.dense_rounds
         );
     }
     trainer.shutdown_transport();
@@ -149,6 +157,10 @@ fn report_json(
     );
     m.insert("uplink_bytes".into(), Json::Num(r.uplink_bytes as f64));
     m.insert("downlink_bytes".into(), Json::Num(r.downlink_bytes as f64));
+    m.insert(
+        "coordinator_egress_bytes".into(),
+        Json::Num(r.coordinator_egress_bytes as f64),
+    );
     m.insert("best_acc".into(), r.best_acc.map_or(Json::Null, Json::Num));
     m.insert(
         "final_loss".into(),

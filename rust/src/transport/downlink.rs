@@ -1,0 +1,715 @@
+//! Downlink subsystem: delta-coded update broadcasts and relay-tree
+//! fan-out planning.
+//!
+//! The uplink has been compressed and metered to the byte since the wire
+//! format landed, but the server→worker direction still shipped one full
+//! dense model (`d·4` bytes) per worker per round. This module closes
+//! that gap with two independent layers, both selected by config:
+//!
+//! ## Delta-coded broadcasts (`config: downlink = "delta"`)
+//!
+//! Workers keep a **model replica** plus the previous aggregate
+//! `R^{t-1}` ([`DownlinkReplica`]); the initial parameters are derived
+//! from the shared experiment seed, so the model itself never has to
+//! travel. Each round-`t` broadcast then describes `R^{t-1}` instead of
+//! `θ_{t-1}` ([`crate::transport::WireMessage::UpdateBroadcast`]):
+//!
+//! * **delta frame** — when the aggregate obeyed the off-mask carry law
+//!   `R^{t-1}[c] = β·R^{t-2}[c]` for every coordinate `c` outside round
+//!   `t-1`'s shared mask (bit-exactly — [`DownlinkCodec`] verifies it on
+//!   the raw `f32` bits, so reconstruction is guaranteed exact), only
+//!   the k masked values + the mask seed + β are broadcast: `29 + 4k`
+//!   bytes instead of `20 + 4d`. The law holds on RoSDHB's separable
+//!   carry path and on NNM's carried-mix path by construction, and
+//!   whenever a selection rule (Krum) re-selects the same row.
+//! * **dense fallback** — any round where the law breaks (first round,
+//!   Krum selection switch, geometry rebuild, silent workers, a
+//!   different algorithm entirely) broadcasts the full `R^{t-1}`; the
+//!   run therefore stays bit-identical to the dense oracle under *every*
+//!   configuration — delta coding is a pure wire-size optimization.
+//!
+//! Both ends apply the update through the one shared step law
+//! ([`apply_update`]): clip, then `θ ← θ − γ_t·R`, with `γ_t` from
+//! [`gamma_at`] — bit-identical replica evolution by construction.
+//!
+//! ## Relay-tree fan-out (`config: fanout = "tree"`, `branching`)
+//!
+//! [`FanoutPlan`] arranges the n workers as a complete b-ary tree under
+//! the coordinator: the coordinator writes each pre-encoded broadcast
+//! frame to only its `branching` direct children and every worker
+//! re-forwards the frame verbatim to its own children — coordinator
+//! egress drops from `n·B` to `branching·B` per round while every worker
+//! still receives exactly one copy. The socket mechanics (relay
+//! listeners, PLAN frames, RESYNC collapse on relay failure) live in
+//! [`crate::transport::net`]; this module owns the pure topology and the
+//! byte model ([`FanoutPlan::direct_count`] feeds
+//! [`crate::transport::ByteMeter`]'s coordinator-egress split).
+
+use super::WireMessage;
+use crate::compression::payload::Payload;
+use crate::compression::{mask_from_seed, RandK};
+
+// ------------------------------------------------------------- step law
+
+/// `γ_t = γ·decay^t` (f64 `powf` of a clamped exponent — `powi(t as
+/// i32)` silently wrapped for huge `t`; see the Trainer regression test).
+pub fn gamma_at(gamma: f32, gamma_decay: f32, t: u64) -> f32 {
+    if gamma_decay >= 1.0 {
+        gamma
+    } else {
+        let exp = t.min(u32::MAX as u64) as u32;
+        let decay = (gamma_decay as f64).powf(exp as f64);
+        (gamma as f64 * decay) as f32
+    }
+}
+
+/// The one shared model-step law: clip `update` in place (when `clip >
+/// 0`), then `params ← params − γ_t·update`. The coordinator's round
+/// loop and every delta-downlink worker replica call exactly this
+/// function, which is what makes a TCP `downlink = "delta"` run
+/// bit-identical to the local oracle — the two sides cannot drift by
+/// re-implementing the arithmetic differently.
+pub fn apply_update(
+    params: &mut [f32],
+    update: &mut [f32],
+    gamma: f32,
+    gamma_decay: f32,
+    clip: f32,
+    t: u64,
+) {
+    if clip > 0.0 {
+        let n = crate::tensor::norm(update);
+        if n.is_finite() && n > clip as f64 {
+            crate::tensor::scale(update, clip / n as f32);
+        }
+    }
+    crate::tensor::axpy(params, -gamma_at(gamma, gamma_decay, t), update);
+}
+
+// ------------------------------------------------------------ selection
+
+/// Which downlink encoding a run uses (`config: downlink`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum DownlinkMode {
+    /// Broadcast the full model every round (the pre-downlink-subsystem
+    /// behavior; byte-compatible with it).
+    #[default]
+    Dense,
+    /// Broadcast update deltas; workers reconstruct the model locally.
+    Delta,
+}
+
+impl DownlinkMode {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "dense" => DownlinkMode::Dense,
+            "delta" => DownlinkMode::Delta,
+            other => {
+                return Err(format!(
+                    "unknown downlink '{other}' (dense|delta)"
+                ))
+            }
+        })
+    }
+}
+
+/// How broadcast frames reach the n workers (`config: fanout`,
+/// `branching`). Positions are slots in a complete b-ary tree rooted at
+/// the coordinator; the socket layer maps tree *positions* to worker ids
+/// (relay-capable workers fill interior positions first).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FanoutPlan {
+    /// One coordinator write per worker (the PR-2 behavior).
+    Flat,
+    /// Complete b-ary relay tree: the coordinator feeds positions
+    /// `0..branching`; position p re-forwards to positions
+    /// `(p+1)·b .. (p+2)·b`.
+    Tree { branching: usize },
+}
+
+impl FanoutPlan {
+    /// `branching >= 2` is required for the tree: it bounds the interior
+    /// position count by n/2 − 1, which together with the f < n/2 config
+    /// invariant *guarantees* that replying workers fill every interior
+    /// slot and crash-fault-silent Byzantine slots end up as leaves (a
+    /// silent interior relay could never RESYNC — the coordinator does
+    /// not read its socket). A branching-1 chain would break that bound.
+    pub fn parse(fanout: &str, branching: usize) -> Result<Self, String> {
+        match fanout.to_ascii_lowercase().as_str() {
+            "flat" => Ok(FanoutPlan::Flat),
+            "tree" => {
+                if branching < 2 {
+                    return Err(
+                        "fanout = \"tree\" needs branching >= 2".into()
+                    );
+                }
+                Ok(FanoutPlan::Tree { branching })
+            }
+            other => Err(format!("unknown fanout '{other}' (flat|tree)")),
+        }
+    }
+
+    /// Tree position feeding position `pos` (`None` = the coordinator).
+    pub fn parent(&self, pos: usize) -> Option<usize> {
+        match self {
+            FanoutPlan::Flat => None,
+            FanoutPlan::Tree { branching } => {
+                if pos < *branching {
+                    None
+                } else {
+                    Some(pos / branching - 1)
+                }
+            }
+        }
+    }
+
+    /// Tree positions position `pos` re-forwards to (empty under flat).
+    pub fn children(&self, pos: usize, n: usize) -> std::ops::Range<usize> {
+        match self {
+            FanoutPlan::Flat => 0..0,
+            FanoutPlan::Tree { branching } => {
+                let lo = ((pos + 1) * branching).min(n);
+                lo..((pos + 1) * branching + branching).min(n)
+            }
+        }
+    }
+
+    /// How many workers the coordinator writes each broadcast frame to —
+    /// the coordinator-egress byte model (`n` under flat, `min(b, n)`
+    /// under the tree).
+    pub fn direct_count(&self, n: usize) -> usize {
+        match self {
+            FanoutPlan::Flat => n,
+            FanoutPlan::Tree { branching } => (*branching).min(n),
+        }
+    }
+}
+
+// ---------------------------------------------------------------- codec
+
+/// Per-kind broadcast counters — the tests' handle on "the carry-breaking
+/// round triggered the dense fallback exactly once".
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DownlinkStats {
+    /// Frames that shipped only the k masked values (+ seed + β).
+    pub delta_rounds: u64,
+    /// Full-`R` fallback frames (first usable round, carry-law breaks).
+    pub dense_rounds: u64,
+}
+
+/// Server-side encoder for `downlink = "delta"`: owns the previous
+/// aggregate (the carry basis) and decides, per round, whether the next
+/// broadcast can be a delta frame or must fall back to a dense one.
+///
+/// The decision is a **bitwise** check — `update[c].to_bits() ==
+/// (β·prev[c]).to_bits()` for every off-mask coordinate — rather than a
+/// flag from the aggregation path, so it is automatically correct for
+/// every algorithm/aggregator combination (including sign-of-zero and
+/// NaN corner cases): a delta frame is emitted exactly when the worker's
+/// reconstruction `β·R_prev` reproduces `R` bit for bit.
+pub struct DownlinkCodec {
+    d: usize,
+    k: usize,
+    seed: u64,
+    beta: f32,
+    /// The carry basis `R^{t-1}` as last noted.
+    prev: Vec<f32>,
+    has_prev: bool,
+    /// Scratch: membership of the round mask.
+    on_mask: Vec<bool>,
+    /// The frame for the *next* round's broadcast.
+    pending: WireMessage,
+    pub stats: DownlinkStats,
+}
+
+impl DownlinkCodec {
+    /// `d`/`k` are the model dimension and shared-mask size, `seed` the
+    /// experiment seed round masks derive from, `beta` the momentum
+    /// coefficient of the carry law.
+    pub fn new(d: usize, k: usize, seed: u64, beta: f32) -> Self {
+        DownlinkCodec {
+            d,
+            k,
+            seed,
+            beta,
+            prev: vec![0.0; d],
+            has_prev: false,
+            on_mask: vec![false; d],
+            // round 1 carries no update yet: an empty sync frame — the
+            // worker computes gradients at its locally derived θ_0.
+            pending: WireMessage::UpdateBroadcast {
+                round: 1,
+                prev_mask_seed: 0,
+                beta,
+                payload: Payload::Dense { values: Vec::new() },
+            },
+            stats: DownlinkStats::default(),
+        }
+    }
+
+    /// The broadcast frame for round `t` (frames must be consumed in
+    /// round order — one [`Self::note_update`] per round in between).
+    pub fn frame(&self, t: u64) -> &WireMessage {
+        let WireMessage::UpdateBroadcast { round, .. } = &self.pending
+        else {
+            unreachable!("pending is always an UpdateBroadcast")
+        };
+        assert_eq!(*round, t, "downlink frames must be consumed in order");
+        &self.pending
+    }
+
+    /// Wire size of [`Self::frame`] — the trainer's downlink byte model.
+    pub fn frame_len(&self, t: u64) -> usize {
+        self.frame(t).encoded_len()
+    }
+
+    /// Record round `t`'s aggregate `R^t` (pre-clipping) and prepare
+    /// round `t+1`'s broadcast: a delta frame when the off-mask carry
+    /// law held bit-exactly, the dense fallback otherwise.
+    pub fn note_update(&mut self, t: u64, update: &[f32]) {
+        debug_assert_eq!(update.len(), self.d);
+        let seed = RandK::round_seed(self.seed, t);
+        let mask = (self.has_prev && self.k < self.d)
+            .then(|| mask_from_seed(seed, self.d, self.k));
+        let carried = mask
+            .as_ref()
+            .is_some_and(|m| self.carry_holds(m, update));
+        self.pending = if carried {
+            self.stats.delta_rounds += 1;
+            let mask = mask.expect("carried implies a mask");
+            WireMessage::UpdateBroadcast {
+                round: t + 1,
+                prev_mask_seed: seed,
+                beta: self.beta,
+                payload: Payload::Sparse {
+                    values: mask.compress(update),
+                    mask: None,
+                },
+            }
+        } else {
+            self.stats.dense_rounds += 1;
+            WireMessage::UpdateBroadcast {
+                round: t + 1,
+                prev_mask_seed: 0,
+                beta: self.beta,
+                payload: Payload::Dense {
+                    values: update.to_vec(),
+                },
+            }
+        };
+        self.prev.copy_from_slice(update);
+        self.has_prev = true;
+    }
+
+    /// `update[c] == β·prev[c]` on the raw f32 bits for every coordinate
+    /// outside the round's shared `mask`.
+    fn carry_holds(&mut self, mask: &crate::compression::Mask, update: &[f32]) -> bool {
+        self.on_mask.fill(false);
+        for &c in &mask.idx {
+            self.on_mask[c as usize] = true;
+        }
+        let beta = self.beta;
+        update
+            .iter()
+            .zip(&self.prev)
+            .zip(&self.on_mask)
+            .all(|((u, p), &on)| on || u.to_bits() == (beta * p).to_bits())
+    }
+}
+
+// -------------------------------------------------------------- replica
+
+/// Worker-side model replica for `downlink = "delta"`: tracks `θ` and
+/// the previous aggregate `R`, advancing both from the round's
+/// [`WireMessage::UpdateBroadcast`] payload through the same
+/// [`apply_update`] law the coordinator runs.
+pub struct DownlinkReplica {
+    d: usize,
+    k: usize,
+    gamma: f32,
+    gamma_decay: f32,
+    clip: f32,
+    params: Vec<f32>,
+    r: Vec<f32>,
+    has_r: bool,
+    scratch: Vec<f32>,
+}
+
+impl DownlinkReplica {
+    /// `init_params` is the deterministic θ_0 both sides derive from the
+    /// experiment seed; the step hyper-parameters come from the shared
+    /// config (fingerprint-checked at rendezvous).
+    pub fn new(
+        k: usize,
+        gamma: f32,
+        gamma_decay: f32,
+        clip: f32,
+        init_params: Vec<f32>,
+    ) -> Self {
+        let d = init_params.len();
+        DownlinkReplica {
+            d,
+            k,
+            gamma,
+            gamma_decay,
+            clip,
+            params: init_params,
+            r: vec![0.0; d],
+            has_r: false,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// The current model replica θ_{round-1} after [`Self::apply`].
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    /// Apply the round-`round` broadcast: reconstruct `R^{round-1}` from
+    /// the payload (delta or dense), then step the replica. Malformed or
+    /// out-of-protocol frames are an `Err`, never a panic.
+    pub fn apply(
+        &mut self,
+        round: u64,
+        prev_mask_seed: u64,
+        beta: f32,
+        payload: &Payload,
+    ) -> Result<(), String> {
+        match payload {
+            Payload::Dense { values } if values.is_empty() => {
+                // round-1 sync: no update yet; θ stays at init
+                if self.has_r {
+                    return Err(
+                        "empty update frame after the stream started".into(),
+                    );
+                }
+                Ok(())
+            }
+            Payload::Dense { values } => {
+                if values.len() != self.d {
+                    return Err(format!(
+                        "dense update has {} values, model has {}",
+                        values.len(),
+                        self.d
+                    ));
+                }
+                self.r.copy_from_slice(values);
+                self.has_r = true;
+                self.step(round);
+                Ok(())
+            }
+            Payload::Sparse { values, mask: None } => {
+                if !self.has_r {
+                    return Err(
+                        "delta update before any dense carry basis".into()
+                    );
+                }
+                if values.len() != self.k {
+                    return Err(format!(
+                        "delta update has {} values, expected k = {}",
+                        values.len(),
+                        self.k
+                    ));
+                }
+                let mask = mask_from_seed(prev_mask_seed, self.d, self.k);
+                // off-mask carry β·R_prev (the same f32 multiply the
+                // codec's bitwise check verified), masked values fresh
+                for v in self.r.iter_mut() {
+                    *v *= beta;
+                }
+                for (&c, &v) in mask.idx.iter().zip(values) {
+                    self.r[c as usize] = v;
+                }
+                self.step(round);
+                Ok(())
+            }
+            other => Err(format!(
+                "unsupported update payload kind '{}'",
+                other.kind_name()
+            )),
+        }
+    }
+
+    /// θ_{round-1} = θ_{round-2} − γ_{round-1}·clip(R^{round-1}) — the
+    /// broadcast for round `round` carries the *previous* round's
+    /// aggregate, so the step exponent is `round − 1`.
+    fn step(&mut self, round: u64) {
+        self.scratch.clear();
+        self.scratch.extend_from_slice(&self.r);
+        apply_update(
+            &mut self.params,
+            &mut self.scratch,
+            self.gamma,
+            self.gamma_decay,
+            self.clip,
+            round.saturating_sub(1),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg64;
+
+    #[test]
+    fn parse_modes_and_fanout() {
+        assert_eq!(DownlinkMode::parse("dense").unwrap(), DownlinkMode::Dense);
+        assert_eq!(DownlinkMode::parse("DELTA").unwrap(), DownlinkMode::Delta);
+        assert!(DownlinkMode::parse("gossip").is_err());
+        assert_eq!(FanoutPlan::parse("flat", 0).unwrap(), FanoutPlan::Flat);
+        assert_eq!(
+            FanoutPlan::parse("tree", 3).unwrap(),
+            FanoutPlan::Tree { branching: 3 }
+        );
+        assert!(FanoutPlan::parse("tree", 0).is_err());
+        // a branching-1 chain would let silent slots become interior
+        // relays (see parse docs) — rejected
+        assert!(FanoutPlan::parse("tree", 1).is_err());
+        assert!(FanoutPlan::parse("ring", 2).is_err());
+    }
+
+    #[test]
+    fn tree_parent_child_are_inverse() {
+        for b in [2usize, 3, 5] {
+            let plan = FanoutPlan::Tree { branching: b };
+            let n = 23;
+            for pos in 0..n {
+                for c in plan.children(pos, n) {
+                    assert_eq!(plan.parent(c), Some(pos), "b={b} pos={pos}");
+                }
+                match plan.parent(pos) {
+                    None => assert!(pos < b),
+                    Some(p) => {
+                        assert!(plan.children(p, n).contains(&pos))
+                    }
+                }
+            }
+            // every position has exactly one feed
+            let mut fed = vec![0usize; n];
+            for pos in 0..n {
+                if plan.parent(pos).is_none() {
+                    fed[pos] += 1;
+                }
+                for c in plan.children(pos, n) {
+                    fed[c] += 1;
+                }
+            }
+            assert!(fed.iter().all(|&f| f == 1), "b={b}: {fed:?}");
+            assert_eq!(plan.direct_count(n), b.min(n));
+        }
+        assert_eq!(FanoutPlan::Flat.direct_count(7), 7);
+        assert_eq!(FanoutPlan::Flat.children(0, 7), 0..0);
+    }
+
+    #[test]
+    fn interior_positions_stay_below_half_at_branching_2_plus() {
+        // The leaf guarantee behind apply_fanout's placement: with
+        // branching >= 2, fewer than n/2 positions have children, and
+        // f < n/2 gives more than n/2 replying workers — so silent
+        // Byzantine slots can always be placed as leaves.
+        for b in [2usize, 3, 4] {
+            let plan = FanoutPlan::Tree { branching: b };
+            for n in 1..200usize {
+                let interior =
+                    (0..n).filter(|&p| !plan.children(p, n).is_empty()).count();
+                assert!(interior * 2 < n.max(2), "b={b} n={n}: {interior}");
+            }
+        }
+    }
+
+    #[test]
+    fn apply_update_matches_manual_clip_and_step() {
+        let mut params = vec![1.0f32; 4];
+        let mut update = vec![3.0f32, 4.0, 0.0, 0.0]; // ‖·‖ = 5
+        apply_update(&mut params, &mut update, 0.1, 1.0, 1.0, 7);
+        // clipped to norm 1: update = (0.6, 0.8, 0, 0); θ -= 0.1·u
+        assert!((params[0] - (1.0 - 0.06)).abs() < 1e-6);
+        assert!((params[1] - (1.0 - 0.08)).abs() < 1e-6);
+        assert_eq!(params[2], 1.0);
+        // decayed gamma
+        assert!((gamma_at(0.1, 0.5, 3) - 0.0125).abs() < 1e-9);
+        assert_eq!(gamma_at(0.1, 1.0, 1000), 0.1);
+    }
+
+    /// Drive a synthetic run through the codec: carry-obeying rounds emit
+    /// delta frames, a forced carry break (a Krum-style selection switch:
+    /// the aggregate jumps to a different momentum row) falls back to a
+    /// dense frame exactly once, then delta coding resumes.
+    #[test]
+    fn codec_emits_delta_frames_and_one_dense_fallback() {
+        let (d, k, seed, beta) = (48usize, 6usize, 11u64, 0.9f32);
+        let mut codec = DownlinkCodec::new(d, k, seed, beta);
+        // round 1: empty sync frame
+        assert_eq!(
+            codec.frame_len(1),
+            crate::transport::HEADER_BYTES + 8 + 4 + 1 + 4
+        );
+        let mut rng = Pcg64::new(5, 5);
+        let mut update = vec![0f32; d];
+        rng.fill_gaussian(&mut update, 1.0);
+        let mut prev = update.clone();
+        codec.note_update(1, &update); // no basis yet -> dense
+        assert_eq!(
+            codec.frame_len(2),
+            crate::transport::HEADER_BYTES + 8 + 4 + 1 + 4 + 4 * d
+        );
+        for t in 2..=10u64 {
+            if t == 6 {
+                // carry break: an unrelated aggregate (selection switch)
+                rng.fill_gaussian(&mut update, 1.0);
+            } else {
+                // carry law: β·prev off-mask, fresh values on-mask
+                let mask = mask_from_seed(
+                    RandK::round_seed(seed, t),
+                    d,
+                    k,
+                );
+                for (u, p) in update.iter_mut().zip(&prev) {
+                    *u = beta * p;
+                }
+                for &c in &mask.idx {
+                    update[c as usize] = rng.next_gaussian() as f32;
+                }
+            }
+            codec.note_update(t, &update);
+            let want = if t == 6 {
+                crate::transport::HEADER_BYTES + 8 + 4 + 1 + 4 + 4 * d
+            } else {
+                crate::transport::HEADER_BYTES + 8 + 4 + 1 + 4 + 4 * k
+            };
+            assert_eq!(codec.frame_len(t + 1), want, "round {t}");
+            prev.copy_from_slice(&update);
+        }
+        assert_eq!(
+            codec.stats,
+            DownlinkStats {
+                delta_rounds: 8,
+                dense_rounds: 2 // round-2 basis + the round-6 break
+            }
+        );
+    }
+
+    /// The full loop, no sockets: a server (codec + apply_update) and a
+    /// worker replica fed only wire frames must hold bit-identical
+    /// parameters every round — including across dense fallbacks, delta
+    /// rounds and clipping.
+    #[test]
+    fn replica_tracks_server_params_bit_exactly() {
+        let (d, k, seed) = (64usize, 8usize, 3u64);
+        let (gamma, decay, clip, beta) = (0.05f32, 0.999f32, 0.8f32, 0.9f32);
+        let mut rng = Pcg64::new(9, 4);
+        let mut server_params = vec![0f32; d];
+        rng.fill_gaussian(&mut server_params, 0.5);
+        let mut codec = DownlinkCodec::new(d, k, seed, beta);
+        let mut replica = DownlinkReplica::new(
+            k,
+            gamma,
+            decay,
+            clip,
+            server_params.clone(),
+        );
+        let mut prev = vec![0f32; d];
+        let mut has_prev = false;
+        for t in 1..=30u64 {
+            // worker receives round t's frame first (describes R^{t-1})
+            let frame = codec.frame(t).clone();
+            let bytes = frame.encode();
+            let WireMessage::UpdateBroadcast {
+                round,
+                prev_mask_seed,
+                beta: b,
+                payload,
+            } = WireMessage::decode(&bytes, d).unwrap()
+            else {
+                panic!("wrong frame kind")
+            };
+            replica.apply(round, prev_mask_seed, b, &payload).unwrap();
+            assert_eq!(
+                replica.params(),
+                &server_params[..],
+                "round {t}: replica diverged"
+            );
+
+            // server computes R^t: carry rounds mostly, breaks at 7/15
+            let mut update = vec![0f32; d];
+            if has_prev && t % 7 != 0 {
+                let mask = mask_from_seed(
+                    RandK::round_seed(seed, t),
+                    d,
+                    k,
+                );
+                for (u, p) in update.iter_mut().zip(&prev) {
+                    *u = beta * p;
+                }
+                for &c in &mask.idx {
+                    update[c as usize] = rng.next_gaussian() as f32;
+                }
+            } else {
+                rng.fill_gaussian(&mut update, 1.0);
+            }
+            codec.note_update(t, &update);
+            prev.copy_from_slice(&update);
+            has_prev = true;
+            let mut u = update.clone();
+            apply_update(&mut server_params, &mut u, gamma, decay, clip, t);
+        }
+        assert!(codec.stats.delta_rounds > 0);
+        assert!(codec.stats.dense_rounds > 0);
+    }
+
+    #[test]
+    fn replica_rejects_malformed_frames() {
+        let mut rep = DownlinkReplica::new(4, 0.1, 1.0, 0.0, vec![0.0; 16]);
+        // delta before any dense basis
+        let delta = Payload::Sparse {
+            values: vec![0.0; 4],
+            mask: None,
+        };
+        assert!(rep.apply(2, 7, 0.9, &delta).is_err());
+        // wrong dense length
+        let bad = Payload::Dense {
+            values: vec![0.0; 3],
+        };
+        assert!(rep.apply(2, 0, 0.9, &bad).is_err());
+        // ok: dense basis, then a delta of the wrong k
+        let dense = Payload::Dense {
+            values: vec![1.0; 16],
+        };
+        rep.apply(2, 0, 0.9, &dense).unwrap();
+        let short = Payload::Sparse {
+            values: vec![0.0; 3],
+            mask: None,
+        };
+        assert!(rep.apply(3, 7, 0.9, &short).is_err());
+        // masked-sparse / quantized payloads are not update frames
+        let masked = Payload::Sparse {
+            values: vec![0.0; 4],
+            mask: Some(crate::compression::payload::placeholder_mask_wire(
+                16, 4,
+            )),
+        };
+        assert!(rep.apply(3, 7, 0.9, &masked).is_err());
+    }
+
+    #[test]
+    fn negative_zero_does_not_fool_the_carry_check() {
+        // -0.0 == 0.0 under f32 `==`, but the bitwise check must treat
+        // them as different — the replica would reconstruct +0.0 where
+        // the true aggregate holds -0.0, breaking bit-parity downstream.
+        let (d, k, seed, beta) = (8usize, 2usize, 1u64, 0.5f32);
+        let mut codec = DownlinkCodec::new(d, k, seed, beta);
+        let prev = vec![0.0f32; d];
+        codec.note_update(1, &prev); // basis (all zeros)
+        let mask = mask_from_seed(RandK::round_seed(seed, 2), d, k);
+        let mut update = vec![0.0f32; d];
+        // one off-mask coordinate flips to -0.0: β·0.0 = +0.0 ≠ -0.0 bits
+        let off = (0..d as u32)
+            .find(|c| !mask.idx.contains(c))
+            .unwrap() as usize;
+        update[off] = -0.0;
+        codec.note_update(2, &update);
+        assert_eq!(codec.stats.dense_rounds, 2, "must fall back to dense");
+        assert_eq!(codec.stats.delta_rounds, 0);
+    }
+}

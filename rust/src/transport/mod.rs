@@ -10,6 +10,10 @@
 //! * **Downlink** (server → workers, broadcast): model `d·4` bytes + the
 //!   message header + an 8-byte mask seed under global sparsification (the
 //!   whole mask is never shipped — both ends re-derive it from the seed).
+//!   Under `downlink = "delta"` the broadcast is an [`WireMessage::UpdateBroadcast`]
+//!   instead — the previous aggregate, delta-coded to the k masked values
+//!   on carry rounds (see [`downlink`]); [`ByteMeter`] additionally splits
+//!   delivered bytes from coordinator egress for relay-tree fan-out.
 //! * **Uplink** (worker → server): one [`WireMessage::Grad`] per worker —
 //!   a message header plus the body of a typed
 //!   [`Payload`][crate::compression::payload::Payload]. The payload codec
@@ -25,6 +29,7 @@
 //! bytes over blocking TCP (length-prefixed frames) for the
 //! `transport = "tcp"` coordinator/worker runtime.
 
+pub mod downlink;
 pub mod net;
 
 use crate::compression::payload::{Payload, QuantBlock};
@@ -35,8 +40,12 @@ pub const HEADER_BYTES: usize = 12;
 /// First wire tag of the uplink family; tag = `GRAD_TAG_BASE +
 /// payload.kind()`, so sparse (2) and dense (3) uplinks keep the byte
 /// layout of the pre-payload wire format and quantized uplinks extend it
-/// at tag 4.
+/// at tag 4. Grad tags occupy `[2, 257]`.
 const GRAD_TAG_BASE: u16 = 2;
+
+/// Wire tag of [`WireMessage::UpdateBroadcast`] — the first tag above the
+/// grad family's `[GRAD_TAG_BASE, GRAD_TAG_BASE + 255]` range.
+const UPDATE_TAG: u16 = 258;
 
 /// All messages that cross the (simulated or real) network.
 #[derive(Clone, Debug, PartialEq)]
@@ -51,6 +60,23 @@ pub enum WireMessage {
     /// Server → all workers when workers choose their own masks (local
     /// sparsification / quantization / no compression).
     ModelBroadcastPlain { round: u64, params: Vec<f32> },
+    /// Server → all workers under `downlink = "delta"`: the *previous*
+    /// round's aggregate update `R^{round-1}` instead of the model —
+    /// workers keep a replica and step it locally
+    /// ([`downlink::DownlinkReplica`]). The payload is sparse (the k
+    /// masked values; off-mask the carry law `β·R_prev` applies, with the
+    /// mask re-derived from `prev_mask_seed`) on carry rounds and dense
+    /// (the full update) on fallback rounds; an *empty* dense payload is
+    /// the round-1 sync frame (no update yet).
+    UpdateBroadcast {
+        round: u64,
+        /// Seed of the mask the sparse payload's values live on (round
+        /// `round − 1`'s shared mask); 0 for dense/sync frames.
+        prev_mask_seed: u64,
+        /// The carry coefficient β of the off-mask reconstruction.
+        beta: f32,
+        payload: Payload,
+    },
     /// Worker → server: one typed compressed-gradient payload. The wire
     /// tag encodes the payload kind; the body is exactly the payload
     /// body, so the codec in [`crate::compression::payload`] is the
@@ -72,6 +98,9 @@ impl WireMessage {
             WireMessage::ModelBroadcastPlain { params, .. } => {
                 HEADER_BYTES + 4 * params.len()
             }
+            WireMessage::UpdateBroadcast { payload, .. } => {
+                HEADER_BYTES + 8 + 4 + payload.encoded_len()
+            }
             WireMessage::Grad { payload, .. } => {
                 HEADER_BYTES + payload.body_len()
             }
@@ -85,6 +114,9 @@ impl WireMessage {
         let (tag, round, worker): (u16, u64, u16) = match self {
             WireMessage::ModelBroadcast { round, .. } => (0, *round, 0),
             WireMessage::ModelBroadcastPlain { round, .. } => (1, *round, 0),
+            WireMessage::UpdateBroadcast { round, .. } => {
+                (UPDATE_TAG, *round, 0)
+            }
             WireMessage::Grad {
                 round,
                 worker,
@@ -107,6 +139,16 @@ impl WireMessage {
                 for v in params {
                     out.extend_from_slice(&v.to_le_bytes());
                 }
+            }
+            WireMessage::UpdateBroadcast {
+                prev_mask_seed,
+                beta,
+                payload,
+                ..
+            } => {
+                out.extend_from_slice(&prev_mask_seed.to_le_bytes());
+                out.extend_from_slice(&beta.to_le_bytes());
+                payload.encode_into(&mut out);
             }
             WireMessage::Grad { payload, .. } => {
                 payload.encode_body_into(&mut out);
@@ -151,6 +193,25 @@ impl WireMessage {
                 round,
                 params: decode_f32s(body, "ModelBroadcastPlain params")?,
             }),
+            UPDATE_TAG => {
+                if body.len() < 13 {
+                    return Err(
+                        "UpdateBroadcast: body too short for seed + beta + payload"
+                            .into(),
+                    );
+                }
+                let prev_mask_seed =
+                    u64::from_le_bytes(body[0..8].try_into().unwrap());
+                let beta =
+                    f32::from_le_bytes(body[8..12].try_into().unwrap());
+                let payload = Payload::decode(&body[12..], d)?;
+                Ok(WireMessage::UpdateBroadcast {
+                    round,
+                    prev_mask_seed,
+                    beta,
+                    payload,
+                })
+            }
             t if t >= GRAD_TAG_BASE && t - GRAD_TAG_BASE <= u8::MAX as u16 => {
                 let kind = (t - GRAD_TAG_BASE) as u8;
                 let payload = Payload::decode_body(kind, body, d)?;
@@ -187,8 +248,15 @@ pub struct ByteMeter {
     /// cannot distinguish Byzantine uplinks, so they count too, as in the
     /// paper).
     pub uplink: u64,
-    /// Total server→worker bytes (broadcast counted once per recipient).
+    /// Total server→worker bytes **delivered** (broadcast counted once
+    /// per recipient, however the copy reached the worker — coordinator
+    /// write or relay forward).
     pub downlink: u64,
+    /// The subset of [`Self::downlink`] the coordinator itself put on the
+    /// wire. Equal to `downlink` under flat fan-out; under a relay tree
+    /// (`fanout = "tree"`) only `branching` copies per round are
+    /// coordinator egress, the rest is worker-to-worker forwarding.
+    pub coordinator_egress: u64,
     /// Uplink bytes per worker id.
     pub per_worker_uplink: Vec<u64>,
 }
@@ -198,6 +266,7 @@ impl ByteMeter {
         ByteMeter {
             uplink: 0,
             downlink: 0,
+            coordinator_egress: 0,
             per_worker_uplink: vec![0; n_workers],
         }
     }
@@ -205,7 +274,21 @@ impl ByteMeter {
     /// Record a broadcast delivered to `n_recipients` workers.
     pub fn record_broadcast(&mut self, msg: &WireMessage, n_recipients: usize) {
         debug_assert!(!msg.is_uplink());
-        self.downlink += msg.encoded_len() as u64 * n_recipients as u64;
+        self.record_broadcast_sized(msg.encoded_len(), n_recipients);
+    }
+
+    /// Fan-out-aware broadcast record: `delivered` total recipients, of
+    /// which `egress_copies` were written by the coordinator itself
+    /// ([`downlink::FanoutPlan::direct_count`]); the remainder traveled
+    /// worker-to-worker through the relay tree.
+    pub fn record_broadcast_fanout(
+        &mut self,
+        bytes: usize,
+        delivered: usize,
+        egress_copies: usize,
+    ) {
+        self.downlink += bytes as u64 * delivered as u64;
+        self.coordinator_egress += bytes as u64 * egress_copies as u64;
     }
 
     /// Record one worker→server message.
@@ -233,9 +316,10 @@ impl ByteMeter {
         }
     }
 
-    /// Hot-path variant of [`Self::record_broadcast`].
+    /// Hot-path variant of [`Self::record_broadcast`] (flat fan-out:
+    /// every delivered copy is coordinator egress).
     pub fn record_broadcast_sized(&mut self, bytes: usize, n_recipients: usize) {
-        self.downlink += bytes as u64 * n_recipients as u64;
+        self.record_broadcast_fanout(bytes, n_recipients, n_recipients);
     }
 
     pub fn total(&self) -> u64 {
@@ -315,6 +399,36 @@ mod tests {
         ]
     }
 
+    /// One UpdateBroadcast per payload shape the delta downlink emits:
+    /// sync (empty dense), delta (mask-less sparse), dense fallback.
+    fn sample_updates(d: usize) -> Vec<WireMessage> {
+        vec![
+            WireMessage::UpdateBroadcast {
+                round: 1,
+                prev_mask_seed: 0,
+                beta: 0.9,
+                payload: Payload::Dense { values: Vec::new() },
+            },
+            WireMessage::UpdateBroadcast {
+                round: 5,
+                prev_mask_seed: 0xfeed,
+                beta: 0.9,
+                payload: Payload::Sparse {
+                    values: vec![1.5; 7],
+                    mask: None,
+                },
+            },
+            WireMessage::UpdateBroadcast {
+                round: 6,
+                prev_mask_seed: 0,
+                beta: 0.5,
+                payload: Payload::Dense {
+                    values: vec![-0.25; d],
+                },
+            },
+        ]
+    }
+
     #[test]
     fn encoded_len_matches_encode() {
         let mut msgs = vec![
@@ -329,6 +443,7 @@ mod tests {
             },
         ];
         msgs.extend(sample_grads(100));
+        msgs.extend(sample_updates(100));
         for m in msgs {
             assert_eq!(m.encode().len(), m.encoded_len(), "{m:?}");
         }
@@ -358,6 +473,9 @@ mod tests {
             (100, sample_grads(100)[1].clone()),
             (64, sample_grads(100)[2].clone()),
             (7, sample_grads(100)[3].clone()),
+            (100, sample_updates(100)[0].clone()),
+            (100, sample_updates(100)[1].clone()),
+            (100, sample_updates(100)[2].clone()),
         ];
         for (d, m) in msgs {
             let bytes = m.encode();
@@ -392,7 +510,20 @@ mod tests {
         };
         meter.record_broadcast(&bcast, 3);
         assert_eq!(meter.downlink, 3 * bcast.encoded_len() as u64);
+        // flat fan-out: every delivered copy is coordinator egress
+        assert_eq!(meter.coordinator_egress, meter.downlink);
         assert_eq!(meter.uplink, 0);
+
+        // tree fan-out: 3 delivered, only 1 written by the coordinator
+        meter.record_broadcast_fanout(100, 3, 1);
+        assert_eq!(
+            meter.downlink,
+            3 * bcast.encoded_len() as u64 + 300
+        );
+        assert_eq!(
+            meter.coordinator_egress,
+            3 * bcast.encoded_len() as u64 + 100
+        );
 
         let up = WireMessage::Grad {
             round: 0,

@@ -26,19 +26,21 @@
 //!   wire-format counters match the simulation's [`super::ByteMeter`]
 //!   exactly (pinned by `rust/tests/test_transport_tcp.rs`).
 
+use super::downlink::FanoutPlan;
 use super::WireMessage;
 use anyhow::{anyhow, Result};
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Bumped on any framing or handshake change (2: typed `Grad` uplinks —
-/// quantized payloads joined the wire family).
-pub const PROTOCOL_VERSION: u16 = 2;
+/// quantized payloads joined the wire family; 3: JOIN carries a relay
+/// listener port, PLAN/RESYNC frames for the relay-tree fan-out).
+pub const PROTOCOL_VERSION: u16 = 3;
 
 /// "RSDB" — rejects random port scanners / wrong services at JOIN time.
 const MAGIC: u32 = 0x5244_5342;
@@ -55,6 +57,23 @@ const KIND_WELCOME: u8 = 2;
 const KIND_GRAD: u8 = 3;
 const KIND_BYE: u8 = 4;
 const KIND_ERR: u8 = 5;
+/// Coordinator → worker after rendezvous under `fanout = "tree"`: the
+/// worker's relay-feed assignment (body = `[u16 n_children][parent relay
+/// address utf8]`, empty address = fed directly by the coordinator). The
+/// worker accepts exactly `n_children` relay connections *before* its
+/// round loop starts, so no broadcast frame can race past an
+/// un-accepted child.
+const KIND_PLAN: u8 = 6;
+/// Worker → coordinator: "my relay feed died — deliver my broadcasts
+/// directly from now on (and re-send the current round's frame)".
+const KIND_RESYNC: u8 = 7;
+
+/// JOIN body: magic(4) + version(2) + fingerprint(8) + relay_port(2).
+const JOIN_LEN: usize = 16;
+
+/// How long a relay forward may block on a stalled child before the
+/// child is dropped (it will RESYNC to direct delivery).
+const RELAY_WRITE_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// Hard cap on accepted frame bodies (a dense broadcast at the paper's
 /// d = 11 809 is ~47 KiB; 64 MiB leaves room for far larger models while
@@ -113,7 +132,11 @@ fn is_timeout(e: &std::io::Error) -> bool {
 pub struct NetStats {
     /// Worker→coordinator `WireMessage` bytes (sum of `encoded_len()`).
     pub wire_uplink: u64,
-    /// Coordinator→worker `WireMessage` bytes (counted once per recipient).
+    /// Coordinator→worker `WireMessage` bytes the coordinator itself
+    /// wrote — its **egress**. Under flat fan-out that is one copy per
+    /// recipient; under the relay tree only the directly-fed workers
+    /// count here (relay-forwarded copies are measured worker-side, see
+    /// [`TreeFeed::relayed`]).
     pub wire_downlink: u64,
     /// Raw socket bytes worker→coordinator, including frame envelopes and
     /// handshakes.
@@ -159,15 +182,23 @@ pub struct Reply {
 }
 
 enum IoCmd {
-    /// Write a pre-built frame; when `expect_reply`, read one `GRAD` frame
-    /// back (deadline `timeout`) and forward it to the reply channel.
+    /// Write a pre-built frame (unless the relay tree delivers it); when
+    /// `expect_reply`, read one `GRAD` frame back (deadline `timeout`)
+    /// and forward it to the reply channel. A `RESYNC` frame read in
+    /// place of the `GRAD` switches the connection to direct delivery
+    /// and re-sends `frame` before the read continues.
     Send {
         round: u64,
         frame: Arc<Vec<u8>>,
         wire_bytes: u64,
+        /// Whether the coordinator writes the frame itself (tree roots,
+        /// flat fan-out, collapsed subtrees) or the relay tree carries it.
+        deliver: bool,
         expect_reply: bool,
         timeout: Duration,
     },
+    /// Write a pre-built control frame (PLAN); raw bytes only.
+    Raw { frame: Arc<Vec<u8>> },
     Bye,
 }
 
@@ -175,6 +206,10 @@ struct Conn {
     cmd_tx: Option<Sender<IoCmd>>,
     handle: Option<JoinHandle<()>>,
     alive: bool,
+    /// Where this worker's relay listener accepts child connections
+    /// (peer IP + the relay port it advertised at JOIN); `None` when the
+    /// worker did not bind one (flat fan-out).
+    relay_addr: Option<SocketAddr>,
 }
 
 /// The server half of the TCP runtime: owns one I/O thread per joined
@@ -186,6 +221,9 @@ pub struct CoordinatorServer {
     reply_tx: Sender<Reply>,
     reply_rx: Receiver<Reply>,
     counters: Arc<NetCounters>,
+    /// Per-worker direct-delivery flags from [`Self::apply_fanout`];
+    /// `None` = flat fan-out (everyone direct).
+    deliver_direct: Option<Vec<bool>>,
 }
 
 impl CoordinatorServer {
@@ -202,6 +240,7 @@ impl CoordinatorServer {
             reply_tx,
             reply_rx,
             counters: Arc::new(NetCounters::default()),
+            deliver_direct: None,
         })
     }
 
@@ -265,16 +304,18 @@ impl CoordinatorServer {
         // a stalled peer must never wedge an I/O thread on write either
         stream.set_write_timeout(Some(HANDSHAKE_TIMEOUT))?;
         stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+        let peer = stream.peer_addr()?;
         let (kind, body) = read_frame(&mut stream).map_err(|e| anyhow!("join read: {e}"))?;
         self.counters
             .raw_uplink
             .fetch_add((FRAME_OVERHEAD + body.len()) as u64, Ordering::Relaxed);
-        if kind != KIND_JOIN || body.len() != 14 {
+        if kind != KIND_JOIN || body.len() != JOIN_LEN {
             return Err(anyhow!("malformed join frame (kind {kind}, {} bytes)", body.len()));
         }
         let magic = u32::from_le_bytes(body[0..4].try_into().unwrap());
         let version = u16::from_le_bytes([body[4], body[5]]);
         let their_fp = u64::from_le_bytes(body[6..14].try_into().unwrap());
+        let relay_port = u16::from_le_bytes([body[14], body[15]]);
         let problem = if magic != MAGIC {
             Some("bad magic (not a rosdhb worker)".to_string())
         } else if version != PROTOCOL_VERSION {
@@ -317,7 +358,61 @@ impl CoordinatorServer {
             cmd_tx: Some(cmd_tx),
             handle: Some(handle),
             alive: true,
+            relay_addr: (relay_port != 0)
+                .then(|| SocketAddr::new(peer.ip(), relay_port)),
         });
+        Ok(())
+    }
+
+    /// Arrange the joined workers as the given relay tree and tell each
+    /// its feed (a `PLAN` frame: parent relay address, or empty = direct
+    /// from the coordinator). Tree *positions* are filled relay-capable
+    /// workers first (`can_relay`, e.g. gradient slots and drones —
+    /// crash-fault-silent Byzantine slots become leaves: they forward
+    /// nothing and, since the coordinator never reads their socket, their
+    /// `RESYNC` would go unseen). Subsequent [`Self::broadcast`]s write
+    /// each frame only to the workers fed directly.
+    pub fn apply_fanout(
+        &mut self,
+        plan: &FanoutPlan,
+        can_relay: &[bool],
+    ) -> Result<()> {
+        let n = self.conns.len();
+        let mut order: Vec<usize> = (0..n).collect();
+        // stable: relay-capable first, join order within each class
+        order.sort_by_key(|&i| !can_relay.get(i).copied().unwrap_or(false));
+        let mut direct = vec![true; n];
+        for pos in 0..n {
+            let worker = order[pos];
+            let parent = plan.parent(pos).map(|pp| order[pp]);
+            direct[worker] = parent.is_none();
+            let n_children = plan.children(pos, n).len() as u16;
+            let mut body: Vec<u8> = n_children.to_le_bytes().to_vec();
+            match parent {
+                None => {}
+                Some(p) => {
+                    let addr = self.conns[p].relay_addr.ok_or_else(|| {
+                        anyhow!(
+                            "worker {p} advertised no relay listener but \
+                             the fanout tree makes it worker {worker}'s \
+                             parent — all sides must run fanout = \"tree\""
+                        )
+                    })?;
+                    body.extend_from_slice(addr.to_string().as_bytes());
+                }
+            };
+            let frame = Arc::new(build_frame(KIND_PLAN, &body));
+            let sent = self.conns[worker]
+                .cmd_tx
+                .as_ref()
+                .map(|tx| tx.send(IoCmd::Raw { frame }));
+            if !matches!(sent, Some(Ok(()))) {
+                return Err(anyhow!(
+                    "worker {worker} lost before fanout plan delivery"
+                ));
+            }
+        }
+        self.deliver_direct = Some(direct);
         Ok(())
     }
 
@@ -336,6 +431,7 @@ impl CoordinatorServer {
         let body = msg.encode();
         let wire_bytes = body.len() as u64;
         let frame = Arc::new(build_frame(KIND_MSG, &body));
+        let direct = self.deliver_direct.as_deref();
         let mut expected = 0usize;
         for (i, conn) in self.conns.iter_mut().enumerate() {
             if !conn.alive {
@@ -346,6 +442,8 @@ impl CoordinatorServer {
                 round,
                 frame: Arc::clone(&frame),
                 wire_bytes,
+                deliver: direct
+                    .is_none_or(|v| v.get(i).copied().unwrap_or(true)),
                 expect_reply: expect,
                 timeout,
             };
@@ -451,6 +549,12 @@ impl Drop for CoordinatorServer {
 
 /// Per-connection I/O thread: serializes writes and the (optional) reply
 /// read for one worker, so a stalled peer can never block the round loop.
+///
+/// Under tree fan-out most connections carry `deliver = false` commands
+/// (the relay tree moves the frame) — the thread then only reads the
+/// reply. A `RESYNC` frame in place of the expected `GRAD` permanently
+/// collapses the connection back to direct delivery (`fallback_direct`)
+/// and re-sends the current round's frame before the read resumes.
 fn io_loop(
     mut stream: TcpStream,
     id: u16,
@@ -458,7 +562,8 @@ fn io_loop(
     reply_tx: Sender<Reply>,
     counters: Arc<NetCounters>,
 ) {
-    for cmd in cmd_rx {
+    let mut fallback_direct = false;
+    'cmds: for cmd in cmd_rx {
         match cmd {
             IoCmd::Bye => {
                 if let Ok(n) = write_frame(&mut stream, KIND_BYE, &[]) {
@@ -466,87 +571,154 @@ fn io_loop(
                 }
                 break;
             }
+            IoCmd::Raw { frame } => {
+                stream.set_write_timeout(Some(HANDSHAKE_TIMEOUT)).ok();
+                if stream
+                    .write_all(&frame)
+                    .and_then(|_| stream.flush())
+                    .is_err()
+                {
+                    break;
+                }
+                counters
+                    .raw_downlink
+                    .fetch_add(frame.len() as u64, Ordering::Relaxed);
+            }
             IoCmd::Send {
                 round,
                 frame,
                 wire_bytes,
+                deliver,
                 expect_reply,
                 timeout,
             } => {
                 // a worker that stops draining its socket must hit the
                 // round deadline, not the (long) handshake write timeout
                 stream.set_write_timeout(Some(timeout)).ok();
-                if let Err(e) = stream.write_all(&frame).and_then(|_| stream.flush()) {
-                    // report the failure only when this round was owed a
-                    // reply — a dead silent connection must not consume a
-                    // collect slot (it is evicted at the next broadcast,
-                    // when its command channel is found closed)
-                    if expect_reply {
-                        let _ = reply_tx.send(Reply {
-                            worker: id,
-                            round,
-                            result: Err(format!("send failed: {e}")),
-                        });
+                if deliver || fallback_direct {
+                    if let Err(e) =
+                        stream.write_all(&frame).and_then(|_| stream.flush())
+                    {
+                        // report the failure only when this round was owed
+                        // a reply — a dead silent connection must not
+                        // consume a collect slot (it is evicted at the
+                        // next broadcast, when its command channel is
+                        // found closed)
+                        if expect_reply {
+                            let _ = reply_tx.send(Reply {
+                                worker: id,
+                                round,
+                                result: Err(format!("send failed: {e}")),
+                            });
+                        }
+                        break;
                     }
-                    break;
+                    counters
+                        .raw_downlink
+                        .fetch_add(frame.len() as u64, Ordering::Relaxed);
+                    counters
+                        .wire_downlink
+                        .fetch_add(wire_bytes, Ordering::Relaxed);
                 }
-                counters
-                    .raw_downlink
-                    .fetch_add(frame.len() as u64, Ordering::Relaxed);
-                counters
-                    .wire_downlink
-                    .fetch_add(wire_bytes, Ordering::Relaxed);
                 if !expect_reply {
                     continue;
                 }
                 stream.set_read_timeout(Some(timeout)).ok();
-                match read_frame(&mut stream) {
-                    Ok((KIND_GRAD, body)) if body.len() >= GRAD_ENVELOPE => {
-                        counters.raw_uplink.fetch_add(
-                            (FRAME_OVERHEAD + body.len()) as u64,
-                            Ordering::Relaxed,
-                        );
-                        counters.wire_uplink.fetch_add(
-                            (body.len() - GRAD_ENVELOPE) as u64,
-                            Ordering::Relaxed,
-                        );
-                        let loss =
-                            f32::from_le_bytes(body[0..4].try_into().unwrap());
-                        // the round field of the uplinked WireMessage sits
-                        // right after the loss envelope
-                        let wire_round = body
-                            .get(GRAD_ENVELOPE..GRAD_ENVELOPE + 8)
-                            .map_or(u64::MAX, |b| {
-                                u64::from_le_bytes(b.try_into().unwrap())
+                loop {
+                    match read_frame(&mut stream) {
+                        Ok((KIND_GRAD, body))
+                            if body.len() >= GRAD_ENVELOPE =>
+                        {
+                            counters.raw_uplink.fetch_add(
+                                (FRAME_OVERHEAD + body.len()) as u64,
+                                Ordering::Relaxed,
+                            );
+                            counters.wire_uplink.fetch_add(
+                                (body.len() - GRAD_ENVELOPE) as u64,
+                                Ordering::Relaxed,
+                            );
+                            let loss = f32::from_le_bytes(
+                                body[0..4].try_into().unwrap(),
+                            );
+                            // the round field of the uplinked WireMessage
+                            // sits right after the loss envelope
+                            let wire_round = body
+                                .get(GRAD_ENVELOPE..GRAD_ENVELOPE + 8)
+                                .map_or(u64::MAX, |b| {
+                                    u64::from_le_bytes(b.try_into().unwrap())
+                                });
+                            let _ = reply_tx.send(Reply {
+                                worker: id,
+                                round: wire_round,
+                                result: Ok((
+                                    loss,
+                                    body[GRAD_ENVELOPE..].to_vec(),
+                                )),
                             });
-                        let _ = reply_tx.send(Reply {
-                            worker: id,
-                            round: wire_round,
-                            result: Ok((loss, body[GRAD_ENVELOPE..].to_vec())),
-                        });
-                    }
-                    Ok((kind, _)) => {
-                        let _ = reply_tx.send(Reply {
-                            worker: id,
-                            round,
-                            result: Err(format!(
-                                "protocol violation: expected GRAD, got kind {kind}"
-                            )),
-                        });
-                        break;
-                    }
-                    Err(e) => {
-                        let reason = if is_timeout(&e) {
-                            format!("missed the round deadline ({timeout:?})")
-                        } else {
-                            format!("connection lost: {e}")
-                        };
-                        let _ = reply_tx.send(Reply {
-                            worker: id,
-                            round,
-                            result: Err(reason),
-                        });
-                        break;
+                            break;
+                        }
+                        Ok((KIND_RESYNC, body)) => {
+                            counters.raw_uplink.fetch_add(
+                                (FRAME_OVERHEAD + body.len()) as u64,
+                                Ordering::Relaxed,
+                            );
+                            eprintln!(
+                                "rosdhb[tcp]: worker {id} lost its relay \
+                                 feed — collapsing to direct delivery"
+                            );
+                            let redeliver = !fallback_direct && !deliver;
+                            fallback_direct = true;
+                            if redeliver {
+                                // the tree was supposed to carry this
+                                // round's frame: re-send it directly
+                                if let Err(e) = stream
+                                    .write_all(&frame)
+                                    .and_then(|_| stream.flush())
+                                {
+                                    let _ = reply_tx.send(Reply {
+                                        worker: id,
+                                        round,
+                                        result: Err(format!(
+                                            "resync send failed: {e}"
+                                        )),
+                                    });
+                                    break 'cmds;
+                                }
+                                counters.raw_downlink.fetch_add(
+                                    frame.len() as u64,
+                                    Ordering::Relaxed,
+                                );
+                                counters
+                                    .wire_downlink
+                                    .fetch_add(wire_bytes, Ordering::Relaxed);
+                            }
+                        }
+                        Ok((kind, _)) => {
+                            let _ = reply_tx.send(Reply {
+                                worker: id,
+                                round,
+                                result: Err(format!(
+                                    "protocol violation: expected GRAD, \
+                                     got kind {kind}"
+                                )),
+                            });
+                            break 'cmds;
+                        }
+                        Err(e) => {
+                            let reason = if is_timeout(&e) {
+                                format!(
+                                    "missed the round deadline ({timeout:?})"
+                                )
+                            } else {
+                                format!("connection lost: {e}")
+                            };
+                            let _ = reply_tx.send(Reply {
+                                worker: id,
+                                round,
+                                result: Err(reason),
+                            });
+                            break 'cmds;
+                        }
                     }
                 }
             }
@@ -568,6 +740,18 @@ impl WorkerClient {
     /// Dial the coordinator, retrying until `retry_for` elapses (covers
     /// "worker started before the coordinator" races), then handshake.
     pub fn connect(addr: &str, fingerprint: u64, retry_for: Duration) -> Result<Self> {
+        Self::connect_with_relay(addr, fingerprint, retry_for, 0)
+    }
+
+    /// [`Self::connect`] advertising a relay listener port in the JOIN
+    /// (`fanout = "tree"`: the coordinator hands this address to the
+    /// worker's tree children). Port 0 = no relay capability.
+    pub fn connect_with_relay(
+        addr: &str,
+        fingerprint: u64,
+        retry_for: Duration,
+        relay_port: u16,
+    ) -> Result<Self> {
         let deadline = Instant::now() + retry_for;
         let stream = loop {
             match TcpStream::connect(addr) {
@@ -580,15 +764,20 @@ impl WorkerClient {
                 }
             }
         };
-        Self::handshake(stream, fingerprint)
+        Self::handshake(stream, fingerprint, relay_port)
     }
 
-    fn handshake(mut stream: TcpStream, fingerprint: u64) -> Result<Self> {
+    fn handshake(
+        mut stream: TcpStream,
+        fingerprint: u64,
+        relay_port: u16,
+    ) -> Result<Self> {
         stream.set_nodelay(true).ok();
-        let mut join = Vec::with_capacity(14);
+        let mut join = Vec::with_capacity(JOIN_LEN);
         join.extend_from_slice(&MAGIC.to_le_bytes());
         join.extend_from_slice(&PROTOCOL_VERSION.to_le_bytes());
         join.extend_from_slice(&fingerprint.to_le_bytes());
+        join.extend_from_slice(&relay_port.to_le_bytes());
         write_frame(&mut stream, KIND_JOIN, &join)?;
         stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
         let (kind, body) = read_frame(&mut stream)?;
@@ -629,12 +818,342 @@ impl WorkerClient {
 
     /// Ship this round's contribution: scalar loss + one wire message.
     pub fn send_grad(&mut self, loss: f32, msg: &WireMessage) -> Result<()> {
-        let encoded = msg.encode();
-        let mut body = Vec::with_capacity(GRAD_ENVELOPE + encoded.len());
-        body.extend_from_slice(&loss.to_le_bytes());
-        body.extend_from_slice(&encoded);
-        write_frame(&mut self.stream, KIND_GRAD, &body)?;
-        Ok(())
+        send_grad_on(&mut self.stream, loss, msg)
+    }
+
+    /// Read the post-rendezvous fanout assignment (`fanout = "tree"`
+    /// only): how many relay children to accept, and the parent relay to
+    /// dial for downlink frames (`None` = the coordinator feeds this
+    /// worker directly).
+    pub fn recv_plan(&mut self) -> Result<(usize, Option<String>)> {
+        let (kind, body) = read_frame(&mut self.stream)
+            .map_err(|e| anyhow!("coordinator connection lost: {e}"))?;
+        if kind != KIND_PLAN {
+            return Err(anyhow!("expected a fanout PLAN frame, got kind {kind}"));
+        }
+        if body.len() < 2 {
+            return Err(anyhow!("malformed PLAN frame ({} bytes)", body.len()));
+        }
+        let n_children = u16::from_le_bytes([body[0], body[1]]) as usize;
+        let parent = if body.len() > 2 {
+            Some(String::from_utf8_lossy(&body[2..]).into_owned())
+        } else {
+            None
+        };
+        Ok((n_children, parent))
+    }
+
+    /// Upgrade this connection into the tree-fan-out downlink runtime:
+    /// accepts exactly `n_children` relay connections on `hub` (blocking,
+    /// bounded — this is what guarantees no broadcast frame can race past
+    /// an un-accepted child), then spawns a direct-feed reader and — when
+    /// `parent` is set — a relay-feed reader that collapses to direct
+    /// delivery (a `RESYNC` to the coordinator) if the relay dies. See
+    /// [`TreeFeed`].
+    pub fn into_tree_feed(
+        self,
+        hub: RelayHub,
+        n_children: usize,
+        parent: Option<&str>,
+    ) -> Result<TreeFeed> {
+        TreeFeed::start(self.stream, hub, n_children, parent)
+    }
+}
+
+fn send_grad_on(stream: &mut TcpStream, loss: f32, msg: &WireMessage) -> Result<()> {
+    let encoded = msg.encode();
+    let mut body = Vec::with_capacity(GRAD_ENVELOPE + encoded.len());
+    body.extend_from_slice(&loss.to_le_bytes());
+    body.extend_from_slice(&encoded);
+    write_frame(stream, KIND_GRAD, &body)?;
+    Ok(())
+}
+
+// ------------------------------------------------------------ relay tree
+
+/// A worker's relay listener, bound *before* JOIN so its port can ride
+/// the handshake (`fanout = "tree"`). Tree children of this worker dial
+/// it and receive every downlink frame re-forwarded verbatim.
+pub struct RelayHub {
+    listener: TcpListener,
+    port: u16,
+}
+
+impl RelayHub {
+    pub fn bind() -> Result<Self> {
+        let listener = TcpListener::bind("0.0.0.0:0")
+            .map_err(|e| anyhow!("relay listener bind: {e}"))?;
+        let port = listener.local_addr()?.port();
+        Ok(RelayHub { listener, port })
+    }
+
+    pub fn port(&self) -> u16 {
+        self.port
+    }
+}
+
+enum FeedEvent {
+    /// A downlink frame (kind, body) from whichever feed is live.
+    Frame(u8, Vec<u8>),
+    /// The relay feed died (EOF / error): collapse to direct delivery.
+    RelayDown,
+    /// The direct coordinator connection died — fatal.
+    DirectDown(String),
+}
+
+/// Re-forward one downlink frame to every connected child, dropping dead
+/// children (they collapse to direct delivery via their own `RESYNC`).
+fn forward_to_children(
+    children: &Mutex<Vec<TcpStream>>,
+    kind: u8,
+    body: &[u8],
+    relayed_wire: &AtomicU64,
+    relayed_raw: &AtomicU64,
+) {
+    let mut kids = children.lock().unwrap();
+    if kids.is_empty() {
+        return;
+    }
+    let frame = build_frame(kind, body);
+    kids.retain_mut(|s| {
+        match s.write_all(&frame).and_then(|_| s.flush()) {
+            Ok(()) => {
+                relayed_raw.fetch_add(frame.len() as u64, Ordering::Relaxed);
+                relayed_wire.fetch_add(body.len() as u64, Ordering::Relaxed);
+                true
+            }
+            Err(_) => false,
+        }
+    });
+}
+
+/// Worker-side downlink multiplexer under `fanout = "tree"`: downlink
+/// frames arrive over the parent relay (or the direct coordinator
+/// connection for tree roots and collapsed subtrees) and are re-forwarded
+/// to this worker's own children; uplinks always travel the direct
+/// connection. On relay failure the feed sends one `RESYNC` so the
+/// coordinator re-delivers the in-flight round directly and keeps doing
+/// so — only the broken edge collapses, the subtree below this worker
+/// keeps riding the tree.
+pub struct TreeFeed {
+    /// The original coordinator connection — all writes happen here.
+    stream: TcpStream,
+    rx: Receiver<FeedEvent>,
+    children: Arc<Mutex<Vec<TcpStream>>>,
+    resynced: bool,
+    relayed_wire: Arc<AtomicU64>,
+    relayed_raw: Arc<AtomicU64>,
+}
+
+impl TreeFeed {
+    fn start(
+        stream: TcpStream,
+        hub: RelayHub,
+        n_children: usize,
+        parent: Option<&str>,
+    ) -> Result<Self> {
+        let (tx, rx) = channel::<FeedEvent>();
+        let relayed_wire = Arc::new(AtomicU64::new(0));
+        let relayed_raw = Arc::new(AtomicU64::new(0));
+
+        // Accept the assigned children *before* any frame can flow:
+        // every worker dials its parent right after its PLAN frame, and
+        // this worker's own feed(s) start reading only below — so a
+        // broadcast can never be forwarded past an un-accepted child.
+        // A child that fails to appear is logged and skipped (it will be
+        // evicted by its own round deadline); the tree above stays up.
+        let mut kids: Vec<TcpStream> = Vec::with_capacity(n_children);
+        if n_children > 0 {
+            hub.listener.set_nonblocking(true)?;
+            let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
+            while kids.len() < n_children {
+                match hub.listener.accept() {
+                    Ok((s, _)) => {
+                        s.set_nodelay(true).ok();
+                        s.set_write_timeout(Some(RELAY_WRITE_TIMEOUT)).ok();
+                        kids.push(s);
+                    }
+                    Err(e) if is_timeout(&e) => {
+                        if Instant::now() >= deadline {
+                            eprintln!(
+                                "rosdhb[tree]: only {}/{} relay children \
+                                 connected before the deadline",
+                                kids.len(),
+                                n_children
+                            );
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(e) => {
+                        return Err(anyhow!("relay accept: {e}"));
+                    }
+                }
+            }
+        }
+        // no further children ever join (failure recovery goes through
+        // the coordinator's direct RESYNC path, never a re-dial)
+        drop(hub.listener);
+        let children = Arc::new(Mutex::new(kids));
+
+        // direct feed: always read (BYE and collapsed-delivery frames
+        // arrive here); forward downlink frames to the children
+        {
+            let tx = tx.clone();
+            let children = Arc::clone(&children);
+            let wire = Arc::clone(&relayed_wire);
+            let raw = Arc::clone(&relayed_raw);
+            let mut direct = stream.try_clone()?;
+            std::thread::spawn(move || loop {
+                match read_frame(&mut direct) {
+                    Ok((kind, body)) => {
+                        if kind == KIND_MSG {
+                            forward_to_children(
+                                &children, kind, &body, &wire, &raw,
+                            );
+                        }
+                        let done = kind == KIND_BYE;
+                        if tx.send(FeedEvent::Frame(kind, body)).is_err()
+                            || done
+                        {
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        let _ =
+                            tx.send(FeedEvent::DirectDown(e.to_string()));
+                        break;
+                    }
+                }
+            });
+        }
+
+        // relay feed: the parent's forwarded frames; EOF/error collapses
+        // this edge (RESYNC is sent by `recv`, on the main thread)
+        if let Some(paddr) = parent {
+            let paddr = paddr.to_string();
+            let children = Arc::clone(&children);
+            let wire = Arc::clone(&relayed_wire);
+            let raw = Arc::clone(&relayed_raw);
+            std::thread::spawn(move || {
+                // the parent's listener is bound pre-JOIN, so a short
+                // retry only papers over transient accept backlog churn
+                let deadline = Instant::now() + Duration::from_secs(10);
+                let mut feed = loop {
+                    match TcpStream::connect(&paddr) {
+                        Ok(s) => break Some(s),
+                        Err(_) if Instant::now() < deadline => {
+                            std::thread::sleep(Duration::from_millis(50));
+                        }
+                        Err(_) => break None,
+                    }
+                };
+                let Some(feed) = feed.as_mut() else {
+                    let _ = tx.send(FeedEvent::RelayDown);
+                    return;
+                };
+                loop {
+                    match read_frame(feed) {
+                        Ok((KIND_MSG, body)) => {
+                            forward_to_children(
+                                &children, KIND_MSG, &body, &wire, &raw,
+                            );
+                            if tx
+                                .send(FeedEvent::Frame(KIND_MSG, body))
+                                .is_err()
+                            {
+                                break;
+                            }
+                        }
+                        // relays forward only MSG frames; anything else
+                        // is noise from a confused peer
+                        Ok(_) => {}
+                        Err(_) => {
+                            let _ = tx.send(FeedEvent::RelayDown);
+                            break;
+                        }
+                    }
+                }
+            });
+        }
+
+        Ok(TreeFeed {
+            stream,
+            rx,
+            children,
+            resynced: false,
+            relayed_wire,
+            relayed_raw,
+        })
+    }
+
+    /// Block for the next downlink message (`Ok(None)` = clean `BYE`),
+    /// transparently handling relay collapse: on `RelayDown` one
+    /// `RESYNC` is sent to the coordinator, which re-delivers the
+    /// in-flight round directly and keeps this worker on direct delivery.
+    pub fn recv(&mut self, d: usize) -> Result<Option<WireMessage>> {
+        loop {
+            match self.rx.recv() {
+                Ok(FeedEvent::Frame(KIND_MSG, body)) => {
+                    let msg = WireMessage::decode(&body, d)
+                        .map_err(|e| anyhow!("bad downlink frame: {e}"))?;
+                    return Ok(Some(msg));
+                }
+                Ok(FeedEvent::Frame(KIND_BYE, _)) => {
+                    self.shutdown();
+                    return Ok(None);
+                }
+                Ok(FeedEvent::Frame(kind, _)) => {
+                    return Err(anyhow!(
+                        "unexpected downlink frame kind {kind}"
+                    ))
+                }
+                Ok(FeedEvent::RelayDown) => {
+                    if !self.resynced {
+                        self.resynced = true;
+                        // a failed RESYNC means the coordinator is gone
+                        // too — the direct reader will surface that
+                        if let Err(e) =
+                            write_frame(&mut self.stream, KIND_RESYNC, &[])
+                        {
+                            eprintln!(
+                                "rosdhb[tree]: resync send failed: {e}"
+                            );
+                        }
+                    }
+                }
+                Ok(FeedEvent::DirectDown(e)) => {
+                    return Err(anyhow!("coordinator connection lost: {e}"))
+                }
+                Err(_) => return Err(anyhow!("downlink feed closed")),
+            }
+        }
+    }
+
+    /// Ship this round's contribution over the direct connection.
+    pub fn send_grad(&mut self, loss: f32, msg: &WireMessage) -> Result<()> {
+        send_grad_on(&mut self.stream, loss, msg)
+    }
+
+    /// Wire/raw bytes this worker re-forwarded to its tree children.
+    pub fn relayed(&self) -> (u64, u64) {
+        (
+            self.relayed_wire.load(Ordering::Relaxed),
+            self.relayed_raw.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Drop all child connections (they see EOF and collapse to direct
+    /// delivery). Also runs on drop — a crashed relay's subtree must
+    /// never hang on a silent socket.
+    pub fn shutdown(&self) {
+        self.children.lock().unwrap().clear();
+    }
+}
+
+impl Drop for TreeFeed {
+    fn drop(&mut self) {
+        self.shutdown();
     }
 }
 

@@ -26,13 +26,29 @@
 //!   placeholder — the measured traffic still matches the byte-accounting
 //!   model. Under `attack = "none"` these slots receive broadcasts but
 //!   stay silent (crash-fault), exactly like the simulation.
+//!
+//! ## Downlink subsystem (PR 5)
+//!
+//! * **`downlink = "delta"`** — the worker derives θ_0 from the shared
+//!   seed (the model itself never travels) and keeps a
+//!   [`DownlinkReplica`]: each round's
+//!   [`WireMessage::UpdateBroadcast`] carries the previous aggregate as
+//!   k masked values (carry rounds) or a dense fallback, and the replica
+//!   steps through the same `apply_update` law the coordinator runs —
+//!   bit-identical parameters by construction.
+//! * **`fanout = "tree"`** — the worker binds a relay listener before
+//!   JOIN, learns its feed from the post-rendezvous PLAN frame, and
+//!   re-forwards every downlink frame to its tree children through a
+//!   [`TreeFeed`]; duplicate deliveries after a relay collapse are
+//!   deduplicated by round before any state advances.
 
 use crate::attacks::{self, AttackKind};
-use crate::compression::CompressorState;
+use crate::compression::{CompressorState, RandK};
 use crate::config::{Engine, ExperimentConfig};
 use crate::coordinator::build_training_workers;
 use crate::model::MlpSpec;
-use crate::transport::net::WorkerClient;
+use crate::transport::downlink::{DownlinkMode, DownlinkReplica, FanoutPlan};
+use crate::transport::net::{RelayHub, TreeFeed, WorkerClient};
 use crate::transport::WireMessage;
 use crate::worker::{GradEngine, HonestWorker, NativeEngine};
 use anyhow::{anyhow, Result};
@@ -46,6 +62,41 @@ pub struct JoinSummary {
     pub rounds: u64,
     /// "honest", "poisoned", "drone" or "silent".
     pub role: &'static str,
+    /// Wire bytes this worker re-forwarded to its relay-tree children
+    /// (0 under `fanout = "flat"`).
+    pub relayed_wire_bytes: u64,
+    /// Raw socket bytes of those forwards (frame envelopes included).
+    pub relayed_raw_bytes: u64,
+}
+
+/// The two downlink feeds a worker can run: the plain direct connection
+/// (flat fan-out) or the relay-tree multiplexer.
+enum Feed {
+    Direct(WorkerClient),
+    Tree(Box<TreeFeed>),
+}
+
+impl Feed {
+    fn recv(&mut self, d: usize) -> Result<Option<WireMessage>> {
+        match self {
+            Feed::Direct(c) => c.recv(d),
+            Feed::Tree(f) => f.recv(d),
+        }
+    }
+
+    fn send_grad(&mut self, loss: f32, msg: &WireMessage) -> Result<()> {
+        match self {
+            Feed::Direct(c) => c.send_grad(loss, msg),
+            Feed::Tree(f) => f.send_grad(loss, msg),
+        }
+    }
+
+    fn relayed(&self) -> (u64, u64) {
+        match self {
+            Feed::Direct(_) => (0, 0),
+            Feed::Tree(f) => f.relayed(),
+        }
+    }
 }
 
 /// Dial `addr`, rendezvous, and serve rounds until the coordinator says
@@ -53,7 +104,8 @@ pub struct JoinSummary {
 ///
 /// `max_rounds` is a fault-injection hook for tests: after handling that
 /// many broadcasts the worker drops its connection mid-run, simulating a
-/// crash. Production callers pass `None`.
+/// crash (a relay worker's children collapse to direct delivery).
+/// Production callers pass `None`.
 pub fn join_run(
     cfg: &ExperimentConfig,
     addr: &str,
@@ -65,8 +117,30 @@ pub fn join_run(
         return Err(anyhow!("rosdhb join requires engine = \"native\""));
     }
     let attack = attacks::parse_spec(&cfg.attack).map_err(|e| anyhow!(e))?;
-    let mut client =
-        WorkerClient::connect(addr, cfg.wire_fingerprint(), connect_retry)?;
+    let fanout = FanoutPlan::parse(&cfg.fanout, cfg.branching)
+        .map_err(|e| anyhow!(e))?;
+    let downlink_mode =
+        DownlinkMode::parse(&cfg.downlink).map_err(|e| anyhow!(e))?;
+
+    // Under tree fan-out the relay listener is bound *before* JOIN so
+    // its port can ride the handshake; the PLAN frame after rendezvous
+    // assigns this worker's feed.
+    let (mut client, hub) = match fanout {
+        FanoutPlan::Flat => (
+            WorkerClient::connect(addr, cfg.wire_fingerprint(), connect_retry)?,
+            None,
+        ),
+        FanoutPlan::Tree { .. } => {
+            let hub = RelayHub::bind()?;
+            let client = WorkerClient::connect_with_relay(
+                addr,
+                cfg.wire_fingerprint(),
+                connect_retry,
+                hub.port(),
+            )?;
+            (client, Some(hub))
+        }
+    };
     if client.n_total as usize != cfg.n_total() {
         return Err(anyhow!(
             "coordinator expects {} workers, local config says {}",
@@ -74,7 +148,19 @@ pub fn join_run(
             cfg.n_total()
         ));
     }
-    let slot = client.worker_id as usize;
+    let worker_id = client.worker_id;
+    let slot = worker_id as usize;
+    let mut feed = match hub {
+        None => Feed::Direct(client),
+        Some(hub) => {
+            let (n_children, parent) = client.recv_plan()?;
+            Feed::Tree(Box::new(client.into_tree_feed(
+                hub,
+                n_children,
+                parent.as_deref(),
+            )?))
+        }
+    };
 
     let mut engine = NativeEngine::new(MlpSpec::default(), cfg.batch.max(1));
     let d = engine.p();
@@ -83,6 +169,18 @@ pub fn join_run(
     // (DASHA's gradient-estimate copy).
     let mut compressor =
         CompressorState::from_config(cfg, d).map_err(|e| anyhow!(e))?;
+    // Delta downlink: θ_0 is derived from the shared seed — exactly the
+    // trainer's initialization — and stepped locally from update frames.
+    let mut replica = match downlink_mode {
+        DownlinkMode::Dense => None,
+        DownlinkMode::Delta => Some(DownlinkReplica::new(
+            RandK::from_frac(d, cfg.k_frac).k,
+            cfg.gamma,
+            cfg.gamma_decay,
+            cfg.clip,
+            engine.init_params(cfg.seed ^ 0x1a17)?,
+        )),
+    };
 
     // Gradient slot or Byzantine slot?
     let (mut worker, role): (Option<HonestWorker>, &'static str) = {
@@ -102,20 +200,61 @@ pub fn join_run(
 
     let mut grad = vec![0f32; d];
     let mut rounds = 0u64;
+    // Rounds are strictly increasing; a duplicate frame (the same round
+    // delivered over both the relay tree and a post-RESYNC direct
+    // re-send) must not advance any state twice.
+    let mut last_round = 0u64;
     loop {
-        let Some(msg) = client.recv(d)? else { break };
-        let (round, params, mask_seed) = match msg {
-            WireMessage::ModelBroadcast {
-                round,
-                params,
-                mask_seed,
-            } => (round, params, Some(mask_seed)),
-            WireMessage::ModelBroadcastPlain { round, params } => {
-                (round, params, None)
-            }
-            other => {
-                return Err(anyhow!("unexpected downlink message: {other:?}"))
-            }
+        let Some(msg) = feed.recv(d)? else { break };
+        let (round, mask_seed, owned_params): (u64, Option<u64>, Option<Vec<f32>>) =
+            match msg {
+                WireMessage::ModelBroadcast {
+                    round: r,
+                    params: p,
+                    mask_seed: s,
+                } => (r, Some(s), Some(p)),
+                WireMessage::ModelBroadcastPlain { round: r, params: p } => {
+                    (r, None, Some(p))
+                }
+                WireMessage::UpdateBroadcast {
+                    round: r,
+                    prev_mask_seed,
+                    beta,
+                    payload,
+                } => {
+                    let rep = replica.as_mut().ok_or_else(|| {
+                        anyhow!(
+                            "delta update frame under downlink = \"dense\" \
+                             — both sides must run the identical config"
+                        )
+                    })?;
+                    if r <= last_round {
+                        // duplicate delivery after a relay collapse: the
+                        // replica must not step twice
+                        continue;
+                    }
+                    rep.apply(r, prev_mask_seed, beta, &payload)
+                        .map_err(|e| anyhow!("bad update frame: {e}"))?;
+                    // shared-mask plans derive the uplink mask from the
+                    // config seed — the same derivation the server runs
+                    (r, Some(RandK::round_seed(cfg.seed, r)), None)
+                }
+                other => {
+                    return Err(anyhow!(
+                        "unexpected downlink message: {other:?}"
+                    ))
+                }
+            };
+        if round <= last_round {
+            continue; // duplicate delivery after a relay collapse
+        }
+        last_round = round;
+        let params: &[f32] = match &owned_params {
+            Some(p) => p,
+            None => replica
+                .as_ref()
+                .expect("update frames imply a replica")
+                .params(),
         };
         if params.len() != d {
             return Err(anyhow!(
@@ -126,7 +265,7 @@ pub fn join_run(
         let reply: Option<(f32, WireMessage)> = if let Some(w) = worker.as_mut()
         {
             let loss =
-                w.compute_grad_into(&mut engine, &params, cfg.batch, &mut grad)?;
+                w.compute_grad_into(&mut engine, params, cfg.batch, &mut grad)?;
             let payload = compressor
                 .compress(round, slot as u64, mask_seed, &grad)
                 .map_err(|e| anyhow!(e))?;
@@ -134,7 +273,7 @@ pub fn join_run(
                 loss,
                 WireMessage::Grad {
                     round,
-                    worker: client.worker_id,
+                    worker: worker_id,
                     payload,
                 },
             ))
@@ -145,7 +284,7 @@ pub fn join_run(
                 0.0,
                 WireMessage::Grad {
                     round,
-                    worker: client.worker_id,
+                    worker: worker_id,
                     payload: compressor.placeholder(mask_seed),
                 },
             ))
@@ -153,16 +292,19 @@ pub fn join_run(
             None // crash-fault Byzantine slot: receive, never send
         };
         if let Some((loss, msg)) = reply {
-            client.send_grad(loss, &msg)?;
+            feed.send_grad(loss, &msg)?;
         }
         rounds += 1;
         if max_rounds.is_some_and(|m| rounds >= m) {
             break; // injected crash: drop the connection mid-run
         }
     }
+    let (relayed_wire_bytes, relayed_raw_bytes) = feed.relayed();
     Ok(JoinSummary {
-        worker_id: client.worker_id,
+        worker_id,
         rounds,
         role,
+        relayed_wire_bytes,
+        relayed_raw_bytes,
     })
 }

@@ -1,0 +1,305 @@
+//! Downlink-subsystem integration tests (PR 5): delta-coded broadcasts
+//! and relay-tree fan-out over loopback TCP.
+//!
+//! * a `downlink = "delta"` run (flat or tree) is bit-identical — per-round
+//!   log included — to the local oracle with the same config;
+//! * measured socket bytes equal the `ByteMeter` model on **both**
+//!   downlink directions: coordinator egress and total delivered;
+//! * a mid-run relay-worker crash collapses its subtree to direct
+//!   delivery and the run completes bit-identical to flat fan-out with
+//!   the same crash;
+//! * carry-law breaks (no basis yet, Krum selection switches) fall back
+//!   to dense frames, pinned via `DownlinkStats`;
+//! * at n = 100, k/d = 0.05 the relay tree cuts coordinator egress ≥ 5×
+//!   vs the dense flat broadcast.
+
+use rosdhb::config::ExperimentConfig;
+use rosdhb::coordinator::round_transport::TcpTransport;
+use rosdhb::coordinator::{RunReport, Trainer};
+use rosdhb::model::MlpSpec;
+use rosdhb::transport::broadcast_len;
+use rosdhb::transport::downlink::DownlinkStats;
+use rosdhb::transport::net::{CoordinatorServer, NetStats};
+use rosdhb::worker::remote::{join_run, JoinSummary};
+use std::thread;
+use std::time::Duration;
+
+fn base_cfg() -> ExperimentConfig {
+    let mut c = ExperimentConfig::default_mnist_like();
+    c.n_honest = 4;
+    c.n_byz = 0;
+    c.attack = "none".into();
+    c.aggregator = "cwtm".into();
+    c.k_frac = 0.1;
+    c.rounds = 6;
+    c.eval_every = 2;
+    c.batch = 30;
+    c.train_size = 600;
+    c.test_size = 200;
+    c.stop_at_tau = false;
+    c.seed = 7;
+    c.transport = "tcp".into();
+    c.round_timeout_ms = 20_000;
+    c.downlink = "delta".into();
+    c
+}
+
+/// Run `cfg` over loopback TCP: one coordinator on this thread, one
+/// worker thread per entry of `worker_caps` (a cap injects a mid-run
+/// crash after that many rounds).
+fn run_tcp(
+    cfg: &ExperimentConfig,
+    worker_caps: &[Option<u64>],
+) -> (
+    RunReport,
+    NetStats,
+    Vec<anyhow::Result<JoinSummary>>,
+    Option<DownlinkStats>,
+) {
+    assert_eq!(worker_caps.len(), cfg.n_total());
+    let server = CoordinatorServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+    let handles: Vec<_> = worker_caps
+        .iter()
+        .map(|cap| {
+            let cfg = cfg.clone();
+            let addr = addr.clone();
+            let cap = *cap;
+            thread::spawn(move || {
+                join_run(&cfg, &addr, Duration::from_secs(30), cap)
+            })
+        })
+        .collect();
+    let d = MlpSpec::default().p();
+    let transport = TcpTransport::rendezvous(server, cfg, d).unwrap();
+    let mut trainer = Trainer::with_transport(cfg, Box::new(transport)).unwrap();
+    let report = trainer.run().unwrap();
+    let stats = trainer.net_stats().unwrap();
+    let dstats = trainer.downlink_stats();
+    trainer.shutdown_transport(); // BYE — releases the worker threads
+    let outcomes = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    (report, stats, outcomes, dstats)
+}
+
+fn run_local(cfg: &ExperimentConfig) -> (RunReport, Option<DownlinkStats>) {
+    let mut local = cfg.clone();
+    local.transport = "local".into();
+    let mut t = Trainer::from_config(&local).unwrap();
+    let report = t.run().unwrap();
+    let stats = t.downlink_stats();
+    (report, stats)
+}
+
+/// Every field that must match for "bit-identical RunReport" (egress
+/// included — the local oracle models the same fan-out).
+fn assert_reports_identical(a: &RunReport, b: &RunReport) {
+    assert_eq!(a.algorithm, b.algorithm);
+    assert_eq!(a.rounds_run, b.rounds_run);
+    assert_eq!(a.rounds_to_tau, b.rounds_to_tau);
+    assert_eq!(a.uplink_bytes_to_tau, b.uplink_bytes_to_tau);
+    assert_eq!(a.uplink_bytes, b.uplink_bytes);
+    assert_eq!(a.downlink_bytes, b.downlink_bytes);
+    assert_eq!(a.coordinator_egress_bytes, b.coordinator_egress_bytes);
+    assert_eq!(a.best_acc, b.best_acc);
+    assert_eq!(a.final_loss, b.final_loss);
+    assert_per_round_identical(a, b);
+}
+
+/// The per-round log alone (losses, norms, accuracy, byte counters).
+fn assert_per_round_identical(a: &RunReport, b: &RunReport) {
+    assert_eq!(a.log.rows.len(), b.log.rows.len());
+    for (ra, rb) in a.log.rows.iter().zip(&b.log.rows) {
+        assert_eq!(ra.round, rb.round);
+        assert_eq!(ra.train_loss, rb.train_loss, "round {}", ra.round);
+        assert_eq!(ra.update_norm, rb.update_norm, "round {}", ra.round);
+        assert_eq!(ra.test_acc, rb.test_acc, "round {}", ra.round);
+        assert_eq!(ra.uplink_bytes, rb.uplink_bytes, "round {}", ra.round);
+        assert_eq!(ra.downlink_bytes, rb.downlink_bytes, "round {}", ra.round);
+    }
+}
+
+#[test]
+fn tcp_delta_flat_is_bit_identical_and_cheaper_than_dense() {
+    // rosdhb + cwtm: after the round-2 basis frame every round rides the
+    // separable carry path, so the codec emits delta frames throughout.
+    let cfg = base_cfg();
+    let (report, stats, outcomes, dstats) = run_tcp(&cfg, &[None; 4]);
+    for o in &outcomes {
+        let s = o.as_ref().expect("worker must finish cleanly");
+        assert_eq!(s.rounds, cfg.rounds as u64);
+        assert_eq!(s.role, "honest");
+        assert_eq!(s.relayed_wire_bytes, 0, "flat fan-out relays nothing");
+    }
+
+    // bit-identical to the local oracle, downlink codec decisions included
+    let (local, local_dstats) = run_local(&cfg);
+    assert_reports_identical(&report, &local);
+    let ds = dstats.unwrap();
+    assert_eq!(Some(ds), local_dstats);
+    // exactly one dense fallback: the round-2 carry basis
+    assert_eq!(ds.dense_rounds, 1);
+    assert_eq!(ds.delta_rounds, cfg.rounds as u64 - 1);
+
+    // measured socket bytes == the model, both downlink directions
+    assert_eq!(stats.wire_uplink, report.uplink_bytes, "uplink");
+    assert_eq!(
+        stats.wire_downlink, report.coordinator_egress_bytes,
+        "coordinator egress"
+    );
+    // flat fan-out: everything delivered is coordinator egress
+    assert_eq!(report.coordinator_egress_bytes, report.downlink_bytes);
+
+    // and the delta downlink beats the dense model broadcast
+    let d = MlpSpec::default().p();
+    let dense_model =
+        (cfg.rounds * cfg.n_total() * broadcast_len(d, true)) as u64;
+    assert!(
+        report.downlink_bytes * 3 < dense_model,
+        "delta downlink {} should be far below dense {}",
+        report.downlink_bytes,
+        dense_model
+    );
+}
+
+#[test]
+fn tcp_delta_tree_is_bit_identical_and_bytes_split_across_relays() {
+    let mut cfg = base_cfg();
+    cfg.n_honest = 5;
+    cfg.fanout = "tree".into();
+    cfg.branching = 2;
+    let (report, stats, outcomes, _dstats) = run_tcp(&cfg, &[None; 5]);
+    let summaries: Vec<&JoinSummary> =
+        outcomes.iter().map(|o| o.as_ref().unwrap()).collect();
+    for s in &summaries {
+        assert_eq!(s.rounds, cfg.rounds as u64);
+    }
+
+    // bit-identical to the local oracle with the same (tree) config
+    let (local, _) = run_local(&cfg);
+    assert_reports_identical(&report, &local);
+
+    // measured bytes: coordinator egress on the coordinator's sockets,
+    // the rest forwarded worker-to-worker through the relay tree
+    assert_eq!(stats.wire_uplink, report.uplink_bytes, "uplink");
+    assert_eq!(
+        stats.wire_downlink, report.coordinator_egress_bytes,
+        "coordinator egress"
+    );
+    let relayed: u64 = summaries.iter().map(|s| s.relayed_wire_bytes).sum();
+    assert_eq!(
+        stats.wire_downlink + relayed,
+        report.downlink_bytes,
+        "egress + relayed must equal total delivered"
+    );
+    // the tree moved most of the traffic off the coordinator:
+    // 2 of 5 copies per round are egress
+    assert_eq!(
+        report.coordinator_egress_bytes * 5,
+        report.downlink_bytes * 2
+    );
+    assert!(relayed > 0, "interior relays must have forwarded frames");
+}
+
+#[test]
+fn tcp_tree_relay_crash_collapses_subtree_and_matches_flat_crash() {
+    // Worker 0 is a tree root relaying to workers 2 and 3 (branching 2,
+    // ids = positions for an all-honest run). It crashes after 2 rounds:
+    // its children must collapse to direct delivery within the round and
+    // keep contributing — the whole run stays bit-identical (per-round
+    // log included) to flat fan-out with the identical crash.
+    let mut tree = base_cfg();
+    tree.n_honest = 5;
+    tree.rounds = 5;
+    // a dead socket is detected by the I/O threads, not the deadline —
+    // a long timeout must not slow the surviving rounds
+    tree.round_timeout_ms = 60_000;
+    tree.fanout = "tree".into();
+    tree.branching = 2;
+    let caps = [Some(2), None, None, None, None];
+    let (tree_report, _stats, tree_outcomes, _) = run_tcp(&tree, &caps);
+    assert_eq!(tree_outcomes[0].as_ref().unwrap().rounds, 2);
+    assert_eq!(tree_report.rounds_run, 5);
+
+    let mut flat = tree.clone();
+    flat.fanout = "flat".into();
+    let (flat_report, _stats, flat_outcomes, _) = run_tcp(&flat, &caps);
+    assert_eq!(flat_outcomes[0].as_ref().unwrap().rounds, 2);
+
+    // same crash, same rounds, same losses/bytes — only the fan-out
+    // topology (and therefore coordinator egress) differs
+    assert_per_round_identical(&tree_report, &flat_report);
+    assert_eq!(tree_report.uplink_bytes, flat_report.uplink_bytes);
+    assert_eq!(tree_report.downlink_bytes, flat_report.downlink_bytes);
+    assert!(
+        tree_report.coordinator_egress_bytes
+            < flat_report.coordinator_egress_bytes
+    );
+    // the crash survivors kept serving every round
+    for o in &tree_outcomes[1..] {
+        assert_eq!(o.as_ref().unwrap().rounds, 5);
+    }
+}
+
+#[test]
+fn tcp_delta_krum_selection_switches_fall_back_to_dense_frames() {
+    // Krum copies one momentum row: while the same row stays selected the
+    // off-mask carry law holds bit-exactly (the row itself was β-scaled),
+    // so delta frames flow; every selection switch breaks it and falls
+    // back to a dense frame. The codec decisions are pure functions of
+    // the aggregates, so tcp and local must agree exactly.
+    let mut cfg = base_cfg();
+    cfg.n_honest = 4;
+    cfg.n_byz = 1;
+    cfg.attack = "alie".into();
+    cfg.aggregator = "krum".into();
+    cfg.rounds = 8;
+    let (report, stats, _outcomes, dstats) = run_tcp(&cfg, &[None; 5]);
+    let (local, local_dstats) = run_local(&cfg);
+    assert_reports_identical(&report, &local);
+    let ds = dstats.unwrap();
+    assert_eq!(Some(ds), local_dstats);
+    // one decision per round; at least the basis round was dense, and
+    // every frame still hit the measured socket bytes exactly
+    assert_eq!(ds.dense_rounds + ds.delta_rounds, cfg.rounds as u64);
+    assert!(ds.dense_rounds >= 1);
+    assert_eq!(stats.wire_downlink, report.coordinator_egress_bytes);
+}
+
+#[test]
+fn tree_egress_reduction_is_5x_or_more_at_n100() {
+    // The acceptance ratio: n = 100, k/d = 0.05, downlink = delta,
+    // fanout = tree(3) — coordinator egress must come in ≥ 5× below the
+    // dense flat broadcast model, with measured bytes equal to the model.
+    let mut cfg = base_cfg();
+    cfg.n_honest = 100;
+    cfg.k_frac = 0.05;
+    cfg.rounds = 2;
+    cfg.batch = 5;
+    cfg.test_size = 100;
+    cfg.eval_every = 1000;
+    cfg.fanout = "tree".into();
+    cfg.branching = 3;
+    let caps: Vec<Option<u64>> = vec![None; 100];
+    let (report, stats, outcomes, _) = run_tcp(&cfg, &caps);
+    let summaries: Vec<&JoinSummary> =
+        outcomes.iter().map(|o| o.as_ref().unwrap()).collect();
+    for s in &summaries {
+        assert_eq!(s.rounds, cfg.rounds as u64);
+    }
+
+    // measured == model on both directions
+    assert_eq!(stats.wire_downlink, report.coordinator_egress_bytes);
+    let relayed: u64 = summaries.iter().map(|s| s.relayed_wire_bytes).sum();
+    assert_eq!(stats.wire_downlink + relayed, report.downlink_bytes);
+
+    // ≥ 5× vs what dense flat would have cost the coordinator
+    let d = MlpSpec::default().p();
+    let dense_flat =
+        (cfg.rounds * cfg.n_total() * broadcast_len(d, true)) as u64;
+    assert!(
+        report.coordinator_egress_bytes * 5 <= dense_flat,
+        "egress {} not ≥5× below dense flat {}",
+        report.coordinator_egress_bytes,
+        dense_flat
+    );
+}

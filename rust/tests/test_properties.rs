@@ -276,6 +276,28 @@ fn prop_wire_messages_roundtrip_and_size_exactly() {
                 payload,
             },
         ));
+        // downlink update frames (PR 5): the three payload shapes the
+        // delta codec emits — sync (empty dense), delta (mask-less
+        // sparse), dense fallback
+        let mut delta_vals = vec![0f32; k];
+        rng.fill_gaussian(&mut delta_vals, 1.5);
+        for payload in [
+            Payload::Dense { values: Vec::new() },
+            Payload::Sparse {
+                values: delta_vals,
+                mask: None,
+            },
+            Payload::Dense {
+                values: params.clone(),
+            },
+        ] {
+            msgs.push(WireMessage::UpdateBroadcast {
+                round,
+                prev_mask_seed: rng.next_u64(),
+                beta: rng.next_f32(),
+                payload,
+            });
+        }
         for m in msgs {
             let bytes = m.encode();
             assert_eq!(

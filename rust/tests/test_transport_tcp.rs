@@ -77,6 +77,7 @@ fn assert_reports_identical(a: &RunReport, b: &RunReport) {
     assert_eq!(a.uplink_bytes_to_tau, b.uplink_bytes_to_tau);
     assert_eq!(a.uplink_bytes, b.uplink_bytes);
     assert_eq!(a.downlink_bytes, b.downlink_bytes);
+    assert_eq!(a.coordinator_egress_bytes, b.coordinator_egress_bytes);
     assert_eq!(a.best_acc, b.best_acc);
     assert_eq!(a.final_loss, b.final_loss);
     assert_eq!(a.log.rows.len(), b.log.rows.len());
