@@ -17,9 +17,12 @@ use rosdhb::prng::Pcg64;
 use rosdhb::transport::downlink::{
     DownlinkCodec, DownlinkReplica, FanoutPlan,
 };
+use rosdhb::transport::net::{CoordinatorServer, WorkerClient};
 use rosdhb::transport::{broadcast_len, WireMessage};
 use rosdhb::util::bench;
 use rosdhb::util::bench::time_fn_recorded as timed;
+use std::thread;
+use std::time::Duration;
 
 const D: usize = 11_809;
 const K: usize = 590; // k/d = 0.05
@@ -181,6 +184,48 @@ fn main() {
             replica.apply(round, prev_mask_seed, beta, &payload).unwrap();
         },
     );
+
+    // ---- timing: epoch-boundary re-rendezvous (elastic membership) ----
+    // detach a live worker, then re-open the rendezvous window and
+    // welcome a replacement already parked in the listener backlog — the
+    // wall-clock cost one churn event adds to an epoch boundary over
+    // loopback TCP (handshake + I/O-thread spawn included).
+    {
+        const FP: u64 = 0x5eed;
+        let n = 4usize;
+        let mut server = CoordinatorServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let dial = |addr: String| {
+            thread::spawn(move || {
+                let mut c =
+                    WorkerClient::connect(&addr, FP, Duration::from_secs(30))
+                        .unwrap();
+                // serve nothing; exit on the BYE that detach sends
+                while let Ok(Some(_)) = c.recv(D) {}
+            })
+        };
+        let mut threads: Vec<_> = (0..n).map(|_| dial(addr.clone())).collect();
+        server.rendezvous(n, FP, Duration::from_secs(30)).unwrap();
+        timed(
+            &mut rec,
+            "churn/detach + re-rendezvous one slot (loopback)",
+            2,
+            scale(20),
+            || {
+                threads.push(dial(addr.clone()));
+                server.detach(0);
+                server
+                    .reopen_rendezvous(&[0], FP, Duration::from_secs(30))
+                    .unwrap();
+            },
+        );
+        for w in 0..n {
+            server.detach(w);
+        }
+        for h in threads {
+            h.join().unwrap();
+        }
+    }
 
     let json_path = std::env::var("BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_transport.json".to_string());

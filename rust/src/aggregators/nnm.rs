@@ -201,6 +201,13 @@ impl Aggregator for Nnm {
             for (&c, &v) in cols.iter().zip(&block) {
                 out[c as usize] = v;
             }
+        } else if ctx.carry_in && all_carried && self.inner.warm_startable() {
+            // Every mixed row moved by the masked carry law, so the
+            // caller's pre-fill of `out` (β × previous NNM∘F output) is a
+            // near-fixed-point of the inner iterative rule — warm-start
+            // it there instead of the cold mean init (tolerance-level
+            // drift only; fewer Weiszfeld iterations for `nnm+geomed`).
+            self.inner.aggregate_warm(&refs, out, true);
         } else {
             self.inner.aggregate(&refs, out);
         }
@@ -313,6 +320,169 @@ mod tests {
         let mut got = vec![0f32; 10];
         nnm.aggregate_geo(&refs, &mut geo.ctx(None, false), &mut got);
         assert_eq!(dense, got);
+    }
+
+    use super::super::geomed::GeoMed;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    /// GeoMed wrapper that counts Weiszfeld iterations and warm-path
+    /// entries through shared handles (the instance itself is boxed away
+    /// inside the Nnm under test).
+    struct CountingGeoMed {
+        gm: GeoMed,
+        warm_enabled: bool,
+        iters: Arc<AtomicU64>,
+        warm_calls: Arc<AtomicU64>,
+    }
+
+    impl Aggregator for CountingGeoMed {
+        fn name(&self) -> String {
+            "geomed".into()
+        }
+
+        fn aggregate(&self, inputs: &[&[f32]], out: &mut [f32]) {
+            let it = self.gm.weiszfeld(inputs, out, false);
+            self.iters.fetch_add(it as u64, Ordering::Relaxed);
+        }
+
+        fn warm_startable(&self) -> bool {
+            self.warm_enabled
+        }
+
+        fn aggregate_warm(
+            &self,
+            inputs: &[&[f32]],
+            out: &mut [f32],
+            warm: bool,
+        ) -> u32 {
+            if warm {
+                self.warm_calls.fetch_add(1, Ordering::Relaxed);
+            }
+            let it = self.gm.weiszfeld(inputs, out, warm);
+            self.iters.fetch_add(it as u64, Ordering::Relaxed);
+            it
+        }
+
+        fn kappa(&self, n: usize, f: usize) -> f64 {
+            self.gm.kappa(n, f)
+        }
+    }
+
+    /// Drive a masked-momentum round sequence through the geometry carry
+    /// path the way the sparse round engine does: snapshot → β-scale plus
+    /// k fresh coordinates → apply_masked → aggregate_geo with `out`
+    /// prefilled to β × previous output and `carry_in = true`. Yields
+    /// each round's carry output (and the row set, for oracle checks).
+    fn drive_carry_rounds<F: FnMut(usize, &[Vec<f32>], &[f32])>(
+        nnm: &Nnm,
+        mut visit: F,
+    ) {
+        let (n, d, k, beta) = (8usize, 24usize, 4usize, 0.9f32);
+        let mut rows = corrupted_inputs(n, 2, d, 50.0, 21);
+        let mut geo = PairwiseGeometry::new(n, RefreshPeriod::Never);
+        let mut prev = vec![0f32; d];
+        {
+            let refs = as_refs(&rows);
+            geo.rebuild(&refs);
+            nnm.aggregate_geo(&refs, &mut geo.ctx(None, false), &mut prev);
+        }
+        let mut rng = crate::prng::Pcg64::new(5, 5);
+        for round in 0..20 {
+            let cols = rng.sample_k_of(d, k);
+            {
+                let refs = as_refs(&rows);
+                geo.snapshot(&refs, &cols);
+            }
+            for row in rows.iter_mut() {
+                for v in row.iter_mut() {
+                    *v *= beta;
+                }
+                for &c in &cols {
+                    row[c as usize] += 0.05 * rng.next_gaussian() as f32;
+                }
+            }
+            let refs = as_refs(&rows);
+            geo.apply_masked(&refs, &cols, beta);
+            let mut out: Vec<f32> = prev.iter().map(|v| beta * v).collect();
+            nnm.aggregate_geo(
+                &refs,
+                &mut geo.ctx(Some((cols.as_slice(), beta)), true),
+                &mut out,
+            );
+            visit(round, &rows, &out);
+            prev = out;
+        }
+    }
+
+    #[test]
+    fn inner_geomed_warm_start_tracks_dense_within_tolerance() {
+        // nnm+geomed carry rounds: when every mixed row carried, the
+        // inner Weiszfeld restarts from β × previous NNM∘F output. The
+        // output may differ from the cold dense oracle only at the
+        // solver's own tolerance.
+        let iters = Arc::new(AtomicU64::new(0));
+        let warm_calls = Arc::new(AtomicU64::new(0));
+        let nnm = Nnm::new(
+            2,
+            Box::new(CountingGeoMed {
+                // generous budget: both starts settle into the f32
+                // fixed-point neighborhood before being compared
+                gm: GeoMed {
+                    max_iters: 1000,
+                    ..GeoMed::default()
+                },
+                warm_enabled: true,
+                iters: iters.clone(),
+                warm_calls: warm_calls.clone(),
+            }),
+        );
+        drive_carry_rounds(&nnm, |round, rows, out| {
+            let refs = as_refs(rows);
+            let dense = nnm.aggregate_vec(&refs);
+            let rel = tensor::dist_sq(out, &dense).sqrt()
+                / tensor::norm(&dense).max(1e-9);
+            assert!(rel < 1e-4, "round {round}: warm carry drifted {rel}");
+        });
+        assert!(
+            warm_calls.load(Ordering::Relaxed) > 0,
+            "the warm inner path never ran — carry preconditions broken"
+        );
+    }
+
+    #[test]
+    fn inner_geomed_warm_start_uses_fewer_iterations() {
+        // Same round sequence twice — warm inner vs. cold-only inner.
+        // (Counting needs a tolerance the f32 iterates can reach before
+        // max_iters; the default 1e-10 saturates both starts.)
+        let counting = |warm_enabled| {
+            let iters = Arc::new(AtomicU64::new(0));
+            let warm_calls = Arc::new(AtomicU64::new(0));
+            let nnm = Nnm::new(
+                2,
+                Box::new(CountingGeoMed {
+                    gm: GeoMed {
+                        max_iters: 500,
+                        tol: 1e-4,
+                        eps: 1e-12,
+                    },
+                    warm_enabled,
+                    iters: iters.clone(),
+                    warm_calls: warm_calls.clone(),
+                }),
+            );
+            drive_carry_rounds(&nnm, |_, _, _| {});
+            (iters.load(Ordering::Relaxed), warm_calls.load(Ordering::Relaxed))
+        };
+        let (warm_total, warm_calls) = counting(true);
+        let (cold_total, cold_calls) = counting(false);
+        assert!(warm_calls > 0, "warm inner path never ran");
+        assert_eq!(cold_calls, 0, "cold run must never take the warm path");
+        assert!(
+            warm_total < cold_total,
+            "warm start must save inner iterations: {warm_total} vs \
+             {cold_total}"
+        );
     }
 
     /// Masked momentum rounds: the carry path must track the dense

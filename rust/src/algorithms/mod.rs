@@ -124,6 +124,14 @@ pub trait Algorithm: Send {
         None
     }
 
+    /// Pre-seed the geometry engine's cumulative rebuild/incremental
+    /// counters from a checkpoint, so churn/restore tests can pin them
+    /// across a process restart. Applied when the engine is (lazily)
+    /// created; algorithms without a geometry engine ignore it.
+    fn preseed_geometry_stats(&mut self, stats: GeoStats) {
+        let _ = stats;
+    }
+
     /// Mean of the honest workers' momenta m̄_H^t (convenience).
     fn honest_momentum_mean(&self, n_honest: usize) -> Option<Vec<f32>> {
         self.momenta().map(|m| {
@@ -131,6 +139,40 @@ pub trait Algorithm: Send {
                 m[..n_honest].iter().map(|v| v.as_slice()).collect();
             crate::tensor::mean(&refs)
         })
+    }
+
+    /// Serialize the algorithm's persistent server-side state (momenta /
+    /// estimates) into `out` — the [`crate::checkpoint`] payload. Derived
+    /// caches (aggregation carry, geometry matrix) are *not* part of the
+    /// contract: a restored run resumes at an epoch boundary, where
+    /// [`Self::on_epoch_boundary`] invalidates them on every path anyway.
+    /// Stateless algorithms write nothing.
+    fn save_state(&self, out: &mut Vec<u8>) {
+        let _ = out;
+    }
+
+    /// Inverse of [`Self::save_state`]; must consume exactly `buf`.
+    fn load_state(&mut self, buf: &[u8]) -> Result<(), String> {
+        if buf.is_empty() {
+            Ok(())
+        } else {
+            Err(format!(
+                "{}: unexpected {}-byte checkpoint state for a stateless \
+                 algorithm",
+                self.name(),
+                buf.len()
+            ))
+        }
+    }
+
+    /// Epoch-boundary hook: `changed` lists the gradient slots whose
+    /// occupant left or was replaced at this boundary (their server-side
+    /// state must be zeroed — a fresh worker starts with zero momentum).
+    /// Implementations must also drop any round-to-round carry state
+    /// (aggregation caches, incremental geometry): the boundary broadcast
+    /// is a dense re-sync and the carry chain restarts on both sides.
+    fn on_epoch_boundary(&mut self, changed: &[usize]) {
+        let _ = changed;
     }
 }
 

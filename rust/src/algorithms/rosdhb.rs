@@ -86,6 +86,10 @@ pub struct RoSdhb {
     /// lazily on the first sparse round with a geometry-backed aggregator
     /// (Krum/Multi-Krum/NNM∘F).
     geometry: Option<PairwiseGeometry>,
+    /// Checkpointed geometry counters waiting for the lazy engine build
+    /// (restore happens before the first post-restore round, when
+    /// `geometry` is still `None`).
+    restored_geo_stats: Option<GeoStats>,
 }
 
 impl RoSdhb {
@@ -109,6 +113,7 @@ impl RoSdhb {
             agg_cache: vec![0.0; d],
             cache_valid: false,
             geometry: None,
+            restored_geo_stats: None,
         }
     }
 }
@@ -155,6 +160,73 @@ impl Algorithm for RoSdhb {
 
     fn geometry_stats(&self) -> Option<GeoStats> {
         self.geometry.as_ref().map(|g| g.stats)
+    }
+
+    fn preseed_geometry_stats(&mut self, stats: GeoStats) {
+        match &mut self.geometry {
+            Some(g) => g.stats = stats,
+            None => self.restored_geo_stats = Some(stats),
+        }
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(self.momenta.len() as u32).to_le_bytes());
+        for m in &self.momenta {
+            crate::compression::payload::encode_counted_f32s(m, out);
+        }
+    }
+
+    fn load_state(&mut self, buf: &[u8]) -> Result<(), String> {
+        if buf.len() < 4 {
+            return Err("rosdhb: truncated momenta state".into());
+        }
+        let rows =
+            u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+        if rows != self.momenta.len() {
+            return Err(format!(
+                "rosdhb: checkpoint has {rows} momentum rows, run has {}",
+                self.momenta.len()
+            ));
+        }
+        let mut rest = &buf[4..];
+        for (w, m) in self.momenta.iter_mut().enumerate() {
+            let (row, r) =
+                crate::compression::payload::decode_counted_f32s(
+                    rest,
+                    "rosdhb momentum row",
+                )?;
+            if row.len() != m.len() {
+                return Err(format!(
+                    "rosdhb: momentum row {w} has {} coords, model has {}",
+                    row.len(),
+                    m.len()
+                ));
+            }
+            m.copy_from_slice(&row);
+            rest = r;
+        }
+        if !rest.is_empty() {
+            return Err(format!(
+                "rosdhb: {} trailing bytes after momenta",
+                rest.len()
+            ));
+        }
+        Ok(())
+    }
+
+    fn on_epoch_boundary(&mut self, changed: &[usize]) {
+        for &w in changed {
+            if let Some(m) = self.momenta.get_mut(w) {
+                m.fill(0.0);
+            }
+        }
+        // The boundary broadcast is a dense re-sync: the β·R^{t-1} carry
+        // chain and the incremental distance law both restart, on the
+        // straight and the restored run alike — bit-parity depends on it.
+        self.cache_valid = false;
+        if let Some(g) = &mut self.geometry {
+            g.invalidate();
+        }
     }
 }
 
@@ -245,6 +317,11 @@ impl RoSdhb {
                     env.geometry_refresh,
                 )
             });
+            if let Some(s) = self.restored_geo_stats.take() {
+                // first engine build after a restore: counters resume
+                // from the checkpoint instead of zero
+                geo.stats = s;
+            }
             let inc = all_sent && geo.can_increment();
             if inc {
                 let refs: Vec<&[f32]> =
@@ -840,6 +917,64 @@ mod tests {
         for m in &sparse.momenta[nh..] {
             assert!(m.iter().all(|&v| v == 0.0));
         }
+    }
+
+    #[test]
+    fn checkpoint_state_roundtrips_and_boundary_resets_carry() {
+        let (d, nh, k) = (32, 4, 6);
+        let mut env = Env::new(d, nh, 0, k);
+        let mut alg = RoSdhb::new(d, nh, false);
+        for t in 1..=5u64 {
+            let grads = varied_grads(d, nh, t);
+            alg.round(t, &grads, &[], &mut env.env());
+        }
+        let mut blob = Vec::new();
+        alg.save_state(&mut blob);
+
+        // restore into a fresh instance: momenta must match bitwise
+        let mut fresh = RoSdhb::new(d, nh, false);
+        fresh.load_state(&blob).unwrap();
+        assert_eq!(fresh.momenta, alg.momenta);
+
+        // wrong shape / trailing garbage are rejected
+        let mut other = RoSdhb::new(d, nh + 1, false);
+        assert!(other.load_state(&blob).is_err());
+        let mut long = blob.clone();
+        long.push(0);
+        assert!(fresh.load_state(&long).is_err());
+        assert!(fresh.load_state(&blob[..blob.len() - 1]).is_err());
+
+        // boundary: changed slots zeroed, carry invalidated
+        alg.on_epoch_boundary(&[1]);
+        assert!(alg.momenta[1].iter().all(|&v| v == 0.0));
+        assert!(alg.momenta[0].iter().any(|&v| v != 0.0));
+        assert!(!alg.cache_valid);
+    }
+
+    #[test]
+    fn epoch_boundary_forces_geometry_rebuild_but_keeps_counters() {
+        use crate::aggregators::geometry::RefreshPeriod;
+        let (d, nh, k) = (48, 5, 6);
+        let mut env = Env::new(d, nh, 0, k);
+        env.aggregator =
+            crate::aggregators::parse_spec("nnm+cwtm", 0).unwrap();
+        env.geometry_refresh = RefreshPeriod::Never;
+        let mut alg = RoSdhb::with_mode(d, nh, false, RoundMode::Sparse);
+        for t in 1..=6u64 {
+            let grads = varied_grads(d, nh, t);
+            alg.round(t, &grads, &[], &mut env.env());
+        }
+        let before = alg.geometry_stats().unwrap();
+        assert_eq!(before.rebuilds, 1);
+        alg.on_epoch_boundary(&[]);
+        // counters survive the invalidation (pinned by the churn tests)…
+        assert_eq!(alg.geometry_stats().unwrap(), before);
+        // …and the next round is an exact rebuild, not an increment
+        let grads = varied_grads(d, nh, 7);
+        alg.round(7, &grads, &[], &mut env.env());
+        let after = alg.geometry_stats().unwrap();
+        assert_eq!(after.rebuilds, before.rebuilds + 1);
+        assert_eq!(after.incrementals, before.incrementals);
     }
 
     #[test]

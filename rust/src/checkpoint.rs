@@ -1,0 +1,566 @@
+//! Coordinator checkpoint/restore — the persistence half of elastic
+//! membership.
+//!
+//! A [`Checkpoint`] is the *complete* server-side training state at an
+//! epoch boundary: model θ, the round-stream RNG position, cumulative
+//! byte meters, the metrics log, the algorithm's per-worker state
+//! (momenta / DASHA estimates via
+//! [`Algorithm::save_state`][crate::algorithms::Algorithm::save_state]),
+//! and the observability counters (downlink codec, geometry, wire). A run
+//! restored from it resumes **bit-identically**: `E epochs → checkpoint →
+//! new process → E more epochs` equals `2E epochs` straight, RunReport
+//! and metrics rows included (pinned in `tests/test_properties.rs` and
+//! `tests/test_cli.rs`).
+//!
+//! What is deliberately *not* serialized: derived caches — the pairwise
+//! geometry matrix, the β·R carry cache, the downlink codec's previous
+//! frame. Checkpoints are only written at epoch boundaries, where
+//! [`on_epoch_boundary`][crate::algorithms::Algorithm::on_epoch_boundary]
+//! invalidates those caches on the straight run too, so both runs rebuild
+//! them from identical inputs.
+//!
+//! ## Format
+//!
+//! Versioned, length-prefixed little-endian binary, same encode/decode
+//! discipline as the wire codec ([`crate::transport::WireMessage`]):
+//! every decode is the exact inverse of its encode, trailing bytes are an
+//! error, truncation at any point is an error (never a panic). Layout:
+//!
+//! ```text
+//! [u32 magic][u16 version][u64 config fingerprint][u64 completed round]
+//! [u32 d][d × f32 θ][u128 rng state][u128 rng inc][u64 rng id]
+//! [meter: u64×3, u32 n, n × u64][reached: u8 tag (+ u64 round, u64 bytes)]
+//! [u8 diverged][u32 rows, rows × RoundRecord][u32 len, algorithm state]
+//! [downlink: u8 tag (+ u64×2)][geometry: u8 tag (+ u64×2)]
+//! [net: u8 tag (+ u64×4)]
+//! ```
+//!
+//! The config fingerprint is [`wire_fingerprint`] — restoring under a
+//! config that would change shards, RNG streams or the wire plan is
+//! refused, exactly like a worker with a mismatched config at rendezvous.
+//!
+//! [`wire_fingerprint`]: crate::config::ExperimentConfig::wire_fingerprint
+
+use crate::aggregators::geometry::GeoStats;
+use crate::compression::payload::{decode_counted_f32s, encode_counted_f32s};
+use crate::metrics::RoundRecord;
+use crate::transport::downlink::DownlinkStats;
+use crate::transport::net::NetStats;
+use crate::transport::ByteMeter;
+use std::path::Path;
+
+/// `"RDCK"` — distinguishes a checkpoint from the wire magic `"RDSB"`.
+pub const CKPT_MAGIC: u32 = 0x5244_434b;
+/// Bump on any layout change; older files are refused, never misread.
+pub const CKPT_VERSION: u16 = 1;
+
+/// Full coordinator training state at a completed epoch boundary.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Checkpoint {
+    /// [`wire_fingerprint`](crate::config::ExperimentConfig::wire_fingerprint)
+    /// of the config that produced this state.
+    pub fingerprint: u64,
+    /// Rounds completed; the restored run resumes at `round + 1`.
+    pub round: u64,
+    /// Model parameters θ_round.
+    pub params: Vec<f32>,
+    /// Round-stream RNG `(state, inc, id)`
+    /// ([`Pcg64::state_parts`](crate::prng::Pcg64::state_parts)).
+    pub rng: (u128, u128, u64),
+    /// Cumulative accounting-model byte counters.
+    pub meter: ByteMeter,
+    /// τ-threshold crossing `(round, uplink bytes)` if already reached.
+    pub reached: Option<(u64, u64)>,
+    pub diverged: bool,
+    /// The full metrics log up to `round`.
+    pub rows: Vec<RoundRecord>,
+    /// Opaque [`Algorithm::save_state`](crate::algorithms::Algorithm::save_state)
+    /// payload (momenta / estimates); empty for stateless algorithms.
+    pub algo_state: Vec<u8>,
+    /// Downlink codec frame counters (`None` when no delta codec runs).
+    pub downlink: Option<DownlinkStats>,
+    /// Pairwise-geometry rebuild/incremental counters (`None` when no
+    /// geometry engine ran) — restored so churn tests can pin them across
+    /// a restore.
+    pub geo: Option<GeoStats>,
+    /// Measured wire counters (`None` under the local transport). On
+    /// restore they pre-seed the TCP server's atomics so end-of-run wire
+    /// accounting stays cumulative.
+    pub net: Option<NetStats>,
+}
+
+// ------------------------------------------------------------ encoding
+
+fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u128(out: &mut Vec<u8>, v: u128) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Strict little-endian cursor: every taker fails (never panics) on
+/// truncated input.
+struct Cursor<'a> {
+    buf: &'a [u8],
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], String> {
+        if self.buf.len() < n {
+            return Err(format!(
+                "checkpoint truncated: {what} needs {n} bytes, {} left",
+                self.buf.len()
+            ));
+        }
+        let (head, rest) = self.buf.split_at(n);
+        self.buf = rest;
+        Ok(head)
+    }
+    fn u8(&mut self, what: &str) -> Result<u8, String> {
+        Ok(self.take(1, what)?[0])
+    }
+    fn u16(&mut self, what: &str) -> Result<u16, String> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().unwrap()))
+    }
+    fn u32(&mut self, what: &str) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+    fn u64(&mut self, what: &str) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+    fn u128(&mut self, what: &str) -> Result<u128, String> {
+        Ok(u128::from_le_bytes(self.take(16, what)?.try_into().unwrap()))
+    }
+    fn f64(&mut self, what: &str) -> Result<f64, String> {
+        Ok(f64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+    fn opt_tag(&mut self, what: &str) -> Result<bool, String> {
+        match self.u8(what)? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(format!("checkpoint: bad option tag {v} for {what}")),
+        }
+    }
+}
+
+fn encode_row(r: &RoundRecord, out: &mut Vec<u8>) {
+    put_u64(out, r.round as u64);
+    put_f64(out, r.train_loss);
+    put_f64(out, r.update_norm);
+    match r.test_acc {
+        None => put_u8(out, 0),
+        Some(a) => {
+            put_u8(out, 1);
+            put_f64(out, a);
+        }
+    }
+    put_u64(out, r.uplink_bytes);
+    put_u64(out, r.downlink_bytes);
+    match r.lyapunov {
+        None => put_u8(out, 0),
+        Some((a, b)) => {
+            put_u8(out, 1);
+            put_f64(out, a);
+            put_f64(out, b);
+        }
+    }
+}
+
+fn decode_row(c: &mut Cursor) -> Result<RoundRecord, String> {
+    let round = c.u64("row round")? as usize;
+    let train_loss = c.f64("row train_loss")?;
+    let update_norm = c.f64("row update_norm")?;
+    let test_acc = if c.opt_tag("row test_acc tag")? {
+        Some(c.f64("row test_acc")?)
+    } else {
+        None
+    };
+    let uplink_bytes = c.u64("row uplink")?;
+    let downlink_bytes = c.u64("row downlink")?;
+    let lyapunov = if c.opt_tag("row lyapunov tag")? {
+        Some((c.f64("row lyapunov.0")?, c.f64("row lyapunov.1")?))
+    } else {
+        None
+    };
+    Ok(RoundRecord {
+        round,
+        train_loss,
+        update_norm,
+        test_acc,
+        uplink_bytes,
+        downlink_bytes,
+        lyapunov,
+    })
+}
+
+impl Checkpoint {
+    /// Serialize to the versioned binary layout (see module docs).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_len());
+        put_u32(&mut out, CKPT_MAGIC);
+        put_u16(&mut out, CKPT_VERSION);
+        put_u64(&mut out, self.fingerprint);
+        put_u64(&mut out, self.round);
+        encode_counted_f32s(&self.params, &mut out);
+        put_u128(&mut out, self.rng.0);
+        put_u128(&mut out, self.rng.1);
+        put_u64(&mut out, self.rng.2);
+        put_u64(&mut out, self.meter.uplink);
+        put_u64(&mut out, self.meter.downlink);
+        put_u64(&mut out, self.meter.coordinator_egress);
+        put_u32(&mut out, self.meter.per_worker_uplink.len() as u32);
+        for &b in &self.meter.per_worker_uplink {
+            put_u64(&mut out, b);
+        }
+        match self.reached {
+            None => put_u8(&mut out, 0),
+            Some((r, b)) => {
+                put_u8(&mut out, 1);
+                put_u64(&mut out, r);
+                put_u64(&mut out, b);
+            }
+        }
+        put_u8(&mut out, self.diverged as u8);
+        put_u32(&mut out, self.rows.len() as u32);
+        for r in &self.rows {
+            encode_row(r, &mut out);
+        }
+        put_u32(&mut out, self.algo_state.len() as u32);
+        out.extend_from_slice(&self.algo_state);
+        match self.downlink {
+            None => put_u8(&mut out, 0),
+            Some(d) => {
+                put_u8(&mut out, 1);
+                put_u64(&mut out, d.delta_rounds);
+                put_u64(&mut out, d.dense_rounds);
+            }
+        }
+        match self.geo {
+            None => put_u8(&mut out, 0),
+            Some(g) => {
+                put_u8(&mut out, 1);
+                put_u64(&mut out, g.rebuilds);
+                put_u64(&mut out, g.incrementals);
+            }
+        }
+        match self.net {
+            None => put_u8(&mut out, 0),
+            Some(n) => {
+                put_u8(&mut out, 1);
+                put_u64(&mut out, n.wire_uplink);
+                put_u64(&mut out, n.wire_downlink);
+                put_u64(&mut out, n.raw_uplink);
+                put_u64(&mut out, n.raw_downlink);
+            }
+        }
+        debug_assert_eq!(out.len(), self.encoded_len());
+        out
+    }
+
+    /// Exact byte length of [`Self::encode`]'s output.
+    pub fn encoded_len(&self) -> usize {
+        let row_len = |r: &RoundRecord| {
+            8 + 8
+                + 8
+                + 1
+                + if r.test_acc.is_some() { 8 } else { 0 }
+                + 8
+                + 8
+                + 1
+                + if r.lyapunov.is_some() { 16 } else { 0 }
+        };
+        4 + 2
+            + 8
+            + 8
+            + (4 + 4 * self.params.len())
+            + (16 + 16 + 8)
+            + (8 * 3 + 4 + 8 * self.meter.per_worker_uplink.len())
+            + (1 + if self.reached.is_some() { 16 } else { 0 })
+            + 1
+            + (4 + self.rows.iter().map(row_len).sum::<usize>())
+            + (4 + self.algo_state.len())
+            + (1 + if self.downlink.is_some() { 16 } else { 0 })
+            + (1 + if self.geo.is_some() { 16 } else { 0 })
+            + (1 + if self.net.is_some() { 32 } else { 0 })
+    }
+
+    /// Exact inverse of [`Self::encode`]. `expected_fingerprint` is the
+    /// restoring run's config digest — a mismatch means the config would
+    /// rebuild different shards/streams and the restore is refused.
+    pub fn decode(
+        buf: &[u8],
+        expected_fingerprint: u64,
+    ) -> Result<Checkpoint, String> {
+        let mut c = Cursor { buf };
+        let magic = c.u32("magic")?;
+        if magic != CKPT_MAGIC {
+            return Err(format!(
+                "not a rosdhb checkpoint (magic {magic:#010x})"
+            ));
+        }
+        let version = c.u16("version")?;
+        if version != CKPT_VERSION {
+            return Err(format!(
+                "checkpoint version {version} unsupported (want \
+                 {CKPT_VERSION})"
+            ));
+        }
+        let fingerprint = c.u64("fingerprint")?;
+        if fingerprint != expected_fingerprint {
+            return Err(format!(
+                "checkpoint config fingerprint {fingerprint:#018x} does \
+                 not match this run's {expected_fingerprint:#018x} — the \
+                 restoring config must be identical"
+            ));
+        }
+        let round = c.u64("round")?;
+        let (params, rest) = decode_counted_f32s(c.buf, "checkpoint params")?;
+        c.buf = rest;
+        let rng = (c.u128("rng state")?, c.u128("rng inc")?, c.u64("rng id")?);
+        let mut meter = ByteMeter {
+            uplink: c.u64("meter uplink")?,
+            downlink: c.u64("meter downlink")?,
+            coordinator_egress: c.u64("meter egress")?,
+            per_worker_uplink: Vec::new(),
+        };
+        let n_pw = c.u32("meter per-worker count")? as usize;
+        meter.per_worker_uplink.reserve(n_pw.min(1 << 16));
+        for _ in 0..n_pw {
+            meter.per_worker_uplink.push(c.u64("meter per-worker")?);
+        }
+        let reached = if c.opt_tag("reached tag")? {
+            Some((c.u64("reached round")?, c.u64("reached bytes")?))
+        } else {
+            None
+        };
+        let diverged = match c.u8("diverged")? {
+            0 => false,
+            1 => true,
+            v => return Err(format!("checkpoint: bad diverged flag {v}")),
+        };
+        let n_rows = c.u32("row count")? as usize;
+        let mut rows = Vec::with_capacity(n_rows.min(1 << 16));
+        for _ in 0..n_rows {
+            rows.push(decode_row(&mut c)?);
+        }
+        let algo_len = c.u32("algorithm state length")? as usize;
+        let algo_state = c.take(algo_len, "algorithm state")?.to_vec();
+        let downlink = if c.opt_tag("downlink tag")? {
+            Some(DownlinkStats {
+                delta_rounds: c.u64("downlink delta")?,
+                dense_rounds: c.u64("downlink dense")?,
+            })
+        } else {
+            None
+        };
+        let geo = if c.opt_tag("geometry tag")? {
+            Some(GeoStats {
+                rebuilds: c.u64("geometry rebuilds")?,
+                incrementals: c.u64("geometry incrementals")?,
+            })
+        } else {
+            None
+        };
+        let net = if c.opt_tag("net tag")? {
+            Some(NetStats {
+                wire_uplink: c.u64("net wire up")?,
+                wire_downlink: c.u64("net wire down")?,
+                raw_uplink: c.u64("net raw up")?,
+                raw_downlink: c.u64("net raw down")?,
+            })
+        } else {
+            None
+        };
+        if !c.buf.is_empty() {
+            return Err(format!(
+                "checkpoint: {} trailing bytes",
+                c.buf.len()
+            ));
+        }
+        Ok(Checkpoint {
+            fingerprint,
+            round,
+            params,
+            rng,
+            meter,
+            reached,
+            diverged,
+            rows,
+            algo_state,
+            downlink,
+            geo,
+            net,
+        })
+    }
+
+    /// Write atomically: encode to `<path>.tmp`, fsync, rename over
+    /// `path` — a SIGKILL mid-write leaves the previous checkpoint (or
+    /// nothing) in place, never a torn file.
+    pub fn write(&self, path: &Path) -> Result<(), String> {
+        use std::io::Write as _;
+        let tmp = path.with_extension("tmp");
+        let bytes = self.encode();
+        let mut f = std::fs::File::create(&tmp)
+            .map_err(|e| format!("checkpoint create {}: {e}", tmp.display()))?;
+        f.write_all(&bytes)
+            .map_err(|e| format!("checkpoint write {}: {e}", tmp.display()))?;
+        f.sync_all()
+            .map_err(|e| format!("checkpoint sync {}: {e}", tmp.display()))?;
+        drop(f);
+        std::fs::rename(&tmp, path).map_err(|e| {
+            format!("checkpoint rename to {}: {e}", path.display())
+        })?;
+        Ok(())
+    }
+
+    /// Read and decode `path`, verifying the fingerprint.
+    pub fn read(
+        path: &Path,
+        expected_fingerprint: u64,
+    ) -> Result<Checkpoint, String> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| format!("checkpoint read {}: {e}", path.display()))?;
+        Checkpoint::decode(&bytes, expected_fingerprint)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn sample() -> Checkpoint {
+        Checkpoint {
+            fingerprint: 0xdead_beef_1234_5678,
+            round: 40,
+            params: (0..17).map(|i| (i as f32 * 0.3).sin()).collect(),
+            rng: (123456789u128 << 64 | 42, 987654321, 7),
+            meter: ByteMeter {
+                uplink: 1000,
+                downlink: 2000,
+                coordinator_egress: 1500,
+                per_worker_uplink: vec![250, 250, 300, 200],
+            },
+            reached: Some((12, 4096)),
+            diverged: false,
+            rows: vec![
+                RoundRecord {
+                    round: 1,
+                    train_loss: 2.5,
+                    update_norm: 0.7,
+                    test_acc: None,
+                    uplink_bytes: 100,
+                    downlink_bytes: 200,
+                    lyapunov: Some((0.1, 0.2)),
+                },
+                RoundRecord {
+                    round: 2,
+                    train_loss: 2.1,
+                    update_norm: 0.6,
+                    test_acc: Some(0.83),
+                    uplink_bytes: 200,
+                    downlink_bytes: 400,
+                    lyapunov: None,
+                },
+            ],
+            algo_state: vec![1, 2, 3, 4, 5],
+            downlink: Some(DownlinkStats {
+                delta_rounds: 38,
+                dense_rounds: 2,
+            }),
+            geo: Some(GeoStats {
+                rebuilds: 2,
+                incrementals: 38,
+            }),
+            net: None,
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_exact_and_length_is_exact() {
+        let ck = sample();
+        let bytes = ck.encode();
+        assert_eq!(bytes.len(), ck.encoded_len());
+        let back = Checkpoint::decode(&bytes, ck.fingerprint).unwrap();
+        assert_eq!(back, ck);
+
+        // all-None variant too
+        let ck2 = Checkpoint {
+            reached: None,
+            downlink: None,
+            geo: None,
+            net: Some(NetStats {
+                wire_uplink: 1,
+                wire_downlink: 2,
+                raw_uplink: 3,
+                raw_downlink: 4,
+            }),
+            rows: Vec::new(),
+            algo_state: Vec::new(),
+            ..ck
+        };
+        let bytes2 = ck2.encode();
+        assert_eq!(bytes2.len(), ck2.encoded_len());
+        assert_eq!(Checkpoint::decode(&bytes2, ck2.fingerprint).unwrap(), ck2);
+    }
+
+    #[test]
+    fn every_truncation_errors_and_never_panics() {
+        let ck = sample();
+        let bytes = ck.encode();
+        for cut in 0..bytes.len() {
+            assert!(
+                Checkpoint::decode(&bytes[..cut], ck.fingerprint).is_err(),
+                "prefix of {cut} bytes decoded"
+            );
+        }
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(Checkpoint::decode(&long, ck.fingerprint).is_err());
+    }
+
+    #[test]
+    fn magic_version_and_fingerprint_are_enforced() {
+        let ck = sample();
+        let bytes = ck.encode();
+        assert!(Checkpoint::decode(&bytes, ck.fingerprint ^ 1)
+            .unwrap_err()
+            .contains("fingerprint"));
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] ^= 0xff;
+        assert!(Checkpoint::decode(&bad_magic, ck.fingerprint)
+            .unwrap_err()
+            .contains("magic"));
+        let mut bad_ver = bytes.clone();
+        bad_ver[4] = 0xff;
+        assert!(Checkpoint::decode(&bad_ver, ck.fingerprint)
+            .unwrap_err()
+            .contains("version"));
+    }
+
+    #[test]
+    fn write_is_atomic_and_read_verifies() {
+        let dir = std::env::temp_dir()
+            .join(format!("rosdhb-ckpt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.ckpt");
+        let ck = sample();
+        ck.write(&path).unwrap();
+        // the tmp staging file must be gone after the rename
+        assert!(!path.with_extension("tmp").exists());
+        assert_eq!(Checkpoint::read(&path, ck.fingerprint).unwrap(), ck);
+        assert!(Checkpoint::read(&path, ck.fingerprint ^ 2).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

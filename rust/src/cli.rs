@@ -17,6 +17,13 @@
 //! `join` runs one worker process against `coordinator_addr` — both
 //! sides must use the identical experiment config (enforced via a config
 //! fingerprint at rendezvous).
+//!
+//! Driver-level flags (consumed here, never part of the fingerprinted
+//! config): `train`/`serve` accept `--checkpoint <path>` (write a
+//! [`crate::checkpoint::Checkpoint`] at every `--every`-th epoch
+//! boundary, default 1) and `--restore <path>` (resume bit-identically
+//! from one); `join` accepts `--leave_after_epoch <e>` (announce a
+//! graceful `LEAVE` with the final gradient of epoch `e` and hang up).
 
 /// A parsed command line.
 #[derive(Clone, Debug, PartialEq)]

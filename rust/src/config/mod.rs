@@ -184,6 +184,74 @@ pub struct ExperimentConfig {
     /// Relay-tree branching factor (`fanout = "tree"`; ignored under
     /// flat).
     pub branching: usize,
+    /// Rounds per epoch (0 = no epochs — the pre-elastic behavior).
+    /// With `epoch_rounds = E`, round `t` belongs to epoch `(t-1)/E`; at
+    /// every epoch boundary the membership may change (leaves, joins,
+    /// readmissions), workers are rebuilt from `(seed, epoch, shard)`
+    /// alone, and the coordinator may write a checkpoint.
+    pub epoch_rounds: usize,
+    /// What happens to a worker suspended for a missed round deadline:
+    /// "never" (suspended for the rest of the run — the old eviction) or
+    /// "next-epoch" (re-admitted at the next epoch boundary if its
+    /// connection is still healthy).
+    pub readmit: String,
+    /// Membership churn schedule, coordinator-local (never fingerprinted):
+    /// comma-separated `<epoch>:[+-]<slot>` events. `-` vacates the slot
+    /// starting at that epoch's boundary; `+` re-fills it from the
+    /// re-opened rendezvous. Example: `"1:-2,2:+2"` — slot 2 leaves at
+    /// the end of epoch 0 and a replacement joins one epoch later.
+    pub churn: String,
+}
+
+/// One membership-churn event (see [`ExperimentConfig::churn`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChurnEvent {
+    /// The epoch whose *opening* boundary applies the event (epoch e
+    /// starts at round `e * epoch_rounds + 1`).
+    pub epoch: u64,
+    /// Gradient slot the event applies to.
+    pub slot: usize,
+    /// `true` = the slot is (re-)filled at this boundary, `false` = the
+    /// worker occupying it leaves.
+    pub join: bool,
+}
+
+/// Parse a churn schedule: `""` ⇒ no events, else comma-separated
+/// `<epoch>:[+-]<slot>` triples sorted by (epoch, slot).
+pub fn parse_churn(spec: &str) -> Result<Vec<ChurnEvent>, String> {
+    let mut events = Vec::new();
+    for item in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let (epoch_s, rest) = item
+            .split_once(':')
+            .ok_or_else(|| format!("churn '{item}': want <epoch>:[+-]<slot>"))?;
+        let epoch: u64 = epoch_s
+            .trim()
+            .parse()
+            .map_err(|_| format!("churn '{item}': bad epoch '{epoch_s}'"))?;
+        if epoch == 0 {
+            return Err(format!(
+                "churn '{item}': epoch 0 has no opening boundary — initial \
+                 membership comes from rendezvous"
+            ));
+        }
+        let rest = rest.trim();
+        let (join, slot_s) = match rest.as_bytes().first() {
+            Some(b'+') => (true, &rest[1..]),
+            Some(b'-') => (false, &rest[1..]),
+            _ => {
+                return Err(format!(
+                    "churn '{item}': slot must be prefixed with + (join) \
+                     or - (leave)"
+                ))
+            }
+        };
+        let slot: usize = slot_s
+            .parse()
+            .map_err(|_| format!("churn '{item}': bad slot '{slot_s}'"))?;
+        events.push(ChurnEvent { epoch, slot, join });
+    }
+    events.sort_by_key(|e| (e.epoch, e.slot, e.join));
+    Ok(events)
 }
 
 impl ExperimentConfig {
@@ -226,6 +294,9 @@ impl ExperimentConfig {
             downlink: "dense".into(),
             fanout: "flat".into(),
             branching: 2,
+            epoch_rounds: 0,
+            readmit: "next-epoch".into(),
+            churn: String::new(),
         }
     }
 
@@ -282,6 +353,7 @@ impl ExperimentConfig {
         num!("pool_size", c.pool_size, usize);
         num!("round_timeout_ms", c.round_timeout_ms, u64);
         num!("branching", c.branching, usize);
+        num!("epoch_rounds", c.epoch_rounds, usize);
         if let Some(v) = get("round_engine") {
             c.round_engine =
                 v.as_str().ok_or("round_engine: want string")?.into();
@@ -306,6 +378,12 @@ impl ExperimentConfig {
         }
         if let Some(v) = get("fanout") {
             c.fanout = v.as_str().ok_or("fanout: want string")?.into();
+        }
+        if let Some(v) = get("readmit") {
+            c.readmit = v.as_str().ok_or("readmit: want string")?.into();
+        }
+        if let Some(v) = get("churn") {
+            c.churn = v.as_str().ok_or("churn: want string")?.into();
         }
         if let Some(v) = get("listen_addr") {
             c.listen_addr =
@@ -409,6 +487,9 @@ impl ExperimentConfig {
                 "downlink" => c.downlink = tmp.downlink.clone(),
                 "fanout" => c.fanout = tmp.fanout.clone(),
                 "branching" => c.branching = tmp.branching,
+                "epoch_rounds" => c.epoch_rounds = tmp.epoch_rounds,
+                "readmit" => c.readmit = tmp.readmit.clone(),
+                "churn" => c.churn = tmp.churn.clone(),
                 other => return Err(format!("unknown config key '{other}'")),
             }
         }
@@ -477,6 +558,39 @@ impl ExperimentConfig {
             &self.fanout,
             self.branching,
         )?;
+        match self.readmit.as_str() {
+            "never" | "next-epoch" => {}
+            other => {
+                return Err(format!(
+                    "unknown readmit '{other}' (never | next-epoch)"
+                ))
+            }
+        }
+        if self.epoch_rounds > 0 && self.algorithm == Algorithm::ByzDashaPage {
+            return Err(
+                "epoch_rounds > 0 is not supported for byz-dasha-page: its \
+                 client-side gradient-estimate state cannot survive the \
+                 epoch-boundary worker rebuild"
+                    .into(),
+            );
+        }
+        let churn = parse_churn(&self.churn)?;
+        if !churn.is_empty() {
+            if self.epoch_rounds == 0 {
+                return Err(
+                    "churn needs epoch boundaries — set epoch_rounds > 0".into()
+                );
+            }
+            for ev in &churn {
+                if ev.slot >= self.n_honest {
+                    return Err(format!(
+                        "churn slot {} is not an honest gradient slot \
+                         (n_honest = {})",
+                        ev.slot, self.n_honest
+                    ));
+                }
+            }
+        }
         match self.transport.as_str() {
             "local" => {}
             "tcp" => {
@@ -550,7 +664,7 @@ impl ExperimentConfig {
             Dataset::MnistIdx(_) => "mnist-idx",
         };
         let canon = format!(
-            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
             self.algorithm.name(),
             self.n_honest,
             self.n_byz,
@@ -577,6 +691,13 @@ impl ExperimentConfig {
             self.gamma,
             self.gamma_decay,
             self.clip,
+            // the epoch layer changes when worker state is rebuilt and
+            // when dense re-sync broadcasts happen — every side must
+            // agree; the churn *schedule* stays coordinator-local (a
+            // worker needs no foreknowledge of who leaves or joins), so
+            // `churn` is deliberately NOT hashed
+            self.epoch_rounds,
+            self.readmit,
         );
         // FNV-1a, 64-bit
         let mut h: u64 = 0xcbf2_9ce4_8422_2325;
@@ -616,6 +737,8 @@ impl ExperimentConfig {
         m.insert("downlink".into(), Json::Str(self.downlink.clone()));
         m.insert("fanout".into(), Json::Str(self.fanout.clone()));
         m.insert("branching".into(), Json::Num(self.branching as f64));
+        m.insert("epoch_rounds".into(), Json::Num(self.epoch_rounds as f64));
+        m.insert("readmit".into(), Json::Str(self.readmit.clone()));
         Json::Obj(m)
     }
 }
@@ -878,6 +1001,78 @@ mod tests {
         m2.dataset = Dataset::MnistIdx("/home/user/mnist".into());
         assert_eq!(m1.wire_fingerprint(), m2.wire_fingerprint());
         assert_ne!(a.wire_fingerprint(), m1.wire_fingerprint());
+    }
+
+    #[test]
+    fn epoch_keys_parse_validate_and_fingerprint() {
+        let mut c = ExperimentConfig::default_mnist_like();
+        assert_eq!(c.epoch_rounds, 0);
+        assert_eq!(c.readmit, "next-epoch");
+        assert_eq!(c.churn, "");
+        c.set("epoch_rounds", "4").unwrap();
+        assert_eq!(c.epoch_rounds, 4);
+        c.set("readmit", "never").unwrap();
+        assert!(c.set("readmit", "sometimes").is_err());
+        c.set("churn", "1:-2,2:+2").unwrap();
+        assert_eq!(c.churn, "1:-2,2:+2");
+
+        // churn without epochs is meaningless
+        let mut c = ExperimentConfig::default_mnist_like();
+        c.churn = "1:-2".into();
+        assert!(c.validate().is_err());
+        c.epoch_rounds = 4;
+        c.validate().unwrap();
+        // churn slots must be honest gradient slots
+        c.churn = "1:-10".into();
+        assert!(c.validate().is_err());
+        // DASHA's client-side estimates cannot survive a worker rebuild
+        let mut c = ExperimentConfig::default_mnist_like();
+        c.attack = "none".into();
+        c.algorithm = Algorithm::ByzDashaPage;
+        c.epoch_rounds = 4;
+        assert!(c.validate().is_err());
+
+        // epoch_rounds and readmit are wire identity; the churn schedule
+        // is coordinator-local and deliberately NOT fingerprinted
+        let a = ExperimentConfig::default_mnist_like();
+        let mut b = a.clone();
+        b.epoch_rounds = 4;
+        assert_ne!(a.wire_fingerprint(), b.wire_fingerprint());
+        let mut b = a.clone();
+        b.readmit = "never".into();
+        assert_ne!(a.wire_fingerprint(), b.wire_fingerprint());
+        let mut b = a.clone();
+        b.epoch_rounds = 4;
+        let mut b2 = b.clone();
+        b2.churn = "1:-2".into();
+        assert_eq!(b.wire_fingerprint(), b2.wire_fingerprint());
+
+        let doc = toml::TomlDoc::parse(
+            "[experiment]\nepoch_rounds = 3\nreadmit = \"never\"\n\
+             churn = \"1:+0\"\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.epoch_rounds, 3);
+        assert_eq!(c.readmit, "never");
+        assert_eq!(c.churn, "1:+0");
+    }
+
+    #[test]
+    fn churn_schedules_parse_exactly() {
+        assert_eq!(parse_churn("").unwrap(), vec![]);
+        assert_eq!(
+            parse_churn("2:+1, 1:-2").unwrap(),
+            vec![
+                ChurnEvent { epoch: 1, slot: 2, join: false },
+                ChurnEvent { epoch: 2, slot: 1, join: true },
+            ]
+        );
+        assert!(parse_churn("0:-1").is_err(), "epoch 0 has no boundary");
+        assert!(parse_churn("1:2").is_err(), "missing +/- prefix");
+        assert!(parse_churn("x:-1").is_err());
+        assert!(parse_churn("1:-x").is_err());
+        assert!(parse_churn("1").is_err());
     }
 
     #[test]

@@ -52,7 +52,10 @@ use crate::algorithms::{self, Algorithm, RoundEnv};
 use crate::attacks::{self, AttackKind};
 use crate::compression::payload::PayloadPlan;
 use crate::compression::RandK;
-use crate::config::{Dataset as DatasetCfg, Engine, ExperimentConfig};
+use crate::checkpoint::Checkpoint;
+use crate::config::{
+    parse_churn, ChurnEvent, Dataset as DatasetCfg, Engine, ExperimentConfig,
+};
 use crate::data::{self, Dataset};
 use crate::diagnostics;
 use crate::metrics::{MetricsLog, RoundRecord};
@@ -68,6 +71,7 @@ use crate::transport::{broadcast_len, ByteMeter};
 use crate::worker::PjrtEngine;
 use crate::worker::{GradEngine, HonestWorker, NativeEngine};
 use anyhow::{anyhow, Result};
+use std::path::{Path, PathBuf};
 use self::pool::WorkerPool;
 use self::round_transport::{LocalTransport, RoundTransport, TcpTransport};
 
@@ -82,7 +86,26 @@ use self::round_transport::{LocalTransport, RoundTransport, TcpTransport};
 pub fn build_training_workers(
     cfg: &ExperimentConfig,
 ) -> Result<(Vec<HonestWorker>, Dataset)> {
+    build_training_workers_for_epoch(cfg, 0)
+}
+
+/// Epoch-aware worker derivation — the elastic-membership determinism
+/// rule. Epoch 0 is the historical derivation bit for bit; every later
+/// epoch re-derives the partition RNG and all per-worker streams from a
+/// sub-root keyed on `(seed, epoch)` alone, so a worker joining mid-run
+/// (in any slot, in any arrival order) rebuilds state identical to one
+/// that was present from round 1. Nothing about membership history leaks
+/// into the streams — join order can never change results.
+pub fn build_training_workers_for_epoch(
+    cfg: &ExperimentConfig,
+    epoch: u64,
+) -> Result<(Vec<HonestWorker>, Dataset)> {
     let root = Pcg64::new(cfg.seed, 0);
+    let root = if epoch == 0 {
+        root
+    } else {
+        root.derive(0x6570_6f63 /* "epoc" */, epoch, 0)
+    };
     let (train, test) = load_dataset(cfg)?;
     let mut part_rng = root.derive(0x7061_7274, 0, 0);
     let shards = match crate::config::parse_partition(&cfg.partition)
@@ -203,6 +226,24 @@ pub struct Trainer {
     downlink_codec: Option<DownlinkCodec>,
     /// Set when loss/update became non-finite; `run()` stops gracefully.
     pub diverged: bool,
+    /// Parsed `config: churn` — the coordinator-local membership schedule
+    /// applied at epoch boundaries.
+    churn: Vec<ChurnEvent>,
+    /// First completed round of this process: 0 for a fresh run, the
+    /// checkpointed round after [`Self::load_checkpoint`] — `run()`
+    /// resumes at `start_round + 1`.
+    start_round: u64,
+    /// τ-crossing memo `(round, uplink bytes)`, lifted out of `run()`'s
+    /// locals so a restore can re-seed it.
+    reached: Option<(usize, u64)>,
+    /// Write a [`Checkpoint`] here at qualifying epoch boundaries.
+    checkpoint_path: Option<PathBuf>,
+    /// Checkpoint every this many epochs (`--every`, default 1).
+    checkpoint_every: u64,
+    /// The opening round of an epoch broadcasts the dense model even
+    /// under `downlink = "delta"` — joiners have no replica history and
+    /// the straight/restored runs must both restart the delta chain.
+    epoch_resync: bool,
     /// Per-worker reusable gradient buffers (honest slots first, then
     /// data-level Byzantine workers).
     grad_store: Vec<Vec<f32>>,
@@ -330,6 +371,12 @@ impl Trainer {
             fanout,
             downlink_codec,
             diverged: false,
+            churn: parse_churn(&cfg.churn).map_err(|e| anyhow!(e))?,
+            start_round: 0,
+            reached: None,
+            checkpoint_path: None,
+            checkpoint_every: 1,
+            epoch_resync: false,
             grad_store: vec![vec![0f32; d]; n_grad],
             loss_store: vec![0f32; n_grad],
         })
@@ -345,13 +392,21 @@ impl Trainer {
     /// through the configured transport. Worker panics and engine errors
     /// come back as `Err` (never an abort); remote-worker failures
     /// degrade into dropped contributions inside the transport.
-    fn compute_gradients(&mut self, t: u64) -> Result<()> {
+    /// `dense_resync` (the opening round of an epoch) suppresses the
+    /// delta-downlink frame: the broadcast carries the dense model so
+    /// fresh joiners and surviving replicas alike re-anchor on θ.
+    fn compute_gradients(&mut self, t: u64, dense_resync: bool) -> Result<()> {
+        let downlink = if dense_resync {
+            None
+        } else {
+            self.downlink_codec.as_ref().map(|c| c.frame(t))
+        };
         self.transport.exchange(
             t,
             self.engine.as_mut(),
             &self.params,
             self.cfg.batch,
-            self.downlink_codec.as_ref().map(|c| c.frame(t)),
+            downlink,
             &mut self.grad_store,
             &mut self.loss_store,
         )
@@ -386,14 +441,17 @@ impl Trainer {
     /// One synchronous round; returns (mean honest loss, ‖R‖).
     pub fn step(&mut self, t: u64) -> Result<(f64, f64)> {
         let nh = self.cfg.n_honest;
+        // An epoch's opening round broadcasts dense regardless of the
+        // downlink mode — metered and transmitted alike.
+        let resync = std::mem::take(&mut self.epoch_resync);
         // Downlink byte model (owned here, not by the algorithm: the
         // broadcast shape is a transport concern — dense model + optional
         // mask seed, or the delta codec's frame — and the fan-out plan
         // splits delivered bytes from coordinator egress).
         let n = self.cfg.n_total();
         let frame_len = match &self.downlink_codec {
-            Some(codec) => codec.frame_len(t),
-            None => broadcast_len(
+            Some(codec) if !resync => codec.frame_len(t),
+            _ => broadcast_len(
                 self.params.len(),
                 matches!(self.plan, PayloadPlan::SparseGlobal { .. }),
             ),
@@ -403,7 +461,7 @@ impl Trainer {
             n,
             self.fanout.direct_count(n),
         );
-        self.compute_gradients(t)?;
+        self.compute_gradients(t, resync)?;
         let mut loss_sum = 0.0f64;
         for &l in &self.loss_store[..nh] {
             loss_sum += l as f64;
@@ -486,6 +544,110 @@ impl Trainer {
         Ok((mean_loss, update_norm))
     }
 
+    /// Write a [`Checkpoint`] to `path` at every `every`-th epoch
+    /// boundary (requires `config: epoch_rounds > 0`; `run()` errors
+    /// otherwise the first time a write would be due).
+    pub fn set_checkpoint(&mut self, path: impl Into<PathBuf>, every: u64) {
+        self.checkpoint_path = Some(path.into());
+        self.checkpoint_every = every.max(1);
+    }
+
+    /// Resume from a checkpoint written by a previous process: restore
+    /// θ, the round-stream RNG, byte meters, metrics rows, the
+    /// algorithm's per-worker state and the observability counters, then
+    /// arrange for `run()` to continue at the next round. The restored
+    /// trajectory is bit-identical to never having stopped.
+    pub fn load_checkpoint(&mut self, path: &Path) -> Result<()> {
+        let ck = Checkpoint::read(path, self.cfg.wire_fingerprint())
+            .map_err(|e| anyhow!(e))?;
+        let er = self.cfg.epoch_rounds as u64;
+        if er == 0 {
+            return Err(anyhow!(
+                "restore requires `epoch_rounds > 0`: checkpoints exist \
+                 only at epoch boundaries"
+            ));
+        }
+        if ck.round == 0 || ck.round % er != 0 {
+            return Err(anyhow!(
+                "checkpoint round {} is not an epoch boundary of \
+                 epoch_rounds = {er}",
+                ck.round
+            ));
+        }
+        if ck.params.len() != self.params.len() {
+            return Err(anyhow!(
+                "checkpoint carries {} parameters, model has {}",
+                ck.params.len(),
+                self.params.len()
+            ));
+        }
+        self.params.copy_from_slice(&ck.params);
+        let (state, inc, id) = ck.rng;
+        self.rng = Pcg64::from_parts(state, inc, id);
+        self.meter = ck.meter;
+        self.reached = ck.reached.map(|(r, b)| (r as usize, b));
+        self.diverged = ck.diverged;
+        self.log.rows = ck.rows;
+        self.algorithm
+            .load_state(&ck.algo_state)
+            .map_err(|e| anyhow!(e))?;
+        if let (Some(codec), Some(stats)) =
+            (self.downlink_codec.as_mut(), ck.downlink)
+        {
+            codec.stats = stats;
+        }
+        if let Some(geo) = ck.geo {
+            self.algorithm.preseed_geometry_stats(geo);
+        }
+        if let Some(net) = ck.net {
+            self.transport.preseed_net_stats(net);
+        }
+        self.start_round = ck.round;
+        Ok(())
+    }
+
+    /// Serialize the full post-round-`t` state (an epoch boundary) to
+    /// `path`, atomically.
+    fn save_checkpoint(&self, t: u64, path: &Path) -> Result<()> {
+        let mut algo_state = Vec::new();
+        self.algorithm.save_state(&mut algo_state);
+        let ck = Checkpoint {
+            fingerprint: self.cfg.wire_fingerprint(),
+            round: t,
+            params: self.params.clone(),
+            rng: self.rng.state_parts(),
+            meter: self.meter.clone(),
+            reached: self.reached.map(|(r, b)| (r as u64, b)),
+            diverged: self.diverged,
+            rows: self.log.rows.clone(),
+            algo_state,
+            downlink: self.downlink_stats(),
+            geo: self.geometry_stats(),
+            net: self.transport.net_stats(),
+        };
+        ck.write(path).map_err(|e| anyhow!(e))
+    }
+
+    /// The opening boundary of the epoch whose first round is `t`:
+    /// apply membership churn through the transport (leaves, rendezvous
+    /// re-fills, suspension re-admissions), zero the per-slot algorithm
+    /// state of changed slots, restart the delta-downlink chain and mark
+    /// round `t`'s broadcast as a dense re-sync. Runs identically on a
+    /// straight run and on one restored from a checkpoint — bit-parity
+    /// depends on both sides invalidating the same derived caches here.
+    fn epoch_boundary(&mut self, t: u64) -> Result<()> {
+        let epoch = (t - 1) / self.cfg.epoch_rounds as u64;
+        let changed =
+            self.transport
+                .epoch_boundary(epoch, &self.churn, &self.cfg)?;
+        self.algorithm.on_epoch_boundary(&changed);
+        if let Some(codec) = &mut self.downlink_codec {
+            codec.reset();
+        }
+        self.epoch_resync = true;
+        Ok(())
+    }
+
     /// Current test accuracy.
     pub fn evaluate(&mut self) -> Result<f64> {
         self.engine.accuracy(&self.params, &self.test_set)
@@ -503,10 +665,16 @@ impl Trainer {
         )
     }
 
-    /// Run the full loop per the config; returns the report.
+    /// Run the full loop per the config; returns the report. Resumes at
+    /// `start_round + 1` after [`Self::load_checkpoint`] — the first
+    /// iteration then immediately processes the epoch boundary, exactly
+    /// where the straight run would process it.
     pub fn run(&mut self) -> Result<RunReport> {
-        let mut reached: Option<(usize, u64)> = None;
-        for t in 1..=self.cfg.rounds as u64 {
+        let er = self.cfg.epoch_rounds as u64;
+        for t in (self.start_round + 1)..=self.cfg.rounds as u64 {
+            if er > 0 && t > 1 && (t - 1) % er == 0 {
+                self.epoch_boundary(t)?;
+            }
             self.step(t)?;
             if self.diverged {
                 eprintln!(
@@ -521,17 +689,30 @@ impl Trainer {
                 if let Some(row) = self.log.rows.last_mut() {
                     row.test_acc = Some(acc);
                 }
-                if acc >= self.cfg.tau && reached.is_none() {
-                    reached = Some((t as usize, self.meter.uplink));
+                if acc >= self.cfg.tau && self.reached.is_none() {
+                    self.reached = Some((t as usize, self.meter.uplink));
                     if self.cfg.stop_at_tau {
                         break;
                     }
+                }
+            }
+            if let Some(path) = &self.checkpoint_path {
+                if er == 0 {
+                    return Err(anyhow!(
+                        "--checkpoint requires `epoch_rounds > 0`: \
+                         checkpoints are written at epoch boundaries"
+                    ));
+                }
+                if t % er == 0 && (t / er) % self.checkpoint_every == 0 {
+                    let path = path.clone();
+                    self.save_checkpoint(t, &path)?;
                 }
             }
         }
         if let Some(path) = &self.cfg.csv_out {
             self.log.save_csv(path)?;
         }
+        let reached = self.reached;
         Ok(RunReport {
             algorithm: self.algorithm.name().to_string(),
             rounds_run: self.log.rows.len(),

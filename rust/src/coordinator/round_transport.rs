@@ -61,7 +61,7 @@
 use crate::compression::codec::MaskWire;
 use crate::compression::payload::{Payload, PayloadPlan};
 use crate::compression::RandK;
-use crate::config::ExperimentConfig;
+use crate::config::{ChurnEvent, ExperimentConfig};
 use crate::transport::downlink::FanoutPlan;
 use crate::transport::net::{CoordinatorServer, NetStats};
 use crate::transport::WireMessage;
@@ -90,6 +90,16 @@ fn take_worker(
              (worker pool died); rebuild the Trainer"
         )
     })
+}
+
+/// The contribution of a slot with no worker behind it: an exact zero
+/// gradient and zero loss — momentum decays, sums gain nothing. Both
+/// transports substitute the identical values, which is what keeps a
+/// churned run on sockets bit-equal to the local oracle.
+fn zero_slot(grad: &mut Vec<f32>, loss: &mut f32, d: usize) {
+    grad.resize(d, 0.0);
+    grad.fill(0.0);
+    *loss = 0.0;
 }
 
 /// One round-trip of the synchronous round loop: distribute `params`,
@@ -143,6 +153,29 @@ pub trait RoundTransport: Send {
         None
     }
 
+    /// Process the *opening* boundary of `epoch`: vacate slots whose
+    /// workers announced a graceful leave or are churned out by the
+    /// coordinator's schedule, re-fill `+` churn slots (TCP: through a
+    /// re-opened rendezvous window), and re-admit deadline-suspended
+    /// workers under `config: readmit = "next-epoch"`. Returns the
+    /// sorted, deduplicated gradient slots whose **membership** changed —
+    /// the trainer resets their per-slot algorithm state. Re-admissions
+    /// are fault recovery, not membership changes, and are not reported.
+    fn epoch_boundary(
+        &mut self,
+        epoch: u64,
+        churn: &[ChurnEvent],
+        cfg: &ExperimentConfig,
+    ) -> Result<Vec<usize>> {
+        let _ = (epoch, churn, cfg);
+        Ok(Vec::new())
+    }
+
+    /// Pre-seed measured wire counters from a checkpoint so end-of-run
+    /// socket accounting stays cumulative across a restore. No-op for
+    /// transports that move no real bytes.
+    fn preseed_net_stats(&mut self, _stats: NetStats) {}
+
     /// Release transport resources (TCP: send `BYE` to all workers).
     /// Also runs on drop; explicit calls make shutdown ordering testable.
     fn shutdown(&mut self) {}
@@ -168,14 +201,21 @@ pub struct LocalTransport {
     /// Broadcast parameter buffer shared with pool threads; refreshed in
     /// place each round (no allocation once every job handle is returned).
     shared_params: Arc<Vec<f32>>,
+    /// Slot membership under churn: a vacated slot contributes an exact
+    /// zero gradient and zero loss (the same substitution the TCP path
+    /// makes for a vacant connection) until a `+` churn event re-fills
+    /// it — the oracle the socket runtime must reproduce bit for bit.
+    active: Vec<bool>,
 }
 
 impl LocalTransport {
     pub fn new(workers: Vec<HonestWorker>, pool: Option<WorkerPool>) -> Self {
+        let n = workers.len();
         LocalTransport {
             workers: workers.into_iter().map(Some).collect(),
             pool,
             shared_params: Arc::new(Vec::new()),
+            active: vec![true; n],
         }
     }
 
@@ -215,7 +255,12 @@ impl RoundTransport for LocalTransport {
                 .expect("freshly replaced Arc is unique");
             buf.resize(params.len(), 0.0);
             buf.copy_from_slice(params);
+            let mut n_jobs = 0usize;
             for slot in 0..n_grad {
+                if !self.active[slot] {
+                    zero_slot(&mut grad_store[slot], &mut loss_store[slot], params.len());
+                    continue;
+                }
                 let worker = take_worker(&mut self.workers, slot)?;
                 let buf = std::mem::take(&mut grad_store[slot]);
                 pool.submit(Job {
@@ -225,9 +270,10 @@ impl RoundTransport for LocalTransport {
                     batch,
                     buf,
                 })?;
+                n_jobs += 1;
             }
             let mut first_err: Option<anyhow::Error> = None;
-            for _ in 0..n_grad {
+            for _ in 0..n_jobs {
                 let done = pool.recv()?;
                 self.workers[done.slot] = Some(done.worker);
                 grad_store[done.slot] = done.buf;
@@ -246,6 +292,10 @@ impl RoundTransport for LocalTransport {
             }
         } else {
             for slot in 0..n_grad {
+                if !self.active[slot] {
+                    zero_slot(&mut grad_store[slot], &mut loss_store[slot], params.len());
+                    continue;
+                }
                 let mut worker = take_worker(&mut self.workers, slot)?;
                 let res = worker.compute_grad_into(
                     engine,
@@ -258,6 +308,30 @@ impl RoundTransport for LocalTransport {
             }
         }
         Ok(())
+    }
+
+    fn epoch_boundary(
+        &mut self,
+        epoch: u64,
+        churn: &[ChurnEvent],
+        cfg: &ExperimentConfig,
+    ) -> Result<Vec<usize>> {
+        // Re-derive every worker from (seed, epoch, membership) alone —
+        // the same rebuild a remote `rosdhb join` process runs, so a
+        // worker arriving mid-run reconstructs identical state no matter
+        // when (or in which order) it joined.
+        let rebuilt = super::build_training_workers_for_epoch(cfg, epoch)?.0;
+        self.workers = rebuilt.into_iter().map(Some).collect();
+        let mut changed = Vec::new();
+        for ev in churn.iter().filter(|ev| ev.epoch == epoch) {
+            if ev.slot < self.active.len() {
+                self.active[ev.slot] = ev.join;
+                changed.push(ev.slot);
+            }
+        }
+        changed.sort_unstable();
+        changed.dedup();
+        Ok(changed)
     }
 
     fn probe_honest(
@@ -286,6 +360,20 @@ impl RoundTransport for LocalTransport {
 
 // -------------------------------------------------------------------- tcp
 
+/// Membership state of one connected slot across epochs. Orthogonal to
+/// the server-side *liveness* of the connection: a slot can be `Active`
+/// with a suspended (deadline-missing) socket behind it — that is a
+/// fault, handled by `config: readmit`, not a membership change.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SlotState {
+    /// A worker owns the slot and is expected to contribute.
+    Active,
+    /// The worker left (gracefully or by churn schedule): the slot
+    /// contributes exact zeros, silently, until a `+` churn event
+    /// re-fills it from a re-opened rendezvous window.
+    Vacant,
+}
+
 /// Coordinator side of `transport = "tcp"`.
 pub struct TcpTransport {
     server: CoordinatorServer,
@@ -303,6 +391,16 @@ pub struct TcpTransport {
     /// filled by [`Self::exchange`] under every non-dense plan and handed
     /// to the algorithm via [`RoundTransport::round_payloads`].
     payloads: Vec<Payload>,
+    /// Per-connection membership state (one entry per joined socket).
+    slots: Vec<SlotState>,
+    /// Slots whose latest uplink carried a `LEAVE` announcement — they
+    /// vacate at the next epoch boundary.
+    pending_left: Vec<bool>,
+    /// Config fingerprint re-checked against mid-run joiners.
+    fingerprint: u64,
+    /// `config: readmit = "next-epoch"`: deadline-suspended workers whose
+    /// socket survived are woken at epoch boundaries.
+    readmit_next_epoch: bool,
 }
 
 impl TcpTransport {
@@ -345,6 +443,10 @@ impl TcpTransport {
             drones_reply,
             timeout: Duration::from_millis(cfg.round_timeout_ms.max(1)),
             payloads: Vec::new(),
+            slots: vec![SlotState::Active; cfg.n_total()],
+            pending_left: vec![false; cfg.n_total()],
+            fingerprint: cfg.wire_fingerprint(),
+            readmit_next_epoch: cfg.readmit == "next-epoch",
         })
     }
 
@@ -554,12 +656,12 @@ impl RoundTransport for TcpTransport {
         };
         let n_conn = self.server.n_workers();
         let mut expect = vec![false; n_conn];
-        for e in expect.iter_mut().take(self.n_grad) {
-            *e = true;
+        for (w, e) in expect.iter_mut().enumerate().take(self.n_grad) {
+            *e = self.slots[w] == SlotState::Active;
         }
         if self.drones_reply {
-            for e in expect.iter_mut().skip(self.n_grad) {
-                *e = true;
+            for (w, e) in expect.iter_mut().enumerate().skip(self.n_grad) {
+                *e = self.slots[w] == SlotState::Active;
             }
         }
         let n_expected = self.server.broadcast(t, msg, &expect, self.timeout);
@@ -576,6 +678,11 @@ impl RoundTransport for TcpTransport {
         let mut got = vec![false; self.n_grad];
         for reply in self.server.collect(n_expected, t, self.timeout) {
             let w = reply.worker as usize;
+            if reply.left {
+                // Graceful goodbye: this uplink still counts, the slot
+                // vacates at the next epoch boundary.
+                self.pending_left[w] = true;
+            }
             match reply.result {
                 Ok((loss, bytes)) => {
                     if w >= self.n_grad {
@@ -629,6 +736,13 @@ impl RoundTransport for TcpTransport {
                     "gradient"
                 };
                 loss_store[w] = 0.0;
+                // A vacant slot contributing zeros is the *expected*
+                // membership state (the local oracle substitutes the
+                // same values) — not a fault worth a warning or a DASHA
+                // eviction.
+                if self.slots[w] == SlotState::Vacant {
+                    continue;
+                }
                 // DASHA is stateful on the client: the worker already
                 // advanced its local estimate when it compressed this
                 // round's difference, while the zero substitute froze the
@@ -671,6 +785,80 @@ impl RoundTransport for TcpTransport {
         } else {
             None
         }
+    }
+
+    fn epoch_boundary(
+        &mut self,
+        epoch: u64,
+        churn: &[ChurnEvent],
+        _cfg: &ExperimentConfig,
+    ) -> Result<Vec<usize>> {
+        let mut changed = Vec::new();
+        // Graceful leaves announced by LEAVE frames during the closing
+        // epoch: send BYE, let the io thread exit, vacate the slot.
+        for w in 0..self.slots.len() {
+            if std::mem::take(&mut self.pending_left[w])
+                && self.slots[w] == SlotState::Active
+            {
+                self.server.detach(w);
+                self.slots[w] = SlotState::Vacant;
+                changed.push(w);
+            }
+        }
+        // Coordinator-scheduled churn: forced leaves first, then joins
+        // into the vacated slots through a re-opened rendezvous window.
+        // Every scheduled event reports its slot as changed whether or
+        // not the state flipped — the local oracle counts identically,
+        // which is what keeps the two `changed` sets (and therefore the
+        // per-slot state resets) bit-equal.
+        let mut joins: Vec<usize> = Vec::new();
+        for ev in churn.iter().filter(|ev| ev.epoch == epoch) {
+            if ev.slot >= self.slots.len() {
+                continue;
+            }
+            if ev.join {
+                if self.slots[ev.slot] == SlotState::Vacant {
+                    joins.push(ev.slot);
+                }
+            } else if self.slots[ev.slot] == SlotState::Active {
+                self.server.detach(ev.slot);
+                self.slots[ev.slot] = SlotState::Vacant;
+            }
+            changed.push(ev.slot);
+        }
+        if !joins.is_empty() {
+            self.server.reopen_rendezvous(
+                &joins,
+                self.fingerprint,
+                RENDEZVOUS_TIMEOUT,
+            )?;
+            for &s in &joins {
+                self.slots[s] = SlotState::Active;
+            }
+        }
+        // Deadline-suspended sockets wake up under readmit = "next-epoch".
+        // Fault recovery, not membership: their momenta were never reset,
+        // so they are deliberately absent from `changed`.
+        if self.readmit_next_epoch {
+            for w in 0..self.slots.len() {
+                if self.slots[w] == SlotState::Active
+                    && !self.server.is_alive(w)
+                    && self.server.readmit(w)
+                {
+                    eprintln!(
+                        "rosdhb[tcp]: epoch {epoch}: worker {w} re-admitted \
+                         after suspension"
+                    );
+                }
+            }
+        }
+        changed.sort_unstable();
+        changed.dedup();
+        Ok(changed)
+    }
+
+    fn preseed_net_stats(&mut self, stats: NetStats) {
+        self.server.preseed_stats(stats);
     }
 
     fn net_stats(&self) -> Option<NetStats> {

@@ -37,6 +37,7 @@
 pub mod aggregators;
 pub mod algorithms;
 pub mod attacks;
+pub mod checkpoint;
 pub mod cli;
 pub mod compression;
 pub mod config;

@@ -52,10 +52,36 @@ fn config_from_cli(cli: &Cli) -> Result<ExperimentConfig> {
         }
         None => ExperimentConfig::default_mnist_like(),
     };
-    for (k, v) in cli.config_overrides(&["config", "quick", "out", "samples"]) {
+    for (k, v) in cli.config_overrides(&[
+        "config",
+        "quick",
+        "out",
+        "samples",
+        "checkpoint",
+        "every",
+        "restore",
+        "leave_after_epoch",
+    ]) {
         cfg.set(k, v).map_err(|e| anyhow!(e))?;
     }
     Ok(cfg)
+}
+
+/// Driver-level checkpoint flags: `--restore <path>` resumes from a
+/// checkpoint first, then `--checkpoint <path> [--every <epochs>]` arms
+/// writes at qualifying epoch boundaries.
+fn apply_checkpoint_flags(cli: &Cli, trainer: &mut Trainer) -> Result<()> {
+    if let Some(path) = cli.get("restore") {
+        trainer.load_checkpoint(std::path::Path::new(path))?;
+        eprintln!("rosdhb: restored state from {path}");
+    }
+    if let Some(path) = cli.get("checkpoint") {
+        let every: u64 = cli
+            .get("every")
+            .map_or(Ok(1), |v| v.parse().map_err(|_| anyhow!("bad --every")))?;
+        trainer.set_checkpoint(path, every);
+    }
+    Ok(())
 }
 
 fn cmd_train(cli: &Cli) -> Result<()> {
@@ -72,6 +98,7 @@ fn cmd_train(cli: &Cli) -> Result<()> {
         cfg.attack,
     );
     let mut trainer = Trainer::from_config(&cfg)?;
+    apply_checkpoint_flags(cli, &mut trainer)?;
     eprintln!(
         "κ bound = {:.4} (Theorem 1 needs κB² ≤ 1/25)",
         trainer.kappa_bound()
@@ -95,6 +122,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         cfg.listen_addr,
     );
     let mut trainer = Trainer::from_config(&cfg)?;
+    apply_checkpoint_flags(cli, &mut trainer)?;
     let report = trainer.run()?;
     if let Some(ns) = trainer.net_stats() {
         eprintln!(
@@ -126,9 +154,25 @@ fn cmd_join(cli: &Cli) -> Result<()> {
     let cfg = config_from_cli(cli)?;
     let addr = cfg.coordinator_addr.clone();
     eprintln!("rosdhb join: dialing {addr} ({})", cfg.algorithm.name());
+    let leave_after_epoch = match cli.get("leave_after_epoch") {
+        Some(v) => Some(
+            v.parse()
+                .map_err(|_| anyhow!("bad --leave_after_epoch"))?,
+        ),
+        None => None,
+    };
     // retry for as long as a coordinator would wait at rendezvous, so
-    // workers may be launched well before `serve` without dying early
-    let summary = remote::join_run(&cfg, &addr, RENDEZVOUS_TIMEOUT, None)?;
+    // workers may be launched well before `serve` without dying early —
+    // and mid-run joiners keep dialing until a boundary window opens
+    let summary = remote::join_run(
+        &cfg,
+        &addr,
+        RENDEZVOUS_TIMEOUT,
+        remote::JoinOpts {
+            leave_after_epoch,
+            ..Default::default()
+        },
+    )?;
     eprintln!(
         "rosdhb join: worker {} ({}) served {} rounds — coordinator done",
         summary.worker_id, summary.role, summary.rounds

@@ -3,7 +3,7 @@
 use std::io::Write;
 
 /// One row of the training log.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RoundRecord {
     pub round: usize,
     /// Mean honest training loss this round (from worker gradient passes).
@@ -21,7 +21,7 @@ pub struct RoundRecord {
 }
 
 /// Whole-run log + summary extraction.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct MetricsLog {
     pub rows: Vec<RoundRecord>,
 }

@@ -301,6 +301,14 @@ impl DownlinkCodec {
         self.has_prev = true;
     }
 
+    /// Drop the carry basis so the next [`Self::note_update`] emits a
+    /// dense frame. Called at every epoch boundary: the boundary round's
+    /// broadcast is a dense model re-sync (newly joined workers have no
+    /// replica history), which breaks the carry chain on both sides.
+    pub fn reset(&mut self) {
+        self.has_prev = false;
+    }
+
     /// `update[c] == β·prev[c]` on the raw f32 bits for every coordinate
     /// outside the round's shared `mask`.
     fn carry_holds(&mut self, mask: &crate::compression::Mask, update: &[f32]) -> bool {
@@ -428,6 +436,15 @@ impl DownlinkReplica {
                 other.kind_name()
             )),
         }
+    }
+
+    /// Re-sync the replica to a dense model broadcast (epoch-boundary
+    /// frame): adopt `params` as-is and drop the carry basis — the next
+    /// update frame must be dense again before deltas can resume.
+    pub fn resync(&mut self, params: &[f32]) {
+        debug_assert_eq!(params.len(), self.d);
+        self.params.copy_from_slice(params);
+        self.has_r = false;
     }
 
     /// θ_{round-1} = θ_{round-2} − γ_{round-1}·clip(R^{round-1}) — the
@@ -690,6 +707,32 @@ mod tests {
             )),
         };
         assert!(rep.apply(3, 7, 0.9, &masked).is_err());
+    }
+
+    #[test]
+    fn codec_reset_and_replica_resync_break_the_carry_chain() {
+        let (d, k, seed, beta) = (16usize, 2usize, 1u64, 0.5f32);
+        let mut codec = DownlinkCodec::new(d, k, seed, beta);
+        let zeros = vec![0.0f32; d];
+        codec.note_update(1, &zeros); // dense basis
+        codec.note_update(2, &zeros); // all-zero carry holds -> delta
+        assert_eq!(codec.stats.delta_rounds, 1);
+        codec.reset();
+        codec.note_update(3, &zeros); // basis dropped -> dense again
+        assert_eq!(codec.stats.dense_rounds, 2);
+
+        let mut rep = DownlinkReplica::new(2, 0.1, 1.0, 0.0, vec![0.0; d]);
+        rep.apply(2, 0, beta, &Payload::Dense { values: vec![1.0; d] })
+            .unwrap();
+        let resync_to = vec![7.0f32; d];
+        rep.resync(&resync_to);
+        assert_eq!(rep.params(), &resync_to[..]);
+        // after resync a delta frame is out of protocol again
+        let delta = Payload::Sparse { values: vec![0.0; 2], mask: None };
+        assert!(rep.apply(4, 7, beta, &delta).is_err());
+        // but a fresh dense update is accepted
+        rep.apply(4, 0, beta, &Payload::Dense { values: vec![1.0; d] })
+            .unwrap();
     }
 
     #[test]

@@ -47,6 +47,9 @@ const GRAD_TAG_BASE: u16 = 2;
 /// grad family's `[GRAD_TAG_BASE, GRAD_TAG_BASE + 255]` range.
 const UPDATE_TAG: u16 = 258;
 
+/// Wire tag of [`WireMessage::Leave`].
+const LEAVE_TAG: u16 = 259;
+
 /// All messages that cross the (simulated or real) network.
 #[derive(Clone, Debug, PartialEq)]
 pub enum WireMessage {
@@ -86,6 +89,12 @@ pub enum WireMessage {
         worker: u16,
         payload: Payload,
     },
+    /// Worker → server: graceful departure notice. Sent immediately
+    /// before the worker's *final* uplink of the epoch; the coordinator
+    /// vacates the slot at the next epoch boundary (never mid-epoch, so
+    /// the round arithmetic stays deterministic). `round` is the last
+    /// round the worker will serve.
+    Leave { round: u64, worker: u16 },
 }
 
 impl WireMessage {
@@ -104,6 +113,7 @@ impl WireMessage {
             WireMessage::Grad { payload, .. } => {
                 HEADER_BYTES + payload.body_len()
             }
+            WireMessage::Leave { .. } => HEADER_BYTES,
         }
     }
 
@@ -122,6 +132,9 @@ impl WireMessage {
                 worker,
                 payload,
             } => (GRAD_TAG_BASE + payload.kind() as u16, *round, *worker),
+            WireMessage::Leave { round, worker } => {
+                (LEAVE_TAG, *round, *worker)
+            }
         };
         out.extend_from_slice(&round.to_le_bytes());
         out.extend_from_slice(&tag.to_le_bytes());
@@ -153,6 +166,7 @@ impl WireMessage {
             WireMessage::Grad { payload, .. } => {
                 payload.encode_body_into(&mut out);
             }
+            WireMessage::Leave { .. } => {}
         }
         debug_assert_eq!(out.len(), self.encoded_len());
         out
@@ -212,6 +226,12 @@ impl WireMessage {
                     payload,
                 })
             }
+            LEAVE_TAG => {
+                if !body.is_empty() {
+                    return Err("Leave: unexpected body bytes".into());
+                }
+                Ok(WireMessage::Leave { round, worker })
+            }
             t if t >= GRAD_TAG_BASE && t - GRAD_TAG_BASE <= u8::MAX as u16 => {
                 let kind = (t - GRAD_TAG_BASE) as u8;
                 let payload = Payload::decode_body(kind, body, d)?;
@@ -242,7 +262,7 @@ fn decode_f32s(buf: &[u8], what: &str) -> Result<Vec<f32>, String> {
 }
 
 /// Cumulative byte counters for one experiment.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct ByteMeter {
     /// Total worker→server bytes (summed over all n workers — the server
     /// cannot distinguish Byzantine uplinks, so they count too, as in the
@@ -444,6 +464,7 @@ mod tests {
         ];
         msgs.extend(sample_grads(100));
         msgs.extend(sample_updates(100));
+        msgs.push(WireMessage::Leave { round: 12, worker: 3 });
         for m in msgs {
             assert_eq!(m.encode().len(), m.encoded_len(), "{m:?}");
         }
@@ -476,6 +497,7 @@ mod tests {
             (100, sample_updates(100)[0].clone()),
             (100, sample_updates(100)[1].clone()),
             (100, sample_updates(100)[2].clone()),
+            (100, WireMessage::Leave { round: 8, worker: 2 }),
         ];
         for (d, m) in msgs {
             let bytes = m.encode();

@@ -39,8 +39,9 @@ use std::time::{Duration, Instant};
 
 /// Bumped on any framing or handshake change (2: typed `Grad` uplinks —
 /// quantized payloads joined the wire family; 3: JOIN carries a relay
-/// listener port, PLAN/RESYNC frames for the relay-tree fan-out).
-pub const PROTOCOL_VERSION: u16 = 3;
+/// listener port, PLAN/RESYNC frames for the relay-tree fan-out; 4:
+/// LEAVE frames and epoch-boundary re-rendezvous into vacated slots).
+pub const PROTOCOL_VERSION: u16 = 4;
 
 /// "RSDB" — rejects random port scanners / wrong services at JOIN time.
 const MAGIC: u32 = 0x5244_5342;
@@ -67,6 +68,13 @@ const KIND_PLAN: u8 = 6;
 /// Worker → coordinator: "my relay feed died — deliver my broadcasts
 /// directly from now on (and re-send the current round's frame)".
 const KIND_RESYNC: u8 = 7;
+/// Worker → coordinator, immediately *before* the worker's final `GRAD`
+/// of the epoch (body = one [`WireMessage::Leave`]): a graceful
+/// departure announcement. The I/O thread flags the connection's next
+/// reply (`Reply::left`) so the coordinator vacates the slot at the next
+/// epoch boundary — never mid-epoch, keeping round arithmetic
+/// deterministic.
+const KIND_LEAVE: u8 = 8;
 
 /// JOIN body: magic(4) + version(2) + fingerprint(8) + relay_port(2).
 const JOIN_LEN: usize = 16;
@@ -155,6 +163,16 @@ pub struct NetCounters {
 }
 
 impl NetCounters {
+    /// Add a restored run's pre-crash tallies (checkpoint restore): the
+    /// counters keep counting from where the checkpointed run left off,
+    /// so cumulative byte accounting survives the process boundary.
+    pub fn preseed(&self, s: NetStats) {
+        self.wire_uplink.fetch_add(s.wire_uplink, Ordering::Relaxed);
+        self.wire_downlink.fetch_add(s.wire_downlink, Ordering::Relaxed);
+        self.raw_uplink.fetch_add(s.raw_uplink, Ordering::Relaxed);
+        self.raw_downlink.fetch_add(s.raw_downlink, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> NetStats {
         NetStats {
             wire_uplink: self.wire_uplink.load(Ordering::Relaxed),
@@ -179,6 +197,9 @@ pub struct Reply {
     /// `(loss, raw WireMessage bytes)` on success; a human-readable reason
     /// when the worker stalled past the deadline or its connection broke.
     pub result: Result<(f32, Vec<u8>), String>,
+    /// The worker announced a graceful leave (a `LEAVE` frame preceded
+    /// this uplink): this is its final contribution of the epoch.
+    pub left: bool,
 }
 
 enum IoCmd {
@@ -256,6 +277,12 @@ impl CoordinatorServer {
         self.counters.snapshot()
     }
 
+    /// See [`NetCounters::preseed`] — restores cumulative byte accounting
+    /// when a run resumes from a checkpoint.
+    pub fn preseed_stats(&self, s: NetStats) {
+        self.counters.preseed(s);
+    }
+
     /// Accept exactly `expected` workers, validating each `JOIN` against
     /// `fingerprint` and answering with a `WELCOME` that assigns the next
     /// worker id in join order. Non-matching joiners get an `ERR` frame
@@ -271,7 +298,9 @@ impl CoordinatorServer {
         while self.conns.len() < expected {
             match self.listener.accept() {
                 Ok((stream, peer)) => {
-                    if let Err(e) = self.admit(stream, fingerprint, expected) {
+                    if let Err(e) =
+                        self.admit(stream, fingerprint, expected, None)
+                    {
                         eprintln!("rosdhb[tcp]: rejected joiner {peer}: {e}");
                     }
                 }
@@ -292,12 +321,66 @@ impl CoordinatorServer {
         Ok(())
     }
 
-    /// Handshake one joiner and spawn its I/O thread.
+    /// Re-open the rendezvous listener for a bounded window and fill the
+    /// given vacant `slots` with fresh joiners (epoch-boundary churn:
+    /// `WELCOME` assigns the vacated worker id, so the joiner re-derives
+    /// the slot's shard and RNG stream from the shared config alone).
+    /// Slots fill in arrival order; the window failing to fill them all
+    /// is an error — the churn schedule promised a joiner.
+    pub fn reopen_rendezvous(
+        &mut self,
+        slots: &[usize],
+        fingerprint: u64,
+        timeout: Duration,
+    ) -> Result<()> {
+        if slots.is_empty() {
+            return Ok(());
+        }
+        let expected = self.conns.len();
+        let deadline = Instant::now() + timeout;
+        self.listener.set_nonblocking(true)?;
+        let mut pending: Vec<usize> = slots.to_vec();
+        while !pending.is_empty() {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    let slot = pending[0];
+                    match self.admit(stream, fingerprint, expected, Some(slot))
+                    {
+                        Ok(()) => {
+                            pending.remove(0);
+                        }
+                        Err(e) => eprintln!(
+                            "rosdhb[tcp]: rejected joiner {peer}: {e}"
+                        ),
+                    }
+                }
+                Err(e) if is_timeout(&e) => {
+                    if Instant::now() >= deadline {
+                        self.listener.set_nonblocking(false)?;
+                        return Err(anyhow!(
+                            "epoch rendezvous timed out with {} vacated \
+                             slot(s) still unfilled",
+                            pending.len()
+                        ));
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(anyhow!("accept: {e}")),
+            }
+        }
+        self.listener.set_nonblocking(false)?;
+        Ok(())
+    }
+
+    /// Handshake one joiner and spawn its I/O thread. `slot` re-fills a
+    /// vacated worker id (epoch-boundary churn); `None` appends the next
+    /// id in join order (initial rendezvous).
     fn admit(
         &mut self,
         mut stream: TcpStream,
         fingerprint: u64,
         expected: usize,
+        slot: Option<usize>,
     ) -> Result<()> {
         stream.set_nodelay(true).ok();
         stream.set_nonblocking(false)?;
@@ -337,7 +420,10 @@ impl CoordinatorServer {
                 .fetch_add(n as u64, Ordering::Relaxed);
             return Err(anyhow!(msg));
         }
-        let id = self.conns.len() as u16;
+        let id = match slot {
+            Some(s) => s as u16,
+            None => self.conns.len() as u16,
+        };
         let mut welcome = Vec::with_capacity(4);
         welcome.extend_from_slice(&id.to_le_bytes());
         welcome.extend_from_slice(&(expected as u16).to_le_bytes());
@@ -354,13 +440,38 @@ impl CoordinatorServer {
         let handle = std::thread::spawn(move || {
             io_loop(stream, id, cmd_rx, reply_tx, counters);
         });
-        self.conns.push(Conn {
+        let conn = Conn {
             cmd_tx: Some(cmd_tx),
             handle: Some(handle),
             alive: true,
             relay_addr: (relay_port != 0)
                 .then(|| SocketAddr::new(peer.ip(), relay_port)),
-        });
+        };
+        match slot {
+            None => self.conns.push(conn),
+            Some(s) => {
+                // the slot was detached at (or before) this boundary; the
+                // old thread exits on its own
+                self.conns[s] = conn;
+                if let Some(direct) = &mut self.deliver_direct {
+                    // refills never re-thread the relay tree: feed the
+                    // joiner directly and tell it so (it expects a PLAN
+                    // frame under fanout = "tree")
+                    direct[s] = true;
+                    let frame =
+                        Arc::new(build_frame(KIND_PLAN, &0u16.to_le_bytes()));
+                    let sent = self.conns[s]
+                        .cmd_tx
+                        .as_ref()
+                        .map(|tx| tx.send(IoCmd::Raw { frame }));
+                    if !matches!(sent, Some(Ok(()))) {
+                        return Err(anyhow!(
+                            "worker {s} lost before fanout plan delivery"
+                        ));
+                    }
+                }
+            }
+        }
         Ok(())
     }
 
@@ -525,6 +636,41 @@ impl CoordinatorServer {
         }
     }
 
+    /// Whether `worker`'s connection is currently live (receives
+    /// broadcasts, owes uplinks).
+    pub fn is_alive(&self, worker: usize) -> bool {
+        self.conns.get(worker).is_some_and(|c| c.alive)
+    }
+
+    /// Lift a deadline suspension: the slot's I/O thread survived the
+    /// miss (parked on its command channel) and resumes with the next
+    /// broadcast. Returns `false` when the connection is actually gone
+    /// (thread exited, channel closed) and the slot cannot come back.
+    pub fn readmit(&mut self, worker: usize) -> bool {
+        match self.conns.get_mut(worker) {
+            Some(c) if c.cmd_tx.is_some() => {
+                c.alive = true;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Permanently release a slot's connection (graceful leave or churn
+    /// eviction): send `BYE`, close the command channel, and *detach* the
+    /// I/O thread rather than joining it — it may be parked mid-read and
+    /// exits on its own once the socket unblocks. The slot entry stays,
+    /// vacant, ready for [`Self::reopen_rendezvous`] to re-fill it.
+    pub fn detach(&mut self, worker: usize) {
+        if let Some(c) = self.conns.get_mut(worker) {
+            if let Some(tx) = c.cmd_tx.take() {
+                let _ = tx.send(IoCmd::Bye);
+            }
+            c.handle.take();
+            c.alive = false;
+        }
+    }
+
     /// Send `BYE` to every live worker and join all I/O threads.
     pub fn shutdown(&mut self) {
         for conn in &mut self.conns {
@@ -609,6 +755,7 @@ fn io_loop(
                                 worker: id,
                                 round,
                                 result: Err(format!("send failed: {e}")),
+                                left: false,
                             });
                         }
                         break;
@@ -624,6 +771,7 @@ fn io_loop(
                     continue;
                 }
                 stream.set_read_timeout(Some(timeout)).ok();
+                let mut leaving = false;
                 loop {
                     match read_frame(&mut stream) {
                         Ok((KIND_GRAD, body))
@@ -654,8 +802,27 @@ fn io_loop(
                                     loss,
                                     body[GRAD_ENVELOPE..].to_vec(),
                                 )),
+                                left: leaving,
                             });
-                            break;
+                            // an uplink from an *earlier* round is catch-up
+                            // traffic a suspension left in the socket
+                            // buffer: keep draining until this round's
+                            // reply arrives, or a readmitted worker would
+                            // stay one round behind forever
+                            if wire_round >= round {
+                                break;
+                            }
+                        }
+                        Ok((KIND_LEAVE, body)) => {
+                            // graceful-departure announcement; the GRAD
+                            // that follows is this worker's last (raw
+                            // bytes only: the metered wire format has no
+                            // coordinator-side Leave copy)
+                            counters.raw_uplink.fetch_add(
+                                (FRAME_OVERHEAD + body.len()) as u64,
+                                Ordering::Relaxed,
+                            );
+                            leaving = true;
                         }
                         Ok((KIND_RESYNC, body)) => {
                             counters.raw_uplink.fetch_add(
@@ -681,6 +848,7 @@ fn io_loop(
                                         result: Err(format!(
                                             "resync send failed: {e}"
                                         )),
+                                        left: false,
                                     });
                                     break 'cmds;
                                 }
@@ -701,6 +869,7 @@ fn io_loop(
                                     "protocol violation: expected GRAD, \
                                      got kind {kind}"
                                 )),
+                                left: false,
                             });
                             break 'cmds;
                         }
@@ -712,12 +881,21 @@ fn io_loop(
                             } else {
                                 format!("connection lost: {e}")
                             };
+                            let fatal = !is_timeout(&e);
                             let _ = reply_tx.send(Reply {
                                 worker: id,
                                 round,
                                 result: Err(reason),
+                                left: false,
                             });
-                            break 'cmds;
+                            if fatal {
+                                break 'cmds;
+                            }
+                            // deadline miss: *suspend*, don't kill — the
+                            // connection survives, parked on the command
+                            // channel, so the coordinator can readmit the
+                            // slot at a later epoch boundary
+                            continue 'cmds;
                         }
                     }
                 }
@@ -821,6 +999,12 @@ impl WorkerClient {
         send_grad_on(&mut self.stream, loss, msg)
     }
 
+    /// Announce a graceful leave (must be followed by this round's final
+    /// `send_grad` — the coordinator flags that uplink as the last).
+    pub fn send_leave(&mut self, round: u64, worker: u16) -> Result<()> {
+        send_leave_on(&mut self.stream, round, worker)
+    }
+
     /// Read the post-rendezvous fanout assignment (`fanout = "tree"`
     /// only): how many relay children to accept, and the parent relay to
     /// dial for downlink frames (`None` = the coordinator feeds this
@@ -866,6 +1050,12 @@ fn send_grad_on(stream: &mut TcpStream, loss: f32, msg: &WireMessage) -> Result<
     body.extend_from_slice(&loss.to_le_bytes());
     body.extend_from_slice(&encoded);
     write_frame(stream, KIND_GRAD, &body)?;
+    Ok(())
+}
+
+fn send_leave_on(stream: &mut TcpStream, round: u64, worker: u16) -> Result<()> {
+    let body = WireMessage::Leave { round, worker }.encode();
+    write_frame(stream, KIND_LEAVE, &body)?;
     Ok(())
 }
 
@@ -1135,6 +1325,12 @@ impl TreeFeed {
         send_grad_on(&mut self.stream, loss, msg)
     }
 
+    /// Announce a graceful leave over the direct connection (uplinks
+    /// never ride the relay tree) — followed by the final `send_grad`.
+    pub fn send_leave(&mut self, round: u64, worker: u16) -> Result<()> {
+        send_leave_on(&mut self.stream, round, worker)
+    }
+
     /// Wire/raw bytes this worker re-forwarded to its tree children.
     pub fn relayed(&self) -> (u64, u64) {
         (
@@ -1340,5 +1536,136 @@ mod tests {
         stop_tx.send(()).unwrap();
         server.shutdown();
         worker.join().unwrap();
+    }
+
+    fn grad(round: u64, worker: u16, loss_tag: f32) -> (f32, WireMessage) {
+        (
+            loss_tag,
+            WireMessage::Grad {
+                round,
+                worker,
+                payload: Payload::Dense {
+                    values: vec![loss_tag; 4],
+                },
+            },
+        )
+    }
+
+    #[test]
+    fn leave_frame_flags_the_final_grad_reply() {
+        let mut server = CoordinatorServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let worker = thread::spawn(move || {
+            let mut c =
+                WorkerClient::connect(&addr, 7, Duration::from_secs(5)).unwrap();
+            let _ = c.recv(4).unwrap();
+            c.send_leave(1, c.worker_id).unwrap();
+            let (loss, msg) = grad(1, c.worker_id, 0.5);
+            c.send_grad(loss, &msg).unwrap();
+            let _ = c.recv(4); // BYE
+        });
+        server.rendezvous(1, 7, Duration::from_secs(10)).unwrap();
+        let msg = WireMessage::ModelBroadcastPlain {
+            round: 1,
+            params: vec![0.0; 4],
+        };
+        let n = server.broadcast(1, &msg, &[true], Duration::from_secs(5));
+        let replies = server.collect(n, 1, Duration::from_secs(5));
+        assert_eq!(replies.len(), 1);
+        assert!(replies[0].left, "LEAVE must flag the final uplink");
+        assert_eq!(replies[0].result.as_ref().unwrap().0, 0.5);
+        server.shutdown();
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn suspended_worker_readmits_and_drains_the_stale_grad() {
+        let mut server = CoordinatorServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let worker = thread::spawn(move || {
+            let mut c =
+                WorkerClient::connect(&addr, 7, Duration::from_secs(5)).unwrap();
+            // round 1: stall past the deadline, then answer late
+            let _ = c.recv(4).unwrap();
+            thread::sleep(Duration::from_millis(700));
+            let (loss, msg) = grad(1, c.worker_id, 0.1);
+            c.send_grad(loss, &msg).unwrap();
+            // round 2: answer promptly
+            let _ = c.recv(4).unwrap();
+            let (loss, msg) = grad(2, c.worker_id, 0.2);
+            c.send_grad(loss, &msg).unwrap();
+            let _ = c.recv(4); // BYE
+        });
+        server.rendezvous(1, 7, Duration::from_secs(10)).unwrap();
+        let bc = |round| WireMessage::ModelBroadcastPlain {
+            round,
+            params: vec![0.0; 4],
+        };
+        let n = server.broadcast(1, &bc(1), &[true], Duration::from_millis(300));
+        let replies = server.collect(n, 1, Duration::from_millis(300));
+        assert_eq!(replies.len(), 1);
+        assert!(replies[0].result.is_err(), "deadline miss expected");
+        assert_eq!(server.n_alive(), 0, "deadline miss suspends the slot");
+        // epoch boundary: lift the suspension — the connection survived
+        assert!(server.readmit(0));
+        assert_eq!(server.n_alive(), 1);
+        let n = server.broadcast(2, &bc(2), &[true], Duration::from_secs(5));
+        assert_eq!(n, 1);
+        let replies = server.collect(n, 2, Duration::from_secs(5));
+        assert_eq!(
+            replies.len(),
+            1,
+            "the round-1 leftover must be drained, not returned"
+        );
+        assert_eq!(replies[0].result.as_ref().unwrap().0, 0.2);
+        server.shutdown();
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn reopen_rendezvous_refills_a_vacated_slot() {
+        let mut server = CoordinatorServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let a = addr.clone();
+        let first = thread::spawn(move || {
+            let mut c =
+                WorkerClient::connect(&a, 7, Duration::from_secs(5)).unwrap();
+            assert_eq!(c.worker_id, 0);
+            let _ = c.recv(4); // BYE from detach
+        });
+        server.rendezvous(1, 7, Duration::from_secs(10)).unwrap();
+        server.detach(0);
+        assert_eq!(server.n_alive(), 0);
+        first.join().unwrap();
+        let second = thread::spawn(move || {
+            let mut c =
+                WorkerClient::connect(&addr, 7, Duration::from_secs(5)).unwrap();
+            // the refilled joiner inherits the vacated worker id
+            assert_eq!(c.worker_id, 0);
+            while let Some(msg) = c.recv(4).unwrap() {
+                let round = match msg {
+                    WireMessage::ModelBroadcastPlain { round, .. } => round,
+                    other => panic!("unexpected {other:?}"),
+                };
+                let (loss, g) = grad(round, c.worker_id, 3.0);
+                c.send_grad(loss, &g).unwrap();
+            }
+        });
+        server
+            .reopen_rendezvous(&[0], 7, Duration::from_secs(10))
+            .unwrap();
+        assert_eq!(server.n_workers(), 1);
+        assert_eq!(server.n_alive(), 1);
+        let msg = WireMessage::ModelBroadcastPlain {
+            round: 5,
+            params: vec![0.0; 4],
+        };
+        let n = server.broadcast(5, &msg, &[true], Duration::from_secs(5));
+        assert_eq!(n, 1);
+        let replies = server.collect(n, 5, Duration::from_secs(5));
+        assert_eq!(replies.len(), 1);
+        assert_eq!(replies[0].result.as_ref().unwrap().0, 3.0);
+        server.shutdown();
+        second.join().unwrap();
     }
 }

@@ -45,7 +45,7 @@
 use crate::attacks::{self, AttackKind};
 use crate::compression::{CompressorState, RandK};
 use crate::config::{Engine, ExperimentConfig};
-use crate::coordinator::build_training_workers;
+use crate::coordinator::build_training_workers_for_epoch;
 use crate::model::MlpSpec;
 use crate::transport::downlink::{DownlinkMode, DownlinkReplica, FanoutPlan};
 use crate::transport::net::{RelayHub, TreeFeed, WorkerClient};
@@ -97,20 +97,64 @@ impl Feed {
             Feed::Tree(f) => f.relayed(),
         }
     }
+
+    fn send_leave(&mut self, round: u64, worker: u16) -> Result<()> {
+        match self {
+            Feed::Direct(c) => c.send_leave(round, worker),
+            Feed::Tree(f) => f.send_leave(round, worker),
+        }
+    }
+}
+
+/// Runtime knobs of [`join_run`] that are not part of the shared config.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct JoinOpts {
+    /// Fault-injection hook for tests: after handling this many
+    /// broadcasts the worker drops its connection mid-run, simulating a
+    /// crash (a relay worker's children collapse to direct delivery).
+    /// Production callers leave it `None`.
+    pub max_rounds: Option<u64>,
+    /// Graceful departure (`--leave_after_epoch`): after completing this
+    /// many epochs the worker sends a `LEAVE` frame ahead of its final
+    /// gradient and disconnects; the coordinator vacates its slot at the
+    /// next epoch boundary. Requires `epoch_rounds > 0` to ever fire.
+    pub leave_after_epoch: Option<u64>,
+}
+
+/// The gradient worker owning `slot` under the epoch-`epoch` membership
+/// derivation, or the Byzantine role for non-gradient slots. Every
+/// participant — coordinator oracle and each remote process — rebuilds
+/// this identically from `(config, epoch, slot)`; join order is
+/// irrelevant by construction.
+fn build_slot_worker(
+    cfg: &ExperimentConfig,
+    slot: usize,
+    attack: &AttackKind,
+    epoch: u64,
+) -> Result<(Option<HonestWorker>, &'static str)> {
+    let (mut workers, _test) = build_training_workers_for_epoch(cfg, epoch)?;
+    if slot < workers.len() {
+        let w = workers.swap_remove(slot);
+        let role = if w.poisoned { "poisoned" } else { "honest" };
+        Ok((Some(w), role))
+    } else {
+        Ok(match attack {
+            AttackKind::Payload(_) => (None, "drone"),
+            _ => (None, "silent"),
+        })
+    }
 }
 
 /// Dial `addr`, rendezvous, and serve rounds until the coordinator says
-/// `BYE`. `connect_retry` covers worker-before-coordinator start races.
-///
-/// `max_rounds` is a fault-injection hook for tests: after handling that
-/// many broadcasts the worker drops its connection mid-run, simulating a
-/// crash (a relay worker's children collapse to direct delivery).
-/// Production callers pass `None`.
+/// `BYE` (or an [`JoinOpts`] departure fires). `connect_retry` covers
+/// worker-before-coordinator start races — and lets a mid-run joiner
+/// keep dialing until the coordinator re-opens rendezvous at an epoch
+/// boundary.
 pub fn join_run(
     cfg: &ExperimentConfig,
     addr: &str,
     connect_retry: Duration,
-    max_rounds: Option<u64>,
+    opts: JoinOpts,
 ) -> Result<JoinSummary> {
     cfg.validate().map_err(|e| anyhow!(e))?;
     if cfg.engine != Engine::Native {
@@ -182,20 +226,11 @@ pub fn join_run(
         )),
     };
 
-    // Gradient slot or Byzantine slot?
-    let (mut worker, role): (Option<HonestWorker>, &'static str) = {
-        let (mut workers, _test) = build_training_workers(cfg)?;
-        if slot < workers.len() {
-            let w = workers.swap_remove(slot);
-            let role = if w.poisoned { "poisoned" } else { "honest" };
-            (Some(w), role)
-        } else {
-            match attack {
-                AttackKind::Payload(_) => (None, "drone"),
-                _ => (None, "silent"),
-            }
-        }
-    };
+    // Gradient slot or Byzantine slot? Built for epoch 0 here; a mid-run
+    // joiner (or any worker crossing an epoch boundary) re-derives below
+    // as soon as the first broadcast names a later epoch.
+    let (mut worker, role) = build_slot_worker(cfg, slot, &attack, 0)?;
+    let mut current_epoch = 0u64;
     let drone_replies = role == "drone";
 
     let mut grad = vec![0f32; d];
@@ -249,6 +284,32 @@ pub fn join_run(
             continue; // duplicate delivery after a relay collapse
         }
         last_round = round;
+        // Elastic membership: every epoch re-derives shard and RNG
+        // streams from (seed, epoch) alone — same rebuild the local
+        // oracle runs at the boundary, so both sides stay bit-equal.
+        if cfg.epoch_rounds > 0 {
+            let epoch = (round - 1) / cfg.epoch_rounds as u64;
+            if epoch != current_epoch {
+                current_epoch = epoch;
+                if worker.is_some() {
+                    worker = build_slot_worker(cfg, slot, &attack, epoch)?.0;
+                }
+            }
+        }
+        if let Some(p) = &owned_params {
+            if p.len() != d {
+                return Err(anyhow!(
+                    "broadcast has {} params, model has {d}",
+                    p.len()
+                ));
+            }
+            // A dense model broadcast re-anchors the delta replica — the
+            // epoch-opening re-sync after a membership change, or any
+            // dense fallback the coordinator chose to send.
+            if let Some(rep) = replica.as_mut() {
+                rep.resync(p);
+            }
+        }
         let params: &[f32] = match &owned_params {
             Some(p) => p,
             None => replica
@@ -256,12 +317,6 @@ pub fn join_run(
                 .expect("update frames imply a replica")
                 .params(),
         };
-        if params.len() != d {
-            return Err(anyhow!(
-                "broadcast has {} params, model has {d}",
-                params.len()
-            ));
-        }
         let reply: Option<(f32, WireMessage)> = if let Some(w) = worker.as_mut()
         {
             let loss =
@@ -291,11 +346,23 @@ pub fn join_run(
         } else {
             None // crash-fault Byzantine slot: receive, never send
         };
+        // Graceful departure: the LEAVE frame precedes this epoch's last
+        // gradient, so the final contribution still counts and the slot
+        // vacates cleanly at the boundary that follows.
+        let leave_now = opts.leave_after_epoch.is_some_and(|e| {
+            cfg.epoch_rounds > 0 && round == e * cfg.epoch_rounds as u64
+        });
         if let Some((loss, msg)) = reply {
+            if leave_now {
+                feed.send_leave(round, worker_id)?;
+            }
             feed.send_grad(loss, &msg)?;
         }
         rounds += 1;
-        if max_rounds.is_some_and(|m| rounds >= m) {
+        if leave_now {
+            break; // announced above; the coordinator expects the hangup
+        }
+        if opts.max_rounds.is_some_and(|m| rounds >= m) {
             break; // injected crash: drop the connection mid-run
         }
     }

@@ -189,6 +189,146 @@ fn serve_and_join_run_as_separate_os_processes() {
     );
 }
 
+/// Spawn `rosdhb serve --listen_addr 127.0.0.1:0 <extra> <shared>`,
+/// scrape the bound address off its stderr, and keep draining the pipe
+/// (returned handle yields the full stderr text).
+fn spawn_serve(
+    extra: &[&str],
+    shared: &[&str],
+) -> (std::process::Child, String, std::thread::JoinHandle<String>) {
+    let mut serve = bin()
+        .args(["serve", "--listen_addr", "127.0.0.1:0"])
+        .args(extra)
+        .args(shared)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .unwrap();
+    let stderr = serve.stderr.take().unwrap();
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel::<String>();
+    let drain = std::thread::spawn(move || {
+        let mut all = String::new();
+        for line in BufReader::new(stderr).lines() {
+            let line = line.unwrap_or_default();
+            if let Some(rest) = line.split("listening on ").nth(1) {
+                let addr = rest.split(',').next().unwrap_or("").trim();
+                let _ = addr_tx.send(addr.to_string());
+            }
+            all.push_str(&line);
+            all.push('\n');
+        }
+        all
+    });
+    let addr = addr_rx
+        .recv_timeout(std::time::Duration::from_secs(60))
+        .expect("serve must announce its address");
+    (serve, addr, drain)
+}
+
+#[test]
+fn serve_sigkilled_mid_run_restores_bit_identically() {
+    // Crash-recovery across real OS processes: a coordinator is
+    // SIGKILLed after an epoch-boundary checkpoint hits disk; a fresh
+    // coordinator process restoring from that file (with fresh worker
+    // processes) must print the exact same final report as a coordinator
+    // that was never killed. Whichever boundary the kill lands after,
+    // every checkpoint lies on the same trajectory, so the comparison is
+    // immune to kill timing.
+    let shared = [
+        "--n_honest", "2",
+        "--n_byz", "0",
+        "--attack", "none",
+        "--rounds", "12",
+        "--epoch_rounds", "2",
+        "--train_size", "400",
+        "--test_size", "100",
+        "--batch", "20",
+        "--eval_every", "2",
+        "--stop_at_tau", "false",
+        "--k_frac", "0.1",
+        "--seed", "11",
+    ];
+    let spawn_joins = |addr: &str| -> Vec<std::process::Child> {
+        (0..2)
+            .map(|_| {
+                bin()
+                    .args(["join", "--coordinator_addr", addr])
+                    .args(shared)
+                    .stdout(Stdio::piped())
+                    .stderr(Stdio::piped())
+                    .spawn()
+                    .unwrap()
+            })
+            .collect()
+    };
+
+    // reference: the same config, never killed
+    let (mut serve, addr, drain) = spawn_serve(&[], &shared);
+    let joins = spawn_joins(&addr);
+    for j in joins {
+        let out = j.wait_with_output().unwrap();
+        assert!(
+            out.status.success(),
+            "reference join failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+    let straight = serve.wait_with_output().unwrap();
+    let serve_err = drain.join().unwrap();
+    assert!(straight.status.success(), "reference serve failed: {serve_err}");
+
+    // the victim: checkpoints armed, killed as soon as one hits disk
+    let ckpt = std::env::temp_dir().join(format!(
+        "rosdhb_cli_sigkill_{}.ckpt",
+        std::process::id()
+    ));
+    std::fs::remove_file(&ckpt).ok();
+    let ckpt_s = ckpt.to_str().unwrap().to_string();
+    let (mut victim, addr, victim_drain) =
+        spawn_serve(&["--checkpoint", &ckpt_s], &shared);
+    let victim_joins = spawn_joins(&addr);
+    let deadline =
+        std::time::Instant::now() + std::time::Duration::from_secs(120);
+    while !ckpt.exists() {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "no checkpoint appeared before the deadline"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    victim.kill().ok(); // SIGKILL — no flush, no cleanup
+    victim.wait().unwrap();
+    victim_drain.join().unwrap();
+    for j in victim_joins {
+        // they die on the broken socket (or finished, if the run outran
+        // the kill) — either way just reap them
+        let _ = j.wait_with_output().unwrap();
+    }
+
+    // restore into a brand-new coordinator with fresh worker processes
+    let (mut restored, addr, restored_drain) =
+        spawn_serve(&["--restore", &ckpt_s], &shared);
+    let joins = spawn_joins(&addr);
+    for j in joins {
+        let out = j.wait_with_output().unwrap();
+        assert!(
+            out.status.success(),
+            "restored join failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+    let out = restored.wait_with_output().unwrap();
+    let err = restored_drain.join().unwrap();
+    assert!(out.status.success(), "restored serve failed: {err}");
+    std::fs::remove_file(&ckpt).ok();
+
+    assert_eq!(
+        String::from_utf8_lossy(&straight.stdout),
+        String::from_utf8_lossy(&out.stdout),
+        "restored run must print a bit-identical report"
+    );
+}
+
 #[test]
 fn unknown_command_fails_cleanly() {
     let out = bin().arg("frobnicate").output().unwrap();

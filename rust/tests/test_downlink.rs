@@ -20,7 +20,7 @@ use rosdhb::model::MlpSpec;
 use rosdhb::transport::broadcast_len;
 use rosdhb::transport::downlink::DownlinkStats;
 use rosdhb::transport::net::{CoordinatorServer, NetStats};
-use rosdhb::worker::remote::{join_run, JoinSummary};
+use rosdhb::worker::remote::{join_run, JoinOpts, JoinSummary};
 use std::thread;
 use std::time::Duration;
 
@@ -66,7 +66,15 @@ fn run_tcp(
             let addr = addr.clone();
             let cap = *cap;
             thread::spawn(move || {
-                join_run(&cfg, &addr, Duration::from_secs(30), cap)
+                join_run(
+                    &cfg,
+                    &addr,
+                    Duration::from_secs(30),
+                    JoinOpts {
+                        max_rounds: cap,
+                        ..Default::default()
+                    },
+                )
             })
         })
         .collect();

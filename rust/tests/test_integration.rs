@@ -165,6 +165,89 @@ fn config_file_end_to_end() {
 }
 
 #[test]
+fn local_checkpoint_restore_resumes_bit_identically() {
+    // The E = 2 acceptance criterion on the in-process transport: 2E
+    // epochs straight must equal E epochs → checkpoint → fresh Trainer
+    // restore → E more epochs, RunReport and per-round log included.
+    // Delta downlink and nnm+cwtm keep the codec and geometry counters
+    // in play across the boundary; the alie slots stress the restored
+    // per-worker momenta.
+    let mut cfg = base_cfg();
+    cfg.rounds = 8;
+    cfg.eval_every = 2;
+    cfg.epoch_rounds = 2;
+    cfg.downlink = "delta".into();
+    let mut straight_t = Trainer::from_config(&cfg).unwrap();
+    let straight = straight_t.run().unwrap();
+
+    let ckpt = std::env::temp_dir().join(format!(
+        "rosdhb_local_restore_{}.ckpt",
+        std::process::id()
+    ));
+    let mut first = cfg.clone();
+    first.rounds = 4;
+    let mut t1 = Trainer::from_config(&first).unwrap();
+    t1.set_checkpoint(&ckpt, 1);
+    t1.run().unwrap();
+
+    let mut t2 = Trainer::from_config(&cfg).unwrap();
+    t2.load_checkpoint(&ckpt).unwrap();
+    let restored = t2.run().unwrap();
+    std::fs::remove_file(&ckpt).ok();
+
+    assert_eq!(straight.rounds_run, restored.rounds_run);
+    assert_eq!(straight.rounds_to_tau, restored.rounds_to_tau);
+    assert_eq!(straight.uplink_bytes, restored.uplink_bytes);
+    assert_eq!(straight.downlink_bytes, restored.downlink_bytes);
+    assert_eq!(
+        straight.coordinator_egress_bytes,
+        restored.coordinator_egress_bytes
+    );
+    assert_eq!(straight.best_acc, restored.best_acc);
+    assert_eq!(straight.final_loss, restored.final_loss);
+    assert_eq!(straight.log.rows.len(), restored.log.rows.len());
+    for (a, b) in straight.log.rows.iter().zip(&restored.log.rows) {
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.train_loss, b.train_loss, "round {}", a.round);
+        assert_eq!(a.update_norm, b.update_norm, "round {}", a.round);
+        assert_eq!(a.test_acc, b.test_acc, "round {}", a.round);
+        assert_eq!(a.uplink_bytes, b.uplink_bytes, "round {}", a.round);
+        assert_eq!(a.downlink_bytes, b.downlink_bytes, "round {}", a.round);
+    }
+    // observability counters resume where the checkpoint left off
+    assert_eq!(straight_t.geometry_stats(), t2.geometry_stats());
+    assert_eq!(straight_t.downlink_stats(), t2.downlink_stats());
+}
+
+#[test]
+fn checkpoint_flags_are_validated() {
+    // --checkpoint without epochs has no boundary to write at
+    let mut cfg = base_cfg();
+    cfg.rounds = 2;
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    t.set_checkpoint(std::env::temp_dir().join("never_written.ckpt"), 1);
+    assert!(t.run().unwrap_err().to_string().contains("epoch_rounds"));
+
+    // a restore round that is not an epoch boundary is refused
+    let mut cfg = base_cfg();
+    cfg.rounds = 4;
+    cfg.epoch_rounds = 2;
+    let ckpt = std::env::temp_dir().join(format!(
+        "rosdhb_badround_{}.ckpt",
+        std::process::id()
+    ));
+    let mut t1 = Trainer::from_config(&cfg).unwrap();
+    t1.set_checkpoint(&ckpt, 1);
+    t1.run().unwrap();
+    let mut bad = cfg.clone();
+    bad.epoch_rounds = 4; // different fingerprint → refused
+    let mut t2 = Trainer::from_config(&bad).unwrap();
+    let err = t2.load_checkpoint(&ckpt).unwrap_err().to_string();
+    assert!(err.contains("fingerprint"), "{err}");
+    std::fs::remove_file(&ckpt).ok();
+}
+
+#[test]
 fn gb_estimate_on_real_task_is_sane() {
     let cfg = base_cfg();
     let mut t = Trainer::from_config(&cfg).unwrap();

@@ -8,16 +8,24 @@
 //! * mask codec round-trips on arbitrary (d, k);
 //! * permutation-equivariance of aggregation (server must not depend on
 //!   worker order);
-//! * config parser never panics on fuzzed inputs.
+//! * config parser never panics on fuzzed inputs;
+//! * checkpoint codec: exact round-trips, exact lengths, truncation at
+//!   every prefix is an error (never a panic), magic/version/fingerprint
+//!   are enforced.
 
+use rosdhb::aggregators::geometry::GeoStats;
 use rosdhb::aggregators::{self, empirical_kappa, Aggregator};
+use rosdhb::checkpoint::Checkpoint;
 use rosdhb::compression::codec::MaskWire;
 use rosdhb::compression::payload::{Payload, QuantBlock};
 use rosdhb::compression::{Mask, RandK};
 use rosdhb::config::toml::TomlDoc;
+use rosdhb::metrics::RoundRecord;
 use rosdhb::prng::Pcg64;
 use rosdhb::tensor;
-use rosdhb::transport::WireMessage;
+use rosdhb::transport::downlink::DownlinkStats;
+use rosdhb::transport::net::NetStats;
+use rosdhb::transport::{ByteMeter, WireMessage};
 
 const SEEDS: u64 = 30;
 
@@ -298,6 +306,8 @@ fn prop_wire_messages_roundtrip_and_size_exactly() {
                 payload,
             });
         }
+        // graceful-departure announcement (PR 6): header-only
+        msgs.push(WireMessage::Leave { round, worker });
         for m in msgs {
             let bytes = m.encode();
             assert_eq!(
@@ -334,6 +344,131 @@ fn prop_config_parser_never_panics() {
             }
         }
         let _ = TomlDoc::parse(&s); // must not panic
+    }
+}
+
+/// A randomized [`Checkpoint`] exercising every optional field and the
+/// variable-length sections (params, per-worker meters, metrics rows,
+/// opaque algorithm state).
+fn random_checkpoint(rng: &mut Pcg64) -> Checkpoint {
+    let d = rng.below(40) as usize;
+    let mut params = vec![0f32; d];
+    rng.fill_gaussian(&mut params, 1.0);
+    let rows = (0..rng.below(6) as usize)
+        .map(|i| RoundRecord {
+            round: i + 1,
+            train_loss: rng.next_f32() as f64,
+            update_norm: rng.next_f32() as f64,
+            test_acc: (rng.below(2) == 0).then(|| rng.next_f32() as f64),
+            uplink_bytes: rng.next_u64() >> 1,
+            downlink_bytes: rng.next_u64() >> 1,
+            lyapunov: (rng.below(2) == 0)
+                .then(|| (rng.next_f32() as f64, rng.next_f32() as f64)),
+        })
+        .collect();
+    let per_worker: Vec<u64> =
+        (0..rng.below(8)).map(|_| rng.next_u64()).collect();
+    let algo_state: Vec<u8> =
+        (0..rng.below(64)).map(|_| rng.below(256) as u8).collect();
+    Checkpoint {
+        fingerprint: rng.next_u64(),
+        round: rng.next_u64(),
+        params,
+        rng: (
+            (rng.next_u64() as u128) << 64 | rng.next_u64() as u128,
+            (rng.next_u64() as u128) << 64 | rng.next_u64() as u128,
+            rng.next_u64(),
+        ),
+        meter: ByteMeter {
+            uplink: rng.next_u64(),
+            downlink: rng.next_u64(),
+            coordinator_egress: rng.next_u64(),
+            per_worker_uplink: per_worker,
+        },
+        reached: (rng.below(2) == 0)
+            .then(|| (rng.next_u64(), rng.next_u64())),
+        diverged: rng.below(2) == 0,
+        rows,
+        algo_state,
+        downlink: (rng.below(2) == 0).then(|| DownlinkStats {
+            delta_rounds: rng.next_u64(),
+            dense_rounds: rng.next_u64(),
+        }),
+        geo: (rng.below(2) == 0).then(|| GeoStats {
+            rebuilds: rng.next_u64(),
+            incrementals: rng.next_u64(),
+        }),
+        net: (rng.below(2) == 0).then(|| NetStats {
+            wire_uplink: rng.next_u64(),
+            wire_downlink: rng.next_u64(),
+            raw_uplink: rng.next_u64(),
+            raw_downlink: rng.next_u64(),
+        }),
+    }
+}
+
+#[test]
+fn prop_checkpoints_roundtrip_and_size_exactly() {
+    // decode(encode(ck)) == ck, encode().len() == encoded_len(), and a
+    // trailing byte is an error, across randomized state shapes.
+    for seed in 0..SEEDS {
+        let mut rng = Pcg64::new(seed, 1000);
+        let ck = random_checkpoint(&mut rng);
+        let bytes = ck.encode();
+        assert_eq!(bytes.len(), ck.encoded_len(), "seed {seed}");
+        let back = Checkpoint::decode(&bytes, ck.fingerprint)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(back, ck, "seed {seed}");
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(
+            Checkpoint::decode(&long, ck.fingerprint).is_err(),
+            "seed {seed}: trailing byte must not decode"
+        );
+    }
+}
+
+#[test]
+fn prop_checkpoint_truncation_at_every_prefix_errors_never_panics() {
+    // A SIGKILL mid-write can leave any prefix on disk (the atomic
+    // tmp+rename makes this unreachable in practice, but decode must
+    // still refuse every cut cleanly).
+    for seed in 0..8u64 {
+        let mut rng = Pcg64::new(seed, 1100);
+        let ck = random_checkpoint(&mut rng);
+        let bytes = ck.encode();
+        for cut in 0..bytes.len() {
+            assert!(
+                Checkpoint::decode(&bytes[..cut], ck.fingerprint).is_err(),
+                "seed {seed}: prefix of {cut}/{} bytes decoded",
+                bytes.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_checkpoint_rejects_wrong_magic_version_fingerprint() {
+    for seed in 0..SEEDS {
+        let mut rng = Pcg64::new(seed, 1200);
+        let ck = random_checkpoint(&mut rng);
+        let bytes = ck.encode();
+        // fingerprint mismatch: a different config must refuse to restore
+        assert!(Checkpoint::decode(&bytes, ck.fingerprint ^ 1)
+            .unwrap_err()
+            .contains("fingerprint"));
+        // flipped magic: not a checkpoint at all
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xff;
+        assert!(Checkpoint::decode(&bad, ck.fingerprint)
+            .unwrap_err()
+            .contains("magic"));
+        // bumped version: refused, never misread
+        let mut bad = bytes.clone();
+        bad[4] ^= 0xff;
+        assert!(Checkpoint::decode(&bad, ck.fingerprint)
+            .unwrap_err()
+            .contains("version"));
     }
 }
 

@@ -8,7 +8,7 @@ use rosdhb::coordinator::round_transport::TcpTransport;
 use rosdhb::coordinator::{RunReport, Trainer};
 use rosdhb::model::MlpSpec;
 use rosdhb::transport::net::{CoordinatorServer, NetStats};
-use rosdhb::worker::remote::{join_run, JoinSummary};
+use rosdhb::worker::remote::{join_run, JoinOpts, JoinSummary};
 use std::thread;
 use std::time::Duration;
 
@@ -49,7 +49,15 @@ fn run_tcp(
             let addr = addr.clone();
             let cap = *cap;
             thread::spawn(move || {
-                join_run(&cfg, &addr, Duration::from_secs(20), cap)
+                join_run(
+                    &cfg,
+                    &addr,
+                    Duration::from_secs(20),
+                    JoinOpts {
+                        max_rounds: cap,
+                        ..Default::default()
+                    },
+                )
             })
         })
         .collect();
@@ -247,6 +255,170 @@ fn tcp_dgd_randk_keeps_parity() {
     cfg.set("algorithm", "dgd-randk").unwrap();
     cfg.rounds = 2;
     assert_plan_parity(&cfg);
+}
+
+#[test]
+fn tcp_epoch_churn_leave_and_join_matches_local_oracle() {
+    // Elastic membership: slot 1 is churned out at the boundary opening
+    // epoch 2 (round 5) and a replacement — dialing since the run
+    // started, parked in the listener backlog — is admitted into the
+    // vacated slot when the epoch-3 boundary (round 7) re-opens
+    // rendezvous. The local oracle under the identical schedule (a
+    // vacant slot contributes an exact zero) must produce a bit-identical
+    // RunReport, with the incremental-geometry rebuild counters pinned
+    // across the membership change.
+    let mut cfg = base_cfg();
+    cfg.aggregator = "nnm+cwtm".into();
+    cfg.rounds = 8;
+    cfg.set("epoch_rounds", "2").unwrap();
+    cfg.set("churn", "2:-1,3:+1").unwrap();
+
+    let server = CoordinatorServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+    let initial: Vec<_> = (0..cfg.n_total())
+        .map(|_| {
+            let cfg = cfg.clone();
+            let addr = addr.clone();
+            thread::spawn(move || {
+                join_run(&cfg, &addr, Duration::from_secs(20), JoinOpts::default())
+            })
+        })
+        .collect();
+    let d = MlpSpec::default().p();
+    let transport = TcpTransport::rendezvous(server, &cfg, d).unwrap();
+    // dial the replacement only after every initial slot is filled: its
+    // connection waits in the backlog until the boundary window opens
+    let replacement = {
+        let cfg = cfg.clone();
+        let addr = addr.clone();
+        thread::spawn(move || {
+            join_run(&cfg, &addr, Duration::from_secs(20), JoinOpts::default())
+        })
+    };
+    let mut trainer = Trainer::with_transport(&cfg, Box::new(transport)).unwrap();
+    let report = trainer.run().unwrap();
+    let tcp_geo = trainer.geometry_stats();
+    trainer.shutdown_transport();
+
+    let mut outcomes: Vec<JoinSummary> = initial
+        .into_iter()
+        .map(|h| h.join().unwrap().expect("initial worker must finish"))
+        .collect();
+    outcomes.push(
+        replacement
+            .join()
+            .unwrap()
+            .expect("replacement must finish"),
+    );
+    let repl = outcomes.last().unwrap();
+    assert_eq!(repl.worker_id, 1, "replacement re-fills the vacated slot");
+    assert_eq!(repl.role, "honest");
+    // churned-out worker: rounds 1-4; replacement: rounds 7-8; the
+    // other three serve the whole run
+    let mut served: Vec<u64> = outcomes.iter().map(|s| s.rounds).collect();
+    served.sort_unstable();
+    assert_eq!(served, [2, 4, 8, 8, 8]);
+
+    // determinism never depends on join order: the local oracle under
+    // the same churn schedule reproduces the socket run bit for bit
+    // (wire bytes measured on the sockets are *below* the meter model
+    // while the slot sits vacant, so only the report is compared)
+    let mut local_cfg = cfg.clone();
+    local_cfg.transport = "local".into();
+    let mut local = Trainer::from_config(&local_cfg).unwrap();
+    let local_report = local.run().unwrap();
+    assert_reports_identical(&report, &local_report);
+    assert_eq!(
+        tcp_geo,
+        local.geometry_stats(),
+        "geometry rebuild counters must be pinned across the churn"
+    );
+}
+
+#[test]
+fn tcp_checkpoint_restore_resumes_bit_identically() {
+    // The E = 2 acceptance criterion over real sockets: 2E epochs
+    // straight must equal E epochs → checkpoint → a brand-new
+    // coordinator with fresh worker connections restoring → E more
+    // epochs. Delta downlink exercises the codec across the boundary
+    // (counters ride the checkpoint; the carry basis is re-seeded by the
+    // boundary's dense re-sync) and nnm+cwtm pins the geometry counters.
+    let mut cfg = base_cfg();
+    cfg.aggregator = "nnm+cwtm".into();
+    cfg.downlink = "delta".into();
+    cfg.rounds = 8;
+    cfg.set("epoch_rounds", "2").unwrap();
+
+    let (straight, straight_stats, _) = run_tcp(&cfg, &[None; 4]);
+
+    let ckpt = std::env::temp_dir().join(format!(
+        "rosdhb_tcp_restore_{}.ckpt",
+        std::process::id()
+    ));
+
+    // epochs 0-1, checkpointing at every boundary: the round-4 write is
+    // the one the restore picks up
+    let mut first = cfg.clone();
+    first.rounds = 4;
+    {
+        let server = CoordinatorServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let handles: Vec<_> = (0..first.n_total())
+            .map(|_| {
+                let cfg = first.clone();
+                let addr = addr.clone();
+                thread::spawn(move || {
+                    join_run(&cfg, &addr, Duration::from_secs(20), JoinOpts::default())
+                })
+            })
+            .collect();
+        let d = MlpSpec::default().p();
+        let transport = TcpTransport::rendezvous(server, &first, d).unwrap();
+        let mut trainer =
+            Trainer::with_transport(&first, Box::new(transport)).unwrap();
+        trainer.set_checkpoint(&ckpt, 1);
+        trainer.run().unwrap();
+        trainer.shutdown_transport();
+        for h in handles {
+            assert_eq!(h.join().unwrap().unwrap().rounds, 4);
+        }
+    }
+
+    // a new process would do exactly this: fresh sockets, fresh workers,
+    // restore, run epochs 2-3
+    let restored = {
+        let server = CoordinatorServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let handles: Vec<_> = (0..cfg.n_total())
+            .map(|_| {
+                let cfg = cfg.clone();
+                let addr = addr.clone();
+                thread::spawn(move || {
+                    join_run(&cfg, &addr, Duration::from_secs(20), JoinOpts::default())
+                })
+            })
+            .collect();
+        let d = MlpSpec::default().p();
+        let transport = TcpTransport::rendezvous(server, &cfg, d).unwrap();
+        let mut trainer =
+            Trainer::with_transport(&cfg, Box::new(transport)).unwrap();
+        trainer.load_checkpoint(&ckpt).unwrap();
+        let report = trainer.run().unwrap();
+        let stats = trainer.net_stats().unwrap();
+        trainer.shutdown_transport();
+        for h in handles {
+            // the resumed run serves only rounds 5-8
+            assert_eq!(h.join().unwrap().unwrap().rounds, 4);
+        }
+        (report, stats)
+    };
+    std::fs::remove_file(&ckpt).ok();
+
+    assert_reports_identical(&straight, &restored.0);
+    // measured wire traffic is cumulative across the restore (preseeded
+    // from the checkpoint); raw bytes differ by the second handshake
+    assert_eq!(restored.1.wire_uplink, straight_stats.wire_uplink);
+    assert_eq!(restored.1.wire_downlink, straight_stats.wire_downlink);
 }
 
 #[test]
