@@ -32,7 +32,7 @@
 //! [meter: u64×3, u32 n, n × u64][reached: u8 tag (+ u64 round, u64 bytes)]
 //! [u8 diverged][u32 rows, rows × RoundRecord][u32 len, algorithm state]
 //! [downlink: u8 tag (+ u64×2)][geometry: u8 tag (+ u64×2)]
-//! [net: u8 tag (+ u64×4)]
+//! [net: u8 tag (+ u64×4)][membership: u32 n, n × u8 slot flags]
 //! ```
 //!
 //! The config fingerprint is [`wire_fingerprint`] — restoring under a
@@ -52,7 +52,24 @@ use std::path::Path;
 /// `"RDCK"` — distinguishes a checkpoint from the wire magic `"RDSB"`.
 pub const CKPT_MAGIC: u32 = 0x5244_434b;
 /// Bump on any layout change; older files are refused, never misread.
-pub const CKPT_VERSION: u16 = 1;
+/// (2: per-slot membership flags — churned-out / gracefully-left slots
+/// survive a restore instead of being silently re-activated.)
+pub const CKPT_VERSION: u16 = 2;
+
+/// Membership flags of one worker slot at save time, restored into the
+/// transport so a run whose membership changed before the checkpoint
+/// (scheduled churn or graceful `LEAVE`s) resumes with the same slots
+/// vacant — not silently re-activated.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SlotMembership {
+    /// The slot has a worker behind it and contributes gradients; a
+    /// vacated slot contributes exact zeros until a `+` churn event
+    /// re-fills it.
+    pub active: bool,
+    /// The slot's worker announced a graceful leave during the closing
+    /// epoch: it vacates at the next epoch boundary (TCP only).
+    pub pending_left: bool,
+}
 
 /// Full coordinator training state at a completed epoch boundary.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -87,6 +104,11 @@ pub struct Checkpoint {
     /// restore they pre-seed the TCP server's atomics so end-of-run wire
     /// accounting stays cumulative.
     pub net: Option<NetStats>,
+    /// Per-slot membership at save time (local: one entry per gradient
+    /// slot; TCP: one per connection slot). Restored into the transport
+    /// so churn-vacated and LEAVE-vacated slots stay vacant — and so a
+    /// restoring TCP coordinator rendezvouses only the active slots.
+    pub membership: Vec<SlotMembership>,
 }
 
 // ------------------------------------------------------------ encoding
@@ -265,6 +287,13 @@ impl Checkpoint {
                 put_u64(&mut out, n.raw_downlink);
             }
         }
+        put_u32(&mut out, self.membership.len() as u32);
+        for s in &self.membership {
+            put_u8(
+                &mut out,
+                (s.active as u8) | ((s.pending_left as u8) << 1),
+            );
+        }
         debug_assert_eq!(out.len(), self.encoded_len());
         out
     }
@@ -294,6 +323,7 @@ impl Checkpoint {
             + (1 + if self.downlink.is_some() { 16 } else { 0 })
             + (1 + if self.geo.is_some() { 16 } else { 0 })
             + (1 + if self.net.is_some() { 32 } else { 0 })
+            + (4 + self.membership.len())
     }
 
     /// Exact inverse of [`Self::encode`]. `expected_fingerprint` is the
@@ -383,6 +413,21 @@ impl Checkpoint {
         } else {
             None
         };
+        let n_slots = c.u32("membership count")? as usize;
+        let mut membership = Vec::with_capacity(n_slots.min(1 << 16));
+        for w in 0..n_slots {
+            let flags = c.u8("membership flags")?;
+            if flags > 0b11 {
+                return Err(format!(
+                    "checkpoint: bad membership flags {flags:#04b} for \
+                     slot {w}"
+                ));
+            }
+            membership.push(SlotMembership {
+                active: flags & 1 != 0,
+                pending_left: flags & 2 != 0,
+            });
+        }
         if !c.buf.is_empty() {
             return Err(format!(
                 "checkpoint: {} trailing bytes",
@@ -402,15 +447,23 @@ impl Checkpoint {
             downlink,
             geo,
             net,
+            membership,
         })
     }
 
-    /// Write atomically: encode to `<path>.tmp`, fsync, rename over
-    /// `path` — a SIGKILL mid-write leaves the previous checkpoint (or
-    /// nothing) in place, never a torn file.
+    /// Write atomically: encode to `<path>.<pid>.tmp`, fsync, rename
+    /// over `path`, fsync the parent directory — a SIGKILL mid-write
+    /// leaves the previous checkpoint (or nothing) in place, never a
+    /// torn file, and the rename itself survives a crash. The staging
+    /// name appends to the full file name (it never replaces the
+    /// extension) and carries the PID, so concurrent runs checkpointing
+    /// to same-stem paths ("run.ckpt" / "run.bin") cannot clobber each
+    /// other's in-flight write.
     pub fn write(&self, path: &Path) -> Result<(), String> {
         use std::io::Write as _;
-        let tmp = path.with_extension("tmp");
+        let mut tmp_name = path.as_os_str().to_os_string();
+        tmp_name.push(format!(".{}.tmp", std::process::id()));
+        let tmp = std::path::PathBuf::from(tmp_name);
         let bytes = self.encode();
         let mut f = std::fs::File::create(&tmp)
             .map_err(|e| format!("checkpoint create {}: {e}", tmp.display()))?;
@@ -422,6 +475,19 @@ impl Checkpoint {
         std::fs::rename(&tmp, path).map_err(|e| {
             format!("checkpoint rename to {}: {e}", path.display())
         })?;
+        // The rename is only durable once the directory entry is synced.
+        #[cfg(unix)]
+        {
+            let dir = match path.parent() {
+                Some(d) if !d.as_os_str().is_empty() => d,
+                _ => Path::new("."),
+            };
+            std::fs::File::open(dir)
+                .and_then(|d| d.sync_all())
+                .map_err(|e| {
+                    format!("checkpoint dir sync {}: {e}", dir.display())
+                })?;
+        }
         Ok(())
     }
 
@@ -484,6 +550,24 @@ mod tests {
                 incrementals: 38,
             }),
             net: None,
+            membership: vec![
+                SlotMembership {
+                    active: true,
+                    pending_left: false,
+                },
+                SlotMembership {
+                    active: false,
+                    pending_left: false,
+                },
+                SlotMembership {
+                    active: true,
+                    pending_left: true,
+                },
+                SlotMembership {
+                    active: true,
+                    pending_left: false,
+                },
+            ],
         }
     }
 
@@ -508,6 +592,7 @@ mod tests {
             }),
             rows: Vec::new(),
             algo_state: Vec::new(),
+            membership: Vec::new(),
             ..ck
         };
         let bytes2 = ck2.encode();
@@ -547,6 +632,13 @@ mod tests {
         assert!(Checkpoint::decode(&bad_ver, ck.fingerprint)
             .unwrap_err()
             .contains("version"));
+        // membership flags beyond the two defined bits are refused (the
+        // final byte of the layout is the last slot's flags)
+        let mut bad_flags = bytes.clone();
+        *bad_flags.last_mut().unwrap() = 0xff;
+        assert!(Checkpoint::decode(&bad_flags, ck.fingerprint)
+            .unwrap_err()
+            .contains("membership flags"));
     }
 
     #[test]
@@ -557,10 +649,28 @@ mod tests {
         let path = dir.join("state.ckpt");
         let ck = sample();
         ck.write(&path).unwrap();
-        // the tmp staging file must be gone after the rename
-        assert!(!path.with_extension("tmp").exists());
         assert_eq!(Checkpoint::read(&path, ck.fingerprint).unwrap(), ck);
         assert!(Checkpoint::read(&path, ck.fingerprint ^ 2).is_err());
+        // same-stem siblings stage under distinct names ("run.ckpt" and
+        // "run.bin" must never share "run.tmp"), and no staging file
+        // survives the renames
+        let mut other = sample();
+        other.round += 40;
+        let sibling = dir.join("state.bin");
+        other.write(&sibling).unwrap();
+        assert_eq!(Checkpoint::read(&path, ck.fingerprint).unwrap(), ck);
+        assert_eq!(
+            Checkpoint::read(&sibling, other.fingerprint).unwrap(),
+            other
+        );
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert!(
+            names.iter().all(|n| !n.ends_with(".tmp")),
+            "staging files left behind: {names:?}"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 }

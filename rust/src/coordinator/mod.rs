@@ -297,6 +297,55 @@ impl Trainer {
         Self::with_transport_and_test_set(cfg, Box::new(transport), test, n_grad)
     }
 
+    /// Build a trainer resuming from `restore` — the construction path
+    /// of `serve/train --restore`. The checkpoint is read *before* the
+    /// transport comes up so a TCP coordinator rendezvouses only the
+    /// slots that were active at save time: a slot vacated by churn or a
+    /// graceful leave stays vacant across the restore instead of
+    /// blocking rendezvous on (or being silently re-filled by) a worker
+    /// the checkpointed run no longer had.
+    pub fn from_config_restored(
+        cfg: &ExperimentConfig,
+        restore: &Path,
+    ) -> Result<Self> {
+        cfg.validate().map_err(|e| anyhow!(e))?;
+        let ck = Checkpoint::read(restore, cfg.wire_fingerprint())
+            .map_err(|e| anyhow!(e))?;
+        let mut trainer = if cfg.transport == "tcp" {
+            let (test, n_grad) = build_eval_side(cfg)?;
+            let server = CoordinatorServer::bind(&cfg.listen_addr)?;
+            let n_active = if ck.membership.len() == cfg.n_total() {
+                ck.membership.iter().filter(|s| s.active).count()
+            } else {
+                cfg.n_total()
+            };
+            eprintln!(
+                "rosdhb[tcp]: listening on {}, waiting for {} workers \
+                 (`rosdhb join --coordinator_addr {}`)",
+                server.local_addr(),
+                n_active,
+                server.local_addr(),
+            );
+            let d = MlpSpec::default().p();
+            let transport = TcpTransport::rendezvous_restored(
+                server,
+                cfg,
+                d,
+                &ck.membership,
+            )?;
+            Self::with_transport_and_test_set(
+                cfg,
+                Box::new(transport),
+                test,
+                n_grad,
+            )?
+        } else {
+            Self::from_config(cfg)?
+        };
+        trainer.apply_checkpoint(&ck)?;
+        Ok(trainer)
+    }
+
     /// Build a trainer around an externally constructed transport (the
     /// loopback tests pre-bind an ephemeral port this way).
     pub fn with_transport(
@@ -553,13 +602,26 @@ impl Trainer {
     }
 
     /// Resume from a checkpoint written by a previous process: restore
-    /// θ, the round-stream RNG, byte meters, metrics rows, the
-    /// algorithm's per-worker state and the observability counters, then
-    /// arrange for `run()` to continue at the next round. The restored
-    /// trajectory is bit-identical to never having stopped.
+    /// θ, the round-stream RNG, byte meters, metrics rows, slot
+    /// membership, the algorithm's per-worker state and the
+    /// observability counters, then arrange for `run()` to continue at
+    /// the next round. The restored trajectory is bit-identical to never
+    /// having stopped.
+    ///
+    /// The transport must already hold the checkpoint's membership shape
+    /// — a TCP trainer restoring a run with vacated slots should be
+    /// built through [`Self::from_config_restored`] (or
+    /// [`TcpTransport::rendezvous_restored`]), which rendezvouses only
+    /// the active slots; with a full rendezvous behind it, this releases
+    /// the workers that joined checkpoint-vacant slots.
     pub fn load_checkpoint(&mut self, path: &Path) -> Result<()> {
         let ck = Checkpoint::read(path, self.cfg.wire_fingerprint())
             .map_err(|e| anyhow!(e))?;
+        self.apply_checkpoint(&ck)
+    }
+
+    /// The state-application half of [`Self::load_checkpoint`].
+    fn apply_checkpoint(&mut self, ck: &Checkpoint) -> Result<()> {
         let er = self.cfg.epoch_rounds as u64;
         if er == 0 {
             return Err(anyhow!(
@@ -584,10 +646,11 @@ impl Trainer {
         self.params.copy_from_slice(&ck.params);
         let (state, inc, id) = ck.rng;
         self.rng = Pcg64::from_parts(state, inc, id);
-        self.meter = ck.meter;
+        self.meter = ck.meter.clone();
         self.reached = ck.reached.map(|(r, b)| (r as usize, b));
         self.diverged = ck.diverged;
-        self.log.rows = ck.rows;
+        self.log.rows = ck.rows.clone();
+        self.transport.restore_membership(&ck.membership)?;
         self.algorithm
             .load_state(&ck.algo_state)
             .map_err(|e| anyhow!(e))?;
@@ -624,6 +687,7 @@ impl Trainer {
             downlink: self.downlink_stats(),
             geo: self.geometry_stats(),
             net: self.transport.net_stats(),
+            membership: self.transport.membership(),
         };
         ck.write(path).map_err(|e| anyhow!(e))
     }

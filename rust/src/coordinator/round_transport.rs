@@ -58,6 +58,7 @@
 //! plan's exact shape, zero loss, eviction from later rounds) — never a
 //! hang.
 
+use crate::checkpoint::SlotMembership;
 use crate::compression::codec::MaskWire;
 use crate::compression::payload::{Payload, PayloadPlan};
 use crate::compression::RandK;
@@ -100,6 +101,14 @@ fn zero_slot(grad: &mut Vec<f32>, loss: &mut f32, d: usize) {
     grad.resize(d, 0.0);
     grad.fill(0.0);
     *loss = 0.0;
+}
+
+/// A checkpointed membership record that constrains nothing: every slot
+/// active, no pending leave. Only such records are accepted across a
+/// slot-count mismatch (a checkpoint written by the *other* transport —
+/// the counts differ when Byzantine slots are simulated server-side).
+fn membership_is_all_active(m: &[SlotMembership]) -> bool {
+    m.iter().all(|s| s.active && !s.pending_left)
 }
 
 /// One round-trip of the synchronous round loop: distribute `params`,
@@ -170,6 +179,21 @@ pub trait RoundTransport: Send {
         let _ = (epoch, churn, cfg);
         Ok(Vec::new())
     }
+
+    /// Per-slot membership flags for checkpointing (local: one entry per
+    /// gradient slot; TCP: one per connection slot). A checkpoint
+    /// carries them so a restored run resumes with the same slots vacant
+    /// — whether the vacancy came from the churn schedule or a graceful
+    /// `LEAVE` — instead of silently re-activating them.
+    fn membership(&self) -> Vec<SlotMembership>;
+
+    /// Apply checkpointed membership to this transport (the restore side
+    /// of [`Self::membership`]). Transports must tolerate a checkpoint
+    /// written by the *other* transport when it records no vacancy (the
+    /// slot counts differ across transports for server-simulated
+    /// Byzantine slots, but an all-active checkpoint constrains
+    /// nothing); any vacancy with a mismatched slot count is an error.
+    fn restore_membership(&mut self, m: &[SlotMembership]) -> Result<()>;
 
     /// Pre-seed measured wire counters from a checkpoint so end-of-run
     /// socket accounting stays cumulative across a restore. No-op for
@@ -334,6 +358,40 @@ impl RoundTransport for LocalTransport {
         Ok(changed)
     }
 
+    fn membership(&self) -> Vec<SlotMembership> {
+        self.active
+            .iter()
+            .map(|&a| SlotMembership {
+                active: a,
+                pending_left: false,
+            })
+            .collect()
+    }
+
+    fn restore_membership(&mut self, m: &[SlotMembership]) -> Result<()> {
+        if m.len() != self.active.len() {
+            if membership_is_all_active(m) {
+                return Ok(());
+            }
+            return Err(anyhow!(
+                "checkpoint membership covers {} slots, the local \
+                 transport has {}",
+                m.len(),
+                self.active.len()
+            ));
+        }
+        if m.iter().any(|s| s.pending_left) {
+            return Err(anyhow!(
+                "checkpoint carries a pending graceful leave — only the \
+                 tcp transport can honor it at the next epoch boundary"
+            ));
+        }
+        for (slot, s) in m.iter().enumerate() {
+            self.active[slot] = s.active;
+        }
+        Ok(())
+    }
+
     fn probe_honest(
         &mut self,
         engine: &mut dyn GradEngine,
@@ -407,9 +465,34 @@ impl TcpTransport {
     /// Wait for all `n_total` workers to join `server`, then build the
     /// transport. `d` is the model dimension of the trainer's engine.
     pub fn rendezvous(
+        server: CoordinatorServer,
+        cfg: &ExperimentConfig,
+        d: usize,
+    ) -> Result<Self> {
+        Self::rendezvous_inner(server, cfg, d, None)
+    }
+
+    /// Rendezvous for a run restoring from a checkpoint: wait only for
+    /// the slots `membership` holds active (vacated slots stay vacant,
+    /// exactly as the checkpointing run left them) and seed the slot
+    /// states from the record. Worker ids are assigned to the active
+    /// slots in arrival order — every joiner re-derives its shard and
+    /// RNG streams from the `WELCOME`d id alone, so join order can never
+    /// change results.
+    pub fn rendezvous_restored(
+        server: CoordinatorServer,
+        cfg: &ExperimentConfig,
+        d: usize,
+        membership: &[SlotMembership],
+    ) -> Result<Self> {
+        Self::rendezvous_inner(server, cfg, d, Some(membership))
+    }
+
+    fn rendezvous_inner(
         mut server: CoordinatorServer,
         cfg: &ExperimentConfig,
         d: usize,
+        membership: Option<&[SlotMembership]>,
     ) -> Result<Self> {
         let attack =
             crate::attacks::parse_spec(&cfg.attack).map_err(|e| anyhow!(e))?;
@@ -418,19 +501,48 @@ impl TcpTransport {
             crate::attacks::AttackKind::None => (cfg.n_honest, false),
             crate::attacks::AttackKind::Payload(_) => (cfg.n_honest, true),
         };
-        server.rendezvous(
-            cfg.n_total(),
-            cfg.wire_fingerprint(),
-            RENDEZVOUS_TIMEOUT,
-        )?;
+        let n = cfg.n_total();
+        let (active, pending_left): (Vec<bool>, Vec<bool>) = match membership
+        {
+            Some(m) if m.len() == n => m
+                .iter()
+                .map(|s| (s.active, s.pending_left))
+                .unzip(),
+            Some(m) if !membership_is_all_active(m) => {
+                return Err(anyhow!(
+                    "checkpoint membership covers {} slots, this run has \
+                     {n} connection slots",
+                    m.len()
+                ))
+            }
+            _ => (vec![true; n], vec![false; n]),
+        };
+        if active.iter().all(|&a| a) {
+            server.rendezvous(n, cfg.wire_fingerprint(), RENDEZVOUS_TIMEOUT)?;
+        } else {
+            let open: Vec<usize> = (0..n).filter(|&i| active[i]).collect();
+            eprintln!(
+                "rosdhb[tcp]: restored membership has {} vacant slot(s) — \
+                 waiting for {} workers",
+                n - open.len(),
+                open.len()
+            );
+            server.rendezvous_slots(
+                n,
+                &open,
+                cfg.wire_fingerprint(),
+                RENDEZVOUS_TIMEOUT,
+            )?;
+        }
         let fanout = FanoutPlan::parse(&cfg.fanout, cfg.branching)
             .map_err(|e| anyhow!(e))?;
         if let FanoutPlan::Tree { .. } = fanout {
             // interior tree positions should reply to the coordinator
             // (RESYNC recovery reads their socket): gradient slots and
-            // drones qualify, crash-fault-silent slots become leaves
-            let can_relay: Vec<bool> = (0..cfg.n_total())
-                .map(|i| i < n_grad || drones_reply)
+            // drones qualify, crash-fault-silent and vacant slots become
+            // leaves
+            let can_relay: Vec<bool> = (0..n)
+                .map(|i| (i < n_grad || drones_reply) && active[i])
                 .collect();
             server.apply_fanout(&fanout, &can_relay)?;
         }
@@ -443,8 +555,11 @@ impl TcpTransport {
             drones_reply,
             timeout: Duration::from_millis(cfg.round_timeout_ms.max(1)),
             payloads: Vec::new(),
-            slots: vec![SlotState::Active; cfg.n_total()],
-            pending_left: vec![false; cfg.n_total()],
+            slots: active
+                .iter()
+                .map(|&a| if a { SlotState::Active } else { SlotState::Vacant })
+                .collect(),
+            pending_left,
             fingerprint: cfg.wire_fingerprint(),
             readmit_next_epoch: cfg.readmit == "next-epoch",
         })
@@ -855,6 +970,57 @@ impl RoundTransport for TcpTransport {
         changed.sort_unstable();
         changed.dedup();
         Ok(changed)
+    }
+
+    fn membership(&self) -> Vec<SlotMembership> {
+        self.slots
+            .iter()
+            .zip(&self.pending_left)
+            .map(|(&state, &pl)| SlotMembership {
+                active: state == SlotState::Active,
+                pending_left: pl,
+            })
+            .collect()
+    }
+
+    fn restore_membership(&mut self, m: &[SlotMembership]) -> Result<()> {
+        if m.len() != self.slots.len() {
+            if membership_is_all_active(m) {
+                return Ok(());
+            }
+            return Err(anyhow!(
+                "checkpoint membership covers {} slots, this run has {} \
+                 connection slots",
+                m.len(),
+                self.slots.len()
+            ));
+        }
+        for (w, s) in m.iter().enumerate() {
+            match (self.slots[w], s.active) {
+                (SlotState::Active, false) => {
+                    // a worker joined a slot the checkpoint holds vacant
+                    // (full rendezvous before the restore was seen):
+                    // release it — the slot stays vacant until a `+`
+                    // churn event re-fills it
+                    eprintln!(
+                        "rosdhb[tcp]: restore: slot {w} is vacant in the \
+                         checkpoint — releasing its joined worker"
+                    );
+                    self.server.detach(w);
+                    self.slots[w] = SlotState::Vacant;
+                }
+                (SlotState::Vacant, true) => {
+                    return Err(anyhow!(
+                        "checkpoint holds slot {w} active but no worker \
+                         joined it — rendezvous the active slots first \
+                         (TcpTransport::rendezvous_restored)"
+                    ))
+                }
+                _ => {}
+            }
+            self.pending_left[w] = s.pending_left;
+        }
+        Ok(())
     }
 
     fn preseed_net_stats(&mut self, stats: NetStats) {

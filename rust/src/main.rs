@@ -67,14 +67,25 @@ fn config_from_cli(cli: &Cli) -> Result<ExperimentConfig> {
     Ok(cfg)
 }
 
-/// Driver-level checkpoint flags: `--restore <path>` resumes from a
-/// checkpoint first, then `--checkpoint <path> [--every <epochs>]` arms
-/// writes at qualifying epoch boundaries.
-fn apply_checkpoint_flags(cli: &Cli, trainer: &mut Trainer) -> Result<()> {
-    if let Some(path) = cli.get("restore") {
-        trainer.load_checkpoint(std::path::Path::new(path))?;
-        eprintln!("rosdhb: restored state from {path}");
+/// Build the trainer honoring `--restore <path>`: a restoring run reads
+/// the checkpoint *before* the transport comes up (a TCP coordinator
+/// then rendezvouses only the slots that were active at save time — a
+/// churned-out slot stays vacant instead of blocking rendezvous).
+fn build_trainer(cli: &Cli, cfg: &ExperimentConfig) -> Result<Trainer> {
+    match cli.get("restore") {
+        Some(path) => {
+            let t =
+                Trainer::from_config_restored(cfg, std::path::Path::new(path))?;
+            eprintln!("rosdhb: restored state from {path}");
+            Ok(t)
+        }
+        None => Trainer::from_config(cfg),
     }
+}
+
+/// Arm `--checkpoint <path> [--every <epochs>]` writes at qualifying
+/// epoch boundaries.
+fn apply_checkpoint_flags(cli: &Cli, trainer: &mut Trainer) -> Result<()> {
     if let Some(path) = cli.get("checkpoint") {
         let every: u64 = cli
             .get("every")
@@ -97,7 +108,7 @@ fn cmd_train(cli: &Cli) -> Result<()> {
         cfg.aggregator,
         cfg.attack,
     );
-    let mut trainer = Trainer::from_config(&cfg)?;
+    let mut trainer = build_trainer(cli, &cfg)?;
     apply_checkpoint_flags(cli, &mut trainer)?;
     eprintln!(
         "κ bound = {:.4} (Theorem 1 needs κB² ≤ 1/25)",
@@ -121,7 +132,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         cfg.n_byz,
         cfg.listen_addr,
     );
-    let mut trainer = Trainer::from_config(&cfg)?;
+    let mut trainer = build_trainer(cli, &cfg)?;
     apply_checkpoint_flags(cli, &mut trainer)?;
     let report = trainer.run()?;
     if let Some(ns) = trainer.net_stats() {

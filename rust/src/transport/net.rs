@@ -293,32 +293,37 @@ impl CoordinatorServer {
         fingerprint: u64,
         timeout: Duration,
     ) -> Result<()> {
-        let deadline = Instant::now() + timeout;
-        self.listener.set_nonblocking(true)?;
-        while self.conns.len() < expected {
-            match self.listener.accept() {
-                Ok((stream, peer)) => {
-                    if let Err(e) =
-                        self.admit(stream, fingerprint, expected, None)
-                    {
-                        eprintln!("rosdhb[tcp]: rejected joiner {peer}: {e}");
-                    }
-                }
-                Err(e) if is_timeout(&e) => {
-                    if Instant::now() >= deadline {
-                        return Err(anyhow!(
-                            "rendezvous timed out with {}/{} workers joined",
-                            self.conns.len(),
-                            expected
-                        ));
-                    }
-                    std::thread::sleep(Duration::from_millis(10));
-                }
-                Err(e) => return Err(anyhow!("accept: {e}")),
-            }
-        }
-        self.listener.set_nonblocking(false)?;
-        Ok(())
+        let pending = vec![None; expected.saturating_sub(self.conns.len())];
+        self.accept_joiners(pending, expected, fingerprint, timeout)
+    }
+
+    /// Rendezvous for a run restored from a checkpoint whose membership
+    /// has vacancies: create all `n_total` connection slots, but accept
+    /// joiners only for `slots` (the active ones, assigned in arrival
+    /// order — determinism never depends on join order, every worker
+    /// re-derives its state from the `WELCOME`d id alone). The other
+    /// slots start vacant, exactly as the checkpointing run left them,
+    /// ready for a later `+` churn event to re-fill.
+    pub fn rendezvous_slots(
+        &mut self,
+        n_total: usize,
+        slots: &[usize],
+        fingerprint: u64,
+        timeout: Duration,
+    ) -> Result<()> {
+        debug_assert!(self.conns.is_empty(), "rendezvous_slots runs first");
+        debug_assert!(slots.iter().all(|&s| s < n_total));
+        self.conns = (0..n_total)
+            .map(|_| Conn {
+                cmd_tx: None,
+                handle: None,
+                alive: false,
+                relay_addr: None,
+            })
+            .collect();
+        let pending: Vec<Option<usize>> =
+            slots.iter().map(|&s| Some(s)).collect();
+        self.accept_joiners(pending, n_total, fingerprint, timeout)
     }
 
     /// Re-open the rendezvous listener for a bounded window and fill the
@@ -337,15 +342,53 @@ impl CoordinatorServer {
             return Ok(());
         }
         let expected = self.conns.len();
+        let pending: Vec<Option<usize>> =
+            slots.iter().map(|&s| Some(s)).collect();
+        self.accept_joiners(pending, expected, fingerprint, timeout)
+    }
+
+    /// Shared accept loop of the rendezvous variants: admit one joiner
+    /// per `pending` entry (`Some(slot)` re-fills that worker id, `None`
+    /// appends the next id in join order). The listener is switched to
+    /// nonblocking for the window and restored to blocking on **every**
+    /// exit path — timeout, success, and accept errors alike — so a
+    /// failed window never leaves later rendezvous broken.
+    fn accept_joiners(
+        &mut self,
+        mut pending: Vec<Option<usize>>,
+        expected: usize,
+        fingerprint: u64,
+        timeout: Duration,
+    ) -> Result<()> {
+        if pending.is_empty() {
+            return Ok(());
+        }
         let deadline = Instant::now() + timeout;
         self.listener.set_nonblocking(true)?;
-        let mut pending: Vec<usize> = slots.to_vec();
+        let res = self.accept_joiners_inner(
+            &mut pending,
+            expected,
+            fingerprint,
+            deadline,
+        );
+        let restore = self.listener.set_nonblocking(false);
+        res?;
+        restore.map_err(|e| anyhow!("restore blocking accept: {e}"))?;
+        Ok(())
+    }
+
+    fn accept_joiners_inner(
+        &mut self,
+        pending: &mut Vec<Option<usize>>,
+        expected: usize,
+        fingerprint: u64,
+        deadline: Instant,
+    ) -> Result<()> {
         while !pending.is_empty() {
             match self.listener.accept() {
                 Ok((stream, peer)) => {
                     let slot = pending[0];
-                    match self.admit(stream, fingerprint, expected, Some(slot))
-                    {
+                    match self.admit(stream, fingerprint, expected, slot) {
                         Ok(()) => {
                             pending.remove(0);
                         }
@@ -356,11 +399,11 @@ impl CoordinatorServer {
                 }
                 Err(e) if is_timeout(&e) => {
                     if Instant::now() >= deadline {
-                        self.listener.set_nonblocking(false)?;
                         return Err(anyhow!(
-                            "epoch rendezvous timed out with {} vacated \
-                             slot(s) still unfilled",
-                            pending.len()
+                            "rendezvous timed out with {} slot(s) still \
+                             unfilled ({}/{expected} workers joined)",
+                            pending.len(),
+                            self.n_alive(),
                         ));
                     }
                     std::thread::sleep(Duration::from_millis(10));
@@ -368,7 +411,6 @@ impl CoordinatorServer {
                 Err(e) => return Err(anyhow!("accept: {e}")),
             }
         }
-        self.listener.set_nonblocking(false)?;
         Ok(())
     }
 
@@ -497,6 +539,12 @@ impl CoordinatorServer {
             let worker = order[pos];
             let parent = plan.parent(pos).map(|pp| order[pp]);
             direct[worker] = parent.is_none();
+            if self.conns[worker].cmd_tx.is_none() {
+                // a vacant slot (restored-run membership hole): nothing
+                // to plan — it sorts behind every relay-capable worker,
+                // so it can only hold a leaf position
+                continue;
+            }
             let n_children = plan.children(pos, n).len() as u16;
             let mut body: Vec<u8> = n_children.to_le_bytes().to_vec();
             match parent {
@@ -1667,5 +1715,61 @@ mod tests {
         assert_eq!(replies[0].result.as_ref().unwrap().0, 3.0);
         server.shutdown();
         second.join().unwrap();
+    }
+
+    #[test]
+    fn rendezvous_slots_leaves_unlisted_slots_vacant() {
+        // the restore-with-vacancy rendezvous: 3 connection slots, only
+        // slots 0 and 2 accept joiners (assigned in arrival order); the
+        // vacant slot 1 is skipped by broadcasts and stays refillable
+        let mut server = CoordinatorServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let workers: Vec<_> = (0..2)
+            .map(|_| {
+                let addr = addr.clone();
+                thread::spawn(move || {
+                    let mut c = WorkerClient::connect(
+                        &addr,
+                        7,
+                        Duration::from_secs(5),
+                    )
+                    .unwrap();
+                    assert!(c.worker_id == 0 || c.worker_id == 2);
+                    while let Some(msg) = c.recv(4).unwrap() {
+                        let round = match msg {
+                            WireMessage::ModelBroadcastPlain {
+                                round, ..
+                            } => round,
+                            other => panic!("unexpected {other:?}"),
+                        };
+                        let (loss, g) = grad(round, c.worker_id, 1.5);
+                        c.send_grad(loss, &g).unwrap();
+                    }
+                })
+            })
+            .collect();
+        server
+            .rendezvous_slots(3, &[0, 2], 7, Duration::from_secs(10))
+            .unwrap();
+        assert_eq!(server.n_workers(), 3);
+        assert_eq!(server.n_alive(), 2);
+        assert!(!server.is_alive(1), "unlisted slot must start vacant");
+        let msg = WireMessage::ModelBroadcastPlain {
+            round: 5,
+            params: vec![0.0; 4],
+        };
+        let n =
+            server.broadcast(5, &msg, &[true, true, true], Duration::from_secs(5));
+        assert_eq!(n, 2, "the vacant slot owes no reply");
+        let replies = server.collect(n, 5, Duration::from_secs(5));
+        assert_eq!(replies.len(), 2);
+        for r in &replies {
+            assert_ne!(r.worker, 1);
+            assert_eq!(r.result.as_ref().unwrap().0, 1.5);
+        }
+        server.shutdown();
+        for w in workers {
+            w.join().unwrap();
+        }
     }
 }

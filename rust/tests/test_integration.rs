@@ -220,6 +220,61 @@ fn local_checkpoint_restore_resumes_bit_identically() {
 }
 
 #[test]
+fn local_churn_restore_keeps_vacated_slots_vacant() {
+    // Regression: a checkpoint taken *after* a `-` churn event must
+    // restore with that slot still vacant. The checkpoint carries the
+    // per-slot membership — without it, a fresh Trainer starts all
+    // slots active and the restored trajectory silently diverges from
+    // the straight run. Slot 2 leaves at epoch 1 (before round 3), the
+    // checkpoint lands at round 4, and a `+` event at epoch 3 re-fills
+    // the slot after the restore to prove scheduled churn still applies
+    // on top of the restored membership.
+    let mut cfg = base_cfg();
+    cfg.rounds = 8;
+    cfg.eval_every = 2;
+    cfg.epoch_rounds = 2;
+    cfg.downlink = "delta".into();
+    cfg.churn = "1:-2,3:+2".into();
+    let mut straight_t = Trainer::from_config(&cfg).unwrap();
+    let straight = straight_t.run().unwrap();
+
+    let ckpt = std::env::temp_dir().join(format!(
+        "rosdhb_local_churn_restore_{}.ckpt",
+        std::process::id()
+    ));
+    let mut first = cfg.clone();
+    first.rounds = 4;
+    let mut t1 = Trainer::from_config(&first).unwrap();
+    t1.set_checkpoint(&ckpt, 1);
+    t1.run().unwrap();
+
+    // the CLI restore path: construct *from* the checkpoint
+    let mut t2 =
+        Trainer::from_config_restored(&cfg, &ckpt).unwrap();
+    let restored = t2.run().unwrap();
+    std::fs::remove_file(&ckpt).ok();
+
+    assert_eq!(straight.rounds_run, restored.rounds_run);
+    assert_eq!(straight.uplink_bytes, restored.uplink_bytes);
+    assert_eq!(straight.downlink_bytes, restored.downlink_bytes);
+    assert_eq!(straight.best_acc, restored.best_acc);
+    assert_eq!(straight.final_loss, restored.final_loss);
+    assert_eq!(straight.log.rows.len(), restored.log.rows.len());
+    for (a, b) in straight.log.rows.iter().zip(&restored.log.rows) {
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.train_loss, b.train_loss, "round {}", a.round);
+        assert_eq!(a.update_norm, b.update_norm, "round {}", a.round);
+        assert_eq!(a.test_acc, b.test_acc, "round {}", a.round);
+        assert_eq!(a.uplink_bytes, b.uplink_bytes, "round {}", a.round);
+        assert_eq!(a.downlink_bytes, b.downlink_bytes, "round {}", a.round);
+    }
+    // geometry rebuild counters pin the membership history: a silently
+    // re-activated slot would change the masked-update law's rebuilds
+    assert_eq!(straight_t.geometry_stats(), t2.geometry_stats());
+    assert_eq!(straight_t.downlink_stats(), t2.downlink_stats());
+}
+
+#[test]
 fn checkpoint_flags_are_validated() {
     // --checkpoint without epochs has no boundary to write at
     let mut cfg = base_cfg();

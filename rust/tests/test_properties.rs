@@ -15,7 +15,7 @@
 
 use rosdhb::aggregators::geometry::GeoStats;
 use rosdhb::aggregators::{self, empirical_kappa, Aggregator};
-use rosdhb::checkpoint::Checkpoint;
+use rosdhb::checkpoint::{Checkpoint, SlotMembership};
 use rosdhb::compression::codec::MaskWire;
 use rosdhb::compression::payload::{Payload, QuantBlock};
 use rosdhb::compression::{Mask, RandK};
@@ -404,6 +404,12 @@ fn random_checkpoint(rng: &mut Pcg64) -> Checkpoint {
             raw_uplink: rng.next_u64(),
             raw_downlink: rng.next_u64(),
         }),
+        membership: (0..rng.below(10) as usize)
+            .map(|_| SlotMembership {
+                active: rng.below(2) == 0,
+                pending_left: rng.below(2) == 0,
+            })
+            .collect(),
     }
 }
 

@@ -422,6 +422,164 @@ fn tcp_checkpoint_restore_resumes_bit_identically() {
 }
 
 #[test]
+fn tcp_churn_then_restore_keeps_vacated_slot_vacant() {
+    // Regression: a checkpoint written *after* a churn event carries the
+    // membership, and a restoring coordinator rendezvouses only the
+    // active slots. Slot 1 is churned out at the epoch-1 boundary
+    // (round 3); the checkpoint lands at round 4 with the slot vacant;
+    // the restored run brings up THREE workers (a fourth would block
+    // rendezvous forever — the old full-rendezvous restore both hung on
+    // it and silently re-activated the slot), then a replacement joins
+    // through the epoch-3 boundary window (round 7) exactly as on the
+    // straight run.
+    let mut cfg = base_cfg();
+    cfg.aggregator = "nnm+cwtm".into();
+    cfg.rounds = 8;
+    cfg.set("epoch_rounds", "2").unwrap();
+    cfg.set("churn", "1:-1,3:+1").unwrap();
+
+    // --- straight run: 4 initial workers + a replacement in the backlog
+    let straight = {
+        let server = CoordinatorServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let initial: Vec<_> = (0..cfg.n_total())
+            .map(|_| {
+                let cfg = cfg.clone();
+                let addr = addr.clone();
+                thread::spawn(move || {
+                    join_run(&cfg, &addr, Duration::from_secs(20), JoinOpts::default())
+                })
+            })
+            .collect();
+        let d = MlpSpec::default().p();
+        let transport = TcpTransport::rendezvous(server, &cfg, d).unwrap();
+        let replacement = {
+            let cfg = cfg.clone();
+            let addr = addr.clone();
+            thread::spawn(move || {
+                join_run(&cfg, &addr, Duration::from_secs(20), JoinOpts::default())
+            })
+        };
+        let mut trainer =
+            Trainer::with_transport(&cfg, Box::new(transport)).unwrap();
+        let report = trainer.run().unwrap();
+        let geo = trainer.geometry_stats();
+        trainer.shutdown_transport();
+        let mut served: Vec<u64> = initial
+            .into_iter()
+            .map(|h| h.join().unwrap().expect("initial worker").rounds)
+            .collect();
+        served.push(replacement.join().unwrap().expect("replacement").rounds);
+        served.sort_unstable();
+        assert_eq!(served, [2, 2, 8, 8, 8]);
+        (report, geo)
+    };
+
+    let ckpt = std::env::temp_dir().join(format!(
+        "rosdhb_tcp_churn_restore_{}.ckpt",
+        std::process::id()
+    ));
+
+    // --- epochs 0-1 with the same schedule; the round-4 checkpoint
+    // records slot 1 vacant
+    let mut first = cfg.clone();
+    first.rounds = 4;
+    {
+        let server = CoordinatorServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let handles: Vec<_> = (0..first.n_total())
+            .map(|_| {
+                let cfg = first.clone();
+                let addr = addr.clone();
+                thread::spawn(move || {
+                    join_run(&cfg, &addr, Duration::from_secs(20), JoinOpts::default())
+                })
+            })
+            .collect();
+        let d = MlpSpec::default().p();
+        let transport = TcpTransport::rendezvous(server, &first, d).unwrap();
+        let mut trainer =
+            Trainer::with_transport(&first, Box::new(transport)).unwrap();
+        trainer.set_checkpoint(&ckpt, 1);
+        trainer.run().unwrap();
+        trainer.shutdown_transport();
+        let mut served: Vec<u64> = handles
+            .into_iter()
+            .map(|h| h.join().unwrap().expect("worker").rounds)
+            .collect();
+        served.sort_unstable();
+        assert_eq!(served, [2, 4, 4, 4]);
+    }
+
+    // --- restore: membership-aware rendezvous waits for 3 workers only
+    let ck = rosdhb::checkpoint::Checkpoint::read(
+        &ckpt,
+        cfg.wire_fingerprint(),
+    )
+    .unwrap();
+    let vacant: Vec<usize> = ck
+        .membership
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| !s.active)
+        .map(|(w, _)| w)
+        .collect();
+    assert_eq!(vacant, [1], "round-4 checkpoint must record slot 1 vacant");
+    let restored = {
+        let server = CoordinatorServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let handles: Vec<_> = (0..cfg.n_total() - 1)
+            .map(|_| {
+                let cfg = cfg.clone();
+                let addr = addr.clone();
+                thread::spawn(move || {
+                    join_run(&cfg, &addr, Duration::from_secs(20), JoinOpts::default())
+                })
+            })
+            .collect();
+        let d = MlpSpec::default().p();
+        let transport =
+            TcpTransport::rendezvous_restored(server, &cfg, d, &ck.membership)
+                .unwrap();
+        let replacement = {
+            let cfg = cfg.clone();
+            let addr = addr.clone();
+            thread::spawn(move || {
+                join_run(&cfg, &addr, Duration::from_secs(20), JoinOpts::default())
+            })
+        };
+        let mut trainer =
+            Trainer::with_transport(&cfg, Box::new(transport)).unwrap();
+        trainer.load_checkpoint(&ckpt).unwrap();
+        let report = trainer.run().unwrap();
+        let geo = trainer.geometry_stats();
+        trainer.shutdown_transport();
+        let mut served: Vec<u64> = handles
+            .into_iter()
+            .map(|h| h.join().unwrap().expect("restored worker").rounds)
+            .collect();
+        served.push(replacement.join().unwrap().expect("replacement").rounds);
+        served.sort_unstable();
+        // three restored workers serve rounds 5-8, the replacement 7-8
+        assert_eq!(served, [2, 4, 4, 4]);
+        (report, geo)
+    };
+    std::fs::remove_file(&ckpt).ok();
+
+    assert_reports_identical(&straight.0, &restored.0);
+    assert_eq!(
+        straight.1, restored.1,
+        "geometry rebuild counters must be pinned across the restore"
+    );
+
+    // the local oracle under the identical schedule agrees bit for bit
+    let mut local_cfg = cfg.clone();
+    local_cfg.transport = "local".into();
+    let local = Trainer::from_config(&local_cfg).unwrap().run().unwrap();
+    assert_reports_identical(&restored.0, &local);
+}
+
+#[test]
 fn tcp_worker_crash_mid_run_degrades_into_dropped_contribution() {
     let mut cfg = base_cfg();
     cfg.rounds = 4;
