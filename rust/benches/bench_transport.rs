@@ -8,6 +8,12 @@
 //! single-sample entries so the per-PR artifact tracks them; timing rows
 //! are measured as usual.
 //!
+//! PR 7 adds two socket-runtime stages: the churn window's early-close
+//! latency (asserted, not just recorded) and an `io = "evloop"` scaling
+//! stage that runs whole broadcast/collect rounds against 1200 loopback
+//! workers on two OS threads total — a matrix the per-connection
+//! thread-pair runtime cannot enter at the same thread budget.
+//!
 //! Run: `cargo bench --bench bench_transport`. `BENCH_SMOKE=1` shortens
 //! the pass (the CI smoke-bench job uses it); the JSON lands at
 //! `BENCH_transport.json` (override with `BENCH_JSON=path`).
@@ -17,12 +23,14 @@ use rosdhb::prng::Pcg64;
 use rosdhb::transport::downlink::{
     DownlinkCodec, DownlinkReplica, FanoutPlan,
 };
+use rosdhb::compression::payload::Payload;
+use rosdhb::transport::evloop::{spawn_reply_swarm, EvloopServer};
 use rosdhb::transport::net::{CoordinatorServer, WorkerClient};
 use rosdhb::transport::{broadcast_len, WireMessage};
 use rosdhb::util::bench;
 use rosdhb::util::bench::time_fn_recorded as timed;
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 const D: usize = 11_809;
 const K: usize = 590; // k/d = 0.05
@@ -219,12 +227,101 @@ fn main() {
                     .unwrap();
             },
         );
+        // Early-close contract: the boundary window is an upper bound,
+        // not a wait — with the replacement already parked in the
+        // listener backlog, a rendezvous-scale window must close in
+        // milliseconds. This assertion pins the contract documented on
+        // `reopen_rendezvous`.
+        threads.push(dial(addr.clone()));
+        server.detach(0);
+        let t0 = Instant::now();
+        server
+            .reopen_rendezvous(&[0], FP, Duration::from_secs(120))
+            .unwrap();
+        let early_close = t0.elapsed();
+        assert!(
+            early_close < Duration::from_secs(30),
+            "120 s churn window did not early-close: took {early_close:?}"
+        );
+        println!(
+            "# churn/early_close: 120 s window closed in {early_close:?}"
+        );
+        rec.push((
+            "churn/early_close_latency (120s window, parked joiner)".into(),
+            vec![early_close.as_secs_f64()],
+        ));
         for w in 0..n {
             server.detach(w);
         }
         for h in threads {
             h.join().unwrap();
         }
+    }
+
+    // ---- scaling: event-loop transport at n >= 1000 (loopback) --------
+    // The point of `io = "evloop"`: this stage drives 1200 loopback
+    // workers through whole broadcast/collect rounds on TWO threads
+    // total (the coordinator event loop runs on this one, the reply
+    // swarm on one more). The threaded transport cannot run this matrix
+    // at an equal thread budget — it needs a reader/writer thread pair
+    // per connection (~2400 OS threads) before a single worker thread
+    // is counted.
+    {
+        const FP: u64 = 0x5eed;
+        let n = scale(1200);
+        let d = 64usize;
+        let mut server = EvloopServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let swarm = spawn_reply_swarm(
+            addr,
+            FP,
+            n,
+            Payload::Dense {
+                values: vec![0.25f32; d],
+            },
+            Duration::from_secs(60),
+        );
+        server.rendezvous(n, FP, Duration::from_secs(120)).unwrap();
+        let expect = vec![true; n];
+        let mut round = 0u64;
+        timed(
+            &mut rec,
+            "evloop/broadcast+collect round (n=1200, d=64, loopback)",
+            1,
+            scale(15),
+            || {
+                round += 1;
+                let msg = WireMessage::ModelBroadcastPlain {
+                    round,
+                    params: vec![1.0f32; d],
+                };
+                let n_expected = server.broadcast(
+                    round,
+                    &msg,
+                    &expect,
+                    Duration::from_secs(60),
+                );
+                assert_eq!(n_expected, n);
+                let replies =
+                    server.collect(n_expected, round, Duration::from_secs(60));
+                let ok = replies
+                    .iter()
+                    .filter(|r| r.result.is_ok())
+                    .count();
+                assert_eq!(
+                    ok, n,
+                    "round {round}: {ok}/{n} replies arrived over the \
+                     event loop"
+                );
+            },
+        );
+        server.shutdown();
+        let replies = swarm.join().unwrap().unwrap();
+        println!(
+            "# evloop scaling: {n} workers served {round} rounds \
+             ({replies} uplinks) on 2 threads"
+        );
+        rec.push(("evloop/n_workers".into(), vec![n as f64]));
     }
 
     let json_path = std::env::var("BENCH_JSON")

@@ -184,6 +184,17 @@ pub struct ExperimentConfig {
     /// Relay-tree branching factor (`fanout = "tree"`; ignored under
     /// flat).
     pub branching: usize,
+    /// Socket runtime under `transport = "tcp"`: "threads" (one blocking
+    /// reader/writer thread pair per connection — the bit-parity oracle)
+    /// or "evloop" (a single readiness-polling I/O thread per process
+    /// driving every socket nonblocking; scales past the thread budget
+    /// and feeds the connection monitor that steers relay placement and
+    /// stalled-relay resyncs). Both runtimes speak the identical wire
+    /// format; under `fanout = "flat"` they interoperate freely, under
+    /// `fanout = "tree"` all sides must pick the same mode (the relay
+    /// feeds differ). Deliberately NOT part of the wire fingerprint:
+    /// results are bit-identical across modes.
+    pub io: String,
     /// Rounds per epoch (0 = no epochs — the pre-elastic behavior).
     /// With `epoch_rounds = E`, round `t` belongs to epoch `(t-1)/E`; at
     /// every epoch boundary the membership may change (leaves, joins,
@@ -294,6 +305,7 @@ impl ExperimentConfig {
             downlink: "dense".into(),
             fanout: "flat".into(),
             branching: 2,
+            io: "threads".into(),
             epoch_rounds: 0,
             readmit: "next-epoch".into(),
             churn: String::new(),
@@ -378,6 +390,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = get("fanout") {
             c.fanout = v.as_str().ok_or("fanout: want string")?.into();
+        }
+        if let Some(v) = get("io") {
+            c.io = v.as_str().ok_or("io: want string")?.into();
         }
         if let Some(v) = get("readmit") {
             c.readmit = v.as_str().ok_or("readmit: want string")?.into();
@@ -487,6 +502,7 @@ impl ExperimentConfig {
                 "downlink" => c.downlink = tmp.downlink.clone(),
                 "fanout" => c.fanout = tmp.fanout.clone(),
                 "branching" => c.branching = tmp.branching,
+                "io" => c.io = tmp.io.clone(),
                 "epoch_rounds" => c.epoch_rounds = tmp.epoch_rounds,
                 "readmit" => c.readmit = tmp.readmit.clone(),
                 "churn" => c.churn = tmp.churn.clone(),
@@ -564,6 +580,14 @@ impl ExperimentConfig {
                 return Err(format!(
                     "unknown readmit '{other}' (never | next-epoch)"
                 ))
+            }
+        }
+        // io selects the tcp socket runtime but parses everywhere so a
+        // config destined for `transport = "tcp"` fails fast under local
+        match self.io.as_str() {
+            "threads" | "evloop" => {}
+            other => {
+                return Err(format!("unknown io mode '{other}' (threads|evloop)"))
             }
         }
         if self.epoch_rounds > 0 && self.algorithm == Algorithm::ByzDashaPage {
@@ -695,7 +719,11 @@ impl ExperimentConfig {
             // when dense re-sync broadcasts happen — every side must
             // agree; the churn *schedule* stays coordinator-local (a
             // worker needs no foreknowledge of who leaves or joins), so
-            // `churn` is deliberately NOT hashed
+            // `churn` is deliberately NOT hashed. `io` is NOT hashed
+            // either: both socket runtimes speak the identical wire
+            // format and produce bit-identical results, so mixed-mode
+            // flat runs are legal (trees additionally need matching io,
+            // enforced at plan application, not at rendezvous)
             self.epoch_rounds,
             self.readmit,
         );
@@ -737,6 +765,7 @@ impl ExperimentConfig {
         m.insert("downlink".into(), Json::Str(self.downlink.clone()));
         m.insert("fanout".into(), Json::Str(self.fanout.clone()));
         m.insert("branching".into(), Json::Num(self.branching as f64));
+        m.insert("io".into(), Json::Str(self.io.clone()));
         m.insert("epoch_rounds".into(), Json::Num(self.epoch_rounds as f64));
         m.insert("readmit".into(), Json::Str(self.readmit.clone()));
         Json::Obj(m)
@@ -972,6 +1001,31 @@ mod tests {
                 "{key} must enter the fingerprint"
             );
         }
+    }
+
+    #[test]
+    fn io_key_parses_validates_and_stays_out_of_fingerprint() {
+        let mut c = ExperimentConfig::default_mnist_like();
+        assert_eq!(c.io, "threads");
+        c.set("io", "evloop").unwrap();
+        assert_eq!(c.io, "evloop");
+        c.validate().unwrap();
+        assert!(c.set("io", "tokio").is_err());
+        assert_eq!(c.io, "evloop", "a rejected set must not clobber");
+
+        let doc = toml::TomlDoc::parse("[experiment]\nio = \"evloop\"\n")
+            .unwrap();
+        let c = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.io, "evloop");
+
+        // io is a delivery-path choice, not wire identity: both runtimes
+        // produce bit-identical results, so it must NOT move the
+        // fingerprint (a threads coordinator accepts evloop workers under
+        // flat fan-out)
+        let a = ExperimentConfig::default_mnist_like();
+        let mut b = a.clone();
+        b.io = "evloop".into();
+        assert_eq!(a.wire_fingerprint(), b.wire_fingerprint());
     }
 
     #[test]

@@ -65,7 +65,8 @@ use crate::tensor;
 use crate::transport::downlink::{
     self, DownlinkCodec, DownlinkMode, DownlinkStats, FanoutPlan,
 };
-use crate::transport::net::{CoordinatorServer, NetStats};
+use crate::transport::evloop::ServerIo;
+use crate::transport::net::NetStats;
 use crate::transport::{broadcast_len, ByteMeter};
 #[cfg(feature = "pjrt")]
 use crate::worker::PjrtEngine;
@@ -259,7 +260,7 @@ impl Trainer {
         cfg.validate().map_err(|e| anyhow!(e))?;
         if cfg.transport == "tcp" {
             let (test, n_grad) = build_eval_side(cfg)?;
-            let server = CoordinatorServer::bind(&cfg.listen_addr)?;
+            let server = ServerIo::bind(&cfg.listen_addr, &cfg.io)?;
             eprintln!(
                 "rosdhb[tcp]: listening on {}, waiting for {} workers \
                  (`rosdhb join --coordinator_addr {}`)",
@@ -268,7 +269,7 @@ impl Trainer {
                 server.local_addr(),
             );
             let d = MlpSpec::default().p();
-            let transport = TcpTransport::rendezvous(server, cfg, d)?;
+            let transport = TcpTransport::rendezvous_io(server, cfg, d)?;
             return Self::with_transport_and_test_set(
                 cfg,
                 Box::new(transport),
@@ -313,7 +314,7 @@ impl Trainer {
             .map_err(|e| anyhow!(e))?;
         let mut trainer = if cfg.transport == "tcp" {
             let (test, n_grad) = build_eval_side(cfg)?;
-            let server = CoordinatorServer::bind(&cfg.listen_addr)?;
+            let server = ServerIo::bind(&cfg.listen_addr, &cfg.io)?;
             let n_active = if ck.membership.len() == cfg.n_total() {
                 ck.membership.iter().filter(|s| s.active).count()
             } else {
@@ -327,7 +328,7 @@ impl Trainer {
                 server.local_addr(),
             );
             let d = MlpSpec::default().p();
-            let transport = TcpTransport::rendezvous_restored(
+            let transport = TcpTransport::rendezvous_restored_io(
                 server,
                 cfg,
                 d,

@@ -64,6 +64,7 @@ use crate::compression::payload::{Payload, PayloadPlan};
 use crate::compression::RandK;
 use crate::config::{ChurnEvent, ExperimentConfig};
 use crate::transport::downlink::FanoutPlan;
+use crate::transport::evloop::ServerIo;
 use crate::transport::net::{CoordinatorServer, NetStats};
 use crate::transport::WireMessage;
 use crate::worker::{GradEngine, HonestWorker};
@@ -434,7 +435,7 @@ enum SlotState {
 
 /// Coordinator side of `transport = "tcp"`.
 pub struct TcpTransport {
-    server: CoordinatorServer,
+    server: ServerIo,
     plan: PayloadPlan,
     d: usize,
     seed: u64,
@@ -459,6 +460,11 @@ pub struct TcpTransport {
     /// `config: readmit = "next-epoch"`: deadline-suspended workers whose
     /// socket survived are woken at epoch boundaries.
     readmit_next_epoch: bool,
+    /// The run's fan-out plan, kept for epoch-boundary re-plans: the
+    /// event-loop server re-derives relay placement from its RTT
+    /// monitor after every membership change (the threaded server keeps
+    /// join-order placement — it is the placement oracle).
+    fanout: FanoutPlan,
 }
 
 impl TcpTransport {
@@ -466,6 +472,15 @@ impl TcpTransport {
     /// transport. `d` is the model dimension of the trainer's engine.
     pub fn rendezvous(
         server: CoordinatorServer,
+        cfg: &ExperimentConfig,
+        d: usize,
+    ) -> Result<Self> {
+        Self::rendezvous_inner(server.into(), cfg, d, None)
+    }
+
+    /// [`Self::rendezvous`] over either socket runtime (`config: io`).
+    pub fn rendezvous_io(
+        server: ServerIo,
         cfg: &ExperimentConfig,
         d: usize,
     ) -> Result<Self> {
@@ -485,11 +500,21 @@ impl TcpTransport {
         d: usize,
         membership: &[SlotMembership],
     ) -> Result<Self> {
+        Self::rendezvous_inner(server.into(), cfg, d, Some(membership))
+    }
+
+    /// [`Self::rendezvous_restored`] over either socket runtime.
+    pub fn rendezvous_restored_io(
+        server: ServerIo,
+        cfg: &ExperimentConfig,
+        d: usize,
+        membership: &[SlotMembership],
+    ) -> Result<Self> {
         Self::rendezvous_inner(server, cfg, d, Some(membership))
     }
 
     fn rendezvous_inner(
-        mut server: CoordinatorServer,
+        mut server: ServerIo,
         cfg: &ExperimentConfig,
         d: usize,
         membership: Option<&[SlotMembership]>,
@@ -562,6 +587,7 @@ impl TcpTransport {
             pending_left,
             fingerprint: cfg.wire_fingerprint(),
             readmit_next_epoch: cfg.readmit == "next-epoch",
+            fanout,
         })
     }
 
@@ -967,6 +993,17 @@ impl RoundTransport for TcpTransport {
                 }
             }
         }
+        // Membership settled — let the monitor re-derive relay placement
+        // from observed RTT/jitter (event-loop runtime only; the
+        // threaded server keeps join-order placement and stays the
+        // oracle). Same capability rule as at rendezvous.
+        let can_relay: Vec<bool> = (0..self.slots.len())
+            .map(|w| {
+                (w < self.n_grad || self.drones_reply)
+                    && self.slots[w] == SlotState::Active
+            })
+            .collect();
+        self.server.boundary_replan(&self.fanout, &can_relay)?;
         changed.sort_unstable();
         changed.dedup();
         Ok(changed)

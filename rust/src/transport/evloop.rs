@@ -1,0 +1,2034 @@
+//! Event-loop TCP transport (`io = "evloop"`).
+//!
+//! The threaded runtime in [`net`] spawns ~2 OS threads per connection
+//! (a coordinator I/O thread plus the worker's own reader), which caps
+//! practical fan-in far below the production-scale ambition. This
+//! module drives **all** sockets from a single thread per process with
+//! a readiness [`Poller`] (raw epoll on Linux, scan fallback
+//! elsewhere), nonblocking length-prefixed reads/writes, and
+//! per-connection reusable frame state. Gradient uplink bodies are
+//! read straight into the buffer that becomes the absorber input
+//! ([`Reply::result`]'s byte vector) — no intermediate copy.
+//!
+//! Three layers live here:
+//!
+//! * [`EvloopServer`] — the coordinator side. Method-for-method mirror
+//!   of [`CoordinatorServer`] (rendezvous, broadcast, collect,
+//!   suspend/readmit, detach, churn refill) with identical wire bytes,
+//!   identical byte accounting (the shared [`server_handshake`] plus
+//!   the same counter points), and identical failure semantics: a
+//!   deadline miss *suspends* (the socket survives for a later
+//!   readmit), a connection error kills. It additionally feeds a
+//!   [`RttMonitor`] one round-trip sample per worker per round and
+//!   uses it at epoch boundaries ([`EvloopServer::boundary_replan`])
+//!   to promote fast, steady workers to relay-tree interior nodes.
+//! * [`EvFeed`] — the worker side under `fanout = "tree"`: one
+//!   nonblocking loop multiplexing the direct coordinator connection,
+//!   the parent relay feed, and this worker's own relay children
+//!   (accepted from the [`RelayHub`] listener, which stays open for
+//!   mid-run re-plans). A [`GapMonitor`] watches the parent's
+//!   inter-frame gaps; when the silence exceeds the monitor's estimate
+//!   the feed RESYNCs to direct delivery *before* the round deadline —
+//!   a relay that stalls without dying costs one re-delivered frame,
+//!   not its whole subtree's round.
+//! * [`spawn_reply_swarm`] — a bench harness that drives `n` worker
+//!   sockets from one thread, so the n ≥ 1000 loopback scaling stage
+//!   runs at a thread budget the threaded transport cannot match.
+//!
+//! Every decision the monitors drive is **delivery-path-only**: which
+//! socket carries a frame, never what the frame contains. The threaded
+//! transport stays the bit-parity oracle; `tests/test_evloop.rs` pins
+//! run reports and cumulative wire bytes across `io` modes.
+//!
+//! A suspended or evicted connection is *deregistered* from the poller
+//! (and re-registered on readmit): the poller is level-triggered, so a
+//! parked socket with buffered bytes would otherwise wake the loop
+//! forever. This mirrors the threaded runtime, where a suspended
+//! worker's socket is simply not read until its next command.
+
+use std::collections::VecDeque;
+use std::io::{self, ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::downlink::FanoutPlan;
+use super::monitor::{GapMonitor, RttMonitor};
+use super::net::{
+    build_frame, is_timeout, server_handshake, write_frame,
+    CoordinatorServer, NetCounters, NetStats, RelayHub, Reply, WorkerClient,
+    COLLECT_GRACE, FRAME_OVERHEAD, GRAD_ENVELOPE, HANDSHAKE_TIMEOUT,
+    KIND_BYE, KIND_GRAD, KIND_LEAVE, KIND_MSG, KIND_PLAN, KIND_RESYNC,
+    MAX_FRAME, RELAY_WRITE_TIMEOUT,
+};
+use super::poller::Poller;
+use super::WireMessage;
+use crate::compression::payload::Payload;
+
+/// How long a child whose parent feed died waits for its own re-plan
+/// PLAN frame before concluding the parent actually failed and sending
+/// a RESYNC. When the coordinator re-plans the tree, parents drop
+/// children *before* those children have processed their own PLAN —
+/// without this grace every boundary re-plan would trigger a spurious
+/// RESYNC storm. Genuine relay-crash recovery pays this delay once,
+/// well under any round deadline.
+const PLAN_GRACE: Duration = Duration::from_millis(500);
+
+/// Upper bound on a nonblocking uplink write (grad/leave/resync). The
+/// coordinator always drains its sockets, so hitting this means the
+/// coordinator is gone.
+const NB_WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+// --------------------------------------------------------- frame reader
+
+/// A fully reassembled inbound frame.
+pub(crate) enum Frame {
+    /// A `GRAD` frame split at the loss envelope: `wire` is exactly the
+    /// uplinked [`WireMessage`] bytes, read straight off the socket into
+    /// the vector handed to the absorber (no intermediate copy).
+    Grad { loss: f32, wire: Vec<u8> },
+    /// Any other frame, body intact.
+    Ctl { kind: u8, body: Vec<u8> },
+}
+
+enum Phase {
+    Head,
+    Loss,
+    Body,
+}
+
+/// Incremental nonblocking frame reassembly: pooled header/envelope
+/// scratch plus one body buffer. [`Self::poll`] consumes whatever the
+/// socket has and yields at most one frame per call; `Ok(None)` means
+/// the socket ran dry mid-frame (state is kept across calls).
+pub(crate) struct FrameReader {
+    /// Split `GRAD` bodies into loss envelope + wire bytes (coordinator
+    /// side); `false` delivers every frame as [`Frame::Ctl`].
+    split_grad: bool,
+    phase: Phase,
+    head: [u8; FRAME_OVERHEAD],
+    head_fill: usize,
+    loss: [u8; GRAD_ENVELOPE],
+    loss_fill: usize,
+    body: Vec<u8>,
+    body_fill: usize,
+    split: bool,
+    kind: u8,
+}
+
+impl FrameReader {
+    pub(crate) fn new(split_grad: bool) -> Self {
+        FrameReader {
+            split_grad,
+            phase: Phase::Head,
+            head: [0; FRAME_OVERHEAD],
+            head_fill: 0,
+            loss: [0; GRAD_ENVELOPE],
+            loss_fill: 0,
+            body: Vec::new(),
+            body_fill: 0,
+            split: false,
+            kind: 0,
+        }
+    }
+
+    pub(crate) fn poll(
+        &mut self,
+        stream: &mut TcpStream,
+    ) -> io::Result<Option<Frame>> {
+        loop {
+            match self.phase {
+                Phase::Head => {
+                    while self.head_fill < FRAME_OVERHEAD {
+                        match stream.read(&mut self.head[self.head_fill..]) {
+                            Ok(0) => {
+                                return Err(ErrorKind::UnexpectedEof.into())
+                            }
+                            Ok(n) => self.head_fill += n,
+                            Err(e)
+                                if e.kind() == ErrorKind::WouldBlock =>
+                            {
+                                return Ok(None)
+                            }
+                            Err(e)
+                                if e.kind() == ErrorKind::Interrupted => {}
+                            Err(e) => return Err(e),
+                        }
+                    }
+                    let len = u32::from_le_bytes(
+                        self.head[0..4].try_into().unwrap(),
+                    ) as usize;
+                    self.kind = self.head[4];
+                    if len > MAX_FRAME {
+                        return Err(io::Error::new(
+                            ErrorKind::InvalidData,
+                            format!("frame length {len} exceeds cap"),
+                        ));
+                    }
+                    self.split = self.split_grad
+                        && self.kind == KIND_GRAD
+                        && len >= GRAD_ENVELOPE;
+                    let body_len =
+                        if self.split { len - GRAD_ENVELOPE } else { len };
+                    self.body.clear();
+                    self.body.resize(body_len, 0);
+                    self.body_fill = 0;
+                    self.loss_fill = 0;
+                    self.phase =
+                        if self.split { Phase::Loss } else { Phase::Body };
+                }
+                Phase::Loss => {
+                    while self.loss_fill < GRAD_ENVELOPE {
+                        match stream.read(&mut self.loss[self.loss_fill..]) {
+                            Ok(0) => {
+                                return Err(ErrorKind::UnexpectedEof.into())
+                            }
+                            Ok(n) => self.loss_fill += n,
+                            Err(e)
+                                if e.kind() == ErrorKind::WouldBlock =>
+                            {
+                                return Ok(None)
+                            }
+                            Err(e)
+                                if e.kind() == ErrorKind::Interrupted => {}
+                            Err(e) => return Err(e),
+                        }
+                    }
+                    self.phase = Phase::Body;
+                }
+                Phase::Body => {
+                    while self.body_fill < self.body.len() {
+                        match stream.read(&mut self.body[self.body_fill..]) {
+                            Ok(0) => {
+                                return Err(ErrorKind::UnexpectedEof.into())
+                            }
+                            Ok(n) => self.body_fill += n,
+                            Err(e)
+                                if e.kind() == ErrorKind::WouldBlock =>
+                            {
+                                return Ok(None)
+                            }
+                            Err(e)
+                                if e.kind() == ErrorKind::Interrupted => {}
+                            Err(e) => return Err(e),
+                        }
+                    }
+                    self.phase = Phase::Head;
+                    self.head_fill = 0;
+                    let frame = if self.split {
+                        Frame::Grad {
+                            loss: f32::from_le_bytes(self.loss),
+                            wire: std::mem::take(&mut self.body),
+                        }
+                    } else {
+                        Frame::Ctl {
+                            kind: self.kind,
+                            body: std::mem::take(&mut self.body),
+                        }
+                    };
+                    self.body_fill = 0;
+                    return Ok(Some(frame));
+                }
+            }
+        }
+    }
+}
+
+/// Write `buf` to a nonblocking stream, sleeping briefly on
+/// `WouldBlock`, failing at `deadline`.
+fn write_all_nb(
+    stream: &mut TcpStream,
+    buf: &[u8],
+    deadline: Instant,
+) -> io::Result<()> {
+    let mut off = 0;
+    while off < buf.len() {
+        match stream.write(&buf[off..]) {
+            Ok(0) => return Err(ErrorKind::WriteZero.into()),
+            Ok(n) => off += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(ErrorKind::TimedOut.into());
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------- server
+
+/// One queued outbound frame; `wire_bytes` is the metered wire-format
+/// share counted when the write completes (0 for control frames).
+struct WriteJob {
+    frame: Arc<Vec<u8>>,
+    off: usize,
+    wire_bytes: u64,
+}
+
+/// The in-flight broadcast, kept for RESYNC re-delivery.
+struct CurRound {
+    round: u64,
+    frame: Arc<Vec<u8>>,
+    wire_bytes: u64,
+    timeout: Duration,
+}
+
+/// Per-connection state of the event-loop server.
+struct EvConn {
+    /// `None` = vacant slot (never joined, left, or connection lost).
+    stream: Option<TcpStream>,
+    alive: bool,
+    /// Whether the fd is currently registered with the poller
+    /// (suspended/evicted conns are deregistered, see module docs).
+    registered: bool,
+    relay_addr: Option<SocketAddr>,
+    reader: FrameReader,
+    wq: VecDeque<WriteJob>,
+    write_deadline: Option<Instant>,
+    /// A LEAVE frame arrived: the next uplink is this worker's last.
+    leaving: bool,
+    /// Collapsed to direct delivery (post-RESYNC), like the threaded
+    /// `io_loop`'s flag of the same name.
+    fallback_direct: bool,
+    /// A RESYNC arrived while no reply was owed. The threaded path's
+    /// parked read would not see it until the next expected reply, so
+    /// we defer processing (and its byte accounting) to the next
+    /// broadcast that expects one — keeping the two `io` modes'
+    /// counters identical.
+    pending_resync: bool,
+    /// The round this worker owes an uplink for (`None` = not owed).
+    expect_round: Option<u64>,
+    sent_at: Option<Instant>,
+    /// This round's frame was (or will be) written directly to this
+    /// worker — a RESYNC then needs no re-delivery.
+    cur_delivered: bool,
+}
+
+impl EvConn {
+    fn joined(stream: TcpStream, relay_addr: Option<SocketAddr>) -> Self {
+        EvConn {
+            stream: Some(stream),
+            alive: true,
+            registered: true,
+            relay_addr,
+            reader: FrameReader::new(true),
+            wq: VecDeque::new(),
+            write_deadline: None,
+            leaving: false,
+            fallback_direct: false,
+            pending_resync: false,
+            expect_round: None,
+            sent_at: None,
+            cur_delivered: false,
+        }
+    }
+
+    fn vacant() -> Self {
+        EvConn {
+            stream: None,
+            alive: false,
+            registered: false,
+            relay_addr: None,
+            reader: FrameReader::new(true),
+            wq: VecDeque::new(),
+            write_deadline: None,
+            leaving: false,
+            fallback_direct: false,
+            pending_resync: false,
+            expect_round: None,
+            sent_at: None,
+            cur_delivered: false,
+        }
+    }
+}
+
+/// Deregister (if needed) and fully release a connection.
+fn close_conn(poller: &mut Poller, conn: &mut EvConn, token: usize) {
+    if let Some(s) = &conn.stream {
+        if conn.registered {
+            let _ = poller.deregister(s.as_raw_fd(), token);
+        }
+    }
+    conn.stream = None;
+    conn.registered = false;
+    conn.alive = false;
+    conn.wq.clear();
+    conn.write_deadline = None;
+    conn.expect_round = None;
+    conn.sent_at = None;
+}
+
+/// Suspend a connection (deadline miss): keep the socket for a later
+/// readmit but stop polling it — the poller is level-triggered and a
+/// parked socket with buffered catch-up bytes would spin the loop.
+fn suspend_conn(poller: &mut Poller, conn: &mut EvConn, token: usize) {
+    if conn.registered {
+        if let Some(s) = &conn.stream {
+            let _ = poller.deregister(s.as_raw_fd(), token);
+        }
+        conn.registered = false;
+    }
+    conn.alive = false;
+    conn.expect_round = None;
+    conn.sent_at = None;
+}
+
+/// Single-threaded coordinator transport: every worker socket is driven
+/// by the caller's thread through one [`Poller`]. Public surface and
+/// observable behavior mirror [`CoordinatorServer`] — see the module
+/// docs for the exact parity contract.
+pub struct EvloopServer {
+    listener: TcpListener,
+    local_addr: SocketAddr,
+    poller: Poller,
+    conns: Vec<EvConn>,
+    counters: NetCounters,
+    /// Per-worker direct-delivery flags from the current fanout plan;
+    /// `None` = flat (everyone direct).
+    deliver_direct: Option<Vec<bool>>,
+    monitor: RttMonitor,
+    /// Replies assembled by read pumps, drained by [`Self::collect`].
+    pending: Vec<Reply>,
+    cur: Option<CurRound>,
+    /// The placement order the current PLAN frames encode; boundary
+    /// re-plans are skipped when the monitor's order is unchanged.
+    last_order: Option<Vec<usize>>,
+    ready: Vec<usize>,
+}
+
+impl EvloopServer {
+    /// Bind the rendezvous socket (use port 0 for an ephemeral port).
+    pub fn bind(addr: &str) -> Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow!("bind {addr}: {e}"))?;
+        let local_addr = listener.local_addr()?;
+        let poller = Poller::new().map_err(|e| anyhow!("poller: {e}"))?;
+        Ok(EvloopServer {
+            listener,
+            local_addr,
+            poller,
+            conns: Vec::new(),
+            counters: NetCounters::default(),
+            deliver_direct: None,
+            monitor: RttMonitor::new(0),
+            pending: Vec::new(),
+            cur: None,
+            last_order: None,
+            ready: Vec::new(),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.conns.len()
+    }
+
+    pub fn stats(&self) -> NetStats {
+        self.counters.snapshot()
+    }
+
+    pub fn preseed_stats(&self, s: NetStats) {
+        self.counters.preseed(s);
+    }
+
+    /// Accept exactly `expected` workers — see
+    /// [`CoordinatorServer::rendezvous`].
+    pub fn rendezvous(
+        &mut self,
+        expected: usize,
+        fingerprint: u64,
+        timeout: Duration,
+    ) -> Result<()> {
+        let pending =
+            vec![None; expected.saturating_sub(self.conns.len())];
+        self.accept_joiners(pending, expected, fingerprint, timeout)
+    }
+
+    /// Restored-run rendezvous with vacancies — see
+    /// [`CoordinatorServer::rendezvous_slots`].
+    pub fn rendezvous_slots(
+        &mut self,
+        n_total: usize,
+        slots: &[usize],
+        fingerprint: u64,
+        timeout: Duration,
+    ) -> Result<()> {
+        debug_assert!(self.conns.is_empty(), "rendezvous_slots runs first");
+        debug_assert!(slots.iter().all(|&s| s < n_total));
+        self.conns = (0..n_total).map(|_| EvConn::vacant()).collect();
+        self.monitor.grow(n_total);
+        let pending: Vec<Option<usize>> =
+            slots.iter().map(|&s| Some(s)).collect();
+        self.accept_joiners(pending, n_total, fingerprint, timeout)
+    }
+
+    /// Epoch-boundary churn window — see
+    /// [`CoordinatorServer::reopen_rendezvous`]; the same early-close
+    /// contract applies (`timeout` is an upper bound, the window closes
+    /// the moment the last vacant slot fills).
+    pub fn reopen_rendezvous(
+        &mut self,
+        slots: &[usize],
+        fingerprint: u64,
+        timeout: Duration,
+    ) -> Result<()> {
+        if slots.is_empty() {
+            return Ok(());
+        }
+        let expected = self.conns.len();
+        let pending: Vec<Option<usize>> =
+            slots.iter().map(|&s| Some(s)).collect();
+        self.accept_joiners(pending, expected, fingerprint, timeout)
+    }
+
+    fn accept_joiners(
+        &mut self,
+        mut pending: Vec<Option<usize>>,
+        expected: usize,
+        fingerprint: u64,
+        timeout: Duration,
+    ) -> Result<()> {
+        if pending.is_empty() {
+            return Ok(());
+        }
+        let deadline = Instant::now() + timeout;
+        self.listener.set_nonblocking(true)?;
+        let res = self.accept_joiners_inner(
+            &mut pending,
+            expected,
+            fingerprint,
+            deadline,
+        );
+        let restore = self.listener.set_nonblocking(false);
+        res?;
+        restore.map_err(|e| anyhow!("restore blocking accept: {e}"))?;
+        Ok(())
+    }
+
+    fn accept_joiners_inner(
+        &mut self,
+        pending: &mut Vec<Option<usize>>,
+        expected: usize,
+        fingerprint: u64,
+        deadline: Instant,
+    ) -> Result<()> {
+        while !pending.is_empty() {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    let slot = pending[0];
+                    match self.admit(stream, fingerprint, expected, slot) {
+                        Ok(()) => {
+                            pending.remove(0);
+                        }
+                        Err(e) => eprintln!(
+                            "rosdhb[tcp]: rejected joiner {peer}: {e}"
+                        ),
+                    }
+                }
+                Err(e) if is_timeout(&e) => {
+                    if Instant::now() >= deadline {
+                        return Err(anyhow!(
+                            "rendezvous timed out with {} slot(s) still \
+                             unfilled ({}/{expected} workers joined)",
+                            pending.len(),
+                            self.n_alive(),
+                        ));
+                    }
+                    // short poll quantum: bounds the early-close latency
+                    // of a boundary window, same as the threaded server
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => return Err(anyhow!("accept: {e}")),
+            }
+        }
+        Ok(())
+    }
+
+    /// Handshake one joiner (blocking, shared with the threaded server
+    /// so the two `io` modes are byte-identical here), then switch the
+    /// socket to nonblocking and register it with the poller.
+    fn admit(
+        &mut self,
+        mut stream: TcpStream,
+        fingerprint: u64,
+        expected: usize,
+        slot: Option<usize>,
+    ) -> Result<()> {
+        stream.set_nodelay(true).ok();
+        stream.set_nonblocking(false)?;
+        stream.set_write_timeout(Some(HANDSHAKE_TIMEOUT))?;
+        stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+        let peer = stream.peer_addr()?;
+        let id = match slot {
+            Some(s) => s as u16,
+            None => self.conns.len() as u16,
+        };
+        let join = server_handshake(
+            &mut stream,
+            fingerprint,
+            id,
+            expected as u16,
+            &self.counters,
+        )?;
+        let relay_addr = (join.relay_port != 0)
+            .then(|| SocketAddr::new(peer.ip(), join.relay_port));
+        if let (Some(s), Some(direct)) =
+            (slot, self.deliver_direct.as_mut())
+        {
+            // refills never re-thread the relay tree mid-window: feed
+            // the joiner directly and tell it so (it expects a PLAN
+            // frame under fanout = "tree"); the boundary re-plan may
+            // promote it later
+            direct[s] = true;
+            let n = write_frame(&mut stream, KIND_PLAN, &0u16.to_le_bytes())
+                .map_err(|_| {
+                    anyhow!("worker {s} lost before fanout plan delivery")
+                })?;
+            self.counters.add_raw_downlink(n as u64);
+        }
+        stream.set_nonblocking(true)?;
+        let token = slot.unwrap_or(self.conns.len());
+        self.poller
+            .register(stream.as_raw_fd(), token)
+            .map_err(|e| anyhow!("poller register: {e}"))?;
+        let conn = EvConn::joined(stream, relay_addr);
+        match slot {
+            None => self.conns.push(conn),
+            Some(s) => self.conns[s] = conn,
+        }
+        self.monitor.grow(self.conns.len());
+        Ok(())
+    }
+
+    /// Per-worker PLAN frames and direct flags for `plan` under the
+    /// given placement `order` (tree position `p` is held by worker
+    /// `order[p]`). Vacant slots get no frame — the monitor scores
+    /// them `f64::MAX`-with-`can_relay = false`, so they only ever hold
+    /// leaf positions.
+    fn build_plans(
+        &self,
+        plan: &FanoutPlan,
+        order: &[usize],
+    ) -> Result<(Vec<bool>, Vec<Option<Vec<u8>>>)> {
+        let n = self.conns.len();
+        let mut direct = vec![true; n];
+        let mut frames: Vec<Option<Vec<u8>>> = (0..n).map(|_| None).collect();
+        for pos in 0..n {
+            let worker = order[pos];
+            let parent = plan.parent(pos).map(|pp| order[pp]);
+            direct[worker] = parent.is_none();
+            if self.conns[worker].stream.is_none() {
+                continue;
+            }
+            let n_children = plan.children(pos, n).len() as u16;
+            let mut body: Vec<u8> = n_children.to_le_bytes().to_vec();
+            if let Some(p) = parent {
+                let addr = self.conns[p].relay_addr.ok_or_else(|| {
+                    anyhow!(
+                        "worker {p} advertised no relay listener but \
+                         the fanout tree makes it worker {worker}'s \
+                         parent — all sides must run fanout = \"tree\""
+                    )
+                })?;
+                body.extend_from_slice(addr.to_string().as_bytes());
+            }
+            frames[worker] = Some(build_frame(KIND_PLAN, &body));
+        }
+        Ok((direct, frames))
+    }
+
+    /// Initial relay-tree assignment — see
+    /// [`CoordinatorServer::apply_fanout`]. With an unobserved monitor
+    /// the placement order degenerates to join order, so the first
+    /// plan of a run is identical across `io` modes.
+    pub fn apply_fanout(
+        &mut self,
+        plan: &FanoutPlan,
+        can_relay: &[bool],
+    ) -> Result<()> {
+        let order = self.monitor.order(can_relay);
+        let (direct, frames) = self.build_plans(plan, &order)?;
+        let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
+        let planned: Vec<usize> = frames
+            .iter()
+            .enumerate()
+            .filter_map(|(w, f)| f.is_some().then_some(w))
+            .collect();
+        for (w, frame) in frames.into_iter().enumerate() {
+            if let Some(frame) = frame {
+                self.enqueue_raw(w, Arc::new(frame), deadline);
+            }
+        }
+        let drained = self.flush_writes(deadline);
+        for w in planned {
+            if !drained || self.conns[w].stream.is_none() {
+                return Err(anyhow!(
+                    "worker {w} lost before fanout plan delivery"
+                ));
+            }
+        }
+        self.deliver_direct = Some(direct);
+        self.last_order = Some(order);
+        Ok(())
+    }
+
+    /// Monitor-driven epoch-boundary re-plan: re-sort tree positions by
+    /// the workers' observed round-trip scores and push fresh PLAN
+    /// frames when the order changed. Collapsed (`fallback_direct`)
+    /// edges are reset — the new plan names every worker's feed
+    /// explicitly. A no-op under flat fan-out, before any
+    /// [`Self::apply_fanout`], or when the placement is unchanged.
+    pub fn boundary_replan(
+        &mut self,
+        plan: &FanoutPlan,
+        can_relay: &[bool],
+    ) -> Result<()> {
+        if matches!(plan, FanoutPlan::Flat) || self.deliver_direct.is_none()
+        {
+            return Ok(());
+        }
+        let order = self.monitor.order(can_relay);
+        if self.last_order.as_deref() == Some(order.as_slice()) {
+            return Ok(());
+        }
+        let (direct, frames) = self.build_plans(plan, &order)?;
+        for conn in &mut self.conns {
+            conn.fallback_direct = false;
+            conn.pending_resync = false;
+        }
+        let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
+        for (w, frame) in frames.into_iter().enumerate() {
+            if let Some(frame) = frame {
+                self.enqueue_raw(w, Arc::new(frame), deadline);
+            }
+        }
+        // a worker lost here is closed by the pump and caught by the
+        // next broadcast/collect — a re-plan must not kill the run
+        let _ = self.flush_writes(deadline);
+        self.deliver_direct = Some(direct);
+        self.last_order = Some(order);
+        Ok(())
+    }
+
+    /// Fan one round-`round` message out — see
+    /// [`CoordinatorServer::broadcast`]. Writes are queued and pumped
+    /// opportunistically; [`Self::collect`] keeps pumping until they
+    /// drain.
+    pub fn broadcast(
+        &mut self,
+        round: u64,
+        msg: &WireMessage,
+        expect_reply: &[bool],
+        timeout: Duration,
+    ) -> usize {
+        debug_assert_eq!(expect_reply.len(), self.conns.len());
+        let body = msg.encode();
+        let wire_bytes = body.len() as u64;
+        let frame = Arc::new(build_frame(KIND_MSG, &body));
+        self.cur = Some(CurRound {
+            round,
+            frame: Arc::clone(&frame),
+            wire_bytes,
+            timeout,
+        });
+        let now = Instant::now();
+        let mut expected = 0usize;
+        for i in 0..self.conns.len() {
+            let expect = expect_reply.get(i).copied().unwrap_or(false);
+            let direct_flag = self
+                .deliver_direct
+                .as_ref()
+                .is_none_or(|v| v.get(i).copied().unwrap_or(true));
+            let conn = &mut self.conns[i];
+            if !conn.alive {
+                continue;
+            }
+            if conn.pending_resync && expect {
+                // deferred RESYNC (arrived while no reply was owed):
+                // account and collapse now, exactly when the threaded
+                // path's parked read would have seen it
+                conn.pending_resync = false;
+                conn.fallback_direct = true;
+                self.counters.add_raw_uplink(FRAME_OVERHEAD as u64);
+                eprintln!(
+                    "rosdhb[tcp]: worker {i} lost its relay feed — \
+                     collapsing to direct delivery"
+                );
+            }
+            let deliver = direct_flag || conn.fallback_direct;
+            conn.cur_delivered = deliver;
+            if deliver {
+                conn.wq.push_back(WriteJob {
+                    frame: Arc::clone(&frame),
+                    off: 0,
+                    wire_bytes,
+                });
+                conn.write_deadline = Some(now + timeout);
+            }
+            if expect {
+                conn.expect_round = Some(round);
+                conn.sent_at = Some(now);
+                expected += 1;
+            } else {
+                conn.expect_round = None;
+                conn.sent_at = None;
+            }
+        }
+        // most frames fit the socket buffer in one write
+        self.pump_writes();
+        expected
+    }
+
+    /// Gather up to `n_expected` round-`round` replies — see
+    /// [`CoordinatorServer::collect`]: same deadline grace, same
+    /// stale-reply discard, same suspend-on-miss semantics.
+    pub fn collect(
+        &mut self,
+        n_expected: usize,
+        round: u64,
+        timeout: Duration,
+    ) -> Vec<Reply> {
+        let deadline = Instant::now() + timeout + COLLECT_GRACE;
+        let mut out = Vec::with_capacity(n_expected);
+        loop {
+            for reply in self.pending.drain(..) {
+                if reply.round != round {
+                    eprintln!(
+                        "rosdhb[tcp]: worker {} delivered round {} while \
+                         collecting round {round} — stale reply discarded",
+                        reply.worker, reply.round
+                    );
+                    continue;
+                }
+                out.push(reply);
+            }
+            if out.len() >= n_expected {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            self.pump_writes();
+            self.check_deadlines();
+            let wait = (deadline - now).min(Duration::from_millis(20));
+            let mut ready = std::mem::take(&mut self.ready);
+            if self.poller.wait(wait, &mut ready).is_err() {
+                ready.clear();
+            }
+            for &token in &ready {
+                self.pump_read(token);
+            }
+            self.ready = ready;
+        }
+        out
+    }
+
+    /// Suspend every connection whose owed reply is past the round
+    /// deadline (the threaded runtime's per-read timeout, applied from
+    /// the broadcast timestamp).
+    fn check_deadlines(&mut self) {
+        let timeout = match &self.cur {
+            Some(c) => c.timeout,
+            None => return,
+        };
+        let EvloopServer {
+            conns,
+            pending,
+            poller,
+            ..
+        } = self;
+        for (i, conn) in conns.iter_mut().enumerate() {
+            if !conn.alive {
+                continue;
+            }
+            let Some(r) = conn.expect_round else { continue };
+            if !conn.sent_at.is_some_and(|t| t.elapsed() >= timeout) {
+                continue;
+            }
+            pending.push(Reply {
+                worker: i as u16,
+                round: r,
+                result: Err(format!(
+                    "missed the round deadline ({timeout:?})"
+                )),
+                left: false,
+            });
+            // suspend, don't kill — the socket survives for a later
+            // readmit, deregistered so its buffered catch-up bytes
+            // don't spin the level-triggered poller
+            suspend_conn(poller, conn, i);
+        }
+    }
+
+    /// Drain every connection's write queue as far as the sockets
+    /// allow. A write error (or a queue stalled past its deadline)
+    /// kills the connection; if it owed a reply, an error reply is
+    /// surfaced like the threaded runtime's "send failed".
+    fn pump_writes(&mut self) {
+        let EvloopServer {
+            conns,
+            counters,
+            pending,
+            poller,
+            ..
+        } = self;
+        for (i, conn) in conns.iter_mut().enumerate() {
+            if conn.stream.is_none() || conn.wq.is_empty() {
+                continue;
+            }
+            let mut failed: Option<String> = None;
+            'jobs: while let Some(job) = conn.wq.front_mut() {
+                let stream = conn.stream.as_mut().unwrap();
+                while job.off < job.frame.len() {
+                    match stream.write(&job.frame[job.off..]) {
+                        Ok(0) => {
+                            failed = Some("write returned 0".into());
+                            break 'jobs;
+                        }
+                        Ok(n) => job.off += n,
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                            if conn
+                                .write_deadline
+                                .is_some_and(|d| Instant::now() >= d)
+                            {
+                                failed = Some(
+                                    "write stalled past the deadline"
+                                        .into(),
+                                );
+                            }
+                            break 'jobs;
+                        }
+                        Err(e)
+                            if e.kind() == ErrorKind::Interrupted => {}
+                        Err(e) => {
+                            failed = Some(e.to_string());
+                            break 'jobs;
+                        }
+                    }
+                }
+                counters.add_raw_downlink(job.frame.len() as u64);
+                counters.add_wire_downlink(job.wire_bytes);
+                conn.wq.pop_front();
+            }
+            if conn.wq.is_empty() {
+                conn.write_deadline = None;
+            }
+            if let Some(reason) = failed {
+                if let Some(r) = conn.expect_round.take() {
+                    pending.push(Reply {
+                        worker: i as u16,
+                        round: r,
+                        result: Err(format!("send failed: {reason}")),
+                        left: false,
+                    });
+                }
+                close_conn(poller, conn, i);
+            }
+        }
+    }
+
+    /// Sleep-pump until every write queue drains or `deadline` passes.
+    fn flush_writes(&mut self, deadline: Instant) -> bool {
+        loop {
+            self.pump_writes();
+            if self.conns.iter().all(|c| c.wq.is_empty()) {
+                return true;
+            }
+            if Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    /// Drain one ready connection: reassemble and handle every frame
+    /// its socket currently holds.
+    fn pump_read(&mut self, i: usize) {
+        loop {
+            let polled = {
+                let Some(conn) = self.conns.get_mut(i) else { return };
+                if !conn.alive || !conn.registered {
+                    // scan-fallback pollers over-approximate readiness;
+                    // suspended sockets must stay unread (their bytes
+                    // are catch-up traffic for a future readmit)
+                    return;
+                }
+                let Some(stream) = conn.stream.as_mut() else { return };
+                conn.reader.poll(stream)
+            };
+            match polled {
+                Ok(Some(frame)) => {
+                    if !self.handle_frame(i, frame) {
+                        return;
+                    }
+                }
+                Ok(None) => return,
+                Err(e) => {
+                    self.read_error(i, e);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Dispatch one reassembled frame from worker `i`. Returns `false`
+    /// when the connection was closed (stop pumping it).
+    fn handle_frame(&mut self, i: usize, frame: Frame) -> bool {
+        let cur = self
+            .cur
+            .as_ref()
+            .map(|c| (Arc::clone(&c.frame), c.wire_bytes, c.timeout));
+        let EvloopServer {
+            conns,
+            counters,
+            pending,
+            monitor,
+            poller,
+            ..
+        } = self;
+        let conn = &mut conns[i];
+        match frame {
+            Frame::Grad { loss, wire } => {
+                counters.add_raw_uplink(
+                    (FRAME_OVERHEAD + GRAD_ENVELOPE + wire.len()) as u64,
+                );
+                counters.add_wire_uplink(wire.len() as u64);
+                // the round field of the uplinked WireMessage leads its
+                // header
+                let wire_round = wire.get(0..8).map_or(u64::MAX, |b| {
+                    u64::from_le_bytes(b.try_into().unwrap())
+                });
+                let left = std::mem::take(&mut conn.leaving);
+                if let Some(r) = conn.expect_round {
+                    if wire_round >= r {
+                        // an earlier-round uplink is catch-up traffic a
+                        // suspension left in the socket buffer: keep
+                        // expecting until this round's reply arrives
+                        if wire_round == r {
+                            if let Some(t0) = conn.sent_at {
+                                monitor.observe(i, t0.elapsed());
+                            }
+                        }
+                        conn.expect_round = None;
+                        conn.sent_at = None;
+                    }
+                }
+                pending.push(Reply {
+                    worker: i as u16,
+                    round: wire_round,
+                    result: Ok((loss, wire)),
+                    left,
+                });
+                true
+            }
+            Frame::Ctl {
+                kind: KIND_LEAVE,
+                body,
+            } => {
+                counters
+                    .add_raw_uplink((FRAME_OVERHEAD + body.len()) as u64);
+                conn.leaving = true;
+                true
+            }
+            Frame::Ctl {
+                kind: KIND_RESYNC,
+                body,
+            } => {
+                if conn.expect_round.is_none() {
+                    // defer — see `EvConn::pending_resync`
+                    conn.pending_resync = true;
+                    return true;
+                }
+                counters
+                    .add_raw_uplink((FRAME_OVERHEAD + body.len()) as u64);
+                eprintln!(
+                    "rosdhb[tcp]: worker {i} lost its relay feed — \
+                     collapsing to direct delivery"
+                );
+                let redeliver = !conn.fallback_direct && !conn.cur_delivered;
+                conn.fallback_direct = true;
+                if redeliver {
+                    if let Some((frame, wire_bytes, timeout)) = cur {
+                        // the tree was supposed to carry this round's
+                        // frame: re-send it directly
+                        conn.cur_delivered = true;
+                        conn.wq.push_back(WriteJob {
+                            frame,
+                            off: 0,
+                            wire_bytes,
+                        });
+                        conn.write_deadline =
+                            Some(Instant::now() + timeout);
+                    }
+                }
+                true
+            }
+            Frame::Ctl { kind, .. } => {
+                if let Some(r) = conn.expect_round.take() {
+                    pending.push(Reply {
+                        worker: i as u16,
+                        round: r,
+                        result: Err(format!(
+                            "protocol violation: expected GRAD, got kind \
+                             {kind}"
+                        )),
+                        left: false,
+                    });
+                }
+                close_conn(poller, conn, i);
+                false
+            }
+        }
+    }
+
+    fn read_error(&mut self, i: usize, e: io::Error) {
+        let EvloopServer {
+            conns,
+            pending,
+            poller,
+            ..
+        } = self;
+        let conn = &mut conns[i];
+        if let Some(r) = conn.expect_round.take() {
+            pending.push(Reply {
+                worker: i as u16,
+                round: r,
+                result: Err(format!("connection lost: {e}")),
+                left: false,
+            });
+        }
+        close_conn(poller, conn, i);
+    }
+
+    fn enqueue_raw(
+        &mut self,
+        worker: usize,
+        frame: Arc<Vec<u8>>,
+        deadline: Instant,
+    ) {
+        let Some(conn) = self.conns.get_mut(worker) else { return };
+        if conn.stream.is_none() {
+            return;
+        }
+        conn.wq.push_back(WriteJob {
+            frame,
+            off: 0,
+            wire_bytes: 0,
+        });
+        conn.write_deadline =
+            Some(conn.write_deadline.map_or(deadline, |d| d.max(deadline)));
+    }
+
+    pub fn n_alive(&self) -> usize {
+        self.conns.iter().filter(|c| c.alive).count()
+    }
+
+    /// Mark a worker dead for broadcasts — see
+    /// [`CoordinatorServer::evict`]. The socket survives (suspended)
+    /// so a later readmit can lift the eviction.
+    pub fn evict(&mut self, worker: usize) {
+        let EvloopServer { conns, poller, .. } = self;
+        if let Some(conn) = conns.get_mut(worker) {
+            suspend_conn(poller, conn, worker);
+        }
+    }
+
+    pub fn is_alive(&self, worker: usize) -> bool {
+        self.conns.get(worker).is_some_and(|c| c.alive)
+    }
+
+    /// Lift a deadline suspension — see
+    /// [`CoordinatorServer::readmit`]. Re-registers the surviving
+    /// socket with the poller.
+    pub fn readmit(&mut self, worker: usize) -> bool {
+        let Some(conn) = self.conns.get_mut(worker) else {
+            return false;
+        };
+        if conn.stream.is_none() {
+            return false;
+        }
+        if !conn.registered {
+            let fd = conn.stream.as_ref().unwrap().as_raw_fd();
+            if self.poller.register(fd, worker).is_err() {
+                return false;
+            }
+            conn.registered = true;
+        }
+        conn.alive = true;
+        true
+    }
+
+    /// Permanently release a slot's connection — see
+    /// [`CoordinatorServer::detach`]. The slot entry stays, vacant,
+    /// ready for [`Self::reopen_rendezvous`] to re-fill it.
+    pub fn detach(&mut self, worker: usize) {
+        if self
+            .conns
+            .get(worker)
+            .is_none_or(|c| c.stream.is_none())
+        {
+            return;
+        }
+        let deadline = Instant::now() + Duration::from_secs(2);
+        self.enqueue_raw(
+            worker,
+            Arc::new(build_frame(KIND_BYE, &[])),
+            deadline,
+        );
+        let _ = self.flush_writes(deadline);
+        let EvloopServer { conns, poller, .. } = self;
+        close_conn(poller, &mut conns[worker], worker);
+    }
+
+    /// Send `BYE` everywhere and close every socket.
+    pub fn shutdown(&mut self) {
+        let bye = Arc::new(build_frame(KIND_BYE, &[]));
+        let deadline = Instant::now() + Duration::from_secs(2);
+        for i in 0..self.conns.len() {
+            self.enqueue_raw(i, Arc::clone(&bye), deadline);
+        }
+        let _ = self.flush_writes(deadline);
+        let EvloopServer { conns, poller, .. } = self;
+        for (i, conn) in conns.iter_mut().enumerate() {
+            close_conn(poller, conn, i);
+        }
+    }
+}
+
+impl Drop for EvloopServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// -------------------------------------------------------------- facade
+
+/// The coordinator transport behind the `io` config key: the threaded
+/// runtime (`io = "threads"`, the bit-parity oracle) or the event loop
+/// (`io = "evloop"`). Both speak the identical wire protocol; flat
+/// fan-out interoperates freely across modes, `fanout = "tree"`
+/// requires both sides on the same mode (only the event loop re-plans
+/// mid-run).
+pub enum ServerIo {
+    Threads(CoordinatorServer),
+    Evloop(EvloopServer),
+}
+
+impl From<CoordinatorServer> for ServerIo {
+    fn from(s: CoordinatorServer) -> Self {
+        ServerIo::Threads(s)
+    }
+}
+
+macro_rules! forward {
+    ($self:expr, $s:ident => $e:expr) => {
+        match $self {
+            ServerIo::Threads($s) => $e,
+            ServerIo::Evloop($s) => $e,
+        }
+    };
+}
+
+impl ServerIo {
+    /// Bind the rendezvous socket under the given `io` mode.
+    pub fn bind(addr: &str, io: &str) -> Result<Self> {
+        match io {
+            "threads" => Ok(ServerIo::Threads(CoordinatorServer::bind(addr)?)),
+            "evloop" => Ok(ServerIo::Evloop(EvloopServer::bind(addr)?)),
+            other => Err(anyhow!("unknown io mode '{other}' (threads|evloop)")),
+        }
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        forward!(self, s => s.local_addr())
+    }
+
+    pub fn n_workers(&self) -> usize {
+        forward!(self, s => s.n_workers())
+    }
+
+    pub fn stats(&self) -> NetStats {
+        forward!(self, s => s.stats())
+    }
+
+    pub fn preseed_stats(&self, st: NetStats) {
+        forward!(self, s => s.preseed_stats(st))
+    }
+
+    pub fn rendezvous(
+        &mut self,
+        expected: usize,
+        fingerprint: u64,
+        timeout: Duration,
+    ) -> Result<()> {
+        forward!(self, s => s.rendezvous(expected, fingerprint, timeout))
+    }
+
+    pub fn rendezvous_slots(
+        &mut self,
+        n_total: usize,
+        slots: &[usize],
+        fingerprint: u64,
+        timeout: Duration,
+    ) -> Result<()> {
+        forward!(self, s => s.rendezvous_slots(n_total, slots, fingerprint, timeout))
+    }
+
+    pub fn reopen_rendezvous(
+        &mut self,
+        slots: &[usize],
+        fingerprint: u64,
+        timeout: Duration,
+    ) -> Result<()> {
+        forward!(self, s => s.reopen_rendezvous(slots, fingerprint, timeout))
+    }
+
+    pub fn apply_fanout(
+        &mut self,
+        plan: &FanoutPlan,
+        can_relay: &[bool],
+    ) -> Result<()> {
+        forward!(self, s => s.apply_fanout(plan, can_relay))
+    }
+
+    /// Monitor-driven boundary re-plan; a no-op on the threaded
+    /// runtime, which keeps its join-order placement for the whole run
+    /// (that is what makes it the placement oracle).
+    pub fn boundary_replan(
+        &mut self,
+        plan: &FanoutPlan,
+        can_relay: &[bool],
+    ) -> Result<()> {
+        match self {
+            ServerIo::Threads(_) => Ok(()),
+            ServerIo::Evloop(s) => s.boundary_replan(plan, can_relay),
+        }
+    }
+
+    pub fn broadcast(
+        &mut self,
+        round: u64,
+        msg: &WireMessage,
+        expect_reply: &[bool],
+        timeout: Duration,
+    ) -> usize {
+        forward!(self, s => s.broadcast(round, msg, expect_reply, timeout))
+    }
+
+    pub fn collect(
+        &mut self,
+        n_expected: usize,
+        round: u64,
+        timeout: Duration,
+    ) -> Vec<Reply> {
+        forward!(self, s => s.collect(n_expected, round, timeout))
+    }
+
+    pub fn n_alive(&self) -> usize {
+        forward!(self, s => s.n_alive())
+    }
+
+    pub fn evict(&mut self, worker: usize) {
+        forward!(self, s => s.evict(worker))
+    }
+
+    pub fn is_alive(&self, worker: usize) -> bool {
+        forward!(self, s => s.is_alive(worker))
+    }
+
+    pub fn readmit(&mut self, worker: usize) -> bool {
+        forward!(self, s => s.readmit(worker))
+    }
+
+    pub fn detach(&mut self, worker: usize) {
+        forward!(self, s => s.detach(worker))
+    }
+
+    pub fn shutdown(&mut self) {
+        forward!(self, s => s.shutdown())
+    }
+}
+
+// --------------------------------------------------------- worker feed
+
+/// Dial a parent relay (its listener is bound pre-JOIN, so a short
+/// retry only papers over accept-backlog churn) and switch the feed
+/// socket to nonblocking. `None` = the parent never answered; the
+/// caller's grace timer turns that into a RESYNC.
+fn dial_parent(addr: &str) -> Option<TcpStream> {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                s.set_nodelay(true).ok();
+                return s.set_nonblocking(true).is_ok().then_some(s);
+            }
+            Err(_) if Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(50))
+            }
+            Err(_) => return None,
+        }
+    }
+}
+
+/// Worker-side downlink multiplexer under `io = "evloop"` — the
+/// event-loop counterpart of [`TreeFeed`][super::net::TreeFeed], on a
+/// single thread: one loop pumps the direct coordinator connection,
+/// the optional parent relay feed, and this worker's relay children.
+///
+/// Differences from the threaded feed, both monitor-driven and both
+/// delivery-path-only:
+///
+/// * **Stall detection** — a [`GapMonitor`] tracks the parent's
+///   inter-frame gaps; a silence exceeding the learned threshold
+///   triggers the RESYNC *before* the round deadline, so a stalled
+///   (not crashed) relay no longer costs its subtree the round.
+/// * **Re-planning** — the [`RelayHub`] listener stays open for the
+///   whole run, so an epoch-boundary PLAN can assign new children; a
+///   dead parent edge waits [`PLAN_GRACE`] for such a PLAN before
+///   resyncing, which keeps coordinator-initiated re-plans from
+///   masquerading as relay failures.
+pub struct EvFeed {
+    direct: TcpStream,
+    rd_direct: FrameReader,
+    parent: Option<TcpStream>,
+    rd_parent: FrameReader,
+    listener: TcpListener,
+    children: Vec<TcpStream>,
+    pending_children: usize,
+    accept_deadline: Instant,
+    gap: GapMonitor,
+    last_parent_frame: Instant,
+    parent_down_at: Option<Instant>,
+    resynced: bool,
+    resyncs: u32,
+    relayed_wire: u64,
+    relayed_raw: u64,
+    /// Test hook: when this worker relays round `.0`, sleep `.1`
+    /// before forwarding — a fault injection for the stalled-relay
+    /// regression test, delivery-timing-only by construction.
+    stall: Option<(u64, Duration)>,
+    worker_id: u16,
+}
+
+impl EvFeed {
+    pub(crate) fn start(
+        client: WorkerClient,
+        hub: RelayHub,
+        n_children: usize,
+        parent: Option<&str>,
+        stall: Option<(u64, Duration)>,
+    ) -> Result<Self> {
+        let worker_id = client.worker_id;
+        let (direct, _, _) = client.into_parts();
+        direct.set_nonblocking(true)?;
+        let listener = hub.into_listener();
+        listener.set_nonblocking(true)?;
+        let parent_stream = parent.and_then(dial_parent);
+        let parent_down_at = (parent.is_some() && parent_stream.is_none())
+            .then(Instant::now);
+        Ok(EvFeed {
+            direct,
+            rd_direct: FrameReader::new(false),
+            parent: parent_stream,
+            rd_parent: FrameReader::new(false),
+            listener,
+            children: Vec::with_capacity(n_children),
+            pending_children: n_children,
+            accept_deadline: Instant::now() + HANDSHAKE_TIMEOUT,
+            gap: GapMonitor::new(),
+            last_parent_frame: Instant::now(),
+            parent_down_at,
+            resynced: false,
+            resyncs: 0,
+            relayed_wire: 0,
+            relayed_raw: 0,
+            stall,
+            worker_id,
+        })
+    }
+
+    /// Block for the next downlink message (`Ok(None)` = clean `BYE`),
+    /// accepting children, forwarding frames, and running the stall
+    /// and parent-loss detectors along the way.
+    pub fn recv(&mut self, d: usize) -> Result<Option<WireMessage>> {
+        loop {
+            // 1. child accept phase — runs to completion before any
+            // frame is pumped, so no broadcast can race past an
+            // un-accepted child (same guarantee as TreeFeed::start)
+            if self.pending_children > 0 {
+                match self.listener.accept() {
+                    Ok((s, _)) => {
+                        s.set_nodelay(true).ok();
+                        s.set_write_timeout(Some(RELAY_WRITE_TIMEOUT)).ok();
+                        self.children.push(s);
+                        self.pending_children -= 1;
+                    }
+                    Err(e) if is_timeout(&e) => {
+                        if Instant::now() >= self.accept_deadline {
+                            eprintln!(
+                                "rosdhb[tree]: only {}/{} relay children \
+                                 connected before the deadline",
+                                self.children.len(),
+                                self.children.len() + self.pending_children
+                            );
+                            self.pending_children = 0;
+                        } else {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                    }
+                    Err(e) => return Err(anyhow!("relay accept: {e}")),
+                }
+                continue;
+            }
+            let mut progress = false;
+            // 2. parent relay feed
+            if self.parent.is_some() {
+                let polled = self
+                    .rd_parent
+                    .poll(self.parent.as_mut().unwrap());
+                match polled {
+                    Ok(Some(Frame::Ctl {
+                        kind: KIND_MSG,
+                        body,
+                    })) => {
+                        let now = Instant::now();
+                        self.gap.observe(
+                            now.duration_since(self.last_parent_frame),
+                        );
+                        self.last_parent_frame = now;
+                        self.stall_hook(&body);
+                        self.forward(&body);
+                        let msg = WireMessage::decode(&body, d)
+                            .map_err(|e| anyhow!("bad downlink frame: {e}"))?;
+                        return Ok(Some(msg));
+                    }
+                    // relays forward only MSG frames; anything else is
+                    // noise from a confused peer
+                    Ok(Some(_)) => progress = true,
+                    Ok(None) => {}
+                    Err(_) => {
+                        self.parent = None;
+                        self.parent_down_at = Some(Instant::now());
+                        progress = true;
+                    }
+                }
+            }
+            // 3. stall / loss detection
+            if !self.resynced {
+                let stalled = self.parent.is_some()
+                    && self.gap.stalled(self.last_parent_frame.elapsed());
+                let dead = self.parent.is_none()
+                    && self
+                        .parent_down_at
+                        .is_some_and(|t| t.elapsed() >= PLAN_GRACE);
+                if stalled || dead {
+                    self.trigger_resync(stalled);
+                }
+            }
+            // 4. direct coordinator feed
+            let polled = self.rd_direct.poll(&mut self.direct);
+            match polled {
+                Ok(Some(Frame::Ctl {
+                    kind: KIND_MSG,
+                    body,
+                })) => {
+                    self.stall_hook(&body);
+                    self.forward(&body);
+                    let msg = WireMessage::decode(&body, d)
+                        .map_err(|e| anyhow!("bad downlink frame: {e}"))?;
+                    return Ok(Some(msg));
+                }
+                Ok(Some(Frame::Ctl {
+                    kind: KIND_BYE, ..
+                })) => {
+                    self.children.clear();
+                    return Ok(None);
+                }
+                Ok(Some(Frame::Ctl {
+                    kind: KIND_PLAN,
+                    body,
+                })) => {
+                    self.replan(&body)?;
+                    continue;
+                }
+                Ok(Some(Frame::Ctl { kind, .. })) => {
+                    return Err(anyhow!(
+                        "unexpected downlink frame kind {kind}"
+                    ))
+                }
+                Ok(Some(Frame::Grad { .. })) => {
+                    unreachable!("reader built with split_grad = false")
+                }
+                Ok(None) => {}
+                Err(e) => {
+                    return Err(anyhow!("coordinator connection lost: {e}"))
+                }
+            }
+            if !progress {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+    }
+
+    /// Re-plan from a mid-run PLAN frame: adopt the new child count and
+    /// parent feed, reset the stall monitor, and re-arm the accept
+    /// phase. Old children see EOF and wait out their own PLAN's grace.
+    fn replan(&mut self, body: &[u8]) -> Result<()> {
+        if body.len() < 2 {
+            return Err(anyhow!(
+                "malformed PLAN frame ({} bytes)",
+                body.len()
+            ));
+        }
+        let n_children = u16::from_le_bytes([body[0], body[1]]) as usize;
+        let parent = (body.len() > 2)
+            .then(|| String::from_utf8_lossy(&body[2..]).into_owned());
+        self.children.clear();
+        self.pending_children = n_children;
+        self.accept_deadline = Instant::now() + HANDSHAKE_TIMEOUT;
+        self.parent = parent.as_deref().and_then(dial_parent);
+        self.rd_parent = FrameReader::new(false);
+        self.gap = GapMonitor::new();
+        self.resynced = false;
+        self.parent_down_at = (parent.is_some() && self.parent.is_none())
+            .then(Instant::now);
+        self.last_parent_frame = Instant::now();
+        Ok(())
+    }
+
+    fn trigger_resync(&mut self, stalled: bool) {
+        self.resynced = true;
+        self.resyncs += 1;
+        eprintln!(
+            "rosdhb[tree]: worker {} {} — resyncing to direct delivery",
+            self.worker_id,
+            if stalled {
+                "relay feed stalled past the gap-monitor threshold"
+            } else {
+                "lost its relay feed"
+            }
+        );
+        let frame = build_frame(KIND_RESYNC, &[]);
+        // a failed RESYNC means the coordinator is gone too — the
+        // direct pump will surface that
+        if let Err(e) = write_all_nb(
+            &mut self.direct,
+            &frame,
+            Instant::now() + RELAY_WRITE_TIMEOUT,
+        ) {
+            eprintln!("rosdhb[tree]: resync send failed: {e}");
+        }
+    }
+
+    /// Re-forward one downlink body to every connected child, dropping
+    /// dead children (they collapse to direct delivery via their own
+    /// `RESYNC`).
+    fn forward(&mut self, body: &[u8]) {
+        if self.children.is_empty() {
+            return;
+        }
+        let frame = build_frame(KIND_MSG, body);
+        let (mut raw, mut wire) = (0u64, 0u64);
+        self.children.retain_mut(|s| {
+            match s.write_all(&frame).and_then(|_| s.flush()) {
+                Ok(()) => {
+                    raw += frame.len() as u64;
+                    wire += body.len() as u64;
+                    true
+                }
+                Err(_) => false,
+            }
+        });
+        self.relayed_raw += raw;
+        self.relayed_wire += wire;
+    }
+
+    fn stall_hook(&self, body: &[u8]) {
+        if let Some((round, delay)) = self.stall {
+            let frame_round = body.get(0..8).map_or(u64::MAX, |b| {
+                u64::from_le_bytes(b.try_into().unwrap())
+            });
+            if frame_round == round {
+                std::thread::sleep(delay);
+            }
+        }
+    }
+
+    /// Ship this round's contribution over the direct connection.
+    pub fn send_grad(&mut self, loss: f32, msg: &WireMessage) -> Result<()> {
+        let encoded = msg.encode();
+        let mut body = Vec::with_capacity(GRAD_ENVELOPE + encoded.len());
+        body.extend_from_slice(&loss.to_le_bytes());
+        body.extend_from_slice(&encoded);
+        let frame = build_frame(KIND_GRAD, &body);
+        write_all_nb(
+            &mut self.direct,
+            &frame,
+            Instant::now() + NB_WRITE_TIMEOUT,
+        )
+        .map_err(|e| anyhow!("grad send: {e}"))
+    }
+
+    /// Announce a graceful leave (followed by the final `send_grad`).
+    pub fn send_leave(&mut self, round: u64, worker: u16) -> Result<()> {
+        let frame = build_frame(
+            KIND_LEAVE,
+            &WireMessage::Leave { round, worker }.encode(),
+        );
+        write_all_nb(
+            &mut self.direct,
+            &frame,
+            Instant::now() + NB_WRITE_TIMEOUT,
+        )
+        .map_err(|e| anyhow!("leave send: {e}"))
+    }
+
+    /// Wire/raw bytes this worker re-forwarded to its tree children.
+    pub fn relayed(&self) -> (u64, u64) {
+        (self.relayed_wire, self.relayed_raw)
+    }
+
+    /// How many times this feed collapsed to direct delivery (stall or
+    /// parent loss).
+    pub fn resyncs(&self) -> u32 {
+        self.resyncs
+    }
+}
+
+// --------------------------------------------------------- bench swarm
+
+/// Drive `n` loopback workers from **one** thread: connect and
+/// handshake each, then answer every broadcast with a fixed payload
+/// until `BYE`. Returns the total replies sent. This is the harness
+/// behind the n ≥ 1000 scaling stage of `bench_transport`: the
+/// threaded transport would need ~2·n OS threads for the same matrix,
+/// the event loop needs two (this swarm plus the caller).
+pub fn spawn_reply_swarm(
+    addr: String,
+    fingerprint: u64,
+    n: usize,
+    payload: Payload,
+    retry: Duration,
+) -> JoinHandle<Result<u64>> {
+    std::thread::spawn(move || {
+        let mut poller = Poller::new().map_err(|e| anyhow!("poller: {e}"))?;
+        let mut socks: Vec<TcpStream> = Vec::with_capacity(n);
+        let mut readers: Vec<FrameReader> = Vec::with_capacity(n);
+        let mut ids: Vec<u16> = Vec::with_capacity(n);
+        for i in 0..n {
+            let client = WorkerClient::connect(&addr, fingerprint, retry)?;
+            let (stream, id, _) = client.into_parts();
+            stream.set_nonblocking(true)?;
+            poller
+                .register(stream.as_raw_fd(), i)
+                .map_err(|e| anyhow!("register: {e}"))?;
+            socks.push(stream);
+            readers.push(FrameReader::new(false));
+            ids.push(id);
+        }
+        let mut done = vec![false; n];
+        let mut n_done = 0usize;
+        let mut replies = 0u64;
+        let mut ready = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(600);
+        while n_done < n {
+            if Instant::now() >= deadline {
+                return Err(anyhow!(
+                    "reply swarm timed out with {}/{n} sockets open",
+                    n - n_done
+                ));
+            }
+            poller
+                .wait(Duration::from_millis(20), &mut ready)
+                .map_err(|e| anyhow!("poller wait: {e}"))?;
+            for &i in &ready {
+                if i >= n || done[i] {
+                    continue;
+                }
+                loop {
+                    match readers[i].poll(&mut socks[i]) {
+                        Ok(Some(Frame::Ctl {
+                            kind: KIND_MSG,
+                            body,
+                        })) => {
+                            let round =
+                                body.get(0..8).map_or(0, |b| {
+                                    u64::from_le_bytes(
+                                        b.try_into().unwrap(),
+                                    )
+                                });
+                            let msg = WireMessage::Grad {
+                                round,
+                                worker: ids[i],
+                                payload: payload.clone(),
+                            };
+                            let encoded = msg.encode();
+                            let mut gbody = Vec::with_capacity(
+                                GRAD_ENVELOPE + encoded.len(),
+                            );
+                            gbody.extend_from_slice(&0f32.to_le_bytes());
+                            gbody.extend_from_slice(&encoded);
+                            let frame = build_frame(KIND_GRAD, &gbody);
+                            write_all_nb(
+                                &mut socks[i],
+                                &frame,
+                                Instant::now() + NB_WRITE_TIMEOUT,
+                            )?;
+                            replies += 1;
+                        }
+                        Ok(Some(Frame::Ctl {
+                            kind: KIND_BYE, ..
+                        }))
+                        | Err(_) => {
+                            done[i] = true;
+                            n_done += 1;
+                            let _ = poller
+                                .deregister(socks[i].as_raw_fd(), i);
+                            break;
+                        }
+                        // PLAN and friends: a swarm worker ignores them
+                        Ok(Some(_)) => {}
+                        Ok(None) => break,
+                    }
+                }
+            }
+        }
+        Ok(replies)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    const FP: u64 = 0x5eed;
+
+    fn dense_grad(round: u64, worker: u16, tag: f32) -> (f32, WireMessage) {
+        (
+            tag,
+            WireMessage::Grad {
+                round,
+                worker,
+                payload: Payload::Dense {
+                    values: vec![tag; 16],
+                },
+            },
+        )
+    }
+
+    #[test]
+    fn frame_reader_reassembles_dribbled_frames() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = thread::spawn(move || {
+            let mut c = TcpStream::connect(addr).unwrap();
+            // a GRAD frame (loss envelope + wire bytes) and a control
+            // frame, dribbled one byte at a time
+            let mut body = 0.25f32.to_le_bytes().to_vec();
+            body.extend_from_slice(&7u64.to_le_bytes());
+            body.extend_from_slice(b"wire");
+            let mut all = build_frame(KIND_GRAD, &body);
+            all.extend_from_slice(&build_frame(KIND_RESYNC, &[]));
+            for b in all {
+                c.write_all(&[b]).unwrap();
+                c.flush().unwrap();
+            }
+            c
+        });
+        let (mut s, _) = listener.accept().unwrap();
+        s.set_nonblocking(true).unwrap();
+        let mut reader = FrameReader::new(true);
+        let mut frames = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while frames.len() < 2 && Instant::now() < deadline {
+            match reader.poll(&mut s) {
+                Ok(Some(f)) => frames.push(f),
+                Ok(None) => thread::sleep(Duration::from_millis(1)),
+                Err(e) => panic!("reader error: {e}"),
+            }
+        }
+        let _keep_open = writer.join().unwrap();
+        assert_eq!(frames.len(), 2);
+        match &frames[0] {
+            Frame::Grad { loss, wire } => {
+                assert_eq!(*loss, 0.25);
+                let mut expect = 7u64.to_le_bytes().to_vec();
+                expect.extend_from_slice(b"wire");
+                assert_eq!(wire, &expect);
+            }
+            Frame::Ctl { .. } => panic!("expected split GRAD"),
+        }
+        match &frames[1] {
+            Frame::Ctl { kind, body } => {
+                assert_eq!(*kind, KIND_RESYNC);
+                assert!(body.is_empty());
+            }
+            Frame::Grad { .. } => panic!("expected control frame"),
+        }
+    }
+
+    #[test]
+    fn evloop_round_trip_matches_threaded_accounting() {
+        let mut server = EvloopServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let worker = thread::spawn(move || {
+            let mut c =
+                WorkerClient::connect(&addr, FP, Duration::from_secs(5))
+                    .unwrap();
+            while let Some(msg) = c.recv(16).unwrap() {
+                let round = match msg {
+                    WireMessage::ModelBroadcastPlain { round, .. } => round,
+                    other => panic!("unexpected {other:?}"),
+                };
+                let (loss, grad) = dense_grad(round, c.worker_id, 1.5);
+                c.send_grad(loss, &grad).unwrap();
+            }
+        });
+        server.rendezvous(1, FP, Duration::from_secs(10)).unwrap();
+        let msg = WireMessage::ModelBroadcastPlain {
+            round: 1,
+            params: vec![0.0; 16],
+        };
+        let n = server.broadcast(1, &msg, &[true], Duration::from_secs(5));
+        assert_eq!(n, 1);
+        let replies = server.collect(n, 1, Duration::from_secs(5));
+        assert_eq!(replies.len(), 1);
+        let (loss, bytes) = replies[0].result.as_ref().unwrap();
+        assert_eq!(*loss, 1.5);
+        let up = WireMessage::decode(bytes, 16).unwrap();
+        assert!(matches!(up, WireMessage::Grad { round: 1, .. }));
+        // byte accounting identical to the threaded server's model:
+        // wire = exactly encoded_len per direction, raw strictly larger
+        let stats = server.stats();
+        assert_eq!(stats.wire_downlink, msg.encoded_len() as u64);
+        assert_eq!(stats.wire_uplink, up.encoded_len() as u64);
+        assert!(stats.raw_downlink > stats.wire_downlink);
+        assert!(stats.raw_uplink > stats.wire_uplink);
+        server.shutdown();
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn evloop_silent_worker_suspends_not_hangs() {
+        let mut server = EvloopServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let (stop_tx, stop_rx) = std::sync::mpsc::channel::<()>();
+        let worker = thread::spawn(move || {
+            let _c =
+                WorkerClient::connect(&addr, FP, Duration::from_secs(5))
+                    .unwrap();
+            let _ = stop_rx.recv();
+        });
+        server.rendezvous(1, FP, Duration::from_secs(10)).unwrap();
+        let msg = WireMessage::ModelBroadcastPlain {
+            round: 1,
+            params: vec![0.0; 4],
+        };
+        let t0 = Instant::now();
+        let n =
+            server.broadcast(1, &msg, &[true], Duration::from_millis(300));
+        let replies = server.collect(n, 1, Duration::from_millis(300));
+        assert!(t0.elapsed() < Duration::from_secs(10));
+        assert_eq!(replies.len(), 1);
+        let err = replies[0].result.as_ref().unwrap_err();
+        assert!(err.contains("deadline"), "{err}");
+        // suspended: the next broadcast expects nothing from it, but
+        // the socket survives and a readmit lifts the suspension
+        let n =
+            server.broadcast(2, &msg, &[true], Duration::from_millis(300));
+        assert_eq!(n, 0);
+        assert!(server.readmit(0));
+        assert!(server.is_alive(0));
+        stop_tx.send(()).unwrap();
+        server.shutdown();
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn evloop_detach_then_refill_round_trips() {
+        let mut server = EvloopServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let spawn_worker = |addr: String, rounds: usize| {
+            thread::spawn(move || {
+                let mut c = WorkerClient::connect(
+                    &addr,
+                    FP,
+                    Duration::from_secs(10),
+                )
+                .unwrap();
+                let mut seen = 0usize;
+                while seen < rounds {
+                    match c.recv(16).unwrap() {
+                        Some(WireMessage::ModelBroadcastPlain {
+                            round,
+                            ..
+                        }) => {
+                            seen += 1;
+                            let (loss, grad) =
+                                dense_grad(round, c.worker_id, 2.0);
+                            c.send_grad(loss, &grad).unwrap();
+                        }
+                        Some(other) => panic!("unexpected {other:?}"),
+                        None => return c.worker_id,
+                    }
+                }
+                let _ = c.recv(16); // BYE
+                c.worker_id
+            })
+        };
+        let w0 = spawn_worker(addr.clone(), 2);
+        let w1 = spawn_worker(addr.clone(), 1);
+        server.rendezvous(2, FP, Duration::from_secs(10)).unwrap();
+        let msg = |round| WireMessage::ModelBroadcastPlain {
+            round,
+            params: vec![0.0; 16],
+        };
+        let n = server.broadcast(
+            1,
+            &msg(1),
+            &[true, true],
+            Duration::from_secs(5),
+        );
+        assert_eq!(server.collect(n, 1, Duration::from_secs(5)).len(), 2);
+        // churn: drop slot 1, refill it through the reopened window —
+        // the window is rendezvous-scale but must close early
+        server.detach(1);
+        let w2 = spawn_worker(addr.clone(), 1);
+        let t0 = Instant::now();
+        server
+            .reopen_rendezvous(&[1], FP, Duration::from_secs(120))
+            .unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "reopen window failed to close early: {:?}",
+            t0.elapsed()
+        );
+        let n = server.broadcast(
+            2,
+            &msg(2),
+            &[true, true],
+            Duration::from_secs(5),
+        );
+        let replies = server.collect(n, 2, Duration::from_secs(5));
+        assert_eq!(replies.len(), 2);
+        assert!(replies.iter().all(|r| r.result.is_ok()));
+        server.shutdown();
+        assert_eq!(w0.join().unwrap(), 0);
+        assert_eq!(w1.join().unwrap(), 1);
+        assert_eq!(w2.join().unwrap(), 1); // refill re-assigns the slot id
+    }
+}

@@ -27,10 +27,19 @@
 //! The format is no longer simulation-only: [`WireMessage::decode`] is the
 //! exact inverse of [`WireMessage::encode`], and [`net`] runs the same
 //! bytes over blocking TCP (length-prefixed frames) for the
-//! `transport = "tcp"` coordinator/worker runtime.
+//! `transport = "tcp"` coordinator/worker runtime. The same frames can
+//! instead be driven by a readiness-based event loop ([`evloop`],
+//! `io = "evloop"`): one thread per process, nonblocking sockets, and a
+//! connection [`monitor`] whose latency/gap estimates steer relay-tree
+//! placement and stalled-relay resyncs — delivery-path decisions only,
+//! never payload bytes, so the threaded runtime remains the bit-parity
+//! oracle.
 
 pub mod downlink;
+pub mod evloop;
+pub mod monitor;
 pub mod net;
+pub mod poller;
 
 use crate::compression::payload::{Payload, QuantBlock};
 

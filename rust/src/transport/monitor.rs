@@ -1,0 +1,288 @@
+//! Connection monitoring: per-worker latency history and frame-gap
+//! tracking for the TCP transports.
+//!
+//! Two consumers, both delivery-path-only (they never change what bytes
+//! a worker ultimately receives, so every decision here is
+//! numerics-neutral and cannot perturb the bit-parity oracle):
+//!
+//! 1. **Relay-tree placement** ([`RttMonitor`]) — the coordinator
+//!    records one round-trip sample per worker per round (broadcast
+//!    write completed → gradient reply arrived). At epoch boundaries
+//!    the event-loop server re-plans the relay tree from
+//!    [`RttMonitor::order`]: fast, low-jitter workers become interior
+//!    nodes (they re-forward frames to `branching` children each),
+//!    slow or jittery ones become leaves. The threaded transport keeps
+//!    its original join-order placement and stays the oracle.
+//!
+//! 2. **Stalled-relay detection** ([`GapMonitor`]) — a relay-fed
+//!    worker records the gap between consecutive frames from its
+//!    parent. When the current silence exceeds the monitor's estimate
+//!    ([`GapMonitor::threshold`]), the child RESYNCs to direct
+//!    delivery *before* the round deadline, so a relay that stalls
+//!    without dying no longer costs its whole subtree the round
+//!    (previously the subtree was suspended alongside the relay).
+//!
+//! Both monitors are plain exponentially weighted moving averages —
+//! no clocks of their own; callers feed them [`Duration`] samples.
+
+use std::time::Duration;
+
+/// Exponentially weighted moving average over `f64` samples.
+///
+/// `update(x)` folds a sample in with weight `alpha` (higher = more
+/// reactive). Before the first sample, `get()` returns `None`.
+#[derive(Clone, Copy, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    /// New EWMA with smoothing factor `alpha` ∈ (0, 1].
+    pub fn new(alpha: f64) -> Self {
+        Ewma { alpha, value: None }
+    }
+
+    /// Fold one sample in; the first sample seeds the average.
+    pub fn update(&mut self, x: f64) {
+        self.value = Some(match self.value {
+            None => x,
+            Some(v) => v + self.alpha * (x - v),
+        });
+    }
+
+    /// Current average, `None` before any sample.
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Smoothing factor for per-worker round-trip estimates.
+const RTT_ALPHA: f64 = 0.2;
+
+/// Per-worker round-trip latency and jitter history (coordinator side).
+///
+/// One sample per worker per round: the elapsed time from the round's
+/// broadcast write completing on that worker's socket to its gradient
+/// reply arriving. Jitter is the EWMA of |sample − mean| (RFC 3550
+/// style). [`Self::score`] blends both so that a fast-but-erratic
+/// worker does not outrank a slightly-slower-but-steady one when
+/// picking relay interior nodes.
+#[derive(Clone, Debug)]
+pub struct RttMonitor {
+    rtt: Vec<Ewma>,
+    jitter: Vec<Ewma>,
+    samples: Vec<u64>,
+}
+
+impl RttMonitor {
+    /// Monitor for `n` worker slots.
+    pub fn new(n: usize) -> Self {
+        RttMonitor {
+            rtt: vec![Ewma::new(RTT_ALPHA); n],
+            jitter: vec![Ewma::new(RTT_ALPHA); n],
+            samples: vec![0; n],
+        }
+    }
+
+    /// Grow the monitor to at least `n` slots (new slots unobserved).
+    /// Admitting a joiner mid-run must never forget existing history.
+    pub fn grow(&mut self, n: usize) {
+        while self.rtt.len() < n {
+            self.rtt.push(Ewma::new(RTT_ALPHA));
+            self.jitter.push(Ewma::new(RTT_ALPHA));
+            self.samples.push(0);
+        }
+    }
+
+    /// Record one round-trip sample for `slot`.
+    pub fn observe(&mut self, slot: usize, rtt: Duration) {
+        if slot >= self.rtt.len() {
+            return;
+        }
+        let x = rtt.as_secs_f64();
+        let dev = (x - self.rtt[slot].get().unwrap_or(x)).abs();
+        self.rtt[slot].update(x);
+        self.jitter[slot].update(dev);
+        self.samples[slot] += 1;
+    }
+
+    /// Samples recorded for `slot` so far.
+    pub fn samples(&self, slot: usize) -> u64 {
+        self.samples.get(slot).copied().unwrap_or(0)
+    }
+
+    /// Placement score for `slot` (lower = better relay candidate):
+    /// RTT mean + 2·jitter, in seconds. Unobserved slots score
+    /// `f64::MAX` so they sort last among their capability class.
+    pub fn score(&self, slot: usize) -> f64 {
+        match (
+            self.rtt.get(slot).and_then(Ewma::get),
+            self.jitter.get(slot).and_then(Ewma::get),
+        ) {
+            (Some(r), Some(j)) => r + 2.0 * j,
+            _ => f64::MAX,
+        }
+    }
+
+    /// Relay-tree placement order: all relay-capable slots first
+    /// (sorted by ascending [`Self::score`], ties by slot index), then
+    /// the rest in the same keyed order. With no samples yet this
+    /// degenerates to the join-order placement the threaded transport
+    /// uses, so the first plan of a run is identical across `io`
+    /// modes.
+    pub fn order(&self, can_relay: &[bool]) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..can_relay.len()).collect();
+        order.sort_by(|&a, &b| {
+            (!can_relay[a], self.score(a), a)
+                .partial_cmp(&(!can_relay[b], self.score(b), b))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        order
+    }
+}
+
+/// Smoothing factor for inter-frame gap estimates.
+const GAP_ALPHA: f64 = 0.25;
+/// Stall threshold = [`GAP_FLOOR`] + `GAP_MULT` × EWMA(gap).
+const GAP_MULT: f64 = 6.0;
+/// Absolute floor under the stall threshold — CI-grade scheduling
+/// jitter on a loaded runner must never trip a RESYNC on its own.
+const GAP_FLOOR: Duration = Duration::from_millis(300);
+/// Samples required before the monitor arms: the first few gaps
+/// include handshake and compile noise.
+const GAP_WARMUP: u64 = 3;
+
+/// Inter-frame gap history on a relay-fed worker (child side).
+///
+/// The child feeds it the gap between consecutive parent frames;
+/// [`Self::stalled`] answers "has the parent been silent longer than
+/// its own history predicts?". Deliberately conservative (6× the mean
+/// gap plus a 300 ms floor, armed only after 3 samples): a false
+/// trigger is harmless to numerics — the RESYNC merely switches the
+/// delivery path — but it would double-deliver one frame's bytes, so
+/// the threshold errs toward patience.
+#[derive(Clone, Debug)]
+pub struct GapMonitor {
+    gap: Ewma,
+    n: u64,
+}
+
+impl Default for GapMonitor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl GapMonitor {
+    /// Fresh monitor (unarmed).
+    pub fn new() -> Self {
+        GapMonitor {
+            gap: Ewma::new(GAP_ALPHA),
+            n: 0,
+        }
+    }
+
+    /// Record the gap between two consecutive parent frames.
+    pub fn observe(&mut self, gap: Duration) {
+        self.gap.update(gap.as_secs_f64());
+        self.n += 1;
+    }
+
+    /// Whether enough history exists to call a stall.
+    pub fn armed(&self) -> bool {
+        self.n >= GAP_WARMUP
+    }
+
+    /// Current stall threshold: floor + mult × EWMA(gap).
+    pub fn threshold(&self) -> Duration {
+        let ewma = self.gap.get().unwrap_or(0.0);
+        GAP_FLOOR + Duration::from_secs_f64(GAP_MULT * ewma)
+    }
+
+    /// `true` iff the monitor is armed and the parent has been silent
+    /// for `elapsed` > [`Self::threshold`].
+    pub fn stalled(&self, elapsed: Duration) -> bool {
+        self.armed() && elapsed > self.threshold()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_seeds_and_converges() {
+        let mut e = Ewma::new(0.5);
+        assert_eq!(e.get(), None);
+        e.update(10.0);
+        assert_eq!(e.get(), Some(10.0));
+        e.update(20.0);
+        assert_eq!(e.get(), Some(15.0));
+    }
+
+    #[test]
+    fn rtt_order_is_join_order_without_samples() {
+        let m = RttMonitor::new(4);
+        assert_eq!(m.order(&[true, true, true, true]), vec![0, 1, 2, 3]);
+        // relay-incapable slots sort last even unobserved
+        assert_eq!(m.order(&[false, true, true, false]), vec![1, 2, 0, 3]);
+    }
+
+    #[test]
+    fn rtt_order_prefers_fast_low_jitter_workers() {
+        let mut m = RttMonitor::new(3);
+        for _ in 0..8 {
+            m.observe(0, Duration::from_millis(50));
+            m.observe(1, Duration::from_millis(5));
+            m.observe(2, Duration::from_millis(20));
+        }
+        assert_eq!(m.order(&[true, true, true]), vec![1, 2, 0]);
+        // capability dominates speed: slot 1 may be fastest, but if it
+        // cannot relay it must not become an interior node
+        assert_eq!(m.order(&[true, false, true]), vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn rtt_jitter_penalizes_erratic_workers() {
+        let mut m = RttMonitor::new(2);
+        // same mean (~30ms) but slot 1 oscillates wildly
+        for i in 0..20 {
+            m.observe(0, Duration::from_millis(30));
+            m.observe(1, Duration::from_millis(if i % 2 == 0 { 5 } else { 55 }));
+        }
+        assert!(m.score(0) < m.score(1));
+    }
+
+    #[test]
+    fn gap_monitor_arms_after_warmup_only() {
+        let mut g = GapMonitor::new();
+        assert!(!g.armed());
+        assert!(!g.stalled(Duration::from_secs(3600)));
+        for _ in 0..GAP_WARMUP {
+            g.observe(Duration::from_millis(10));
+        }
+        assert!(g.armed());
+    }
+
+    #[test]
+    fn gap_threshold_has_floor_and_scales_with_history() {
+        let mut g = GapMonitor::new();
+        for _ in 0..5 {
+            g.observe(Duration::from_millis(10));
+        }
+        let thr = g.threshold();
+        assert!(thr >= GAP_FLOOR, "floor must hold: {thr:?}");
+        assert!(!g.stalled(Duration::from_millis(50)));
+        assert!(g.stalled(thr + Duration::from_millis(1)));
+
+        let mut slow = GapMonitor::new();
+        for _ in 0..5 {
+            slow.observe(Duration::from_millis(500));
+        }
+        assert!(slow.threshold() > g.threshold());
+        // a gap that trips the fast-history monitor is within the slow
+        // one's expectations
+        assert!(!slow.stalled(g.threshold() + Duration::from_millis(1)));
+    }
+}

@@ -44,7 +44,7 @@ use std::time::{Duration, Instant};
 pub const PROTOCOL_VERSION: u16 = 4;
 
 /// "RSDB" — rejects random port scanners / wrong services at JOIN time.
-const MAGIC: u32 = 0x5244_5342;
+pub(crate) const MAGIC: u32 = 0x5244_5342;
 
 /// Frame envelope: 4-byte length prefix + 1-byte kind.
 pub const FRAME_OVERHEAD: usize = 5;
@@ -52,52 +52,56 @@ pub const FRAME_OVERHEAD: usize = 5;
 /// Uplink frames carry the worker's scalar loss ahead of the message.
 pub const GRAD_ENVELOPE: usize = 4;
 
-const KIND_MSG: u8 = 0;
-const KIND_JOIN: u8 = 1;
-const KIND_WELCOME: u8 = 2;
-const KIND_GRAD: u8 = 3;
-const KIND_BYE: u8 = 4;
-const KIND_ERR: u8 = 5;
+pub(crate) const KIND_MSG: u8 = 0;
+pub(crate) const KIND_JOIN: u8 = 1;
+pub(crate) const KIND_WELCOME: u8 = 2;
+pub(crate) const KIND_GRAD: u8 = 3;
+pub(crate) const KIND_BYE: u8 = 4;
+pub(crate) const KIND_ERR: u8 = 5;
 /// Coordinator → worker after rendezvous under `fanout = "tree"`: the
 /// worker's relay-feed assignment (body = `[u16 n_children][parent relay
 /// address utf8]`, empty address = fed directly by the coordinator). The
 /// worker accepts exactly `n_children` relay connections *before* its
 /// round loop starts, so no broadcast frame can race past an
 /// un-accepted child.
-const KIND_PLAN: u8 = 6;
+pub(crate) const KIND_PLAN: u8 = 6;
 /// Worker → coordinator: "my relay feed died — deliver my broadcasts
 /// directly from now on (and re-send the current round's frame)".
-const KIND_RESYNC: u8 = 7;
+pub(crate) const KIND_RESYNC: u8 = 7;
 /// Worker → coordinator, immediately *before* the worker's final `GRAD`
 /// of the epoch (body = one [`WireMessage::Leave`]): a graceful
 /// departure announcement. The I/O thread flags the connection's next
 /// reply (`Reply::left`) so the coordinator vacates the slot at the next
 /// epoch boundary — never mid-epoch, keeping round arithmetic
 /// deterministic.
-const KIND_LEAVE: u8 = 8;
+pub(crate) const KIND_LEAVE: u8 = 8;
 
 /// JOIN body: magic(4) + version(2) + fingerprint(8) + relay_port(2).
-const JOIN_LEN: usize = 16;
+pub(crate) const JOIN_LEN: usize = 16;
 
 /// How long a relay forward may block on a stalled child before the
 /// child is dropped (it will RESYNC to direct delivery).
-const RELAY_WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+pub(crate) const RELAY_WRITE_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// Hard cap on accepted frame bodies (a dense broadcast at the paper's
 /// d = 11 809 is ~47 KiB; 64 MiB leaves room for far larger models while
 /// bounding a malicious length prefix).
-const MAX_FRAME: usize = 64 << 20;
+pub(crate) const MAX_FRAME: usize = 64 << 20;
 
 /// Handshake I/O deadline (JOIN/WELCOME exchanges).
-const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(20);
+pub(crate) const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(20);
 
 /// Extra slack `collect` allows beyond the per-connection read timeout,
 /// so the I/O threads (which enforce the real deadline) report first.
-const COLLECT_GRACE: Duration = Duration::from_secs(2);
+pub(crate) const COLLECT_GRACE: Duration = Duration::from_secs(2);
 
 // ---------------------------------------------------------------- frames
 
-fn write_frame(stream: &mut TcpStream, kind: u8, body: &[u8]) -> std::io::Result<usize> {
+pub(crate) fn write_frame(
+    stream: &mut TcpStream,
+    kind: u8,
+    body: &[u8],
+) -> std::io::Result<usize> {
     let frame = build_frame(kind, body);
     stream.write_all(&frame)?;
     stream.flush()?;
@@ -105,7 +109,7 @@ fn write_frame(stream: &mut TcpStream, kind: u8, body: &[u8]) -> std::io::Result
 }
 
 /// Assemble a frame once for reuse across many connections.
-fn build_frame(kind: u8, body: &[u8]) -> Vec<u8> {
+pub(crate) fn build_frame(kind: u8, body: &[u8]) -> Vec<u8> {
     let mut frame = Vec::with_capacity(FRAME_OVERHEAD + body.len());
     frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
     frame.push(kind);
@@ -113,7 +117,7 @@ fn build_frame(kind: u8, body: &[u8]) -> Vec<u8> {
     frame
 }
 
-fn read_frame(stream: &mut TcpStream) -> std::io::Result<(u8, Vec<u8>)> {
+pub(crate) fn read_frame(stream: &mut TcpStream) -> std::io::Result<(u8, Vec<u8>)> {
     let mut head = [0u8; FRAME_OVERHEAD];
     stream.read_exact(&mut head)?;
     let len = u32::from_le_bytes([head[0], head[1], head[2], head[3]]) as usize;
@@ -128,7 +132,7 @@ fn read_frame(stream: &mut TcpStream) -> std::io::Result<(u8, Vec<u8>)> {
     Ok((head[4], body))
 }
 
-fn is_timeout(e: &std::io::Error) -> bool {
+pub(crate) fn is_timeout(e: &std::io::Error) -> bool {
     matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
 }
 
@@ -180,6 +184,22 @@ impl NetCounters {
             raw_uplink: self.raw_uplink.load(Ordering::Relaxed),
             raw_downlink: self.raw_downlink.load(Ordering::Relaxed),
         }
+    }
+
+    pub(crate) fn add_wire_uplink(&self, n: u64) {
+        self.wire_uplink.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub(crate) fn add_wire_downlink(&self, n: u64) {
+        self.wire_downlink.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub(crate) fn add_raw_uplink(&self, n: u64) {
+        self.raw_uplink.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub(crate) fn add_raw_downlink(&self, n: u64) {
+        self.raw_downlink.fetch_add(n, Ordering::Relaxed);
     }
 }
 
@@ -332,6 +352,14 @@ impl CoordinatorServer {
     /// the slot's shard and RNG stream from the shared config alone).
     /// Slots fill in arrival order; the window failing to fill them all
     /// is an error — the churn schedule promised a joiner.
+    ///
+    /// **Early-close contract**: `timeout` is an upper bound only. The
+    /// window closes the moment the last vacant slot fills — a boundary
+    /// whose joiners are already dialing costs milliseconds, not the
+    /// full window (pinned by the `churn/early_close` stage of
+    /// `bench_transport`, which passes a rendezvous-scale window and
+    /// asserts the call returns orders of magnitude sooner). The
+    /// event-loop server honors the same contract.
     pub fn reopen_rendezvous(
         &mut self,
         slots: &[usize],
@@ -406,7 +434,10 @@ impl CoordinatorServer {
                             self.n_alive(),
                         ));
                     }
-                    std::thread::sleep(Duration::from_millis(10));
+                    // short poll quantum: the early-close latency of a
+                    // boundary window is bounded by this sleep, not by
+                    // the window length
+                    std::thread::sleep(Duration::from_millis(2));
                 }
                 Err(e) => return Err(anyhow!("accept: {e}")),
             }
@@ -430,50 +461,18 @@ impl CoordinatorServer {
         stream.set_write_timeout(Some(HANDSHAKE_TIMEOUT))?;
         stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
         let peer = stream.peer_addr()?;
-        let (kind, body) = read_frame(&mut stream).map_err(|e| anyhow!("join read: {e}"))?;
-        self.counters
-            .raw_uplink
-            .fetch_add((FRAME_OVERHEAD + body.len()) as u64, Ordering::Relaxed);
-        if kind != KIND_JOIN || body.len() != JOIN_LEN {
-            return Err(anyhow!("malformed join frame (kind {kind}, {} bytes)", body.len()));
-        }
-        let magic = u32::from_le_bytes(body[0..4].try_into().unwrap());
-        let version = u16::from_le_bytes([body[4], body[5]]);
-        let their_fp = u64::from_le_bytes(body[6..14].try_into().unwrap());
-        let relay_port = u16::from_le_bytes([body[14], body[15]]);
-        let problem = if magic != MAGIC {
-            Some("bad magic (not a rosdhb worker)".to_string())
-        } else if version != PROTOCOL_VERSION {
-            Some(format!(
-                "protocol version {version} != coordinator {PROTOCOL_VERSION}"
-            ))
-        } else if their_fp != fingerprint {
-            Some(format!(
-                "config fingerprint {their_fp:#x} != coordinator {fingerprint:#x} \
-                 — both sides must run the identical experiment config"
-            ))
-        } else {
-            None
-        };
-        if let Some(msg) = problem {
-            let n = write_frame(&mut stream, KIND_ERR, msg.as_bytes()).unwrap_or(0);
-            self.counters
-                .raw_downlink
-                .fetch_add(n as u64, Ordering::Relaxed);
-            return Err(anyhow!(msg));
-        }
         let id = match slot {
             Some(s) => s as u16,
             None => self.conns.len() as u16,
         };
-        let mut welcome = Vec::with_capacity(4);
-        welcome.extend_from_slice(&id.to_le_bytes());
-        welcome.extend_from_slice(&(expected as u16).to_le_bytes());
-        let n = write_frame(&mut stream, KIND_WELCOME, &welcome)
-            .map_err(|e| anyhow!("welcome write: {e}"))?;
-        self.counters
-            .raw_downlink
-            .fetch_add(n as u64, Ordering::Relaxed);
+        let join = server_handshake(
+            &mut stream,
+            fingerprint,
+            id,
+            expected as u16,
+            &self.counters,
+        )?;
+        let relay_port = join.relay_port;
         stream.set_read_timeout(None)?;
 
         let (cmd_tx, cmd_rx) = channel();
@@ -739,6 +738,67 @@ impl Drop for CoordinatorServer {
     fn drop(&mut self) {
         self.shutdown();
     }
+}
+
+/// Validated JOIN handshake data the server keeps.
+pub(crate) struct JoinInfo {
+    /// The relay listener port the worker advertised (0 = none).
+    pub relay_port: u16,
+}
+
+/// Server side of the JOIN/WELCOME handshake, shared verbatim by the
+/// threaded [`CoordinatorServer`] and the event-loop server so the two
+/// `io` modes are wire- and accounting-identical at rendezvous: read
+/// the `JOIN`, validate magic / protocol version / config fingerprint,
+/// then answer `WELCOME(id, expected)` — or an `ERR` naming the
+/// mismatch, returned as the error. The caller owns the stream's
+/// timeout configuration.
+pub(crate) fn server_handshake(
+    stream: &mut TcpStream,
+    fingerprint: u64,
+    id: u16,
+    expected: u16,
+    counters: &NetCounters,
+) -> Result<JoinInfo> {
+    let (kind, body) =
+        read_frame(stream).map_err(|e| anyhow!("join read: {e}"))?;
+    counters.add_raw_uplink((FRAME_OVERHEAD + body.len()) as u64);
+    if kind != KIND_JOIN || body.len() != JOIN_LEN {
+        return Err(anyhow!(
+            "malformed join frame (kind {kind}, {} bytes)",
+            body.len()
+        ));
+    }
+    let magic = u32::from_le_bytes(body[0..4].try_into().unwrap());
+    let version = u16::from_le_bytes([body[4], body[5]]);
+    let their_fp = u64::from_le_bytes(body[6..14].try_into().unwrap());
+    let relay_port = u16::from_le_bytes([body[14], body[15]]);
+    let problem = if magic != MAGIC {
+        Some("bad magic (not a rosdhb worker)".to_string())
+    } else if version != PROTOCOL_VERSION {
+        Some(format!(
+            "protocol version {version} != coordinator {PROTOCOL_VERSION}"
+        ))
+    } else if their_fp != fingerprint {
+        Some(format!(
+            "config fingerprint {their_fp:#x} != coordinator {fingerprint:#x} \
+             — both sides must run the identical experiment config"
+        ))
+    } else {
+        None
+    };
+    if let Some(msg) = problem {
+        let n = write_frame(stream, KIND_ERR, msg.as_bytes()).unwrap_or(0);
+        counters.add_raw_downlink(n as u64);
+        return Err(anyhow!(msg));
+    }
+    let mut welcome = Vec::with_capacity(4);
+    welcome.extend_from_slice(&id.to_le_bytes());
+    welcome.extend_from_slice(&expected.to_le_bytes());
+    let n = write_frame(stream, KIND_WELCOME, &welcome)
+        .map_err(|e| anyhow!("welcome write: {e}"))?;
+    counters.add_raw_downlink(n as u64);
+    Ok(JoinInfo { relay_port })
 }
 
 /// Per-connection I/O thread: serializes writes and the (optional) reply
@@ -1090,6 +1150,14 @@ impl WorkerClient {
     ) -> Result<TreeFeed> {
         TreeFeed::start(self.stream, hub, n_children, parent)
     }
+
+    /// Dismantle the client into its handshaken socket and identity —
+    /// for harnesses (e.g. the event-loop scaling bench) that drive
+    /// many worker sockets from one loop instead of one blocking
+    /// client per thread.
+    pub fn into_parts(self) -> (TcpStream, u16, u16) {
+        (self.stream, self.worker_id, self.n_total)
+    }
 }
 
 fn send_grad_on(stream: &mut TcpStream, loss: f32, msg: &WireMessage) -> Result<()> {
@@ -1127,6 +1195,13 @@ impl RelayHub {
 
     pub fn port(&self) -> u16 {
         self.port
+    }
+
+    /// Surrender the listener (the event-loop feed keeps it open for
+    /// its own accept handling instead of [`TreeFeed`]'s
+    /// accept-then-drop discipline).
+    pub(crate) fn into_listener(self) -> TcpListener {
+        self.listener
     }
 }
 

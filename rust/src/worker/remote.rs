@@ -39,7 +39,9 @@
 //! * **`fanout = "tree"`** — the worker binds a relay listener before
 //!   JOIN, learns its feed from the post-rendezvous PLAN frame, and
 //!   re-forwards every downlink frame to its tree children through a
-//!   [`TreeFeed`]; duplicate deliveries after a relay collapse are
+//!   [`TreeFeed`] (or, under `io = "evloop"`, a single-threaded
+//!   [`EvFeed`] whose gap monitor also resyncs off *stalled* — not just
+//!   dead — relays); duplicate deliveries after a relay collapse are
 //!   deduplicated by round before any state advances.
 
 use crate::attacks::{self, AttackKind};
@@ -48,6 +50,7 @@ use crate::config::{Engine, ExperimentConfig};
 use crate::coordinator::build_training_workers_for_epoch;
 use crate::model::MlpSpec;
 use crate::transport::downlink::{DownlinkMode, DownlinkReplica, FanoutPlan};
+use crate::transport::evloop::EvFeed;
 use crate::transport::net::{RelayHub, TreeFeed, WorkerClient};
 use crate::transport::WireMessage;
 use crate::worker::{GradEngine, HonestWorker, NativeEngine};
@@ -67,6 +70,12 @@ pub struct JoinSummary {
     pub relayed_wire_bytes: u64,
     /// Raw socket bytes of those forwards (frame envelopes included).
     pub relayed_raw_bytes: u64,
+    /// RESYNC frames this worker sent after losing (or timing out on)
+    /// its relay feed — always 0 under `fanout = "flat"` and under the
+    /// threaded feed (which resyncs only on a *dead* parent; the
+    /// event-loop feed additionally detects *stalled* parents via its
+    /// gap monitor).
+    pub resyncs: u32,
 }
 
 /// The two downlink feeds a worker can run: the plain direct connection
@@ -74,6 +83,9 @@ pub struct JoinSummary {
 enum Feed {
     Direct(WorkerClient),
     Tree(Box<TreeFeed>),
+    /// Event-loop relay feed (`fanout = "tree"`, `io = "evloop"`):
+    /// single-threaded, with gap-monitor stall detection.
+    Ev(Box<EvFeed>),
 }
 
 impl Feed {
@@ -81,6 +93,7 @@ impl Feed {
         match self {
             Feed::Direct(c) => c.recv(d),
             Feed::Tree(f) => f.recv(d),
+            Feed::Ev(f) => f.recv(d),
         }
     }
 
@@ -88,6 +101,7 @@ impl Feed {
         match self {
             Feed::Direct(c) => c.send_grad(loss, msg),
             Feed::Tree(f) => f.send_grad(loss, msg),
+            Feed::Ev(f) => f.send_grad(loss, msg),
         }
     }
 
@@ -95,6 +109,14 @@ impl Feed {
         match self {
             Feed::Direct(_) => (0, 0),
             Feed::Tree(f) => f.relayed(),
+            Feed::Ev(f) => f.relayed(),
+        }
+    }
+
+    fn resyncs(&self) -> u32 {
+        match self {
+            Feed::Direct(_) | Feed::Tree(_) => 0,
+            Feed::Ev(f) => f.resyncs(),
         }
     }
 
@@ -102,6 +124,7 @@ impl Feed {
         match self {
             Feed::Direct(c) => c.send_leave(round, worker),
             Feed::Tree(f) => f.send_leave(round, worker),
+            Feed::Ev(f) => f.send_leave(round, worker),
         }
     }
 }
@@ -119,6 +142,13 @@ pub struct JoinOpts {
     /// gradient and disconnects; the coordinator vacates its slot at the
     /// next epoch boundary. Requires `epoch_rounds > 0` to ever fire.
     pub leave_after_epoch: Option<u64>,
+    /// Fault-injection hook for the stalled-relay regression test:
+    /// `(round, millis)` — delay forwarding (and handling) of the named
+    /// round's downlink frame by `millis` on this worker, simulating a
+    /// relay that stalls without dying. Delivery-timing-only: the bytes
+    /// eventually forwarded are unchanged. `io = "evloop"` tree feeds
+    /// only; ignored elsewhere.
+    pub stall_relay: Option<(u64, u64)>,
 }
 
 /// The gradient worker owning `slot` under the epoch-`epoch` membership
@@ -198,11 +228,24 @@ pub fn join_run(
         None => Feed::Direct(client),
         Some(hub) => {
             let (n_children, parent) = client.recv_plan()?;
-            Feed::Tree(Box::new(client.into_tree_feed(
-                hub,
-                n_children,
-                parent.as_deref(),
-            )?))
+            if cfg.io == "evloop" {
+                let stall = opts
+                    .stall_relay
+                    .map(|(r, ms)| (r, Duration::from_millis(ms)));
+                Feed::Ev(Box::new(EvFeed::start(
+                    client,
+                    hub,
+                    n_children,
+                    parent.as_deref(),
+                    stall,
+                )?))
+            } else {
+                Feed::Tree(Box::new(client.into_tree_feed(
+                    hub,
+                    n_children,
+                    parent.as_deref(),
+                )?))
+            }
         }
     };
 
@@ -373,5 +416,6 @@ pub fn join_run(
         role,
         relayed_wire_bytes,
         relayed_raw_bytes,
+        resyncs: feed.resyncs(),
     })
 }

@@ -1,0 +1,270 @@
+//! Loopback integration tests for the event-loop socket runtime
+//! (`io = "evloop"`): the readiness-based transport must reproduce the
+//! threaded transport — and the in-process oracle — bit for bit, on the
+//! per-round log and on the cumulative wire-byte counters, across flat
+//! and relay-tree fan-out. The stalled-relay regression pins the PR 5
+//! gap: a relay that *delays* (without dying) past the gap monitor's
+//! threshold costs nobody the round — its children RESYNC to direct
+//! delivery before the deadline and no subtree is evicted.
+
+use rosdhb::config::ExperimentConfig;
+use rosdhb::coordinator::round_transport::TcpTransport;
+use rosdhb::coordinator::{RunReport, Trainer};
+use rosdhb::model::MlpSpec;
+use rosdhb::transport::evloop::ServerIo;
+use rosdhb::transport::net::NetStats;
+use rosdhb::worker::remote::{join_run, JoinOpts, JoinSummary};
+use std::thread;
+use std::time::Duration;
+
+fn base_cfg() -> ExperimentConfig {
+    let mut c = ExperimentConfig::default_mnist_like();
+    c.n_honest = 4;
+    c.n_byz = 0;
+    c.attack = "none".into();
+    c.aggregator = "cwtm".into();
+    c.k_frac = 0.1;
+    c.rounds = 5;
+    c.eval_every = 2;
+    c.batch = 30;
+    c.train_size = 600;
+    c.test_size = 200;
+    c.stop_at_tau = false;
+    c.seed = 7;
+    c.transport = "tcp".into();
+    c.round_timeout_ms = 20_000;
+    c
+}
+
+/// Run `cfg` over loopback TCP with the socket runtime `cfg.io` names:
+/// coordinator on this thread, one worker thread per slot (every worker
+/// gets the same `opts`). Returns the report, the measured socket
+/// traffic, and each worker's outcome.
+fn run_io(
+    cfg: &ExperimentConfig,
+    opts: JoinOpts,
+) -> (RunReport, NetStats, Vec<anyhow::Result<JoinSummary>>) {
+    let server = ServerIo::bind("127.0.0.1:0", &cfg.io).unwrap();
+    let addr = server.local_addr().to_string();
+    let handles: Vec<_> = (0..cfg.n_total())
+        .map(|_| {
+            let cfg = cfg.clone();
+            let addr = addr.clone();
+            thread::spawn(move || {
+                join_run(&cfg, &addr, Duration::from_secs(20), opts)
+            })
+        })
+        .collect();
+    let d = MlpSpec::default().p();
+    let transport = TcpTransport::rendezvous_io(server, cfg, d).unwrap();
+    let mut trainer = Trainer::with_transport(cfg, Box::new(transport)).unwrap();
+    let report = trainer.run().unwrap();
+    let stats = trainer.net_stats().unwrap();
+    trainer.shutdown_transport(); // BYE — releases the worker threads
+    let outcomes = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    (report, stats, outcomes)
+}
+
+fn run_local(cfg: &ExperimentConfig) -> RunReport {
+    let mut local = cfg.clone();
+    local.transport = "local".into();
+    Trainer::from_config(&local).unwrap().run().unwrap()
+}
+
+/// Every field that must match for "bit-identical RunReport".
+fn assert_reports_identical(a: &RunReport, b: &RunReport) {
+    assert_eq!(a.algorithm, b.algorithm);
+    assert_eq!(a.rounds_run, b.rounds_run);
+    assert_eq!(a.rounds_to_tau, b.rounds_to_tau);
+    assert_eq!(a.uplink_bytes_to_tau, b.uplink_bytes_to_tau);
+    assert_eq!(a.uplink_bytes, b.uplink_bytes);
+    assert_eq!(a.downlink_bytes, b.downlink_bytes);
+    assert_eq!(a.coordinator_egress_bytes, b.coordinator_egress_bytes);
+    assert_eq!(a.best_acc, b.best_acc);
+    assert_eq!(a.final_loss, b.final_loss);
+    assert_eq!(a.log.rows.len(), b.log.rows.len());
+    for (ra, rb) in a.log.rows.iter().zip(&b.log.rows) {
+        assert_eq!(ra.round, rb.round);
+        assert_eq!(ra.train_loss, rb.train_loss, "round {}", ra.round);
+        assert_eq!(ra.update_norm, rb.update_norm, "round {}", ra.round);
+        assert_eq!(ra.test_acc, rb.test_acc, "round {}", ra.round);
+        assert_eq!(ra.uplink_bytes, rb.uplink_bytes, "round {}", ra.round);
+        assert_eq!(ra.downlink_bytes, rb.downlink_bytes, "round {}", ra.round);
+    }
+}
+
+/// Shared body of the io-mode parity matrix: run `cfg` under both socket
+/// runtimes and locally; all three reports must be bit-identical, both
+/// measured byte counters must match the `ByteMeter` model — and the two
+/// runtimes must agree down to *raw* socket bytes (frame envelopes,
+/// handshakes, PLAN frames), the strictest cross-runtime invariant.
+fn assert_io_parity(cfg: &ExperimentConfig) {
+    let mut threads_cfg = cfg.clone();
+    threads_cfg.io = "threads".into();
+    let mut evloop_cfg = cfg.clone();
+    evloop_cfg.io = "evloop".into();
+
+    let (rep_t, st_t, out_t) = run_io(&threads_cfg, JoinOpts::default());
+    let (rep_e, st_e, out_e) = run_io(&evloop_cfg, JoinOpts::default());
+    for o in out_t.iter().chain(&out_e) {
+        let s = o.as_ref().expect("worker must finish cleanly");
+        assert_eq!(s.rounds, cfg.rounds as u64);
+        assert_eq!(s.resyncs, 0, "no-fault run must never resync");
+    }
+
+    let local = run_local(cfg);
+    assert_reports_identical(&rep_e, &local);
+    assert_reports_identical(&rep_e, &rep_t);
+
+    for (stats, tag) in [(&st_t, "threads"), (&st_e, "evloop")] {
+        assert_eq!(stats.wire_uplink, rep_e.uplink_bytes, "{tag} uplink");
+        assert_eq!(
+            stats.wire_downlink, rep_e.downlink_bytes,
+            "{tag} downlink"
+        );
+        assert!(stats.raw_uplink > stats.wire_uplink, "{tag}");
+        assert!(stats.raw_downlink > stats.wire_downlink, "{tag}");
+    }
+    assert_eq!(st_t.raw_uplink, st_e.raw_uplink, "raw uplink");
+    assert_eq!(st_t.raw_downlink, st_e.raw_downlink, "raw downlink");
+}
+
+#[test]
+fn evloop_flat_rosdhb_is_bit_identical_to_threads_and_local() {
+    assert_io_parity(&base_cfg());
+}
+
+#[test]
+fn evloop_flat_qsgd_quantized_payloads_keep_parity() {
+    // a second wire plan through the nonblocking frame reader: bit-packed
+    // QuantBlock uplinks exercise the split GRAD decode path with bodies
+    // whose size is not a multiple of anything convenient
+    let mut cfg = base_cfg();
+    cfg.set("algorithm", "rosdhb-u").unwrap();
+    cfg.set("compressor", "qsgd:4").unwrap();
+    cfg.rounds = 3;
+    assert_io_parity(&cfg);
+}
+
+#[test]
+fn evloop_relay_tree_keeps_parity_across_runtimes() {
+    // the relay tree under the event loop: PLAN delivery, single-thread
+    // child accept/forward, and the per-worker EvFeed must leave the
+    // report and every byte counter exactly where the threaded TreeFeed
+    // puts them
+    let mut cfg = base_cfg();
+    cfg.set("fanout", "tree").unwrap();
+    cfg.set("branching", "2").unwrap();
+    assert_io_parity(&cfg);
+}
+
+#[test]
+fn evloop_flat_interops_with_threads_coordinator() {
+    // `io` is deliberately absent from the wire fingerprint: under flat
+    // fan-out an evloop *worker config* joins a threads coordinator (and
+    // vice versa) because both speak the identical wire format. Run
+    // workers configured io=evloop against a threads server.
+    let mut server_cfg = base_cfg();
+    server_cfg.io = "threads".into();
+    server_cfg.rounds = 3;
+    let mut worker_cfg = server_cfg.clone();
+    worker_cfg.io = "evloop".into();
+    assert_eq!(
+        server_cfg.wire_fingerprint(),
+        worker_cfg.wire_fingerprint()
+    );
+
+    let server = ServerIo::bind("127.0.0.1:0", &server_cfg.io).unwrap();
+    let addr = server.local_addr().to_string();
+    let handles: Vec<_> = (0..worker_cfg.n_total())
+        .map(|_| {
+            let cfg = worker_cfg.clone();
+            let addr = addr.clone();
+            thread::spawn(move || {
+                join_run(
+                    &cfg,
+                    &addr,
+                    Duration::from_secs(20),
+                    JoinOpts::default(),
+                )
+            })
+        })
+        .collect();
+    let d = MlpSpec::default().p();
+    let transport =
+        TcpTransport::rendezvous_io(server, &server_cfg, d).unwrap();
+    let mut trainer =
+        Trainer::with_transport(&server_cfg, Box::new(transport)).unwrap();
+    let report = trainer.run().unwrap();
+    trainer.shutdown_transport();
+    for h in handles {
+        let s = h.join().unwrap().expect("worker must finish cleanly");
+        assert_eq!(s.rounds, server_cfg.rounds as u64);
+    }
+    assert_reports_identical(&report, &run_local(&server_cfg));
+}
+
+#[test]
+fn stalled_relay_children_resync_before_deadline_no_eviction() {
+    // PR 5 left this gap: a relay that stalls *without dying* was
+    // indistinguishable from its whole subtree stalling, and the subtree
+    // was suspended with it. Under the event loop the children's gap
+    // monitor calls the stall and RESYNCs to direct delivery before the
+    // round deadline.
+    //
+    // Every worker gets the same injected fault — sleep 6 s before
+    // handling round 6 — so whichever joiner landed in the interior
+    // relay slot stalls its subtree; leaf workers merely delay their own
+    // reply (well inside the 30 s deadline). By round 6 each child has
+    // observed 4 inter-frame gaps, so its monitor is armed; 6 s dwarfs
+    // any plausible learned threshold on a loaded CI runner
+    // (300 ms floor + 6x the EWMA of loopback round gaps).
+    let mut cfg = base_cfg();
+    cfg.set("fanout", "tree").unwrap();
+    cfg.set("branching", "2").unwrap();
+    cfg.io = "evloop".into();
+    cfg.rounds = 8;
+    cfg.round_timeout_ms = 30_000;
+    let stall = JoinOpts {
+        stall_relay: Some((6, 6_000)),
+        ..Default::default()
+    };
+
+    let (report, _stats, outcomes) = run_io(&cfg, stall);
+
+    let summaries: Vec<&JoinSummary> =
+        outcomes.iter().map(|o| o.as_ref().unwrap()).collect();
+    // no eviction, no suspension: every worker — the stalled relay
+    // included — served every round
+    for s in &summaries {
+        assert_eq!(
+            s.rounds, cfg.rounds as u64,
+            "worker {} lost rounds to the stalled relay",
+            s.worker_id
+        );
+    }
+    // the children actually took the monitor-driven escape hatch
+    let resyncs: u32 = summaries.iter().map(|s| s.resyncs).sum();
+    assert!(
+        resyncs >= 1,
+        "no child resynced — the stall was never detected"
+    );
+    // a relay that stalls forwards every byte eventually; only the
+    // delivery *path* changed, so the run is bit-identical to the local
+    // oracle on the same config...
+    assert_reports_identical(&report, &run_local(&cfg));
+    // ...and its numerics are bit-identical to plain flat delivery (the
+    // byte columns differ by the fan-out model, the training trajectory
+    // must not)
+    let mut flat = cfg.clone();
+    flat.fanout = "flat".into();
+    let flat_local = run_local(&flat);
+    assert_eq!(report.rounds_run, flat_local.rounds_run);
+    assert_eq!(report.best_acc, flat_local.best_acc);
+    assert_eq!(report.final_loss, flat_local.final_loss);
+    for (ra, rb) in report.log.rows.iter().zip(&flat_local.log.rows) {
+        assert_eq!(ra.train_loss, rb.train_loss, "round {}", ra.round);
+        assert_eq!(ra.update_norm, rb.update_norm, "round {}", ra.round);
+        assert_eq!(ra.test_acc, rb.test_acc, "round {}", ra.round);
+    }
+}

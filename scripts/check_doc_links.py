@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Fail CI on broken intra-repo links in the markdown docs.
+
+Scans docs/*.md plus the READMEs for markdown links, resolves every
+relative target against the linking file's directory, and exits 1
+listing each target that does not exist in the repo. For links into
+other markdown files with a #fragment, the fragment is checked against
+the target's headings (GitHub slug rules). External links (http/https/
+mailto) are ignored — this checker guards repo-internal consistency,
+not the internet.
+
+No third-party dependencies; run from anywhere inside the repo:
+
+    python3 scripts/check_doc_links.py
+"""
+
+import glob
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# [text](target) — skip images' leading ! handled by the same pattern,
+# and tolerate titles: [t](path "title")
+LINK_RE = re.compile(r"\[[^\]]*\]\(\s*([^)\s]+)(?:\s+\"[^\"]*\")?\s*\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def slugify(heading):
+    """GitHub's anchor algorithm: lowercase, drop punctuation, dash-join."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading.strip())
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # linked headings
+    text = text.lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(path):
+    with open(path, encoding="utf-8") as f:
+        body = FENCE_RE.sub("", f.read())
+    return {slugify(h) for h in HEADING_RE.findall(body)}
+
+
+def check_file(path):
+    problems = []
+    with open(path, encoding="utf-8") as f:
+        body = FENCE_RE.sub("", f.read())
+    for target in LINK_RE.findall(body):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        target_path, _, fragment = target.partition("#")
+        if not target_path:  # same-file anchor
+            if fragment and fragment not in anchors_of(path):
+                problems.append(f"{target} (no such heading)")
+            continue
+        resolved = os.path.normpath(
+            os.path.join(os.path.dirname(path), target_path)
+        )
+        if not os.path.exists(resolved):
+            problems.append(f"{target} -> {os.path.relpath(resolved, REPO)}")
+            continue
+        if fragment and resolved.endswith(".md"):
+            if fragment not in anchors_of(resolved):
+                problems.append(f"{target} (no such heading)")
+    return problems
+
+
+def main():
+    files = sorted(glob.glob(os.path.join(REPO, "docs", "*.md")))
+    for readme in ("README.md", os.path.join("rust", "README.md")):
+        p = os.path.join(REPO, readme)
+        if os.path.exists(p):
+            files.append(p)
+    if not files:
+        print("check_doc_links: no markdown files found", file=sys.stderr)
+        return 1
+    broken = 0
+    for path in files:
+        for problem in check_file(path):
+            rel = os.path.relpath(path, REPO)
+            print(f"BROKEN  {rel}: {problem}", file=sys.stderr)
+            broken += 1
+    checked = ", ".join(os.path.relpath(p, REPO) for p in files)
+    if broken:
+        print(f"check_doc_links: {broken} broken link(s)", file=sys.stderr)
+        return 1
+    print(f"check_doc_links: OK ({checked})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
