@@ -324,6 +324,71 @@ fn main() {
         rec.push(("evloop/n_workers".into(), vec![n as f64]));
     }
 
+    // ---- timing: telemetry overhead (PR 8) ----------------------------
+    // The disabled handle is the default on every hot emit site, so its
+    // cost — one branch, event never built — is the number that matters;
+    // the enabled path (build + render + buffered write) is recorded for
+    // contrast, along with the deterministic-bucket histogram ops.
+    {
+        use rosdhb::telemetry::{Event, Histogram, Telemetry};
+        let disabled = Telemetry::disabled();
+        let mut r = 0u64;
+        timed(
+            &mut rec,
+            "telemetry/emit disabled x1000 (the default path)",
+            5,
+            scale(200),
+            || {
+                for _ in 0..1000 {
+                    r += 1;
+                    disabled.emit(|| Event::RoundPhase {
+                        round: r,
+                        phase: "collect",
+                        micros: 17,
+                    });
+                }
+                std::hint::black_box(r);
+            },
+        );
+        assert_eq!(disabled.events_recorded(), 0);
+        let path = std::env::temp_dir()
+            .join(format!("rosdhb_bench_trace_{}.jsonl", std::process::id()));
+        let enabled = Telemetry::to_path(path.to_str().unwrap()).unwrap();
+        timed(
+            &mut rec,
+            "telemetry/emit enabled (render + buffered write)",
+            5,
+            scale(200),
+            || {
+                r += 1;
+                enabled.emit(|| Event::RoundPhase {
+                    round: r,
+                    phase: "collect",
+                    micros: 17,
+                });
+            },
+        );
+        drop(enabled);
+        let _ = std::fs::remove_file(&path);
+        let mut hist = Histogram::new();
+        let mut us = 1u64;
+        timed(
+            &mut rec,
+            "telemetry/histogram record + p99 (pow2 buckets)",
+            5,
+            scale(200),
+            || {
+                us = us.wrapping_mul(2862933555777941757).wrapping_add(3037);
+                hist.record_us(us >> 44);
+                std::hint::black_box(hist.quantile_floor_us(0.99));
+            },
+        );
+        rec.push((
+            "telemetry/histogram_samples".into(),
+            vec![hist.count() as f64],
+        ));
+    }
+
     let json_path = std::env::var("BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_transport.json".to_string());
     match bench::write_json(&json_path, &rec) {

@@ -212,6 +212,18 @@ pub struct ExperimentConfig {
     /// re-opened rendezvous. Example: `"1:-2,2:+2"` — slot 2 leaves at
     /// the end of epoch 0 and a replacement joins one epoch later.
     pub churn: String,
+    /// Telemetry journal path ("" = tracing off — every emit site
+    /// reduces to one branch on a disabled handle). The coordinator
+    /// writes `<trace_path>` as JSONL; each `join` process writes
+    /// `<trace_path>.w<id>`. Process-local observability only — never
+    /// fingerprinted, never on the wire, and provably inert: runs are
+    /// bit-identical with tracing on or off (`tests/test_telemetry.rs`).
+    pub trace_path: String,
+    /// Live status endpoint bind address ("" = off). `serve
+    /// --status_addr 127.0.0.1:7900` answers every TCP connection with
+    /// one JSON run snapshot (see `docs/OBSERVABILITY.md`).
+    /// Coordinator-local and read-only — never fingerprinted.
+    pub status_addr: String,
 }
 
 /// One membership-churn event (see [`ExperimentConfig::churn`]).
@@ -309,6 +321,8 @@ impl ExperimentConfig {
             epoch_rounds: 0,
             readmit: "next-epoch".into(),
             churn: String::new(),
+            trace_path: String::new(),
+            status_addr: String::new(),
         }
     }
 
@@ -399,6 +413,13 @@ impl ExperimentConfig {
         }
         if let Some(v) = get("churn") {
             c.churn = v.as_str().ok_or("churn: want string")?.into();
+        }
+        if let Some(v) = get("trace_path") {
+            c.trace_path = v.as_str().ok_or("trace_path: want string")?.into();
+        }
+        if let Some(v) = get("status_addr") {
+            c.status_addr =
+                v.as_str().ok_or("status_addr: want string")?.into();
         }
         if let Some(v) = get("listen_addr") {
             c.listen_addr =
@@ -506,6 +527,8 @@ impl ExperimentConfig {
                 "epoch_rounds" => c.epoch_rounds = tmp.epoch_rounds,
                 "readmit" => c.readmit = tmp.readmit.clone(),
                 "churn" => c.churn = tmp.churn.clone(),
+                "trace_path" => c.trace_path = tmp.trace_path.clone(),
+                "status_addr" => c.status_addr = tmp.status_addr.clone(),
                 other => return Err(format!("unknown config key '{other}'")),
             }
         }
@@ -723,7 +746,10 @@ impl ExperimentConfig {
             // either: both socket runtimes speak the identical wire
             // format and produce bit-identical results, so mixed-mode
             // flat runs are legal (trees additionally need matching io,
-            // enforced at plan application, not at rendezvous)
+            // enforced at plan application, not at rendezvous).
+            // `trace_path`/`status_addr` are likewise NOT hashed:
+            // telemetry is process-local observation — a traced
+            // coordinator must accept untraced workers and vice versa
             self.epoch_rounds,
             self.readmit,
         );
@@ -1025,6 +1051,35 @@ mod tests {
         let a = ExperimentConfig::default_mnist_like();
         let mut b = a.clone();
         b.io = "evloop".into();
+        assert_eq!(a.wire_fingerprint(), b.wire_fingerprint());
+    }
+
+    #[test]
+    fn telemetry_keys_parse_and_stay_out_of_fingerprint() {
+        let mut c = ExperimentConfig::default_mnist_like();
+        assert!(c.trace_path.is_empty(), "tracing must default off");
+        assert!(c.status_addr.is_empty(), "status endpoint defaults off");
+        c.set("trace_path", "/tmp/run.jsonl").unwrap();
+        c.set("status_addr", "127.0.0.1:7900").unwrap();
+        assert_eq!(c.trace_path, "/tmp/run.jsonl");
+        assert_eq!(c.status_addr, "127.0.0.1:7900");
+        c.validate().unwrap();
+
+        let doc = toml::TomlDoc::parse(
+            "[experiment]\ntrace_path = \"t.jsonl\"\nstatus_addr = \"127.0.0.1:0\"\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.trace_path, "t.jsonl");
+        assert_eq!(c.status_addr, "127.0.0.1:0");
+
+        // telemetry is observation, not wire identity: a traced
+        // coordinator must admit untraced workers, so neither key may
+        // move the fingerprint
+        let a = ExperimentConfig::default_mnist_like();
+        let mut b = a.clone();
+        b.trace_path = "/tmp/elsewhere.jsonl".into();
+        b.status_addr = "0.0.0.0:9999".into();
         assert_eq!(a.wire_fingerprint(), b.wire_fingerprint());
     }
 

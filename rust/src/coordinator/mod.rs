@@ -61,6 +61,8 @@ use crate::diagnostics;
 use crate::metrics::{MetricsLog, RoundRecord};
 use crate::model::MlpSpec;
 use crate::prng::Pcg64;
+use crate::telemetry::status::{StatusServer, StatusState};
+use crate::telemetry::{Event, Histogram, PhaseStats, Telemetry};
 use crate::tensor;
 use crate::transport::downlink::{
     self, DownlinkCodec, DownlinkMode, DownlinkStats, FanoutPlan,
@@ -73,6 +75,7 @@ use crate::worker::PjrtEngine;
 use crate::worker::{GradEngine, HonestWorker, NativeEngine};
 use anyhow::{anyhow, Result};
 use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
 use self::pool::WorkerPool;
 use self::round_transport::{LocalTransport, RoundTransport, TcpTransport};
 
@@ -189,6 +192,23 @@ pub struct RunReport {
     /// equal to `downlink_bytes` under `fanout = "flat"`, `branching/n`
     /// of it under the relay tree.
     pub coordinator_egress_bytes: u64,
+    /// The subset of `downlink_bytes` delivered by worker relays rather
+    /// than the coordinator: `downlink_bytes − coordinator_egress_bytes`
+    /// (0 under `fanout = "flat"`). Surfaces the worker-side relayed-byte
+    /// counters without a return channel — the byte model guarantees the
+    /// two views agree.
+    pub relayed_downlink_bytes: u64,
+    /// Relay-tree dense-resync fallbacks the coordinator served (tcp
+    /// transport only; 0 otherwise).
+    pub relay_resyncs: u64,
+    /// Workers evicted mid-run by the transport (tcp only; 0 otherwise).
+    pub evictions: u64,
+    /// Wall-clock histograms per round phase (broadcast / collect /
+    /// aggregate / apply). Timing only — never part of a parity oracle.
+    pub phases: PhaseStats,
+    /// Per-worker round-trip latency histograms (tcp only; empty under
+    /// the local transport). Timing only, like [`Self::phases`].
+    pub worker_latency: Vec<Histogram>,
     pub best_acc: Option<f64>,
     pub final_loss: Option<f64>,
     pub log: MetricsLog,
@@ -250,6 +270,17 @@ pub struct Trainer {
     grad_store: Vec<Vec<f32>>,
     /// Per-worker losses for the current round.
     loss_store: Vec<f32>,
+    /// Structured event journal (`config: trace_path`). Shares the TCP
+    /// transport's handle so rendezvous and round events land in one
+    /// file; a disabled handle (the default) reduces every emit site to
+    /// a single branch.
+    tel: Telemetry,
+    /// Wall-clock histograms per round phase, folded into [`RunReport`].
+    phases: PhaseStats,
+    /// Live status endpoint (`config: status_addr`); `None` when unset.
+    /// The round loop pushes a snapshot after every round and never
+    /// blocks on clients.
+    status: Option<StatusServer>,
 }
 
 impl Trainer {
@@ -400,6 +431,30 @@ impl Trainer {
                 }
             };
 
+        // --- telemetry: the TCP transport opened the journal at
+        // rendezvous (so admissions/rejections are already in it) —
+        // share that handle; a local run opens its own on the same path.
+        let tel = {
+            let t = transport.telemetry();
+            if t.enabled() || cfg.trace_path.is_empty() {
+                t
+            } else {
+                Telemetry::to_path(&cfg.trace_path).map_err(|e| {
+                    anyhow!("trace_path {:?}: {e}", cfg.trace_path)
+                })?
+            }
+        };
+        tel.install_panic_hook();
+        let status = if cfg.status_addr.is_empty() {
+            None
+        } else {
+            let srv = StatusServer::bind(&cfg.status_addr).map_err(|e| {
+                anyhow!("status_addr {:?}: {e}", cfg.status_addr)
+            })?;
+            eprintln!("rosdhb[status]: serving on {}", srv.local_addr());
+            Some(srv)
+        };
+
         Ok(Trainer {
             cfg: cfg.clone(),
             engine,
@@ -429,6 +484,9 @@ impl Trainer {
             epoch_resync: false,
             grad_store: vec![vec![0f32; d]; n_grad],
             loss_store: vec![0f32; n_grad],
+            tel,
+            phases: PhaseStats::default(),
+            status,
         })
     }
 
@@ -474,6 +532,71 @@ impl Trainer {
         self.transport.net_stats()
     }
 
+    /// The trainer's telemetry handle — the transport's journal under
+    /// tcp, its own under local; a disabled handle when `trace_path` is
+    /// empty.
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.tel
+    }
+
+    /// Bound address of the live status endpoint (`None` unless
+    /// `config: status_addr` is set) — tests bind `"127.0.0.1:0"` and
+    /// read the real port back here.
+    pub fn status_addr(&self) -> Option<std::net::SocketAddr> {
+        self.status.as_ref().map(|s| s.local_addr())
+    }
+
+    /// Wall-clock per-phase histograms accumulated so far.
+    pub fn phase_stats(&self) -> &PhaseStats {
+        &self.phases
+    }
+
+    /// Record one round phase's duration into the histogram set and the
+    /// event journal.
+    fn note_phase(&mut self, t: u64, phase: &'static str, d: Duration) {
+        let hist = match phase {
+            "broadcast" => &mut self.phases.broadcast,
+            "collect" => &mut self.phases.collect,
+            "aggregate" => &mut self.phases.aggregate,
+            _ => &mut self.phases.apply,
+        };
+        hist.record(d);
+        self.tel.emit(|| Event::RoundPhase {
+            round: t,
+            phase,
+            micros: d.as_micros() as u64,
+        });
+    }
+
+    /// Refresh the live status snapshot after round `t` (no-op unless
+    /// `status_addr` is set). The endpoint thread serves whatever the
+    /// latest call published — the round loop never blocks on clients.
+    fn push_status(&mut self, t: u64) {
+        let Some(srv) = &self.status else { return };
+        let er = self.cfg.epoch_rounds as u64;
+        let health = self.transport.health();
+        let state = StatusState {
+            algorithm: self.algorithm.name().to_string(),
+            rounds_total: self.cfg.rounds as u64,
+            round: t,
+            epoch: if er > 0 { (t - 1) / er } else { 0 },
+            slots: health.as_ref().map_or_else(Vec::new, |h| h.slots.clone()),
+            net: health.as_ref().map(|h| h.net),
+            uplink_bytes: self.meter.uplink,
+            downlink_bytes: self.meter.downlink,
+            coordinator_egress_bytes: self.meter.coordinator_egress,
+            relayed_downlink_bytes: self
+                .meter
+                .downlink
+                .saturating_sub(self.meter.coordinator_egress),
+            relay_resyncs: health.as_ref().map_or(0, |h| h.relay_resyncs),
+            evictions: health.as_ref().map_or(0, |h| h.evictions),
+            lyapunov: self.log.rows.last().and_then(|r| r.lyapunov),
+            trace_events: self.tel.events_recorded(),
+        };
+        srv.handle().update(|s| *s = state);
+    }
+
     /// Rebuild/incremental counters of the algorithm's maintained
     /// pairwise geometry (sparse engine + geometry-backed aggregator
     /// only) — lets tests pin "no O(n²d) distance recompute outside
@@ -511,13 +634,25 @@ impl Trainer {
             n,
             self.fanout.direct_count(n),
         );
+        let exchange_start = Instant::now();
         self.compute_gradients(t, resync)?;
+        let exchange = exchange_start.elapsed();
+        // The TCP transport splits broadcast/collect internally; the
+        // local transport's whole in-process exchange books as collect.
+        match self.transport.take_phase_durations() {
+            Some((b, c)) => {
+                self.note_phase(t, "broadcast", b);
+                self.note_phase(t, "collect", c);
+            }
+            None => self.note_phase(t, "collect", exchange),
+        }
         let mut loss_sum = 0.0f64;
         for &l in &self.loss_store[..nh] {
             loss_sum += l as f64;
         }
         let mean_loss = loss_sum / nh as f64;
 
+        let aggregate_start = Instant::now();
         let (honest_grads, byz_grads) = self.grad_store.split_at(nh);
         let mut env = RoundEnv {
             d: self.params.len(),
@@ -564,10 +699,12 @@ impl Trainer {
         } else {
             None
         };
+        self.note_phase(t, "aggregate", aggregate_start.elapsed());
 
         // θ_t = θ_{t-1} − γ_t·clip(R^t) — through the one shared step law
         // (`transport::downlink::apply_update`), which delta-downlink
         // worker replicas run verbatim: the two sides cannot drift.
+        let apply_start = Instant::now();
         downlink::apply_update(
             &mut self.params,
             &mut update,
@@ -576,6 +713,7 @@ impl Trainer {
             self.cfg.clip,
             t,
         );
+        self.note_phase(t, "apply", apply_start.elapsed());
         let update_norm = tensor::norm(&update);
         if !update_norm.is_finite() || !mean_loss.is_finite() {
             self.diverged = true;
@@ -591,6 +729,7 @@ impl Trainer {
             downlink_bytes: self.meter.downlink,
             lyapunov,
         });
+        self.push_status(t);
         Ok((mean_loss, update_norm))
     }
 
@@ -702,6 +841,7 @@ impl Trainer {
     /// depends on both sides invalidating the same derived caches here.
     fn epoch_boundary(&mut self, t: u64) -> Result<()> {
         let epoch = (t - 1) / self.cfg.epoch_rounds as u64;
+        self.tel.emit(|| Event::EpochTransition { epoch, round: t });
         let changed =
             self.transport
                 .epoch_boundary(epoch, &self.churn, &self.cfg)?;
@@ -771,6 +911,10 @@ impl Trainer {
                 if t % er == 0 && (t / er) % self.checkpoint_every == 0 {
                     let path = path.clone();
                     self.save_checkpoint(t, &path)?;
+                    self.tel.emit(|| Event::CheckpointWritten {
+                        round: t,
+                        path: path.display().to_string(),
+                    });
                 }
             }
         }
@@ -778,6 +922,8 @@ impl Trainer {
             self.log.save_csv(path)?;
         }
         let reached = self.reached;
+        self.tel.flush();
+        let health = self.transport.health();
         Ok(RunReport {
             algorithm: self.algorithm.name().to_string(),
             rounds_run: self.log.rows.len(),
@@ -786,6 +932,17 @@ impl Trainer {
             uplink_bytes: self.meter.uplink,
             downlink_bytes: self.meter.downlink,
             coordinator_egress_bytes: self.meter.coordinator_egress,
+            relayed_downlink_bytes: self
+                .meter
+                .downlink
+                .saturating_sub(self.meter.coordinator_egress),
+            relay_resyncs: health.as_ref().map_or(0, |h| h.relay_resyncs),
+            evictions: health.as_ref().map_or(0, |h| h.evictions),
+            phases: self.phases.clone(),
+            worker_latency: self
+                .transport
+                .worker_latency()
+                .map_or_else(Vec::new, |h| h.to_vec()),
             best_acc: self.log.best_acc(),
             final_loss: self.log.final_loss(),
             log: self.log.clone(),

@@ -63,14 +63,16 @@ use crate::compression::codec::MaskWire;
 use crate::compression::payload::{Payload, PayloadPlan};
 use crate::compression::RandK;
 use crate::config::{ChurnEvent, ExperimentConfig};
+use crate::telemetry::{Event, Histogram, Telemetry};
 use crate::transport::downlink::FanoutPlan;
 use crate::transport::evloop::ServerIo;
+use crate::transport::monitor::SlotHealth;
 use crate::transport::net::{CoordinatorServer, NetStats};
 use crate::transport::WireMessage;
 use crate::worker::{GradEngine, HonestWorker};
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::pool::{Job, WorkerPool};
 
@@ -110,6 +112,23 @@ fn zero_slot(grad: &mut Vec<f32>, loss: &mut f32, d: usize) {
 /// the counts differ when Byzantine slots are simulated server-side).
 fn membership_is_all_active(m: &[SlotMembership]) -> bool {
     m.iter().all(|s| s.active && !s.pending_left)
+}
+
+/// Observer-only snapshot of a socket transport's health, consumed by
+/// the status endpoint ([`crate::telemetry::status`]). `None` from
+/// transports that move no real bytes.
+#[derive(Clone, Debug)]
+pub struct TransportHealth {
+    /// Per-slot membership + RTT/jitter estimates.
+    pub slots: Vec<SlotHealth>,
+    /// Measured socket counters.
+    pub net: NetStats,
+    /// `RESYNC` frames the coordinator absorbed (telemetry-only — not
+    /// part of [`NetStats`], which is checkpoint-serialized).
+    pub relay_resyncs: u64,
+    /// Workers dropped from later rounds (deadline misses, broken
+    /// connections, DASHA state divergence).
+    pub evictions: u64,
 }
 
 /// One round-trip of the synchronous round loop: distribute `params`,
@@ -207,6 +226,36 @@ pub trait RoundTransport: Send {
 
     /// Diagnostic/test hook into the in-process implementation.
     fn as_local_mut(&mut self) -> Option<&mut LocalTransport> {
+        None
+    }
+
+    /// The transport's event journal (created from `config: trace_path`
+    /// at rendezvous). Disabled — a dead handle every emit site skips —
+    /// for transports without one, and whenever tracing is off.
+    fn telemetry(&self) -> Telemetry {
+        Telemetry::disabled()
+    }
+
+    /// `(broadcast, collect)` wall-clock split of the last
+    /// [`Self::exchange`], consumed once by the trainer's phase
+    /// histograms. `None` when the transport does not separate the
+    /// phases (the local pool computes and collects in one step — the
+    /// trainer then books the whole exchange under `collect`).
+    fn take_phase_durations(&mut self) -> Option<(Duration, Duration)> {
+        None
+    }
+
+    /// Live health snapshot for the status endpoint; `None` for
+    /// transports that move no real bytes.
+    fn health(&self) -> Option<TransportHealth> {
+        None
+    }
+
+    /// Per-worker uplink round-trip histograms (deterministic
+    /// power-of-two buckets, nondeterministic counts — excluded from
+    /// every parity comparison). `None` when the transport measures no
+    /// real round-trips.
+    fn worker_latency(&self) -> Option<&[Histogram]> {
         None
     }
 }
@@ -465,6 +514,16 @@ pub struct TcpTransport {
     /// monitor after every membership change (the threaded server keeps
     /// join-order placement — it is the placement oracle).
     fanout: FanoutPlan,
+    /// Event journal from `config: trace_path` (disabled when empty);
+    /// the server runtimes hold clones of the same handle.
+    telemetry: Telemetry,
+    /// `(broadcast, collect)` wall-clock split of the last exchange,
+    /// taken once per round by the trainer's phase histograms.
+    last_phase: Option<(Duration, Duration)>,
+    /// Per-worker uplink round-trip histograms (telemetry-only).
+    worker_hist: Vec<Histogram>,
+    /// Workers dropped from later rounds so far.
+    evictions: u64,
 }
 
 impl TcpTransport {
@@ -527,6 +586,12 @@ impl TcpTransport {
             crate::attacks::AttackKind::Payload(_) => (cfg.n_honest, true),
         };
         let n = cfg.n_total();
+        // Journal from the first admission on: the runtimes clone the
+        // handle, so rendezvous events (admissions, rejections) land in
+        // the same file as the round trace.
+        let telemetry = Telemetry::to_path(&cfg.trace_path)
+            .map_err(|e| anyhow!("trace_path {:?}: {e}", cfg.trace_path))?;
+        server.set_telemetry(telemetry.clone());
         let (active, pending_left): (Vec<bool>, Vec<bool>) = match membership
         {
             Some(m) if m.len() == n => m
@@ -588,6 +653,10 @@ impl TcpTransport {
             fingerprint: cfg.wire_fingerprint(),
             readmit_next_epoch: cfg.readmit == "next-epoch",
             fanout,
+            telemetry,
+            last_phase: None,
+            worker_hist: vec![Histogram::default(); n],
+            evictions: 0,
         })
     }
 
@@ -805,7 +874,9 @@ impl RoundTransport for TcpTransport {
                 *e = self.slots[w] == SlotState::Active;
             }
         }
+        let phase_start = Instant::now();
         let n_expected = self.server.broadcast(t, msg, &expect, self.timeout);
+        let broadcast_elapsed = phase_start.elapsed();
         if self.server.n_alive() == 0 {
             return Err(anyhow!(
                 "all {n_conn} workers are gone — nothing left to train with"
@@ -817,8 +888,16 @@ impl RoundTransport for TcpTransport {
                 vec![Payload::Dense { values: Vec::new() }; self.n_grad];
         }
         let mut got = vec![false; self.n_grad];
+        let collect_start = Instant::now();
         for reply in self.server.collect(n_expected, t, self.timeout) {
             let w = reply.worker as usize;
+            // telemetry-only: fold the runtime's round-trip stamp into
+            // this worker's latency histogram
+            if let Some(lat) = reply.latency {
+                if let Some(h) = self.worker_hist.get_mut(w) {
+                    h.record(lat);
+                }
+            }
             if reply.left {
                 // Graceful goodbye: this uplink still counts, the slot
                 // vacates at the next epoch boundary.
@@ -856,10 +935,23 @@ impl RoundTransport for TcpTransport {
                     }
                 }
                 Err(e) => {
-                    eprintln!("rosdhb[tcp]: round {t}: worker {w}: {e}")
+                    eprintln!("rosdhb[tcp]: round {t}: worker {w}: {e}");
+                    // an errored reply drops the worker from this
+                    // round and (deadline misses aside, which may be
+                    // readmitted) from later ones — journal it and
+                    // dump the flight recorder so the rounds leading
+                    // up to the failure are visible post-mortem
+                    self.evictions += 1;
+                    self.telemetry.emit(|| Event::WorkerEvicted {
+                        round: t,
+                        worker: w,
+                        reason: e.clone(),
+                    });
+                    self.telemetry.dump_flight_recorder("worker eviction");
                 }
             }
         }
+        self.last_phase = Some((broadcast_elapsed, collect_start.elapsed()));
         // Stalled / crashed / malformed workers degrade into a zero
         // contribution for this round (and eviction for later ones when
         // the connection is gone) — the run keeps moving.
@@ -894,6 +986,14 @@ impl RoundTransport for TcpTransport {
                 let note =
                     if matches!(self.plan, PayloadPlan::DashaDiff { .. }) {
                         self.server.evict(w);
+                        self.evictions += 1;
+                        self.telemetry.emit(|| Event::WorkerEvicted {
+                            round: t,
+                            worker: w,
+                            reason: "client-side estimate diverged".into(),
+                        });
+                        self.telemetry
+                            .dump_flight_recorder("worker eviction");
                         " (evicted: client-side estimate diverged)"
                     } else {
                         ""
@@ -1070,6 +1170,27 @@ impl RoundTransport for TcpTransport {
 
     fn shutdown(&mut self) {
         self.server.shutdown();
+    }
+
+    fn telemetry(&self) -> Telemetry {
+        self.telemetry.clone()
+    }
+
+    fn take_phase_durations(&mut self) -> Option<(Duration, Duration)> {
+        self.last_phase.take()
+    }
+
+    fn health(&self) -> Option<TransportHealth> {
+        Some(TransportHealth {
+            slots: self.server.slot_health(),
+            net: self.server.stats(),
+            relay_resyncs: self.server.relay_resyncs(),
+            evictions: self.evictions,
+        })
+    }
+
+    fn worker_latency(&self) -> Option<&[Histogram]> {
+        Some(&self.worker_hist)
     }
 }
 

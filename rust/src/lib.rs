@@ -50,6 +50,7 @@ pub mod model;
 pub mod prng;
 pub mod runtime;
 pub mod synthetic;
+pub mod telemetry;
 pub mod tensor;
 pub mod transport;
 pub mod util;

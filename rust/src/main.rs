@@ -221,6 +221,29 @@ fn report_json(
         "final_loss".into(),
         r.final_loss.map_or(Json::Null, Json::Num),
     );
+    // Timing/observability summary — only when tracing was requested, so
+    // an untraced report stays byte-identical to what it always printed
+    // (the checkpoint smoke diffs two report files with `cmp`).
+    if !cfg.trace_path.is_empty() {
+        let mut t = BTreeMap::new();
+        t.insert("phases".to_string(), r.phases.summary_json());
+        t.insert(
+            "worker_latency".into(),
+            Json::Arr(
+                r.worker_latency
+                    .iter()
+                    .map(|h| h.summary_json())
+                    .collect(),
+            ),
+        );
+        t.insert(
+            "relayed_downlink_bytes".into(),
+            Json::Num(r.relayed_downlink_bytes as f64),
+        );
+        t.insert("relay_resyncs".into(), Json::Num(r.relay_resyncs as f64));
+        t.insert("evictions".into(), Json::Num(r.evictions as f64));
+        m.insert("telemetry".into(), Json::Obj(t));
+    }
     Json::Obj(m).to_string()
 }
 

@@ -1,0 +1,577 @@
+//! Structured observability for the distributed runtime: a JSONL event
+//! journal, a crash-time flight recorder, deterministic latency
+//! histograms, and the live status endpoint ([`status`]).
+//!
+//! Everything here is **read-only instrumentation**: telemetry never
+//! enters [`wire_fingerprint`][crate::config::ExperimentConfig::wire_fingerprint],
+//! never touches the wire, and never influences a delivery or
+//! aggregation decision — every parity oracle (evloop ≡ threads ≡ local
+//! ≡ dense) holds bit-identically with tracing on or off, which
+//! `tests/test_telemetry.rs` pins.
+//!
+//! ## The journal
+//!
+//! A [`Telemetry`] handle is either *disabled* (the default — `config:
+//! trace_path` empty) or backed by one shared sink writing one JSON
+//! object per line. Emit sites call
+//! [`Telemetry::emit`] with a **closure**, so a disabled handle costs a
+//! single branch: the closure — and any allocation inside it — never
+//! runs. That zero-overhead contract is pinned by a counting test.
+//!
+//! Every line carries `"event"` (the type tag) and `"ts_us"`
+//! (microseconds on the process-local monotonic clock since the handle
+//! was created — never wall-clock, so traces are comparable across
+//! restarts and immune to NTP steps). See `docs/OBSERVABILITY.md` for
+//! the full schema.
+//!
+//! ## The flight recorder
+//!
+//! The sink keeps the last [`FLIGHT_RECORDER_CAPACITY`] rendered lines
+//! in a ring. [`Telemetry::dump_flight_recorder`] replays them to
+//! stderr — called on rendezvous rejections, worker evictions, and (via
+//! [`Telemetry::install_panic_hook`]) on panic — so a field failure is
+//! diagnosable even when nobody was watching the trace file.
+//!
+//! ## Histograms
+//!
+//! [`Histogram`] buckets microsecond durations by power of two: value
+//! `v` lands in bucket `floor(log2(v))` (0 and 1 µs share bucket 0,
+//! everything ≥ 2³¹ µs lands in bucket 31). Bucket *edges* are therefore
+//! deterministic — two runs disagree only in counts, never in shape —
+//! which is what lets phase/worker histograms ride `RunReport` and the
+//! `BENCH_*.json` emission without perturbing any byte-for-byte report
+//! comparison (they are serialized only when tracing is on).
+
+pub mod status;
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Once, OnceLock, Weak};
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// Events the flight recorder retains per process.
+pub const FLIGHT_RECORDER_CAPACITY: usize = 256;
+
+/// Power-of-two buckets in a [`Histogram`].
+pub const HISTOGRAM_BUCKETS: usize = 32;
+
+// ----------------------------------------------------------------- events
+
+/// One structured trace event. Variants carry only what their emit site
+/// already knows — building an `Event` must never require extra I/O.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// One timed phase of a synchronous round: `"broadcast"`,
+    /// `"collect"`, `"aggregate"` or `"apply"`, measured on the
+    /// monotonic clock.
+    RoundPhase {
+        round: u64,
+        phase: &'static str,
+        micros: u64,
+    },
+    /// A worker stopped contributing and was dropped from later rounds
+    /// (deadline suspension, dead socket, or a DASHA state divergence).
+    WorkerEvicted {
+        round: u64,
+        worker: usize,
+        reason: String,
+    },
+    /// A relay-tree child lost (or timed out on) its feed and fell back
+    /// to direct delivery. Emitted coordinator-side when the RESYNC
+    /// frame arrives and worker-side when the child sends it.
+    RelayResync { worker: usize },
+    /// The round loop crossed into `epoch` (membership re-derivation
+    /// point).
+    EpochTransition { epoch: u64, round: u64 },
+    /// A checkpoint was atomically written after `round`.
+    CheckpointWritten { round: u64, path: String },
+    /// A joiner completed the handshake and owns slot `worker`.
+    RendezvousAdmit { worker: usize, peer: String },
+    /// Slot `worker` was detached (graceful leave or scheduled churn).
+    RendezvousLeave { worker: usize },
+    /// A joiner was refused (protocol magic/version or config
+    /// fingerprint mismatch) — the satellite bugfix: previously this
+    /// was a bare eprintln and the peer vanished without a trace.
+    RendezvousReject { peer: String, reason: String },
+}
+
+impl Event {
+    /// The `"event"` tag of the JSONL line.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Event::RoundPhase { .. } => "round_phase",
+            Event::WorkerEvicted { .. } => "worker_evicted",
+            Event::RelayResync { .. } => "relay_resync",
+            Event::EpochTransition { .. } => "epoch_transition",
+            Event::CheckpointWritten { .. } => "checkpoint_written",
+            Event::RendezvousAdmit { .. } => "rendezvous_admit",
+            Event::RendezvousLeave { .. } => "rendezvous_leave",
+            Event::RendezvousReject { .. } => "rendezvous_reject",
+        }
+    }
+
+    /// Render one JSONL line (no trailing newline). Key order is the
+    /// sorted order `util::json` gives every object — stable across
+    /// runs, so traces diff cleanly.
+    fn render(&self, ts_us: u64) -> String {
+        let mut o = BTreeMap::new();
+        o.insert("event".into(), Json::Str(self.name().into()));
+        o.insert("ts_us".into(), Json::Num(ts_us as f64));
+        match self {
+            Event::RoundPhase { round, phase, micros } => {
+                o.insert("round".into(), Json::Num(*round as f64));
+                o.insert("phase".into(), Json::Str((*phase).into()));
+                o.insert("micros".into(), Json::Num(*micros as f64));
+            }
+            Event::WorkerEvicted { round, worker, reason } => {
+                o.insert("round".into(), Json::Num(*round as f64));
+                o.insert("worker".into(), Json::Num(*worker as f64));
+                o.insert("reason".into(), Json::Str(reason.clone()));
+            }
+            Event::RelayResync { worker } => {
+                o.insert("worker".into(), Json::Num(*worker as f64));
+            }
+            Event::EpochTransition { epoch, round } => {
+                o.insert("epoch".into(), Json::Num(*epoch as f64));
+                o.insert("round".into(), Json::Num(*round as f64));
+            }
+            Event::CheckpointWritten { round, path } => {
+                o.insert("round".into(), Json::Num(*round as f64));
+                o.insert("path".into(), Json::Str(path.clone()));
+            }
+            Event::RendezvousAdmit { worker, peer } => {
+                o.insert("worker".into(), Json::Num(*worker as f64));
+                o.insert("peer".into(), Json::Str(peer.clone()));
+            }
+            Event::RendezvousLeave { worker } => {
+                o.insert("worker".into(), Json::Num(*worker as f64));
+            }
+            Event::RendezvousReject { peer, reason } => {
+                o.insert("peer".into(), Json::Str(peer.clone()));
+                o.insert("reason".into(), Json::Str(reason.clone()));
+            }
+        }
+        Json::Obj(o).to_string()
+    }
+}
+
+// ----------------------------------------------------------------- handle
+
+/// Journal + flight-recorder state behind an enabled handle.
+struct Inner {
+    sink: Mutex<Sink>,
+    events: AtomicU64,
+    t0: Instant,
+    path: String,
+}
+
+struct Sink {
+    out: BufWriter<File>,
+    ring: VecDeque<String>,
+}
+
+/// Cheap, cloneable handle to the process's trace journal. Disabled
+/// (the default) it is a `None` — every emit site reduces to one
+/// branch, no allocation, no lock.
+#[derive(Clone)]
+pub struct Telemetry {
+    inner: Option<Arc<Inner>>,
+}
+
+impl Telemetry {
+    /// The no-op handle (`trace_path` empty).
+    pub fn disabled() -> Self {
+        Telemetry { inner: None }
+    }
+
+    /// A handle journaling to `path` as JSONL; an empty `path` yields
+    /// the disabled handle. The file is created/truncated — one trace
+    /// per run.
+    pub fn to_path(path: &str) -> io::Result<Self> {
+        if path.is_empty() {
+            return Ok(Self::disabled());
+        }
+        let file = File::create(path)?;
+        Ok(Telemetry {
+            inner: Some(Arc::new(Inner {
+                sink: Mutex::new(Sink {
+                    out: BufWriter::new(file),
+                    ring: VecDeque::with_capacity(FLIGHT_RECORDER_CAPACITY),
+                }),
+                events: AtomicU64::new(0),
+                t0: Instant::now(),
+                path: path.to_string(),
+            })),
+        })
+    }
+
+    /// The per-worker variant: `join` processes sharing the
+    /// coordinator's `trace_path` each journal to
+    /// `<trace_path>.w<worker_id>` so concurrent processes (or worker
+    /// threads in tests) never interleave writes in one file.
+    pub fn for_worker(path: &str, worker_id: u16) -> io::Result<Self> {
+        if path.is_empty() {
+            return Ok(Self::disabled());
+        }
+        Self::to_path(&format!("{path}.w{worker_id}"))
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Journal one event. `build` runs — and allocates — **only when
+    /// the handle is enabled**; a disabled handle costs exactly this
+    /// branch (the contract `tests/test_telemetry.rs` counts).
+    pub fn emit<F: FnOnce() -> Event>(&self, build: F) {
+        let Some(inner) = &self.inner else { return };
+        inner.record(build());
+    }
+
+    /// Events journaled so far (0 when disabled).
+    pub fn events_recorded(&self) -> u64 {
+        self.inner
+            .as_ref()
+            .map_or(0, |i| i.events.load(Ordering::Relaxed))
+    }
+
+    /// The journal path (empty when disabled).
+    pub fn path(&self) -> &str {
+        self.inner.as_ref().map_or("", |i| &i.path)
+    }
+
+    /// Flush buffered lines to the OS.
+    pub fn flush(&self) {
+        if let Some(inner) = &self.inner {
+            let mut s = lock(&inner.sink);
+            let _ = s.out.flush();
+        }
+    }
+
+    /// Replay the flight-recorder ring to stderr (and flush the
+    /// journal). No-op when disabled.
+    pub fn dump_flight_recorder(&self, reason: &str) {
+        let Some(inner) = &self.inner else { return };
+        let mut s = lock(&inner.sink);
+        let _ = s.out.flush();
+        let mut err = io::stderr().lock();
+        let _ = writeln!(
+            err,
+            "rosdhb[trace]: flight recorder dump ({reason}) — last {} \
+             event(s):",
+            s.ring.len()
+        );
+        for line in &s.ring {
+            let _ = writeln!(err, "rosdhb[trace]:   {line}");
+        }
+    }
+
+    /// Register this handle with the process-wide panic hook: on panic,
+    /// every live registered recorder dumps its ring before the default
+    /// hook runs. The hook itself is installed once per process;
+    /// registering is idempotent-cheap (a `Weak` push), so library
+    /// entry points call this unconditionally when tracing is on.
+    pub fn install_panic_hook(&self) {
+        let Some(inner) = &self.inner else { return };
+        let registry = panic_registry();
+        lock(registry).push(Arc::downgrade(inner));
+        static HOOK: Once = Once::new();
+        HOOK.call_once(|| {
+            let prev = std::panic::take_hook();
+            std::panic::set_hook(Box::new(move |info| {
+                let mut reg = lock(panic_registry());
+                reg.retain(|w| {
+                    if let Some(inner) = w.upgrade() {
+                        Telemetry { inner: Some(inner) }
+                            .dump_flight_recorder("panic");
+                        true
+                    } else {
+                        false
+                    }
+                });
+                drop(reg);
+                prev(info);
+            }));
+        });
+    }
+}
+
+fn panic_registry() -> &'static Mutex<Vec<Weak<Inner>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Weak<Inner>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Lock that shrugs off poisoning: telemetry must stay usable from a
+/// panic hook even when the panicking thread held the sink.
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl Inner {
+    fn record(&self, ev: Event) {
+        let ts_us = self.t0.elapsed().as_micros() as u64;
+        let line = ev.render(ts_us);
+        self.events.fetch_add(1, Ordering::Relaxed);
+        let mut s = lock(&self.sink);
+        if s.ring.len() == FLIGHT_RECORDER_CAPACITY {
+            s.ring.pop_front();
+        }
+        s.ring.push_back(line.clone());
+        // one write + flush per event: events are low-rate (a handful
+        // per round), and an abrupt exit must not lose the tail CI's
+        // check_trace.py validates
+        let _ = writeln!(s.out, "{line}");
+        let _ = s.out.flush();
+    }
+}
+
+// -------------------------------------------------------------- histogram
+
+/// The bucket a `micros` duration lands in: `floor(log2(v))`, with 0
+/// and 1 sharing bucket 0 and everything ≥ 2³¹ µs capped into bucket
+/// 31. Pure arithmetic on the value — the *edges* can never drift
+/// between runs.
+pub fn bucket_index(micros: u64) -> usize {
+    if micros == 0 {
+        0
+    } else {
+        (63 - micros.leading_zeros() as usize).min(HISTOGRAM_BUCKETS - 1)
+    }
+}
+
+/// Inclusive lower edge of bucket `i` in microseconds.
+pub fn bucket_floor_us(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        1u64 << i
+    }
+}
+
+/// Fixed-bucket latency histogram over power-of-two microsecond
+/// buckets. Deterministic edges, wall-clock counts — see the module
+/// docs for why that split matters.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Histogram {
+    buckets: [u64; HISTOGRAM_BUCKETS],
+    count: u64,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.record_us(d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn record_us(&mut self, micros: u64) {
+        self.buckets[bucket_index(micros)] += 1;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn buckets(&self) -> &[u64; HISTOGRAM_BUCKETS] {
+        &self.buckets
+    }
+
+    /// Lower edge (µs) of the bucket holding quantile `q` ∈ [0, 1] —
+    /// the deterministic-resolution answer to "p50/p99". 0 when empty.
+    pub fn quantile_floor_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64)
+            .clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_floor_us(i);
+            }
+        }
+        bucket_floor_us(HISTOGRAM_BUCKETS - 1)
+    }
+
+    /// Compact JSON summary (`count` + bucket-floor quantiles) for
+    /// report/bench emission.
+    pub fn summary_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("count".into(), Json::Num(self.count as f64));
+        o.insert(
+            "p50_us".into(),
+            Json::Num(self.quantile_floor_us(0.50) as f64),
+        );
+        o.insert(
+            "p90_us".into(),
+            Json::Num(self.quantile_floor_us(0.90) as f64),
+        );
+        o.insert(
+            "p99_us".into(),
+            Json::Num(self.quantile_floor_us(0.99) as f64),
+        );
+        Json::Obj(o)
+    }
+}
+
+/// The four per-phase histograms of the synchronous round loop.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PhaseStats {
+    pub broadcast: Histogram,
+    pub collect: Histogram,
+    pub aggregate: Histogram,
+    pub apply: Histogram,
+}
+
+impl PhaseStats {
+    /// `(phase name, histogram)` in canonical round order.
+    pub fn iter(&self) -> impl Iterator<Item = (&'static str, &Histogram)> {
+        [
+            ("broadcast", &self.broadcast),
+            ("collect", &self.collect),
+            ("aggregate", &self.aggregate),
+            ("apply", &self.apply),
+        ]
+        .into_iter()
+    }
+
+    pub fn summary_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        for (name, h) in self.iter() {
+            o.insert(name.into(), h.summary_json());
+        }
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn bucket_law_is_floor_log2_with_shared_zero_bucket() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 1);
+        assert_eq!(bucket_index(4), 2);
+        for i in 1..HISTOGRAM_BUCKETS {
+            // each bucket's floor lands in that bucket, and one less
+            // lands in the bucket below — edges are exact powers of two
+            assert_eq!(bucket_index(bucket_floor_us(i)), i);
+            assert_eq!(bucket_index(bucket_floor_us(i) - 1), i - 1);
+        }
+        // the top bucket absorbs everything, however large
+        assert_eq!(bucket_index(u64::MAX), HISTOGRAM_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_quantiles_report_bucket_floors() {
+        let mut h = Histogram::new();
+        for v in [1u64, 3, 3, 100, 5_000] {
+            h.record_us(v);
+        }
+        assert_eq!(h.count(), 5);
+        // ranks 1..=5 sit in buckets 0,1,1,6,12
+        assert_eq!(h.quantile_floor_us(0.0), 0); // rank 1 → bucket 0
+        assert_eq!(h.quantile_floor_us(0.5), 2); // rank 3 → bucket 1
+        assert_eq!(h.quantile_floor_us(0.8), 64); // rank 4 → bucket 6
+        assert_eq!(h.quantile_floor_us(1.0), 4096); // rank 5 → bucket 12
+        assert_eq!(Histogram::new().quantile_floor_us(0.5), 0);
+    }
+
+    #[test]
+    fn disabled_handle_never_runs_the_closure() {
+        let tel = Telemetry::disabled();
+        static CALLS: AtomicUsize = AtomicUsize::new(0);
+        for _ in 0..1000 {
+            tel.emit(|| {
+                CALLS.fetch_add(1, Ordering::SeqCst);
+                Event::RelayResync { worker: 0 }
+            });
+        }
+        assert_eq!(CALLS.load(Ordering::SeqCst), 0);
+        assert_eq!(tel.events_recorded(), 0);
+        assert!(!tel.enabled());
+        // dump/flush on a disabled handle are no-ops, not panics
+        tel.dump_flight_recorder("test");
+        tel.flush();
+    }
+
+    #[test]
+    fn journal_writes_one_sorted_json_object_per_line() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!(
+            "rosdhb_trace_unit_{}.jsonl",
+            std::process::id()
+        ));
+        let path_s = path.to_str().unwrap().to_string();
+        let tel = Telemetry::to_path(&path_s).unwrap();
+        assert!(tel.enabled());
+        tel.emit(|| Event::RoundPhase {
+            round: 1,
+            phase: "broadcast",
+            micros: 42,
+        });
+        tel.emit(|| Event::RendezvousReject {
+            peer: "127.0.0.1:9".into(),
+            reason: "fingerprint mismatch".into(),
+        });
+        tel.flush();
+        assert_eq!(tel.events_recorded(), 2);
+        let body = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("event").and_then(Json::as_str), Some("round_phase"));
+        assert_eq!(first.get("round").and_then(Json::as_f64), Some(1.0));
+        let second = Json::parse(lines[1]).unwrap();
+        assert_eq!(
+            second.get("event").and_then(Json::as_str),
+            Some("rendezvous_reject")
+        );
+        // monotonic timestamps
+        let t0 = first.get("ts_us").and_then(Json::as_f64).unwrap();
+        let t1 = second.get("ts_us").and_then(Json::as_f64).unwrap();
+        assert!(t1 >= t0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn flight_recorder_ring_keeps_only_the_tail() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!(
+            "rosdhb_trace_ring_{}.jsonl",
+            std::process::id()
+        ));
+        let path_s = path.to_str().unwrap().to_string();
+        let tel = Telemetry::to_path(&path_s).unwrap();
+        for r in 0..(FLIGHT_RECORDER_CAPACITY as u64 + 10) {
+            tel.emit(|| Event::RoundPhase {
+                round: r,
+                phase: "collect",
+                micros: 1,
+            });
+        }
+        let inner = tel.inner.as_ref().unwrap();
+        let s = lock(&inner.sink);
+        assert_eq!(s.ring.len(), FLIGHT_RECORDER_CAPACITY);
+        // oldest retained line is event #10, not #0
+        assert!(s.ring.front().unwrap().contains("\"round\":10"));
+        drop(s);
+        let _ = std::fs::remove_file(&path);
+    }
+}

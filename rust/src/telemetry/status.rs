@@ -1,0 +1,337 @@
+//! The live coordinator status endpoint (`serve --status_addr <addr>`).
+//!
+//! A [`StatusServer`] binds one read-only TCP listener and answers
+//! *every* connection with a single JSON snapshot of the run — epoch
+//! and round, per-slot membership with the RTT/jitter estimates of
+//! [`transport::monitor`][crate::transport::monitor], cumulative byte
+//! meters (both the modeled [`ByteMeter`][crate::transport::ByteMeter]
+//! view and the measured
+//! [`NetStats`][crate::transport::net::NetStats]), resync/eviction
+//! counts, and the latest Lyapunov snapshot when the diagnostic is on.
+//! The reply is a minimal `HTTP/1.1 200` with `Content-Length`, so
+//! `curl <addr>` works, as does a bare `nc`.
+//!
+//! The endpoint is **observer-only and one-way**: the request body is
+//! ignored, nothing here can mutate the run, and the listener lives on
+//! its own thread driven by [`transport::poller`][crate::transport::poller]
+//! — the trainer only
+//! ever *pushes* a fresh [`StatusState`] into the shared cell at the
+//! end of each round, so the round loop never blocks on a slow (or
+//! malicious) status client.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::transport::monitor::SlotHealth;
+use crate::transport::net::NetStats;
+use crate::transport::poller::Poller;
+use crate::util::json::Json;
+
+use std::collections::BTreeMap;
+
+/// The snapshot served to each connection. The trainer overwrites it
+/// once per round; serving renders whatever was last pushed.
+#[derive(Clone, Debug, Default)]
+pub struct StatusState {
+    pub algorithm: String,
+    /// Rounds the run will attempt (`config: rounds`).
+    pub rounds_total: u64,
+    /// Last completed round (0 until the first round finishes).
+    pub round: u64,
+    pub epoch: u64,
+    /// Per-slot membership + monitor estimates (empty for the local
+    /// transport, which has no sockets).
+    pub slots: Vec<SlotHealth>,
+    /// Measured socket counters (`None` for the local transport).
+    pub net: Option<NetStats>,
+    /// Modeled byte-meter view — comparable across transports.
+    pub uplink_bytes: u64,
+    pub downlink_bytes: u64,
+    pub coordinator_egress_bytes: u64,
+    /// Delivered-minus-egress: bytes the relay tree moved for the
+    /// coordinator (0 under flat fan-out).
+    pub relayed_downlink_bytes: u64,
+    /// RESYNC frames the coordinator absorbed.
+    pub relay_resyncs: u64,
+    /// Workers dropped from later rounds.
+    pub evictions: u64,
+    /// Latest `(‖δᵗ‖², Υᵗ)` when `config: lyapunov` is on.
+    pub lyapunov: Option<(f64, f64)>,
+    /// Events journaled so far (0 when tracing is off).
+    pub trace_events: u64,
+}
+
+impl StatusState {
+    fn render(&self) -> String {
+        let num = |v: u64| Json::Num(v as f64);
+        let mut o = BTreeMap::new();
+        o.insert("algorithm".into(), Json::Str(self.algorithm.clone()));
+        o.insert("rounds_total".into(), num(self.rounds_total));
+        o.insert("round".into(), num(self.round));
+        o.insert("epoch".into(), num(self.epoch));
+        o.insert(
+            "live_slots".into(),
+            num(self.slots.iter().filter(|s| s.active).count() as u64),
+        );
+        let slots: Vec<Json> = self
+            .slots
+            .iter()
+            .map(|s| {
+                let mut so = BTreeMap::new();
+                so.insert("slot".into(), num(s.slot as u64));
+                so.insert("active".into(), Json::Bool(s.active));
+                so.insert(
+                    "rtt_ms".into(),
+                    s.rtt_ms.map_or(Json::Null, Json::Num),
+                );
+                so.insert(
+                    "jitter_ms".into(),
+                    s.jitter_ms.map_or(Json::Null, Json::Num),
+                );
+                so.insert("samples".into(), num(s.samples));
+                Json::Obj(so)
+            })
+            .collect();
+        o.insert("slots".into(), Json::Arr(slots));
+        o.insert(
+            "net".into(),
+            match self.net {
+                None => Json::Null,
+                Some(n) => {
+                    let mut no = BTreeMap::new();
+                    no.insert("wire_uplink".into(), num(n.wire_uplink));
+                    no.insert("wire_downlink".into(), num(n.wire_downlink));
+                    no.insert("raw_uplink".into(), num(n.raw_uplink));
+                    no.insert("raw_downlink".into(), num(n.raw_downlink));
+                    Json::Obj(no)
+                }
+            },
+        );
+        o.insert("uplink_bytes".into(), num(self.uplink_bytes));
+        o.insert("downlink_bytes".into(), num(self.downlink_bytes));
+        o.insert(
+            "coordinator_egress_bytes".into(),
+            num(self.coordinator_egress_bytes),
+        );
+        o.insert(
+            "relayed_downlink_bytes".into(),
+            num(self.relayed_downlink_bytes),
+        );
+        o.insert("relay_resyncs".into(), num(self.relay_resyncs));
+        o.insert("evictions".into(), num(self.evictions));
+        o.insert(
+            "lyapunov".into(),
+            match self.lyapunov {
+                None => Json::Null,
+                Some((dev, drift)) => {
+                    let mut lo = BTreeMap::new();
+                    lo.insert("deviation_sq".into(), Json::Num(dev));
+                    lo.insert("drift".into(), Json::Num(drift));
+                    Json::Obj(lo)
+                }
+            },
+        );
+        o.insert("trace_events".into(), num(self.trace_events));
+        Json::Obj(o).to_string()
+    }
+}
+
+/// Shared cell between the trainer (writer) and the listener thread
+/// (reader). Cloning shares the same state.
+#[derive(Clone)]
+pub struct StatusHandle {
+    state: Arc<Mutex<StatusState>>,
+}
+
+impl StatusHandle {
+    /// Overwrite fields under the lock (the trainer's per-round push).
+    pub fn update<F: FnOnce(&mut StatusState)>(&self, f: F) {
+        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        f(&mut s);
+    }
+
+    /// Render the current snapshot (what a connection receives).
+    pub fn render(&self) -> String {
+        self.state
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .render()
+    }
+}
+
+/// The bound endpoint: listener thread + shared state. Dropping it
+/// stops the thread and closes the listener.
+pub struct StatusServer {
+    addr: SocketAddr,
+    handle: StatusHandle,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl StatusServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:7900"`; port 0 picks one) and
+    /// start serving snapshots.
+    pub fn bind(addr: &str) -> std::io::Result<StatusServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let handle = StatusHandle {
+            state: Arc::new(Mutex::new(StatusState::default())),
+        };
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut poller = Poller::new()?;
+        poller.register(listener.as_raw_fd(), 0)?;
+        let thread = {
+            let handle = handle.clone();
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name("rosdhb-status".into())
+                .spawn(move || {
+                    let mut ready = Vec::new();
+                    while !stop.load(Ordering::Relaxed) {
+                        let _ = poller
+                            .wait(Duration::from_millis(200), &mut ready);
+                        if ready.is_empty() {
+                            continue;
+                        }
+                        loop {
+                            match listener.accept() {
+                                Ok((stream, _)) => serve_one(stream, &handle),
+                                Err(e)
+                                    if e.kind()
+                                        == std::io::ErrorKind::WouldBlock =>
+                                {
+                                    break
+                                }
+                                Err(_) => break,
+                            }
+                        }
+                    }
+                })?
+        };
+        Ok(StatusServer {
+            addr: local,
+            handle,
+            stop,
+            thread: Some(thread),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn handle(&self) -> StatusHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for StatusServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Answer one connection: swallow whatever request arrived (up to the
+/// header terminator or a short timeout — readiness only ever hints)
+/// and write one snapshot as a minimal HTTP response.
+fn serve_one(mut stream: TcpStream, handle: &StatusHandle) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+    let mut buf = [0u8; 1024];
+    let mut seen: Vec<u8> = Vec::new();
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                seen.extend_from_slice(&buf[..n]);
+                if seen.windows(4).any(|w| w == b"\r\n\r\n")
+                    || seen.len() > 8192
+                {
+                    break;
+                }
+            }
+            Err(_) => break, // timeout or reset — serve the snapshot anyway
+        }
+    }
+    let body = handle.render();
+    let response = format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    let _ = stream.write_all(response.as_bytes());
+    let _ = stream.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Raw HTTP GET against the endpoint, returning the body.
+    fn http_get(addr: SocketAddr) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"GET / HTTP/1.0\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        let (head, body) = out
+            .split_once("\r\n\r\n")
+            .expect("response must carry a header/body split");
+        assert!(head.starts_with("HTTP/1.1 200"), "head: {head}");
+        body.to_string()
+    }
+
+    #[test]
+    fn status_server_serves_one_snapshot_per_connection() {
+        let srv = StatusServer::bind("127.0.0.1:0").unwrap();
+        srv.handle().update(|s| {
+            s.algorithm = "rosdhb".into();
+            s.round = 3;
+            s.epoch = 1;
+            s.rounds_total = 8;
+            s.slots = vec![
+                SlotHealth {
+                    slot: 0,
+                    active: true,
+                    rtt_ms: Some(1.25),
+                    jitter_ms: Some(0.5),
+                    samples: 3,
+                },
+                SlotHealth {
+                    slot: 1,
+                    active: false,
+                    rtt_ms: None,
+                    jitter_ms: None,
+                    samples: 0,
+                },
+            ];
+            s.uplink_bytes = 100;
+            s.lyapunov = Some((2.0, 0.25));
+        });
+        let body = http_get(srv.local_addr());
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("round").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(j.get("epoch").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.get("live_slots").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.get("uplink_bytes").and_then(Json::as_f64), Some(100.0));
+        let lyap = j.get("lyapunov").unwrap();
+        assert_eq!(
+            lyap.get("deviation_sq").and_then(Json::as_f64),
+            Some(2.0)
+        );
+        // a second connection sees the *updated* state
+        srv.handle().update(|s| s.round = 4);
+        let j2 = Json::parse(&http_get(srv.local_addr())).unwrap();
+        assert_eq!(j2.get("round").and_then(Json::as_f64), Some(4.0));
+    }
+}

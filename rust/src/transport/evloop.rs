@@ -57,7 +57,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::downlink::FanoutPlan;
-use super::monitor::{GapMonitor, RttMonitor};
+use super::monitor::{GapMonitor, RttMonitor, SlotHealth};
 use super::net::{
     build_frame, is_timeout, server_handshake, write_frame,
     CoordinatorServer, NetCounters, NetStats, RelayHub, Reply, WorkerClient,
@@ -68,6 +68,7 @@ use super::net::{
 use super::poller::Poller;
 use super::WireMessage;
 use crate::compression::payload::Payload;
+use crate::telemetry::{Event, Telemetry};
 
 /// How long a child whose parent feed died waits for its own re-plan
 /// PLAN frame before concluding the parent actually failed and sending
@@ -395,6 +396,11 @@ pub struct EvloopServer {
     /// `None` = flat (everyone direct).
     deliver_direct: Option<Vec<bool>>,
     monitor: RttMonitor,
+    /// Structured event journal (disabled by default — every emit site
+    /// is a branch on a dead handle). Never consulted for delivery or
+    /// accounting decisions, so tracing cannot perturb the parity
+    /// oracle against the threaded runtime.
+    telemetry: Telemetry,
     /// Replies assembled by read pumps, drained by [`Self::collect`].
     pending: Vec<Reply>,
     cur: Option<CurRound>,
@@ -419,6 +425,7 @@ impl EvloopServer {
             counters: NetCounters::default(),
             deliver_direct: None,
             monitor: RttMonitor::new(0),
+            telemetry: Telemetry::disabled(),
             pending: Vec::new(),
             cur: None,
             last_order: None,
@@ -440,6 +447,34 @@ impl EvloopServer {
 
     pub fn preseed_stats(&self, s: NetStats) {
         self.counters.preseed(s);
+    }
+
+    /// Install the event journal — see
+    /// [`CoordinatorServer::set_telemetry`].
+    pub fn set_telemetry(&mut self, telemetry: Telemetry) {
+        self.telemetry = telemetry;
+    }
+
+    /// `RESYNC` frames absorbed so far ([`NetCounters::relay_resyncs`]).
+    pub fn relay_resyncs(&self) -> u64 {
+        self.counters.relay_resyncs()
+    }
+
+    /// Per-slot membership + RTT/jitter estimates for the status
+    /// endpoint. The event loop's monitor also steers relay placement;
+    /// this read-only view shares it without copying any state.
+    pub fn slot_health(&self) -> Vec<SlotHealth> {
+        self.conns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| SlotHealth {
+                slot: i,
+                active: c.alive,
+                rtt_ms: self.monitor.rtt_ms(i),
+                jitter_ms: self.monitor.jitter_ms(i),
+                samples: self.monitor.samples(i),
+            })
+            .collect()
     }
 
     /// Accept exactly `expected` workers — see
@@ -531,9 +566,20 @@ impl EvloopServer {
                         Ok(()) => {
                             pending.remove(0);
                         }
-                        Err(e) => eprintln!(
-                            "rosdhb[tcp]: rejected joiner {peer}: {e}"
-                        ),
+                        Err(e) => {
+                            // structured rejection event + flight dump,
+                            // mirroring the threaded runtime: the peer
+                            // and reason must survive past stderr
+                            eprintln!(
+                                "rosdhb[tcp]: rejected joiner {peer}: {e}"
+                            );
+                            self.telemetry.emit(|| Event::RendezvousReject {
+                                peer: peer.to_string(),
+                                reason: e.to_string(),
+                            });
+                            self.telemetry
+                                .dump_flight_recorder("rendezvous rejection");
+                        }
                     }
                 }
                 Err(e) if is_timeout(&e) => {
@@ -608,6 +654,10 @@ impl EvloopServer {
             Some(s) => self.conns[s] = conn,
         }
         self.monitor.grow(self.conns.len());
+        self.telemetry.emit(|| Event::RendezvousAdmit {
+            worker: id as usize,
+            peer: peer.to_string(),
+        });
         Ok(())
     }
 
@@ -761,6 +811,9 @@ impl EvloopServer {
                 conn.pending_resync = false;
                 conn.fallback_direct = true;
                 self.counters.add_raw_uplink(FRAME_OVERHEAD as u64);
+                self.counters.add_resync();
+                self.telemetry
+                    .emit(|| Event::RelayResync { worker: i });
                 eprintln!(
                     "rosdhb[tcp]: worker {i} lost its relay feed — \
                      collapsing to direct delivery"
@@ -864,6 +917,7 @@ impl EvloopServer {
                     "missed the round deadline ({timeout:?})"
                 )),
                 left: false,
+                latency: None,
             });
             // suspend, don't kill — the socket survives for a later
             // readmit, deregistered so its buffered catch-up bytes
@@ -932,6 +986,7 @@ impl EvloopServer {
                         round: r,
                         result: Err(format!("send failed: {reason}")),
                         left: false,
+                        latency: None,
                     });
                 }
                 close_conn(poller, conn, i);
@@ -996,6 +1051,7 @@ impl EvloopServer {
             pending,
             monitor,
             poller,
+            telemetry,
             ..
         } = self;
         let conn = &mut conns[i];
@@ -1011,6 +1067,7 @@ impl EvloopServer {
                     u64::from_le_bytes(b.try_into().unwrap())
                 });
                 let left = std::mem::take(&mut conn.leaving);
+                let mut latency = None;
                 if let Some(r) = conn.expect_round {
                     if wire_round >= r {
                         // an earlier-round uplink is catch-up traffic a
@@ -1018,7 +1075,9 @@ impl EvloopServer {
                         // expecting until this round's reply arrives
                         if wire_round == r {
                             if let Some(t0) = conn.sent_at {
-                                monitor.observe(i, t0.elapsed());
+                                let rtt = t0.elapsed();
+                                monitor.observe(i, rtt);
+                                latency = Some(rtt);
                             }
                         }
                         conn.expect_round = None;
@@ -1030,6 +1089,7 @@ impl EvloopServer {
                     round: wire_round,
                     result: Ok((loss, wire)),
                     left,
+                    latency,
                 });
                 true
             }
@@ -1053,6 +1113,8 @@ impl EvloopServer {
                 }
                 counters
                     .add_raw_uplink((FRAME_OVERHEAD + body.len()) as u64);
+                counters.add_resync();
+                telemetry.emit(|| Event::RelayResync { worker: i });
                 eprintln!(
                     "rosdhb[tcp]: worker {i} lost its relay feed — \
                      collapsing to direct delivery"
@@ -1085,6 +1147,7 @@ impl EvloopServer {
                              {kind}"
                         )),
                         left: false,
+                        latency: None,
                     });
                 }
                 close_conn(poller, conn, i);
@@ -1107,6 +1170,7 @@ impl EvloopServer {
                 round: r,
                 result: Err(format!("connection lost: {e}")),
                 left: false,
+                latency: None,
             });
         }
         close_conn(poller, conn, i);
@@ -1188,6 +1252,7 @@ impl EvloopServer {
             deadline,
         );
         let _ = self.flush_writes(deadline);
+        self.telemetry.emit(|| Event::RendezvousLeave { worker });
         let EvloopServer { conns, poller, .. } = self;
         close_conn(poller, &mut conns[worker], worker);
     }
@@ -1265,6 +1330,23 @@ impl ServerIo {
 
     pub fn preseed_stats(&self, st: NetStats) {
         forward!(self, s => s.preseed_stats(st))
+    }
+
+    /// Install the event journal on the underlying runtime (before
+    /// rendezvous, to capture admissions).
+    pub fn set_telemetry(&mut self, telemetry: Telemetry) {
+        forward!(self, s => s.set_telemetry(telemetry))
+    }
+
+    /// `RESYNC` frames absorbed so far (telemetry-only counter).
+    pub fn relay_resyncs(&self) -> u64 {
+        forward!(self, s => s.relay_resyncs())
+    }
+
+    /// Per-slot membership + RTT/jitter estimates for the status
+    /// endpoint.
+    pub fn slot_health(&self) -> Vec<SlotHealth> {
+        forward!(self, s => s.slot_health())
     }
 
     pub fn rendezvous(

@@ -112,6 +112,19 @@ impl RttMonitor {
         self.samples.get(slot).copied().unwrap_or(0)
     }
 
+    /// Smoothed round-trip estimate for `slot` in milliseconds
+    /// (`None` before any sample) — read-only telemetry for the status
+    /// endpoint.
+    pub fn rtt_ms(&self, slot: usize) -> Option<f64> {
+        self.rtt.get(slot).and_then(Ewma::get).map(|s| s * 1e3)
+    }
+
+    /// Smoothed jitter estimate for `slot` in milliseconds (`None`
+    /// before any sample).
+    pub fn jitter_ms(&self, slot: usize) -> Option<f64> {
+        self.jitter.get(slot).and_then(Ewma::get).map(|s| s * 1e3)
+    }
+
     /// Placement score for `slot` (lower = better relay candidate):
     /// RTT mean + 2·jitter, in seconds. Unobserved slots score
     /// `f64::MAX` so they sort last among their capability class.
@@ -140,6 +153,25 @@ impl RttMonitor {
         });
         order
     }
+}
+
+/// One slot's membership + monitor estimates, as surfaced by the
+/// status endpoint ([`crate::telemetry::status`]) and the transport
+/// health probe. Pure observation — built fresh per snapshot.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SlotHealth {
+    pub slot: usize,
+    /// Whether the connection behind the slot is alive (joined and not
+    /// suspended/detached).
+    pub active: bool,
+    /// [`RttMonitor::rtt_ms`] for the slot (`None` before any sample —
+    /// the threaded runtime feeds its monitor from reply latencies,
+    /// the event loop from its read pump).
+    pub rtt_ms: Option<f64>,
+    /// [`RttMonitor::jitter_ms`] for the slot.
+    pub jitter_ms: Option<f64>,
+    /// Round-trip samples observed for the slot.
+    pub samples: u64,
 }
 
 /// Smoothing factor for inter-frame gap estimates.
@@ -252,6 +284,91 @@ mod tests {
             m.observe(1, Duration::from_millis(if i % 2 == 0 { 5 } else { 55 }));
         }
         assert!(m.score(0) < m.score(1));
+    }
+
+    #[test]
+    fn rtt_warmup_ties_keep_join_order_exactly() {
+        // Mixed history: some slots observed, some not. Every
+        // unobserved slot scores f64::MAX — a *tie* — and the ordering
+        // must break those ties by slot index alone, i.e. the exact
+        // join order. Any instability here would let an epoch-boundary
+        // replan during warmup diverge from the threaded placement
+        // oracle.
+        let mut m = RttMonitor::new(6);
+        m.observe(4, Duration::from_millis(5));
+        m.observe(1, Duration::from_millis(50));
+        // observed slots first (by score), then unobserved in join order
+        assert_eq!(m.order(&[true; 6]), vec![4, 1, 0, 2, 3, 5]);
+        // growth adds unobserved slots at the end of the tie block
+        m.grow(8);
+        assert_eq!(m.order(&[true; 8]), vec![4, 1, 0, 2, 3, 5, 6, 7]);
+        // and a fully unobserved monitor is join order, byte for byte
+        let fresh = RttMonitor::new(5);
+        assert_eq!(fresh.order(&[true; 5]), vec![0, 1, 2, 3, 4]);
+        assert_eq!(fresh.rtt_ms(0), None);
+        assert_eq!(fresh.jitter_ms(0), None);
+    }
+
+    #[test]
+    fn gap_monitor_warmup_boundary_is_exactly_three_samples() {
+        let mut g = GapMonitor::new();
+        let huge = Duration::from_secs(3600);
+        g.observe(Duration::from_millis(10));
+        g.observe(Duration::from_millis(10));
+        // two samples: one short of warmup — an hour of silence is
+        // still not callable
+        assert!(!g.armed());
+        assert!(!g.stalled(huge));
+        g.observe(Duration::from_millis(10));
+        // the third sample is the boundary: armed, and the same
+        // silence now trips
+        assert!(g.armed());
+        assert!(g.stalled(huge));
+    }
+
+    #[test]
+    fn ewma_single_outlier_decays_geometrically() {
+        let mut e = Ewma::new(0.25);
+        for _ in 0..10 {
+            e.update(10.0);
+        }
+        assert_eq!(e.get(), Some(10.0));
+        e.update(110.0); // one outlier: moves exactly alpha of the gap
+        assert_eq!(e.get(), Some(35.0));
+        let mut prev = 35.0;
+        for _ in 0..10 {
+            e.update(10.0);
+            let v = e.get().unwrap();
+            // each steady sample removes alpha of the remaining excess
+            assert!((v - 10.0 - (1.0 - 0.25) * (prev - 10.0)).abs() < 1e-12);
+            assert!(v < prev);
+            prev = v;
+        }
+        // after ten steady samples the outlier's trace is < 6% of its
+        // original displacement
+        assert!(prev - 10.0 < 25.0 * 0.06);
+    }
+
+    #[test]
+    fn rtt_single_outlier_does_not_flip_a_clear_ordering() {
+        // slot 0 steady at 10 ms, slot 1 steady at 20 ms; one wild
+        // 500 ms outlier on slot 0 must raise its score but the EWMA's
+        // bounded reaction (alpha = 0.2) keeps recovery fast
+        let mut m = RttMonitor::new(2);
+        for _ in 0..10 {
+            m.observe(0, Duration::from_millis(10));
+            m.observe(1, Duration::from_millis(20));
+        }
+        assert!(m.score(0) < m.score(1));
+        m.observe(0, Duration::from_millis(500));
+        let spiked = m.score(0);
+        assert!(spiked > m.score(1), "one outlier should spike the score");
+        for _ in 0..40 {
+            m.observe(0, Duration::from_millis(10));
+        }
+        // history wins back the ordering once the outlier ages out
+        assert!(m.score(0) < m.score(1));
+        assert!(m.score(0) < spiked);
     }
 
     #[test]

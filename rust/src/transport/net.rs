@@ -27,7 +27,9 @@
 //!   exactly (pinned by `rust/tests/test_transport_tcp.rs`).
 
 use super::downlink::FanoutPlan;
+use super::monitor::{RttMonitor, SlotHealth};
 use super::WireMessage;
+use crate::telemetry::{Event, Telemetry};
 use anyhow::{anyhow, Result};
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -158,12 +160,18 @@ pub struct NetStats {
 }
 
 /// Shared atomic tallies, bumped by the per-connection I/O threads.
+///
+/// `resyncs` is deliberately **not** part of [`NetStats`]: the snapshot
+/// struct is serialized into checkpoints (format v2) and must not gain
+/// fields. The resync count is surfaced separately via
+/// [`Self::relay_resyncs`] for the telemetry layer only.
 #[derive(Default)]
 pub struct NetCounters {
     wire_uplink: AtomicU64,
     wire_downlink: AtomicU64,
     raw_uplink: AtomicU64,
     raw_downlink: AtomicU64,
+    resyncs: AtomicU64,
 }
 
 impl NetCounters {
@@ -201,6 +209,17 @@ impl NetCounters {
     pub(crate) fn add_raw_downlink(&self, n: u64) {
         self.raw_downlink.fetch_add(n, Ordering::Relaxed);
     }
+
+    pub(crate) fn add_resync(&self) {
+        self.resyncs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `RESYNC` frames absorbed so far (workers whose relay feed died
+    /// and who collapsed back to direct delivery). Telemetry-only — see
+    /// the struct docs for why this is not in [`NetStats`].
+    pub fn relay_resyncs(&self) -> u64 {
+        self.resyncs.load(Ordering::Relaxed)
+    }
 }
 
 // ----------------------------------------------------------- coordinator
@@ -220,6 +239,12 @@ pub struct Reply {
     /// The worker announced a graceful leave (a `LEAVE` frame preceded
     /// this uplink): this is its final contribution of the epoch.
     pub left: bool,
+    /// Round-trip time from the broadcast write completing to this
+    /// reply's `GRAD` arriving — stamped only for current-round
+    /// successes (catch-up traffic and failures carry `None`).
+    /// Telemetry-only: feeds the [`RttMonitor`] and the per-worker
+    /// latency histograms, never a delivery decision on this runtime.
+    pub latency: Option<Duration>,
 }
 
 enum IoCmd {
@@ -265,6 +290,16 @@ pub struct CoordinatorServer {
     /// Per-worker direct-delivery flags from [`Self::apply_fanout`];
     /// `None` = flat fan-out (everyone direct).
     deliver_direct: Option<Vec<bool>>,
+    /// Structured event journal (disabled by default — every emit site
+    /// below is a branch on a dead handle). Never consulted for
+    /// delivery or accounting decisions.
+    telemetry: Telemetry,
+    /// Per-slot RTT/jitter estimates fed from [`Reply::latency`] in
+    /// [`Self::collect`]. **Observation only** on this runtime: unlike
+    /// the event-loop server, the threaded fan-out keeps join-order
+    /// relay placement, so these estimates never steer delivery — they
+    /// exist for the status endpoint ([`Self::slot_health`]).
+    monitor: RttMonitor,
 }
 
 impl CoordinatorServer {
@@ -282,7 +317,16 @@ impl CoordinatorServer {
             reply_rx,
             counters: Arc::new(NetCounters::default()),
             deliver_direct: None,
+            telemetry: Telemetry::disabled(),
+            monitor: RttMonitor::new(0),
         })
+    }
+
+    /// Install the event journal. Connections admitted *after* this
+    /// call journal through it (their I/O threads clone the handle);
+    /// call before rendezvous to capture admissions too.
+    pub fn set_telemetry(&mut self, telemetry: Telemetry) {
+        self.telemetry = telemetry;
     }
 
     pub fn local_addr(&self) -> SocketAddr {
@@ -295,6 +339,27 @@ impl CoordinatorServer {
 
     pub fn stats(&self) -> NetStats {
         self.counters.snapshot()
+    }
+
+    /// `RESYNC` frames absorbed so far ([`NetCounters::relay_resyncs`]).
+    pub fn relay_resyncs(&self) -> u64 {
+        self.counters.relay_resyncs()
+    }
+
+    /// Per-slot membership + RTT/jitter estimates for the status
+    /// endpoint — a fresh snapshot each call, never cached.
+    pub fn slot_health(&self) -> Vec<SlotHealth> {
+        self.conns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| SlotHealth {
+                slot: i,
+                active: c.alive,
+                rtt_ms: self.monitor.rtt_ms(i),
+                jitter_ms: self.monitor.jitter_ms(i),
+                samples: self.monitor.samples(i),
+            })
+            .collect()
     }
 
     /// See [`NetCounters::preseed`] — restores cumulative byte accounting
@@ -420,9 +485,22 @@ impl CoordinatorServer {
                         Ok(()) => {
                             pending.remove(0);
                         }
-                        Err(e) => eprintln!(
-                            "rosdhb[tcp]: rejected joiner {peer}: {e}"
-                        ),
+                        Err(e) => {
+                            // a rejection is a first-class event, not
+                            // just noise on stderr: journal the peer
+                            // and reason, and dump the flight recorder
+                            // so the rounds leading up to a fingerprint
+                            // mismatch are visible post-mortem
+                            eprintln!(
+                                "rosdhb[tcp]: rejected joiner {peer}: {e}"
+                            );
+                            self.telemetry.emit(|| Event::RendezvousReject {
+                                peer: peer.to_string(),
+                                reason: e.to_string(),
+                            });
+                            self.telemetry
+                                .dump_flight_recorder("rendezvous rejection");
+                        }
                     }
                 }
                 Err(e) if is_timeout(&e) => {
@@ -474,12 +552,17 @@ impl CoordinatorServer {
         )?;
         let relay_port = join.relay_port;
         stream.set_read_timeout(None)?;
+        self.telemetry.emit(|| Event::RendezvousAdmit {
+            worker: id as usize,
+            peer: peer.to_string(),
+        });
 
         let (cmd_tx, cmd_rx) = channel();
         let reply_tx = self.reply_tx.clone();
         let counters = Arc::clone(&self.counters);
+        let telemetry = self.telemetry.clone();
         let handle = std::thread::spawn(move || {
-            io_loop(stream, id, cmd_rx, reply_tx, counters);
+            io_loop(stream, id, cmd_rx, reply_tx, counters, telemetry);
         });
         let conn = Conn {
             cmd_tx: Some(cmd_tx),
@@ -513,6 +596,7 @@ impl CoordinatorServer {
                 }
             }
         }
+        self.monitor.grow(self.conns.len());
         Ok(())
     }
 
@@ -657,6 +741,12 @@ impl CoordinatorServer {
                         );
                         continue;
                     }
+                    // telemetry-only: the I/O thread stamps latency on
+                    // current-round successes; fold it into the RTT
+                    // estimates the status endpoint surfaces
+                    if let Some(lat) = reply.latency {
+                        self.monitor.observe(reply.worker as usize, lat);
+                    }
                     out.push(reply);
                 }
                 Err(RecvTimeoutError::Timeout) => break,
@@ -712,6 +802,8 @@ impl CoordinatorServer {
         if let Some(c) = self.conns.get_mut(worker) {
             if let Some(tx) = c.cmd_tx.take() {
                 let _ = tx.send(IoCmd::Bye);
+                self.telemetry
+                    .emit(|| Event::RendezvousLeave { worker });
             }
             c.handle.take();
             c.alive = false;
@@ -815,6 +907,7 @@ fn io_loop(
     cmd_rx: Receiver<IoCmd>,
     reply_tx: Sender<Reply>,
     counters: Arc<NetCounters>,
+    telemetry: Telemetry,
 ) {
     let mut fallback_direct = false;
     'cmds: for cmd in cmd_rx {
@@ -864,6 +957,7 @@ fn io_loop(
                                 round,
                                 result: Err(format!("send failed: {e}")),
                                 left: false,
+                                latency: None,
                             });
                         }
                         break;
@@ -879,6 +973,9 @@ fn io_loop(
                     continue;
                 }
                 stream.set_read_timeout(Some(timeout)).ok();
+                // round-trip clock: write (or hand-off to the relay
+                // tree) completed → current-round GRAD read
+                let sent = Instant::now();
                 let mut leaving = false;
                 loop {
                     match read_frame(&mut stream) {
@@ -911,6 +1008,11 @@ fn io_loop(
                                     body[GRAD_ENVELOPE..].to_vec(),
                                 )),
                                 left: leaving,
+                                // only the current round's reply is a
+                                // round-trip sample — catch-up traffic
+                                // measures the backlog, not the link
+                                latency: (wire_round == round)
+                                    .then(|| sent.elapsed()),
                             });
                             // an uplink from an *earlier* round is catch-up
                             // traffic a suspension left in the socket
@@ -937,6 +1039,10 @@ fn io_loop(
                                 (FRAME_OVERHEAD + body.len()) as u64,
                                 Ordering::Relaxed,
                             );
+                            counters.add_resync();
+                            telemetry.emit(|| Event::RelayResync {
+                                worker: id as usize,
+                            });
                             eprintln!(
                                 "rosdhb[tcp]: worker {id} lost its relay \
                                  feed — collapsing to direct delivery"
@@ -957,6 +1063,7 @@ fn io_loop(
                                             "resync send failed: {e}"
                                         )),
                                         left: false,
+                                        latency: None,
                                     });
                                     break 'cmds;
                                 }
@@ -978,6 +1085,7 @@ fn io_loop(
                                      got kind {kind}"
                                 )),
                                 left: false,
+                                latency: None,
                             });
                             break 'cmds;
                         }
@@ -995,6 +1103,7 @@ fn io_loop(
                                 round,
                                 result: Err(reason),
                                 left: false,
+                                latency: None,
                             });
                             if fatal {
                                 break 'cmds;

@@ -49,6 +49,7 @@ use crate::compression::{CompressorState, RandK};
 use crate::config::{Engine, ExperimentConfig};
 use crate::coordinator::build_training_workers_for_epoch;
 use crate::model::MlpSpec;
+use crate::telemetry::{Event, Telemetry};
 use crate::transport::downlink::{DownlinkMode, DownlinkReplica, FanoutPlan};
 use crate::transport::evloop::EvFeed;
 use crate::transport::net::{RelayHub, TreeFeed, WorkerClient};
@@ -224,6 +225,11 @@ pub fn join_run(
     }
     let worker_id = client.worker_id;
     let slot = worker_id as usize;
+    // Per-process journal (`{trace_path}.w{id}` — the id exists only
+    // after rendezvous, which is why the file opens here, not at dial).
+    let tel = Telemetry::for_worker(&cfg.trace_path, worker_id)
+        .map_err(|e| anyhow!("trace_path {:?}: {e}", cfg.trace_path))?;
+    tel.install_panic_hook();
     let mut feed = match hub {
         None => Feed::Direct(client),
         Some(hub) => {
@@ -282,8 +288,15 @@ pub fn join_run(
     // delivered over both the relay tree and a post-RESYNC direct
     // re-send) must not advance any state twice.
     let mut last_round = 0u64;
+    // Resync counter watermark — the feed counts internally; the journal
+    // gets one event per newly observed resync.
+    let mut seen_resyncs = 0u32;
     loop {
         let Some(msg) = feed.recv(d)? else { break };
+        while seen_resyncs < feed.resyncs() {
+            seen_resyncs += 1;
+            tel.emit(|| Event::RelayResync { worker: slot });
+        }
         let (round, mask_seed, owned_params): (u64, Option<u64>, Option<Vec<f32>>) =
             match msg {
                 WireMessage::ModelBroadcast {
@@ -334,6 +347,7 @@ pub fn join_run(
             let epoch = (round - 1) / cfg.epoch_rounds as u64;
             if epoch != current_epoch {
                 current_epoch = epoch;
+                tel.emit(|| Event::EpochTransition { epoch, round });
                 if worker.is_some() {
                     worker = build_slot_worker(cfg, slot, &attack, epoch)?.0;
                 }
@@ -410,6 +424,11 @@ pub fn join_run(
         }
     }
     let (relayed_wire_bytes, relayed_raw_bytes) = feed.relayed();
+    while seen_resyncs < feed.resyncs() {
+        seen_resyncs += 1;
+        tel.emit(|| Event::RelayResync { worker: slot });
+    }
+    tel.flush();
     Ok(JoinSummary {
         worker_id,
         rounds,

@@ -1,0 +1,398 @@
+//! Telemetry must be a pure observer. The tracing-invariance test is
+//! the subsystem's core contract: a run with the event journal *and*
+//! the live status endpoint enabled is bit-identical — report, per-round
+//! log, wire bytes, raw socket bytes — to the same run with both off,
+//! across the evloop runtime, the relay tree and the local oracle. The
+//! remaining tests pin the journal's well-formedness, the status
+//! endpoint's snapshot against ground truth (including a scripted
+//! mid-run eviction), the structured rendezvous-rejection event, and
+//! the disabled handle's zero-cost contract.
+
+use rosdhb::config::ExperimentConfig;
+use rosdhb::coordinator::round_transport::TcpTransport;
+use rosdhb::coordinator::{RunReport, Trainer};
+use rosdhb::model::MlpSpec;
+use rosdhb::telemetry::{Event, Telemetry};
+use rosdhb::transport::evloop::ServerIo;
+use rosdhb::transport::net::{CoordinatorServer, NetStats, WorkerClient};
+use rosdhb::util::json::Json;
+use rosdhb::worker::remote::{join_run, JoinOpts, JoinSummary};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::thread;
+use std::time::Duration;
+
+fn base_cfg() -> ExperimentConfig {
+    let mut c = ExperimentConfig::default_mnist_like();
+    c.n_honest = 4;
+    c.n_byz = 0;
+    c.attack = "none".into();
+    c.aggregator = "cwtm".into();
+    c.k_frac = 0.1;
+    c.rounds = 5;
+    c.eval_every = 2;
+    c.batch = 30;
+    c.train_size = 600;
+    c.test_size = 200;
+    c.stop_at_tau = false;
+    c.seed = 7;
+    c.transport = "tcp".into();
+    c.round_timeout_ms = 20_000;
+    c
+}
+
+/// A per-test scratch path under the OS temp dir (unique per process +
+/// tag; tests within one process use distinct tags).
+fn scratch(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("rosdhb_tel_{}_{tag}", std::process::id()))
+}
+
+/// Loopback TCP run: coordinator (and its status endpoint, when
+/// configured) on this thread, one worker thread per cap entry (a cap
+/// injects a mid-run crash after that many rounds). Returns the report,
+/// measured traffic, the status endpoint's final snapshot (fetched
+/// after the last round, before shutdown) and the worker outcomes.
+fn run_tcp(
+    cfg: &ExperimentConfig,
+    worker_caps: &[Option<u64>],
+) -> (
+    RunReport,
+    NetStats,
+    Option<Json>,
+    Vec<anyhow::Result<JoinSummary>>,
+) {
+    assert_eq!(worker_caps.len(), cfg.n_total());
+    let server = ServerIo::bind("127.0.0.1:0", &cfg.io).unwrap();
+    let addr = server.local_addr().to_string();
+    let handles: Vec<_> = worker_caps
+        .iter()
+        .map(|cap| {
+            let cfg = cfg.clone();
+            let addr = addr.clone();
+            let cap = *cap;
+            thread::spawn(move || {
+                join_run(
+                    &cfg,
+                    &addr,
+                    Duration::from_secs(20),
+                    JoinOpts {
+                        max_rounds: cap,
+                        ..Default::default()
+                    },
+                )
+            })
+        })
+        .collect();
+    let d = MlpSpec::default().p();
+    let transport = TcpTransport::rendezvous_io(server, cfg, d).unwrap();
+    let mut trainer = Trainer::with_transport(cfg, Box::new(transport)).unwrap();
+    let report = trainer.run().unwrap();
+    let stats = trainer.net_stats().unwrap();
+    let snapshot = trainer.status_addr().map(|a| http_get_json(a));
+    trainer.shutdown_transport(); // BYE — releases the worker threads
+    let outcomes = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    (report, stats, snapshot, outcomes)
+}
+
+fn run_local(cfg: &ExperimentConfig) -> RunReport {
+    let mut local = cfg.clone();
+    local.transport = "local".into();
+    Trainer::from_config(&local).unwrap().run().unwrap()
+}
+
+/// One plain HTTP/1.0 GET against the status endpoint; parses the body.
+fn http_get_json(addr: SocketAddr) -> Json {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(b"GET / HTTP/1.0\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    let body = buf
+        .split_once("\r\n\r\n")
+        .expect("HTTP response must have a header/body split")
+        .1;
+    Json::parse(body).expect("status body must be valid JSON")
+}
+
+/// Every field that must match for "bit-identical RunReport". Phase and
+/// latency histograms are wall-clock measurements and deliberately not
+/// part of any parity oracle.
+fn assert_reports_identical(a: &RunReport, b: &RunReport) {
+    assert_eq!(a.algorithm, b.algorithm);
+    assert_eq!(a.rounds_run, b.rounds_run);
+    assert_eq!(a.rounds_to_tau, b.rounds_to_tau);
+    assert_eq!(a.uplink_bytes_to_tau, b.uplink_bytes_to_tau);
+    assert_eq!(a.uplink_bytes, b.uplink_bytes);
+    assert_eq!(a.downlink_bytes, b.downlink_bytes);
+    assert_eq!(a.coordinator_egress_bytes, b.coordinator_egress_bytes);
+    assert_eq!(a.relayed_downlink_bytes, b.relayed_downlink_bytes);
+    assert_eq!(a.best_acc, b.best_acc);
+    assert_eq!(a.final_loss, b.final_loss);
+    assert_eq!(a.log.rows.len(), b.log.rows.len());
+    for (ra, rb) in a.log.rows.iter().zip(&b.log.rows) {
+        assert_eq!(ra.round, rb.round);
+        assert_eq!(ra.train_loss, rb.train_loss, "round {}", ra.round);
+        assert_eq!(ra.update_norm, rb.update_norm, "round {}", ra.round);
+        assert_eq!(ra.test_acc, rb.test_acc, "round {}", ra.round);
+        assert_eq!(ra.uplink_bytes, rb.uplink_bytes, "round {}", ra.round);
+        assert_eq!(ra.downlink_bytes, rb.downlink_bytes, "round {}", ra.round);
+    }
+}
+
+const KNOWN_EVENTS: &[&str] = &[
+    "round_phase",
+    "worker_evicted",
+    "relay_resync",
+    "epoch_transition",
+    "checkpoint_written",
+    "rendezvous_admit",
+    "rendezvous_leave",
+    "rendezvous_reject",
+];
+
+/// Validate one JSONL journal: every line parses, names a known event,
+/// and timestamps never go backwards. Returns the parsed events.
+fn validate_trace(path: &std::path::Path) -> Vec<Json> {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("trace {path:?} unreadable: {e}"));
+    let mut last_ts = 0.0f64;
+    let mut events = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let v = Json::parse(line)
+            .unwrap_or_else(|e| panic!("{path:?} line {}: {e}", i + 1));
+        let name = v
+            .get("event")
+            .and_then(Json::as_str)
+            .unwrap_or_else(|| panic!("{path:?} line {} has no event", i + 1));
+        assert!(
+            KNOWN_EVENTS.contains(&name),
+            "{path:?} line {}: unknown event {name:?}",
+            i + 1
+        );
+        let ts = v.get("ts_us").and_then(Json::as_f64).unwrap();
+        assert!(ts >= last_ts, "{path:?} line {}: ts went backwards", i + 1);
+        last_ts = ts;
+        events.push(v);
+    }
+    events
+}
+
+#[test]
+fn tracing_and_status_endpoint_leave_the_run_bit_identical() {
+    // the hardest configuration the observer could perturb: relay-tree
+    // fan-out on the event-loop runtime, with both the journal and the
+    // status endpoint live
+    let mut plain = base_cfg();
+    plain.set("fanout", "tree").unwrap();
+    plain.set("branching", "2").unwrap();
+    plain.io = "evloop".into();
+
+    let trace = scratch("invariance.jsonl");
+    let _ = std::fs::remove_file(&trace);
+    let mut traced = plain.clone();
+    traced.trace_path = trace.to_str().unwrap().to_string();
+    traced.status_addr = "127.0.0.1:0".into();
+    // telemetry keys must never reach the wire contract: a traced
+    // worker can join an untraced coordinator and vice versa
+    assert_eq!(plain.wire_fingerprint(), traced.wire_fingerprint());
+
+    let caps = vec![None; plain.n_total()];
+    let (rep_on, st_on, snap, out_on) = run_tcp(&traced, &caps);
+    let (rep_off, st_off, no_snap, out_off) = run_tcp(&plain, &caps);
+    assert!(snap.is_some(), "status endpoint must have served");
+    assert!(no_snap.is_none(), "no endpoint without status_addr");
+    for o in out_on.iter().chain(&out_off) {
+        let s = o.as_ref().expect("worker must finish cleanly");
+        assert_eq!(s.rounds, plain.rounds as u64);
+    }
+
+    // the observer effect, pinned: report + per-round log + wire bytes
+    // + raw socket bytes all bit-identical with telemetry on vs off —
+    // and both equal to the in-process oracle (traced and untraced)
+    assert_reports_identical(&rep_on, &rep_off);
+    assert_eq!(st_on.wire_uplink, st_off.wire_uplink);
+    assert_eq!(st_on.wire_downlink, st_off.wire_downlink);
+    assert_eq!(st_on.raw_uplink, st_off.raw_uplink);
+    assert_eq!(st_on.raw_downlink, st_off.raw_downlink);
+    assert_reports_identical(&rep_on, &run_local(&plain));
+    let local_trace = scratch("invariance_local.jsonl");
+    let _ = std::fs::remove_file(&local_trace);
+    let mut traced_local = plain.clone();
+    traced_local.trace_path = local_trace.to_str().unwrap().to_string();
+    assert_reports_identical(&rep_on, &run_local(&traced_local));
+
+    // untraced runs never opened a journal; traced runs wrote valid
+    // JSONL — coordinator plus one file per worker process
+    let events = validate_trace(&trace);
+    // per round: broadcast/collect/aggregate/apply, in order
+    let phases: Vec<(u64, String)> = events
+        .iter()
+        .filter(|e| e.get("event").and_then(Json::as_str) == Some("round_phase"))
+        .map(|e| {
+            (
+                e.get("round").and_then(Json::as_f64).unwrap() as u64,
+                e.get("phase").and_then(Json::as_str).unwrap().to_string(),
+            )
+        })
+        .collect();
+    let want: Vec<(u64, String)> = (1..=plain.rounds as u64)
+        .flat_map(|r| {
+            ["broadcast", "collect", "aggregate", "apply"]
+                .into_iter()
+                .map(move |p| (r, p.to_string()))
+        })
+        .collect();
+    assert_eq!(phases, want, "phase events must cover every round in order");
+    let admits = events
+        .iter()
+        .filter(|e| {
+            e.get("event").and_then(Json::as_str) == Some("rendezvous_admit")
+        })
+        .count();
+    assert_eq!(admits, plain.n_total(), "one admit per rendezvoused worker");
+    for w in 0..plain.n_total() {
+        let wpath = PathBuf::from(format!("{}.w{w}", trace.display()));
+        validate_trace(&wpath);
+        let _ = std::fs::remove_file(&wpath);
+    }
+    let _ = std::fs::remove_file(&trace);
+    let _ = std::fs::remove_file(&local_trace);
+    for w in 0..plain.n_total() {
+        let _ =
+            std::fs::remove_file(format!("{}.w{w}", local_trace.display()));
+    }
+}
+
+#[test]
+fn status_endpoint_snapshot_matches_ground_truth_after_eviction() {
+    let mut cfg = base_cfg();
+    cfg.status_addr = "127.0.0.1:0".into();
+    // worker 0 crashes after 2 rounds: the collect deadline evicts it
+    // and the run completes on the survivors
+    let mut caps = vec![None; cfg.n_total()];
+    caps[0] = Some(2);
+    let (report, stats, snap, outcomes) = run_tcp(&cfg, &caps);
+    let crashed: Vec<u64> = outcomes
+        .iter()
+        .map(|o| o.as_ref().unwrap().rounds)
+        .filter(|&r| r == 2)
+        .collect();
+    assert_eq!(crashed.len(), 1, "exactly one worker crashed on schedule");
+    assert_eq!(report.rounds_run, cfg.rounds);
+    assert!(report.evictions >= 1, "the crash must surface as an eviction");
+
+    let snap = snap.expect("status endpoint must have served");
+    let num =
+        |k: &str| snap.get(k).and_then(Json::as_f64).unwrap_or_else(|| {
+            panic!("snapshot missing numeric key {k:?}: {snap}")
+        }) as u64;
+    assert_eq!(snap.get("algorithm").and_then(Json::as_str), Some("rosdhb"));
+    assert_eq!(num("round"), cfg.rounds as u64);
+    assert_eq!(num("rounds_total"), cfg.rounds as u64);
+    assert_eq!(num("epoch"), 0);
+    assert_eq!(
+        num("live_slots"),
+        cfg.n_total() as u64 - 1,
+        "the evicted slot must be off the live roster: {snap}"
+    );
+    assert_eq!(num("evictions"), report.evictions);
+    assert_eq!(num("relay_resyncs"), 0);
+    // byte meters: the snapshot was pushed after the last round, so it
+    // agrees with the final report and the measured socket counters
+    assert_eq!(num("uplink_bytes"), report.uplink_bytes);
+    assert_eq!(num("downlink_bytes"), report.downlink_bytes);
+    assert_eq!(
+        num("coordinator_egress_bytes"),
+        report.coordinator_egress_bytes
+    );
+    assert_eq!(
+        num("relayed_downlink_bytes"),
+        report.downlink_bytes - report.coordinator_egress_bytes
+    );
+    let net = snap.get("net").expect("tcp snapshot carries net counters");
+    let net_num = |k: &str| net.get(k).and_then(Json::as_f64).unwrap() as u64;
+    assert_eq!(net_num("wire_uplink"), stats.wire_uplink);
+    assert_eq!(net_num("wire_downlink"), stats.wire_downlink);
+    assert_eq!(net_num("raw_uplink"), stats.raw_uplink);
+    assert_eq!(net_num("raw_downlink"), stats.raw_downlink);
+    // per-slot health: n rows, the crashed one inactive
+    let Some(Json::Arr(slots)) = snap.get("slots") else {
+        panic!("snapshot must carry a slots array: {snap}")
+    };
+    assert_eq!(slots.len(), cfg.n_total());
+    let active = slots
+        .iter()
+        .filter(|s| s.get("active") == Some(&Json::Bool(true)))
+        .count();
+    assert_eq!(active, cfg.n_total() - 1);
+}
+
+#[test]
+fn rendezvous_rejection_is_journaled_with_the_peers_reason() {
+    let trace = scratch("reject.jsonl");
+    let _ = std::fs::remove_file(&trace);
+    let mut server = CoordinatorServer::bind("127.0.0.1:0").unwrap();
+    server.set_telemetry(Telemetry::to_path(trace.to_str().unwrap()).unwrap());
+    let addr = server.local_addr().to_string();
+    let rendezvous = thread::spawn(move || {
+        server
+            .rendezvous(1, 42, Duration::from_secs(10))
+            .map(|_| server)
+    });
+    // sequential on this thread: the rejection fully completes before
+    // the good joiner dials in
+    let err = WorkerClient::connect(&addr, 999, Duration::from_secs(5))
+        .err()
+        .expect("mismatched fingerprint must be refused");
+    assert!(err.to_string().contains("fingerprint"), "{err}");
+    let good = WorkerClient::connect(&addr, 42, Duration::from_secs(5)).unwrap();
+    assert_eq!(good.worker_id, 0);
+    let mut server = rendezvous.join().unwrap().unwrap();
+
+    let events = validate_trace(&trace);
+    let reject = events
+        .iter()
+        .find(|e| {
+            e.get("event").and_then(Json::as_str) == Some("rendezvous_reject")
+        })
+        .expect("the rejection must be a structured event, not just stderr");
+    assert!(
+        reject
+            .get("reason")
+            .and_then(Json::as_str)
+            .is_some_and(|r| r.contains("fingerprint")),
+        "rejection reason must name the fingerprint mismatch: {reject}"
+    );
+    assert!(
+        events.iter().any(|e| {
+            e.get("event").and_then(Json::as_str) == Some("rendezvous_admit")
+                && e.get("worker").and_then(Json::as_f64) == Some(0.0)
+        }),
+        "the good joiner's admit must also be journaled"
+    );
+    server.shutdown();
+    let _ = std::fs::remove_file(&trace);
+}
+
+#[test]
+fn disabled_handle_never_builds_events() {
+    // the zero-overhead contract every hot-path emit site relies on: a
+    // disabled handle must not even *construct* the event
+    let tel = Telemetry::disabled();
+    let mut built = 0u64;
+    for _ in 0..1_000 {
+        tel.emit(|| {
+            built += 1;
+            Event::RelayResync { worker: 0 }
+        });
+    }
+    assert_eq!(built, 0, "disabled emit must never run the closure");
+    assert_eq!(tel.events_recorded(), 0);
+    assert!(!tel.enabled());
+    tel.flush();
+    tel.dump_flight_recorder("noop");
+
+    // and an empty trace_path is the disabled handle, both spellings
+    assert!(!Telemetry::to_path("").unwrap().enabled());
+    assert!(!Telemetry::for_worker("", 3).unwrap().enabled());
+}

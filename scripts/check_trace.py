@@ -1,0 +1,155 @@
+#!/usr/bin/env python3
+"""Validate rosdhb telemetry artifacts (stdlib only; CI smoke gate).
+
+Usage:
+    python3 scripts/check_trace.py TRACE.jsonl [TRACE.jsonl.w0 ...] \
+        [--status status.json] [--report report.json]
+
+Each trace file must be well-formed JSONL: every line a JSON object
+naming a known event, carrying that event's required keys, with
+monotonically non-decreasing ``ts_us`` and (for ``round_phase``)
+non-decreasing round numbers. ``--status`` checks one snapshot from the
+live status endpoint; ``--report`` checks the run report printed by a
+traced ``rosdhb serve``/``train`` (which must carry the ``telemetry``
+section exactly when tracing was on).
+"""
+
+import argparse
+import json
+import sys
+
+# event name -> keys required alongside "event" and "ts_us"
+EVENT_KEYS = {
+    "round_phase": {"round", "phase", "micros"},
+    "worker_evicted": {"round", "worker", "reason"},
+    "relay_resync": {"worker"},
+    "epoch_transition": {"epoch", "round"},
+    "checkpoint_written": {"round", "path"},
+    "rendezvous_admit": {"worker", "peer"},
+    "rendezvous_leave": {"worker"},
+    "rendezvous_reject": {"peer", "reason"},
+}
+
+PHASES = ("broadcast", "collect", "aggregate", "apply")
+
+STATUS_KEYS = {
+    "algorithm",
+    "rounds_total",
+    "round",
+    "epoch",
+    "live_slots",
+    "slots",
+    "uplink_bytes",
+    "downlink_bytes",
+    "coordinator_egress_bytes",
+    "relayed_downlink_bytes",
+    "relay_resyncs",
+    "evictions",
+    "net",
+    "lyapunov",
+    "trace_events",
+}
+
+
+def fail(msg):
+    print(f"check_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_trace(path):
+    last_ts = -1
+    last_round = 0
+    counts = {}
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line:
+                fail(f"{path}:{lineno}: blank line in JSONL journal")
+            try:
+                ev = json.loads(line)
+            except ValueError as e:
+                fail(f"{path}:{lineno}: not JSON: {e}")
+            if not isinstance(ev, dict):
+                fail(f"{path}:{lineno}: not an object")
+            name = ev.get("event")
+            if name not in EVENT_KEYS:
+                fail(f"{path}:{lineno}: unknown event {name!r}")
+            missing = EVENT_KEYS[name] - ev.keys()
+            if missing:
+                fail(f"{path}:{lineno}: {name} missing {sorted(missing)}")
+            ts = ev.get("ts_us")
+            if not isinstance(ts, int) or ts < last_ts:
+                fail(f"{path}:{lineno}: ts_us {ts!r} not monotone")
+            last_ts = ts
+            if name == "round_phase":
+                if ev["phase"] not in PHASES:
+                    fail(f"{path}:{lineno}: unknown phase {ev['phase']!r}")
+                if ev["round"] < last_round:
+                    fail(
+                        f"{path}:{lineno}: round_phase round went backwards "
+                        f"({last_round} -> {ev['round']})"
+                    )
+                last_round = ev["round"]
+            counts[name] = counts.get(name, 0) + 1
+    if not counts:
+        fail(f"{path}: journal is empty")
+    summary = ", ".join(f"{k}={v}" for k, v in sorted(counts.items()))
+    print(f"check_trace: {path}: OK ({summary})")
+    return counts
+
+
+def check_status(path):
+    with open(path, encoding="utf-8") as fh:
+        snap = json.load(fh)
+    missing = STATUS_KEYS - snap.keys()
+    if missing:
+        fail(f"{path}: status snapshot missing {sorted(missing)}")
+    if not isinstance(snap["slots"], list):
+        fail(f"{path}: slots is not an array")
+    live = sum(1 for s in snap["slots"] if s.get("active"))
+    if snap["live_slots"] != live:
+        fail(
+            f"{path}: live_slots={snap['live_slots']} but {live} slots "
+            "are active"
+        )
+    if snap["relayed_downlink_bytes"] != (
+        snap["downlink_bytes"] - snap["coordinator_egress_bytes"]
+    ):
+        fail(f"{path}: relayed_downlink_bytes breaks the byte identity")
+    print(
+        f"check_trace: {path}: OK (round {snap['round']}/"
+        f"{snap['rounds_total']}, {snap['live_slots']} live)"
+    )
+
+
+def check_report(path):
+    with open(path, encoding="utf-8") as fh:
+        rep = json.load(fh)
+    tel = rep.get("telemetry")
+    if tel is None:
+        fail(f"{path}: traced run report has no telemetry section")
+    for key in ("phases", "worker_latency", "relayed_downlink_bytes"):
+        if key not in tel:
+            fail(f"{path}: telemetry section missing {key!r}")
+    for phase in PHASES:
+        if phase not in tel["phases"]:
+            fail(f"{path}: telemetry.phases missing {phase!r}")
+    print(f"check_trace: {path}: OK (telemetry section present)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("traces", nargs="+", help="JSONL trace files")
+    ap.add_argument("--status", help="status endpoint snapshot to validate")
+    ap.add_argument("--report", help="traced run report JSON to validate")
+    args = ap.parse_args()
+    for path in args.traces:
+        check_trace(path)
+    if args.status:
+        check_status(args.status)
+    if args.report:
+        check_report(args.report)
+
+
+if __name__ == "__main__":
+    main()
