@@ -10,7 +10,7 @@
 
 use rosdhb::aggregators;
 use rosdhb::aggregators::geometry::RefreshPeriod;
-use rosdhb::algorithms::{rosdhb::RoSdhb, Algorithm, RoundEnv};
+use rosdhb::algorithms::{rosdhb::RoSdhb, Algorithm, RoundEnv, UplinkCtx};
 use rosdhb::attacks::AttackKind;
 use rosdhb::prng::Pcg64;
 use rosdhb::synthetic::QuadraticWorld;
@@ -47,6 +47,7 @@ fn run_variant(local: bool, k: usize, t_max: u64, probes: &[u64]) -> Vec<f64> {
             meter: &mut meter,
             rng: &mut rng,
             payloads: None,
+            uplink: UplinkCtx::Forward,
         };
         let r = alg.round(t, &grads, &[], &mut env);
         tensor::axpy(&mut theta, -gamma, &r);

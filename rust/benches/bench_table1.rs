@@ -16,7 +16,9 @@
 
 use rosdhb::aggregators;
 use rosdhb::aggregators::geometry::RefreshPeriod;
-use rosdhb::algorithms::{baselines, dasha, rosdhb::RoSdhb, Algorithm, RoundEnv};
+use rosdhb::algorithms::{
+    baselines, dasha, rosdhb::RoSdhb, Algorithm, RoundEnv, UplinkCtx,
+};
 use rosdhb::attacks::{parse_spec as parse_attack, AttackKind};
 use rosdhb::prng::Pcg64;
 use rosdhb::synthetic::QuadraticWorld;
@@ -59,6 +61,7 @@ fn grad_h_sq_at(run: &mut Run, world: &QuadraticWorld, t_max: u64, probes: &[u64
             meter: &mut meter,
             rng: &mut rng,
             payloads: None,
+            uplink: UplinkCtx::Forward,
         };
         let r = run.alg.round(t, &grads, &[], &mut env);
         tensor::axpy(&mut theta, -run.gamma, &r);

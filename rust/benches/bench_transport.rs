@@ -14,6 +14,12 @@
 //! workers on two OS threads total — a matrix the per-connection
 //! thread-pair runtime cannot enter at the same thread budget.
 //!
+//! PR 9 adds the uplink mirror: coordinator *ingress* for
+//! value-forwarding vs tree-aggregated uplinks (`uplink = "aggregate"`,
+//! asserted >= 5x smaller at the bench sizes) and a loopback A/B of the
+//! copy-then-write frame send against the vectored one the fan-out hot
+//! paths use.
+//!
 //! Run: `cargo bench --bench bench_transport`. `BENCH_SMOKE=1` shortens
 //! the pass (the CI smoke-bench job uses it); the JSON lands at
 //! `BENCH_transport.json` (override with `BENCH_JSON=path`).
@@ -109,6 +115,109 @@ fn main() {
             "#   -> delta+tree egress reduction at n={n}: {:.1}x",
             flat / tree
         );
+    }
+
+    // ---- byte model: coordinator ingress, forwarded vs aggregated -----
+    // The uplink mirror of the egress table: value-forwarding delivers n
+    // frames to the coordinator; tree aggregation delivers one
+    // accumulated frame per *root* relay. Both rows come straight from
+    // the wire model (`agg_body_len` over a `ReducePlan`) that
+    // `rust/tests/test_uplink_agg.rs` pins against measured socket
+    // bytes, so the reduction factor below is exact, not sampled.
+    {
+        use rosdhb::transport::uplink::{
+            agg_body_len, agg_dense_payload_len, meter_model, ReducePlan,
+        };
+        use rosdhb::transport::ByteMeter;
+        println!(
+            "# per-round uplink ingress at d={D} (dense summands), b=3"
+        );
+        for n in [19usize, 100] {
+            let active = vec![true; n];
+            let plan = ReducePlan::new(3, &active);
+            let flat =
+                (n * agg_body_len(1, agg_dense_payload_len(D))) as f64;
+            let mut meter = ByteMeter::default();
+            meter_model(&plan, true, &mut meter, |_| {
+                agg_dense_payload_len(D)
+            });
+            let tree = meter.coordinator_ingress as f64;
+            let relayed =
+                (meter.uplink - meter.coordinator_ingress) as f64;
+            let factor = flat / tree;
+            println!(
+                "# n={n:<4} flat ingress {flat:>12} B   tree-b3 ingress \
+                 {tree:>12} B   ({factor:.1}x)"
+            );
+            assert!(
+                factor >= 5.0,
+                "tree aggregation must cut coordinator ingress >= 5x at \
+                 n={n}: got {factor:.2}x"
+            );
+            rec.push((
+                format!("model/n{n}/agg-flat/coordinator_ingress_per_round"),
+                vec![flat],
+            ));
+            rec.push((
+                format!(
+                    "model/n{n}/agg-tree-b3/coordinator_ingress_per_round"
+                ),
+                vec![tree],
+            ));
+            rec.push((
+                format!("model/n{n}/agg-tree-b3/relayed_uplink_per_round"),
+                vec![relayed],
+            ));
+        }
+    }
+
+    // ---- timing: copy-then-write vs vectored frame send ---------------
+    // The fan-out hot paths (relay forwards, aggregated uplinks) write
+    // one body to several sockets; `write_frame_vectored` skips the
+    // per-recipient scratch-buffer assembly that `write_frame` pays.
+    {
+        use rosdhb::transport::net::{write_frame, write_frame_vectored};
+        use std::io::Read;
+        use std::net::{TcpListener, TcpStream};
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let drain = thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut sink = vec![0u8; 1 << 16];
+            let mut total = 0usize;
+            loop {
+                match s.read(&mut sink) {
+                    Ok(0) | Err(_) => break,
+                    Ok(k) => total += k,
+                }
+            }
+            total
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        // a dense-summand-sized body: the aggregated-uplink steady state
+        let body = vec![0x5au8; 4 * D + 32];
+        timed(
+            &mut rec,
+            "frame/write copy-then-write (47 KiB body, loopback)",
+            3,
+            scale(200),
+            || {
+                write_frame(&mut stream, 0, &body).unwrap();
+            },
+        );
+        timed(
+            &mut rec,
+            "frame/write vectored (47 KiB body, loopback)",
+            3,
+            scale(200),
+            || {
+                write_frame_vectored(&mut stream, 0, &body).unwrap();
+            },
+        );
+        drop(stream);
+        let drained = drain.join().unwrap();
+        println!("# frame A/B drained {drained} raw bytes");
     }
 
     // ---- timing: the codec hot path -----------------------------------

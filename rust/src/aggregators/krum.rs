@@ -14,7 +14,6 @@
 
 use super::geometry::{self, GeoCtx, Geometry};
 use super::{delta_ratio, Aggregator};
-use crate::tensor;
 
 /// Krum scores: per input, the sum of its n−f−2 smallest distances to
 /// the other inputs. One scratch buffer is reused across rows and the
@@ -153,6 +152,11 @@ impl MultiKrum {
         MultiKrum { f }
     }
 
+    /// The averaging stage is a plain ordered row mean — it goes through
+    /// the uplink module's one pinned summation-order authority
+    /// ([`crate::transport::uplink::ordered_mean_into`], bit-identical
+    /// to [`crate::tensor::mean_into`] by test), the same order every
+    /// aggregated-uplink fold reproduces.
     fn average_selected(
         &self,
         inputs: &[&[f32]],
@@ -160,7 +164,7 @@ impl MultiKrum {
         out: &mut [f32],
     ) {
         let rows: Vec<&[f32]> = selected.iter().map(|&i| inputs[i]).collect();
-        tensor::mean_into(out, &rows);
+        crate::transport::uplink::ordered_mean_into(out, &rows);
     }
 }
 
@@ -211,6 +215,7 @@ mod tests {
     use super::super::test_support::*;
     use super::super::Aggregator;
     use super::*;
+    use crate::tensor;
 
     #[test]
     fn krum_picks_a_cluster_member() {

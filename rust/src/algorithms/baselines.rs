@@ -6,25 +6,106 @@
 //!   plain averaging, no momentum.
 //! * [`Dgd`] — vanilla distributed gradient descent.
 
-use super::{byzantine_vectors, Algorithm, RoundEnv};
+use super::{byzantine_vectors, Algorithm, RoundEnv, UplinkCtx};
 use crate::compression::codec::mask_wire_len;
 use crate::compression::payload::{Payload, TAG_DGD_RANDK};
 use crate::compression::RandK;
 use crate::tensor;
+use crate::transport::uplink::{
+    agg_dense_payload_len, combine_slot_values, AggValue,
+};
 use crate::transport::{
     compressed_grad_len, full_grad_len, payload_uplink_len,
 };
 
+/// Shared dense sum-mode round body (`uplink = "aggregate"`): meter the
+/// modeled `AGG` traffic, then either consume the transport's pre-folded
+/// total (tcp) or fold the in-process gradient rows through the same
+/// plan recursion (the local oracle — bit-identical to the wire fold by
+/// construction). Returns the covered sum Σg (zeros when nothing was
+/// covered). Uncovered slots contribute nothing, exactly like the zero
+/// rows a silent slot leaves in the value-forwarded gradient store.
+fn dense_aggregate_sum(
+    uplink: &mut UplinkCtx<'_>,
+    honest_grads: &[Vec<f32>],
+    byz_grads: &[Vec<f32>],
+    d: usize,
+    n_honest: usize,
+    meter: &mut crate::transport::ByteMeter,
+) -> Vec<f32> {
+    let (plan, wire, physical_tree) = uplink.take_parts();
+    crate::transport::uplink::meter_model(plan, physical_tree, meter, |_| {
+        agg_dense_payload_len(d)
+    });
+    let total = match wire {
+        Some(total) => total,
+        None => combine_slot_values(plan, |s| {
+            let w = s as usize;
+            Some(AggValue::Dense(if w < n_honest {
+                honest_grads[w].clone()
+            } else {
+                byz_grads[w - n_honest].clone()
+            }))
+        }),
+    };
+    match total {
+        Some(AggValue::Dense(v)) if v.len() == d => v,
+        _ => vec![0.0; d],
+    }
+}
+
 /// Robust distributed GD with Polyak momentum (no compression).
 pub struct RobustDgd {
     momenta: Vec<Vec<f32>>,
+    /// `uplink = "aggregate"`: the summed momentum M = Σᵢ mᵢ. The dense
+    /// per-worker law commutes with summation (mᵢ ← β·mᵢ + (1−β)·gᵢ ⇒
+    /// M ← β·M + (1−β)·Σgᵢ), so the aggregate path advances one
+    /// d-vector where value-forwarding keeps n rows; R^t = M/n under
+    /// the `aggregator = "mean"` the mode's validation pins. Empty on
+    /// the value-forwarding path.
+    agg_momentum: Vec<f32>,
 }
 
 impl RobustDgd {
     pub fn new(d: usize, n_workers: usize) -> Self {
         RobustDgd {
             momenta: vec![vec![0.0; d]; n_workers],
+            agg_momentum: Vec::new(),
         }
+    }
+
+    /// Sum-mode constructor (`uplink = "aggregate"`): no per-worker
+    /// momentum rows are ever allocated — only their running sum.
+    pub fn new_aggregate(d: usize) -> Self {
+        RobustDgd {
+            momenta: Vec::new(),
+            agg_momentum: vec![0.0; d],
+        }
+    }
+
+    fn round_aggregate(
+        &mut self,
+        honest_grads: &[Vec<f32>],
+        byz_grads: &[Vec<f32>],
+        env: &mut RoundEnv,
+    ) -> Vec<f32> {
+        let sum = dense_aggregate_sum(
+            &mut env.uplink,
+            honest_grads,
+            byz_grads,
+            env.d,
+            env.n_honest,
+            env.meter,
+        );
+        tensor::scale_add(
+            &mut self.agg_momentum,
+            env.beta,
+            1.0 - env.beta,
+            &sum,
+        );
+        let mut out = self.agg_momentum.clone();
+        tensor::scale(&mut out, 1.0 / env.n_total() as f32);
+        out
     }
 }
 
@@ -40,6 +121,9 @@ impl Algorithm for RobustDgd {
         byz_grads: &[Vec<f32>],
         env: &mut RoundEnv,
     ) -> Vec<f32> {
+        if env.uplink.is_aggregate() {
+            return self.round_aggregate(honest_grads, byz_grads, env);
+        }
         let byz = byzantine_vectors(t, honest_grads, byz_grads, env);
         let apply = |this: &mut Self, widx: usize, g: &[f32], env: &mut RoundEnv| {
             env.meter.record_uplink_sized(widx, full_grad_len(env.d));
@@ -57,7 +141,11 @@ impl Algorithm for RobustDgd {
     }
 
     fn momenta(&self) -> Option<&[Vec<f32>]> {
-        Some(&self.momenta)
+        if self.momenta.is_empty() {
+            None // sum mode keeps only Σmᵢ, not the per-worker rows
+        } else {
+            Some(&self.momenta)
+        }
     }
 }
 
@@ -178,6 +266,18 @@ impl Algorithm for Dgd {
         env: &mut RoundEnv,
     ) -> Vec<f32> {
         let n = env.n_total();
+        if env.uplink.is_aggregate() {
+            let mut sum = dense_aggregate_sum(
+                &mut env.uplink,
+                honest_grads,
+                byz_grads,
+                env.d,
+                env.n_honest,
+                env.meter,
+            );
+            tensor::scale(&mut sum, 1.0 / n as f32);
+            return sum;
+        }
         let byz = byzantine_vectors(t, honest_grads, byz_grads, env);
         let mut all: Vec<&[f32]> = Vec::with_capacity(n);
         for g in honest_grads {
@@ -255,6 +355,61 @@ mod tests {
         let mut alg = RobustDgd::new(d, 2);
         alg.round(0, &grads, &[], &mut env.env());
         assert_eq!(env.meter.uplink, 2 * (12 + 4 + 400));
+    }
+
+    #[test]
+    fn dgd_aggregate_is_exact_mean_with_modeled_bytes() {
+        use crate::transport::uplink::{
+            agg_body_len, agg_dense_payload_len, ReducePlan,
+        };
+        let d = 8;
+        let plan = ReducePlan::new(2, &[true; 4]);
+        let mut env = Env::new(d, 4, 0, d);
+        let mut grads = env.constant_grads(1.0);
+        grads[0] = vec![5.0; d];
+        let r =
+            Dgd::new().round(0, &grads, &[], &mut env.env_agg(&plan, false));
+        for v in &r {
+            assert!((v - 2.0).abs() < 1e-6);
+        }
+        // flat model: four singleton AGG frames, all coordinator ingress
+        let want = 4 * agg_body_len(1, agg_dense_payload_len(d)) as u64;
+        assert_eq!(env.meter.uplink, want);
+        assert_eq!(env.meter.coordinator_ingress, want);
+    }
+
+    #[test]
+    fn robust_dgd_aggregate_tracks_forward_mean() {
+        use crate::transport::uplink::ReducePlan;
+        // the same run through value-forwarding (mean over n momentum
+        // rows) and the sum mode (M/n): equal up to f32 summation order.
+        let d = 16;
+        let n = 5;
+        let plan = ReducePlan::new(2, &[true; 5]);
+        let mut fwd_env = Env::new(d, n, 0, d);
+        fwd_env.aggregator =
+            crate::aggregators::parse_spec("mean", 0).unwrap();
+        let mut agg_env = Env::new(d, n, 0, d);
+        agg_env.aggregator =
+            crate::aggregators::parse_spec("mean", 0).unwrap();
+        let mut fwd = RobustDgd::new(d, n);
+        let mut agg = RobustDgd::new_aggregate(d);
+        for t in 0..30u64 {
+            let grads: Vec<Vec<f32>> = (0..n)
+                .map(|w| {
+                    (0..d)
+                        .map(|i| ((t as f32 + w as f32) * 0.1 + i as f32).sin())
+                        .collect()
+                })
+                .collect();
+            let a = fwd.round(t, &grads, &[], &mut fwd_env.env());
+            let b =
+                agg.round(t, &grads, &[], &mut agg_env.env_agg(&plan, false));
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-4, "round {t}: {x} vs {y}");
+            }
+        }
+        assert!(agg.momenta().is_none(), "sum mode keeps no rows");
     }
 
     #[test]

@@ -24,14 +24,25 @@
 
 use super::{byzantine_vectors, Algorithm, RoundEnv};
 use crate::compression::codec::mask_wire_len;
-use crate::compression::payload::{dasha_apply, Payload, TAG_DASHA};
+use crate::compression::payload::{
+    dasha_agg_contribution, dasha_apply, Payload, TAG_DASHA,
+};
 use crate::compression::RandK;
+use crate::tensor;
+use crate::transport::uplink::{
+    agg_dense_payload_len, agg_sparse_payload_len, combine_slot_values,
+    meter_model, AggValue,
+};
 use crate::transport::{
     compressed_grad_len, full_grad_len, payload_uplink_len,
 };
 
 pub struct ByzDashaPage {
     /// Server-side gradient estimates ĝ_i (identical to worker copies).
+    /// Empty under `uplink = "aggregate"` over tcp — replacing these n
+    /// dense rows with [`Self::agg_sum`] is that mode's memory win
+    /// (pinned by `tests/test_alloc`). The local aggregate oracle lazily
+    /// allocates them as its simulation of the remote worker copies.
     estimates: Vec<Vec<f32>>,
     /// Scratch: difference vector.
     diff: Vec<f32>,
@@ -39,6 +50,17 @@ pub struct ByzDashaPage {
     /// per-worker payload allocation on the steady-state loop).
     payload: Vec<f32>,
     initialized: bool,
+    /// `uplink = "aggregate"`: the summed estimate S = Σᵢ ĝᵢ. The
+    /// estimate law is additive (ĝᵢ ← ĝᵢ + uᵢ), so S advances by the
+    /// folded Σᵢ uᵢ over the union of the round's masks and
+    /// R^t = S/n reproduces the validated mean without any per-worker
+    /// row. Empty on the value-forwarding path.
+    agg_sum: Vec<f32>,
+    /// Sum-mode round counters (dense re-init folds vs sparse
+    /// union-advances) — the test handle mirroring the geometry engine's
+    /// rebuild/incremental pins.
+    agg_rebuilds: u64,
+    agg_incrementals: u64,
 }
 
 impl ByzDashaPage {
@@ -48,7 +70,160 @@ impl ByzDashaPage {
             diff: vec![0.0; d],
             payload: Vec::new(),
             initialized: false,
+            agg_sum: Vec::new(),
+            agg_rebuilds: 0,
+            agg_incrementals: 0,
         }
+    }
+
+    /// Sum-mode constructor (`uplink = "aggregate"`): no n×d estimate
+    /// matrix — only the running sum S.
+    pub fn new_aggregate(d: usize) -> Self {
+        ByzDashaPage {
+            estimates: Vec::new(),
+            diff: vec![0.0; d],
+            payload: Vec::new(),
+            initialized: false,
+            agg_sum: vec![0.0; d],
+            agg_rebuilds: 0,
+            agg_incrementals: 0,
+        }
+    }
+
+    /// `(dense re-init rounds, sparse union-advance rounds)` so far —
+    /// meaningful under `uplink = "aggregate"` only.
+    pub fn agg_counters(&self) -> (u64, u64) {
+        (self.agg_rebuilds, self.agg_incrementals)
+    }
+
+    /// `uplink = "aggregate"` round: advance the single summed estimate
+    /// S = Σᵢ ĝᵢ instead of n dense rows. The first round (and k = d)
+    /// folds dense gradients and rebuilds S outright; every later round
+    /// folds the workers' sparse scaled-difference updates over the
+    /// union of their masks and S advances in place — `S += Σᵢ uᵢ`
+    /// follows from `ĝᵢ += uᵢ` by linearity. R^t = S/n under the
+    /// `aggregator = "mean"` the mode's validation pins.
+    fn round_aggregate(
+        &mut self,
+        t: u64,
+        honest_grads: &[Vec<f32>],
+        byz_grads: &[Vec<f32>],
+        env: &mut RoundEnv,
+    ) -> Vec<f32> {
+        let d = env.d;
+        let n = env.n_total();
+        let (plan, wire, physical_tree) = env.uplink.take_parts();
+        let dense_round = !self.initialized || env.k == d;
+
+        // Per-slot masks re-derived from the shared derived streams —
+        // the identical draw every remote worker makes, so the modeled
+        // union-of-masks payload sizes match the wire bytes exactly
+        // (and the local fold below compresses with the same masks).
+        let slot_masks: Option<Vec<Vec<u32>>> = if dense_round {
+            None
+        } else {
+            let rk = RandK { d, k: env.k };
+            Some(
+                plan.slots()
+                    .iter()
+                    .map(|&s| {
+                        let mut wrng =
+                            env.rng.derive(TAG_DASHA, t, s as u64);
+                        rk.draw(&mut wrng).idx
+                    })
+                    .collect(),
+            )
+        };
+        match &slot_masks {
+            None => meter_model(plan, physical_tree, env.meter, |_| {
+                agg_dense_payload_len(d)
+            }),
+            Some(masks) => {
+                meter_model(plan, physical_tree, env.meter, |covered| {
+                    let mut union: Vec<u32> = covered
+                        .iter()
+                        .filter_map(|s| plan.slots().binary_search(s).ok())
+                        .flat_map(|p| masks[p].iter().copied())
+                        .collect();
+                    union.sort_unstable();
+                    union.dedup();
+                    agg_sparse_payload_len(union.len())
+                })
+            }
+        }
+
+        let total = match wire {
+            Some(total) => total,
+            None => {
+                // Local oracle: simulate the per-worker estimate copies
+                // in process (exactly what the remote workers keep) and
+                // fold their contributions through the shared plan
+                // recursion — bit-identical to the wire fold.
+                if self.estimates.is_empty() {
+                    self.estimates = vec![vec![0.0; d]; n];
+                }
+                let alpha = d as f32 / env.k as f32;
+                let n_honest = env.n_honest;
+                let estimates = &mut self.estimates;
+                combine_slot_values(plan, |s| {
+                    let w = s as usize;
+                    let g: &[f32] = if w < n_honest {
+                        &honest_grads[w]
+                    } else {
+                        &byz_grads[w - n_honest]
+                    };
+                    Some(match &slot_masks {
+                        None => {
+                            estimates[w].copy_from_slice(g);
+                            AggValue::Dense(g.to_vec())
+                        }
+                        Some(masks) => {
+                            let p = plan
+                                .slots()
+                                .binary_search(&s)
+                                .expect("combine iterates plan slots");
+                            let (idx, val) = dasha_agg_contribution(
+                                &mut estimates[w],
+                                &masks[p],
+                                alpha,
+                                g,
+                            );
+                            AggValue::Sparse { idx, val }
+                        }
+                    })
+                })
+            }
+        };
+
+        if dense_round {
+            // Dense re-init: S is the fold itself. An uncovered slot's
+            // estimate is zero by the round-0 convention, so a frame
+            // lost on the init round simply contributes nothing —
+            // identical to the zero estimate row it leaves behind under
+            // value-forwarding.
+            self.agg_sum = match total {
+                Some(AggValue::Dense(v)) if v.len() == d => v,
+                _ => vec![0.0; d],
+            };
+            self.agg_rebuilds += 1;
+        } else {
+            match total {
+                Some(AggValue::Sparse { idx, val }) => {
+                    for (&ci, &u) in idx.iter().zip(&val) {
+                        self.agg_sum[ci as usize] += u;
+                    }
+                }
+                Some(AggValue::Dense(_)) => {
+                    debug_assert!(false, "dense fold on a sparse round")
+                }
+                None => {} // nothing covered: S carries unchanged
+            }
+            self.agg_incrementals += 1;
+        }
+        self.initialized = true;
+        let mut out = self.agg_sum.clone();
+        tensor::scale(&mut out, 1.0 / n as f32);
+        out
     }
 
     fn meter_dense(&self, env: &mut RoundEnv, worker: usize) {
@@ -76,6 +251,9 @@ impl Algorithm for ByzDashaPage {
         byz_grads: &[Vec<f32>],
         env: &mut RoundEnv,
     ) -> Vec<f32> {
+        if env.uplink.is_aggregate() {
+            return self.round_aggregate(t, honest_grads, byz_grads, env);
+        }
         let d = env.d;
         let n = env.n_total();
         debug_assert_eq!(self.estimates.len(), n);
@@ -163,7 +341,11 @@ impl Algorithm for ByzDashaPage {
     }
 
     fn momenta(&self) -> Option<&[Vec<f32>]> {
-        Some(&self.estimates)
+        if self.estimates.is_empty() {
+            None // sum mode keeps only S = Σᵢ ĝᵢ, not the rows
+        } else {
+            Some(&self.estimates)
+        }
     }
 }
 
@@ -220,6 +402,108 @@ mod tests {
         }
         let err = tensor::dist_sq(&alg.estimates[0], &g);
         assert!(err < 1e-8, "residual {err}");
+    }
+
+    #[test]
+    fn aggregate_counters_pin_one_rebuild_then_incrementals() {
+        use crate::transport::uplink::ReducePlan;
+        let d = 64;
+        let plan = ReducePlan::new(2, &[true; 3]);
+        let mut env = Env::new(d, 3, 0, 8);
+        env.aggregator = crate::aggregators::parse_spec("mean", 0).unwrap();
+        let grads = env.constant_grads(2.0);
+        let mut alg = ByzDashaPage::new_aggregate(d);
+        for t in 0..6 {
+            alg.round(t, &grads, &[], &mut env.env_agg(&plan, false));
+        }
+        assert_eq!(alg.agg_counters(), (1, 5));
+
+        // k = d never leaves the dense path: every round rebuilds
+        let mut env = Env::new(d, 3, 0, d);
+        env.aggregator = crate::aggregators::parse_spec("mean", 0).unwrap();
+        let grads = env.constant_grads(2.0);
+        let mut alg = ByzDashaPage::new_aggregate(d);
+        for t in 0..4 {
+            alg.round(t, &grads, &[], &mut env.env_agg(&plan, false));
+        }
+        assert_eq!(alg.agg_counters(), (4, 0));
+    }
+
+    #[test]
+    fn aggregate_first_round_is_dense_and_exact() {
+        use crate::transport::uplink::{
+            agg_body_len, agg_dense_payload_len, ReducePlan,
+        };
+        let d = 64;
+        let plan = ReducePlan::new(2, &[true; 4]);
+        let mut env = Env::new(d, 4, 0, 8);
+        env.aggregator = crate::aggregators::parse_spec("mean", 0).unwrap();
+        let grads = env.constant_grads(3.0);
+        let mut alg = ByzDashaPage::new_aggregate(d);
+        let r = alg.round(0, &grads, &[], &mut env.env_agg(&plan, false));
+        for v in &r {
+            assert!((v - 3.0).abs() < 1e-6);
+        }
+        // flat model: four singleton AGG frames, all coordinator ingress
+        let want = 4 * agg_body_len(1, agg_dense_payload_len(d)) as u64;
+        assert_eq!(env.meter.uplink, want);
+        assert_eq!(env.meter.coordinator_ingress, want);
+    }
+
+    #[test]
+    fn aggregate_tree_model_splits_ingress_from_relayed() {
+        use crate::transport::uplink::{
+            agg_body_len, agg_dense_payload_len, ReducePlan,
+        };
+        let d = 64;
+        // n = 3, b = 2: roots {0, 1}, slot 2 relays through slot 0
+        let plan = ReducePlan::new(2, &[true; 3]);
+        let mut env = Env::new(d, 3, 0, 8);
+        env.aggregator = crate::aggregators::parse_spec("mean", 0).unwrap();
+        let grads = env.constant_grads(1.0);
+        let mut alg = ByzDashaPage::new_aggregate(d);
+        alg.round(0, &grads, &[], &mut env.env_agg(&plan, true));
+        let p = agg_dense_payload_len(d);
+        let ingress = (agg_body_len(2, p) + agg_body_len(1, p)) as u64;
+        let relayed = agg_body_len(1, p) as u64;
+        assert_eq!(env.meter.coordinator_ingress, ingress);
+        assert_eq!(env.meter.uplink, ingress + relayed);
+    }
+
+    #[test]
+    fn aggregate_tracks_forward_mean() {
+        use crate::transport::uplink::ReducePlan;
+        // the same drifting-gradient run through the value-forwarding
+        // path (mean of n estimate rows) and the sum mode (S/n): equal
+        // up to f32 summation order.
+        let d = 32;
+        let n = 3;
+        let plan = ReducePlan::new(2, &[true; 3]);
+        let mut fwd_env = Env::new(d, n, 0, 8);
+        fwd_env.aggregator =
+            crate::aggregators::parse_spec("mean", 0).unwrap();
+        let mut agg_env = Env::new(d, n, 0, 8);
+        agg_env.aggregator =
+            crate::aggregators::parse_spec("mean", 0).unwrap();
+        let mut fwd = ByzDashaPage::new(d, n);
+        let mut agg = ByzDashaPage::new_aggregate(d);
+        let mut g: Vec<f32> = (0..d).map(|i| (i as f32 * 0.4).sin()).collect();
+        for t in 0..40u64 {
+            for v in g.iter_mut() {
+                *v *= 0.98;
+            }
+            let grads = vec![g.clone(); n];
+            let a = fwd.round(t, &grads, &[], &mut fwd_env.env());
+            let b =
+                agg.round(t, &grads, &[], &mut agg_env.env_agg(&plan, false));
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-4, "round {t}: {x} vs {y}");
+            }
+        }
+        // the oracle's lazily simulated worker copies match the
+        // value-forwarding server rows bit for bit (same masks, same law)
+        let rows = agg.momenta().expect("local oracle allocates copies");
+        assert_eq!(rows, fwd.momenta().unwrap());
     }
 
     #[test]

@@ -19,7 +19,64 @@ use crate::attacks::AttackKind;
 use crate::compression::payload::Payload;
 use crate::config::{Algorithm as AlgoId, ExperimentConfig};
 use crate::prng::Pcg64;
+use crate::transport::uplink::{AggValue, ReducePlan};
 use crate::transport::ByteMeter;
+
+/// How this round's uplink reached the server (`config: uplink`).
+///
+/// * `Forward` — value-forwarding (the default): every gradient slot's
+///   payload arrives individually; algorithms see per-worker rows.
+/// * `Wire` — `uplink = "aggregate"` over tcp: the transport already
+///   folded the round's `AGG` frames through `plan` and hands the
+///   algorithm one accumulated value (`None` when nothing was covered
+///   before the deadline). `physical_tree` says whether relays did the
+///   folding (`fanout = "tree"`) or the coordinator re-nested flat
+///   singleton frames — the byte model differs, the sum does not.
+/// * `Local` — `uplink = "aggregate"` under the local transport: the
+///   oracle. The algorithm folds the in-process gradients through the
+///   *same* plan recursion the wire path uses, so local and tcp runs
+///   stay bit-identical.
+pub enum UplinkCtx<'a> {
+    Forward,
+    Wire {
+        plan: &'a ReducePlan,
+        total: Option<AggValue>,
+        physical_tree: bool,
+    },
+    Local {
+        plan: &'a ReducePlan,
+        physical_tree: bool,
+    },
+}
+
+impl<'a> UplinkCtx<'a> {
+    pub fn is_aggregate(&self) -> bool {
+        !matches!(self, UplinkCtx::Forward)
+    }
+
+    /// Split an aggregate context into `(plan, wire_total, physical_tree)`
+    /// — `wire_total` is `Some(..)` iff the transport pre-folded (tcp),
+    /// `None` means the caller must run the local oracle fold. Panics on
+    /// `Forward`: sum-mode rounds only run under `uplink = "aggregate"`.
+    pub(crate) fn take_parts(
+        &mut self,
+    ) -> (&'a ReducePlan, Option<Option<AggValue>>, bool) {
+        match self {
+            UplinkCtx::Forward => {
+                unreachable!("sum-mode round without an aggregate context")
+            }
+            UplinkCtx::Wire {
+                plan,
+                total,
+                physical_tree,
+            } => (*plan, Some(total.take()), *physical_tree),
+            UplinkCtx::Local {
+                plan,
+                physical_tree,
+            } => (*plan, None, *physical_tree),
+        }
+    }
+}
 
 /// Everything an algorithm needs for one round besides the gradients.
 pub struct RoundEnv<'a> {
@@ -48,6 +105,11 @@ pub struct RoundEnv<'a> {
     /// transport — algorithms then run the identical compression
     /// themselves from the dense gradients (the tested oracle path).
     pub payloads: Option<&'a [Payload]>,
+    /// Aggregated-uplink context (`UplinkCtx::Forward` unless the run
+    /// uses `uplink = "aggregate"`). Sum/mean-shaped algorithms branch
+    /// on it; everything else never reads it (config validation keeps
+    /// robust selection rules on value-forwarding).
+    pub uplink: UplinkCtx<'a>,
 }
 
 impl<'a> RoundEnv<'a> {
@@ -197,7 +259,17 @@ pub fn build(cfg: &ExperimentConfig, d: usize) -> Box<dyn Algorithm> {
             .expect("validated by ExperimentConfig");
             Box::new(rosdhb_u::RoSdhbU::new(d, n, spec))
         }
+        // Aggregate-uplink runs never materialize the n dense
+        // server-side rows (estimates / momenta): the sum-mode
+        // constructors keep only the accumulated vector, which is the
+        // whole point of the reduction (pinned by `tests/test_alloc`).
+        AlgoId::ByzDashaPage if cfg.uplink == "aggregate" => {
+            Box::new(dasha::ByzDashaPage::new_aggregate(d))
+        }
         AlgoId::ByzDashaPage => Box::new(dasha::ByzDashaPage::new(d, n)),
+        AlgoId::RobustDgd if cfg.uplink == "aggregate" => {
+            Box::new(baselines::RobustDgd::new_aggregate(d))
+        }
         AlgoId::RobustDgd => Box::new(baselines::RobustDgd::new(d, n)),
         AlgoId::DgdRandK => Box::new(baselines::DgdRandK::new()),
         AlgoId::Dgd => Box::new(baselines::Dgd::new()),
@@ -283,7 +355,23 @@ pub(crate) mod test_env {
                 meter: &mut self.meter,
                 rng: &mut self.rng,
                 payloads: None,
+                uplink: UplinkCtx::Forward,
             }
+        }
+
+        /// Like [`Env::env`], but carrying a local aggregate-uplink
+        /// context (the sum-mode oracle path).
+        pub fn env_agg<'a>(
+            &'a mut self,
+            plan: &'a ReducePlan,
+            physical_tree: bool,
+        ) -> RoundEnv<'a> {
+            let mut e = self.env();
+            e.uplink = UplinkCtx::Local {
+                plan,
+                physical_tree,
+            };
+            e
         }
 
         /// n_honest copies of a fixed gradient (for exactness tests).

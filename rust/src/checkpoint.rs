@@ -53,8 +53,10 @@ use std::path::Path;
 pub const CKPT_MAGIC: u32 = 0x5244_434b;
 /// Bump on any layout change; older files are refused, never misread.
 /// (2: per-slot membership flags — churned-out / gracefully-left slots
-/// survive a restore instead of being silently re-activated.)
-pub const CKPT_VERSION: u16 = 2;
+/// survive a restore instead of being silently re-activated.
+/// 3: `ByteMeter::coordinator_ingress` — the uplink mirror of egress,
+/// needed so aggregated-uplink runs resume with an intact byte model.)
+pub const CKPT_VERSION: u16 = 3;
 
 /// Membership flags of one worker slot at save time, restored into the
 /// transport so a run whose membership changed before the checkpoint
@@ -242,6 +244,7 @@ impl Checkpoint {
         put_u64(&mut out, self.meter.uplink);
         put_u64(&mut out, self.meter.downlink);
         put_u64(&mut out, self.meter.coordinator_egress);
+        put_u64(&mut out, self.meter.coordinator_ingress);
         put_u32(&mut out, self.meter.per_worker_uplink.len() as u32);
         for &b in &self.meter.per_worker_uplink {
             put_u64(&mut out, b);
@@ -315,7 +318,7 @@ impl Checkpoint {
             + 8
             + (4 + 4 * self.params.len())
             + (16 + 16 + 8)
-            + (8 * 3 + 4 + 8 * self.meter.per_worker_uplink.len())
+            + (8 * 4 + 4 + 8 * self.meter.per_worker_uplink.len())
             + (1 + if self.reached.is_some() { 16 } else { 0 })
             + 1
             + (4 + self.rows.iter().map(row_len).sum::<usize>())
@@ -363,6 +366,7 @@ impl Checkpoint {
             uplink: c.u64("meter uplink")?,
             downlink: c.u64("meter downlink")?,
             coordinator_egress: c.u64("meter egress")?,
+            coordinator_ingress: c.u64("meter ingress")?,
             per_worker_uplink: Vec::new(),
         };
         let n_pw = c.u32("meter per-worker count")? as usize;
@@ -516,6 +520,7 @@ mod tests {
                 uplink: 1000,
                 downlink: 2000,
                 coordinator_egress: 1500,
+                coordinator_ingress: 1000,
                 per_worker_uplink: vec![250, 250, 300, 200],
             },
             reached: Some((12, 4096)),

@@ -35,6 +35,7 @@ use super::qsgd::CompressorSpec;
 use super::{mask_from_seed, Mask, Qsgd, RandK};
 use crate::config::{Algorithm, ExperimentConfig};
 use crate::prng::{round_stream, Pcg64};
+use crate::transport::uplink::AggValue;
 
 /// RNG stream tag for rosdhb-local's per-worker mask draws. Shared
 /// between the server-side simulation and [`CompressorState`] so both
@@ -421,6 +422,32 @@ pub fn dasha_apply(est: &mut [f32], mask: &Mask, values: &[f32]) {
     }
 }
 
+/// One aggregate-uplink DASHA summand over a sorted mask support:
+/// `u[cᵢ] = a·α·(g[cᵢ] − ĝ[cᵢ])`, with `ĝ[cᵢ] += u[cᵢ]` applied in
+/// place. The multiply chain is exactly [`dasha_apply`] over a gathered
+/// difference (mask coordinates are distinct, so gather-then-apply and
+/// this interleaved form read identical estimate values) — a worker
+/// shipping summands (`uplink = "aggregate"`) and one shipping raw
+/// differences advance bit-identical estimate copies.
+pub fn dasha_agg_contribution(
+    est: &mut [f32],
+    idx: &[u32],
+    alpha: f32,
+    g: &[f32],
+) -> (Vec<u32>, Vec<f32>) {
+    let a = dasha_gain(alpha);
+    let val: Vec<f32> = idx
+        .iter()
+        .map(|&ci| {
+            let ci = ci as usize;
+            let u = a * alpha * (g[ci] - est[ci]);
+            est[ci] += u;
+            u
+        })
+        .collect();
+    (idx.to_vec(), val)
+}
+
 /// A k-coordinate mask wire of exactly the size
 /// [`super::codec::mask_wire_len`] models — for size-true placeholder
 /// payloads (drone uplinks, dropped-contribution substitutes).
@@ -678,6 +705,51 @@ impl CompressorState {
                 }
             }
         })
+    }
+
+    /// The `uplink = "aggregate"` summand for round `t`: what this
+    /// worker hands the relay fold in place of a value-forwarded
+    /// payload. Dense plans contribute the gradient itself (the fold is
+    /// a plain sum); the DASHA plan contributes its scaled
+    /// estimate-update over the sorted mask support — exactly the
+    /// quantity the server's summed estimate S advances by. Advances the
+    /// same client residue [`Self::compress`] would, so exactly one of
+    /// the two runs per round. Only the plans config validation admits
+    /// under aggregate uplinks are supported.
+    pub fn agg_value(
+        &mut self,
+        t: u64,
+        worker: u64,
+        g: &[f32],
+    ) -> Result<AggValue, String> {
+        debug_assert_eq!(g.len(), self.d);
+        match &mut self.mode {
+            Mode::Dense => Ok(AggValue::Dense(g.to_vec())),
+            Mode::Dasha {
+                rk,
+                estimate,
+                initialized,
+            } => {
+                if !*initialized {
+                    estimate.copy_from_slice(g);
+                    *initialized = true;
+                    Ok(AggValue::Dense(g.to_vec()))
+                } else {
+                    let mut rng = self.base.derive(TAG_DASHA, t, worker);
+                    let mask = rk.draw(&mut rng);
+                    let (idx, val) = dasha_agg_contribution(
+                        estimate,
+                        &mask.idx,
+                        mask.alpha(),
+                        g,
+                    );
+                    Ok(AggValue::Sparse { idx, val })
+                }
+            }
+            _ => Err("uplink = \"aggregate\" supports only the dense and \
+                      DASHA-difference wire plans"
+                .into()),
+        }
     }
 
     /// A zero payload with the exact wire size of an honest uplink this

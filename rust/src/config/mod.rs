@@ -184,6 +184,16 @@ pub struct ExperimentConfig {
     /// Relay-tree branching factor (`fanout = "tree"`; ignored under
     /// flat).
     pub branching: usize,
+    /// Uplink reduction mode: "forward" (every worker's contribution
+    /// travels end-to-end to the coordinator — the value-forwarding
+    /// default, required by robust rules and payload attacks) or
+    /// "aggregate" (interior relays fold their subtree's contributions
+    /// into one accumulated `AGG` frame; coordinator ingress drops from
+    /// n·B to branching·B). Only sum/mean-shaped rules qualify
+    /// (`dgd`, `robust-dgd`, `byz-dasha-page` under `aggregator =
+    /// "mean"`). Fingerprinted: the mode pins the f32 summation order
+    /// (see [`crate::transport::uplink`]), so both sides must agree.
+    pub uplink: String,
     /// Socket runtime under `transport = "tcp"`: "threads" (one blocking
     /// reader/writer thread pair per connection — the bit-parity oracle)
     /// or "evloop" (a single readiness-polling I/O thread per process
@@ -317,6 +327,7 @@ impl ExperimentConfig {
             downlink: "dense".into(),
             fanout: "flat".into(),
             branching: 2,
+            uplink: "forward".into(),
             io: "threads".into(),
             epoch_rounds: 0,
             readmit: "next-epoch".into(),
@@ -335,6 +346,17 @@ impl ExperimentConfig {
     /// [`Self::default_mnist_like`]). Keys live at top level or under
     /// `[experiment]`.
     pub fn from_toml(doc: &toml::TomlDoc) -> Result<Self, String> {
+        let c = Self::from_toml_unchecked(doc)?;
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// [`Self::from_toml`] without the final [`Self::validate`] pass —
+    /// used by [`Self::set`], where a single key may only be valid in
+    /// combination with the base it merges into (e.g. `uplink =
+    /// "aggregate"` after `algorithm = "dgd"`); only the merged config
+    /// is validated there.
+    fn from_toml_unchecked(doc: &toml::TomlDoc) -> Result<Self, String> {
         let mut c = Self::default_mnist_like();
         let get = |k: &str| {
             doc.get("experiment", k).or_else(|| doc.get("", k))
@@ -405,6 +427,9 @@ impl ExperimentConfig {
         if let Some(v) = get("fanout") {
             c.fanout = v.as_str().ok_or("fanout: want string")?.into();
         }
+        if let Some(v) = get("uplink") {
+            c.uplink = v.as_str().ok_or("uplink: want string")?.into();
+        }
         if let Some(v) = get("io") {
             c.io = v.as_str().ok_or("io: want string")?.into();
         }
@@ -454,7 +479,6 @@ impl ExperimentConfig {
         if let Some(v) = get("lyapunov") {
             c.lyapunov = v.as_bool().ok_or("lyapunov: want bool")?;
         }
-        c.validate()?;
         Ok(c)
     }
 
@@ -479,7 +503,7 @@ impl ExperimentConfig {
     ) -> Result<Self, String> {
         // Same key handling as from_toml, but starting from `base`.
         let mut c = base;
-        let tmp = ExperimentConfig::from_toml(doc)?;
+        let tmp = ExperimentConfig::from_toml_unchecked(doc)?;
         // from_toml starts from defaults; copy over only keys present.
         for (sect, key) in doc.keys() {
             let _ = sect;
@@ -523,6 +547,7 @@ impl ExperimentConfig {
                 "downlink" => c.downlink = tmp.downlink.clone(),
                 "fanout" => c.fanout = tmp.fanout.clone(),
                 "branching" => c.branching = tmp.branching,
+                "uplink" => c.uplink = tmp.uplink.clone(),
                 "io" => c.io = tmp.io.clone(),
                 "epoch_rounds" => c.epoch_rounds = tmp.epoch_rounds,
                 "readmit" => c.readmit = tmp.readmit.clone(),
@@ -597,6 +622,87 @@ impl ExperimentConfig {
             &self.fanout,
             self.branching,
         )?;
+        match self.uplink.as_str() {
+            "forward" => {}
+            "aggregate" => {
+                // Partial aggregation only exists for sum/mean-shaped
+                // reductions: relays fold f32 sums, so the rule must be
+                // a (scaled) sum of the contributions. Robust rules and
+                // payload attacks need the individual values.
+                match self.algorithm {
+                    Algorithm::Dgd
+                    | Algorithm::RobustDgd
+                    | Algorithm::ByzDashaPage => {}
+                    other => {
+                        return Err(format!(
+                            "uplink = \"aggregate\" needs a sum/mean-shaped \
+                             rule (dgd | robust-dgd | byz-dasha-page), not \
+                             '{}' — robust selection rules must see every \
+                             worker's value",
+                            other.name()
+                        ))
+                    }
+                }
+                if self.aggregator != "mean" {
+                    return Err(format!(
+                        "uplink = \"aggregate\" requires aggregator = \
+                         \"mean\" (got '{}'): relays ship subtree sums, \
+                         robust rules keep value-forwarding",
+                        self.aggregator
+                    ));
+                }
+                let attack = crate::attacks::parse_spec(&self.attack)?;
+                if matches!(attack, crate::attacks::AttackKind::Payload(_)) {
+                    return Err(format!(
+                        "uplink = \"aggregate\" cannot run payload attack \
+                         '{}': crafted values must be individually \
+                         forwarded — use uplink = \"forward\"",
+                        self.attack
+                    ));
+                }
+                if self.branching < 2 {
+                    return Err(
+                        "uplink = \"aggregate\" needs branching >= 2: the \
+                         logical reduce tree uses it even under fanout = \
+                         \"flat\""
+                            .into(),
+                    );
+                }
+                if self.lyapunov {
+                    return Err(
+                        "lyapunov diagnostics need per-worker momenta; \
+                         uplink = \"aggregate\" keeps only their sum"
+                            .into(),
+                    );
+                }
+                if !self.churn.is_empty() {
+                    return Err(
+                        "uplink = \"aggregate\" needs a fixed roster: \
+                         mid-run joiners ship dense re-init summands that \
+                         cannot fold into peers' sparse frames — drop the \
+                         churn schedule or use uplink = \"forward\""
+                            .into(),
+                    );
+                }
+                if self.n_byz > 0
+                    && matches!(attack, crate::attacks::AttackKind::None)
+                {
+                    return Err(format!(
+                        "uplink = \"aggregate\" with attack = \"none\" \
+                         cannot carry {} silent byzantine slots: every \
+                         slot must contribute to the running sum or the \
+                         reduce stalls — use attack = \"labelflip\" or \
+                         n_byz = 0",
+                        self.n_byz
+                    ));
+                }
+            }
+            other => {
+                return Err(format!(
+                    "unknown uplink '{other}' (forward|aggregate)"
+                ))
+            }
+        }
         match self.readmit.as_str() {
             "never" | "next-epoch" => {}
             other => {
@@ -711,7 +817,7 @@ impl ExperimentConfig {
             Dataset::MnistIdx(_) => "mnist-idx",
         };
         let canon = format!(
-            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
             self.algorithm.name(),
             self.n_honest,
             self.n_byz,
@@ -752,6 +858,10 @@ impl ExperimentConfig {
             // coordinator must accept untraced workers and vice versa
             self.epoch_rounds,
             self.readmit,
+            // the uplink mode pins the f32 summation order (tree fold vs
+            // per-value forwarding) and what each worker puts on the
+            // wire (AGG frames vs GRAD messages) — both sides must agree
+            self.uplink,
         );
         // FNV-1a, 64-bit
         let mut h: u64 = 0xcbf2_9ce4_8422_2325;
@@ -790,6 +900,7 @@ impl ExperimentConfig {
         m.insert("transport".into(), Json::Str(self.transport.clone()));
         m.insert("downlink".into(), Json::Str(self.downlink.clone()));
         m.insert("fanout".into(), Json::Str(self.fanout.clone()));
+        m.insert("uplink".into(), Json::Str(self.uplink.clone()));
         m.insert("branching".into(), Json::Num(self.branching as f64));
         m.insert("io".into(), Json::Str(self.io.clone()));
         m.insert("epoch_rounds".into(), Json::Num(self.epoch_rounds as f64));
@@ -1027,6 +1138,67 @@ mod tests {
                 "{key} must enter the fingerprint"
             );
         }
+    }
+
+    #[test]
+    fn uplink_key_parses_validates_and_moves_fingerprint() {
+        let mut c = ExperimentConfig::default_mnist_like();
+        assert_eq!(c.uplink, "forward");
+        // aggregate needs a sum-shaped rule + mean aggregator + a
+        // data-level (or no) attack
+        assert!(c.set("uplink", "aggregate").is_err());
+        c.algorithm = Algorithm::Dgd;
+        c.aggregator = "mean".into();
+        c.attack = "labelflip".into();
+        c.set("uplink", "aggregate").unwrap();
+        c.validate().unwrap();
+        assert!(c.set("uplink", "fold").is_err());
+        assert_eq!(c.uplink, "aggregate", "a rejected set must not clobber");
+
+        // robust rules, payload attacks, silent byzantine slots, churn,
+        // lyapunov and branching < 2 all refuse the aggregated uplink
+        let mut r = c.clone();
+        r.algorithm = Algorithm::RoSdhb;
+        assert!(r.validate().is_err());
+        let mut r = c.clone();
+        r.aggregator = "cwtm".into();
+        assert!(r.validate().is_err());
+        let mut r = c.clone();
+        r.attack = "alie:1.5".into();
+        assert!(r.validate().is_err());
+        let mut r = c.clone();
+        r.attack = "none".into();
+        assert!(r.validate().is_err(), "silent byz slots would stall");
+        r.n_byz = 0;
+        r.validate().unwrap();
+        let mut r = c.clone();
+        r.epoch_rounds = 4;
+        r.churn = "1:-2".into();
+        assert!(r.validate().is_err());
+        let mut r = c.clone();
+        r.branching = 1;
+        r.fanout = "flat".into();
+        assert!(r.validate().is_err());
+        let mut r = c.clone();
+        r.algorithm = Algorithm::RobustDgd;
+        r.lyapunov = true;
+        assert!(r.validate().is_err());
+
+        // the mode pins the f32 summation order: it must move the wire
+        // fingerprint so both sides fold identically
+        let mut fwd = c.clone();
+        fwd.uplink = "forward".into();
+        assert_ne!(c.wire_fingerprint(), fwd.wire_fingerprint());
+
+        let doc = toml::TomlDoc::parse(
+            "[experiment]\nalgorithm = \"dgd\"\naggregator = \"mean\"\n\
+             attack = \"labelflip\"\nuplink = \"aggregate\"\n\
+             fanout = \"tree\"\nbranching = 3\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.uplink, "aggregate");
+        c.validate().unwrap();
     }
 
     #[test]

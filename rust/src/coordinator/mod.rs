@@ -48,7 +48,7 @@ pub mod round_transport;
 
 use crate::aggregators::geometry::{GeoStats, RefreshPeriod};
 use crate::aggregators::{self, Aggregator};
-use crate::algorithms::{self, Algorithm, RoundEnv};
+use crate::algorithms::{self, Algorithm, RoundEnv, UplinkCtx};
 use crate::attacks::{self, AttackKind};
 use crate::compression::payload::PayloadPlan;
 use crate::compression::RandK;
@@ -69,6 +69,7 @@ use crate::transport::downlink::{
 };
 use crate::transport::evloop::ServerIo;
 use crate::transport::net::NetStats;
+use crate::transport::uplink::ReducePlan;
 use crate::transport::{broadcast_len, ByteMeter};
 #[cfg(feature = "pjrt")]
 use crate::worker::PjrtEngine;
@@ -186,6 +187,18 @@ pub struct RunReport {
     /// Cumulative uplink bytes at the τ-crossing (the Fig. 1 y-axis).
     pub uplink_bytes_to_tau: Option<u64>,
     pub uplink_bytes: u64,
+    /// The subset of `uplink_bytes` the coordinator itself received —
+    /// equal to `uplink_bytes` under value-forwarding (and under
+    /// `uplink = "aggregate"` on a flat fan-out); only the root
+    /// subtrees' accumulated frames under the relay tree, where ingress
+    /// drops from n·B to branching·B.
+    pub coordinator_ingress_bytes: u64,
+    /// The subset of `uplink_bytes` folded into accumulated frames by
+    /// worker relays instead of reaching the coordinator:
+    /// `uplink_bytes − coordinator_ingress_bytes` (0 under
+    /// value-forwarding). The uplink mirror of
+    /// [`Self::relayed_downlink_bytes`].
+    pub relayed_uplink_bytes: u64,
     /// Total downlink bytes *delivered* (one copy per recipient).
     pub downlink_bytes: u64,
     /// The subset of `downlink_bytes` the coordinator itself sent —
@@ -583,6 +596,11 @@ impl Trainer {
             slots: health.as_ref().map_or_else(Vec::new, |h| h.slots.clone()),
             net: health.as_ref().map(|h| h.net),
             uplink_bytes: self.meter.uplink,
+            coordinator_ingress_bytes: self.meter.coordinator_ingress,
+            relayed_uplink_bytes: self
+                .meter
+                .uplink
+                .saturating_sub(self.meter.coordinator_ingress),
             downlink_bytes: self.meter.downlink,
             coordinator_egress_bytes: self.meter.coordinator_egress,
             relayed_downlink_bytes: self
@@ -654,6 +672,27 @@ impl Trainer {
 
         let aggregate_start = Instant::now();
         let (honest_grads, byz_grads) = self.grad_store.split_at(nh);
+        // Aggregated-uplink context: the logical reduce plan spans this
+        // round's active gradient slots. Over tcp the transport already
+        // folded the round's AGG frames (`take_aggregated`); under the
+        // local transport the algorithm runs the oracle fold through
+        // the identical plan recursion.
+        let aggregate_plan = if self.cfg.uplink == "aggregate" {
+            Some(ReducePlan::new(
+                self.cfg.branching,
+                &self.transport.active_gradient_slots(),
+            ))
+        } else {
+            None
+        };
+        let aggregated = if aggregate_plan.is_some()
+            && self.cfg.transport == "tcp"
+        {
+            Some(self.transport.take_aggregated())
+        } else {
+            None
+        };
+        let physical_tree = matches!(self.fanout, FanoutPlan::Tree { .. });
         let mut env = RoundEnv {
             d: self.params.len(),
             n_honest: self.cfg.n_honest,
@@ -672,6 +711,20 @@ impl Trainer {
             // the dense gradients itself (identical results — workers
             // derive the same per-(round, worker) streams).
             payloads: self.transport.round_payloads(),
+            uplink: match &aggregate_plan {
+                None => UplinkCtx::Forward,
+                Some(plan) => match aggregated {
+                    Some(total) => UplinkCtx::Wire {
+                        plan,
+                        total,
+                        physical_tree,
+                    },
+                    None => UplinkCtx::Local {
+                        plan,
+                        physical_tree,
+                    },
+                },
+            },
         };
         let mut update = self
             .algorithm
@@ -930,6 +983,11 @@ impl Trainer {
             rounds_to_tau: reached.map(|(r, _)| r),
             uplink_bytes_to_tau: reached.map(|(_, b)| b),
             uplink_bytes: self.meter.uplink,
+            coordinator_ingress_bytes: self.meter.coordinator_ingress,
+            relayed_uplink_bytes: self
+                .meter
+                .uplink
+                .saturating_sub(self.meter.coordinator_ingress),
             downlink_bytes: self.meter.downlink,
             coordinator_egress_bytes: self.meter.coordinator_egress,
             relayed_downlink_bytes: self

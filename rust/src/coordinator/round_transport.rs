@@ -67,7 +67,10 @@ use crate::telemetry::{Event, Histogram, Telemetry};
 use crate::transport::downlink::FanoutPlan;
 use crate::transport::evloop::ServerIo;
 use crate::transport::monitor::SlotHealth;
-use crate::transport::net::{CoordinatorServer, NetStats};
+use crate::transport::net::{
+    AggEvent, CoordinatorServer, NetStats, COLLECT_GRACE,
+};
+use crate::transport::uplink::{combine, AggFrame, AggValue, ReducePlan};
 use crate::transport::WireMessage;
 use crate::worker::{GradEngine, HonestWorker};
 use anyhow::{anyhow, Result};
@@ -176,6 +179,22 @@ pub trait RoundTransport: Send {
     fn round_payloads(&self) -> Option<&[Payload]> {
         None
     }
+
+    /// The fully reduced uplink of the last [`Self::exchange`] under
+    /// `uplink = "aggregate"` (TCP only): the sum of every covered
+    /// slot's contribution, folded in the [`ReducePlan`]'s fixed
+    /// association. `None` whenever the transport forwards per-worker
+    /// values — the algorithm then reduces them itself through the same
+    /// plan, which is what keeps the two paths bit-identical.
+    fn take_aggregated(&mut self) -> Option<AggValue> {
+        None
+    }
+
+    /// Per-gradient-slot activity flags (`true` = a worker currently
+    /// owns the slot and is expected to contribute) — the trainer
+    /// builds each round's [`ReducePlan`] from them, so both transports
+    /// must report membership identically.
+    fn active_gradient_slots(&self) -> Vec<bool>;
 
     /// Measured socket traffic, if this transport moves real bytes.
     fn net_stats(&self) -> Option<NetStats> {
@@ -408,6 +427,10 @@ impl RoundTransport for LocalTransport {
         Ok(changed)
     }
 
+    fn active_gradient_slots(&self) -> Vec<bool> {
+        self.active.clone()
+    }
+
     fn membership(&self) -> Vec<SlotMembership> {
         self.active
             .iter()
@@ -524,6 +547,16 @@ pub struct TcpTransport {
     worker_hist: Vec<Histogram>,
     /// Workers dropped from later rounds so far.
     evictions: u64,
+    /// `uplink = "aggregate"`: workers ship `AGG` frames (relays fold
+    /// them), dedicated readers own the receive side, and the exchange
+    /// runs [`Self::exchange_aggregate`] instead of per-worker collect.
+    uplink_agg: bool,
+    /// `config: branching` — the reduction tree's arity (aggregate
+    /// mode builds a [`ReducePlan`] from it every round).
+    branching: usize,
+    /// The last aggregate exchange's full reduction, taken once by the
+    /// trainer ([`RoundTransport::take_aggregated`]).
+    aggregated: Option<AggValue>,
 }
 
 impl TcpTransport {
@@ -592,6 +625,12 @@ impl TcpTransport {
         let telemetry = Telemetry::to_path(&cfg.trace_path)
             .map_err(|e| anyhow!("trace_path {:?}: {e}", cfg.trace_path))?;
         server.set_telemetry(telemetry.clone());
+        let uplink_agg = cfg.uplink == "aggregate";
+        if uplink_agg {
+            // the threaded runtime spawns its per-connection uplink
+            // readers at admission, so this must precede rendezvous
+            server.enable_uplink_readers();
+        }
         let (active, pending_left): (Vec<bool>, Vec<bool>) = match membership
         {
             Some(m) if m.len() == n => m
@@ -657,6 +696,9 @@ impl TcpTransport {
             last_phase: None,
             worker_hist: vec![Histogram::default(); n],
             evictions: 0,
+            uplink_agg,
+            branching: cfg.branching,
+            aggregated: None,
         })
     }
 
@@ -774,6 +816,217 @@ impl TcpTransport {
     fn zero_payload(&self, t: u64) -> Payload {
         self.plan.zero_payload(self.d, t <= 1)
     }
+
+    /// `active_gradient_slots` without the trait indirection.
+    fn gradient_slot_activity(&self) -> Vec<bool> {
+        (0..self.n_grad)
+            .map(|w| self.slots[w] == SlotState::Active)
+            .collect()
+    }
+
+    /// Validate one accumulated-uplink frame body against the round and
+    /// the model shape. Anything malformed is a dropped frame — never a
+    /// panic downstream of the decode.
+    fn accept_agg(&self, t: u64, body: &[u8]) -> Result<AggFrame> {
+        let frame = AggFrame::decode_body(body)
+            .map_err(|e| anyhow!("undecodable AGG frame: {e}"))?;
+        if frame.round != t {
+            return Err(anyhow!("round {} != current {t}", frame.round));
+        }
+        match &frame.value {
+            AggValue::Dense(v) => {
+                if v.len() != self.d {
+                    return Err(anyhow!(
+                        "accumulated dense value has {} entries, model \
+                         has {}",
+                        v.len(),
+                        self.d
+                    ));
+                }
+            }
+            AggValue::Sparse { idx, val } => {
+                if idx.len() != val.len() {
+                    return Err(anyhow!(
+                        "sparse accumulation has {} indices but {} values",
+                        idx.len(),
+                        val.len()
+                    ));
+                }
+                if !idx.windows(2).all(|w| w[0] < w[1]) {
+                    return Err(anyhow!(
+                        "sparse accumulation indices not strictly sorted"
+                    ));
+                }
+                if idx.last().is_some_and(|&i| i as usize >= self.d) {
+                    return Err(anyhow!(
+                        "sparse accumulation index beyond model \
+                         dimension {}",
+                        self.d
+                    ));
+                }
+            }
+        }
+        if let Some(&s) =
+            frame.slots.iter().find(|&&s| s as usize >= self.n_grad)
+        {
+            return Err(anyhow!(
+                "accumulated frame covers slot {s}, run has {} gradient \
+                 slots",
+                self.n_grad
+            ));
+        }
+        Ok(frame)
+    }
+
+    /// The `uplink = "aggregate"` exchange: every broadcast carries
+    /// `expect_reply = false` (dedicated uplink readers own the receive
+    /// side), the collect loop drains [`AggEvent`]s until every active
+    /// gradient slot is covered, and the arrived frames — fully folded
+    /// subtrees under `fanout = "tree"`, singletons under flat or a
+    /// degraded tree, or any mix — are re-nested through the round's
+    /// [`ReducePlan`]. That recursion is the same association the
+    /// relays and the local oracle use, which is what makes the total
+    /// bit-identical across physical topologies.
+    fn exchange_aggregate(
+        &mut self,
+        t: u64,
+        msg: &WireMessage,
+        loss_store: &mut [f32],
+    ) -> Result<()> {
+        self.aggregated = None;
+        let n_conn = self.server.n_workers();
+        let expect = vec![false; n_conn];
+        let phase_start = Instant::now();
+        self.server.broadcast(t, msg, &expect, self.timeout);
+        let broadcast_elapsed = phase_start.elapsed();
+        if self.server.n_alive() == 0 {
+            return Err(anyhow!(
+                "all {n_conn} workers are gone — nothing left to train with"
+            ));
+        }
+        let active = self.gradient_slot_activity();
+        let plan = ReducePlan::new(self.branching, &active);
+        let want = active.iter().filter(|a| **a).count();
+        let mut covered = vec![false; self.n_grad];
+        let mut n_covered = 0usize;
+        let mut frames: Vec<AggFrame> = Vec::new();
+        let collect_start = Instant::now();
+        let deadline = collect_start + self.timeout + COLLECT_GRACE;
+        while n_covered < want {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let Some(ev) = self.server.poll_agg(deadline - now) else {
+                continue; // poll timed out — the deadline check exits
+            };
+            match ev {
+                AggEvent::Frame { worker, body } => {
+                    match self.accept_agg(t, &body) {
+                        Ok(frame) => {
+                            for &s in &frame.slots {
+                                if !std::mem::replace(
+                                    &mut covered[s as usize],
+                                    true,
+                                ) {
+                                    n_covered += 1;
+                                }
+                            }
+                            frames.push(frame);
+                        }
+                        Err(e) => eprintln!(
+                            "rosdhb[tcp]: round {t}: worker {worker}: {e} \
+                             — accumulated frame dropped"
+                        ),
+                    }
+                }
+                AggEvent::Leave { worker } => {
+                    if let Some(pl) =
+                        self.pending_left.get_mut(worker as usize)
+                    {
+                        *pl = true;
+                    }
+                }
+                AggEvent::Resync { worker } => {
+                    eprintln!(
+                        "rosdhb[tcp]: round {t}: worker {worker} lost its \
+                         relay feed — re-delivering this round directly"
+                    );
+                    self.server.redeliver_direct(
+                        worker as usize,
+                        t,
+                        msg,
+                        self.timeout,
+                    );
+                }
+                AggEvent::Down { worker, reason } => {
+                    let w = worker as usize;
+                    eprintln!("rosdhb[tcp]: round {t}: worker {w}: {reason}");
+                    self.server.evict(w);
+                    self.evictions += 1;
+                    self.telemetry.emit(|| Event::WorkerEvicted {
+                        round: t,
+                        worker: w,
+                        reason: reason.clone(),
+                    });
+                    self.telemetry.dump_flight_recorder("worker eviction");
+                }
+            }
+        }
+        self.last_phase = Some((broadcast_elapsed, collect_start.elapsed()));
+        let combined = combine(&plan, frames);
+        if combined.dropped > 0 {
+            eprintln!(
+                "rosdhb[tcp]: round {t}: {} duplicate or unplaceable \
+                 accumulated frame(s) dropped",
+                combined.dropped
+            );
+        }
+        for &(slot, loss) in &combined.losses {
+            if let Some(l) = loss_store.get_mut(slot as usize) {
+                *l = loss;
+            }
+        }
+        // A slot the reduction never covered contributed nothing this
+        // round: its loss reads zero and the sum simply gains nothing —
+        // the identical outcome to the forward path's zero payload.
+        // DASHA stays stateful on the client, so a missed contribution
+        // permanently offsets the worker's local estimate from the
+        // server sum: evict, exactly like the forward path.
+        let mut is_covered = vec![false; self.n_grad];
+        for &s in &combined.covered {
+            is_covered[s as usize] = true;
+        }
+        for (w, &a) in active.iter().enumerate() {
+            if is_covered[w] {
+                continue;
+            }
+            loss_store[w] = 0.0;
+            if !a {
+                continue; // vacant slot: the expected membership state
+            }
+            let note = if matches!(self.plan, PayloadPlan::DashaDiff { .. })
+            {
+                self.server.evict(w);
+                self.evictions += 1;
+                self.telemetry.emit(|| Event::WorkerEvicted {
+                    round: t,
+                    worker: w,
+                    reason: "client-side estimate diverged".into(),
+                });
+                self.telemetry.dump_flight_recorder("worker eviction");
+                " (evicted: client-side estimate diverged)"
+            } else {
+                ""
+            };
+            eprintln!(
+                "rosdhb[tcp]: round {t}: worker {w} contributed nothing \
+                 to the reduction — zero contribution assumed{note}"
+            );
+        }
+        self.aggregated = combined.total;
+        Ok(())
+    }
 }
 
 /// A shipped mask must be a strictly sorted k-subset of [0, d) in the
@@ -864,6 +1117,12 @@ impl RoundTransport for TcpTransport {
                 &own_msg
             }
         };
+        if self.uplink_agg {
+            // grad_store stays untouched: the algorithm layer consumes
+            // the full reduction via `take_aggregated`, never the
+            // per-slot gradients
+            return self.exchange_aggregate(t, msg, loss_store);
+        }
         let n_conn = self.server.n_workers();
         let mut expect = vec![false; n_conn];
         for (w, e) in expect.iter_mut().enumerate().take(self.n_grad) {
@@ -1028,6 +1287,14 @@ impl RoundTransport for TcpTransport {
         }
     }
 
+    fn take_aggregated(&mut self) -> Option<AggValue> {
+        self.aggregated.take()
+    }
+
+    fn active_gradient_slots(&self) -> Vec<bool> {
+        self.gradient_slot_activity()
+    }
+
     fn epoch_boundary(
         &mut self,
         epoch: u64,
@@ -1096,14 +1363,19 @@ impl RoundTransport for TcpTransport {
         // Membership settled — let the monitor re-derive relay placement
         // from observed RTT/jitter (event-loop runtime only; the
         // threaded server keeps join-order placement and stays the
-        // oracle). Same capability rule as at rendezvous.
-        let can_relay: Vec<bool> = (0..self.slots.len())
-            .map(|w| {
-                (w < self.n_grad || self.drones_reply)
-                    && self.slots[w] == SlotState::Active
-            })
-            .collect();
-        self.server.boundary_replan(&self.fanout, &can_relay)?;
+        // oracle). Same capability rule as at rendezvous. Aggregate
+        // uplinks pin the placement for the whole run instead: the
+        // physical fold order must keep matching the logical
+        // [`ReducePlan`], and join-order placement is exactly that.
+        if !self.uplink_agg {
+            let can_relay: Vec<bool> = (0..self.slots.len())
+                .map(|w| {
+                    (w < self.n_grad || self.drones_reply)
+                        && self.slots[w] == SlotState::Active
+                })
+                .collect();
+            self.server.boundary_replan(&self.fanout, &can_relay)?;
+        }
         changed.sort_unstable();
         changed.dedup();
         Ok(changed)

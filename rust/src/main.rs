@@ -211,6 +211,10 @@ fn report_json(
             .map_or(Json::Null, |v| Json::Num(v as f64)),
     );
     m.insert("uplink_bytes".into(), Json::Num(r.uplink_bytes as f64));
+    m.insert(
+        "coordinator_ingress_bytes".into(),
+        Json::Num(r.coordinator_ingress_bytes as f64),
+    );
     m.insert("downlink_bytes".into(), Json::Num(r.downlink_bytes as f64));
     m.insert(
         "coordinator_egress_bytes".into(),
@@ -239,6 +243,10 @@ fn report_json(
         t.insert(
             "relayed_downlink_bytes".into(),
             Json::Num(r.relayed_downlink_bytes as f64),
+        );
+        t.insert(
+            "relayed_uplink_bytes".into(),
+            Json::Num(r.relayed_uplink_bytes as f64),
         );
         t.insert("relay_resyncs".into(), Json::Num(r.relay_resyncs as f64));
         t.insert("evictions".into(), Json::Num(r.evictions as f64));

@@ -51,6 +51,14 @@ pub struct StatusState {
     pub net: Option<NetStats>,
     /// Modeled byte-meter view — comparable across transports.
     pub uplink_bytes: u64,
+    /// The subset of `uplink_bytes` the coordinator itself received —
+    /// smaller than `uplink_bytes` only under `uplink = "aggregate"`
+    /// on a relay tree, where interior relays fold their subtrees.
+    pub coordinator_ingress_bytes: u64,
+    /// Ingress-minus-uplink mirror of `relayed_downlink_bytes`: bytes
+    /// worker relays folded into accumulated frames (0 under
+    /// value-forwarding).
+    pub relayed_uplink_bytes: u64,
     pub downlink_bytes: u64,
     pub coordinator_egress_bytes: u64,
     /// Delivered-minus-egress: bytes the relay tree moved for the
@@ -113,6 +121,14 @@ impl StatusState {
             },
         );
         o.insert("uplink_bytes".into(), num(self.uplink_bytes));
+        o.insert(
+            "coordinator_ingress_bytes".into(),
+            num(self.coordinator_ingress_bytes),
+        );
+        o.insert(
+            "relayed_uplink_bytes".into(),
+            num(self.relayed_uplink_bytes),
+        );
         o.insert("downlink_bytes".into(), num(self.downlink_bytes));
         o.insert(
             "coordinator_egress_bytes".into(),

@@ -59,13 +59,14 @@ use anyhow::{anyhow, Result};
 use super::downlink::FanoutPlan;
 use super::monitor::{GapMonitor, RttMonitor, SlotHealth};
 use super::net::{
-    build_frame, is_timeout, server_handshake, write_frame,
-    CoordinatorServer, NetCounters, NetStats, RelayHub, Reply, WorkerClient,
-    COLLECT_GRACE, FRAME_OVERHEAD, GRAD_ENVELOPE, HANDSHAKE_TIMEOUT,
-    KIND_BYE, KIND_GRAD, KIND_LEAVE, KIND_MSG, KIND_PLAN, KIND_RESYNC,
-    MAX_FRAME, RELAY_WRITE_TIMEOUT,
+    build_frame, is_timeout, read_frame, server_handshake, write_frame,
+    AggEvent, CoordinatorServer, NetCounters, NetStats, RelayHub, Reply,
+    WorkerClient, COLLECT_GRACE, FRAME_OVERHEAD, GRAD_ENVELOPE,
+    HANDSHAKE_TIMEOUT, KIND_AGG, KIND_BYE, KIND_GRAD, KIND_LEAVE, KIND_MSG,
+    KIND_PLAN, KIND_RESYNC, MAX_FRAME, RELAY_WRITE_TIMEOUT,
 };
 use super::poller::Poller;
+use super::uplink::{relay_fold, AggFrame};
 use super::WireMessage;
 use crate::compression::payload::Payload;
 use crate::telemetry::{Event, Telemetry};
@@ -408,6 +409,14 @@ pub struct EvloopServer {
     /// re-plans are skipped when the monitor's order is unchanged.
     last_order: Option<Vec<usize>>,
     ready: Vec<usize>,
+    /// Aggregated-uplink mode (`uplink = "aggregate"`): AGG / LEAVE /
+    /// RESYNC frames become [`AggEvent`]s drained by [`Self::poll_agg`]
+    /// instead of replies. Unlike the threaded runtime (which spawns a
+    /// dedicated reader thread per connection), the same poller that
+    /// pumps replies assembles these events.
+    uplink_agg: bool,
+    /// Events assembled by read pumps under aggregate mode.
+    agg_events: VecDeque<AggEvent>,
 }
 
 impl EvloopServer {
@@ -430,6 +439,8 @@ impl EvloopServer {
             cur: None,
             last_order: None,
             ready: Vec::new(),
+            uplink_agg: false,
+            agg_events: VecDeque::new(),
         })
     }
 
@@ -888,6 +899,71 @@ impl EvloopServer {
         out
     }
 
+    /// Switch the receive side to aggregated-uplink events — the
+    /// event-loop counterpart of
+    /// [`CoordinatorServer::enable_uplink_readers`]. No extra threads:
+    /// the poller that would pump replies assembles [`AggEvent`]s
+    /// instead.
+    pub fn enable_uplink_readers(&mut self) {
+        self.uplink_agg = true;
+    }
+
+    /// Next aggregated-uplink event, waiting up to `timeout` (`None`
+    /// on timeout). Pumps writes and the poller while waiting, so the
+    /// in-flight broadcast keeps draining.
+    pub fn poll_agg(&mut self, timeout: Duration) -> Option<AggEvent> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(ev) = self.agg_events.pop_front() {
+                return Some(ev);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            self.pump_writes();
+            let wait = (deadline - now).min(Duration::from_millis(20));
+            let mut ready = std::mem::take(&mut self.ready);
+            if self.poller.wait(wait, &mut ready).is_err() {
+                ready.clear();
+            }
+            for &token in &ready {
+                self.pump_read(token);
+            }
+            self.ready = ready;
+        }
+    }
+
+    /// Collapse `worker` to direct delivery and re-send the in-flight
+    /// round's frame to it — see
+    /// [`CoordinatorServer::redeliver_direct`]. Returns `false` when
+    /// the connection is gone.
+    pub fn redeliver_direct(
+        &mut self,
+        worker: usize,
+        _round: u64,
+        msg: &WireMessage,
+        timeout: Duration,
+    ) -> bool {
+        let Some(conn) = self.conns.get_mut(worker) else {
+            return false;
+        };
+        if conn.stream.is_none() || !conn.alive {
+            return false;
+        }
+        conn.fallback_direct = true;
+        let body = msg.encode();
+        let wire_bytes = body.len() as u64;
+        conn.wq.push_back(WriteJob {
+            frame: Arc::new(build_frame(KIND_MSG, &body)),
+            off: 0,
+            wire_bytes,
+        });
+        conn.write_deadline = Some(Instant::now() + timeout);
+        self.pump_writes();
+        self.conns[worker].stream.is_some()
+    }
+
     /// Suspend every connection whose owed reply is past the round
     /// deadline (the threaded runtime's per-read timeout, applied from
     /// the broadcast timestamp).
@@ -936,6 +1012,8 @@ impl EvloopServer {
             counters,
             pending,
             poller,
+            uplink_agg,
+            agg_events,
             ..
         } = self;
         for (i, conn) in conns.iter_mut().enumerate() {
@@ -980,6 +1058,12 @@ impl EvloopServer {
                 conn.write_deadline = None;
             }
             if let Some(reason) = failed {
+                if *uplink_agg {
+                    agg_events.push_back(AggEvent::Down {
+                        worker: i as u16,
+                        reason: format!("send failed: {reason}"),
+                    });
+                }
                 if let Some(r) = conn.expect_round.take() {
                     pending.push(Reply {
                         worker: i as u16,
@@ -1052,10 +1136,25 @@ impl EvloopServer {
             monitor,
             poller,
             telemetry,
+            uplink_agg,
+            agg_events,
             ..
         } = self;
         let conn = &mut conns[i];
         match frame {
+            Frame::Ctl {
+                kind: KIND_AGG,
+                body,
+            } => {
+                counters
+                    .add_raw_uplink((FRAME_OVERHEAD + body.len()) as u64);
+                counters.add_wire_uplink(body.len() as u64);
+                agg_events.push_back(AggEvent::Frame {
+                    worker: i as u16,
+                    body,
+                });
+                true
+            }
             Frame::Grad { loss, wire } => {
                 counters.add_raw_uplink(
                     (FRAME_OVERHEAD + GRAD_ENVELOPE + wire.len()) as u64,
@@ -1100,12 +1199,30 @@ impl EvloopServer {
                 counters
                     .add_raw_uplink((FRAME_OVERHEAD + body.len()) as u64);
                 conn.leaving = true;
+                if *uplink_agg {
+                    agg_events
+                        .push_back(AggEvent::Leave { worker: i as u16 });
+                }
                 true
             }
             Frame::Ctl {
                 kind: KIND_RESYNC,
                 body,
             } => {
+                if *uplink_agg {
+                    // aggregate mode: no broadcast ever owes a reply, so
+                    // the deferred path below would never fire — account
+                    // immediately and let the round loop drive the
+                    // redelivery ([`Self::redeliver_direct`])
+                    counters.add_raw_uplink(
+                        (FRAME_OVERHEAD + body.len()) as u64,
+                    );
+                    counters.add_resync();
+                    telemetry.emit(|| Event::RelayResync { worker: i });
+                    agg_events
+                        .push_back(AggEvent::Resync { worker: i as u16 });
+                    return true;
+                }
                 if conn.expect_round.is_none() {
                     // defer — see `EvConn::pending_resync`
                     conn.pending_resync = true;
@@ -1138,6 +1255,17 @@ impl EvloopServer {
                 true
             }
             Frame::Ctl { kind, .. } => {
+                if *uplink_agg {
+                    agg_events.push_back(AggEvent::Down {
+                        worker: i as u16,
+                        reason: format!(
+                            "protocol violation: expected AGG, got kind \
+                             {kind}"
+                        ),
+                    });
+                    close_conn(poller, conn, i);
+                    return false;
+                }
                 if let Some(r) = conn.expect_round.take() {
                     pending.push(Reply {
                         worker: i as u16,
@@ -1161,9 +1289,17 @@ impl EvloopServer {
             conns,
             pending,
             poller,
+            uplink_agg,
+            agg_events,
             ..
         } = self;
         let conn = &mut conns[i];
+        if *uplink_agg && conn.alive {
+            agg_events.push_back(AggEvent::Down {
+                worker: i as u16,
+                reason: e.to_string(),
+            });
+        }
         if let Some(r) = conn.expect_round.take() {
             pending.push(Reply {
                 worker: i as u16,
@@ -1418,6 +1554,32 @@ impl ServerIo {
         forward!(self, s => s.collect(n_expected, round, timeout))
     }
 
+    /// Switch the receive side to aggregated-uplink events
+    /// (`uplink = "aggregate"`). Must run before rendezvous — the
+    /// threaded runtime spawns its per-connection uplink readers at
+    /// admission.
+    pub fn enable_uplink_readers(&mut self) {
+        forward!(self, s => s.enable_uplink_readers())
+    }
+
+    /// Next aggregated-uplink event, waiting up to `timeout`.
+    pub fn poll_agg(&mut self, timeout: Duration) -> Option<AggEvent> {
+        forward!(self, s => s.poll_agg(timeout))
+    }
+
+    /// Collapse `worker` to direct delivery and re-send the in-flight
+    /// round's frame (aggregate-uplink `RESYNC` recovery). Returns
+    /// `false` when the connection is gone.
+    pub fn redeliver_direct(
+        &mut self,
+        worker: usize,
+        round: u64,
+        msg: &WireMessage,
+        timeout: Duration,
+    ) -> bool {
+        forward!(self, s => s.redeliver_direct(worker, round, msg, timeout))
+    }
+
     pub fn n_alive(&self) -> usize {
         forward!(self, s => s.n_alive())
     }
@@ -1498,6 +1660,8 @@ pub struct EvFeed {
     resyncs: u32,
     relayed_wire: u64,
     relayed_raw: u64,
+    relayed_up_wire: u64,
+    relayed_up_raw: u64,
     /// Test hook: when this worker relays round `.0`, sleep `.1`
     /// before forwarding — a fault injection for the stalled-relay
     /// regression test, delivery-timing-only by construction.
@@ -1537,6 +1701,8 @@ impl EvFeed {
             resyncs: 0,
             relayed_wire: 0,
             relayed_raw: 0,
+            relayed_up_wire: 0,
+            relayed_up_raw: 0,
             stall,
             worker_id,
         })
@@ -1778,9 +1944,123 @@ impl EvFeed {
         .map_err(|e| anyhow!("leave send: {e}"))
     }
 
+    /// Collect this round's `AGG` frames from every relay child, fold
+    /// them into `own` (child subtrees ascending by root slot — the
+    /// determinism contract of [`relay_fold`]), and ship the
+    /// accumulated frame to the parent relay, or directly to the
+    /// coordinator for tree roots, collapsed feeds, and the
+    /// `force_direct` leave path. The event-loop counterpart of the
+    /// threaded `TreeFeed::uplink_agg`: children are write-only for the
+    /// downlink pump, so blocking per-child reads with a shared
+    /// deadline need no reader state.
+    pub fn uplink_agg(
+        &mut self,
+        own: AggFrame,
+        timeout: Duration,
+        force_direct: bool,
+    ) -> Result<()> {
+        let round = own.round;
+        let deadline = Instant::now() + timeout;
+        let mut child_frames = Vec::with_capacity(self.children.len());
+        let mut dead = Vec::new();
+        for (i, child) in self.children.iter_mut().enumerate() {
+            // drain until this round's AGG (stale catch-up frames are
+            // dropped), the deadline passes, or the child dies
+            loop {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                child.set_read_timeout(Some(deadline - now)).ok();
+                match read_frame(child) {
+                    Ok((KIND_AGG, body)) => {
+                        match AggFrame::decode_body(&body) {
+                            Ok(f) if f.round == round => {
+                                child_frames.push(f);
+                                break;
+                            }
+                            Ok(stale) => {
+                                eprintln!(
+                                    "rosdhb[tree]: child uplinked round \
+                                     {} while folding round {round} — \
+                                     stale frame dropped",
+                                    stale.round
+                                );
+                            }
+                            Err(e) => {
+                                eprintln!(
+                                    "rosdhb[tree]: bad child AGG frame \
+                                     ({e}) — dropping the child"
+                                );
+                                dead.push(i);
+                                break;
+                            }
+                        }
+                    }
+                    Ok((kind, _)) => {
+                        eprintln!(
+                            "rosdhb[tree]: unexpected child uplink frame \
+                             kind {kind} — ignored"
+                        );
+                    }
+                    Err(e) => {
+                        if !is_timeout(&e) {
+                            dead.push(i);
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+        for &i in dead.iter().rev() {
+            self.children.remove(i);
+        }
+        let folded = relay_fold(own, child_frames)
+            .map_err(|e| anyhow!("relay fold: {e}"))?;
+        let body = folded.encode_body();
+        let frame = build_frame(KIND_AGG, &body);
+        if !force_direct && !self.resynced {
+            if let Some(parent) = self.parent.as_mut() {
+                match write_all_nb(
+                    parent,
+                    &frame,
+                    Instant::now() + RELAY_WRITE_TIMEOUT,
+                ) {
+                    Ok(()) => {
+                        self.relayed_up_raw += frame.len() as u64;
+                        self.relayed_up_wire += body.len() as u64;
+                        return Ok(());
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "rosdhb[tree]: relay uplink write failed \
+                             ({e}) — collapsing to direct delivery"
+                        );
+                        self.parent = None;
+                        self.parent_down_at = Some(Instant::now());
+                        self.trigger_resync(false);
+                    }
+                }
+            }
+        }
+        write_all_nb(
+            &mut self.direct,
+            &frame,
+            Instant::now() + NB_WRITE_TIMEOUT,
+        )
+        .map_err(|e| anyhow!("agg uplink: {e}"))
+    }
+
     /// Wire/raw bytes this worker re-forwarded to its tree children.
     pub fn relayed(&self) -> (u64, u64) {
         (self.relayed_wire, self.relayed_raw)
+    }
+
+    /// Wire/raw aggregated-uplink bytes this worker forwarded to its
+    /// parent relay (zero for tree roots: their frames go straight to
+    /// the coordinator and are metered there).
+    pub fn relayed_uplink(&self) -> (u64, u64) {
+        (self.relayed_up_wire, self.relayed_up_raw)
     }
 
     /// How many times this feed collapsed to direct delivery (stall or

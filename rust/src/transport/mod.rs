@@ -40,6 +40,7 @@ pub mod evloop;
 pub mod monitor;
 pub mod net;
 pub mod poller;
+pub mod uplink;
 
 use crate::compression::payload::{Payload, QuantBlock};
 
@@ -286,6 +287,13 @@ pub struct ByteMeter {
     /// (`fanout = "tree"`) only `branching` copies per round are
     /// coordinator egress, the rest is worker-to-worker forwarding.
     pub coordinator_egress: u64,
+    /// The subset of [`Self::uplink`] the coordinator itself received.
+    /// Equal to `uplink` under value-forwarding (every uplink travels
+    /// end-to-end); under `uplink = "aggregate"` on a relay tree only the
+    /// root subtrees' accumulated frames are coordinator ingress, the
+    /// rest is worker-to-worker folding traffic
+    /// ([`uplink::meter_model`]).
+    pub coordinator_ingress: u64,
     /// Uplink bytes per worker id.
     pub per_worker_uplink: Vec<u64>,
 }
@@ -296,6 +304,7 @@ impl ByteMeter {
             uplink: 0,
             downlink: 0,
             coordinator_egress: 0,
+            coordinator_ingress: 0,
             per_worker_uplink: vec![0; n_workers],
         }
     }
@@ -329,6 +338,7 @@ impl ByteMeter {
         };
         let len = msg.encoded_len() as u64;
         self.uplink += len;
+        self.coordinator_ingress += len;
         if worker < self.per_worker_uplink.len() {
             self.per_worker_uplink[worker] += len;
         }
@@ -339,6 +349,18 @@ impl ByteMeter {
     /// [`full_grad_len`] / [`quant_grad_len`]) without building a
     /// message. Tests pin these helpers against `encode().len()`.
     pub fn record_uplink_sized(&mut self, worker: usize, bytes: usize) {
+        self.uplink += bytes as u64;
+        self.coordinator_ingress += bytes as u64;
+        if worker < self.per_worker_uplink.len() {
+            self.per_worker_uplink[worker] += bytes as u64;
+        }
+    }
+
+    /// Record an uplink frame that terminated at another *worker* (a
+    /// relay folding its subtree under `uplink = "aggregate"`): counted
+    /// as delivered uplink and attributed to the sender, but not as
+    /// coordinator ingress.
+    pub fn record_relayed_uplink(&mut self, worker: usize, bytes: usize) {
         self.uplink += bytes as u64;
         if worker < self.per_worker_uplink.len() {
             self.per_worker_uplink[worker] += bytes as u64;

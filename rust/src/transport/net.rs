@@ -20,6 +20,11 @@
 //!   [`CoordinatorServer::collect`] gathers uplinks with a deadline. A
 //!   stalled, crashed, or Byzantine-silent worker surfaces as an errored
 //!   [`Reply`] (and is evicted from later rounds) — never as a hang.
+//! * **Aggregated uplinks** (`uplink = "aggregate"`) — workers ship
+//!   `AGG` frames that interior relays fold into one accumulated frame
+//!   per subtree (see [`super::uplink`]); dedicated per-connection
+//!   reader threads collect them ([`AggEvent`]), so coordinator ingress
+//!   scales with the number of tree roots, not with n.
 //! * **Accounting** — [`NetCounters`] tallies both raw socket bytes
 //!   (frames + envelopes) and wire-format bytes (the sum of
 //!   `encoded_len()` actually transmitted). For a clean run the
@@ -28,10 +33,11 @@
 
 use super::downlink::FanoutPlan;
 use super::monitor::{RttMonitor, SlotHealth};
+use super::uplink::{relay_fold, AggFrame};
 use super::WireMessage;
 use crate::telemetry::{Event, Telemetry};
 use anyhow::{anyhow, Result};
-use std::io::{ErrorKind, Read, Write};
+use std::io::{ErrorKind, IoSlice, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -42,8 +48,9 @@ use std::time::{Duration, Instant};
 /// Bumped on any framing or handshake change (2: typed `Grad` uplinks —
 /// quantized payloads joined the wire family; 3: JOIN carries a relay
 /// listener port, PLAN/RESYNC frames for the relay-tree fan-out; 4:
-/// LEAVE frames and epoch-boundary re-rendezvous into vacated slots).
-pub const PROTOCOL_VERSION: u16 = 4;
+/// LEAVE frames and epoch-boundary re-rendezvous into vacated slots;
+/// 5: AGG accumulated-uplink frames — relay-tree partial aggregation).
+pub const PROTOCOL_VERSION: u16 = 5;
 
 /// "RSDB" — rejects random port scanners / wrong services at JOIN time.
 pub(crate) const MAGIC: u32 = 0x5244_5342;
@@ -77,6 +84,13 @@ pub(crate) const KIND_RESYNC: u8 = 7;
 /// epoch boundary — never mid-epoch, keeping round arithmetic
 /// deterministic.
 pub(crate) const KIND_LEAVE: u8 = 8;
+/// Accumulated uplink (`uplink = "aggregate"`): one folded subtree
+/// contribution, body = one [`super::uplink::AggFrame`] (round, covered
+/// slots in fold order, per-slot losses, summed payload). Travels
+/// child → parent over the relay socket and parent → coordinator over
+/// the direct connection; replaces per-worker `GRAD` frames entirely
+/// for sum-shaped rules.
+pub(crate) const KIND_AGG: u8 = 9;
 
 /// JOIN body: magic(4) + version(2) + fingerprint(8) + relay_port(2).
 pub(crate) const JOIN_LEN: usize = 16;
@@ -99,7 +113,10 @@ pub(crate) const COLLECT_GRACE: Duration = Duration::from_secs(2);
 
 // ---------------------------------------------------------------- frames
 
-pub(crate) fn write_frame(
+/// Copy-then-write frame send (`bench_transport` A/Bs this against
+/// [`write_frame_vectored`]; the runtime's fan-out paths use the
+/// vectored variant).
+pub fn write_frame(
     stream: &mut TcpStream,
     kind: u8,
     body: &[u8],
@@ -117,6 +134,41 @@ pub(crate) fn build_frame(kind: u8, body: &[u8]) -> Vec<u8> {
     frame.push(kind);
     frame.extend_from_slice(body);
     frame
+}
+
+/// Write `[len][kind][body]` as one vectored write, without assembling
+/// the frame in a scratch buffer first — the fan-out hot paths (relay
+/// forwards, aggregated uplinks) write the same body to several sockets
+/// and should not copy it once per recipient. Handles short vectored
+/// writes by resuming at the right offset.
+pub fn write_frame_vectored(
+    stream: &mut TcpStream,
+    kind: u8,
+    body: &[u8],
+) -> std::io::Result<usize> {
+    let mut head = [0u8; FRAME_OVERHEAD];
+    head[0..4].copy_from_slice(&(body.len() as u32).to_le_bytes());
+    head[4] = kind;
+    let total = FRAME_OVERHEAD + body.len();
+    let mut written = 0usize;
+    while written < total {
+        let n = if written < FRAME_OVERHEAD {
+            let bufs =
+                [IoSlice::new(&head[written..]), IoSlice::new(body)];
+            stream.write_vectored(&bufs)?
+        } else {
+            stream.write(&body[written - FRAME_OVERHEAD..])?
+        };
+        if n == 0 {
+            return Err(std::io::Error::new(
+                ErrorKind::WriteZero,
+                "vectored frame write made no progress",
+            ));
+        }
+        written += n;
+    }
+    stream.flush()?;
+    Ok(total)
 }
 
 pub(crate) fn read_frame(stream: &mut TcpStream) -> std::io::Result<(u8, Vec<u8>)> {
@@ -247,6 +299,26 @@ pub struct Reply {
     pub latency: Option<Duration>,
 }
 
+/// One event from a dedicated uplink-reader thread (`uplink =
+/// "aggregate"`). Aggregated uplinks bypass the per-connection I/O
+/// threads entirely: the io threads only *write* under aggregate
+/// (every broadcast carries `expect_reply = false`), and these readers
+/// own the receive side of every direct socket.
+pub enum AggEvent {
+    /// An accumulated uplink frame (undecoded
+    /// [`super::uplink::AggFrame`] body).
+    Frame { worker: u16, body: Vec<u8> },
+    /// The worker announced a graceful leave; its next `Frame` is its
+    /// final contribution of the epoch.
+    Leave { worker: u16 },
+    /// The worker's relay feed died: re-deliver the in-flight round's
+    /// frame directly ([`CoordinatorServer::redeliver_direct`]) — its
+    /// own future uplinks arrive direct too, the socket is the same.
+    Resync { worker: u16 },
+    /// The connection is gone (EOF, I/O error, or protocol violation).
+    Down { worker: u16, reason: String },
+}
+
 enum IoCmd {
     /// Write a pre-built frame (unless the relay tree delivers it); when
     /// `expect_reply`, read one `GRAD` frame back (deadline `timeout`)
@@ -300,6 +372,11 @@ pub struct CoordinatorServer {
     /// relay placement, so these estimates never steer delivery — they
     /// exist for the status endpoint ([`Self::slot_health`]).
     monitor: RttMonitor,
+    /// Aggregated-uplink event funnel (`uplink = "aggregate"`): present
+    /// once [`Self::enable_uplink_readers`] ran; admissions then spawn
+    /// a dedicated reader thread per connection.
+    agg_tx: Option<Sender<AggEvent>>,
+    agg_rx: Option<Receiver<AggEvent>>,
 }
 
 impl CoordinatorServer {
@@ -319,7 +396,64 @@ impl CoordinatorServer {
             deliver_direct: None,
             telemetry: Telemetry::disabled(),
             monitor: RttMonitor::new(0),
+            agg_tx: None,
+            agg_rx: None,
         })
+    }
+
+    /// Switch the receive side to aggregated uplinks: every connection
+    /// admitted *after* this call gets a dedicated uplink-reader thread
+    /// feeding [`Self::poll_agg`]. The per-connection I/O threads then
+    /// only write — callers must pass `expect_reply = false` for every
+    /// worker on every [`Self::broadcast`]. Call before rendezvous.
+    pub fn enable_uplink_readers(&mut self) {
+        let (tx, rx) = channel();
+        self.agg_tx = Some(tx);
+        self.agg_rx = Some(rx);
+    }
+
+    /// Next aggregated-uplink event, waiting up to `timeout`. `None` on
+    /// timeout (or when uplink readers were never enabled).
+    pub fn poll_agg(&mut self, timeout: Duration) -> Option<AggEvent> {
+        self.agg_rx.as_ref()?.recv_timeout(timeout).ok()
+    }
+
+    /// Collapse `worker` to direct delivery and re-send the in-flight
+    /// round's frame to it — the aggregate-uplink counterpart of the
+    /// forward path's in-thread `RESYNC` redelivery (the uplink reader
+    /// observes the `RESYNC`, not the io thread, so redelivery must be
+    /// driven from the round loop). Returns `false` when the connection
+    /// is gone.
+    pub fn redeliver_direct(
+        &mut self,
+        worker: usize,
+        round: u64,
+        msg: &WireMessage,
+        timeout: Duration,
+    ) -> bool {
+        if let Some(direct) = &mut self.deliver_direct {
+            if let Some(d) = direct.get_mut(worker) {
+                *d = true;
+            }
+        }
+        let Some(conn) = self.conns.get_mut(worker) else {
+            return false;
+        };
+        if !conn.alive {
+            return false;
+        }
+        let body = msg.encode();
+        let wire_bytes = body.len() as u64;
+        let frame = Arc::new(build_frame(KIND_MSG, &body));
+        let cmd = IoCmd::Send {
+            round,
+            frame,
+            wire_bytes,
+            deliver: true,
+            expect_reply: false,
+            timeout,
+        };
+        matches!(conn.cmd_tx.as_ref().map(|tx| tx.send(cmd)), Some(Ok(())))
     }
 
     /// Install the event journal. Connections admitted *after* this
@@ -561,6 +695,15 @@ impl CoordinatorServer {
         let reply_tx = self.reply_tx.clone();
         let counters = Arc::clone(&self.counters);
         let telemetry = self.telemetry.clone();
+        if let Some(agg_tx) = &self.agg_tx {
+            let reader = stream.try_clone()?;
+            let tx = agg_tx.clone();
+            let counters = Arc::clone(&self.counters);
+            let telemetry = self.telemetry.clone();
+            std::thread::spawn(move || {
+                uplink_reader(reader, id, tx, counters, telemetry);
+            });
+        }
         let handle = std::thread::spawn(move || {
             io_loop(stream, id, cmd_rx, reply_tx, counters, telemetry);
         });
@@ -893,6 +1036,68 @@ pub(crate) fn server_handshake(
     Ok(JoinInfo { relay_port })
 }
 
+/// Dedicated per-connection receive thread under `uplink = "aggregate"`:
+/// blocking-reads the direct socket forever, translating `AGG`, `LEAVE`
+/// and `RESYNC` frames into [`AggEvent`]s, and exits when the socket
+/// closes. The paired [`io_loop`] thread never reads while this thread
+/// exists (every broadcast carries `expect_reply = false`), so the two
+/// threads split the socket cleanly: io thread writes, this one reads.
+fn uplink_reader(
+    mut stream: TcpStream,
+    id: u16,
+    tx: Sender<AggEvent>,
+    counters: Arc<NetCounters>,
+    telemetry: Telemetry,
+) {
+    stream.set_read_timeout(None).ok();
+    loop {
+        match read_frame(&mut stream) {
+            Ok((KIND_AGG, body)) => {
+                counters.add_raw_uplink((FRAME_OVERHEAD + body.len()) as u64);
+                // the whole AGG body is metered wire traffic: under
+                // aggregate it IS the uplink representation — there is
+                // no per-worker WireMessage envelope to strip
+                counters.add_wire_uplink(body.len() as u64);
+                if tx.send(AggEvent::Frame { worker: id, body }).is_err() {
+                    break;
+                }
+            }
+            Ok((KIND_LEAVE, body)) => {
+                counters.add_raw_uplink((FRAME_OVERHEAD + body.len()) as u64);
+                if tx.send(AggEvent::Leave { worker: id }).is_err() {
+                    break;
+                }
+            }
+            Ok((KIND_RESYNC, body)) => {
+                counters.add_raw_uplink((FRAME_OVERHEAD + body.len()) as u64);
+                counters.add_resync();
+                telemetry.emit(|| Event::RelayResync {
+                    worker: id as usize,
+                });
+                if tx.send(AggEvent::Resync { worker: id }).is_err() {
+                    break;
+                }
+            }
+            Ok((kind, _)) => {
+                let _ = tx.send(AggEvent::Down {
+                    worker: id,
+                    reason: format!(
+                        "protocol violation: expected AGG, got kind {kind}"
+                    ),
+                });
+                break;
+            }
+            Err(e) => {
+                let _ = tx.send(AggEvent::Down {
+                    worker: id,
+                    reason: e.to_string(),
+                });
+                break;
+            }
+        }
+    }
+}
+
 /// Per-connection I/O thread: serializes writes and the (optional) reply
 /// read for one worker, so a stalled peer can never block the round loop.
 ///
@@ -1222,6 +1427,15 @@ impl WorkerClient {
         send_leave_on(&mut self.stream, round, worker)
     }
 
+    /// Ship this round's contribution as an accumulated-uplink frame
+    /// (`uplink = "aggregate"` under flat fan-out: every worker is its
+    /// own single-slot subtree).
+    pub fn send_agg(&mut self, frame: &AggFrame) -> Result<()> {
+        write_frame_vectored(&mut self.stream, KIND_AGG, &frame.encode_body())
+            .map_err(|e| anyhow!("agg uplink: {e}"))?;
+        Ok(())
+    }
+
     /// Read the post-rendezvous fanout assignment (`fanout = "tree"`
     /// only): how many relay children to accept, and the parent relay to
     /// dial for downlink frames (`None` = the coordinator feeds this
@@ -1336,16 +1550,16 @@ fn forward_to_children(
     if kids.is_empty() {
         return;
     }
-    let frame = build_frame(kind, body);
-    kids.retain_mut(|s| {
-        match s.write_all(&frame).and_then(|_| s.flush()) {
-            Ok(()) => {
-                relayed_raw.fetch_add(frame.len() as u64, Ordering::Relaxed);
-                relayed_wire.fetch_add(body.len() as u64, Ordering::Relaxed);
-                true
-            }
-            Err(_) => false,
+    // vectored: the shared body is written per child without assembling
+    // a `[len][kind][body]` copy first (pinned against the assembling
+    // path by the `vectored` stage of `bench_transport`)
+    kids.retain_mut(|s| match write_frame_vectored(s, kind, body) {
+        Ok(n) => {
+            relayed_raw.fetch_add(n as u64, Ordering::Relaxed);
+            relayed_wire.fetch_add(body.len() as u64, Ordering::Relaxed);
+            true
         }
+        Err(_) => false,
     });
 }
 
@@ -1362,9 +1576,24 @@ pub struct TreeFeed {
     stream: TcpStream,
     rx: Receiver<FeedEvent>,
     children: Arc<Mutex<Vec<TcpStream>>>,
+    /// Read halves (clones) of the child relay sockets: aggregated
+    /// uplinks travel child → parent over the same sockets the downlink
+    /// forwards ride, and [`Self::uplink_agg`] reads them here without
+    /// touching the forwarders' mutex.
+    child_readers: Vec<TcpStream>,
+    /// Write half toward the parent relay for aggregated uplinks
+    /// (`None` for tree roots and after a collapse to direct).
+    relay_uplink: Option<TcpStream>,
+    /// Aggregated uplinks go straight to the coordinator (tree root,
+    /// or the relay edge died).
+    uplink_direct: bool,
     resynced: bool,
     relayed_wire: Arc<AtomicU64>,
     relayed_raw: Arc<AtomicU64>,
+    /// Aggregated-uplink bytes forwarded to the parent relay (wire,
+    /// raw) — main-thread only, so no atomics.
+    relayed_up_wire: u64,
+    relayed_up_raw: u64,
 }
 
 impl TreeFeed {
@@ -1416,6 +1645,12 @@ impl TreeFeed {
         // no further children ever join (failure recovery goes through
         // the coordinator's direct RESYNC path, never a re-dial)
         drop(hub.listener);
+        // read halves for the aggregated-uplink fold: a dead child's
+        // clone reads EOF and is dropped — the fold goes on without it
+        let child_readers = kids
+            .iter()
+            .map(|s| s.try_clone())
+            .collect::<std::io::Result<Vec<_>>>()?;
         let children = Arc::new(Mutex::new(kids));
 
         // direct feed: always read (BYE and collapsed-delivery frames
@@ -1450,62 +1685,76 @@ impl TreeFeed {
             });
         }
 
-        // relay feed: the parent's forwarded frames; EOF/error collapses
-        // this edge (RESYNC is sent by `recv`, on the main thread)
+        // relay feed: dial the parent on this thread (its listener is
+        // bound pre-JOIN — the kernel backlog completes the connect even
+        // before the parent reaches accept, so a short retry only papers
+        // over transient churn), keep the write half for aggregated
+        // uplinks, and spawn a reader that forwards the parent's
+        // downlink frames. A failed dial and a mid-run EOF both collapse
+        // this edge (the RESYNC is sent by `recv`, on the main thread).
+        let mut relay_uplink = None;
         if let Some(paddr) = parent {
-            let paddr = paddr.to_string();
-            let children = Arc::clone(&children);
-            let wire = Arc::clone(&relayed_wire);
-            let raw = Arc::clone(&relayed_raw);
-            std::thread::spawn(move || {
-                // the parent's listener is bound pre-JOIN, so a short
-                // retry only papers over transient accept backlog churn
-                let deadline = Instant::now() + Duration::from_secs(10);
-                let mut feed = loop {
-                    match TcpStream::connect(&paddr) {
-                        Ok(s) => break Some(s),
-                        Err(_) if Instant::now() < deadline => {
-                            std::thread::sleep(Duration::from_millis(50));
-                        }
-                        Err(_) => break None,
+            let deadline = Instant::now() + Duration::from_secs(10);
+            let feed = loop {
+                match TcpStream::connect(paddr) {
+                    Ok(s) => break Some(s),
+                    Err(_) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(50));
                     }
-                };
-                let Some(feed) = feed.as_mut() else {
+                    Err(_) => break None,
+                }
+            };
+            match feed {
+                None => {
                     let _ = tx.send(FeedEvent::RelayDown);
-                    return;
-                };
-                loop {
-                    match read_frame(feed) {
-                        Ok((KIND_MSG, body)) => {
-                            forward_to_children(
-                                &children, KIND_MSG, &body, &wire, &raw,
-                            );
-                            if tx
-                                .send(FeedEvent::Frame(KIND_MSG, body))
-                                .is_err()
-                            {
+                }
+                Some(feed) => {
+                    feed.set_nodelay(true).ok();
+                    let mut reader = feed.try_clone()?;
+                    relay_uplink = Some(feed);
+                    let children = Arc::clone(&children);
+                    let wire = Arc::clone(&relayed_wire);
+                    let raw = Arc::clone(&relayed_raw);
+                    std::thread::spawn(move || loop {
+                        match read_frame(&mut reader) {
+                            Ok((KIND_MSG, body)) => {
+                                forward_to_children(
+                                    &children, KIND_MSG, &body, &wire,
+                                    &raw,
+                                );
+                                if tx
+                                    .send(FeedEvent::Frame(KIND_MSG, body))
+                                    .is_err()
+                                {
+                                    break;
+                                }
+                            }
+                            // relays forward only MSG frames; anything
+                            // else is noise from a confused peer
+                            Ok(_) => {}
+                            Err(_) => {
+                                let _ = tx.send(FeedEvent::RelayDown);
                                 break;
                             }
                         }
-                        // relays forward only MSG frames; anything else
-                        // is noise from a confused peer
-                        Ok(_) => {}
-                        Err(_) => {
-                            let _ = tx.send(FeedEvent::RelayDown);
-                            break;
-                        }
-                    }
+                    });
                 }
-            });
+            }
         }
 
+        let uplink_direct = relay_uplink.is_none();
         Ok(TreeFeed {
             stream,
             rx,
             children,
+            child_readers,
+            relay_uplink,
+            uplink_direct,
             resynced: false,
             relayed_wire,
             relayed_raw,
+            relayed_up_wire: 0,
+            relayed_up_raw: 0,
         })
     }
 
@@ -1531,6 +1780,11 @@ impl TreeFeed {
                     ))
                 }
                 Ok(FeedEvent::RelayDown) => {
+                    // the same socket carries downlink forwards and
+                    // aggregated uplinks, so a dead relay edge collapses
+                    // both directions to the direct connection
+                    self.relay_uplink = None;
+                    self.uplink_direct = true;
                     if !self.resynced {
                         self.resynced = true;
                         // a failed RESYNC means the coordinator is gone
@@ -1558,9 +1812,123 @@ impl TreeFeed {
     }
 
     /// Announce a graceful leave over the direct connection (uplinks
-    /// never ride the relay tree) — followed by the final `send_grad`.
+    /// never ride the relay tree) — followed by the final `send_grad`
+    /// (or, under `uplink = "aggregate"`, a forced-direct
+    /// [`Self::uplink_agg`]).
     pub fn send_leave(&mut self, round: u64, worker: u16) -> Result<()> {
         send_leave_on(&mut self.stream, round, worker)
+    }
+
+    /// Ship this round's aggregated contribution up the tree
+    /// (`uplink = "aggregate"`): read one current-round `AGG` frame per
+    /// child subtree (deadline-bounded — a silent child simply does not
+    /// fold, and the coordinator evicts its uncovered slots), fold them
+    /// into `own` ([`relay_fold`]: children ascending by subtree-root
+    /// slot, so the summation order is the reduce plan's), and write the
+    /// accumulated frame to the parent relay — or directly to the
+    /// coordinator for tree roots, collapsed edges, and `force_direct`
+    /// callers (a leaver's final frame must not depend on its parent
+    /// folding in time).
+    ///
+    /// A parent-write failure collapses the uplink to direct for good
+    /// and sends the same `RESYNC` a dead downlink edge would — the two
+    /// directions share the socket, so one collapse covers both.
+    pub fn uplink_agg(
+        &mut self,
+        own: AggFrame,
+        timeout: Duration,
+        force_direct: bool,
+    ) -> Result<()> {
+        let round = own.round;
+        let deadline = Instant::now() + timeout;
+        let mut child_frames = Vec::with_capacity(self.child_readers.len());
+        let mut dead = Vec::new();
+        for (i, reader) in self.child_readers.iter_mut().enumerate() {
+            // drain until this round's AGG (stale catch-up frames are
+            // dropped), the deadline passes, or the child dies
+            loop {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                reader.set_read_timeout(Some(deadline - now)).ok();
+                match read_frame(reader) {
+                    Ok((KIND_AGG, body)) => {
+                        match AggFrame::decode_body(&body) {
+                            Ok(f) if f.round == round => {
+                                child_frames.push(f);
+                                break;
+                            }
+                            Ok(stale) => {
+                                eprintln!(
+                                    "rosdhb[tree]: child uplinked round \
+                                     {} while folding round {round} — \
+                                     stale frame dropped",
+                                    stale.round
+                                );
+                            }
+                            Err(e) => {
+                                eprintln!(
+                                    "rosdhb[tree]: bad child AGG frame \
+                                     ({e}) — dropping the child"
+                                );
+                                dead.push(i);
+                                break;
+                            }
+                        }
+                    }
+                    Ok((kind, _)) => {
+                        eprintln!(
+                            "rosdhb[tree]: unexpected child uplink frame \
+                             kind {kind} — ignored"
+                        );
+                    }
+                    Err(e) => {
+                        if !is_timeout(&e) {
+                            dead.push(i);
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+        for &i in dead.iter().rev() {
+            self.child_readers.remove(i);
+        }
+        let folded = relay_fold(own, child_frames)
+            .map_err(|e| anyhow!("relay fold: {e}"))?;
+        let body = folded.encode_body();
+        if !force_direct && !self.uplink_direct {
+            if let Some(up) = self.relay_uplink.as_mut() {
+                match write_frame_vectored(up, KIND_AGG, &body) {
+                    Ok(n) => {
+                        self.relayed_up_raw += n as u64;
+                        self.relayed_up_wire += body.len() as u64;
+                        return Ok(());
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "rosdhb[tree]: relay uplink write failed \
+                             ({e}) — collapsing to direct delivery"
+                        );
+                        self.relay_uplink = None;
+                        self.uplink_direct = true;
+                        if !self.resynced {
+                            self.resynced = true;
+                            write_frame(
+                                &mut self.stream,
+                                KIND_RESYNC,
+                                &[],
+                            )
+                            .map_err(|e| anyhow!("resync send: {e}"))?;
+                        }
+                    }
+                }
+            }
+        }
+        write_frame_vectored(&mut self.stream, KIND_AGG, &body)
+            .map_err(|e| anyhow!("agg uplink: {e}"))?;
+        Ok(())
     }
 
     /// Wire/raw bytes this worker re-forwarded to its tree children.
@@ -1569,6 +1937,13 @@ impl TreeFeed {
             self.relayed_wire.load(Ordering::Relaxed),
             self.relayed_raw.load(Ordering::Relaxed),
         )
+    }
+
+    /// Wire/raw aggregated-uplink bytes this worker forwarded to its
+    /// parent relay (zero for tree roots: their frames go straight to
+    /// the coordinator and are metered there).
+    pub fn relayed_uplink(&self) -> (u64, u64) {
+        (self.relayed_up_wire, self.relayed_up_raw)
     }
 
     /// Drop all child connections (they see EOF and collapse to direct

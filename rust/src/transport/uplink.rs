@@ -1,0 +1,864 @@
+//! Uplink partial aggregation (`config: uplink = "aggregate"`).
+//!
+//! For sum/mean-shaped reduction stages (plain `dgd`/`robust-dgd` means,
+//! DASHA's estimate sum) interior relays of the fan-out tree fold their
+//! children's contributions into one accumulated `AGG` frame, cutting
+//! coordinator ingress from n·B to b·B — the uplink mirror of the PR 5
+//! downlink win. Robust rules (and any payload-attack round) keep
+//! value-forwarding; config validation enforces that.
+//!
+//! **Determinism.** f32 addition is not associative, so the summation
+//! order is pinned once, here: each subtree folds its root's own
+//! contribution first, then its children's already-folded subtree values
+//! in ascending subtree-root slot order, left-associated. The local
+//! oracle, a physically flat run (every worker ships a singleton frame)
+//! and a tree-aggregated run all reduce through [`combine`]'s recursion
+//! over the same [`ReducePlan`], so the three are bit-identical: the
+//! coordinator re-nests whatever singleton frames reach it directly
+//! through the very association a relay would have used.
+//!
+//! **Wire layout** (`KIND_AGG` body; see `docs/WIRE.md`):
+//!
+//! ```text
+//! [u64 round] [u16 m] [m × u16 slot] [m × f32 loss] [u8 ptype] [payload]
+//! ptype 0 (dense):  [u32 d]   [d × f32]
+//! ptype 1 (sparse): [u32 nnz] [nnz × u32 idx] [nnz × f32 val]
+//! ```
+//!
+//! Slots ride in fold order (`slots[0]` is the subtree root and minimum);
+//! per-slot losses ride un-summed so the coordinator's sequential f64
+//! loss accumulation stays bit-identical to value-forwarding mode.
+
+use std::collections::BTreeMap;
+use std::ops::Range;
+
+use crate::transport::downlink::FanoutPlan;
+use crate::transport::ByteMeter;
+
+/// `AGG` payload type tags.
+pub const AGG_PTYPE_DENSE: u8 = 0;
+pub const AGG_PTYPE_SPARSE: u8 = 1;
+
+/// Wire size of a dense `AGG` payload section (`[ptype][u32 d][d × f32]`).
+pub fn agg_dense_payload_len(d: usize) -> usize {
+    1 + 4 + 4 * d
+}
+
+/// Wire size of a sparse `AGG` payload section
+/// (`[ptype][u32 nnz][nnz × u32][nnz × f32]`).
+pub fn agg_sparse_payload_len(nnz: usize) -> usize {
+    1 + 4 + 8 * nnz
+}
+
+/// Wire size of a full `AGG` frame body covering `m` slots — the uplink
+/// byte-model authority, pinned against `encode_body().len()` in tests.
+pub fn agg_body_len(m: usize, payload_len: usize) -> usize {
+    8 + 2 + 6 * m + payload_len
+}
+
+/// One partially aggregated contribution: either a dense d-vector sum or
+/// a sparse union-of-masks sum (DASHA's scaled difference updates).
+#[derive(Clone, Debug, PartialEq)]
+pub enum AggValue {
+    Dense(Vec<f32>),
+    /// Coordinates strictly ascending; `val[j]` is the summed value at
+    /// `idx[j]`.
+    Sparse { idx: Vec<u32>, val: Vec<f32> },
+}
+
+impl AggValue {
+    pub fn payload_len(&self) -> usize {
+        match self {
+            AggValue::Dense(v) => agg_dense_payload_len(v.len()),
+            AggValue::Sparse { idx, .. } => agg_sparse_payload_len(idx.len()),
+        }
+    }
+}
+
+/// One `AGG` frame: the folded value of a subtree plus the per-slot loss
+/// envelope it gathered on the way up.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AggFrame {
+    pub round: u64,
+    /// Covered gradient slots in fold order (`slots[0]` = subtree root).
+    pub slots: Vec<u16>,
+    /// `losses[j]` belongs to `slots[j]`.
+    pub losses: Vec<f32>,
+    pub value: AggValue,
+}
+
+impl AggFrame {
+    /// A leaf contribution covering exactly one slot.
+    pub fn single(round: u64, slot: u16, loss: f32, value: AggValue) -> Self {
+        AggFrame {
+            round,
+            slots: vec![slot],
+            losses: vec![loss],
+            value,
+        }
+    }
+
+    /// The subtree-root slot this frame accumulates under (its minimum).
+    pub fn root_slot(&self) -> u16 {
+        self.slots.iter().copied().min().expect("AggFrame covers >= 1 slot")
+    }
+
+    pub fn body_len(&self) -> usize {
+        agg_body_len(self.slots.len(), self.value.payload_len())
+    }
+
+    pub fn encode_body(&self) -> Vec<u8> {
+        debug_assert_eq!(self.slots.len(), self.losses.len());
+        let mut out = Vec::with_capacity(self.body_len());
+        out.extend_from_slice(&self.round.to_le_bytes());
+        out.extend_from_slice(&(self.slots.len() as u16).to_le_bytes());
+        for s in &self.slots {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+        for l in &self.losses {
+            out.extend_from_slice(&l.to_le_bytes());
+        }
+        match &self.value {
+            AggValue::Dense(v) => {
+                out.push(AGG_PTYPE_DENSE);
+                out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            AggValue::Sparse { idx, val } => {
+                debug_assert_eq!(idx.len(), val.len());
+                out.push(AGG_PTYPE_SPARSE);
+                out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+                for i in idx {
+                    out.extend_from_slice(&i.to_le_bytes());
+                }
+                for x in val {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        debug_assert_eq!(out.len(), self.body_len());
+        out
+    }
+
+    /// Strict-cursor decode: trailing bytes are an error, like every
+    /// other codec in the repo.
+    pub fn decode_body(body: &[u8]) -> Result<AggFrame, String> {
+        let mut cur = 0usize;
+        let take = |cur: &mut usize, n: usize| -> Result<&[u8], String> {
+            if *cur + n > body.len() {
+                return Err(format!(
+                    "AGG body truncated at {} (+{n} of {})",
+                    *cur,
+                    body.len()
+                ));
+            }
+            let s = &body[*cur..*cur + n];
+            *cur += n;
+            Ok(s)
+        };
+        let round = u64::from_le_bytes(take(&mut cur, 8)?.try_into().unwrap());
+        let m = u16::from_le_bytes(take(&mut cur, 2)?.try_into().unwrap()) as usize;
+        if m == 0 {
+            return Err("AGG frame covers zero slots".into());
+        }
+        let mut slots = Vec::with_capacity(m);
+        for _ in 0..m {
+            slots.push(u16::from_le_bytes(
+                take(&mut cur, 2)?.try_into().unwrap(),
+            ));
+        }
+        let mut losses = Vec::with_capacity(m);
+        for _ in 0..m {
+            losses.push(f32::from_le_bytes(
+                take(&mut cur, 4)?.try_into().unwrap(),
+            ));
+        }
+        let ptype = take(&mut cur, 1)?[0];
+        let count = u32::from_le_bytes(take(&mut cur, 4)?.try_into().unwrap())
+            as usize;
+        let value = match ptype {
+            AGG_PTYPE_DENSE => {
+                let mut v = Vec::with_capacity(count);
+                for _ in 0..count {
+                    v.push(f32::from_le_bytes(
+                        take(&mut cur, 4)?.try_into().unwrap(),
+                    ));
+                }
+                AggValue::Dense(v)
+            }
+            AGG_PTYPE_SPARSE => {
+                let mut idx = Vec::with_capacity(count);
+                for _ in 0..count {
+                    idx.push(u32::from_le_bytes(
+                        take(&mut cur, 4)?.try_into().unwrap(),
+                    ));
+                }
+                let mut val = Vec::with_capacity(count);
+                for _ in 0..count {
+                    val.push(f32::from_le_bytes(
+                        take(&mut cur, 4)?.try_into().unwrap(),
+                    ));
+                }
+                AggValue::Sparse { idx, val }
+            }
+            other => return Err(format!("unknown AGG payload type {other}")),
+        };
+        if cur != body.len() {
+            return Err(format!(
+                "AGG body has {} trailing bytes",
+                body.len() - cur
+            ));
+        }
+        Ok(AggFrame {
+            round,
+            slots,
+            losses,
+            value,
+        })
+    }
+}
+
+/// Fold one subtree value into an accumulator (`None` = copy-start: the
+/// first operand becomes the accumulator bit-for-bit, so a subtree with
+/// one contributor reproduces that contribution exactly).
+pub fn fold_value(
+    acc: &mut Option<AggValue>,
+    v: AggValue,
+) -> Result<(), String> {
+    match acc {
+        None => *acc = Some(v),
+        Some(AggValue::Dense(a)) => match v {
+            AggValue::Dense(b) => {
+                if a.len() != b.len() {
+                    return Err(format!(
+                        "AGG dense length mismatch {} vs {}",
+                        a.len(),
+                        b.len()
+                    ));
+                }
+                for (x, y) in a.iter_mut().zip(&b) {
+                    *x += *y;
+                }
+            }
+            AggValue::Sparse { .. } => {
+                return Err("AGG fold mixes dense and sparse payloads".into())
+            }
+        },
+        Some(AggValue::Sparse { idx, val }) => match v {
+            AggValue::Sparse { idx: bi, val: bv } => {
+                let (ni, nv) = merge_sparse(idx, val, &bi, &bv);
+                *idx = ni;
+                *val = nv;
+            }
+            AggValue::Dense(_) => {
+                return Err("AGG fold mixes dense and sparse payloads".into())
+            }
+        },
+    }
+    Ok(())
+}
+
+/// Two-pointer union merge of sorted sparse vectors; overlapping
+/// coordinates sum `acc + operand` in that order, singletons copy.
+fn merge_sparse(
+    ai: &[u32],
+    av: &[f32],
+    bi: &[u32],
+    bv: &[f32],
+) -> (Vec<u32>, Vec<f32>) {
+    let mut idx = Vec::with_capacity(ai.len() + bi.len());
+    let mut val = Vec::with_capacity(ai.len() + bi.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < ai.len() && j < bi.len() {
+        match ai[i].cmp(&bi[j]) {
+            std::cmp::Ordering::Less => {
+                idx.push(ai[i]);
+                val.push(av[i]);
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                idx.push(bi[j]);
+                val.push(bv[j]);
+                j += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                idx.push(ai[i]);
+                val.push(av[i] + bv[j]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    idx.extend_from_slice(&ai[i..]);
+    val.extend_from_slice(&av[i..]);
+    idx.extend_from_slice(&bi[j..]);
+    val.extend_from_slice(&bv[j..]);
+    (idx, val)
+}
+
+/// Relay-side fold: own contribution first, then child subtree frames in
+/// ascending subtree-root slot order — the association [`combine`]
+/// reproduces coordinator-side.
+pub fn relay_fold(
+    own: AggFrame,
+    mut children: Vec<AggFrame>,
+) -> Result<AggFrame, String> {
+    children.sort_by_key(|f| f.root_slot());
+    let AggFrame {
+        round,
+        mut slots,
+        mut losses,
+        value,
+    } = own;
+    let mut acc = Some(value);
+    for c in children {
+        if c.round != round {
+            return Err(format!(
+                "relay fold mixes rounds {} and {}",
+                round, c.round
+            ));
+        }
+        slots.extend_from_slice(&c.slots);
+        losses.extend_from_slice(&c.losses);
+        fold_value(&mut acc, c.value)?;
+    }
+    Ok(AggFrame {
+        round,
+        slots,
+        losses,
+        value: acc.expect("own contribution present"),
+    })
+}
+
+/// The logical reduction tree: the active gradient slots, ascending and
+/// compacted (no holes), laid out as the same complete b-ary tree
+/// [`FanoutPlan::Tree`] uses for the downlink — so the physical relay
+/// topology and the logical summation tree coincide on healthy rounds.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ReducePlan {
+    branching: usize,
+    /// Position → gradient slot (ascending, so every subtree root is its
+    /// subtree's minimum slot).
+    order: Vec<u16>,
+}
+
+impl ReducePlan {
+    /// `active[s]` = slot `s` currently holds a contributing worker.
+    pub fn new(branching: usize, active: &[bool]) -> ReducePlan {
+        debug_assert!(branching >= 2);
+        let order = active
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| **a)
+            .map(|(s, _)| s as u16)
+            .collect();
+        ReducePlan { branching, order }
+    }
+
+    pub fn n(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn slots(&self) -> &[u16] {
+        &self.order
+    }
+
+    pub fn slot(&self, pos: usize) -> u16 {
+        self.order[pos]
+    }
+
+    fn tree(&self) -> FanoutPlan {
+        FanoutPlan::Tree {
+            branching: self.branching,
+        }
+    }
+
+    pub fn children(&self, pos: usize) -> Range<usize> {
+        self.tree().children(pos, self.n())
+    }
+
+    pub fn parent(&self, pos: usize) -> Option<usize> {
+        self.tree().parent(pos)
+    }
+
+    /// Top-level positions the coordinator reduces across (ascending).
+    pub fn roots(&self) -> Range<usize> {
+        0..self.branching.min(self.n())
+    }
+
+    pub fn is_root_slot(&self, slot: u16) -> bool {
+        self.roots().any(|p| self.order[p] == slot)
+    }
+}
+
+/// [`combine`]'s result.
+#[derive(Debug)]
+pub struct Combined {
+    /// The full reduction (`None` when no frame covered anything).
+    pub total: Option<AggValue>,
+    /// Slots that contributed, ascending.
+    pub covered: Vec<u16>,
+    /// `(slot, loss)` pairs gathered from the frames' envelopes.
+    pub losses: Vec<(u16, f32)>,
+    /// Frames discarded as duplicates / unknown subtree roots.
+    pub dropped: usize,
+}
+
+/// Coordinator-side (and oracle) reduction: re-nest whatever frames
+/// arrived — fully folded subtrees, singletons from a degraded/flat
+/// path, or any mix — through the plan's subtree recursion. A frame is
+/// consumed at the position of its root slot; slots already covered by
+/// an enclosing frame are skipped. On rounds where every frame is either
+/// a whole subtree or a singleton (the only steady states), the
+/// association is exactly the relay fold's, hence the bit-parity.
+pub fn combine(plan: &ReducePlan, frames: Vec<AggFrame>) -> Combined {
+    let mut by_root: BTreeMap<u16, AggFrame> = BTreeMap::new();
+    let mut dropped = 0usize;
+    for f in frames {
+        let root = f.root_slot();
+        if plan.order.binary_search(&root).is_err()
+            || by_root.insert(root, f).is_some()
+        {
+            dropped += 1; // unknown subtree root, or duplicate (first wins
+                          // is irrelevant: duplicates are bit-identical
+                          // retransmits or protocol violations either way)
+        }
+    }
+    let mut covered: Vec<u16> = Vec::with_capacity(plan.n());
+    let mut losses: Vec<(u16, f32)> = Vec::with_capacity(plan.n());
+    let mut total: Option<AggValue> = None;
+    for r in plan.roots() {
+        if let Some(sub) = combine_pos(
+            plan,
+            r,
+            &mut by_root,
+            &mut covered,
+            &mut losses,
+            &mut dropped,
+        ) {
+            if fold_value(&mut total, sub).is_err() {
+                dropped += 1;
+            }
+        }
+    }
+    dropped += by_root.len(); // frames under already-covered subtrees
+    covered.sort_unstable();
+    Combined {
+        total,
+        covered,
+        losses,
+        dropped,
+    }
+}
+
+fn combine_pos(
+    plan: &ReducePlan,
+    pos: usize,
+    by_root: &mut BTreeMap<u16, AggFrame>,
+    covered: &mut Vec<u16>,
+    losses: &mut Vec<(u16, f32)>,
+    dropped: &mut usize,
+) -> Option<AggValue> {
+    let slot = plan.slot(pos);
+    let mut acc: Option<AggValue> = None;
+    if let Some(f) = by_root.remove(&slot) {
+        if f.slots.iter().any(|s| covered.contains(s)) {
+            // overlaps coverage an enclosing frame already claimed —
+            // a retransmit; drop the whole frame
+            *dropped += 1;
+        } else {
+            covered.extend_from_slice(&f.slots);
+            losses.extend(f.slots.iter().copied().zip(f.losses));
+            acc = Some(f.value);
+        }
+    }
+    for c in plan.children(pos) {
+        if let Some(sub) =
+            combine_pos(plan, c, by_root, covered, losses, dropped)
+        {
+            let _ = fold_value(&mut acc, sub);
+        }
+    }
+    acc
+}
+
+/// Oracle-side reduction from per-slot values: wraps each active slot's
+/// contribution in a singleton frame and runs the one shared [`combine`]
+/// recursion — this *is* the flat oracle tree-aggregated runs are
+/// bit-identical to.
+pub fn combine_slot_values(
+    plan: &ReducePlan,
+    mut value_of: impl FnMut(u16) -> Option<AggValue>,
+) -> Option<AggValue> {
+    let frames: Vec<AggFrame> = plan
+        .slots()
+        .iter()
+        .filter_map(|&s| value_of(s).map(|v| AggFrame::single(0, s, 0.0, v)))
+        .collect();
+    combine(plan, frames).total
+}
+
+/// Byte model for one aggregated uplink round, symmetric with the
+/// measured socket bytes: walks the logical tree, records every node's
+/// frame body (`per_worker_uplink[slot]` + `uplink`), and counts root
+/// frames as coordinator ingress. Under a physically flat fan-out every
+/// node ships a singleton frame straight to the coordinator instead.
+/// `payload_len(covered)` sizes a subtree's payload section from the
+/// slots it covers (constant for dense, union-of-masks for DASHA).
+pub fn meter_model<F>(
+    plan: &ReducePlan,
+    physical_tree: bool,
+    meter: &mut ByteMeter,
+    mut payload_len: F,
+) where
+    F: FnMut(&[u16]) -> usize,
+{
+    if !physical_tree {
+        for &s in plan.slots() {
+            meter.record_uplink_sized(
+                s as usize,
+                agg_body_len(1, payload_len(&[s])),
+            );
+        }
+        return;
+    }
+    for r in plan.roots() {
+        model_pos(plan, r, meter, &mut payload_len);
+    }
+}
+
+fn model_pos<F>(
+    plan: &ReducePlan,
+    pos: usize,
+    meter: &mut ByteMeter,
+    payload_len: &mut F,
+) -> Vec<u16>
+where
+    F: FnMut(&[u16]) -> usize,
+{
+    let mut covered = vec![plan.slot(pos)];
+    for c in plan.children(pos) {
+        covered.extend(model_pos(plan, c, meter, payload_len));
+    }
+    let len = agg_body_len(covered.len(), payload_len(&covered));
+    let slot = plan.slot(pos) as usize;
+    if plan.parent(pos).is_some() {
+        meter.record_relayed_uplink(slot, len);
+    } else {
+        meter.record_uplink_sized(slot, len);
+    }
+    covered
+}
+
+/// The pinned summation order for server-side row averaging — one
+/// authority shared by Multi-Krum's averaging stage and the aggregation
+/// tests, bit-identical to [`crate::tensor::mean_into`].
+pub fn ordered_mean_into(out: &mut [f32], rows: &[&[f32]]) {
+    assert!(!rows.is_empty());
+    let inv = 1.0 / rows.len() as f32;
+    out.fill(0.0);
+    for r in rows {
+        debug_assert_eq!(r.len(), out.len());
+        for (o, v) in out.iter_mut().zip(*r) {
+            *o += v;
+        }
+    }
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense(vals: &[f32]) -> AggValue {
+        AggValue::Dense(vals.to_vec())
+    }
+
+    #[test]
+    fn frame_codec_roundtrip_and_len_model() {
+        for f in [
+            AggFrame::single(7, 3, 0.25, dense(&[1.0, -2.5, 3.0])),
+            AggFrame {
+                round: 42,
+                slots: vec![0, 1, 4, 5, 2],
+                losses: vec![0.1, 0.2, 0.3, 0.4, 0.5],
+                value: AggValue::Sparse {
+                    idx: vec![2, 9, 11],
+                    val: vec![1.5, -0.5, 8.0],
+                },
+            },
+        ] {
+            let body = f.encode_body();
+            assert_eq!(body.len(), f.body_len());
+            assert_eq!(AggFrame::decode_body(&body).unwrap(), f);
+        }
+        assert_eq!(agg_dense_payload_len(3), 1 + 4 + 12);
+        assert_eq!(agg_sparse_payload_len(3), 1 + 4 + 24);
+        assert_eq!(agg_body_len(5, 29), 8 + 2 + 30 + 29);
+    }
+
+    #[test]
+    fn frame_decode_rejects_malformed() {
+        let f = AggFrame::single(1, 0, 0.0, dense(&[1.0]));
+        let body = f.encode_body();
+        assert!(AggFrame::decode_body(&body[..body.len() - 1]).is_err());
+        let mut long = body.clone();
+        long.push(0);
+        assert!(AggFrame::decode_body(&long).is_err());
+        let mut bad = body;
+        bad[8 + 2 + 2 + 4] = 9; // ptype
+        assert!(AggFrame::decode_body(&bad).is_err());
+    }
+
+    #[test]
+    fn sparse_union_merge_sums_overlap() {
+        let mut acc = Some(AggValue::Sparse {
+            idx: vec![1, 4, 7],
+            val: vec![1.0, 2.0, 3.0],
+        });
+        fold_value(
+            &mut acc,
+            AggValue::Sparse {
+                idx: vec![0, 4, 9],
+                val: vec![10.0, 20.0, 30.0],
+            },
+        )
+        .unwrap();
+        assert_eq!(
+            acc.unwrap(),
+            AggValue::Sparse {
+                idx: vec![0, 1, 4, 7, 9],
+                val: vec![10.0, 1.0, 22.0, 3.0, 30.0],
+            }
+        );
+    }
+
+    #[test]
+    fn fold_rejects_mixed_kinds_and_bad_lengths() {
+        let mut acc = Some(dense(&[1.0]));
+        assert!(fold_value(
+            &mut acc,
+            AggValue::Sparse {
+                idx: vec![0],
+                val: vec![1.0]
+            }
+        )
+        .is_err());
+        assert!(fold_value(&mut acc, dense(&[1.0, 2.0])).is_err());
+    }
+
+    /// The oracle association for a full plan: own value, then subtrees
+    /// in ascending-root order — written independently of `combine`.
+    fn oracle(plan: &ReducePlan, rows: &[Vec<f32>]) -> Option<Vec<f32>> {
+        fn go(plan: &ReducePlan, pos: usize, rows: &[Vec<f32>]) -> Vec<f32> {
+            let mut acc = rows[plan.slot(pos) as usize].clone();
+            for c in plan.children(pos) {
+                let sub = go(plan, c, rows);
+                for (x, y) in acc.iter_mut().zip(&sub) {
+                    *x += *y;
+                }
+            }
+            acc
+        }
+        let mut total: Option<Vec<f32>> = None;
+        for r in plan.roots() {
+            let sub = go(plan, r, rows);
+            match &mut total {
+                None => total = Some(sub),
+                Some(t) => {
+                    for (x, y) in t.iter_mut().zip(&sub) {
+                        *x += *y;
+                    }
+                }
+            }
+        }
+        total
+    }
+
+    fn rows(n: usize, d: usize) -> Vec<Vec<f32>> {
+        // values chosen to make f32 association visible
+        (0..n)
+            .map(|i| {
+                (0..d)
+                    .map(|j| ((i * 31 + j * 7) as f32).sin() * 1e3)
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn singleton_combine_matches_independent_oracle() {
+        for n in [1usize, 2, 3, 5, 7, 12, 19] {
+            for b in [2usize, 3, n.max(2)] {
+                let plan = ReducePlan::new(b, &vec![true; n]);
+                let rs = rows(n, 16);
+                let got = combine_slot_values(&plan, |s| {
+                    Some(dense(&rs[s as usize]))
+                })
+                .unwrap();
+                let want = oracle(&plan, &rs).unwrap();
+                let AggValue::Dense(g) = got else { panic!() };
+                assert_eq!(g, want, "n={n} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn relay_folded_frames_combine_bit_identical_to_singletons() {
+        // physically fold every subtree bottom-up (what relays do), then
+        // combine the root frames only — must equal the all-singleton
+        // (flat) combine bit for bit.
+        for n in [3usize, 7, 10, 19] {
+            for b in [2usize, 3] {
+                let plan = ReducePlan::new(b, &vec![true; n]);
+                let rs = rows(n, 8);
+                fn fold_subtree(
+                    plan: &ReducePlan,
+                    pos: usize,
+                    rs: &[Vec<f32>],
+                ) -> AggFrame {
+                    let slot = plan.slot(pos);
+                    let own = AggFrame::single(
+                        1,
+                        slot,
+                        slot as f32,
+                        AggValue::Dense(rs[slot as usize].clone()),
+                    );
+                    let kids: Vec<AggFrame> = plan
+                        .children(pos)
+                        .map(|c| fold_subtree(plan, c, rs))
+                        .collect();
+                    relay_fold(own, kids).unwrap()
+                }
+                let roots: Vec<AggFrame> = plan
+                    .roots()
+                    .map(|r| fold_subtree(&plan, r, &rs))
+                    .collect();
+                let tree = combine(&plan, roots);
+                let flat = combine(
+                    &plan,
+                    (0..n as u16)
+                        .map(|s| {
+                            AggFrame::single(
+                                1,
+                                s,
+                                s as f32,
+                                AggValue::Dense(rs[s as usize].clone()),
+                            )
+                        })
+                        .collect(),
+                );
+                assert_eq!(tree.total, flat.total, "n={n} b={b}");
+                assert_eq!(tree.covered, flat.covered);
+                assert_eq!(tree.dropped, 0);
+                assert_eq!(flat.dropped, 0);
+                let mut tl = tree.losses.clone();
+                let mut fl = flat.losses.clone();
+                tl.sort_by_key(|(s, _)| *s);
+                fl.sort_by_key(|(s, _)| *s);
+                assert_eq!(tl, fl);
+            }
+        }
+    }
+
+    #[test]
+    fn silent_and_vacant_slots_match_reduced_oracle() {
+        // every (depth, shape) with one knocked-out member: the combine
+        // over the remaining singletons must equal the independent
+        // oracle over a plan... the *same* plan with that slot silent
+        // (vacancy instead re-compacts the plan itself).
+        for n in [5usize, 7, 10] {
+            for b in [2usize, 3] {
+                for dead in 0..n {
+                    let plan = ReducePlan::new(b, &vec![true; n]);
+                    let rs = rows(n, 8);
+                    let got = combine_slot_values(&plan, |s| {
+                        (s as usize != dead)
+                            .then(|| dense(&rs[s as usize]))
+                    });
+                    // oracle with the dead slot skipped: emulate by
+                    // re-running combine_pos semantics by hand — reuse
+                    // combine over singleton frames minus the slot.
+                    let frames: Vec<AggFrame> = (0..n as u16)
+                        .filter(|&s| s as usize != dead)
+                        .map(|s| {
+                            AggFrame::single(
+                                0,
+                                s,
+                                0.0,
+                                dense(&rs[s as usize]),
+                            )
+                        })
+                        .collect();
+                    let want = combine(&plan, frames);
+                    assert_eq!(got, want.total, "n={n} b={b} dead={dead}");
+                    assert_eq!(
+                        want.covered.len(),
+                        n - 1,
+                        "n={n} b={b} dead={dead}"
+                    );
+                    // vacancy: slot never in membership — plan compacts
+                    let mut active = vec![true; n];
+                    active[dead] = false;
+                    let vplan = ReducePlan::new(b, &active);
+                    assert_eq!(vplan.n(), n - 1);
+                    assert!(vplan
+                        .slots()
+                        .iter()
+                        .all(|&s| s as usize != dead));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn combine_drops_duplicates_and_unknown_roots() {
+        let plan = ReducePlan::new(2, &[true, true, true]);
+        let f0 = AggFrame::single(0, 0, 0.0, dense(&[1.0]));
+        let dup = AggFrame::single(0, 0, 0.0, dense(&[9.0]));
+        let stray = AggFrame::single(0, 7, 0.0, dense(&[5.0]));
+        let out = combine(&plan, vec![f0, dup, stray]);
+        assert_eq!(out.dropped, 2);
+        assert_eq!(out.covered, vec![0]);
+        assert_eq!(out.total, Some(dense(&[1.0])));
+    }
+
+    #[test]
+    fn meter_model_tree_vs_flat() {
+        let plan = ReducePlan::new(2, &vec![true; 7]);
+        let d = 10usize;
+        let mut tree = ByteMeter::new(7);
+        meter_model(&plan, true, &mut tree, |_| agg_dense_payload_len(d));
+        let mut flat = ByteMeter::new(7);
+        meter_model(&plan, false, &mut flat, |_| agg_dense_payload_len(d));
+        // every node ships exactly one frame either way
+        let node = |m: usize| agg_body_len(m, agg_dense_payload_len(d)) as u64;
+        // tree (b=2, n=7): roots at pos 0,1 cover subtrees of 3 and 4
+        assert_eq!(tree.coordinator_ingress, node(3) + node(4));
+        assert_eq!(
+            tree.uplink,
+            node(3) + node(4) + 4 * node(1) + node(2)
+        );
+        assert_eq!(flat.coordinator_ingress, 7 * node(1));
+        assert_eq!(flat.uplink, 7 * node(1));
+        assert!(tree.coordinator_ingress < flat.coordinator_ingress);
+    }
+
+    #[test]
+    fn ordered_mean_matches_tensor_mean_bitwise() {
+        let rs = rows(9, 33);
+        let refs: Vec<&[f32]> = rs.iter().map(|r| r.as_slice()).collect();
+        let mut a = vec![0.0f32; 33];
+        let mut b = vec![0.0f32; 33];
+        ordered_mean_into(&mut a, &refs);
+        crate::tensor::mean_into(&mut b, &refs);
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+}

@@ -53,6 +53,7 @@ use crate::telemetry::{Event, Telemetry};
 use crate::transport::downlink::{DownlinkMode, DownlinkReplica, FanoutPlan};
 use crate::transport::evloop::EvFeed;
 use crate::transport::net::{RelayHub, TreeFeed, WorkerClient};
+use crate::transport::uplink::AggFrame;
 use crate::transport::WireMessage;
 use crate::worker::{GradEngine, HonestWorker, NativeEngine};
 use anyhow::{anyhow, Result};
@@ -71,6 +72,13 @@ pub struct JoinSummary {
     pub relayed_wire_bytes: u64,
     /// Raw socket bytes of those forwards (frame envelopes included).
     pub relayed_raw_bytes: u64,
+    /// Wire bytes of accumulated [`AggFrame`]s this worker shipped as an
+    /// *interior* relay under `uplink = "aggregate"` (0 under
+    /// value-forwarding, flat fan-out, and at root relays, whose frames
+    /// count as coordinator ingress).
+    pub relayed_uplink_wire_bytes: u64,
+    /// Raw socket bytes of those accumulated uplinks.
+    pub relayed_uplink_raw_bytes: u64,
     /// RESYNC frames this worker sent after losing (or timing out on)
     /// its relay feed — always 0 under `fanout = "flat"` and under the
     /// threaded feed (which resyncs only on a *dead* parent; the
@@ -111,6 +119,30 @@ impl Feed {
             Feed::Direct(_) => (0, 0),
             Feed::Tree(f) => f.relayed(),
             Feed::Ev(f) => f.relayed(),
+        }
+    }
+
+    /// Fold this round's subtree into `own` and ship one accumulated
+    /// frame up (`uplink = "aggregate"`). A flat feed has no children:
+    /// the singleton goes straight to the coordinator.
+    fn uplink_agg(
+        &mut self,
+        own: AggFrame,
+        timeout: Duration,
+        force_direct: bool,
+    ) -> Result<()> {
+        match self {
+            Feed::Direct(c) => c.send_agg(&own),
+            Feed::Tree(f) => f.uplink_agg(own, timeout, force_direct),
+            Feed::Ev(f) => f.uplink_agg(own, timeout, force_direct),
+        }
+    }
+
+    fn relayed_uplink(&self) -> (u64, u64) {
+        match self {
+            Feed::Direct(_) => (0, 0),
+            Feed::Tree(f) => f.relayed_uplink(),
+            Feed::Ev(f) => f.relayed_uplink(),
         }
     }
 
@@ -281,6 +313,12 @@ pub fn join_run(
     let (mut worker, role) = build_slot_worker(cfg, slot, &attack, 0)?;
     let mut current_epoch = 0u64;
     let drone_replies = role == "drone";
+    // Aggregated uplink (PR 9): ship one AggFrame per round instead of a
+    // typed Grad; interior relays fold their subtree into it first.
+    // Config validation guarantees every slot is a gradient worker here
+    // (payload drones and crash-silent slots are rejected up front).
+    let aggregate = cfg.uplink == "aggregate";
+    let round_timeout = Duration::from_millis(cfg.round_timeout_ms.max(1));
 
     let mut grad = vec![0f32; d];
     let mut rounds = 0u64;
@@ -374,46 +412,73 @@ pub fn join_run(
                 .expect("update frames imply a replica")
                 .params(),
         };
-        let reply: Option<(f32, WireMessage)> = if let Some(w) = worker.as_mut()
-        {
-            let loss =
-                w.compute_grad_into(&mut engine, params, cfg.batch, &mut grad)?;
-            let payload = compressor
-                .compress(round, slot as u64, mask_seed, &grad)
-                .map_err(|e| anyhow!(e))?;
-            Some((
-                loss,
-                WireMessage::Grad {
-                    round,
-                    worker: worker_id,
-                    payload,
-                },
-            ))
-        } else if drone_replies {
-            // placeholder sized exactly like an honest uplink; the server
-            // substitutes the crafted adversarial payload
-            Some((
-                0.0,
-                WireMessage::Grad {
-                    round,
-                    worker: worker_id,
-                    payload: compressor.placeholder(mask_seed),
-                },
-            ))
-        } else {
-            None // crash-fault Byzantine slot: receive, never send
-        };
         // Graceful departure: the LEAVE frame precedes this epoch's last
         // gradient, so the final contribution still counts and the slot
         // vacates cleanly at the boundary that follows.
         let leave_now = opts.leave_after_epoch.is_some_and(|e| {
             cfg.epoch_rounds > 0 && round == e * cfg.epoch_rounds as u64
         });
-        if let Some((loss, msg)) = reply {
+        if aggregate {
+            let w = worker.as_mut().ok_or_else(|| {
+                anyhow!(
+                    "uplink = \"aggregate\" reached a non-gradient slot — \
+                     config validation should have refused this run"
+                )
+            })?;
+            let loss =
+                w.compute_grad_into(&mut engine, params, cfg.batch, &mut grad)?;
+            let value = compressor
+                .agg_value(round, slot as u64, &grad)
+                .map_err(|e| anyhow!(e))?;
+            let own = AggFrame::single(round, worker_id, loss, value);
             if leave_now {
                 feed.send_leave(round, worker_id)?;
             }
-            feed.send_grad(loss, &msg)?;
+            // A leaving relay ships its final fold straight to the
+            // coordinator: the hangup that follows must not strand the
+            // subtree's contributions behind a dead parent.
+            feed.uplink_agg(own, round_timeout, leave_now)?;
+        } else {
+            let reply: Option<(f32, WireMessage)> = if let Some(w) =
+                worker.as_mut()
+            {
+                let loss = w.compute_grad_into(
+                    &mut engine,
+                    params,
+                    cfg.batch,
+                    &mut grad,
+                )?;
+                let payload = compressor
+                    .compress(round, slot as u64, mask_seed, &grad)
+                    .map_err(|e| anyhow!(e))?;
+                Some((
+                    loss,
+                    WireMessage::Grad {
+                        round,
+                        worker: worker_id,
+                        payload,
+                    },
+                ))
+            } else if drone_replies {
+                // placeholder sized exactly like an honest uplink; the
+                // server substitutes the crafted adversarial payload
+                Some((
+                    0.0,
+                    WireMessage::Grad {
+                        round,
+                        worker: worker_id,
+                        payload: compressor.placeholder(mask_seed),
+                    },
+                ))
+            } else {
+                None // crash-fault Byzantine slot: receive, never send
+            };
+            if let Some((loss, msg)) = reply {
+                if leave_now {
+                    feed.send_leave(round, worker_id)?;
+                }
+                feed.send_grad(loss, &msg)?;
+            }
         }
         rounds += 1;
         if leave_now {
@@ -424,6 +489,8 @@ pub fn join_run(
         }
     }
     let (relayed_wire_bytes, relayed_raw_bytes) = feed.relayed();
+    let (relayed_uplink_wire_bytes, relayed_uplink_raw_bytes) =
+        feed.relayed_uplink();
     while seen_resyncs < feed.resyncs() {
         seen_resyncs += 1;
         tel.emit(|| Event::RelayResync { worker: slot });
@@ -435,6 +502,8 @@ pub fn join_run(
         role,
         relayed_wire_bytes,
         relayed_raw_bytes,
+        relayed_uplink_wire_bytes,
+        relayed_uplink_raw_bytes,
         resyncs: feed.resyncs(),
     })
 }

@@ -13,7 +13,7 @@
 use rosdhb::aggregators;
 use rosdhb::aggregators::geometry::RefreshPeriod;
 use rosdhb::algorithms::rosdhb_u::RoSdhbU;
-use rosdhb::algorithms::{Algorithm, RoundEnv};
+use rosdhb::algorithms::{Algorithm, RoundEnv, UplinkCtx};
 use rosdhb::attacks::AttackKind;
 use rosdhb::compression::CompressorSpec;
 use rosdhb::prng::Pcg64;
@@ -77,6 +77,7 @@ fn steady_state_bytes_per_round(spec: CompressorSpec, d: usize, n: usize) -> u64
                 meter: &mut meter,
                 rng: &mut rng,
                 payloads: None,
+                uplink: UplinkCtx::Forward,
             };
             let r = alg.round(t, &grads, &[], &mut env);
             std::hint::black_box(&r);
@@ -118,4 +119,92 @@ fn rosdhb_u_round_does_not_densify_per_worker() {
         "randk round allocated {randk} B ≥ {dense_per_worker} B \
          (n dense buffers) — payloads are being densified"
     );
+}
+
+/// `uplink = "aggregate"` acceptance bar (§Perf, PR 9): the wire-fed
+/// DASHA server keeps **one** running sum S, never the n×d estimate
+/// matrix the value-forwarding path maintains. The transport hands the
+/// round a pre-folded [`AggValue`]; if the sum-mode round ever fell back
+/// to materializing per-worker estimate rows, the very first round would
+/// allocate n·d·4 bytes (128 KiB here) in one shot and every sparse
+/// round would pay a dense densification on top — both far above the
+/// half-matrix budgets pinned below (actual traffic per round is ~1.5
+/// d-vectors: the returned mean plus O(n·k) mask modeling).
+#[test]
+fn dasha_aggregate_wire_round_never_materializes_estimate_rows() {
+    use rosdhb::algorithms::dasha::ByzDashaPage;
+    use rosdhb::transport::uplink::{AggValue, ReducePlan};
+
+    let (d, n) = (4096usize, 8usize);
+    let k = d / 64;
+    let half_matrix = (n * d * 4) as u64 / 2;
+    let aggregator = aggregators::parse_spec("mean", 0).unwrap();
+    let attack = AttackKind::None;
+    let mut meter = ByteMeter::new(n);
+    let mut rng = Pcg64::new(11, 11);
+    let grads = vec![vec![0f32; d]; n];
+    let active = vec![true; n];
+    let plan = ReducePlan::new(2, &active);
+
+    // Pre-folded wire totals, built outside the measured window: a dense
+    // re-init on round 0, sparse union-of-masks advances after (their
+    // indices need not match the modeled masks — the transport's fold is
+    // trusted, the masks only size the byte model).
+    let sparse_rounds = 6u64;
+    let mut totals: Vec<AggValue> = vec![AggValue::Dense(vec![1.0; d])];
+    for t in 0..sparse_rounds {
+        let idx: Vec<u32> =
+            (0..k as u32).map(|i| i * (d / k) as u32 + t as u32).collect();
+        let val = vec![0.5; k];
+        totals.push(AggValue::Sparse { idx, val });
+    }
+
+    let mut alg = ByzDashaPage::new_aggregate(d);
+    let mut round = |t: u64, total: AggValue| {
+        let mut env = RoundEnv {
+            d,
+            n_honest: n,
+            n_byz: 0,
+            seed: 42,
+            k,
+            beta: 0.9,
+            aggregator: aggregator.as_ref(),
+            geometry_refresh: RefreshPeriod::DEFAULT,
+            attack: &attack,
+            meter: &mut meter,
+            rng: &mut rng,
+            payloads: None,
+            uplink: UplinkCtx::Wire {
+                plan: &plan,
+                total: Some(total),
+                physical_tree: false,
+            },
+        };
+        let r = alg.round(t, &grads, &[], &mut env);
+        std::hint::black_box(&r);
+    };
+
+    let mut iter = totals.drain(..);
+    // round 0 is where a lazily-built estimate matrix would appear
+    let mut init = iter.next();
+    let init_bytes = allocated_during(|| round(0, init.take().unwrap()));
+    assert!(
+        init_bytes < half_matrix,
+        "dense re-init round allocated {init_bytes} B ≥ {half_matrix} B \
+         (half an n×d matrix) — the wire path must not build estimate rows"
+    );
+
+    let mut t = 0;
+    let steady = allocated_during(|| {
+        for total in iter.by_ref() {
+            t += 1;
+            round(t, total);
+        }
+    }) / sparse_rounds;
+    assert!(
+        steady < half_matrix,
+        "sparse aggregate round allocated {steady} B/round ≥ {half_matrix} \
+         B — union-of-masks advance is densifying"
+    );
+    assert_eq!(alg.agg_counters(), (1, sparse_rounds));
 }

@@ -383,6 +383,7 @@ fn random_checkpoint(rng: &mut Pcg64) -> Checkpoint {
             uplink: rng.next_u64(),
             downlink: rng.next_u64(),
             coordinator_egress: rng.next_u64(),
+            coordinator_ingress: rng.next_u64(),
             per_worker_uplink: per_worker,
         },
         reached: (rng.below(2) == 0)

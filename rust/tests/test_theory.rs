@@ -4,7 +4,9 @@
 
 use rosdhb::aggregators;
 use rosdhb::aggregators::geometry::RefreshPeriod;
-use rosdhb::algorithms::{baselines, rosdhb::RoSdhb, Algorithm, RoundEnv};
+use rosdhb::algorithms::{
+    baselines, rosdhb::RoSdhb, Algorithm, RoundEnv, UplinkCtx,
+};
 use rosdhb::attacks::{parse_spec as parse_attack, AttackKind};
 use rosdhb::diagnostics;
 use rosdhb::prng::Pcg64;
@@ -61,6 +63,7 @@ impl Sim {
             meter: &mut self.meter,
             rng: &mut self.rng,
             payloads: None,
+            uplink: UplinkCtx::Forward,
         };
         let r = self.alg.round(t, &grads, &[], &mut env);
         tensor::axpy(&mut self.theta, -self.gamma, &r);
@@ -190,6 +193,7 @@ fn naive_combination_fails_where_rosdhb_survives() {
             meter: &mut meter,
             rng: &mut rng,
             payloads: None,
+            uplink: UplinkCtx::Forward,
         };
         let r = alg.round(t, &grads, &[], &mut env);
         tensor::axpy(&mut theta, -0.01, &r);

@@ -1,0 +1,450 @@
+//! Aggregated-uplink integration tests (PR 9): partial aggregation on
+//! the relay tree (`uplink = "aggregate"`) over loopback TCP.
+//!
+//! * a tree-aggregated run is bit-identical — per-round log included —
+//!   to the local oracle with the same config, and its *trajectory*
+//!   (losses, norms, accuracy) is bit-identical to the flat-aggregated
+//!   run (byte columns differ by construction: subtree frames vs
+//!   singletons);
+//! * measured socket bytes equal the `ByteMeter` model on **both**
+//!   uplink directions: coordinator ingress on the coordinator's
+//!   sockets, the rest folded worker-to-worker through the relay tree
+//!   and reported per worker in `JoinSummary::relayed_uplink_wire_bytes`;
+//! * this holds for every sum/mean-shaped rule the mode admits: dgd,
+//!   robust-dgd (server-side momentum over the summed gradient) and
+//!   byz-dasha-page (sparse union-of-masks estimate frames);
+//! * a mid-run relay-worker crash degrades its children to direct
+//!   AGG delivery (RESYNC) without losing contributions — the run stays
+//!   trajectory-identical to flat aggregation with the same crash;
+//! * a pure-library property sweep re-nests every subtree shape
+//!   (branching 2/3/n, vacant slots and silent/evicted nodes at every
+//!   depth, dense and sparse values) and demands bit-parity between the
+//!   physical relay fold and the flat singleton oracle wherever frames
+//!   stay whole-subtree/singleton (the steady states and root/leaf
+//!   deaths), and lossless closeness for the one-round partial-subtree
+//!   shapes a mid-round interior crash produces.
+
+use rosdhb::config::{Algorithm, ExperimentConfig};
+use rosdhb::coordinator::round_transport::TcpTransport;
+use rosdhb::coordinator::{RunReport, Trainer};
+use rosdhb::model::MlpSpec;
+use rosdhb::transport::net::CoordinatorServer;
+use rosdhb::transport::uplink::{
+    combine, combine_slot_values, relay_fold, AggFrame, AggValue, ReducePlan,
+};
+use rosdhb::worker::remote::{join_run, JoinOpts, JoinSummary};
+use std::thread;
+use std::time::Duration;
+
+fn base_cfg() -> ExperimentConfig {
+    let mut c = ExperimentConfig::default_mnist_like();
+    c.algorithm = Algorithm::Dgd;
+    c.aggregator = "mean".into();
+    c.uplink = "aggregate".into();
+    c.n_honest = 4;
+    c.n_byz = 0;
+    c.attack = "none".into();
+    c.k_frac = 0.1;
+    c.rounds = 6;
+    c.eval_every = 2;
+    c.batch = 30;
+    c.train_size = 600;
+    c.test_size = 200;
+    c.stop_at_tau = false;
+    c.seed = 7;
+    c.transport = "tcp".into();
+    c.round_timeout_ms = 20_000;
+    c
+}
+
+/// Run `cfg` over loopback TCP: one coordinator on this thread, one
+/// worker thread per entry of `worker_caps` (a cap injects a mid-run
+/// crash after that many rounds).
+fn run_tcp(
+    cfg: &ExperimentConfig,
+    worker_caps: &[Option<u64>],
+) -> (
+    RunReport,
+    rosdhb::transport::net::NetStats,
+    Vec<anyhow::Result<JoinSummary>>,
+) {
+    assert_eq!(worker_caps.len(), cfg.n_total());
+    let server = CoordinatorServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+    let handles: Vec<_> = worker_caps
+        .iter()
+        .map(|cap| {
+            let cfg = cfg.clone();
+            let addr = addr.clone();
+            let cap = *cap;
+            thread::spawn(move || {
+                join_run(
+                    &cfg,
+                    &addr,
+                    Duration::from_secs(30),
+                    JoinOpts {
+                        max_rounds: cap,
+                        ..Default::default()
+                    },
+                )
+            })
+        })
+        .collect();
+    let d = MlpSpec::default().p();
+    let transport = TcpTransport::rendezvous(server, cfg, d).unwrap();
+    let mut trainer = Trainer::with_transport(cfg, Box::new(transport)).unwrap();
+    let report = trainer.run().unwrap();
+    let stats = trainer.net_stats().unwrap();
+    trainer.shutdown_transport(); // BYE — releases the worker threads
+    let outcomes = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    (report, stats, outcomes)
+}
+
+fn run_local(cfg: &ExperimentConfig) -> RunReport {
+    let mut local = cfg.clone();
+    local.transport = "local".into();
+    let mut t = Trainer::from_config(&local).unwrap();
+    t.run().unwrap()
+}
+
+/// Every field that must match for "bit-identical RunReport" (the
+/// ingress/relayed uplink split included — the local oracle models the
+/// same reduce tree).
+fn assert_reports_identical(a: &RunReport, b: &RunReport) {
+    assert_eq!(a.algorithm, b.algorithm);
+    assert_eq!(a.rounds_run, b.rounds_run);
+    assert_eq!(a.rounds_to_tau, b.rounds_to_tau);
+    assert_eq!(a.uplink_bytes_to_tau, b.uplink_bytes_to_tau);
+    assert_eq!(a.uplink_bytes, b.uplink_bytes);
+    assert_eq!(a.coordinator_ingress_bytes, b.coordinator_ingress_bytes);
+    assert_eq!(a.relayed_uplink_bytes, b.relayed_uplink_bytes);
+    assert_eq!(a.downlink_bytes, b.downlink_bytes);
+    assert_eq!(a.coordinator_egress_bytes, b.coordinator_egress_bytes);
+    assert_eq!(a.best_acc, b.best_acc);
+    assert_eq!(a.final_loss, b.final_loss);
+    assert_eq!(a.log.rows.len(), b.log.rows.len());
+    for (ra, rb) in a.log.rows.iter().zip(&b.log.rows) {
+        assert_eq!(ra.round, rb.round);
+        assert_eq!(ra.train_loss, rb.train_loss, "round {}", ra.round);
+        assert_eq!(ra.update_norm, rb.update_norm, "round {}", ra.round);
+        assert_eq!(ra.test_acc, rb.test_acc, "round {}", ra.round);
+        assert_eq!(ra.uplink_bytes, rb.uplink_bytes, "round {}", ra.round);
+        assert_eq!(ra.downlink_bytes, rb.downlink_bytes, "round {}", ra.round);
+    }
+}
+
+/// The learning trajectory alone — what must agree across *different*
+/// topologies of the same reduction (flat vs tree frames carry different
+/// byte counts by design).
+fn assert_trajectory_identical(a: &RunReport, b: &RunReport) {
+    assert_eq!(a.rounds_run, b.rounds_run);
+    assert_eq!(a.best_acc, b.best_acc);
+    assert_eq!(a.final_loss, b.final_loss);
+    assert_eq!(a.log.rows.len(), b.log.rows.len());
+    for (ra, rb) in a.log.rows.iter().zip(&b.log.rows) {
+        assert_eq!(ra.round, rb.round);
+        assert_eq!(ra.train_loss, rb.train_loss, "round {}", ra.round);
+        assert_eq!(ra.update_norm, rb.update_norm, "round {}", ra.round);
+        assert_eq!(ra.test_acc, rb.test_acc, "round {}", ra.round);
+    }
+}
+
+#[test]
+fn tcp_aggregate_flat_is_bit_identical_with_full_ingress() {
+    // Flat fan-out + aggregated uplink: every worker ships a singleton
+    // AGG frame straight to the coordinator, so ingress == uplink and
+    // nothing is relayed.
+    let cfg = base_cfg();
+    let (report, stats, outcomes) = run_tcp(&cfg, &[None; 4]);
+    for o in &outcomes {
+        let s = o.as_ref().expect("worker must finish cleanly");
+        assert_eq!(s.rounds, cfg.rounds as u64);
+        assert_eq!(s.role, "honest");
+        assert_eq!(s.relayed_uplink_wire_bytes, 0, "flat relays nothing");
+    }
+    let local = run_local(&cfg);
+    assert_reports_identical(&report, &local);
+    assert_eq!(report.coordinator_ingress_bytes, report.uplink_bytes);
+    assert_eq!(report.relayed_uplink_bytes, 0);
+    // measured socket bytes == the model, uplink direction
+    assert_eq!(stats.wire_uplink, report.coordinator_ingress_bytes);
+}
+
+#[test]
+fn tcp_aggregate_tree_matches_local_oracle_for_every_sum_rule() {
+    // n = 8, branching 2: positions 0..7 with children(0) = {2,3},
+    // children(1) = {4,5}, children(2) = {6,7} — position 2 is a
+    // *non-root* interior relay, so the fold nests two levels deep.
+    for alg in ["dgd", "robust-dgd", "dasha"] {
+        let mut cfg = base_cfg();
+        cfg.algorithm = Algorithm::parse(alg).unwrap();
+        cfg.n_honest = 8;
+        cfg.fanout = "tree".into();
+        cfg.branching = 2;
+        let (tree, stats, outcomes) = run_tcp(&cfg, &[None; 8]);
+        let summaries: Vec<&JoinSummary> =
+            outcomes.iter().map(|o| o.as_ref().unwrap()).collect();
+        for s in &summaries {
+            assert_eq!(s.rounds, cfg.rounds as u64, "{alg}");
+        }
+
+        // bit-identical to the local oracle modeling the same tree
+        let local = run_local(&cfg);
+        assert_reports_identical(&tree, &local);
+
+        // and trajectory-identical to the flat-aggregated reduction:
+        // the re-nested fold must reproduce the flat association bits
+        let mut flat_cfg = cfg.clone();
+        flat_cfg.fanout = "flat".into();
+        let (flat, _, _) = run_tcp(&flat_cfg, &[None; 8]);
+        assert_trajectory_identical(&tree, &flat);
+
+        // byte split: only root subtree frames reach the coordinator…
+        assert!(
+            tree.coordinator_ingress_bytes < tree.uplink_bytes,
+            "{alg}: tree aggregation must fold bytes below the root"
+        );
+        assert_eq!(
+            stats.wire_uplink, tree.coordinator_ingress_bytes,
+            "{alg}: measured coordinator ingress"
+        );
+        // …and the rest shows up, byte-exact, on the interior relays
+        let relayed: u64 = summaries
+            .iter()
+            .map(|s| s.relayed_uplink_wire_bytes)
+            .sum();
+        assert_eq!(
+            relayed,
+            tree.uplink_bytes - tree.coordinator_ingress_bytes,
+            "{alg}: relayed uplink must close the byte identity"
+        );
+        assert_eq!(tree.relayed_uplink_bytes, relayed, "{alg}");
+        assert!(relayed > 0, "{alg}: interior relays must have folded");
+        let relayed_raw: u64 = summaries
+            .iter()
+            .map(|s| s.relayed_uplink_raw_bytes)
+            .sum();
+        assert!(
+            relayed_raw > relayed,
+            "{alg}: raw bytes include the frame envelopes"
+        );
+    }
+}
+
+#[test]
+fn tcp_aggregate_tree_relay_crash_degrades_without_losing_contributions() {
+    // Worker 0 is a tree root relaying slots 2 and 3. It crashes after 2
+    // rounds: its children must fall back to direct AGG delivery within
+    // the round and keep contributing — the run stays
+    // trajectory-identical to flat aggregation with the identical crash
+    // (the re-nested combine folds the same covered slots in the same
+    // order, whatever mix of subtree frames and singletons arrives).
+    let mut tree = base_cfg();
+    tree.n_honest = 5;
+    tree.rounds = 5;
+    // a dead socket is detected by the I/O threads, not the deadline —
+    // a long timeout must not slow the surviving rounds
+    tree.round_timeout_ms = 60_000;
+    tree.fanout = "tree".into();
+    tree.branching = 2;
+    let caps = [Some(2), None, None, None, None];
+    let (tree_report, _stats, tree_outcomes) = run_tcp(&tree, &caps);
+    assert_eq!(tree_outcomes[0].as_ref().unwrap().rounds, 2);
+    assert_eq!(tree_report.rounds_run, 5);
+
+    let mut flat = tree.clone();
+    flat.fanout = "flat".into();
+    let (flat_report, _stats, flat_outcomes) = run_tcp(&flat, &caps);
+    assert_eq!(flat_outcomes[0].as_ref().unwrap().rounds, 2);
+    assert_eq!(flat_report.rounds_run, 5);
+
+    assert_trajectory_identical(&tree_report, &flat_report);
+    // the crash survivors kept serving every round
+    for o in &tree_outcomes[1..] {
+        assert_eq!(o.as_ref().unwrap().rounds, 5);
+    }
+}
+
+// --------------------------------------------------------- property sweep
+
+/// Deterministic dense value for a slot (d = 7 keeps the sweep cheap).
+fn dense_value(s: u16) -> AggValue {
+    AggValue::Dense(
+        (0..7)
+            .map(|j| (s as f32 + 1.0) * 1.25 + j as f32 * 0.375)
+            .collect(),
+    )
+}
+
+/// Deterministic sparse value: slot-dependent mask over 16 coordinates,
+/// overlapping between slots so the union merge has float adds to get
+/// wrong if the association drifted.
+fn sparse_value(s: u16) -> AggValue {
+    // {s, s+3, s+6, s+9} mod 16: always 4 distinct coordinates, heavily
+    // overlapping between neighboring slots
+    let mut idx: Vec<u32> =
+        (0..4u32).map(|j| (j * 3 + s as u32) % 16).collect();
+    idx.sort_unstable();
+    let val = idx
+        .iter()
+        .map(|&c| 0.125 + c as f32 * 0.5 + s as f32 * 0.0625)
+        .collect();
+    AggValue::Sparse { idx, val }
+}
+
+/// Elementwise closeness for the partial-subtree cases (see the sweep):
+/// shapes and sparse coordinates must still match exactly — only the
+/// f32 association may differ.
+fn assert_values_close(a: &Option<AggValue>, b: &Option<AggValue>, ctx: &str) {
+    let close = |x: &[f32], y: &[f32]| {
+        assert_eq!(x.len(), y.len(), "{ctx}");
+        for (u, v) in x.iter().zip(y) {
+            assert!(
+                (u - v).abs() <= 1e-4 * (1.0 + v.abs()),
+                "{ctx}: {u} vs {v}"
+            );
+        }
+    };
+    match (a, b) {
+        (None, None) => {}
+        (Some(AggValue::Dense(x)), Some(AggValue::Dense(y))) => close(x, y),
+        (
+            Some(AggValue::Sparse { idx: xi, val: xv }),
+            Some(AggValue::Sparse { idx: yi, val: yv }),
+        ) => {
+            assert_eq!(xi, yi, "{ctx}: union masks diverged");
+            close(xv, yv);
+        }
+        _ => panic!("{ctx}: value shapes differ"),
+    }
+}
+
+/// The frames that physically reach the coordinator from the subtree at
+/// `pos`: a live node folds its own singleton with its children's
+/// subtree frames; a dead (silent/evicted) node contributes nothing and
+/// its children's frames ship direct — exactly the RESYNC degradation.
+fn physical_frames(
+    plan: &ReducePlan,
+    pos: usize,
+    dead: &[u16],
+    value_of: &dyn Fn(u16) -> AggValue,
+) -> Vec<AggFrame> {
+    let slot = plan.slot(pos);
+    let mut child_frames: Vec<AggFrame> = Vec::new();
+    for c in plan.children(pos) {
+        child_frames.extend(physical_frames(plan, c, dead, value_of));
+    }
+    if dead.contains(&slot) {
+        return child_frames; // children go direct past the dead relay
+    }
+    // a live relay folds only the frames addressed to it: each child
+    // subtree's *own* frame (direct escapees from deeper crashes ride
+    // along untouched — they already left the tree)
+    let (to_me, escaped): (Vec<AggFrame>, Vec<AggFrame>) = child_frames
+        .into_iter()
+        .partition(|f| {
+            let root_pos =
+                plan.slots().binary_search(&f.root_slot()).unwrap();
+            plan.parent(root_pos) == Some(pos)
+        });
+    let own = AggFrame::single(1, slot, slot as f32 * 0.5, value_of(slot));
+    let folded = relay_fold(own, to_me).unwrap();
+    let mut out = vec![folded];
+    out.extend(escaped);
+    out
+}
+
+#[test]
+fn reduce_plan_property_sweep_matches_flat_oracle() {
+    for &dense in &[true, false] {
+        let value_of = |s: u16| -> AggValue {
+            if dense {
+                dense_value(s)
+            } else {
+                sparse_value(s)
+            }
+        };
+        for n in [1usize, 2, 3, 4, 5, 6, 7, 8, 9, 13] {
+            for b in [2usize, 3, n.max(2)] {
+                // vacancy patterns: full roster, then each slot vacated
+                let mut masks: Vec<Vec<bool>> = vec![vec![true; n]];
+                for v in 0..n {
+                    let mut m = vec![true; n];
+                    m[v] = false;
+                    masks.push(m);
+                }
+                for active in masks {
+                    let plan = ReducePlan::new(b, &active);
+                    if plan.n() == 0 {
+                        continue;
+                    }
+                    // dead sets: nobody, each single node, and the
+                    // first two plan slots together (a root relay plus
+                    // its successor)
+                    let mut dead_sets: Vec<Vec<u16>> = vec![vec![]];
+                    for &s in plan.slots() {
+                        dead_sets.push(vec![s]);
+                    }
+                    if plan.n() >= 2 {
+                        dead_sets
+                            .push(vec![plan.slot(0), plan.slot(1)]);
+                    }
+                    for dead in dead_sets {
+                        let mut frames = Vec::new();
+                        for r in plan.roots() {
+                            frames.extend(physical_frames(
+                                &plan, r, &dead, &value_of,
+                            ));
+                        }
+                        let nested = combine(&plan, frames);
+                        let oracle = combine_slot_values(&plan, |s| {
+                            (!dead.contains(&s)).then(|| value_of(s))
+                        });
+                        let ctx = format!(
+                            "n={n} b={b} active={active:?} dead={dead:?} \
+                             dense={dense}"
+                        );
+                        // Bit-parity with the flat oracle is guaranteed
+                        // exactly when every frame still covers a whole
+                        // plan subtree or a singleton: a dead ROOT's
+                        // children land at top level through the same
+                        // recursion, a dead LEAF simply contributes
+                        // nothing. A dead *interior* node with a live
+                        // parent makes that parent ship a partial
+                        // subtree — nothing is lost, but the f32
+                        // association differs for that round (the
+                        // runtime then evicts the slot, the next plan
+                        // re-parents the orphans, and exact parity
+                        // returns).
+                        let exact = dead.iter().all(|s| {
+                            let p = plan
+                                .slots()
+                                .binary_search(s)
+                                .expect("dead sets draw from plan slots");
+                            plan.is_root_slot(*s)
+                                || plan.children(p).is_empty()
+                        });
+                        if exact {
+                            assert_eq!(nested.total, oracle, "{ctx}");
+                        } else {
+                            assert_values_close(
+                                &nested.total,
+                                &oracle,
+                                &ctx,
+                            );
+                        }
+                        assert_eq!(nested.dropped, 0);
+                        let mut expect_covered: Vec<u16> = plan
+                            .slots()
+                            .iter()
+                            .copied()
+                            .filter(|s| !dead.contains(s))
+                            .collect();
+                        expect_covered.sort_unstable();
+                        assert_eq!(nested.covered, expect_covered);
+                    }
+                }
+            }
+        }
+    }
+}

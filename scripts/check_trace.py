@@ -40,6 +40,8 @@ STATUS_KEYS = {
     "live_slots",
     "slots",
     "uplink_bytes",
+    "coordinator_ingress_bytes",
+    "relayed_uplink_bytes",
     "downlink_bytes",
     "coordinator_egress_bytes",
     "relayed_downlink_bytes",
@@ -116,6 +118,10 @@ def check_status(path):
         snap["downlink_bytes"] - snap["coordinator_egress_bytes"]
     ):
         fail(f"{path}: relayed_downlink_bytes breaks the byte identity")
+    if snap["relayed_uplink_bytes"] != (
+        snap["uplink_bytes"] - snap["coordinator_ingress_bytes"]
+    ):
+        fail(f"{path}: relayed_uplink_bytes breaks the byte identity")
     print(
         f"check_trace: {path}: OK (round {snap['round']}/"
         f"{snap['rounds_total']}, {snap['live_slots']} live)"

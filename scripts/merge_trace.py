@@ -1,0 +1,146 @@
+#!/usr/bin/env python3
+"""Merge rosdhb per-process trace journals into one timeline (stdlib only).
+
+Usage:
+    python3 scripts/merge_trace.py TRACE.jsonl [TRACE.jsonl.w0 ...] \
+        [--out merged.jsonl]
+
+A traced run writes one journal per process: the coordinator's at
+``trace_path`` and each worker's at ``trace_path.w<id>``. Every journal
+stamps events with ``ts_us`` measured from its *own* process start — the
+files cannot be interleaved by raw timestamp. This tool rebases each
+worker journal onto the coordinator clock and emits one sorted stream.
+
+The alignment anchor is the WELCOME handshake: a worker opens its
+journal immediately after rendezvous assigns its id, which is the same
+instant the coordinator journals ``rendezvous_admit`` for that slot. So
+worker ``w``'s local zero maps to the coordinator-time ``ts_us`` of the
+first ``rendezvous_admit`` naming slot ``w``, and every worker event
+lands at ``admit_ts + local_ts``.
+
+Worker journals are auto-discovered next to the coordinator journal
+(``TRACE.jsonl.w*``) when not listed explicitly. Each merged line keeps
+the original event keys, rewrites ``ts_us`` to coordinator time, and
+adds ``src`` ("coord" or "w<id>") plus ``ts_local_us`` (the original
+stamp). The merge fails loudly on malformed JSONL, a worker journal with
+no admit anchor, or a lost line (output count must equal the sum of
+input counts).
+"""
+
+import argparse
+import glob
+import json
+import sys
+
+
+def fail(msg):
+    print(f"merge_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load_journal(path):
+    events = []
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line:
+                fail(f"{path}:{lineno}: blank line in JSONL journal")
+            try:
+                ev = json.loads(line)
+            except ValueError as e:
+                fail(f"{path}:{lineno}: not JSON: {e}")
+            if not isinstance(ev, dict):
+                fail(f"{path}:{lineno}: not an object")
+            if not isinstance(ev.get("ts_us"), (int, float)):
+                fail(f"{path}:{lineno}: missing numeric ts_us")
+            events.append(ev)
+    return events
+
+
+def worker_id(path):
+    """The <id> of a ``...jsonl.w<id>`` journal, or None."""
+    suffix = path.rsplit(".", 1)[-1]
+    if suffix.startswith("w") and suffix[1:].isdigit():
+        return int(suffix[1:])
+    return None
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "traces",
+        nargs="+",
+        help="coordinator journal first, then worker journals "
+        "(auto-discovered as <coordinator>.w* when omitted)",
+    )
+    ap.add_argument(
+        "--out", help="write merged JSONL here instead of stdout"
+    )
+    args = ap.parse_args()
+
+    coord_path = args.traces[0]
+    worker_paths = args.traces[1:]
+    if not worker_paths:
+        worker_paths = sorted(
+            glob.glob(glob.escape(coord_path) + ".w*"), key=worker_id
+        )
+    for p in worker_paths:
+        if worker_id(p) is None:
+            fail(f"{p}: worker journals must be named <trace>.w<id>")
+
+    coord = load_journal(coord_path)
+    # WELCOME anchor: first admit per slot (a readmitted slot keeps its
+    # original anchor — later journals from the same id would overwrite
+    # the file anyway, so only one origin per id can exist).
+    admits = {}
+    for ev in coord:
+        if ev.get("event") == "rendezvous_admit":
+            admits.setdefault(int(ev["worker"]), int(ev["ts_us"]))
+
+    merged = []
+    for ev in coord:
+        ev = dict(ev)
+        ev["src"] = "coord"
+        ev["ts_local_us"] = ev["ts_us"]
+        merged.append(ev)
+    n_inputs = len(coord)
+    for path in worker_paths:
+        wid = worker_id(path)
+        if wid not in admits:
+            fail(
+                f"{path}: no rendezvous_admit for slot {wid} in "
+                f"{coord_path} — cannot anchor this journal"
+            )
+        offset = admits[wid]
+        events = load_journal(path)
+        n_inputs += len(events)
+        for ev in events:
+            ev = dict(ev)
+            ev["src"] = f"w{wid}"
+            ev["ts_local_us"] = ev["ts_us"]
+            ev["ts_us"] = int(ev["ts_us"]) + offset
+            merged.append(ev)
+
+    # Stable sort: same-timestamp events keep coordinator-first,
+    # then-ascending-worker input order.
+    merged.sort(key=lambda ev: ev["ts_us"])
+    if len(merged) != n_inputs:
+        fail(f"merged {len(merged)} events from {n_inputs} input lines")
+
+    out = open(args.out, "w", encoding="utf-8") if args.out else sys.stdout
+    try:
+        for ev in merged:
+            out.write(json.dumps(ev, sort_keys=True))
+            out.write("\n")
+    finally:
+        if args.out:
+            out.close()
+    print(
+        f"merge_trace: OK ({len(merged)} events from 1 coordinator + "
+        f"{len(worker_paths)} worker journals)",
+        file=sys.stderr,
+    )
+
+
+if __name__ == "__main__":
+    main()
