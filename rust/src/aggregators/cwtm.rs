@@ -11,6 +11,7 @@
 //! allocation) — see EXPERIMENTS.md §Perf.
 
 use super::{delta_ratio, Aggregator};
+use crate::telemetry::forensics;
 
 /// Trimmed mean of one gathered column (the scratch is permuted in
 /// place): drop the `f` smallest and `f` largest, average the middle
@@ -30,6 +31,43 @@ fn trimmed_col_mean(col: &mut [f32], f: usize, keep: usize, inv: f32) -> f32 {
         upper[..keep].iter().sum()
     };
     acc * inv
+}
+
+/// Forensics-only second pass (armed rounds, else free): per
+/// coordinate, count the workers whose values land in the kept order
+/// statistics `[f, n−f)` under the total order (value, worker index).
+/// A deterministic tie-broken view of the same middle
+/// [`trimmed_col_mean`] averages — it never feeds back into the
+/// aggregate, so the hot path stays untouched when disarmed.
+fn note_trim_inclusion_pass(
+    inputs: &[&[f32]],
+    cols: Option<&[u32]>,
+    f: usize,
+) {
+    if !forensics::armed() {
+        return;
+    }
+    let n = inputs.len();
+    let d = inputs[0].len();
+    let mut counts = vec![0u64; n];
+    let mut idx: Vec<usize> = Vec::with_capacity(n);
+    let mut total = 0u64;
+    let mut visit = |ell: usize| {
+        idx.clear();
+        idx.extend(0..n);
+        idx.sort_unstable_by(|&a, &b| {
+            inputs[a][ell].total_cmp(&inputs[b][ell]).then(a.cmp(&b))
+        });
+        for &w in &idx[f..n - f] {
+            counts[w] += 1;
+        }
+        total += 1;
+    };
+    match cols {
+        Some(cols) => cols.iter().for_each(|&c| visit(c as usize)),
+        None => (0..d).for_each(&mut visit),
+    }
+    forensics::note_trim_inclusion(counts, total);
 }
 
 /// Median of one gathered column (scratch permuted in place) — shared by
@@ -110,6 +148,7 @@ impl Aggregator for Cwtm {
                 }
             });
         }
+        note_trim_inclusion_pass(inputs, None, f);
     }
 
     /// κ ≤ 6δ/(1−2δ) · (1 + δ/(1−2δ)) with δ = f/n — [2], Table 1.
@@ -149,6 +188,7 @@ impl Aggregator for Cwtm {
             }
             *slot_out = trimmed_col_mean(&mut col, f, keep, inv);
         }
+        note_trim_inclusion_pass(inputs, Some(cols), f);
     }
 }
 
@@ -267,6 +307,29 @@ mod tests {
         let rows = vec![vec![0.0], vec![1.0]];
         let refs = as_refs(&rows);
         let _ = Cwtm::new(1).aggregate_vec(&refs);
+    }
+
+    #[test]
+    fn trim_inclusion_forensics_counts_survivors() {
+        use crate::telemetry::forensics;
+        let rows = vec![
+            vec![0.0, 100.0],
+            vec![1.0, 1.0],
+            vec![2.0, 2.0],
+            vec![3.0, 3.0],
+            vec![-50.0, 4.0],
+        ];
+        let refs = as_refs(&rows);
+        forensics::arm();
+        let _ = Cwtm::new(1).aggregate_vec(&refs);
+        let rf = forensics::disarm().unwrap();
+        let (counts, cols) = rf.trim_inclusion.unwrap();
+        assert_eq!(cols, 2);
+        // coord 0 keeps rows {0,1,2}; coord 1 keeps rows {2,3,4}
+        assert_eq!(counts, vec![1, 1, 2, 1, 1]);
+        // disarmed runs collect nothing
+        let _ = Cwtm::new(1).aggregate_vec(&refs);
+        assert!(forensics::disarm().is_none());
     }
 
     #[test]

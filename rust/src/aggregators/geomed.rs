@@ -5,6 +5,7 @@
 //! points; the ε-smoothing below handles coincidence with an input.
 
 use super::{delta_ratio, Aggregator};
+use crate::telemetry::forensics;
 use crate::tensor;
 
 #[derive(Clone, Debug)]
@@ -45,6 +46,7 @@ impl GeoMed {
         }
         let mut next = vec![0.0f32; d];
         let mut iters = 0u32;
+        let mut last_delta = 0.0f64;
         for _ in 0..self.max_iters {
             iters += 1;
             let mut wsum = 0.0f64;
@@ -65,10 +67,12 @@ impl GeoMed {
                 delta += dd * dd;
                 *o = v;
             }
+            last_delta = delta;
             if delta < self.tol * self.tol {
                 break;
             }
         }
+        forensics::note_weiszfeld(iters, last_delta);
         iters
     }
 }

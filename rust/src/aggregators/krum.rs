@@ -14,6 +14,7 @@
 
 use super::geometry::{self, GeoCtx, Geometry};
 use super::{delta_ratio, Aggregator};
+use crate::telemetry::forensics;
 
 /// Krum scores: per input, the sum of its n−f−2 smallest distances to
 /// the other inputs. One scratch buffer is reused across rows and the
@@ -48,9 +49,16 @@ pub(crate) fn scores(geo: &Geometry<'_>, f: usize) -> Vec<f64> {
 /// entry points whenever the distances do.
 pub(crate) fn krum_select(geo: &Geometry<'_>, f: usize) -> usize {
     let sc = scores(geo, f);
-    (0..geo.n())
+    let best = (0..geo.n())
         .min_by(|&a, &b| sc[a].total_cmp(&sc[b]))
-        .expect("krum needs at least one input")
+        .expect("krum needs at least one input");
+    // observation only (no-ops unless the trainer armed forensics):
+    // both the dense and geometry entry paths route through here, so
+    // every Krum round reports its scores and pick
+    forensics::note_scores(&sc);
+    forensics::note_selected(&[best]);
+    forensics::note_pairwise(geo);
+    best
 }
 
 /// Multi-Krum's m = n−f best-scored inputs, returned **ascending by
@@ -73,6 +81,9 @@ pub(crate) fn multikrum_select(geo: &Geometry<'_>, f: usize) -> Vec<usize> {
         order.truncate(m);
     }
     order.sort_unstable();
+    forensics::note_scores(&sc);
+    forensics::note_selected(&order);
+    forensics::note_pairwise(geo);
     order
 }
 

@@ -20,6 +20,7 @@
 
 use super::geometry::{self, GeoCtx, Geometry};
 use super::{delta_ratio, Aggregator};
+use crate::telemetry::forensics;
 
 pub struct Nnm {
     pub f: usize,
@@ -67,8 +68,17 @@ impl Nnm {
         let mut order: Vec<usize> = Vec::with_capacity(n);
         for (i, mi) in mixed.iter_mut().enumerate() {
             neighbor_order(&geo, i, self.m(n), &mut order);
+            if forensics::armed() {
+                let mut set: Vec<u32> =
+                    order[..self.m(n)].iter().map(|&j| j as u32).collect();
+                set.sort_unstable();
+                forensics::note_neighbors(i, &set);
+            }
             self.mix_row_into(inputs, &order, mi);
         }
+        // pre-mix distances: the view in which an attacker is still an
+        // outlier (mixing deliberately homogenizes the rows)
+        forensics::note_pairwise(&geo);
         mixed
     }
 
@@ -174,6 +184,7 @@ impl Aggregator for Nnm {
             new_set.clear();
             new_set.extend(order[..m].iter().map(|&j| j as u32));
             new_set.sort_unstable();
+            forensics::note_neighbors(i, &new_set);
             let carried = cache_usable && ctx.mix.set_row(i) == &new_set[..];
             if carried {
                 let (cols, scale) = ctx.delta.expect("cache_usable");
@@ -189,6 +200,7 @@ impl Aggregator for Nnm {
             ctx.mix.set_row_mut(i).copy_from_slice(&new_set);
         }
         ctx.mix.set_valid();
+        forensics::note_pairwise(&ctx.geo);
 
         let refs: Vec<&[f32]> = ctx.mix.mixed_rows().collect();
         let carry_out = ctx.carry_in

@@ -234,6 +234,19 @@ pub struct ExperimentConfig {
     /// one JSON run snapshot (see `docs/OBSERVABILITY.md`).
     /// Coordinator-local and read-only — never fingerprinted.
     pub status_addr: String,
+    /// Aggregation forensics: when `true` the coordinator arms a
+    /// per-round collector around the aggregation call and folds what
+    /// the rules observed (Krum scores/selection, NNM neighbor sets,
+    /// CWTM trim inclusion, Weiszfeld residuals, pairwise distances)
+    /// into per-worker rolling suspicion statistics, journaled as
+    /// `agg_forensics` / `suspicion_snapshot` events and surfaced in
+    /// the status snapshot and RunReport. Strictly an observer: never
+    /// fingerprinted, never on the wire, results bit-identical on/off.
+    pub forensics: bool,
+    /// Depth of the status endpoint's in-memory round-history ring
+    /// served at `GET /history` (0 = no history). Coordinator-local —
+    /// never fingerprinted.
+    pub status_history: usize,
 }
 
 /// One membership-churn event (see [`ExperimentConfig::churn`]).
@@ -334,6 +347,8 @@ impl ExperimentConfig {
             churn: String::new(),
             trace_path: String::new(),
             status_addr: String::new(),
+            forensics: false,
+            status_history: crate::telemetry::status::DEFAULT_HISTORY_DEPTH,
         }
     }
 
@@ -402,6 +417,7 @@ impl ExperimentConfig {
         num!("round_timeout_ms", c.round_timeout_ms, u64);
         num!("branching", c.branching, usize);
         num!("epoch_rounds", c.epoch_rounds, usize);
+        num!("status_history", c.status_history, usize);
         if let Some(v) = get("round_engine") {
             c.round_engine =
                 v.as_str().ok_or("round_engine: want string")?.into();
@@ -479,6 +495,9 @@ impl ExperimentConfig {
         if let Some(v) = get("lyapunov") {
             c.lyapunov = v.as_bool().ok_or("lyapunov: want bool")?;
         }
+        if let Some(v) = get("forensics") {
+            c.forensics = v.as_bool().ok_or("forensics: want bool")?;
+        }
         Ok(c)
     }
 
@@ -554,6 +573,8 @@ impl ExperimentConfig {
                 "churn" => c.churn = tmp.churn.clone(),
                 "trace_path" => c.trace_path = tmp.trace_path.clone(),
                 "status_addr" => c.status_addr = tmp.status_addr.clone(),
+                "forensics" => c.forensics = tmp.forensics,
+                "status_history" => c.status_history = tmp.status_history,
                 other => return Err(format!("unknown config key '{other}'")),
             }
         }
@@ -853,9 +874,10 @@ impl ExperimentConfig {
             // format and produce bit-identical results, so mixed-mode
             // flat runs are legal (trees additionally need matching io,
             // enforced at plan application, not at rendezvous).
-            // `trace_path`/`status_addr` are likewise NOT hashed:
-            // telemetry is process-local observation — a traced
-            // coordinator must accept untraced workers and vice versa
+            // `trace_path`/`status_addr`/`forensics`/`status_history`
+            // are likewise NOT hashed: telemetry is process-local
+            // observation — a traced or forensics-armed coordinator
+            // must accept untraced workers and vice versa
             self.epoch_rounds,
             self.readmit,
             // the uplink mode pins the f32 summation order (tree fold vs
@@ -1231,19 +1253,31 @@ mod tests {
         let mut c = ExperimentConfig::default_mnist_like();
         assert!(c.trace_path.is_empty(), "tracing must default off");
         assert!(c.status_addr.is_empty(), "status endpoint defaults off");
+        assert!(!c.forensics, "forensics must default off");
+        assert_eq!(
+            c.status_history,
+            crate::telemetry::status::DEFAULT_HISTORY_DEPTH
+        );
         c.set("trace_path", "/tmp/run.jsonl").unwrap();
         c.set("status_addr", "127.0.0.1:7900").unwrap();
+        c.set("forensics", "true").unwrap();
+        c.set("status_history", "16").unwrap();
         assert_eq!(c.trace_path, "/tmp/run.jsonl");
         assert_eq!(c.status_addr, "127.0.0.1:7900");
+        assert!(c.forensics);
+        assert_eq!(c.status_history, 16);
         c.validate().unwrap();
 
         let doc = toml::TomlDoc::parse(
-            "[experiment]\ntrace_path = \"t.jsonl\"\nstatus_addr = \"127.0.0.1:0\"\n",
+            "[experiment]\ntrace_path = \"t.jsonl\"\nstatus_addr = \"127.0.0.1:0\"\n\
+             forensics = true\nstatus_history = 8\n",
         )
         .unwrap();
         let c = ExperimentConfig::from_toml(&doc).unwrap();
         assert_eq!(c.trace_path, "t.jsonl");
         assert_eq!(c.status_addr, "127.0.0.1:0");
+        assert!(c.forensics);
+        assert_eq!(c.status_history, 8);
 
         // telemetry is observation, not wire identity: a traced
         // coordinator must admit untraced workers, so neither key may
@@ -1252,6 +1286,8 @@ mod tests {
         let mut b = a.clone();
         b.trace_path = "/tmp/elsewhere.jsonl".into();
         b.status_addr = "0.0.0.0:9999".into();
+        b.forensics = true;
+        b.status_history = 7;
         assert_eq!(a.wire_fingerprint(), b.wire_fingerprint());
     }
 

@@ -61,6 +61,7 @@ use crate::diagnostics;
 use crate::metrics::{MetricsLog, RoundRecord};
 use crate::model::MlpSpec;
 use crate::prng::Pcg64;
+use crate::telemetry::forensics::{self, SuspicionTracker, WorkerSuspicion};
 use crate::telemetry::status::{StatusServer, StatusState};
 use crate::telemetry::{Event, Histogram, PhaseStats, Telemetry};
 use crate::tensor;
@@ -222,6 +223,13 @@ pub struct RunReport {
     /// Per-worker round-trip latency histograms (tcp only; empty under
     /// the local transport). Timing only, like [`Self::phases`].
     pub worker_latency: Vec<Histogram>,
+    /// Rebuild/incremental counters of the maintained pairwise geometry
+    /// (`None` unless the sparse engine kept one).
+    pub geometry: Option<GeoStats>,
+    /// Per-worker rolling suspicion statistics (`config: forensics`;
+    /// empty when forensics is off). Observation only — never feeds
+    /// back into aggregation or the wire.
+    pub suspicion: Vec<WorkerSuspicion>,
     pub best_acc: Option<f64>,
     pub final_loss: Option<f64>,
     pub log: MetricsLog,
@@ -294,6 +302,9 @@ pub struct Trainer {
     /// The round loop pushes a snapshot after every round and never
     /// blocks on clients.
     status: Option<StatusServer>,
+    /// Rolling per-worker suspicion statistics fed by the armed
+    /// forensics collector (`config: forensics`; stays empty when off).
+    suspicion: SuspicionTracker,
 }
 
 impl Trainer {
@@ -464,6 +475,22 @@ impl Trainer {
             let srv = StatusServer::bind(&cfg.status_addr).map_err(|e| {
                 anyhow!("status_addr {:?}: {e}", cfg.status_addr)
             })?;
+            let handle = srv.handle();
+            handle.set_history_depth(cfg.status_history);
+            if tel.enabled() {
+                // serve `/clock` from the journal's clock so worker
+                // offset probes and journal timestamps share one base
+                let clock_tel = tel.clone();
+                handle.set_clock_source(std::sync::Arc::new(move || {
+                    clock_tel.local_now_us()
+                }));
+                // forward every journaled event to `/events` streams —
+                // observation fan-out only, never the data path
+                let tap_handle = handle.clone();
+                tel.set_event_tap(Some(std::sync::Arc::new(
+                    move |line: &str| tap_handle.publish_event(line),
+                )));
+            }
             eprintln!("rosdhb[status]: serving on {}", srv.local_addr());
             Some(srv)
         };
@@ -500,6 +527,7 @@ impl Trainer {
             tel,
             phases: PhaseStats::default(),
             status,
+            suspicion: SuspicionTracker::default(),
         })
     }
 
@@ -611,8 +639,22 @@ impl Trainer {
             evictions: health.as_ref().map_or(0, |h| h.evictions),
             lyapunov: self.log.rows.last().and_then(|r| r.lyapunov),
             trace_events: self.tel.events_recorded(),
+            geometry: self
+                .algorithm
+                .geometry_stats()
+                .map(|g| (g.rebuilds, g.incrementals)),
+            suspicion: self.suspicion.scores(),
+            workers: Default::default(),
         };
-        srv.handle().update(|s| *s = state);
+        let handle = srv.handle();
+        handle.update(|s| {
+            // worker-pushed side-channel stats outlive any one round —
+            // carry them across the wholesale snapshot replacement
+            let workers = std::mem::take(&mut s.workers);
+            *s = state;
+            s.workers = workers;
+        });
+        handle.push_history();
     }
 
     /// Rebuild/incremental counters of the algorithm's maintained
@@ -621,6 +663,35 @@ impl Trainer {
     /// refresh rounds".
     pub fn geometry_stats(&self) -> Option<GeoStats> {
         self.algorithm.geometry_stats()
+    }
+
+    /// Per-worker rolling suspicion summary accumulated by the armed
+    /// forensics collector so far (empty unless `config: forensics`).
+    pub fn suspicion_summary(&self) -> Vec<WorkerSuspicion> {
+        self.suspicion.summary()
+    }
+
+    /// Fold one round's armed forensics capture into the rolling
+    /// suspicion statistics and the event journal.
+    fn note_forensics(&mut self, t: u64, rf: &forensics::RoundForensics) {
+        self.suspicion.observe(rf, self.cfg.n_total());
+        self.tel.emit(|| Event::AggForensics {
+            round: t,
+            selected: rf.selected.as_ref().map_or_else(Vec::new, |s| {
+                s.iter().map(|&i| i as u32).collect()
+            }),
+            neighbor_rows: rf.neighbors.as_ref().map_or(0, |rows| {
+                rows.iter().filter(|r| !r.is_empty()).count() as u64
+            }),
+            weiszfeld_iters: rf.weiszfeld.map_or(0, |(i, _)| i as u64),
+            weiszfeld_residual: rf.weiszfeld.map_or(0.0, |(_, r)| r),
+            trim_cols: rf.trim_inclusion.as_ref().map_or(0, |&(_, c)| c),
+        });
+        let suspicion = self.suspicion.scores();
+        self.tel.emit(move || Event::SuspicionSnapshot {
+            round: t,
+            suspicion,
+        });
     }
 
     /// Release transport resources (tcp: tell workers the run is over).
@@ -726,9 +797,23 @@ impl Trainer {
                 },
             },
         };
+        // Aggregation forensics: arm the thread-local collector around
+        // the aggregation call so the rules can report what they saw
+        // (scores, selected sets, trim inclusion, distances). Strictly
+        // an observer — arming never changes a single aggregated bit.
+        let forensics_on = self.cfg.forensics
+            && (self.tel.enabled() || self.status.is_some());
+        if forensics_on {
+            forensics::arm();
+        }
         let mut update = self
             .algorithm
             .round(t, honest_grads, byz_grads, &mut env);
+        if forensics_on {
+            if let Some(rf) = forensics::disarm() {
+                self.note_forensics(t, &rf);
+            }
+        }
         if let Some(codec) = &mut self.downlink_codec {
             // decide how round t+1's broadcast describes R^t — on the
             // raw aggregate, before clipping (workers clip locally
@@ -1001,6 +1086,8 @@ impl Trainer {
                 .transport
                 .worker_latency()
                 .map_or_else(Vec::new, |h| h.to_vec()),
+            geometry: self.geometry_stats(),
+            suspicion: self.suspicion.summary(),
             best_acc: self.log.best_acc(),
             final_loss: self.log.final_loss(),
             log: self.log.clone(),

@@ -250,6 +250,22 @@ fn report_json(
         );
         t.insert("relay_resyncs".into(), Json::Num(r.relay_resyncs as f64));
         t.insert("evictions".into(), Json::Num(r.evictions as f64));
+        m.insert(
+            "geometry".into(),
+            r.geometry.map_or(Json::Null, |g| {
+                let mut go = BTreeMap::new();
+                go.insert("rebuilds".to_string(), Json::Num(g.rebuilds as f64));
+                go.insert(
+                    "incrementals".into(),
+                    Json::Num(g.incrementals as f64),
+                );
+                Json::Obj(go)
+            }),
+        );
+        m.insert(
+            "suspicion".into(),
+            Json::Arr(r.suspicion.iter().map(|w| w.to_json()).collect()),
+        );
         m.insert("telemetry".into(), Json::Obj(t));
     }
     Json::Obj(m).to_string()

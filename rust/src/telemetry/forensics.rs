@@ -1,0 +1,405 @@
+//! Aggregation forensics: what the robust rules *saw* and *decided*,
+//! round by round, folded into per-worker rolling suspicion statistics.
+//!
+//! The paper's central failure mode — compression noise eroding
+//! Byzantine robustness until the aggregator starts admitting faulty
+//! contributions — is invisible in a loss curve. This module makes it
+//! visible: every rule reports which workers it trusted (Krum scores
+//! and selected sets, NNM neighbor sets, CWTM per-worker trim-inclusion
+//! counts, GeoMed Weiszfeld convergence) plus each worker's median
+//! pairwise distance read off the already-maintained geometry, and the
+//! [`SuspicionTracker`] folds those observations into per-worker
+//! *suspicion scores* in `[0, 1]` — so an alie/ipm attack shows up as a
+//! suspicion trace over the Byzantine slots, not just a diverging loss.
+//!
+//! Like everything in [`telemetry`][crate::telemetry], this is a
+//! **strict observer**: collection is off unless the trainer arms it
+//! (`config: forensics`), the rules only ever *report* (never branch
+//! on) forensic state, and no forensic value enters the wire
+//! fingerprint, the wire, or any aggregation decision.
+//!
+//! ## Collection mechanics
+//!
+//! Aggregation runs synchronously on the trainer thread, so the
+//! collector is a `thread_local` cell: the trainer [`arm`]s it before
+//! `algorithm.round(..)`, the rules call the `note_*` free functions
+//! (each a no-op when disarmed — one thread-local read), and the
+//! trainer [`disarm`]s afterwards, harvesting the round's
+//! [`RoundForensics`].
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+use crate::aggregators::geometry::Geometry;
+use crate::util::json::Json;
+
+/// Everything the rules reported during one armed aggregation call.
+/// Fields are `None`/empty when the active rule has no such concept.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RoundForensics {
+    /// Krum/Multi-Krum per-worker scores (sum of the n−f−2 smallest
+    /// squared distances; lower = more central).
+    pub scores: Option<Vec<f64>>,
+    /// The worker indices a selection rule averaged (Krum: one,
+    /// Multi-Krum: m = n−f).
+    pub selected: Option<Vec<usize>>,
+    /// NNM: per output row, the sorted neighbor set it was mixed from.
+    pub neighbors: Option<Vec<Vec<u32>>>,
+    /// CWTM: per-worker count of coordinates where the worker's value
+    /// survived trimming, plus the column total.
+    pub trim_inclusion: Option<(Vec<u64>, u64)>,
+    /// GeoMed: `(iterations, final squared coordinate-move residual)`.
+    pub weiszfeld: Option<(u32, f64)>,
+    /// Per-worker median squared pairwise distance to the other
+    /// workers, read off the maintained geometry.
+    pub median_dist: Option<Vec<f64>>,
+}
+
+thread_local! {
+    static COLLECTOR: RefCell<Option<RoundForensics>> =
+        const { RefCell::new(None) };
+}
+
+/// Start collecting for one aggregation call (trainer-side).
+pub fn arm() {
+    COLLECTOR.with(|c| *c.borrow_mut() = Some(RoundForensics::default()));
+}
+
+/// Stop collecting and harvest whatever the rules reported. Returns
+/// `None` if [`arm`] was never called on this thread.
+pub fn disarm() -> Option<RoundForensics> {
+    COLLECTOR.with(|c| c.borrow_mut().take())
+}
+
+/// Whether a collector is armed on this thread. Rules use this to skip
+/// *building* forensic values (e.g. CWTM's extra inclusion pass) — the
+/// `note_*` functions already no-op when disarmed.
+pub fn armed() -> bool {
+    COLLECTOR.with(|c| c.borrow().is_some())
+}
+
+fn with_armed<F: FnOnce(&mut RoundForensics)>(f: F) {
+    COLLECTOR.with(|c| {
+        if let Some(rf) = c.borrow_mut().as_mut() {
+            f(rf);
+        }
+    });
+}
+
+/// Krum/Multi-Krum per-worker scores.
+pub fn note_scores(scores: &[f64]) {
+    with_armed(|rf| rf.scores = Some(scores.to_vec()));
+}
+
+/// The selected set a rule averaged.
+pub fn note_selected(selected: &[usize]) {
+    with_armed(|rf| rf.selected = Some(selected.to_vec()));
+}
+
+/// One NNM output row's sorted neighbor set. Rows arrive in order;
+/// out-of-order arming mid-rule is impossible (arm/disarm bracket the
+/// whole aggregation call).
+pub fn note_neighbors(row: usize, set: &[u32]) {
+    with_armed(|rf| {
+        let rows = rf.neighbors.get_or_insert_with(Vec::new);
+        if rows.len() <= row {
+            rows.resize(row + 1, Vec::new());
+        }
+        rows[row] = set.to_vec();
+    });
+}
+
+/// CWTM per-worker trim-inclusion counts over `cols` coordinates.
+pub fn note_trim_inclusion(counts: Vec<u64>, cols: u64) {
+    with_armed(|rf| {
+        match &mut rf.trim_inclusion {
+            // block-path rules report per masked block — accumulate
+            Some((acc, total)) => {
+                for (a, c) in acc.iter_mut().zip(&counts) {
+                    *a += *c;
+                }
+                *total += cols;
+            }
+            slot => *slot = Some((counts, cols)),
+        }
+    });
+}
+
+/// GeoMed Weiszfeld convergence: iteration count + final residual.
+pub fn note_weiszfeld(iters: u32, residual: f64) {
+    with_armed(|rf| rf.weiszfeld = Some((iters, residual)));
+}
+
+/// Per-worker median squared pairwise distance off the geometry
+/// matrix (near-free: the matrix is already maintained). First write
+/// wins within a round: under `nnm+<rule>` the outer NNM reports the
+/// raw pre-mix distances before the inner rule sees the (deliberately
+/// homogenized) mixed rows.
+pub fn note_pairwise(geo: &Geometry) {
+    if !armed() || COLLECTOR.with(|c| {
+        c.borrow().as_ref().is_some_and(|rf| rf.median_dist.is_some())
+    }) {
+        return;
+    }
+    let n = geo.n();
+    let mut med = Vec::with_capacity(n);
+    let mut row = Vec::with_capacity(n.saturating_sub(1));
+    for i in 0..n {
+        row.clear();
+        for j in 0..n {
+            if j != i {
+                row.push(geo.dist_sq(i, j));
+            }
+        }
+        med.push(median_in_place(&mut row));
+    }
+    with_armed(move |rf| rf.median_dist = Some(med));
+}
+
+fn median_in_place(v: &mut [f64]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.sort_by(|a, b| a.total_cmp(b));
+    let m = v.len() / 2;
+    if v.len() % 2 == 1 {
+        v[m]
+    } else {
+        0.5 * (v[m - 1] + v[m])
+    }
+}
+
+// ------------------------------------------------------------- suspicion
+
+/// Per-slot rolling accumulators behind the suspicion summary.
+#[derive(Clone, Debug, Default)]
+struct SlotStats {
+    /// Sum of per-round selection fractions (selected sets / NNM
+    /// neighbor-set membership) and the rounds contributing.
+    sel_sum: f64,
+    sel_rounds: u64,
+    /// Sum of per-round trim-inclusion fractions and rounds.
+    incl_sum: f64,
+    incl_rounds: u64,
+    /// Sum of normalized median-distance ranks (0 = most central,
+    /// 1 = most outlying) and rounds.
+    rank_sum: f64,
+    rank_rounds: u64,
+}
+
+/// One worker's rolled-up suspicion statistics. Components are `None`
+/// when the active rule never produced that observation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerSuspicion {
+    pub slot: usize,
+    /// Fraction of observed rounds the worker was selected / appeared
+    /// in neighbor sets.
+    pub selection_frequency: Option<f64>,
+    /// Mean fraction of coordinates where the worker survived
+    /// trimming.
+    pub trim_inclusion: Option<f64>,
+    /// Mean normalized median-pairwise-distance rank (1 = farthest
+    /// from the cohort).
+    pub median_dist_rank: Option<f64>,
+    /// Mean of the available inverted components, in `[0, 1]`;
+    /// higher = more suspicious.
+    pub suspicion: f64,
+}
+
+impl WorkerSuspicion {
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map_or(Json::Null, Json::Num);
+        let mut o = BTreeMap::new();
+        o.insert("slot".into(), Json::Num(self.slot as f64));
+        o.insert(
+            "selection_frequency".into(),
+            opt(self.selection_frequency),
+        );
+        o.insert("trim_inclusion".into(), opt(self.trim_inclusion));
+        o.insert("median_dist_rank".into(), opt(self.median_dist_rank));
+        o.insert("suspicion".into(), Json::Num(self.suspicion));
+        Json::Obj(o)
+    }
+}
+
+/// Folds each round's [`RoundForensics`] into per-worker rolling
+/// suspicion statistics. Owned by the trainer; purely observational.
+#[derive(Clone, Debug, Default)]
+pub struct SuspicionTracker {
+    slots: Vec<SlotStats>,
+    rounds: u64,
+}
+
+impl SuspicionTracker {
+    /// Rounds observed so far.
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    /// Fold one round's forensics over `n` gradient slots.
+    pub fn observe(&mut self, rf: &RoundForensics, n: usize) {
+        if self.slots.len() < n {
+            self.slots.resize_with(n, SlotStats::default);
+        }
+        self.rounds += 1;
+        if let Some(sel) = &rf.selected {
+            for (i, s) in self.slots.iter_mut().enumerate().take(n) {
+                s.sel_sum += if sel.contains(&i) { 1.0 } else { 0.0 };
+                s.sel_rounds += 1;
+            }
+        } else if let Some(rows) = &rf.neighbors {
+            if !rows.is_empty() {
+                for (i, s) in self.slots.iter_mut().enumerate().take(n) {
+                    let hits = rows
+                        .iter()
+                        .filter(|set| set.binary_search(&(i as u32)).is_ok())
+                        .count();
+                    s.sel_sum += hits as f64 / rows.len() as f64;
+                    s.sel_rounds += 1;
+                }
+            }
+        }
+        if let Some((counts, cols)) = &rf.trim_inclusion {
+            if *cols > 0 {
+                for (s, &c) in self.slots.iter_mut().zip(counts).take(n) {
+                    s.incl_sum += c as f64 / *cols as f64;
+                    s.incl_rounds += 1;
+                }
+            }
+        }
+        if let Some(dist) = &rf.median_dist {
+            if dist.len() == n && n > 1 {
+                let mut order: Vec<usize> = (0..n).collect();
+                order.sort_by(|&a, &b| {
+                    dist[a].total_cmp(&dist[b]).then(a.cmp(&b))
+                });
+                for (rank, &slot) in order.iter().enumerate() {
+                    let s = &mut self.slots[slot];
+                    s.rank_sum += rank as f64 / (n - 1) as f64;
+                    s.rank_rounds += 1;
+                }
+            }
+        }
+    }
+
+    /// The rolled-up per-worker summary (empty before any round).
+    pub fn summary(&self) -> Vec<WorkerSuspicion> {
+        self.slots
+            .iter()
+            .enumerate()
+            .map(|(slot, s)| {
+                let sel = (s.sel_rounds > 0)
+                    .then(|| s.sel_sum / s.sel_rounds as f64);
+                let incl = (s.incl_rounds > 0)
+                    .then(|| s.incl_sum / s.incl_rounds as f64);
+                let rank = (s.rank_rounds > 0)
+                    .then(|| s.rank_sum / s.rank_rounds as f64);
+                let mut num = 0.0f64;
+                let mut den = 0u32;
+                if let Some(v) = sel {
+                    num += 1.0 - v;
+                    den += 1;
+                }
+                if let Some(v) = incl {
+                    num += 1.0 - v;
+                    den += 1;
+                }
+                if let Some(v) = rank {
+                    num += v;
+                    den += 1;
+                }
+                WorkerSuspicion {
+                    slot,
+                    selection_frequency: sel,
+                    trim_inclusion: incl,
+                    median_dist_rank: rank,
+                    suspicion: if den == 0 {
+                        0.0
+                    } else {
+                        num / den as f64
+                    },
+                }
+            })
+            .collect()
+    }
+
+    /// Just the suspicion scores, for the per-round journal event and
+    /// the status snapshot.
+    pub fn scores(&self) -> Vec<f64> {
+        self.summary().iter().map(|w| w.suspicion).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_notes_are_noops_and_armed_notes_collect() {
+        assert!(!armed());
+        note_scores(&[1.0, 2.0]);
+        assert!(disarm().is_none());
+        arm();
+        assert!(armed());
+        note_scores(&[1.0, 2.0, 3.0]);
+        note_selected(&[0, 2]);
+        note_weiszfeld(7, 1e-12);
+        note_trim_inclusion(vec![4, 0], 4);
+        note_trim_inclusion(vec![2, 2], 4); // block path accumulates
+        let rf = disarm().unwrap();
+        assert!(!armed());
+        assert_eq!(rf.scores.as_deref(), Some(&[1.0, 2.0, 3.0][..]));
+        assert_eq!(rf.selected.as_deref(), Some(&[0, 2][..]));
+        assert_eq!(rf.weiszfeld, Some((7, 1e-12)));
+        assert_eq!(rf.trim_inclusion, Some((vec![6, 2], 8)));
+    }
+
+    #[test]
+    fn neighbor_rows_land_by_index() {
+        arm();
+        note_neighbors(1, &[0, 1]);
+        note_neighbors(0, &[1, 2]);
+        let rf = disarm().unwrap();
+        assert_eq!(
+            rf.neighbors,
+            Some(vec![vec![1, 2], vec![0, 1]])
+        );
+    }
+
+    #[test]
+    fn tracker_ranks_an_excluded_outlier_most_suspicious() {
+        let mut t = SuspicionTracker::default();
+        for _ in 0..4 {
+            let rf = RoundForensics {
+                selected: Some(vec![0, 1]),
+                trim_inclusion: Some((vec![10, 9, 1], 10)),
+                median_dist: Some(vec![1.0, 1.5, 50.0]),
+                ..Default::default()
+            };
+            t.observe(&rf, 3);
+        }
+        assert_eq!(t.rounds(), 4);
+        let sum = t.summary();
+        assert_eq!(sum.len(), 3);
+        assert_eq!(sum[0].selection_frequency, Some(1.0));
+        assert_eq!(sum[2].selection_frequency, Some(0.0));
+        assert_eq!(sum[2].median_dist_rank, Some(1.0));
+        let s = t.scores();
+        assert!(s[2] > s[0] && s[2] > s[1], "scores: {s:?}");
+        assert!(s.iter().all(|v| (0.0..=1.0).contains(v)));
+    }
+
+    #[test]
+    fn neighbor_membership_feeds_selection_frequency() {
+        let mut t = SuspicionTracker::default();
+        let rf = RoundForensics {
+            neighbors: Some(vec![vec![0, 1], vec![0, 1], vec![0, 2]]),
+            ..Default::default()
+        };
+        t.observe(&rf, 3);
+        let sum = t.summary();
+        assert_eq!(sum[0].selection_frequency, Some(1.0));
+        assert!((sum[1].selection_frequency.unwrap() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((sum[2].selection_frequency.unwrap() - 1.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -42,12 +42,13 @@
 //! `BENCH_*.json` emission without perturbing any byte-for-byte report
 //! comparison (they are serialized only when tracing is on).
 
+pub mod forensics;
 pub mod status;
 
 use std::collections::{BTreeMap, VecDeque};
 use std::fs::File;
 use std::io::{self, BufWriter, Write};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, Once, OnceLock, Weak};
 use std::time::{Duration, Instant};
 
@@ -97,6 +98,39 @@ pub enum Event {
     /// fingerprint mismatch) — the satellite bugfix: previously this
     /// was a bare eprintln and the peer vanished without a trace.
     RendezvousReject { peer: String, reason: String },
+    /// What the robust aggregation rule decided this round
+    /// ([`forensics`]). Fields the active rule has no concept of stay
+    /// at their empty/zero defaults so every line carries the same
+    /// keys (`scripts/check_trace.py` validates key sets per event).
+    AggForensics {
+        round: u64,
+        /// Selected worker set (Krum/Multi-Krum; empty otherwise).
+        selected: Vec<u32>,
+        /// NNM output rows that reported a neighbor set (0 otherwise).
+        neighbor_rows: u64,
+        /// GeoMed Weiszfeld iterations (0 for other rules).
+        weiszfeld_iters: u64,
+        /// GeoMed final squared residual (0 for other rules).
+        weiszfeld_residual: f64,
+        /// CWTM coordinates trimmed over (0 for other rules).
+        trim_cols: u64,
+    },
+    /// The rolling per-worker suspicion scores after `round`
+    /// ([`forensics::SuspicionTracker`]), rounded to 4 decimals.
+    SuspicionSnapshot { round: u64, suspicion: Vec<f64> },
+    /// One worker-side round: time blocked waiting for the broadcast,
+    /// computing the gradient, and shipping the uplink reply.
+    WorkerRound {
+        round: u64,
+        wait_us: u64,
+        compute_us: u64,
+        reply_us: u64,
+    },
+    /// A worker estimated its clock offset against the coordinator's
+    /// journal clock (`GET /clock` on the status listener) and
+    /// realigned its journal timestamps. `rtt_us` is the probe
+    /// round-trip of the winning (minimum-RTT) sample.
+    ClockSync { offset_us: i64, rtt_us: u64 },
 }
 
 impl Event {
@@ -111,6 +145,10 @@ impl Event {
             Event::RendezvousAdmit { .. } => "rendezvous_admit",
             Event::RendezvousLeave { .. } => "rendezvous_leave",
             Event::RendezvousReject { .. } => "rendezvous_reject",
+            Event::AggForensics { .. } => "agg_forensics",
+            Event::SuspicionSnapshot { .. } => "suspicion_snapshot",
+            Event::WorkerRound { .. } => "worker_round",
+            Event::ClockSync { .. } => "clock_sync",
         }
     }
 
@@ -154,6 +192,67 @@ impl Event {
                 o.insert("peer".into(), Json::Str(peer.clone()));
                 o.insert("reason".into(), Json::Str(reason.clone()));
             }
+            Event::AggForensics {
+                round,
+                selected,
+                neighbor_rows,
+                weiszfeld_iters,
+                weiszfeld_residual,
+                trim_cols,
+            } => {
+                o.insert("round".into(), Json::Num(*round as f64));
+                o.insert(
+                    "selected".into(),
+                    Json::Arr(
+                        selected
+                            .iter()
+                            .map(|&w| Json::Num(w as f64))
+                            .collect(),
+                    ),
+                );
+                o.insert(
+                    "neighbor_rows".into(),
+                    Json::Num(*neighbor_rows as f64),
+                );
+                o.insert(
+                    "weiszfeld_iters".into(),
+                    Json::Num(*weiszfeld_iters as f64),
+                );
+                o.insert(
+                    "weiszfeld_residual".into(),
+                    Json::Num(*weiszfeld_residual),
+                );
+                o.insert("trim_cols".into(), Json::Num(*trim_cols as f64));
+            }
+            Event::SuspicionSnapshot { round, suspicion } => {
+                o.insert("round".into(), Json::Num(*round as f64));
+                o.insert(
+                    "suspicion".into(),
+                    Json::Arr(
+                        suspicion
+                            .iter()
+                            .map(|&v| {
+                                Json::Num((v * 1e4).round() / 1e4)
+                            })
+                            .collect(),
+                    ),
+                );
+            }
+            Event::WorkerRound {
+                round,
+                wait_us,
+                compute_us,
+                reply_us,
+            } => {
+                o.insert("round".into(), Json::Num(*round as f64));
+                o.insert("wait_us".into(), Json::Num(*wait_us as f64));
+                o.insert("compute_us".into(), Json::Num(*compute_us as f64));
+                o.insert("reply_us".into(), Json::Num(*reply_us as f64));
+            }
+            Event::ClockSync { offset_us, rtt_us } => {
+                o.insert("offset_us".into(), Json::Num(*offset_us as f64));
+                o.insert("rtt_us".into(), Json::Num(*rtt_us as f64));
+            }
         }
         Json::Obj(o).to_string()
     }
@@ -161,12 +260,28 @@ impl Event {
 
 // ----------------------------------------------------------------- handle
 
+/// A rendered-line observer installed with [`Telemetry::set_event_tap`]
+/// (the status endpoint's SSE stream).
+pub type EventTap = Arc<dyn Fn(&str) + Send + Sync>;
+
 /// Journal + flight-recorder state behind an enabled handle.
 struct Inner {
     sink: Mutex<Sink>,
     events: AtomicU64,
     t0: Instant,
     path: String,
+    /// Coordinator-alignment offset added to every local reading
+    /// before stamping `ts_us` (0 on the coordinator; workers install
+    /// their `/clock`-probe estimate). Re-estimates may move it.
+    offset_us: AtomicI64,
+    /// Test-only injected skew simulating a divergent process clock;
+    /// part of the *local* reading, so alignment must cancel it.
+    skew_us: AtomicI64,
+    /// Monotone clamp: an offset re-estimate must never move this
+    /// journal's timestamps backwards.
+    last_ts: AtomicU64,
+    /// Optional rendered-line observer (SSE fan-out).
+    tap: Mutex<Option<EventTap>>,
 }
 
 struct Sink {
@@ -205,6 +320,10 @@ impl Telemetry {
                 events: AtomicU64::new(0),
                 t0: Instant::now(),
                 path: path.to_string(),
+                offset_us: AtomicI64::new(0),
+                skew_us: AtomicI64::new(0),
+                last_ts: AtomicU64::new(0),
+                tap: Mutex::new(None),
             })),
         })
     }
@@ -270,6 +389,48 @@ impl Telemetry {
         }
     }
 
+    /// Microseconds on this handle's local journal clock (0 when
+    /// disabled). Clock probes timestamp with this — never with the
+    /// aligned stamp, which would feed the offset back into itself.
+    pub fn local_now_us(&self) -> u64 {
+        self.inner.as_ref().map_or(0, |i| i.local_now_us())
+    }
+
+    /// Install the coordinator-alignment offset added to every
+    /// subsequent `ts_us` stamp (workers, after a `/clock` probe).
+    pub fn set_clock_offset_us(&self, offset: i64) {
+        if let Some(inner) = &self.inner {
+            inner.offset_us.store(offset, Ordering::Relaxed);
+        }
+    }
+
+    /// The currently installed alignment offset (0 when disabled or
+    /// never aligned).
+    pub fn clock_offset_us(&self) -> i64 {
+        self.inner
+            .as_ref()
+            .map_or(0, |i| i.offset_us.load(Ordering::Relaxed))
+    }
+
+    /// Test hook: skew this handle's *local* clock by `skew`
+    /// microseconds, simulating a process whose monotonic origin
+    /// diverges from the coordinator's. Alignment must cancel it —
+    /// which is exactly what the drift-bound test pins.
+    pub fn inject_clock_skew_us(&self, skew: i64) {
+        if let Some(inner) = &self.inner {
+            inner.skew_us.store(skew, Ordering::Relaxed);
+        }
+    }
+
+    /// Install (or clear) the rendered-line observer every journaled
+    /// event is forwarded to after being written — the status
+    /// endpoint's `/events` stream. Called outside the sink lock.
+    pub fn set_event_tap(&self, tap: Option<EventTap>) {
+        if let Some(inner) = &self.inner {
+            *lock(&inner.tap) = tap;
+        }
+    }
+
     /// Register this handle with the process-wide panic hook: on panic,
     /// every live registered recorder dumps its ring before the default
     /// hook runs. The hook itself is installed once per process;
@@ -312,8 +473,24 @@ fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
 }
 
 impl Inner {
+    /// Microseconds on this process's *local* journal clock (including
+    /// any injected test skew) — what a clock probe timestamps with.
+    fn local_now_us(&self) -> u64 {
+        let raw = self.t0.elapsed().as_micros() as i64
+            + self.skew_us.load(Ordering::Relaxed);
+        raw.max(0) as u64
+    }
+
     fn record(&self, ev: Event) {
-        let ts_us = self.t0.elapsed().as_micros() as u64;
+        let aligned = self.local_now_us() as i64
+            + self.offset_us.load(Ordering::Relaxed);
+        let mut ts_us = aligned.max(0) as u64;
+        // per-journal monotone clamp: offset re-estimates shift future
+        // stamps but never order this file's lines backwards
+        let prev = self.last_ts.fetch_max(ts_us, Ordering::Relaxed);
+        if prev > ts_us {
+            ts_us = prev;
+        }
         let line = ev.render(ts_us);
         self.events.fetch_add(1, Ordering::Relaxed);
         let mut s = lock(&self.sink);
@@ -326,6 +503,11 @@ impl Inner {
         // check_trace.py validates
         let _ = writeln!(s.out, "{line}");
         let _ = s.out.flush();
+        drop(s);
+        let tap = lock(&self.tap).clone();
+        if let Some(tap) = tap {
+            tap(&line);
+        }
     }
 }
 
@@ -385,6 +567,17 @@ impl Histogram {
 
     pub fn buckets(&self) -> &[u64; HISTOGRAM_BUCKETS] {
         &self.buckets
+    }
+
+    /// Fold `other` into `self` bucket-by-bucket. Merging is
+    /// commutative and associative (plain counter addition), so
+    /// per-worker histograms can be combined in any order — the
+    /// property test in `tests/test_properties.rs` pins this.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b = b.saturating_add(*o);
+        }
+        self.count = self.count.saturating_add(other.count);
     }
 
     /// Lower edge (µs) of the bucket holding quantile `q` ∈ [0, 1] —
@@ -491,6 +684,157 @@ mod tests {
         assert_eq!(h.quantile_floor_us(0.8), 64); // rank 4 → bucket 6
         assert_eq!(h.quantile_floor_us(1.0), 4096); // rank 5 → bucket 12
         assert_eq!(Histogram::new().quantile_floor_us(0.5), 0);
+    }
+
+    #[test]
+    fn histogram_edges_zero_and_max_and_one_sample() {
+        let mut h = Histogram::new();
+        h.record_us(0);
+        assert_eq!(h.count(), 1);
+        // a 1-sample histogram answers every quantile with its bucket
+        for q in [0.0, 0.25, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile_floor_us(q), 0);
+        }
+        let mut top = Histogram::new();
+        top.record_us(u64::MAX);
+        assert_eq!(top.buckets()[HISTOGRAM_BUCKETS - 1], 1);
+        assert_eq!(
+            top.quantile_floor_us(0.5),
+            bucket_floor_us(HISTOGRAM_BUCKETS - 1)
+        );
+        // exact power-of-two values sit on their own bucket's floor
+        let mut p = Histogram::new();
+        for i in 1..HISTOGRAM_BUCKETS {
+            p.record_us(bucket_floor_us(i));
+        }
+        for i in 1..HISTOGRAM_BUCKETS {
+            assert_eq!(p.buckets()[i], 1);
+        }
+        // out-of-range quantiles clamp instead of panicking
+        assert_eq!(p.quantile_floor_us(-1.0), bucket_floor_us(1));
+        assert_eq!(
+            p.quantile_floor_us(2.0),
+            bucket_floor_us(HISTOGRAM_BUCKETS - 1)
+        );
+    }
+
+    #[test]
+    fn histogram_merge_adds_counts_and_saturates() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for v in [1u64, 3, 100] {
+            a.record_us(v);
+        }
+        for v in [3u64, 5_000] {
+            b.record_us(v);
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged.count(), 5);
+        // merging preserves the combined quantile picture exactly
+        let mut direct = Histogram::new();
+        for v in [1u64, 3, 100, 3, 5_000] {
+            direct.record_us(v);
+        }
+        assert_eq!(merged, direct);
+        // merging an empty histogram is the identity
+        let mut id = a.clone();
+        id.merge(&Histogram::new());
+        assert_eq!(id, a);
+        // counter overflow saturates instead of wrapping
+        let mut sat = Histogram {
+            buckets: [u64::MAX; HISTOGRAM_BUCKETS],
+            count: u64::MAX,
+        };
+        sat.merge(&a);
+        assert_eq!(sat.count(), u64::MAX);
+        assert_eq!(sat.buckets()[0], u64::MAX);
+    }
+
+    #[test]
+    fn phase_stats_merge_by_field_round_trips() {
+        let mut x = PhaseStats::default();
+        x.broadcast.record_us(1);
+        x.aggregate.record_us(1024);
+        let mut y = PhaseStats::default();
+        y.broadcast.record_us(2);
+        y.apply.record_us(0);
+        let mut m = x.clone();
+        m.broadcast.merge(&y.broadcast);
+        m.collect.merge(&y.collect);
+        m.aggregate.merge(&y.aggregate);
+        m.apply.merge(&y.apply);
+        assert_eq!(m.broadcast.count(), 2);
+        assert_eq!(m.collect.count(), 0);
+        assert_eq!(m.aggregate.count(), 1);
+        assert_eq!(m.apply.count(), 1);
+    }
+
+    #[test]
+    fn clock_offset_and_skew_shift_timestamps_with_monotone_clamp() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!(
+            "rosdhb_trace_clock_{}.jsonl",
+            std::process::id()
+        ));
+        let path_s = path.to_str().unwrap().to_string();
+        let tel = Telemetry::to_path(&path_s).unwrap();
+        tel.inject_clock_skew_us(5_000_000);
+        assert!(tel.local_now_us() >= 5_000_000);
+        tel.emit(|| Event::RelayResync { worker: 0 });
+        // aligning by the negated skew cancels it…
+        tel.set_clock_offset_us(-5_000_000);
+        assert_eq!(tel.clock_offset_us(), -5_000_000);
+        tel.emit(|| Event::RelayResync { worker: 1 });
+        tel.flush();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let ts: Vec<u64> = body
+            .lines()
+            .map(|l| {
+                Json::parse(l)
+                    .unwrap()
+                    .get("ts_us")
+                    .and_then(Json::as_f64)
+                    .unwrap() as u64
+            })
+            .collect();
+        // …but the journal's ordering survives: the clamp holds the
+        // second stamp at or above the first even though the aligned
+        // clock jumped ~5 s backwards
+        assert!(ts[0] >= 5_000_000);
+        assert!(ts[1] >= ts[0]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn event_tap_sees_every_rendered_line() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!(
+            "rosdhb_trace_tap_{}.jsonl",
+            std::process::id()
+        ));
+        let path_s = path.to_str().unwrap().to_string();
+        let tel = Telemetry::to_path(&path_s).unwrap();
+        let seen = Arc::new(Mutex::new(Vec::<String>::new()));
+        let sink = Arc::clone(&seen);
+        tel.set_event_tap(Some(Arc::new(move |line: &str| {
+            sink.lock().unwrap().push(line.to_string());
+        })));
+        tel.emit(|| Event::ClockSync {
+            offset_us: -123,
+            rtt_us: 40,
+        });
+        tel.set_event_tap(None);
+        tel.emit(|| Event::RelayResync { worker: 2 });
+        let got = seen.lock().unwrap();
+        assert_eq!(got.len(), 1);
+        let j = Json::parse(&got[0]).unwrap();
+        assert_eq!(
+            j.get("event").and_then(Json::as_str),
+            Some("clock_sync")
+        );
+        assert_eq!(j.get("offset_us").and_then(Json::as_f64), Some(-123.0));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

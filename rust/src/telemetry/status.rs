@@ -1,38 +1,61 @@
 //! The live coordinator status endpoint (`serve --status_addr <addr>`).
 //!
-//! A [`StatusServer`] binds one read-only TCP listener and answers
-//! *every* connection with a single JSON snapshot of the run — epoch
-//! and round, per-slot membership with the RTT/jitter estimates of
-//! [`transport::monitor`][crate::transport::monitor], cumulative byte
-//! meters (both the modeled [`ByteMeter`][crate::transport::ByteMeter]
-//! view and the measured
-//! [`NetStats`][crate::transport::net::NetStats]), resync/eviction
-//! counts, and the latest Lyapunov snapshot when the diagnostic is on.
-//! The reply is a minimal `HTTP/1.1 200` with `Content-Length`, so
-//! `curl <addr>` works, as does a bare `nc`.
+//! A [`StatusServer`] binds one read-only TCP listener and routes a
+//! handful of observer paths:
 //!
-//! The endpoint is **observer-only and one-way**: the request body is
-//! ignored, nothing here can mutate the run, and the listener lives on
-//! its own thread driven by [`transport::poller`][crate::transport::poller]
-//! — the trainer only
+//! * `GET /` — one JSON snapshot of the run: epoch and round, per-slot
+//!   membership with the RTT/jitter estimates of
+//!   [`transport::monitor`][crate::transport::monitor], cumulative
+//!   byte meters (both the modeled
+//!   [`ByteMeter`][crate::transport::ByteMeter] view and the measured
+//!   [`NetStats`][crate::transport::net::NetStats]), resync/eviction
+//!   counts, geometry rebuild counters, per-worker suspicion scores
+//!   ([`telemetry::forensics`][crate::telemetry::forensics]), and the
+//!   worker-pushed side-channel stats.
+//! * `GET /history` — the bounded in-memory ring of the last *H*
+//!   per-round snapshot rows (`config: status_history`).
+//! * `GET /events` — an SSE stream of journal events as they are
+//!   recorded (via [`Telemetry::set_event_tap`][crate::telemetry::Telemetry::set_event_tap]),
+//!   each line as one `data:` frame.
+//! * `GET /clock` — the coordinator's journal-clock reading, the anchor
+//!   workers probe to align their own journal timestamps.
+//! * `POST /worker` — the **side channel**: workers push their phase
+//!   histograms, gap-monitor view and clock offset here, *never* over
+//!   the data sockets — the tracing-invariance oracle on raw
+//!   data-socket bytes must keep holding with every telemetry feature
+//!   live.
+//!
+//! Anything else gets a real `404`. Every non-streaming response is
+//! written through one choke point that computes `Content-Length` from
+//! the body it writes, so `curl <addr>` works, as does a bare `nc`
+//! (an unparsable request still receives the snapshot).
+//!
+//! The endpoint is **observer-only**: nothing arriving here can mutate
+//! the run — worker pushes land in a display-only map — and the
+//! listener lives on its own thread driven by
+//! [`transport::poller`][crate::transport::poller]; the trainer only
 //! ever *pushes* a fresh [`StatusState`] into the shared cell at the
 //! end of each round, so the round loop never blocks on a slow (or
-//! malicious) status client.
+//! malicious) status client. SSE clients get a dedicated thread each,
+//! keeping the accept loop responsive.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::transport::monitor::SlotHealth;
 use crate::transport::net::NetStats;
 use crate::transport::poller::Poller;
 use crate::util::json::Json;
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
+
+/// Default depth of the `/history` ring (`config: status_history`).
+pub const DEFAULT_HISTORY_DEPTH: usize = 64;
 
 /// The snapshot served to each connection. The trainer overwrites it
 /// once per round; serving renders whatever was last pushed.
@@ -72,6 +95,16 @@ pub struct StatusState {
     pub lyapunov: Option<(f64, f64)>,
     /// Events journaled so far (0 when tracing is off).
     pub trace_events: u64,
+    /// Pairwise-geometry maintenance counters `(rebuilds,
+    /// incrementals)` — `None` for rules that keep no geometry.
+    pub geometry: Option<(u64, u64)>,
+    /// Rolling per-worker suspicion scores (`config: forensics`;
+    /// empty when off).
+    pub suspicion: Vec<f64>,
+    /// Worker-pushed side-channel stats (`POST /worker`), keyed by
+    /// worker id — phase histograms, gap-monitor view, clock offset.
+    /// Display-only: nothing in the run reads this back.
+    pub workers: BTreeMap<u64, Json>,
 }
 
 impl StatusState {
@@ -153,18 +186,76 @@ impl StatusState {
             },
         );
         o.insert("trace_events".into(), num(self.trace_events));
+        o.insert(
+            "geometry".into(),
+            match self.geometry {
+                None => Json::Null,
+                Some((rebuilds, incrementals)) => {
+                    let mut go = BTreeMap::new();
+                    go.insert("rebuilds".into(), num(rebuilds));
+                    go.insert("incrementals".into(), num(incrementals));
+                    Json::Obj(go)
+                }
+            },
+        );
+        o.insert(
+            "suspicion".into(),
+            Json::Arr(
+                self.suspicion
+                    .iter()
+                    .map(|&v| Json::Num((v * 1e4).round() / 1e4))
+                    .collect(),
+            ),
+        );
+        o.insert(
+            "workers".into(),
+            Json::Obj(
+                self.workers
+                    .iter()
+                    .map(|(id, v)| (id.to_string(), v.clone()))
+                    .collect(),
+            ),
+        );
         Json::Obj(o).to_string()
     }
 }
+
+/// Bounded ring of rendered per-round snapshot rows behind `/history`.
+struct HistoryRing {
+    rows: VecDeque<String>,
+    depth: usize,
+}
+
+/// The coordinator-clock reading served by `/clock`.
+type ClockSource = Arc<dyn Fn() -> u64 + Send + Sync>;
 
 /// Shared cell between the trainer (writer) and the listener thread
 /// (reader). Cloning shares the same state.
 #[derive(Clone)]
 pub struct StatusHandle {
     state: Arc<Mutex<StatusState>>,
+    history: Arc<Mutex<HistoryRing>>,
+    subs: Arc<Mutex<Vec<mpsc::Sender<String>>>>,
+    clock: Arc<Mutex<Option<ClockSource>>>,
+    /// Fallback `/clock` origin when no source is installed (untraced
+    /// coordinator with the endpoint on).
+    t0: Arc<Instant>,
 }
 
 impl StatusHandle {
+    fn new() -> Self {
+        StatusHandle {
+            state: Arc::new(Mutex::new(StatusState::default())),
+            history: Arc::new(Mutex::new(HistoryRing {
+                rows: VecDeque::new(),
+                depth: DEFAULT_HISTORY_DEPTH,
+            })),
+            subs: Arc::new(Mutex::new(Vec::new())),
+            clock: Arc::new(Mutex::new(None)),
+            t0: Arc::new(Instant::now()),
+        }
+    }
+
     /// Overwrite fields under the lock (the trainer's per-round push).
     pub fn update<F: FnOnce(&mut StatusState)>(&self, f: F) {
         let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
@@ -178,6 +269,92 @@ impl StatusHandle {
             .unwrap_or_else(|e| e.into_inner())
             .render()
     }
+
+    /// Resize the `/history` ring (`config: status_history`); 0 keeps
+    /// nothing.
+    pub fn set_history_depth(&self, depth: usize) {
+        let mut h = lock(&self.history);
+        h.depth = depth;
+        while h.rows.len() > depth {
+            h.rows.pop_front();
+        }
+    }
+
+    /// Append the *current* snapshot to the history ring — the
+    /// trainer's end-of-round call, right after `update`.
+    pub fn push_history(&self) {
+        let row = self.render();
+        let mut h = lock(&self.history);
+        if h.depth == 0 {
+            return;
+        }
+        if h.rows.len() == h.depth {
+            h.rows.pop_front();
+        }
+        h.rows.push_back(row);
+    }
+
+    /// Render the `/history` reply: ring depth + the retained rows,
+    /// oldest first.
+    pub fn render_history(&self) -> String {
+        let h = lock(&self.history);
+        let mut out = String::from("{\"depth\":");
+        out.push_str(&h.depth.to_string());
+        out.push_str(",\"rows\":[");
+        for (i, row) in h.rows.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(row);
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Rows currently retained (tests).
+    pub fn history_len(&self) -> usize {
+        lock(&self.history).rows.len()
+    }
+
+    /// Fan one rendered journal line out to every live `/events`
+    /// subscriber, pruning the dead. This is the coordinator
+    /// telemetry's event tap.
+    pub fn publish_event(&self, line: &str) {
+        let mut subs = lock(&self.subs);
+        subs.retain(|tx| tx.send(line.to_string()).is_ok());
+    }
+
+    /// Subscribe to the journal-event stream (one SSE connection).
+    fn subscribe(&self) -> mpsc::Receiver<String> {
+        let (tx, rx) = mpsc::channel();
+        lock(&self.subs).push(tx);
+        rx
+    }
+
+    /// Install the `/clock` reading — the coordinator's journal clock
+    /// when tracing is on, so worker offsets align the *journals*.
+    pub fn set_clock_source(&self, src: ClockSource) {
+        *lock(&self.clock) = Some(src);
+    }
+
+    /// The `/clock` reading served to probes.
+    pub fn clock_now_us(&self) -> u64 {
+        match lock(&self.clock).clone() {
+            Some(src) => src(),
+            None => self.t0.elapsed().as_micros() as u64,
+        }
+    }
+
+    /// Record one worker's side-channel push (`POST /worker`).
+    pub fn worker_update(&self, id: u64, stats: Json) {
+        self.update(|s| {
+            s.workers.insert(id, stats);
+        });
+    }
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 /// The bound endpoint: listener thread + shared state. Dropping it
@@ -196,9 +373,7 @@ impl StatusServer {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         let local = listener.local_addr()?;
-        let handle = StatusHandle {
-            state: Arc::new(Mutex::new(StatusState::default())),
-        };
+        let handle = StatusHandle::new();
         let stop = Arc::new(AtomicBool::new(false));
         let mut poller = Poller::new()?;
         poller.register(listener.as_raw_fd(), 0)?;
@@ -217,7 +392,9 @@ impl StatusServer {
                         }
                         loop {
                             match listener.accept() {
-                                Ok((stream, _)) => serve_one(stream, &handle),
+                                Ok((stream, _)) => {
+                                    serve_one(stream, &handle, &stop)
+                                }
                                 Err(e)
                                     if e.kind()
                                         == std::io::ErrorKind::WouldBlock =>
@@ -256,55 +433,223 @@ impl Drop for StatusServer {
     }
 }
 
-/// Answer one connection: swallow whatever request arrived (up to the
-/// header terminator or a short timeout — readiness only ever hints)
-/// and write one snapshot as a minimal HTTP response.
-fn serve_one(mut stream: TcpStream, handle: &StatusHandle) {
+/// The single choke point every non-streaming response goes through —
+/// the `Content-Length` audit: the header is computed from the exact
+/// body bytes written on the line below, so no path can desynchronize
+/// them.
+fn write_http(stream: &mut TcpStream, status: &str, body: &str) {
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len(),
+    );
+    let _ = stream.write_all(response.as_bytes());
+    let _ = stream.flush();
+}
+
+/// Parse `"METHOD /path HTTP/x"` out of a raw request. `None` when the
+/// bytes don't look like HTTP at all (bare `nc`) — those connections
+/// keep receiving the snapshot.
+fn parse_request_line(seen: &[u8]) -> Option<(String, String)> {
+    let head = std::str::from_utf8(seen).ok()?;
+    let line = head.split("\r\n").next()?;
+    let mut parts = line.split_ascii_whitespace();
+    let method = parts.next()?;
+    let path = parts.next()?;
+    let version = parts.next()?;
+    if !version.starts_with("HTTP/") || !path.starts_with('/') {
+        return None;
+    }
+    // strip any query string — routing is by path only
+    let path = path.split('?').next().unwrap_or(path);
+    Some((method.to_ascii_uppercase(), path.to_string()))
+}
+
+/// `Content-Length` of a request whose header block ends at
+/// `header_end` (0 when absent or unparsable).
+fn content_length(seen: &[u8], header_end: usize) -> usize {
+    let head = match std::str::from_utf8(&seen[..header_end]) {
+        Ok(h) => h,
+        Err(_) => return 0,
+    };
+    head.split("\r\n")
+        .filter_map(|l| l.split_once(':'))
+        .find(|(k, _)| k.trim().eq_ignore_ascii_case("content-length"))
+        .and_then(|(_, v)| v.trim().parse().ok())
+        .unwrap_or(0)
+}
+
+/// Answer one connection: read the request (headers plus, for `POST`,
+/// the declared body — readiness only ever hints, so short timeouts
+/// bound every read), route by path, and reply through [`write_http`].
+/// `/events` hands the socket to a dedicated streaming thread so the
+/// accept loop stays responsive.
+fn serve_one(
+    mut stream: TcpStream,
+    handle: &StatusHandle,
+    stop: &Arc<AtomicBool>,
+) {
     let _ = stream.set_nonblocking(false);
     let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
     let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
     let mut buf = [0u8; 1024];
     let mut seen: Vec<u8> = Vec::new();
+    let mut header_end: Option<usize> = None;
+    let mut want_body = 0usize;
     loop {
+        if let Some(he) = header_end {
+            if seen.len() >= he + want_body {
+                break;
+            }
+        }
         match stream.read(&mut buf) {
             Ok(0) => break,
             Ok(n) => {
                 seen.extend_from_slice(&buf[..n]);
-                if seen.windows(4).any(|w| w == b"\r\n\r\n")
-                    || seen.len() > 8192
-                {
+                if header_end.is_none() {
+                    if let Some(pos) =
+                        seen.windows(4).position(|w| w == b"\r\n\r\n")
+                    {
+                        let he = pos + 4;
+                        header_end = Some(he);
+                        // bound a hostile Content-Length: pushes are
+                        // small JSON objects
+                        want_body = content_length(&seen, he).min(65536);
+                    }
+                }
+                if seen.len() > 128 * 1024 {
                     break;
                 }
             }
-            Err(_) => break, // timeout or reset — serve the snapshot anyway
+            Err(_) => break, // timeout or reset — route what arrived
         }
     }
-    let body = handle.render();
-    let response = format!(
-        "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n{}",
-        body.len(),
-        body
-    );
-    let _ = stream.write_all(response.as_bytes());
+    let request = parse_request_line(&seen);
+    match request.as_ref().map(|(m, p)| (m.as_str(), p.as_str())) {
+        // bare `nc` (no parsable request line) keeps getting the
+        // snapshot; parsed-but-unknown paths get a real 404 below
+        None | Some(("GET", "/")) => {
+            write_http(&mut stream, "200 OK", &handle.render());
+        }
+        Some(("GET", "/history")) => {
+            write_http(&mut stream, "200 OK", &handle.render_history());
+        }
+        Some(("GET", "/clock")) => {
+            let body = format!("{{\"ts_us\":{}}}", handle.clock_now_us());
+            write_http(&mut stream, "200 OK", &body);
+        }
+        Some(("GET", "/events")) => {
+            let rx = handle.subscribe();
+            let stop = Arc::clone(stop);
+            // detached: exits on client disconnect or server stop
+            let _ = std::thread::Builder::new()
+                .name("rosdhb-status-sse".into())
+                .spawn(move || stream_events(stream, rx, stop));
+        }
+        Some(("POST", "/worker")) => {
+            let he = header_end.unwrap_or(seen.len());
+            let body = seen
+                .get(he..)
+                .and_then(|b| std::str::from_utf8(b).ok())
+                .unwrap_or("");
+            match Json::parse(body.trim()) {
+                Ok(j) => {
+                    let id = j
+                        .get("worker")
+                        .and_then(Json::as_f64)
+                        .map(|v| v as u64);
+                    match id {
+                        Some(id) => {
+                            handle.worker_update(id, j);
+                            write_http(
+                                &mut stream,
+                                "200 OK",
+                                "{\"ok\":true}",
+                            );
+                        }
+                        None => write_http(
+                            &mut stream,
+                            "400 Bad Request",
+                            "{\"error\":\"missing worker id\"}",
+                        ),
+                    }
+                }
+                Err(_) => write_http(
+                    &mut stream,
+                    "400 Bad Request",
+                    "{\"error\":\"bad json\"}",
+                ),
+            }
+        }
+        Some(_) => {
+            write_http(
+                &mut stream,
+                "404 Not Found",
+                "{\"error\":\"not found\"}",
+            );
+        }
+    }
+}
+
+/// Drive one `/events` SSE client: forward every published journal
+/// line as a `data:` frame until the client hangs up or the server
+/// stops.
+fn stream_events(
+    mut stream: TcpStream,
+    rx: mpsc::Receiver<String>,
+    stop: Arc<AtomicBool>,
+) {
+    let header = "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+                  Cache-Control: no-cache\r\nConnection: close\r\n\r\n";
+    if stream.write_all(header.as_bytes()).is_err() {
+        return;
+    }
     let _ = stream.flush();
+    while !stop.load(Ordering::Relaxed) {
+        match rx.recv_timeout(Duration::from_millis(200)) {
+            Ok(line) => {
+                let frame = format!("data: {line}\n\n");
+                if stream.write_all(frame.as_bytes()).is_err() {
+                    return;
+                }
+                let _ = stream.flush();
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    /// Raw HTTP GET against the endpoint, returning the body.
-    fn http_get(addr: SocketAddr) -> String {
+    /// Raw HTTP request against the endpoint, returning `(head, body)`
+    /// after auditing that `Content-Length` matches the body bytes.
+    fn http_raw(addr: SocketAddr, request: &str) -> (String, String) {
         let mut s = TcpStream::connect(addr).unwrap();
-        s.write_all(b"GET / HTTP/1.0\r\nHost: x\r\n\r\n").unwrap();
+        s.write_all(request.as_bytes()).unwrap();
         let mut out = String::new();
         s.read_to_string(&mut out).unwrap();
         let (head, body) = out
             .split_once("\r\n\r\n")
             .expect("response must carry a header/body split");
+        let cl: usize = head
+            .split("\r\n")
+            .filter_map(|l| l.split_once(':'))
+            .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+            .map(|(_, v)| v.trim().parse().unwrap())
+            .expect("every non-streaming response declares a length");
+        assert_eq!(cl, body.len(), "Content-Length audit failed");
+        (head.to_string(), body.to_string())
+    }
+
+    /// Raw HTTP GET of `/`, returning the body.
+    fn http_get(addr: SocketAddr) -> String {
+        let (head, body) =
+            http_raw(addr, "GET / HTTP/1.0\r\nHost: x\r\n\r\n");
         assert!(head.starts_with("HTTP/1.1 200"), "head: {head}");
-        body.to_string()
+        body
     }
 
     #[test]
@@ -349,5 +694,129 @@ mod tests {
         srv.handle().update(|s| s.round = 4);
         let j2 = Json::parse(&http_get(srv.local_addr())).unwrap();
         assert_eq!(j2.get("round").and_then(Json::as_f64), Some(4.0));
+    }
+
+    #[test]
+    fn unknown_paths_get_a_real_404_and_known_routes_answer() {
+        let srv = StatusServer::bind("127.0.0.1:0").unwrap();
+        let addr = srv.local_addr();
+        let (head, body) =
+            http_raw(addr, "GET /nope HTTP/1.0\r\nHost: x\r\n\r\n");
+        assert!(head.starts_with("HTTP/1.1 404"), "head: {head}");
+        assert!(body.contains("not found"));
+        let (head, _) =
+            http_raw(addr, "DELETE / HTTP/1.0\r\nHost: x\r\n\r\n");
+        assert!(head.starts_with("HTTP/1.1 404"), "head: {head}");
+        // /clock serves a monotone microsecond reading
+        let (head, body) =
+            http_raw(addr, "GET /clock HTTP/1.0\r\nHost: x\r\n\r\n");
+        assert!(head.starts_with("HTTP/1.1 200"), "head: {head}");
+        let t1 = Json::parse(&body)
+            .unwrap()
+            .get("ts_us")
+            .and_then(Json::as_f64)
+            .unwrap();
+        let (_, body) =
+            http_raw(addr, "GET /clock HTTP/1.0\r\nHost: x\r\n\r\n");
+        let t2 = Json::parse(&body)
+            .unwrap()
+            .get("ts_us")
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!(t2 >= t1, "clock went backwards: {t1} → {t2}");
+        // an installed source overrides the fallback origin
+        srv.handle().set_clock_source(Arc::new(|| 42));
+        let (_, body) =
+            http_raw(addr, "GET /clock HTTP/1.0\r\nHost: x\r\n\r\n");
+        assert_eq!(body, "{\"ts_us\":42}");
+    }
+
+    #[test]
+    fn history_ring_is_bounded_and_served_oldest_first() {
+        let srv = StatusServer::bind("127.0.0.1:0").unwrap();
+        let h = srv.handle();
+        h.set_history_depth(3);
+        for r in 1..=5u64 {
+            h.update(|s| s.round = r);
+            h.push_history();
+        }
+        assert_eq!(h.history_len(), 3);
+        let (head, body) = http_raw(
+            srv.local_addr(),
+            "GET /history HTTP/1.0\r\nHost: x\r\n\r\n",
+        );
+        assert!(head.starts_with("HTTP/1.1 200"), "head: {head}");
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("depth").and_then(Json::as_f64), Some(3.0));
+        let rounds: Vec<f64> = match j.get("rows").unwrap() {
+            Json::Arr(rows) => rows
+                .iter()
+                .map(|r| r.get("round").and_then(Json::as_f64).unwrap())
+                .collect(),
+            other => panic!("rows must be an array, got {other:?}"),
+        };
+        assert_eq!(rounds, vec![3.0, 4.0, 5.0]);
+        // shrinking the depth trims the oldest rows
+        h.set_history_depth(1);
+        assert_eq!(h.history_len(), 1);
+    }
+
+    #[test]
+    fn worker_post_lands_in_the_snapshot_and_bad_posts_are_400() {
+        let srv = StatusServer::bind("127.0.0.1:0").unwrap();
+        let addr = srv.local_addr();
+        let payload = "{\"worker\":2,\"round\":7,\"offset_us\":-1500}";
+        let req = format!(
+            "POST /worker HTTP/1.0\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+            payload.len(),
+            payload
+        );
+        let (head, body) = http_raw(addr, &req);
+        assert!(head.starts_with("HTTP/1.1 200"), "head: {head}");
+        assert_eq!(body, "{\"ok\":true}");
+        let snap = Json::parse(&http_get(addr)).unwrap();
+        let w2 = snap.get("workers").unwrap().get("2").unwrap();
+        assert_eq!(w2.get("round").and_then(Json::as_f64), Some(7.0));
+        assert_eq!(
+            w2.get("offset_us").and_then(Json::as_f64),
+            Some(-1500.0)
+        );
+        // a push without a worker id is rejected, not silently dropped
+        let req = "POST /worker HTTP/1.0\r\nHost: x\r\n\
+                   Content-Length: 2\r\n\r\n{}";
+        let (head, _) = http_raw(addr, req);
+        assert!(head.starts_with("HTTP/1.1 400"), "head: {head}");
+    }
+
+    #[test]
+    fn events_stream_forwards_published_lines_as_sse_frames() {
+        let srv = StatusServer::bind("127.0.0.1:0").unwrap();
+        let h = srv.handle();
+        let mut s = TcpStream::connect(srv.local_addr()).unwrap();
+        s.write_all(b"GET /events HTTP/1.0\r\nHost: x\r\n\r\n")
+            .unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        // wait for the stream header so the subscription exists before
+        // publishing
+        let mut buf = [0u8; 4096];
+        let mut seen = Vec::new();
+        while !seen.windows(4).any(|w| w == b"\r\n\r\n") {
+            let n = s.read(&mut buf).unwrap();
+            assert!(n > 0, "stream closed before the SSE header");
+            seen.extend_from_slice(&buf[..n]);
+        }
+        assert!(seen.starts_with(b"HTTP/1.1 200"));
+        h.publish_event("{\"event\":\"round_phase\",\"round\":1}");
+        h.publish_event("{\"event\":\"round_phase\",\"round\":2}");
+        let mut text = String::from_utf8_lossy(&seen).into_owned();
+        while !text.contains("\"round\":2") {
+            let n = s.read(&mut buf).unwrap();
+            assert!(n > 0, "stream closed before both frames arrived");
+            text.push_str(&String::from_utf8_lossy(&buf[..n]));
+        }
+        assert!(text.contains("data: {\"event\":\"round_phase\",\"round\":1}"));
+        drop(s);
+        // the dead subscriber is pruned on the next publish
+        h.publish_event("{\"event\":\"round_phase\",\"round\":3}");
     }
 }

@@ -2068,6 +2068,16 @@ impl EvFeed {
     pub fn resyncs(&self) -> u32 {
         self.resyncs
     }
+
+    /// Observation-only view of the parent gap monitor: `(armed,
+    /// learned stall threshold in µs)`. The worker's status side
+    /// channel ships this upstream; nothing on the data path reads it.
+    pub fn gap_estimate(&self) -> (bool, u64) {
+        (
+            self.gap.armed(),
+            self.gap.threshold().as_micros().min(u64::MAX as u128) as u64,
+        )
+    }
 }
 
 // --------------------------------------------------------- bench swarm

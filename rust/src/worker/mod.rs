@@ -17,6 +17,7 @@
 //! gradients — see [`crate::attacks`]).
 
 pub mod remote;
+pub mod sidechannel;
 
 use crate::data::{Dataset, CLASSES};
 use crate::model::{self, MlpSpec, Workspace};

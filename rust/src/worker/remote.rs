@@ -55,9 +55,10 @@ use crate::transport::evloop::EvFeed;
 use crate::transport::net::{RelayHub, TreeFeed, WorkerClient};
 use crate::transport::uplink::AggFrame;
 use crate::transport::WireMessage;
+use crate::worker::sidechannel::{self, WorkerPhases};
 use crate::worker::{GradEngine, HonestWorker, NativeEngine};
 use anyhow::{anyhow, Result};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// What a completed `join` session did.
 #[derive(Clone, Debug)]
@@ -153,6 +154,16 @@ impl Feed {
         }
     }
 
+    /// Observation-only view of the event-loop feed's parent gap
+    /// monitor (`None` on feeds without one); the side channel ships it
+    /// upstream.
+    fn gap_estimate(&self) -> Option<(bool, u64)> {
+        match self {
+            Feed::Direct(_) | Feed::Tree(_) => None,
+            Feed::Ev(f) => Some(f.gap_estimate()),
+        }
+    }
+
     fn send_leave(&mut self, round: u64, worker: u16) -> Result<()> {
         match self {
             Feed::Direct(c) => c.send_leave(round, worker),
@@ -163,7 +174,7 @@ impl Feed {
 }
 
 /// Runtime knobs of [`join_run`] that are not part of the shared config.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct JoinOpts {
     /// Fault-injection hook for tests: after handling this many
     /// broadcasts the worker drops its connection mid-run, simulating a
@@ -182,6 +193,17 @@ pub struct JoinOpts {
     /// eventually forwarded are unchanged. `io = "evloop"` tree feeds
     /// only; ignored elsewhere.
     pub stall_relay: Option<(u64, u64)>,
+    /// Status-listener address for the observation side channel (clock
+    /// probes + `POST /worker` stat pushes — see
+    /// [`crate::worker::sidechannel`]). `None` falls back to
+    /// `config: status_addr`; tests that bind an ephemeral status port
+    /// pass the real address here. Strictly off the data path.
+    pub status_addr: Option<String>,
+    /// Test hook for the clock-alignment oracle: pretend this process's
+    /// journal clock runs this many microseconds fast (negative: slow),
+    /// so tests can inject a known skew and pin that the `/clock` probe
+    /// cancels it. Production callers leave 0.
+    pub clock_skew_us: i64,
 }
 
 /// The gradient worker owning `slot` under the epoch-`epoch` membership
@@ -262,6 +284,7 @@ pub fn join_run(
     let tel = Telemetry::for_worker(&cfg.trace_path, worker_id)
         .map_err(|e| anyhow!("trace_path {:?}: {e}", cfg.trace_path))?;
     tel.install_panic_hook();
+    tel.inject_clock_skew_us(opts.clock_skew_us);
     let mut feed = match hub {
         None => Feed::Direct(client),
         Some(hub) => {
@@ -286,6 +309,22 @@ pub fn join_run(
             }
         }
     };
+
+    // --- observation side channel (never the data sockets): align this
+    // journal's clock with the coordinator's via the status listener,
+    // so `{trace_path}.w{id}` timestamps are coordinator-aligned
+    // natively (no merge-time rebasing), and push worker stats upstream
+    // at join/epoch/leave. Best-effort and sticky-off on failure.
+    let side_addr: Option<String> = opts.status_addr.clone().or_else(|| {
+        (!cfg.status_addr.is_empty()).then(|| cfg.status_addr.clone())
+    });
+    let mut side_ok = side_addr.is_some();
+    let mut clock: Option<(i64, u64)> = None;
+    let mut phases = WorkerPhases::default();
+    // The first probe waits for the first broadcast: the coordinator
+    // binds the status listener while constructing the trainer, *after*
+    // rendezvous completes, so probing at join time would race the bind.
+    let mut probed = false;
 
     let mut engine = NativeEngine::new(MlpSpec::default(), cfg.batch.max(1));
     let d = engine.p();
@@ -330,7 +369,31 @@ pub fn join_run(
     // gets one event per newly observed resync.
     let mut seen_resyncs = 0u32;
     loop {
+        let wait_start = Instant::now();
         let Some(msg) = feed.recv(d)? else { break };
+        let wait_us = wait_start.elapsed().as_micros() as u64;
+        if !probed {
+            probed = true;
+            if let Some(a) = &side_addr {
+                clock = sidechannel::probe_clock(a, &tel);
+                match clock {
+                    Some((offset_us, rtt_us)) => {
+                        tel.set_clock_offset_us(offset_us);
+                        tel.emit(|| Event::ClockSync { offset_us, rtt_us });
+                        side_ok = sidechannel::push_stats(
+                            a,
+                            worker_id,
+                            0,
+                            clock,
+                            &phases,
+                            0,
+                            feed.gap_estimate(),
+                        );
+                    }
+                    None => side_ok = false,
+                }
+            }
+        }
         while seen_resyncs < feed.resyncs() {
             seen_resyncs += 1;
             tel.emit(|| Event::RelayResync { worker: slot });
@@ -378,6 +441,9 @@ pub fn join_run(
             continue; // duplicate delivery after a relay collapse
         }
         last_round = round;
+        let compute_start = Instant::now();
+        let mut compute_us = 0u64;
+        let mut reply_us = 0u64;
         // Elastic membership: every epoch re-derives shard and RNG
         // streams from (seed, epoch) alone — same rebuild the local
         // oracle runs at the boundary, so both sides stay bit-equal.
@@ -388,6 +454,32 @@ pub fn join_run(
                 tel.emit(|| Event::EpochTransition { epoch, round });
                 if worker.is_some() {
                     worker = build_slot_worker(cfg, slot, &attack, epoch)?.0;
+                }
+                // Epoch-boundary clock re-anchor + stat push: the two
+                // process clocks drift slowly, so one probe per epoch
+                // keeps journal timestamps coordinator-aligned.
+                if side_ok {
+                    if let Some(a) = &side_addr {
+                        if let Some((offset_us, rtt_us)) =
+                            sidechannel::probe_clock(a, &tel)
+                        {
+                            clock = Some((offset_us, rtt_us));
+                            tel.set_clock_offset_us(offset_us);
+                            tel.emit(|| Event::ClockSync {
+                                offset_us,
+                                rtt_us,
+                            });
+                        }
+                        side_ok = sidechannel::push_stats(
+                            a,
+                            worker_id,
+                            round,
+                            clock,
+                            &phases,
+                            feed.resyncs(),
+                            feed.gap_estimate(),
+                        );
+                    }
                 }
             }
         }
@@ -431,13 +523,16 @@ pub fn join_run(
                 .agg_value(round, slot as u64, &grad)
                 .map_err(|e| anyhow!(e))?;
             let own = AggFrame::single(round, worker_id, loss, value);
+            compute_us = compute_start.elapsed().as_micros() as u64;
             if leave_now {
                 feed.send_leave(round, worker_id)?;
             }
             // A leaving relay ships its final fold straight to the
             // coordinator: the hangup that follows must not strand the
             // subtree's contributions behind a dead parent.
+            let reply_start = Instant::now();
             feed.uplink_agg(own, round_timeout, leave_now)?;
+            reply_us = reply_start.elapsed().as_micros() as u64;
         } else {
             let reply: Option<(f32, WireMessage)> = if let Some(w) =
                 worker.as_mut()
@@ -474,12 +569,25 @@ pub fn join_run(
                 None // crash-fault Byzantine slot: receive, never send
             };
             if let Some((loss, msg)) = reply {
+                compute_us = compute_start.elapsed().as_micros() as u64;
                 if leave_now {
                     feed.send_leave(round, worker_id)?;
                 }
+                let reply_start = Instant::now();
                 feed.send_grad(loss, &msg)?;
+                reply_us = reply_start.elapsed().as_micros() as u64;
             }
         }
+        phases.wait.record_us(wait_us);
+        phases.compute.record_us(compute_us);
+        phases.reply.record_us(reply_us);
+        phases.rounds += 1;
+        tel.emit(|| Event::WorkerRound {
+            round,
+            wait_us,
+            compute_us,
+            reply_us,
+        });
         rounds += 1;
         if leave_now {
             break; // announced above; the coordinator expects the hangup
@@ -494,6 +602,21 @@ pub fn join_run(
     while seen_resyncs < feed.resyncs() {
         seen_resyncs += 1;
         tel.emit(|| Event::RelayResync { worker: slot });
+    }
+    // Final side-channel push: the complete phase histograms and resync
+    // count, visible in the snapshot after the worker is gone.
+    if side_ok {
+        if let Some(a) = &side_addr {
+            let _ = sidechannel::push_stats(
+                a,
+                worker_id,
+                last_round,
+                clock,
+                &phases,
+                feed.resyncs(),
+                feed.gap_estimate(),
+            );
+        }
     }
     tel.flush();
     Ok(JoinSummary {

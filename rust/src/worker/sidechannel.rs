@@ -1,0 +1,211 @@
+//! The worker's observation side channel to the coordinator's status
+//! listener — clock-alignment probes (`GET /clock`) and per-worker stat
+//! pushes (`POST /worker`).
+//!
+//! **Side channel, never the data path.** Everything here talks to the
+//! status listener (`config: status_addr`) over its own short-lived
+//! connections; the gradient/broadcast sockets are never touched, so
+//! the tracing-invariance oracle (data-socket bytes bit-identical with
+//! observation on or off) holds by construction. Every call is
+//! best-effort with short timeouts: a dead or slow listener turns the
+//! channel off for the rest of the run, it never fails a round.
+
+use crate::telemetry::{Histogram, Telemetry};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// Per-connection budget — the side channel must never hold a round
+/// hostage even when the listener is wedged.
+const SIDE_TIMEOUT: Duration = Duration::from_millis(750);
+
+/// Clock-probe samples per alignment; the minimum-RTT sample wins
+/// (NTP's classic filter: the tightest round trip bounds the offset
+/// error by rtt/2).
+const CLOCK_SAMPLES: usize = 3;
+
+/// Worker-local round-phase histograms shipped upstream: time blocked
+/// on the downlink (`wait`), gradient + compress time (`compute`), and
+/// uplink write time (`reply`).
+#[derive(Clone, Debug, Default)]
+pub struct WorkerPhases {
+    pub wait: Histogram,
+    pub compute: Histogram,
+    pub reply: Histogram,
+    pub rounds: u64,
+}
+
+impl WorkerPhases {
+    /// JSON summary for the `POST /worker` body (p50/p99 per phase).
+    fn to_json(&self) -> Json {
+        let hist = |h: &Histogram| {
+            let mut m = BTreeMap::new();
+            m.insert(
+                "p50_us".into(),
+                Json::Num(h.quantile_floor_us(0.5) as f64),
+            );
+            m.insert(
+                "p99_us".into(),
+                Json::Num(h.quantile_floor_us(0.99) as f64),
+            );
+            Json::Obj(m)
+        };
+        let mut m = BTreeMap::new();
+        m.insert("rounds".into(), Json::Num(self.rounds as f64));
+        m.insert("wait".into(), hist(&self.wait));
+        m.insert("compute".into(), hist(&self.compute));
+        m.insert("reply".into(), hist(&self.reply));
+        Json::Obj(m)
+    }
+}
+
+/// One blocking HTTP exchange with the status listener; returns the
+/// response body of a 200, `None` on any failure — callers treat that
+/// as "turn the channel off", never as a round error.
+fn status_http(addr: &str, request: &str) -> Option<String> {
+    let sa = addr.to_socket_addrs().ok()?.next()?;
+    let mut s = TcpStream::connect_timeout(&sa, SIDE_TIMEOUT).ok()?;
+    s.set_read_timeout(Some(SIDE_TIMEOUT)).ok()?;
+    s.set_write_timeout(Some(SIDE_TIMEOUT)).ok()?;
+    s.write_all(request.as_bytes()).ok()?;
+    let _ = s.shutdown(Shutdown::Write);
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).ok()?;
+    let (head, body) = buf.split_once("\r\n\r\n")?;
+    if !head.starts_with("HTTP/1.1 200") {
+        return None;
+    }
+    Some(body.to_string())
+}
+
+/// NTP-style alignment against `GET /clock`: the offset such that
+/// `tel.local_now_us() + offset ≈ coordinator clock`. Returns
+/// `(offset_us, rtt_us)` of the minimum-RTT sample, or `None` when the
+/// listener never answered.
+pub fn probe_clock(addr: &str, tel: &Telemetry) -> Option<(i64, u64)> {
+    let mut best: Option<(i64, u64)> = None;
+    for _ in 0..CLOCK_SAMPLES {
+        let t1 = tel.local_now_us() as i64;
+        let Some(body) = status_http(addr, "GET /clock HTTP/1.1\r\n\r\n")
+        else {
+            continue;
+        };
+        let t2 = tel.local_now_us() as i64;
+        let Some(ts) = Json::parse(body.trim())
+            .ok()
+            .and_then(|j| j.get("ts_us").and_then(Json::as_f64))
+        else {
+            continue;
+        };
+        let rtt = (t2 - t1).max(0) as u64;
+        let offset = ts as i64 - (t1 + rtt as i64 / 2);
+        let better = match best {
+            None => true,
+            Some((_, r)) => rtt < r,
+        };
+        if better {
+            best = Some((offset, rtt));
+        }
+    }
+    best
+}
+
+/// Ship one worker-stat update over the side channel. Returns `false`
+/// when the push failed (callers go sticky-off).
+pub fn push_stats(
+    addr: &str,
+    worker: u16,
+    round: u64,
+    clock: Option<(i64, u64)>,
+    phases: &WorkerPhases,
+    resyncs: u32,
+    gap: Option<(bool, u64)>,
+) -> bool {
+    let mut m = BTreeMap::new();
+    m.insert("worker".into(), Json::Num(worker as f64));
+    m.insert("round".into(), Json::Num(round as f64));
+    m.insert(
+        "offset_us".into(),
+        clock.map_or(Json::Null, |(o, _)| Json::Num(o as f64)),
+    );
+    m.insert(
+        "rtt_us".into(),
+        clock.map_or(Json::Null, |(_, r)| Json::Num(r as f64)),
+    );
+    m.insert("resyncs".into(), Json::Num(resyncs as f64));
+    m.insert(
+        "gap".into(),
+        gap.map_or(Json::Null, |(armed, threshold_us)| {
+            let mut g = BTreeMap::new();
+            g.insert("armed".into(), Json::Bool(armed));
+            g.insert("threshold_us".into(), Json::Num(threshold_us as f64));
+            Json::Obj(g)
+        }),
+    );
+    m.insert("phases".into(), phases.to_json());
+    let body = Json::Obj(m).to_string();
+    let req = format!(
+        "POST /worker HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    status_http(addr, &req).is_some()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::status::StatusServer;
+    use std::sync::Arc;
+
+    #[test]
+    fn probe_aligns_to_the_served_clock_and_push_lands() {
+        let srv = StatusServer::bind("127.0.0.1:0").unwrap();
+        srv.handle().set_clock_source(Arc::new(|| 5_000_000));
+        let tel = Telemetry::disabled();
+        let addr = srv.local_addr().to_string();
+        let (offset, _rtt) = probe_clock(&addr, &tel).unwrap();
+        // a disabled journal's local clock reads 0, so the offset is the
+        // served timestamp itself
+        assert_eq!(offset, 5_000_000);
+        let mut phases = WorkerPhases {
+            rounds: 1,
+            ..Default::default()
+        };
+        phases.wait.record_us(120);
+        assert!(push_stats(
+            &addr,
+            3,
+            7,
+            Some((offset, 0)),
+            &phases,
+            0,
+            Some((true, 250_000)),
+        ));
+        let snap = srv.handle().render();
+        assert!(snap.contains("\"offset_us\":5000000"), "{snap}");
+        assert!(snap.contains("\"threshold_us\":250000"), "{snap}");
+    }
+
+    #[test]
+    fn dead_listener_is_a_clean_none_not_an_error() {
+        let tel = Telemetry::disabled();
+        // a port nothing listens on: bind-then-drop reserves a dead one
+        let dead = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        assert!(probe_clock(&dead, &tel).is_none());
+        assert!(!push_stats(
+            &dead,
+            0,
+            1,
+            None,
+            &WorkerPhases::default(),
+            0,
+            None,
+        ));
+    }
+}

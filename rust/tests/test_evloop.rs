@@ -50,6 +50,7 @@ fn run_io(
         .map(|_| {
             let cfg = cfg.clone();
             let addr = addr.clone();
+            let opts = opts.clone();
             thread::spawn(move || {
                 join_run(&cfg, &addr, Duration::from_secs(20), opts)
             })

@@ -480,6 +480,74 @@ fn prop_checkpoint_rejects_wrong_magic_version_fingerprint() {
 }
 
 #[test]
+fn prop_histogram_merge_is_associative_and_commutative() {
+    // Cross-process phase stats are folded pairwise in whatever order
+    // worker pushes arrive; the fold must be order-free. Sample pools
+    // deliberately include the edge magnitudes (0, u64::MAX) and exact
+    // power-of-two bucket boundaries.
+    use rosdhb::telemetry::Histogram;
+    let sample = |rng: &mut Pcg64| -> u64 {
+        match rng.below(5) {
+            0 => 0,
+            1 => u64::MAX,
+            2 => 1u64 << rng.below(63),           // boundary
+            3 => (1u64 << rng.below(63)).wrapping_sub(1), // boundary - 1
+            _ => rng.next_u64() >> (rng.below(60) as u32),
+        }
+    };
+    let fill = |rng: &mut Pcg64| -> Histogram {
+        let mut h = Histogram::new();
+        for _ in 0..rng.below(200) {
+            h.record_us(sample(rng));
+        }
+        h
+    };
+    for seed in 0..SEEDS {
+        let mut rng = Pcg64::new(seed, 1300);
+        let (a, b, c) = (fill(&mut rng), fill(&mut rng), fill(&mut rng));
+        // ((a ⊔ b) ⊔ c)
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        // (a ⊔ (b ⊔ c))
+        let mut right = b.clone();
+        right.merge(&c);
+        let mut right_total = a.clone();
+        right_total.merge(&right);
+        assert_eq!(
+            left.buckets(),
+            right_total.buckets(),
+            "seed {seed}: merge not associative"
+        );
+        // (c ⊔ b) ⊔ a — commutativity through the same fold
+        let mut comm = c.clone();
+        comm.merge(&b);
+        comm.merge(&a);
+        assert_eq!(
+            left.buckets(),
+            comm.buckets(),
+            "seed {seed}: merge not commutative"
+        );
+        assert_eq!(left.count(), a.count() + b.count() + c.count());
+        // quantiles of the fold match a histogram recorded in one pass
+        let mut rng2 = Pcg64::new(seed, 1300);
+        let mut oracle = Histogram::new();
+        for _ in 0..3 {
+            for _ in 0..rng2.below(200) {
+                oracle.record_us(sample(&mut rng2));
+            }
+        }
+        for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(
+                left.quantile_floor_us(q),
+                oracle.quantile_floor_us(q),
+                "seed {seed}: q={q}"
+            );
+        }
+    }
+}
+
+#[test]
 fn prop_trimmed_mean_between_extremes() {
     // CWTM output per coordinate always lies within [min, max] of inputs.
     for seed in 0..SEEDS {

@@ -48,18 +48,46 @@ fn scratch(tag: &str) -> PathBuf {
     std::env::temp_dir().join(format!("rosdhb_tel_{}_{tag}", std::process::id()))
 }
 
+/// Reserve a concrete loopback address for the status listener: bind an
+/// ephemeral port, read it back, release it. Worker processes need the
+/// real port *before* the trainer (which binds the listener) exists, so
+/// `"127.0.0.1:0"` cannot exercise the side channel; the tiny reuse
+/// window is fine for tests.
+fn reserve_addr() -> String {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let a = l.local_addr().unwrap().to_string();
+    drop(l);
+    a
+}
+
 /// Loopback TCP run: coordinator (and its status endpoint, when
 /// configured) on this thread, one worker thread per cap entry (a cap
 /// injects a mid-run crash after that many rounds). Returns the report,
-/// measured traffic, the status endpoint's final snapshot (fetched
-/// after the last round, before shutdown) and the worker outcomes.
+/// measured traffic, the status endpoint's final `/` and `/history`
+/// snapshots (fetched after the last round, before shutdown) and the
+/// worker outcomes.
 fn run_tcp(
     cfg: &ExperimentConfig,
     worker_caps: &[Option<u64>],
 ) -> (
     RunReport,
     NetStats,
-    Option<Json>,
+    Option<(Json, Json)>,
+    Vec<anyhow::Result<JoinSummary>>,
+) {
+    run_tcp_opts(cfg, worker_caps, JoinOpts::default())
+}
+
+/// [`run_tcp`] with extra per-worker [`JoinOpts`] (every worker gets the
+/// same base; the cap entry still overrides `max_rounds`).
+fn run_tcp_opts(
+    cfg: &ExperimentConfig,
+    worker_caps: &[Option<u64>],
+    base_opts: JoinOpts,
+) -> (
+    RunReport,
+    NetStats,
+    Option<(Json, Json)>,
     Vec<anyhow::Result<JoinSummary>>,
 ) {
     assert_eq!(worker_caps.len(), cfg.n_total());
@@ -71,6 +99,7 @@ fn run_tcp(
             let cfg = cfg.clone();
             let addr = addr.clone();
             let cap = *cap;
+            let base = base_opts.clone();
             thread::spawn(move || {
                 join_run(
                     &cfg,
@@ -78,7 +107,7 @@ fn run_tcp(
                     Duration::from_secs(20),
                     JoinOpts {
                         max_rounds: cap,
-                        ..Default::default()
+                        ..base
                     },
                 )
             })
@@ -89,7 +118,9 @@ fn run_tcp(
     let mut trainer = Trainer::with_transport(cfg, Box::new(transport)).unwrap();
     let report = trainer.run().unwrap();
     let stats = trainer.net_stats().unwrap();
-    let snapshot = trainer.status_addr().map(|a| http_get_json(a));
+    let snapshot = trainer
+        .status_addr()
+        .map(|a| (http_get_json(a, "/"), http_get_json(a, "/history")));
     trainer.shutdown_transport(); // BYE — releases the worker threads
     let outcomes = handles.into_iter().map(|h| h.join().unwrap()).collect();
     (report, stats, snapshot, outcomes)
@@ -101,10 +132,12 @@ fn run_local(cfg: &ExperimentConfig) -> RunReport {
     Trainer::from_config(&local).unwrap().run().unwrap()
 }
 
-/// One plain HTTP/1.0 GET against the status endpoint; parses the body.
-fn http_get_json(addr: SocketAddr) -> Json {
+/// One plain HTTP GET for `path` against the status endpoint; parses
+/// the body.
+fn http_get_json(addr: SocketAddr, path: &str) -> Json {
     let mut s = TcpStream::connect(addr).unwrap();
-    s.write_all(b"GET / HTTP/1.0\r\n\r\n").unwrap();
+    s.write_all(format!("GET {path} HTTP/1.0\r\n\r\n").as_bytes())
+        .unwrap();
     let mut buf = String::new();
     s.read_to_string(&mut buf).unwrap();
     let body = buf
@@ -148,6 +181,10 @@ const KNOWN_EVENTS: &[&str] = &[
     "rendezvous_admit",
     "rendezvous_leave",
     "rendezvous_reject",
+    "agg_forensics",
+    "suspicion_snapshot",
+    "worker_round",
+    "clock_sync",
 ];
 
 /// Validate one JSONL journal: every line parses, names a known event,
@@ -180,8 +217,9 @@ fn validate_trace(path: &std::path::Path) -> Vec<Json> {
 #[test]
 fn tracing_and_status_endpoint_leave_the_run_bit_identical() {
     // the hardest configuration the observer could perturb: relay-tree
-    // fan-out on the event-loop runtime, with both the journal and the
-    // status endpoint live
+    // fan-out on the event-loop runtime, with the journal, the status
+    // endpoint (history ring + worker side channel), and aggregation
+    // forensics all live
     let mut plain = base_cfg();
     plain.set("fanout", "tree").unwrap();
     plain.set("branching", "2").unwrap();
@@ -191,7 +229,10 @@ fn tracing_and_status_endpoint_leave_the_run_bit_identical() {
     let _ = std::fs::remove_file(&trace);
     let mut traced = plain.clone();
     traced.trace_path = trace.to_str().unwrap().to_string();
-    traced.status_addr = "127.0.0.1:0".into();
+    // a concrete reserved port so workers can reach the side channel
+    traced.status_addr = reserve_addr();
+    traced.forensics = true;
+    traced.status_history = 8;
     // telemetry keys must never reach the wire contract: a traced
     // worker can join an untraced coordinator and vice versa
     assert_eq!(plain.wire_fingerprint(), traced.wire_fingerprint());
@@ -199,8 +240,34 @@ fn tracing_and_status_endpoint_leave_the_run_bit_identical() {
     let caps = vec![None; plain.n_total()];
     let (rep_on, st_on, snap, out_on) = run_tcp(&traced, &caps);
     let (rep_off, st_off, no_snap, out_off) = run_tcp(&plain, &caps);
-    assert!(snap.is_some(), "status endpoint must have served");
+    let (snap, hist) = snap.expect("status endpoint must have served");
     assert!(no_snap.is_none(), "no endpoint without status_addr");
+
+    // status v2 surface: the bounded history ring retained one row per
+    // round, and every worker's side-channel push landed in the snapshot
+    assert_eq!(hist.get("depth").and_then(Json::as_f64), Some(8.0));
+    let Some(Json::Arr(rows)) = hist.get("rows") else {
+        panic!("/history must carry a rows array: {hist}")
+    };
+    assert_eq!(rows.len(), plain.rounds, "one history row per round");
+    assert_eq!(
+        rows.last().unwrap().get("round").and_then(Json::as_f64),
+        Some(plain.rounds as f64),
+        "newest history row is the final round"
+    );
+    let Some(Json::Obj(pushed)) = snap.get("workers") else {
+        panic!("snapshot must carry the side-channel worker map: {snap}")
+    };
+    assert_eq!(
+        pushed.len(),
+        plain.n_total(),
+        "every worker's side-channel push must land: {snap}"
+    );
+    // forensics rode along: one suspicion score per slot in the snapshot
+    let Some(Json::Arr(sus)) = snap.get("suspicion") else {
+        panic!("snapshot must carry suspicion scores: {snap}")
+    };
+    assert_eq!(sus.len(), plain.n_total());
     for o in out_on.iter().chain(&out_off) {
         let s = o.as_ref().expect("worker must finish cleanly");
         assert_eq!(s.rounds, plain.rounds as u64);
@@ -250,9 +317,34 @@ fn tracing_and_status_endpoint_leave_the_run_bit_identical() {
         })
         .count();
     assert_eq!(admits, plain.n_total(), "one admit per rendezvoused worker");
+    // forensics journaled one aggregation autopsy + one suspicion
+    // snapshot per round (cwtm: the autopsy carries trim columns)
+    for name in ["agg_forensics", "suspicion_snapshot"] {
+        let n = events
+            .iter()
+            .filter(|e| e.get("event").and_then(Json::as_str) == Some(name))
+            .count();
+        assert_eq!(n, plain.rounds, "one {name} per round");
+    }
     for w in 0..plain.n_total() {
         let wpath = PathBuf::from(format!("{}.w{w}", trace.display()));
-        validate_trace(&wpath);
+        let wevents = validate_trace(&wpath);
+        let count = |name: &str| {
+            wevents
+                .iter()
+                .filter(|e| {
+                    e.get("event").and_then(Json::as_str) == Some(name)
+                })
+                .count()
+        };
+        // the side channel aligned this journal's clock before the first
+        // round event, and every served round left a phase-timing event
+        assert!(count("clock_sync") >= 1, "worker {w} never clock-synced");
+        assert_eq!(
+            count("worker_round"),
+            plain.rounds,
+            "worker {w} round events"
+        );
         let _ = std::fs::remove_file(&wpath);
     }
     let _ = std::fs::remove_file(&trace);
@@ -281,7 +373,7 @@ fn status_endpoint_snapshot_matches_ground_truth_after_eviction() {
     assert_eq!(report.rounds_run, cfg.rounds);
     assert!(report.evictions >= 1, "the crash must surface as an eviction");
 
-    let snap = snap.expect("status endpoint must have served");
+    let (snap, _hist) = snap.expect("status endpoint must have served");
     let num =
         |k: &str| snap.get(k).and_then(Json::as_f64).unwrap_or_else(|| {
             panic!("snapshot missing numeric key {k:?}: {snap}")
@@ -395,4 +487,164 @@ fn disabled_handle_never_builds_events() {
     // and an empty trace_path is the disabled handle, both spellings
     assert!(!Telemetry::to_path("").unwrap().enabled());
     assert!(!Telemetry::for_worker("", 3).unwrap().enabled());
+}
+
+#[test]
+fn forensics_ranks_byzantine_slots_most_suspicious_under_alie() {
+    // the acceptance oracle for the forensics pipeline: under an alie
+    // payload attack against CWTM, the per-worker trim-inclusion
+    // statistics must rank *every* Byzantine slot strictly more
+    // suspicious than *every* honest slot — the attack is visible as a
+    // suspicion trace, not just a perturbed loss curve
+    let trace = scratch("alie_forensics.jsonl");
+    let _ = std::fs::remove_file(&trace);
+    let mut cfg = ExperimentConfig::default_mnist_like();
+    cfg.n_honest = 8;
+    cfg.n_byz = 2;
+    cfg.attack = "alie:1.5".into();
+    cfg.aggregator = "cwtm".into();
+    cfg.rounds = 20;
+    cfg.eval_every = 10;
+    cfg.batch = 30;
+    cfg.train_size = 600;
+    cfg.test_size = 200;
+    cfg.stop_at_tau = false;
+    cfg.seed = 7;
+    cfg.forensics = true;
+    cfg.trace_path = trace.to_str().unwrap().to_string();
+
+    let report = Trainer::from_config(&cfg).unwrap().run().unwrap();
+    let sus = &report.suspicion;
+    assert_eq!(sus.len(), cfg.n_total(), "one suspicion row per slot");
+    for (i, w) in sus.iter().enumerate() {
+        assert_eq!(w.slot, i);
+        assert!(
+            (0.0..=1.0).contains(&w.suspicion),
+            "suspicion out of range: {w:?}"
+        );
+    }
+    let max_honest = sus[..cfg.n_honest]
+        .iter()
+        .map(|w| w.suspicion)
+        .fold(f64::MIN, f64::max);
+    let min_byz = sus[cfg.n_honest..]
+        .iter()
+        .map(|w| w.suspicion)
+        .fold(f64::MAX, f64::min);
+    assert!(
+        min_byz > max_honest,
+        "every alie slot must out-rank every honest slot: \
+         min byz {min_byz} vs max honest {max_honest} in {sus:?}"
+    );
+    // the same separation, on the components: alie values sit at the
+    // trimmed edge, so Byzantine trim-inclusion collapses
+    let byz_incl = sus[cfg.n_honest].trim_inclusion.unwrap();
+    let honest_incl = sus[0].trim_inclusion.unwrap();
+    assert!(byz_incl < honest_incl, "{byz_incl} vs {honest_incl}");
+
+    // the journal carries the per-round autopsy the scores were rolled
+    // up from
+    let events = validate_trace(&trace);
+    let autopsies = events
+        .iter()
+        .filter(|e| {
+            e.get("event").and_then(Json::as_str) == Some("agg_forensics")
+        })
+        .count();
+    assert_eq!(autopsies, cfg.rounds, "one aggregation autopsy per round");
+    let _ = std::fs::remove_file(&trace);
+}
+
+#[test]
+fn worker_journals_are_coordinator_aligned_without_rebasing() {
+    // inject a +30 s skew into every worker's journal clock: the side
+    // channel's /clock probe must measure and cancel it, so worker
+    // events land within a small drift bound of the coordinator events
+    // they bracket — natively, with no merge-time anchor rebasing
+    const SKEW_US: i64 = 30_000_000;
+    const DRIFT_BOUND_US: f64 = 3_000_000.0;
+    const OFFSET_TOL_US: f64 = 2_000_000.0;
+    let trace = scratch("drift.jsonl");
+    let _ = std::fs::remove_file(&trace);
+    let mut cfg = base_cfg();
+    cfg.trace_path = trace.to_str().unwrap().to_string();
+    cfg.status_addr = reserve_addr();
+    let caps = vec![None; cfg.n_total()];
+    let (_report, _stats, snap, outcomes) = run_tcp_opts(
+        &cfg,
+        &caps,
+        JoinOpts {
+            clock_skew_us: SKEW_US,
+            ..Default::default()
+        },
+    );
+    for o in &outcomes {
+        assert_eq!(o.as_ref().unwrap().rounds, cfg.rounds as u64);
+    }
+
+    // coordinator ground truth: when each round's collect phase closed
+    let events = validate_trace(&trace);
+    let mut collect_ts = std::collections::BTreeMap::new();
+    for e in &events {
+        if e.get("event").and_then(Json::as_str) == Some("round_phase")
+            && e.get("phase").and_then(Json::as_str) == Some("collect")
+        {
+            collect_ts.insert(
+                e.get("round").and_then(Json::as_f64).unwrap() as u64,
+                e.get("ts_us").and_then(Json::as_f64).unwrap(),
+            );
+        }
+    }
+    assert_eq!(collect_ts.len(), cfg.rounds);
+
+    for w in 0..cfg.n_total() {
+        let wpath = PathBuf::from(format!("{}.w{w}", trace.display()));
+        let wevents = validate_trace(&wpath);
+        // the probe measured — and so cancelled — the injected skew
+        let offset = wevents
+            .iter()
+            .find(|e| {
+                e.get("event").and_then(Json::as_str) == Some("clock_sync")
+            })
+            .and_then(|e| e.get("offset_us").and_then(Json::as_f64))
+            .unwrap_or_else(|| panic!("worker {w} never clock-synced"));
+        assert!(
+            (offset + SKEW_US as f64).abs() < OFFSET_TOL_US,
+            "worker {w}: probe offset {offset} must cancel +{SKEW_US}us skew"
+        );
+        // every per-round worker event lands within the drift bound of
+        // the coordinator's collect mark for that round, as written
+        let mut checked = 0usize;
+        for e in &wevents {
+            if e.get("event").and_then(Json::as_str) != Some("worker_round") {
+                continue;
+            }
+            let r = e.get("round").and_then(Json::as_f64).unwrap() as u64;
+            let ts = e.get("ts_us").and_then(Json::as_f64).unwrap();
+            let anchor = collect_ts[&r];
+            assert!(
+                (ts - anchor).abs() < DRIFT_BOUND_US,
+                "worker {w} round {r}: ts {ts} vs coordinator {anchor} — \
+                 skew not cancelled or clamp stuck"
+            );
+            checked += 1;
+        }
+        assert_eq!(checked, cfg.rounds, "worker {w} round events");
+        let _ = std::fs::remove_file(&wpath);
+    }
+
+    // the side-channel pushes surfaced the same measured offsets
+    let (snap, _hist) = snap.expect("status endpoint must have served");
+    let Some(Json::Obj(pushed)) = snap.get("workers") else {
+        panic!("snapshot must carry worker pushes: {snap}")
+    };
+    assert_eq!(pushed.len(), cfg.n_total());
+    for (id, v) in pushed {
+        let off = v.get("offset_us").and_then(Json::as_f64).unwrap();
+        assert!(
+            (off + SKEW_US as f64).abs() < OFFSET_TOL_US,
+            "worker {id}: pushed offset {off}"
+        );
+    }
+    let _ = std::fs::remove_file(&trace);
 }

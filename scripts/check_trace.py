@@ -28,6 +28,17 @@ EVENT_KEYS = {
     "rendezvous_admit": {"worker", "peer"},
     "rendezvous_leave": {"worker"},
     "rendezvous_reject": {"peer", "reason"},
+    "agg_forensics": {
+        "round",
+        "selected",
+        "neighbor_rows",
+        "weiszfeld_iters",
+        "weiszfeld_residual",
+        "trim_cols",
+    },
+    "suspicion_snapshot": {"round", "suspicion"},
+    "worker_round": {"round", "wait_us", "compute_us", "reply_us"},
+    "clock_sync": {"offset_us", "rtt_us"},
 }
 
 PHASES = ("broadcast", "collect", "aggregate", "apply")
@@ -50,6 +61,9 @@ STATUS_KEYS = {
     "net",
     "lyapunov",
     "trace_events",
+    "geometry",
+    "suspicion",
+    "workers",
 }
 
 
@@ -140,6 +154,11 @@ def check_report(path):
     for phase in PHASES:
         if phase not in tel["phases"]:
             fail(f"{path}: telemetry.phases missing {phase!r}")
+    for key in ("geometry", "suspicion"):
+        if key not in rep:
+            fail(f"{path}: traced report missing {key!r}")
+    if not isinstance(rep["suspicion"], list):
+        fail(f"{path}: report suspicion is not an array")
     print(f"check_trace: {path}: OK (telemetry section present)")
 
 

@@ -11,12 +11,23 @@ stamps events with ``ts_us`` measured from its *own* process start — the
 files cannot be interleaved by raw timestamp. This tool rebases each
 worker journal onto the coordinator clock and emits one sorted stream.
 
-The alignment anchor is the WELCOME handshake: a worker opens its
-journal immediately after rendezvous assigns its id, which is the same
-instant the coordinator journals ``rendezvous_admit`` for that slot. So
-worker ``w``'s local zero maps to the coordinator-time ``ts_us`` of the
-first ``rendezvous_admit`` naming slot ``w``, and every worker event
-lands at ``admit_ts + local_ts``.
+Two generations of worker journal exist:
+
+* **Natively aligned** (the side-channel clock probe, PR 10): the
+  journal carries at least one ``clock_sync`` event, meaning the worker
+  measured its offset against the coordinator's journal clock over the
+  status listener and stamped ``ts_us`` in coordinator time itself.
+  These timestamps are used *as-is*; the admit anchor below degrades to
+  a drift validator (the journal's first event must land within
+  ``--drift-bound-us`` of its admit mark, else the merge fails loudly).
+* **Legacy** (no ``clock_sync``): timestamps are measured from the
+  worker's own process start and are rebased on the WELCOME anchor — a
+  worker opens its journal immediately after rendezvous assigns its id,
+  which is the same instant the coordinator journals
+  ``rendezvous_admit`` for that slot. So worker ``w``'s local zero maps
+  to the coordinator-time ``ts_us`` of the first ``rendezvous_admit``
+  naming slot ``w``, and every worker event lands at
+  ``admit_ts + local_ts``.
 
 Worker journals are auto-discovered next to the coordinator journal
 (``TRACE.jsonl.w*``) when not listed explicitly. Each merged line keeps
@@ -76,6 +87,14 @@ def main():
     ap.add_argument(
         "--out", help="write merged JSONL here instead of stdout"
     )
+    ap.add_argument(
+        "--drift-bound-us",
+        type=int,
+        default=10_000_000,
+        help="natively aligned journals (those carrying clock_sync "
+        "events) must start within this many microseconds of their "
+        "admit anchor (default 10s)",
+    )
     args = ap.parse_args()
 
     coord_path = args.traces[0]
@@ -104,6 +123,7 @@ def main():
         ev["ts_local_us"] = ev["ts_us"]
         merged.append(ev)
     n_inputs = len(coord)
+    n_aligned = 0
     for path in worker_paths:
         wid = worker_id(path)
         if wid not in admits:
@@ -114,11 +134,24 @@ def main():
         offset = admits[wid]
         events = load_journal(path)
         n_inputs += len(events)
+        aligned = any(ev.get("event") == "clock_sync" for ev in events)
+        n_aligned += aligned
+        if aligned:
+            # natively aligned journal: timestamps are already
+            # coordinator time; the anchor only validates drift
+            drift = int(events[0]["ts_us"]) - offset
+            if abs(drift) > args.drift_bound_us:
+                fail(
+                    f"{path}: aligned journal starts {drift}us from its "
+                    f"admit anchor (bound {args.drift_bound_us}us) — "
+                    "clock alignment is broken"
+                )
         for ev in events:
             ev = dict(ev)
             ev["src"] = f"w{wid}"
             ev["ts_local_us"] = ev["ts_us"]
-            ev["ts_us"] = int(ev["ts_us"]) + offset
+            if not aligned:
+                ev["ts_us"] = int(ev["ts_us"]) + offset
             merged.append(ev)
 
     # Stable sort: same-timestamp events keep coordinator-first,
@@ -137,7 +170,8 @@ def main():
             out.close()
     print(
         f"merge_trace: OK ({len(merged)} events from 1 coordinator + "
-        f"{len(worker_paths)} worker journals)",
+        f"{len(worker_paths)} worker journals, {n_aligned} natively "
+        "aligned)",
         file=sys.stderr,
     )
 
